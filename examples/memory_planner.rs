@@ -1,0 +1,79 @@
+//! Memory planning with OOM prediction: given GPT-1.5B on one HC2 node
+//! (8×V100, 16 GB), find which combinations of ZeRO, recomputation, and
+//! per-GPU batch size fit — the "how many machine-hours / which config
+//! do I buy" workflow the paper motivates (§I) — all without touching a
+//! GPU.
+//!
+//! ```bash
+//! cargo run --release --example memory_planner
+//! ```
+
+use proteus::executor::calibrate;
+use proteus::prelude::*;
+use proteus::util::fmt_bytes;
+use proteus::util::table::Table;
+
+fn main() -> proteus::Result<()> {
+    let cluster = Cluster::preset(Preset::HC2, 1);
+    let est = OpEstimator::best_available(&cluster, "artifacts/costmodel.hlo.txt");
+    let config = HtaeConfig {
+        gamma: calibrate::default_gamma(&cluster),
+        ..HtaeConfig::default()
+    };
+    println!(
+        "GPT-1.5B on {} ({} GPUs × {}):",
+        cluster.name,
+        cluster.num_devices(),
+        fmt_bytes(cluster.device.memory_bytes)
+    );
+
+    let mut table = Table::new(&[
+        "per-gpu batch",
+        "zero",
+        "recompute",
+        "peak mem",
+        "fits",
+        "samples/s",
+    ]);
+    let mut best: Option<(f64, String)> = None;
+    for per_gpu in [1usize, 2, 4] {
+        for (zero, recompute) in [(false, false), (true, false), (false, true), (true, true)] {
+            let batch = per_gpu * 8;
+            let graph = ModelKind::Gpt15B.build(batch);
+            let mut spec = StrategySpec::data_parallel(8);
+            spec.zero = zero;
+            spec.recompute = recompute;
+            let tree = build_strategy(&graph, spec)?;
+            let eg = compile(&graph, &tree, &cluster)?;
+            let r = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
+            let peak = r.peak_mem.iter().copied().max().unwrap_or(0);
+            let fits = !r.oom;
+            table.row(vec![
+                per_gpu.to_string(),
+                zero.to_string(),
+                recompute.to_string(),
+                fmt_bytes(peak),
+                if fits { "yes".into() } else { "OOM".into() },
+                if fits {
+                    format!("{:.2}", r.throughput)
+                } else {
+                    "-".into()
+                },
+            ]);
+            if fits {
+                let label = format!("batch/gpu={per_gpu} zero={zero} recompute={recompute}");
+                if best.as_ref().map(|(t, _)| r.throughput > *t).unwrap_or(true) {
+                    best = Some((r.throughput, label));
+                }
+            }
+        }
+    }
+    print!("{}", table.render());
+    match best {
+        Some((tps, label)) => {
+            println!("\nbest feasible config: {label} → {tps:.2} samples/s")
+        }
+        None => println!("\nno feasible config on this cluster — add nodes or pipeline"),
+    }
+    Ok(())
+}

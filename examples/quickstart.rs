@@ -1,0 +1,63 @@
+//! Quickstart: predict the training throughput of GPT-2 under 8-way data
+//! parallelism on an HC2 (8×V100 NVLink) node, and validate the
+//! prediction against the flow-level testbed emulator.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use proteus::executor::calibrate;
+use proteus::prelude::*;
+use proteus::util::fmt_bytes;
+
+fn main() -> proteus::Result<()> {
+    // 1. Model: GPT-2 (117M) at a global batch of 32 sequences.
+    let model = ModelKind::Gpt2.build(32);
+    println!(
+        "model: {} — {} layers, {:.1}M params",
+        model.name,
+        model.layers.len(),
+        model.num_params() as f64 / 1e6
+    );
+
+    // 2. Cluster: one HC2 node (8×V100, NVLink, NVSwitch).
+    let cluster = Cluster::preset(Preset::HC2, 1);
+
+    // 3. Strategy: 8-way data parallelism, expressed as a strategy tree.
+    let tree = build_strategy(&model, StrategySpec::data_parallel(8))?;
+
+    // 4. Compile to a distributed execution graph.
+    let exec = compile(&model, &tree, &cluster)?;
+    println!(
+        "execution graph: {} tasks ({} communication), {:.1} MB gradient traffic",
+        exec.tasks.len(),
+        exec.count(|t| t.is_comm()),
+        exec.total_comm_bytes() as f64 / 1e6
+    );
+
+    // 5. Estimate per-op costs (PJRT cost kernel if built, else the
+    //    analytical mirror) and simulate with HTAE.
+    let est = OpEstimator::best_available(&cluster, "artifacts/costmodel.hlo.txt");
+    let config = HtaeConfig {
+        gamma: calibrate::default_gamma(&cluster),
+        ..HtaeConfig::default()
+    };
+    let report = Htae::with_config(&cluster, &est, config).simulate(&exec)?;
+    println!(
+        "HTAE:     step {:.2} ms, {:.1} samples/s, peak mem {}, oom={}",
+        report.step_ms,
+        report.throughput,
+        fmt_bytes(report.peak_mem.iter().copied().max().unwrap_or(0)),
+        report.oom
+    );
+
+    // 6. Ground truth: the flow-level emulator (stands in for real
+    //    hardware — DESIGN.md §3).
+    let truth = Emulator::new(&cluster, &est).simulate(&exec)?;
+    let err = (report.step_ms - truth.step_ms).abs() / truth.step_ms * 100.0;
+    println!(
+        "emulator: step {:.2} ms, {:.1} samples/s  →  prediction error {:.2}%",
+        truth.step_ms, truth.throughput, err
+    );
+    Ok(())
+}

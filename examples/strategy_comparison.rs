@@ -1,0 +1,106 @@
+//! Strategy comparison (the paper's Table V workflow): sweep GPT-2
+//! across `DP × MP × PP (n_micro)` strategies on HC1 and HC2, predict
+//! each throughput with HTAE, validate against the emulator, and check
+//! that the predicted *ranking* of strategies matches the true ranking —
+//! order preservation is what makes a simulator usable for strategy
+//! search.
+//!
+//! ```bash
+//! cargo run --release --example strategy_comparison
+//! ```
+
+use proteus::executor::calibrate;
+use proteus::prelude::*;
+use proteus::util::table::Table;
+
+fn sweep(
+    preset: Preset,
+    nodes: usize,
+    batch: usize,
+    specs: &[StrategySpec],
+) -> proteus::Result<()> {
+    let cluster = Cluster::preset(preset, nodes);
+    let model = ModelKind::Gpt2.build(batch);
+    let est = OpEstimator::best_available(&cluster, "artifacts/costmodel.hlo.txt");
+    let config = HtaeConfig {
+        gamma: calibrate::default_gamma(&cluster),
+        ..HtaeConfig::default()
+    };
+
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for &spec in specs {
+        let tree = build_strategy(&model, spec)?;
+        let eg = compile(&model, &tree, &cluster)?;
+        let pred = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
+        let truth = Emulator::new(&cluster, &est).simulate(&eg)?;
+        rows.push((spec.label(), pred.throughput, truth.throughput));
+    }
+
+    // Ranks: 1 = fastest.
+    let rank = |xs: &[f64]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+        let mut r = vec![0; xs.len()];
+        for (pos, &i) in idx.iter().enumerate() {
+            r[i] = pos + 1;
+        }
+        r
+    };
+    let pred_rank = rank(&rows.iter().map(|r| r.1).collect::<Vec<_>>());
+    let true_rank = rank(&rows.iter().map(|r| r.2).collect::<Vec<_>>());
+
+    let mut table = Table::new(&["strategy", "pred sps", "true sps", "err%", "rank (true/pred)"]);
+    let mut preserved = true;
+    for (i, (label, pred, truth)) in rows.iter().enumerate() {
+        let err = (pred - truth).abs() / truth * 100.0;
+        table.row(vec![
+            label.clone(),
+            format!("{pred:.1}"),
+            format!("{truth:.1}"),
+            format!("{err:.2}"),
+            format!("{} / {}", true_rank[i], pred_rank[i]),
+        ]);
+        preserved &= pred_rank[i] == true_rank[i];
+    }
+    println!(
+        "\nGPT-2 on {} ({} GPUs), global batch {batch}:",
+        cluster.name,
+        cluster.num_devices()
+    );
+    print!("{}", table.render());
+    println!("rank preservation: {}", if preserved { "YES" } else { "no" });
+    Ok(())
+}
+
+fn main() -> proteus::Result<()> {
+    // Table V, HC1: global batch 8 on one 8-GPU node.
+    sweep(
+        Preset::HC1,
+        1,
+        8,
+        &[
+            StrategySpec::hybrid(8, 1, 1, 1),
+            StrategySpec::hybrid(4, 2, 1, 1),
+            StrategySpec::hybrid(2, 4, 1, 1),
+            StrategySpec::hybrid(1, 8, 1, 1),
+            StrategySpec::hybrid(2, 2, 2, 1),
+            StrategySpec::hybrid(2, 2, 2, 2),
+        ],
+    )?;
+    // Table V, HC2: global batch 64 on two 8-GPU nodes.
+    sweep(
+        Preset::HC2,
+        2,
+        64,
+        &[
+            StrategySpec::hybrid(16, 1, 1, 1),
+            StrategySpec::hybrid(8, 2, 1, 1),
+            StrategySpec::hybrid(4, 4, 1, 1),
+            StrategySpec::hybrid(2, 8, 1, 1),
+            StrategySpec::hybrid(8, 1, 2, 4),
+            StrategySpec::hybrid(8, 1, 2, 8),
+            StrategySpec::hybrid(2, 4, 2, 4),
+        ],
+    )?;
+    Ok(())
+}

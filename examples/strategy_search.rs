@@ -1,0 +1,118 @@
+//! Automated strategy search — the paper's motivating use case (§I:
+//! "performance models can be leveraged to ... compare different
+//! parallelization strategies in automated parallelization systems").
+//!
+//! Exhaustively searches the `DP × MP × PP (n_micro) × {zero, recompute}`
+//! space for GPT-2 on two HC2 nodes using Proteus as the cost model
+//! (skipping OOM configs), then validates the chosen strategy against
+//! the testbed emulator. Every candidate is evaluated in milliseconds —
+//! the whole search costs less than profiling a single real strategy.
+//!
+//! ```bash
+//! cargo run --release --example strategy_search
+//! ```
+
+use proteus::executor::calibrate;
+use proteus::prelude::*;
+use proteus::util::table::Table;
+
+fn main() -> proteus::Result<()> {
+    let batch = 64;
+    let cluster = Cluster::preset(Preset::HC2, 2);
+    let n = cluster.num_devices();
+    let model = ModelKind::Gpt2.build(batch);
+    let est = OpEstimator::best_available(&cluster, "artifacts/costmodel.hlo.txt");
+    let config = HtaeConfig {
+        gamma: calibrate::default_gamma(&cluster),
+        ..HtaeConfig::default()
+    };
+
+    // Candidate grid: every (dp, mp, pp) factorization of the cluster,
+    // micro-batch counts for pipelines, ZeRO / recompute toggles.
+    let mut candidates: Vec<StrategySpec> = Vec::new();
+    for dp in [1usize, 2, 4, 8, 16] {
+        for mp in [1usize, 2, 4, 8] {
+            for pp in [1usize, 2] {
+                if dp * mp * pp != n || batch % dp != 0 {
+                    continue;
+                }
+                let micros: &[usize] = if pp > 1 { &[2, 4, 8] } else { &[1] };
+                for &micro in micros {
+                    if batch % (dp * micro) != 0 {
+                        continue;
+                    }
+                    let base = StrategySpec::hybrid(dp, mp, pp, micro);
+                    candidates.push(base);
+                    candidates.push(base.with_zero());
+                    if pp == 1 {
+                        candidates.push(base.with_recompute());
+                    }
+                }
+            }
+        }
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut evaluated: Vec<(StrategySpec, SimReport)> = Vec::new();
+    let mut skipped_oom = 0;
+    for &spec in &candidates {
+        let tree = match build_strategy(&model, spec) {
+            Ok(t) => t,
+            Err(_) => continue,
+        };
+        let eg = compile(&model, &tree, &cluster)?;
+        let r = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
+        if r.oom {
+            skipped_oom += 1;
+            continue;
+        }
+        evaluated.push((spec, r));
+    }
+    evaluated.sort_by(|a, b| b.1.throughput.partial_cmp(&a.1.throughput).unwrap());
+    let search_time = t0.elapsed();
+
+    println!(
+        "searched {} candidates ({} OOM) in {:.2?} — top 5:",
+        candidates.len(),
+        skipped_oom,
+        search_time
+    );
+    let mut table = Table::new(&["rank", "strategy", "pred samples/s", "pred step ms"]);
+    for (i, (spec, r)) in evaluated.iter().take(5).enumerate() {
+        table.row(vec![
+            (i + 1).to_string(),
+            spec.label(),
+            format!("{:.1}", r.throughput),
+            format!("{:.2}", r.step_ms),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // Validate the winner on the testbed emulator.
+    let (best_spec, best_pred) = &evaluated[0];
+    let tree = build_strategy(&model, *best_spec)?;
+    let eg = compile(&model, &tree, &cluster)?;
+    let truth = Emulator::new(&cluster, &est).simulate(&eg)?;
+    let err = (best_pred.throughput - truth.throughput).abs() / truth.throughput * 100.0;
+    println!(
+        "\nwinner {} validated on the emulator: predicted {:.1} vs true {:.1} samples/s ({err:.2}% error)",
+        best_spec.label(),
+        best_pred.throughput,
+        truth.throughput
+    );
+    // And confirm nothing in the top-5 would actually have beaten it.
+    let mut best_true = (best_spec.label(), truth.throughput);
+    for (spec, _) in evaluated.iter().take(5).skip(1) {
+        let tree = build_strategy(&model, *spec)?;
+        let eg = compile(&model, &tree, &cluster)?;
+        let t = Emulator::new(&cluster, &est).simulate(&eg)?;
+        if t.throughput > best_true.1 {
+            best_true = (spec.label(), t.throughput);
+        }
+    }
+    println!(
+        "true best among top-5 candidates: {} ({:.1} samples/s)",
+        best_true.0, best_true.1
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+"""AOT lowering: JAX/Pallas cost model -> HLO text artifact.
+
+HLO *text* (not ``lowered.compile()`` or serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the pinned xla_extension 0.5.1 on the Rust side
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. Lower with ``return_tuple=True`` and unwrap with
+``to_tuple1()`` in Rust (see ``rust/src/runtime/mod.rs``).
+
+Usage: python -m compile.aot --out ../artifacts/costmodel.hlo.txt
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import cost_fn
+
+# Fixed AOT batch: keep in sync with rust/src/runtime/mod.rs::KERNEL_BATCH.
+KERNEL_BATCH = 4096
+FEATURES = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower() -> str:
+    spec = jax.ShapeDtypeStruct((KERNEL_BATCH, FEATURES), jnp.float32)
+    lowered = jax.jit(cost_fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/costmodel.hlo.txt")
+    args = ap.parse_args()
+    text = lower()
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

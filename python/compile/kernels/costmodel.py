@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: batched operator-cost evaluation.
+
+One row per task of the distributed execution graph, FEATURES=16 f32
+columns (see ``rust/src/estimator/features.rs`` for the authoritative
+schema). The kernel evaluates the roofline + alpha-beta blend
+
+    comp = launch_ns + max(flops/eff_flops, bytes/eff_bw) * 1e9
+    comm = steps * alpha_ns + traffic / bus_bw * 1e9
+    cost = (1 - is_comm) * comp + is_comm * comm
+
+entirely elementwise over row tiles.
+
+TPU mapping (DESIGN.md par. 8): rows tile 512 at a time through VMEM
+(512x16 f32 = 32 KiB per input block, 2 KiB per output block), the
+arithmetic runs on the VPU (no matmul -> no MXU), and the BlockSpec
+index map streams HBM->VMEM block-by-block, double-buffered by the
+Pallas pipeline. ``interpret=True`` everywhere in this repo: the CPU
+PJRT plugin cannot execute Mosaic custom-calls; structure, not
+wallclock, is what carries to real TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Feature slots -- keep in sync with rust/src/estimator/features.rs.
+IS_COMM = 0
+FLOPS = 1
+BYTES = 2
+EFF_FLOPS = 3
+EFF_BW = 4
+LAUNCH_NS = 5
+STEPS = 6
+ALPHA_NS = 7
+TRAFFIC = 8
+BUS_BW = 9
+
+FEATURES = 16
+BLOCK_ROWS = 512
+
+
+def _cost_kernel(x_ref, o_ref):
+    """Pallas kernel body over one (BLOCK_ROWS, FEATURES) tile."""
+    x = x_ref[...]
+    is_comm = x[:, IS_COMM]
+    comp = x[:, LAUNCH_NS] + (
+        jnp.maximum(
+            x[:, FLOPS] / jnp.maximum(x[:, EFF_FLOPS], 1.0),
+            x[:, BYTES] / jnp.maximum(x[:, EFF_BW], 1.0),
+        )
+        * 1e9
+    )
+    comm = x[:, STEPS] * x[:, ALPHA_NS] + (
+        x[:, TRAFFIC] / jnp.maximum(x[:, BUS_BW], 1.0) * 1e9
+    )
+    o_ref[...] = (1.0 - is_comm) * comp + is_comm * comm
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cost_kernel(x, interpret=True):
+    """Evaluate per-row task costs (ns) for a (N, FEATURES) f32 matrix.
+
+    N must be a multiple of BLOCK_ROWS (the AOT entry point pads).
+    """
+    n, f = x.shape
+    assert f == FEATURES, f"feature width {f} != {FEATURES}"
+    assert n % BLOCK_ROWS == 0, f"rows {n} not a multiple of {BLOCK_ROWS}"
+    grid = (n // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, FEATURES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the cost kernel.
+
+The correctness contract of the L1 Pallas kernel: for any (N, 16) f32
+feature matrix, ``costmodel.cost_kernel(x) == ref.cost_ref(x)`` to f32
+rounding. pytest + hypothesis enforce this across shapes and value
+ranges (``python/tests/test_kernel.py``).
+"""
+
+import jax.numpy as jnp
+
+from . import costmodel as cm
+
+
+def cost_ref(x):
+    """Reference implementation of the per-row cost blend (ns)."""
+    x = jnp.asarray(x, jnp.float32)
+    is_comm = x[:, cm.IS_COMM]
+    comp = x[:, cm.LAUNCH_NS] + (
+        jnp.maximum(
+            x[:, cm.FLOPS] / jnp.maximum(x[:, cm.EFF_FLOPS], 1.0),
+            x[:, cm.BYTES] / jnp.maximum(x[:, cm.EFF_BW], 1.0),
+        )
+        * 1e9
+    )
+    comm = x[:, cm.STEPS] * x[:, cm.ALPHA_NS] + (
+        x[:, cm.TRAFFIC] / jnp.maximum(x[:, cm.BUS_BW], 1.0) * 1e9
+    )
+    return (1.0 - is_comm) * comp + is_comm * comm

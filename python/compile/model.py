@@ -1,0 +1,20 @@
+"""L2 JAX compute graph around the L1 cost kernel.
+
+The exported entry point sanitizes the raw feature matrix (negative and
+non-finite features can only arise from bugs upstream; clamp rather
+than poison the whole batch), runs the Pallas kernel, and clamps the
+result to non-negative finite costs. This is the function
+``aot.py`` lowers to HLO text for the Rust runtime.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.costmodel import cost_kernel
+
+
+def cost_fn(x):
+    """(N, 16) f32 feature matrix -> (N,) f32 per-task cost in ns."""
+    x = jnp.nan_to_num(x, nan=0.0, posinf=3.4e38, neginf=0.0)
+    x = jnp.maximum(x, 0.0)
+    cost = cost_kernel(x)
+    return jnp.clip(jnp.nan_to_num(cost, nan=0.0, posinf=3.4e38), 0.0, None)

@@ -1,0 +1,90 @@
+"""L1 correctness gate: Pallas cost kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps row counts and feature value ranges; hand-written
+cases pin the formula's branches (compute-bound, bandwidth-bound,
+collective, padding rows).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import costmodel as cm
+from compile.kernels.ref import cost_ref
+
+
+def _rows(n, rng):
+    """Random but physically plausible feature rows."""
+    x = np.zeros((n, cm.FEATURES), dtype=np.float32)
+    is_comm = rng.random(n) < 0.4
+    x[:, cm.IS_COMM] = is_comm
+    x[:, cm.FLOPS] = rng.uniform(0, 1e13, n)
+    x[:, cm.BYTES] = rng.uniform(0, 1e10, n)
+    x[:, cm.EFF_FLOPS] = rng.uniform(1e11, 2e13, n)
+    x[:, cm.EFF_BW] = rng.uniform(1e10, 2e12, n)
+    x[:, cm.LAUNCH_NS] = rng.uniform(0, 2e4, n)
+    x[:, cm.STEPS] = rng.integers(1, 64, n)
+    x[:, cm.ALPHA_NS] = rng.uniform(0, 1e4, n)
+    x[:, cm.TRAFFIC] = rng.uniform(0, 1e10, n)
+    x[:, cm.BUS_BW] = rng.uniform(1e9, 3e11, n)
+    return x
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_random(blocks, seed):
+    rng = np.random.default_rng(seed)
+    x = _rows(blocks * cm.BLOCK_ROWS, rng)
+    got = np.asarray(cm.cost_kernel(jnp.asarray(x)))
+    want = np.asarray(cost_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-3)
+
+
+def test_compute_bound_row():
+    x = np.zeros((cm.BLOCK_ROWS, cm.FEATURES), dtype=np.float32)
+    x[0, cm.FLOPS] = 1e12
+    x[0, cm.BYTES] = 1e3
+    x[0, cm.EFF_FLOPS] = 1e13
+    x[0, cm.EFF_BW] = 1e12
+    x[0, cm.LAUNCH_NS] = 5000.0
+    got = float(cm.cost_kernel(jnp.asarray(x))[0])
+    # 5000 + 1e12/1e13 * 1e9 = 5000 + 1e8
+    assert got == pytest.approx(5000.0 + 1e8, rel=1e-6)
+
+
+def test_bandwidth_bound_row():
+    x = np.zeros((cm.BLOCK_ROWS, cm.FEATURES), dtype=np.float32)
+    x[0, cm.FLOPS] = 1.0
+    x[0, cm.BYTES] = 1e9
+    x[0, cm.EFF_FLOPS] = 1e13
+    x[0, cm.EFF_BW] = 5e11
+    got = float(cm.cost_kernel(jnp.asarray(x))[0])
+    assert got == pytest.approx(1e9 / 5e11 * 1e9, rel=1e-6)
+
+
+def test_collective_row():
+    x = np.zeros((cm.BLOCK_ROWS, cm.FEATURES), dtype=np.float32)
+    x[0, cm.IS_COMM] = 1.0
+    x[0, cm.STEPS] = 6.0
+    x[0, cm.ALPHA_NS] = 1000.0
+    x[0, cm.TRAFFIC] = 1.5e8
+    x[0, cm.BUS_BW] = 1.2e10
+    got = float(cm.cost_kernel(jnp.asarray(x))[0])
+    assert got == pytest.approx(6000.0 + 1.5e8 / 1.2e10 * 1e9, rel=1e-6)
+
+
+def test_padding_rows_cost_zero():
+    x = np.zeros((cm.BLOCK_ROWS, cm.FEATURES), dtype=np.float32)
+    out = np.asarray(cm.cost_kernel(jnp.asarray(x)))
+    np.testing.assert_array_equal(out, np.zeros(cm.BLOCK_ROWS, np.float32))
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        cm.cost_kernel(jnp.zeros((100, cm.FEATURES), jnp.float32))
+    with pytest.raises(AssertionError):
+        cm.cost_kernel(jnp.zeros((cm.BLOCK_ROWS, 8), jnp.float32))

@@ -1,0 +1,52 @@
+"""L2 tests: the exported cost_fn graph (sanitization + kernel) and the
+AOT lowering path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import cost_fn
+from compile.kernels import costmodel as cm
+from compile.kernels.ref import cost_ref
+
+
+def test_cost_fn_matches_ref_on_clean_input():
+    rng = np.random.default_rng(0)
+    x = np.zeros((cm.BLOCK_ROWS, cm.FEATURES), dtype=np.float32)
+    x[:, cm.FLOPS] = rng.uniform(0, 1e12, cm.BLOCK_ROWS)
+    x[:, cm.EFF_FLOPS] = 1e13
+    x[:, cm.EFF_BW] = 1e12
+    x[:, cm.BYTES] = rng.uniform(0, 1e8, cm.BLOCK_ROWS)
+    got = np.asarray(cost_fn(jnp.asarray(x)))
+    want = np.asarray(cost_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-3)
+
+
+def test_cost_fn_sanitizes_garbage():
+    x = np.full((cm.BLOCK_ROWS, cm.FEATURES), np.nan, dtype=np.float32)
+    x[1] = -np.inf
+    out = np.asarray(cost_fn(jnp.asarray(x)))
+    assert np.isfinite(out).all()
+    assert (out >= 0).all()
+
+
+def test_aot_lowering_produces_hlo_text():
+    text = aot.lower()
+    assert "HloModule" in text
+    # The entry computation takes the fixed (KERNEL_BATCH, FEATURES) f32.
+    assert f"f32[{aot.KERNEL_BATCH},{aot.FEATURES}]" in text
+
+
+def test_aot_shapes_agree_with_kernel_contract():
+    assert aot.KERNEL_BATCH % cm.BLOCK_ROWS == 0
+    assert aot.FEATURES == cm.FEATURES
+
+
+def test_lowered_fn_evaluates():
+    # End-to-end through jit at the AOT shape.
+    x = jnp.zeros((aot.KERNEL_BATCH, aot.FEATURES), jnp.float32)
+    out = jax.jit(cost_fn)(x)
+    assert out.shape == (aot.KERNEL_BATCH,)
+    assert float(out.sum()) == pytest.approx(0.0)

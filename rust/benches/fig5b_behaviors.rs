@@ -1,0 +1,58 @@
+//! Figure 5b: prediction error with vs without runtime-behavior
+//! modeling at the 32-GPU scale (where contention is largest).
+//!
+//! Paper: on a 32-GPU cluster, ignoring runtime behaviors produces large
+//! errors; modeling them brings predictions within a few percent.
+//!
+//! Run: `cargo bench --bench fig5b_behaviors`
+
+use proteus::cluster::Preset;
+use proteus::harness::{run_case_with, Case, HtaeCustom};
+use proteus::models::ModelKind;
+use proteus::strategy::StrategySpec;
+use proteus::util::table::Table;
+
+fn main() {
+    let workloads: &[(ModelKind, usize, StrategySpec)] = &[
+        (ModelKind::Vgg19, 32 * 32, StrategySpec::data_parallel(32)),
+        (ModelKind::Gpt2, 64, StrategySpec::hybrid(8, 2, 2, 4)),
+    ];
+    println!("\n=== Fig. 5b: modeling runtime behaviors or not (HC2, 32 GPUs) ===\n");
+    let mut table = Table::new(&["model", "w/o behaviors err%", "with behaviors err%"]);
+    for &(model, batch, spec) in workloads {
+        let case = Case {
+            model,
+            batch,
+            preset: Preset::HC2,
+            nodes: 4,
+            spec,
+        };
+        let without = run_case_with(
+            &case,
+            &HtaeCustom {
+                no_sharing: true,
+                no_overlap: true,
+                skip_flexflow: true,
+            },
+        )
+        .expect("case runs");
+        let with = run_case_with(
+            &case,
+            &HtaeCustom {
+                skip_flexflow: true,
+                ..Default::default()
+            },
+        )
+        .expect("case runs");
+        table.row(vec![
+            format!("{} {}", model.name(), spec.label()),
+            format!("{:.2}", without.err_pct),
+            format!("{:.2}", with.err_pct),
+        ]);
+        assert!(
+            with.err_pct <= without.err_pct + 1.0,
+            "behavior modeling should not hurt at scale"
+        );
+    }
+    print!("{}", table.render());
+}

@@ -1,0 +1,127 @@
+//! Figure 9: runtime-behavior ablation. Prediction error of VGG19 and
+//! GPT-2 under four detector configurations:
+//!
+//!   Plain            — no runtime behaviors (paper avg err 14.4%)
+//!   +overlap         — γ comp-comm overlap only
+//!   +bw-sharing      — bandwidth sharing only
+//!   Proteus (full)   — both (paper avg err 2.4%)
+//!
+//! Expected shape: VGG19 (data parallel, FC-heavy gradients) responds to
+//! the overlap factor and is insensitive to bandwidth sharing; GPT-2
+//! under hybrid op-shard + pipeline responds mostly to bandwidth
+//! sharing.
+//!
+//! Run: `cargo bench --bench fig9_ablation`
+
+use proteus::cluster::Preset;
+use proteus::harness::{run_case_with, Case, HtaeCustom};
+use proteus::models::ModelKind;
+use proteus::strategy::StrategySpec;
+use proteus::util::table::Table;
+
+fn main() {
+    // (model, batch, preset, nodes, spec) — VGG19 DP bs=32/GPU; GPT-2
+    // hybrid op-shard + pipeline (§VIII-D).
+    let workloads: &[(ModelKind, usize, Preset, usize, StrategySpec)] = &[
+        (
+            ModelKind::Vgg19,
+            32 * 8,
+            Preset::HC1,
+            1,
+            StrategySpec::data_parallel(8),
+        ),
+        (
+            ModelKind::Vgg19,
+            32 * 16,
+            Preset::HC2,
+            2,
+            StrategySpec::data_parallel(16),
+        ),
+        (
+            ModelKind::Gpt2,
+            8,
+            Preset::HC1,
+            1,
+            StrategySpec::hybrid(2, 2, 2, 2),
+        ),
+        (
+            ModelKind::Gpt2,
+            64,
+            Preset::HC2,
+            2,
+            StrategySpec::hybrid(2, 4, 2, 4),
+        ),
+    ];
+    let configs: &[(&str, HtaeCustom)] = &[
+        (
+            "Plain",
+            HtaeCustom {
+                no_sharing: true,
+                no_overlap: true,
+                skip_flexflow: true,
+            },
+        ),
+        (
+            "+overlap",
+            HtaeCustom {
+                no_sharing: true,
+                no_overlap: false,
+                skip_flexflow: true,
+            },
+        ),
+        (
+            "+bw-sharing",
+            HtaeCustom {
+                no_sharing: false,
+                no_overlap: true,
+                skip_flexflow: true,
+            },
+        ),
+        (
+            "Proteus",
+            HtaeCustom {
+                no_sharing: false,
+                no_overlap: false,
+                skip_flexflow: true,
+            },
+        ),
+    ];
+    println!("\n=== Fig. 9: runtime-behavior ablation (prediction error %) ===\n");
+    let mut table = Table::new(&["workload", "Plain", "+overlap", "+bw-sharing", "Proteus"]);
+    let mut sums = [0.0f64; 4];
+    for &(model, batch, preset, nodes, spec) in workloads {
+        let case = Case {
+            model,
+            batch,
+            preset,
+            nodes,
+            spec,
+        };
+        let mut row = vec![format!(
+            "{} {} {}",
+            model.name(),
+            spec.label(),
+            preset.name()
+        )];
+        for (i, (_, custom)) in configs.iter().enumerate() {
+            let r = run_case_with(&case, custom).expect("case runs");
+            row.push(format!("{:.2}", r.err_pct));
+            sums[i] += r.err_pct;
+        }
+        table.row(row);
+    }
+    print!("{}", table.render());
+    let n = workloads.len() as f64;
+    println!(
+        "\naverages: Plain {:.2}%  +overlap {:.2}%  +bw-sharing {:.2}%  Proteus {:.2}%",
+        sums[0] / n,
+        sums[1] / n,
+        sums[2] / n,
+        sums[3] / n
+    );
+    println!("paper: Plain 14.4% → Proteus 2.4%");
+    assert!(
+        sums[3] <= sums[0],
+        "full behavior modeling must not be worse than Plain"
+    );
+}

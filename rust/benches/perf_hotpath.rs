@@ -1,0 +1,107 @@
+//! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md
+//! §Perf): per-layer throughput of the four stages that dominate a
+//! simulation —
+//!
+//!   1. execution-graph compilation (tasks/s),
+//!   2. batched cost estimation (rows/s), analytical vs PJRT kernel,
+//!   3. HTAE discrete-event simulation (tasks/s),
+//!   4. flow-level emulation (tasks/s).
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use std::time::Instant;
+
+use proteus::cluster::{Cluster, Preset};
+use proteus::emulator::Emulator;
+use proteus::estimator::OpEstimator;
+use proteus::executor::{calibrate, Htae, HtaeConfig};
+use proteus::models::ModelKind;
+use proteus::strategy::{build_strategy, StrategySpec};
+
+fn timed<R>(label: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    // Warm-up.
+    let _ = f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(f());
+    }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{label:<44} {per:>10.4} s/iter");
+    per
+}
+
+fn main() {
+    println!("\n=== §Perf hot-path microbenchmarks ===\n");
+    let cluster = Cluster::preset(Preset::HC2, 4);
+    let model = ModelKind::Gpt2.build(32 * 32);
+    let tree = build_strategy(&model, StrategySpec::data_parallel(32)).unwrap();
+
+    // 1. Compiler.
+    let t_compile = timed("compile GPT-2 dp=32 (exec graph)", 5, || {
+        proteus::compiler::compile(&model, &tree, &cluster).unwrap()
+    });
+    let eg = proteus::compiler::compile(&model, &tree, &cluster).unwrap();
+    println!(
+        "{:<44} {:>10.0} tasks/s ({} tasks)",
+        "  → compiler throughput",
+        eg.tasks.len() as f64 / t_compile,
+        eg.tasks.len()
+    );
+
+    // 2. Estimator backends.
+    let analytical = OpEstimator::analytical(&cluster);
+    let rows = analytical.feature_matrix(&eg);
+    let t_an = timed("estimate (analytical mirror)", 10, || {
+        analytical.eval_rows(&rows).unwrap()
+    });
+    println!(
+        "{:<44} {:>10.2} Mrows/s",
+        "  → analytical throughput",
+        rows.len() as f64 / t_an / 1e6
+    );
+    let artifact = "artifacts/costmodel.hlo.txt";
+    if std::path::Path::new(artifact).exists() {
+        let pjrt = OpEstimator::pjrt(&cluster, artifact).unwrap();
+        let t_pj = timed("estimate (PJRT cost kernel)", 10, || {
+            pjrt.eval_rows(&rows).unwrap()
+        });
+        println!(
+            "{:<44} {:>10.2} Mrows/s",
+            "  → PJRT throughput",
+            rows.len() as f64 / t_pj / 1e6
+        );
+    } else {
+        println!("(PJRT backend skipped: run `make artifacts`)");
+    }
+
+    // 3. HTAE DES.
+    let base = analytical.estimate_all(&eg).unwrap();
+    let config = HtaeConfig {
+        gamma: calibrate::default_gamma(&cluster),
+        ..HtaeConfig::default()
+    };
+    let htae = Htae::with_config(&cluster, &analytical, config);
+    let t_htae = timed("HTAE simulate GPT-2 dp=32", 5, || {
+        htae.simulate_with_costs(&eg, &base).unwrap()
+    });
+    println!(
+        "{:<44} {:>10.0} tasks/s",
+        "  → HTAE throughput",
+        eg.tasks.len() as f64 / t_htae
+    );
+
+    // 4. Emulator.
+    let emu = Emulator::new(&cluster, &analytical);
+    let t_emu = timed("emulator simulate GPT-2 dp=32", 3, || {
+        emu.simulate_with_costs(&eg, &base).unwrap()
+    });
+    println!(
+        "{:<44} {:>10.0} tasks/s",
+        "  → emulator throughput",
+        eg.tasks.len() as f64 / t_emu
+    );
+    println!(
+        "\nemulator/HTAE slowdown: {:.1}× (target < 10×)",
+        t_emu / t_htae
+    );
+}

@@ -1,0 +1,103 @@
+//! Table V: GPT-2 prediction error and throughput *rank preservation*
+//! across DP × MP × PP(n_micro) strategies on HC1 (batch 8) and HC2
+//! (batch 64).
+//!
+//! Paper: 3.2% average error, every strategy's predicted rank equals its
+//! true rank; on HC1 the 4×2×1 hybrid wins (QPI utilization), on HC2
+//! pure data parallelism wins and more micro-batches improve pipelines.
+//!
+//! Run: `cargo bench --bench table5_rank`
+
+use proteus::cluster::Preset;
+use proteus::harness::{run_case_with, Case, HtaeCustom};
+use proteus::models::ModelKind;
+use proteus::strategy::StrategySpec;
+use proteus::util::table::Table;
+
+fn rank(xs: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    let mut r = vec![0; xs.len()];
+    for (pos, &i) in idx.iter().enumerate() {
+        r[i] = pos + 1;
+    }
+    r
+}
+
+fn sweep(preset: Preset, nodes: usize, batch: usize, specs: &[StrategySpec]) -> (f64, bool) {
+    let mut results = Vec::new();
+    for &spec in specs {
+        let case = Case {
+            model: ModelKind::Gpt2,
+            batch,
+            preset,
+            nodes,
+            spec,
+        };
+        let r = run_case_with(
+            &case,
+            &HtaeCustom {
+                skip_flexflow: true,
+                ..Default::default()
+            },
+        )
+        .expect("case runs");
+        results.push((spec.label(), r.htae_sps, r.truth_sps, r.err_pct));
+    }
+    let pred_rank = rank(&results.iter().map(|r| r.1).collect::<Vec<_>>());
+    let true_rank = rank(&results.iter().map(|r| r.2).collect::<Vec<_>>());
+    let mut table = Table::new(&["Strategy", "Error", "Rank (truth/pred)"]);
+    let mut errs = Vec::new();
+    let mut preserved = true;
+    for (i, (label, _, _, err)) in results.iter().enumerate() {
+        errs.push(*err);
+        preserved &= pred_rank[i] == true_rank[i];
+        table.row(vec![
+            label.clone(),
+            format!("{err:.2}%"),
+            format!("{} / {}", true_rank[i], pred_rank[i]),
+        ]);
+    }
+    println!(
+        "\n=== Table V: GPT-2 on {} (global batch {batch}) ===",
+        preset.name()
+    );
+    print!("{}", table.render());
+    println!("rank preserved: {}", if preserved { "YES" } else { "NO" });
+    (errs.iter().sum::<f64>() / errs.len() as f64, preserved)
+}
+
+fn main() {
+    let (e1, p1) = sweep(
+        Preset::HC1,
+        1,
+        8,
+        &[
+            StrategySpec::hybrid(8, 1, 1, 1),
+            StrategySpec::hybrid(4, 2, 1, 1),
+            StrategySpec::hybrid(2, 4, 1, 1),
+            StrategySpec::hybrid(1, 8, 1, 1),
+            StrategySpec::hybrid(2, 2, 2, 1),
+            StrategySpec::hybrid(2, 2, 2, 2),
+        ],
+    );
+    let (e2, p2) = sweep(
+        Preset::HC2,
+        2,
+        64,
+        &[
+            StrategySpec::hybrid(16, 1, 1, 1),
+            StrategySpec::hybrid(8, 2, 1, 1),
+            StrategySpec::hybrid(4, 4, 1, 1),
+            StrategySpec::hybrid(2, 8, 1, 1),
+            StrategySpec::hybrid(8, 1, 2, 4),
+            StrategySpec::hybrid(8, 1, 2, 8),
+            StrategySpec::hybrid(2, 4, 2, 4),
+        ],
+    );
+    println!(
+        "\noverall: avg error {:.2}% (paper: 3.2%); rank preservation {}",
+        (e1 + e2) / 2.0,
+        if p1 && p2 { "full" } else { "partial" }
+    );
+}

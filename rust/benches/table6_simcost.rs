@@ -1,0 +1,59 @@
+//! Table VI: Proteus's own simulation cost — execution-graph compile
+//! time and HTAE simulation time for VGG19 and GPT-2 on HC2 under data
+//! parallelism, sweeping 1..32 GPUs.
+//!
+//! Paper (Python implementation): 0.04-1.7 s for VGG19, 0.26-6.3 s for
+//! GPT-2 at 32 GPUs. The Rust reimplementation should be orders of
+//! magnitude faster with the same near-linear scaling in graph size.
+//!
+//! Run: `cargo bench --bench table6_simcost`
+
+use std::time::Instant;
+
+use proteus::cluster::{Cluster, Preset};
+use proteus::estimator::OpEstimator;
+use proteus::executor::{calibrate, Htae, HtaeConfig};
+use proteus::models::ModelKind;
+use proteus::strategy::{build_strategy, StrategySpec};
+use proteus::util::table::Table;
+
+fn main() {
+    println!("\n=== Table VI: simulation cost on HC2 (seconds) ===\n");
+    let cluster = Cluster::preset(Preset::HC2, 4);
+    let est = OpEstimator::best_available(&cluster, "artifacts/costmodel.hlo.txt");
+    let config = HtaeConfig {
+        gamma: calibrate::default_gamma(&cluster),
+        ..HtaeConfig::default()
+    };
+    let mut table = Table::new(&[
+        "#GPUs", "VGG19 compile", "VGG19 exe", "VGG19 total", "GPT-2 compile", "GPT-2 exe",
+        "GPT-2 total", "tasks(GPT-2)",
+    ]);
+    for n in [1usize, 2, 4, 8, 16, 32] {
+        let mut cells = vec![n.to_string()];
+        let mut gpt_tasks = 0;
+        for model in [ModelKind::Vgg19, ModelKind::Gpt2] {
+            let batch = 32 * n;
+            let g = model.build(batch);
+            let tree = build_strategy(&g, StrategySpec::data_parallel(n)).unwrap();
+            let t0 = Instant::now();
+            let eg = proteus::compiler::compile(&g, &tree, &cluster).unwrap();
+            let compile_s = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let _ = Htae::with_config(&cluster, &est, config)
+                .simulate(&eg)
+                .unwrap();
+            let exe_s = t1.elapsed().as_secs_f64();
+            cells.push(format!("{compile_s:.4}"));
+            cells.push(format!("{exe_s:.4}"));
+            cells.push(format!("{:.4}", compile_s + exe_s));
+            if model == ModelKind::Gpt2 {
+                gpt_tasks = eg.tasks.len();
+            }
+        }
+        cells.push(gpt_tasks.to_string());
+        table.row(cells);
+    }
+    print!("{}", table.render());
+    println!("\npaper (Python): VGG19 1.7 s, GPT-2 6.3 s at 32 GPUs.");
+}

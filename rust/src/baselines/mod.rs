@@ -1,0 +1,9 @@
+//! Baseline performance models the paper compares against (§VIII-B):
+//! a reimplementation of FlexFlow's internal simulator (FlexFlow-Sim)
+//! and a Paleo-style analytical summation model.
+
+pub mod flexflow;
+pub mod paleo;
+
+pub use flexflow::FlexFlowSim;
+pub use paleo::paleo_step_ms;

@@ -1,0 +1,60 @@
+//! Paleo-style analytical model (Qi et al., ICLR'17): per-device cost
+//! summation with no scheduling, no overlap, no contention — the
+//! simplest baseline family the paper situates itself against
+//! ("prior works predict training performance by summing up the
+//! computation and communication time of each layer").
+
+use crate::compiler::{ExecGraph, TaskKind};
+use crate::estimator::OpEstimator;
+use crate::util::time::ps_to_ms;
+use crate::Result;
+
+/// Step time (ms) under pure cost summation: every device serially
+/// executes its computation ops plus every communication op it
+/// participates in; the step is the slowest device.
+pub fn paleo_step_ms(eg: &ExecGraph, est: &OpEstimator) -> Result<f64> {
+    let costs = est.estimate_all(eg)?;
+    let mut per_dev = vec![0u64; eg.n_devices];
+    for (t, &c) in eg.tasks.iter().zip(&costs) {
+        match &t.kind {
+            TaskKind::Comp(ct) => per_dev[ct.device] += c,
+            TaskKind::Comm(cm) => {
+                for &d in &cm.group {
+                    per_dev[d] += c;
+                }
+            }
+        }
+    }
+    Ok(ps_to_ms(per_dev.into_iter().max().unwrap_or(0)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, Preset};
+    use crate::executor::{Htae, HtaeConfig};
+    use crate::graph::{DType, GraphBuilder};
+    use crate::strategy::{build_strategy, StrategySpec};
+
+    #[test]
+    fn summation_exceeds_overlapped_simulation() {
+        let mut b = GraphBuilder::new("m", 16);
+        let x = b.input("x", &[16, 1024], DType::F32);
+        let h = b.linear("fc1", x, 1024, 4096);
+        let h = b.relu("act", h);
+        let h = b.linear("fc2", h, 4096, 1024);
+        let _ = b.loss("loss", h);
+        let g = b.finish();
+        let c = Cluster::preset(Preset::HC1, 1);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(4)).unwrap();
+        let eg = crate::compiler::compile(&g, &tree, &c).unwrap();
+        let est = OpEstimator::analytical(&c);
+        let paleo = paleo_step_ms(&eg, &est).unwrap();
+        let htae = Htae::with_config(&c, &est, HtaeConfig::plain())
+            .simulate(&eg)
+            .unwrap();
+        // No overlap in the summation model → it can only be slower
+        // than (or equal to) a simulator that overlaps streams.
+        assert!(paleo >= htae.step_ms, "paleo {paleo} < htae {}", htae.step_ms);
+    }
+}

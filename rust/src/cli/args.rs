@@ -1,0 +1,137 @@
+//! Minimal command-line argument parser (offline build: no `clap`).
+//!
+//! Grammar: `proteus <command> [--key value]... [--flag]...`. Values
+//! never start with `--`; unknown keys are rejected so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed arguments: a command plus key→value options and boolean flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// Subcommand (first positional).
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Keys the command actually consumed (for unknown-key detection).
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse(raw: impl Iterator<Item = String>) -> Result<Args> {
+        let mut args = Args::default();
+        let raw: Vec<String> = raw.collect();
+        let mut i = 0;
+        if i < raw.len() && !raw[i].starts_with("--") {
+            args.command = raw[i].clone();
+            i += 1;
+        }
+        while i < raw.len() {
+            let a = &raw[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --option, got '{a}'")))?
+                .to_string();
+            if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                args.opts.insert(key, raw[i + 1].clone());
+                i += 2;
+            } else {
+                args.flags.push(key);
+                i += 1;
+            }
+        }
+        Ok(args)
+    }
+
+    fn mark(&self, key: &str) {
+        self.used.borrow_mut().push(key.to_string());
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// usize option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    /// Boolean flag.
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any option/flag never consumed by the command.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let used = self.used.borrow();
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !used.iter().any(|u| u == k) {
+                return Err(Error::Config(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_opts_and_flags() {
+        let a = parse("simulate --model gpt2 --dp 4 --truth");
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get("model"), Some("gpt2"));
+        assert_eq!(a.get_usize("dp", 1).unwrap(), 4);
+        assert!(a.flag("truth"));
+        assert!(!a.flag("plain"));
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("simulate");
+        assert_eq!(a.get_or("preset", "HC1"), "HC1");
+        assert_eq!(a.get_usize("mp", 1).unwrap(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_integers() {
+        let a = parse("simulate --dp four");
+        assert!(a.get_usize("dp", 1).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_options() {
+        let a = parse("simulate --bogus 3");
+        let _ = a.get("model");
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn rejects_non_option_garbage() {
+        assert!(Args::parse(
+            ["simulate".to_string(), "garbage".to_string()].into_iter()
+        )
+        .is_err());
+    }
+}

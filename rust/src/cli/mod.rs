@@ -1,0 +1,398 @@
+//! Command-line interface: the launcher a user drives the simulator
+//! with.
+//!
+//! ```text
+//! proteus simulate  --model gpt2 --batch 64 --preset HC2 --nodes 2
+//!                   --dp 4 --mp 2 --pp 2 --micro 4 [--zero] [--recompute]
+//!                   [--emb-shard] [--plain] [--truth] [--trace out.json]
+//!                   [--artifacts artifacts/costmodel.hlo.txt]
+//! proteus compare   --config configs/gpt2_hc2.json [--truth]
+//! proteus calibrate [--out configs/gamma.json]
+//! proteus info      --model resnet50 [--batch 32]
+//! proteus bench-cost [--rows 65536] [--artifacts ...]
+//! ```
+
+pub mod args;
+
+use crate::baselines::FlexFlowSim;
+use crate::cluster::{Cluster, Preset};
+use crate::emulator::Emulator;
+use crate::estimator::OpEstimator;
+use crate::executor::{calibrate, Htae, HtaeConfig};
+use crate::models::ModelKind;
+use crate::strategy::{build_strategy, StrategySpec};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::{fmt_bytes, rel_err_pct};
+use crate::{Error, Result};
+
+pub use args::Args;
+
+/// Default artifact path.
+pub const DEFAULT_ARTIFACT: &str = "artifacts/costmodel.hlo.txt";
+
+/// Entry point: dispatch a parsed command line.
+pub fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "simulate" => cmd_simulate(args),
+        "compare" => cmd_compare(args),
+        "calibrate" => cmd_calibrate(args),
+        "info" => cmd_info(args),
+        "bench-cost" => cmd_bench_cost(args),
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown command '{other}' (try 'proteus help')"
+        ))),
+    }
+}
+
+const HELP: &str = "\
+Proteus-RS: simulating the performance of distributed DNN training.
+
+USAGE: proteus <command> [options]
+
+COMMANDS:
+  simulate    Predict throughput/memory of one (model, strategy, cluster)
+  compare     Sweep the strategies of a JSON experiment config
+  calibrate   Measure the overlap factor gamma per hardware preset
+  info        Print a model's structure statistics
+  bench-cost  Benchmark the PJRT vs analytical cost backends
+  help        This message
+
+COMMON OPTIONS:
+  --model <resnet50|inception_v3|vgg19|gpt2|gpt-1.5b|dlrm>
+  --batch N --preset <HC1|HC2|HC3> --nodes N
+  --dp N --mp N --pp N --micro N  [--zero] [--recompute] [--emb-shard]
+  --plain           disable runtime-behavior modeling (ablation)
+  --truth           also run the flow-level testbed emulator
+  --flexflow        also run the FlexFlow-Sim baseline
+  --trace FILE      write a Chrome trace of the HTAE timeline
+  --artifacts PATH  AOT cost-kernel artifact (default artifacts/costmodel.hlo.txt)
+";
+
+/// Build the `(model, cluster, spec)` triple shared by commands.
+fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Cluster, StrategySpec)> {
+    let model = args.get_or("model", "gpt2");
+    let model = ModelKind::parse(&model)
+        .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
+    let batch = args.get_usize("batch", 8)?;
+    let preset = args.get_or("preset", "HC1");
+    let preset = Preset::parse(&preset)
+        .ok_or_else(|| Error::Config(format!("unknown preset '{preset}'")))?;
+    let nodes = args.get_usize("nodes", preset.max_nodes())?;
+    let cluster = Cluster::preset(preset, nodes);
+    let mut spec = StrategySpec::hybrid(
+        args.get_usize("dp", 1)?,
+        args.get_usize("mp", 1)?,
+        args.get_usize("pp", 1)?,
+        args.get_usize("micro", 1)?,
+    );
+    spec.zero = args.flag("zero");
+    spec.recompute = args.flag("recompute");
+    spec.shard_embeddings = args.flag("emb-shard");
+    Ok((model, batch, cluster, spec))
+}
+
+fn estimator<'c>(args: &Args, cluster: &'c Cluster) -> OpEstimator<'c> {
+    let path = args.get_or("artifacts", DEFAULT_ARTIFACT);
+    OpEstimator::best_available(cluster, &path)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (model, batch, cluster, spec) = parse_workload(args)?;
+    let plain = args.flag("plain");
+    let truth = args.flag("truth");
+    let flexflow = args.flag("flexflow");
+    let trace_path = args.get("trace").map(|s| s.to_string());
+    args.reject_unknown()?;
+
+    let graph = model.build(batch);
+    let tree = build_strategy(&graph, spec)?;
+    let t0 = std::time::Instant::now();
+    let eg = crate::compiler::compile(&graph, &tree, &cluster)?;
+    let compile_s = t0.elapsed().as_secs_f64();
+    let est = estimator(args, &cluster);
+    let mut config = if plain {
+        HtaeConfig::plain()
+    } else {
+        HtaeConfig {
+            gamma: calibrate::default_gamma(&cluster),
+            ..HtaeConfig::default()
+        }
+    };
+    config.record_timeline = trace_path.is_some();
+    let t1 = std::time::Instant::now();
+    let report = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
+    let exe_s = t1.elapsed().as_secs_f64();
+
+    println!(
+        "model={} strategy={} cluster={}({} GPUs) backend={}",
+        model.name(),
+        spec.label(),
+        cluster.name,
+        cluster.num_devices(),
+        if est.is_pjrt() { "pjrt" } else { "analytical" },
+    );
+    println!(
+        "tasks={} compile={:.3}s simulate={:.3}s",
+        eg.tasks.len(),
+        compile_s,
+        exe_s
+    );
+    println!(
+        "step={:.2} ms  throughput={:.1} samples/s  oom={}  peak_mem={}",
+        report.step_ms,
+        report.throughput,
+        report.oom,
+        fmt_bytes(report.peak_mem.iter().copied().max().unwrap_or(0)),
+    );
+    println!(
+        "behaviors: {} overlapped comps, {} bandwidth-shared comms",
+        report.overlapped_ops, report.shared_ops
+    );
+    if truth {
+        let t = Emulator::new(&cluster, &est).simulate(&eg)?;
+        println!(
+            "emulator(truth): step={:.2} ms throughput={:.1}  HTAE error={:.2}%",
+            t.step_ms,
+            t.throughput,
+            rel_err_pct(report.step_ms, t.step_ms)
+        );
+    }
+    if flexflow {
+        match FlexFlowSim::new(&cluster).simulate(&graph, &tree, &eg) {
+            Ok(f) => println!("flexflow-sim: step={:.2} ms", f.step_ms),
+            Err(e) => println!("flexflow-sim: unsupported ({e})"),
+        }
+    }
+    if let Some(path) = trace_path {
+        crate::trace::write_chrome_trace(&path, &graph, &eg, &report.timeline)?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+/// Strategy entry of an experiment config file.
+fn spec_from_json(j: &Json) -> Result<StrategySpec> {
+    let g = |k: &str, d: usize| -> usize {
+        j.get(k).and_then(|v| v.as_usize()).unwrap_or(d)
+    };
+    let mut spec = StrategySpec::hybrid(g("dp", 1), g("mp", 1), g("pp", 1), g("micro", 1));
+    spec.zero = j.get("zero").and_then(|v| v.as_bool()).unwrap_or(false);
+    spec.recompute = j.get("recompute").and_then(|v| v.as_bool()).unwrap_or(false);
+    spec.shard_embeddings = j
+        .get("emb_shard")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(false);
+    Ok(spec)
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let path = args
+        .get("config")
+        .ok_or_else(|| Error::Config("compare requires --config FILE".into()))?
+        .to_string();
+    let truth = args.flag("truth");
+    args.reject_unknown()?;
+    let text = std::fs::read_to_string(&path)?;
+    let doc = Json::parse(&text).map_err(|e| Error::Config(e.to_string()))?;
+    let model = doc
+        .get("model")
+        .and_then(|v| v.as_str())
+        .and_then(ModelKind::parse)
+        .ok_or_else(|| Error::Config("config: bad 'model'".into()))?;
+    let batch = doc
+        .get("batch")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| Error::Config("config: bad 'batch'".into()))?;
+    let preset = doc
+        .get("preset")
+        .and_then(|v| v.as_str())
+        .and_then(Preset::parse)
+        .ok_or_else(|| Error::Config("config: bad 'preset'".into()))?;
+    let nodes = doc
+        .get("nodes")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(preset.max_nodes());
+    let cluster = Cluster::preset(preset, nodes);
+    let strategies = doc
+        .get("strategies")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| Error::Config("config: 'strategies' must be an array".into()))?;
+
+    let graph = model.build(batch);
+    let est = estimator(args, &cluster);
+    let config = HtaeConfig {
+        gamma: calibrate::default_gamma(&cluster),
+        ..HtaeConfig::default()
+    };
+    let mut table = Table::new(&if truth {
+        vec!["strategy", "step_ms", "samples/s", "oom", "truth_ms", "err%"]
+    } else {
+        vec!["strategy", "step_ms", "samples/s", "oom"]
+    });
+    for sj in strategies {
+        let spec = spec_from_json(sj)?;
+        let tree = build_strategy(&graph, spec)?;
+        let eg = crate::compiler::compile(&graph, &tree, &cluster)?;
+        let r = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
+        let mut row = vec![
+            spec.label(),
+            format!("{:.2}", r.step_ms),
+            format!("{:.1}", r.throughput),
+            r.oom.to_string(),
+        ];
+        if truth {
+            let t = Emulator::new(&cluster, &est).simulate(&eg)?;
+            row.push(format!("{:.2}", t.step_ms));
+            row.push(format!("{:.2}", rel_err_pct(r.step_ms, t.step_ms)));
+        }
+        table.row(row);
+    }
+    println!(
+        "{} batch={} on {} ({} GPUs)",
+        model.name(),
+        batch,
+        cluster.name,
+        cluster.num_devices()
+    );
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let out = args.get("out").map(|s| s.to_string());
+    args.reject_unknown()?;
+    let mut pairs = Vec::new();
+    let mut table = Table::new(&["preset", "device", "gamma"]);
+    for &p in Preset::all() {
+        let c = Cluster::preset(p, 1);
+        let g = calibrate::calibrate_gamma(&c)?;
+        table.row(vec![
+            p.name().into(),
+            c.device.name.clone(),
+            format!("{g:.4}"),
+        ]);
+        pairs.push((p.name(), Json::Num(g)));
+    }
+    print!("{}", table.render());
+    if let Some(path) = out {
+        let doc = Json::obj(pairs.iter().map(|(k, v)| (*k, v.clone())).collect());
+        std::fs::write(&path, doc.to_string_pretty())?;
+        println!("written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "gpt2");
+    let model = ModelKind::parse(&model)
+        .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
+    let batch = args.get_usize("batch", 8)?;
+    args.reject_unknown()?;
+    let g = model.build(batch);
+    println!("model={} batch={batch}", model.name());
+    println!("layers={} tensors={}", g.layers.len(), g.tensors.len());
+    println!("params={:.1}M", g.num_params() as f64 / 1e6);
+    println!(
+        "fwd_flops={:.2} GFLOP/step",
+        g.total_fwd_flops() as f64 / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_bench_cost(args: &Args) -> Result<()> {
+    let rows = args.get_usize("rows", 65536)?;
+    let path = args.get_or("artifacts", DEFAULT_ARTIFACT);
+    args.reject_unknown()?;
+    let cluster = Cluster::preset(Preset::HC2, 4);
+    let g = ModelKind::Gpt2.build(64);
+    let tree = build_strategy(&g, StrategySpec::data_parallel(8))?;
+    let eg = crate::compiler::compile(&g, &tree, &cluster)?;
+    let analytical = OpEstimator::analytical(&cluster);
+    let mut matrix = analytical.feature_matrix(&eg);
+    while matrix.len() < rows {
+        matrix.extend_from_within(0..matrix.len().min(rows - matrix.len()));
+    }
+    matrix.truncate(rows);
+    let t0 = std::time::Instant::now();
+    let a = analytical.eval_rows(&matrix)?;
+    let t_analytical = t0.elapsed();
+    println!(
+        "analytical: {rows} rows in {:?} ({:.1} Mrows/s)",
+        t_analytical,
+        rows as f64 / t_analytical.as_secs_f64() / 1e6
+    );
+    if std::path::Path::new(&path).exists() {
+        let pjrt = OpEstimator::pjrt(&cluster, &path)?;
+        let t1 = std::time::Instant::now();
+        let b = pjrt.eval_rows(&matrix)?;
+        let t_pjrt = t1.elapsed();
+        println!(
+            "pjrt:       {rows} rows in {:?} ({:.1} Mrows/s)",
+            t_pjrt,
+            rows as f64 / t_pjrt.as_secs_f64() / 1e6
+        );
+        let max_rel = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| ((x - y).abs() / x.abs().max(1.0)) as f64)
+            .fold(0.0f64, f64::max);
+        println!("max backend divergence: {max_rel:.2e}");
+    } else {
+        println!("pjrt:       skipped ({path} missing; run `make artifacts`)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn workload_parsing_defaults() {
+        let a = parse("simulate --model vgg19 --batch 32 --dp 4");
+        let (m, b, c, s) = parse_workload(&a).unwrap();
+        assert_eq!(m, ModelKind::Vgg19);
+        assert_eq!(b, 32);
+        assert_eq!(c.name, "HC1");
+        assert_eq!(s.dp, 4);
+        assert_eq!(s.mp, 1);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let a = parse("simulate --model resnet152");
+        assert!(parse_workload(&a).is_err());
+    }
+
+    #[test]
+    fn spec_from_json_reads_all_fields() {
+        let j = Json::parse(
+            r#"{"dp":2,"mp":4,"pp":2,"micro":8,"zero":true,"recompute":true,"emb_shard":true}"#,
+        )
+        .unwrap();
+        let s = spec_from_json(&j).unwrap();
+        assert_eq!((s.dp, s.mp, s.pp, s.n_micro_batch), (2, 4, 2, 8));
+        assert!(s.zero && s.recompute && s.shard_embeddings);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        let a = parse("frobnicate");
+        assert!(run(&a).is_err());
+    }
+
+    #[test]
+    fn info_command_runs() {
+        let a = parse("info --model resnet50 --batch 8");
+        run(&a).unwrap();
+    }
+}

@@ -1,0 +1,462 @@
+//! Cluster topology: devices, physical links, and the link hierarchy used
+//! for bandwidth-sharing detection (paper §VI, Fig. 7).
+//!
+//! Both simulators (HTAE and the ground-truth emulator) and the op
+//! estimator share this substrate: a cluster is a set of GPU devices
+//! connected by *stateful, shared* physical links. Every device pair has a
+//! deterministic link path; communication that traverses the same link
+//! competes for its bandwidth.
+//!
+//! Two intra-node fabrics are modeled, matching the paper's hardware
+//! configurations (Table III):
+//!
+//! - **PCIe tree** (HC1): GPUs hang off PCIe switches, one switch per CPU
+//!   socket, sockets joined by QPI.
+//! - **NVLink/NVSwitch** (HC2, HC3): each GPU has a high-bandwidth port
+//!   into a non-blocking switch fabric.
+//!
+//! Inter-node traffic goes through per-node NICs into a non-blocking
+//! fabric: the NICs are the shared bottleneck, as in the paper's
+//! bandwidth-sharing hierarchy (NIC → QPI → PCIe → NVLink).
+
+pub mod presets;
+
+pub use presets::Preset;
+
+use crate::util::time::{Ps, SEC};
+
+/// Global device (GPU) index, dense in `0..cluster.num_devices()`.
+pub type DeviceId = usize;
+
+/// Dense physical-link index.
+pub type LinkId = usize;
+
+/// GPU model parameters used by the roofline cost model and the
+/// emulator's interference model.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Marketing name, e.g. `"V100"`.
+    pub name: String,
+    /// Peak dense FP32 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Peak HBM/GDDR bandwidth, bytes/s.
+    pub mem_bandwidth: f64,
+    /// Device memory capacity, bytes.
+    pub memory_bytes: u64,
+    /// Overlap interference factor δ: when computation and communication
+    /// overlap on this device, both slow down by ≈ (1 + δ). This is the
+    /// physical effect the paper's profiled γ captures.
+    pub overlap_interference: f64,
+}
+
+/// Physical link classes, ordered top-to-bottom in the sharing
+/// hierarchy of Fig. 7 (NIC checked first, then QPI, PCIe, NVLink).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LinkKind {
+    /// Node NIC (Ethernet/InfiniBand port).
+    Nic,
+    /// CPU socket interconnect.
+    Qpi,
+    /// PCIe leaf or switch uplink.
+    Pcie,
+    /// NVLink port into the NVSwitch fabric.
+    NvLink,
+}
+
+/// One shared physical link.
+#[derive(Debug, Clone)]
+pub struct Link {
+    /// Dense id.
+    pub id: LinkId,
+    /// Hierarchy class.
+    pub kind: LinkKind,
+    /// Capacity in bytes/s.
+    pub bandwidth: f64,
+    /// Base latency (the α of the α-β model) in picoseconds.
+    pub latency: Ps,
+}
+
+impl Link {
+    /// Time to move `bytes` over this link at full capacity.
+    pub fn transfer_ps(&self, bytes: u64) -> Ps {
+        self.latency + (bytes as f64 / self.bandwidth * SEC as f64) as Ps
+    }
+}
+
+/// Intra-node fabric shape.
+#[derive(Debug, Clone)]
+enum IntraFabric {
+    /// Non-blocking NVSwitch; `port[d]` is each GPU's NVLink port.
+    NvSwitch,
+    /// PCIe tree with `gpus_per_switch` GPUs per switch and one switch
+    /// per socket; cross-socket traffic crosses QPI.
+    PcieTree { gpus_per_switch: usize },
+}
+
+/// A described training cluster.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    /// Configuration name (e.g. `"HC2"`).
+    pub name: String,
+    /// Number of nodes.
+    pub n_nodes: usize,
+    /// GPUs per node.
+    pub gpus_per_node: usize,
+    /// Device model (homogeneous clusters, as in the paper).
+    pub device: DeviceSpec,
+    /// All physical links.
+    pub links: Vec<Link>,
+    fabric: IntraFabric,
+    /// Per-device leaf link (NVLink port or PCIe leaf).
+    port: Vec<LinkId>,
+    /// Per-node, per-switch uplink links (PCIe tree only).
+    uplink: Vec<Vec<LinkId>>,
+    /// Per-node QPI link (PCIe tree only).
+    qpi: Vec<Option<LinkId>>,
+    /// Per-node NIC link (absent for single-node clusters).
+    nic: Vec<Option<LinkId>>,
+}
+
+/// Parameters for building a cluster by hand (presets call this).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// Cluster display name.
+    pub name: String,
+    /// Node count.
+    pub n_nodes: usize,
+    /// GPUs per node.
+    pub gpus_per_node: usize,
+    /// GPU model.
+    pub device: DeviceSpec,
+    /// Intra-node fabric: `Some(gpus_per_switch)` = PCIe tree,
+    /// `None` = NVSwitch.
+    pub pcie_tree: Option<usize>,
+    /// Per-GPU intra-node port bandwidth, bytes/s.
+    pub port_bandwidth: f64,
+    /// Port latency, ps.
+    pub port_latency: Ps,
+    /// PCIe switch uplink bandwidth (PCIe tree only), bytes/s.
+    pub uplink_bandwidth: f64,
+    /// QPI bandwidth (PCIe tree only), bytes/s.
+    pub qpi_bandwidth: f64,
+    /// NIC bandwidth per node, bytes/s (multi-node only).
+    pub nic_bandwidth: f64,
+    /// NIC latency, ps.
+    pub nic_latency: Ps,
+}
+
+impl Cluster {
+    /// Build a cluster from an explicit spec.
+    pub fn from_spec(spec: &ClusterSpec) -> crate::Result<Self> {
+        if spec.n_nodes == 0 || spec.gpus_per_node == 0 {
+            return Err(crate::Error::InvalidCluster(
+                "need at least one node and one GPU per node".into(),
+            ));
+        }
+        let mut links = Vec::new();
+        let mut alloc = |kind: LinkKind, bw: f64, lat: Ps| -> LinkId {
+            let id = links.len();
+            links.push(Link {
+                id,
+                kind,
+                bandwidth: bw,
+                latency: lat,
+            });
+            id
+        };
+        let n_dev = spec.n_nodes * spec.gpus_per_node;
+        let fabric = match spec.pcie_tree {
+            Some(gps) => {
+                if spec.gpus_per_node % gps != 0 {
+                    return Err(crate::Error::InvalidCluster(format!(
+                        "gpus_per_node {} not divisible by gpus_per_switch {gps}",
+                        spec.gpus_per_node
+                    )));
+                }
+                IntraFabric::PcieTree { gpus_per_switch: gps }
+            }
+            None => IntraFabric::NvSwitch,
+        };
+        let port_kind = match fabric {
+            IntraFabric::NvSwitch => LinkKind::NvLink,
+            IntraFabric::PcieTree { .. } => LinkKind::Pcie,
+        };
+        let port: Vec<LinkId> = (0..n_dev)
+            .map(|_| alloc(port_kind, spec.port_bandwidth, spec.port_latency))
+            .collect();
+        let mut uplink = vec![Vec::new(); spec.n_nodes];
+        let mut qpi = vec![None; spec.n_nodes];
+        if let IntraFabric::PcieTree { gpus_per_switch } = fabric {
+            let n_switch = spec.gpus_per_node / gpus_per_switch;
+            for n in 0..spec.n_nodes {
+                uplink[n] = (0..n_switch)
+                    .map(|_| alloc(LinkKind::Pcie, spec.uplink_bandwidth, spec.port_latency))
+                    .collect();
+                if n_switch > 1 {
+                    qpi[n] = Some(alloc(LinkKind::Qpi, spec.qpi_bandwidth, spec.port_latency));
+                }
+            }
+        }
+        let nic: Vec<Option<LinkId>> = (0..spec.n_nodes)
+            .map(|_| {
+                if spec.n_nodes > 1 {
+                    Some(alloc(LinkKind::Nic, spec.nic_bandwidth, spec.nic_latency))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        Ok(Cluster {
+            name: spec.name.clone(),
+            n_nodes: spec.n_nodes,
+            gpus_per_node: spec.gpus_per_node,
+            device: spec.device.clone(),
+            links,
+            fabric,
+            port,
+            uplink,
+            qpi,
+            nic,
+        })
+    }
+
+    /// Total GPU count.
+    pub fn num_devices(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    /// Node index of device `d`.
+    pub fn node_of(&self, d: DeviceId) -> usize {
+        d / self.gpus_per_node
+    }
+
+    /// Switch index (within its node) of device `d` (PCIe tree only;
+    /// NVSwitch clusters have a single logical switch 0).
+    pub fn switch_of(&self, d: DeviceId) -> usize {
+        match self.fabric {
+            IntraFabric::NvSwitch => 0,
+            IntraFabric::PcieTree { gpus_per_switch } => {
+                (d % self.gpus_per_node) / gpus_per_switch
+            }
+        }
+    }
+
+    /// The leaf port link of device `d`.
+    pub fn port_of(&self, d: DeviceId) -> LinkId {
+        self.port[d]
+    }
+
+    /// The ordered link path from device `a` to device `b`. Empty iff
+    /// `a == b`. Paths are symmetric.
+    pub fn path(&self, a: DeviceId, b: DeviceId) -> Vec<LinkId> {
+        if a == b {
+            return Vec::new();
+        }
+        let (na, nb) = (self.node_of(a), self.node_of(b));
+        let mut p = vec![self.port[a]];
+        if na == nb {
+            if let IntraFabric::PcieTree { .. } = self.fabric {
+                let (sa, sb) = (self.switch_of(a), self.switch_of(b));
+                if sa != sb {
+                    p.push(self.uplink[na][sa]);
+                    if let Some(q) = self.qpi[na] {
+                        p.push(q);
+                    }
+                    p.push(self.uplink[na][sb]);
+                }
+            }
+        } else {
+            if let IntraFabric::PcieTree { .. } = self.fabric {
+                p.push(self.uplink[na][self.switch_of(a)]);
+            }
+            p.push(self.nic[na].expect("multi-node cluster has NICs"));
+            p.push(self.nic[nb].expect("multi-node cluster has NICs"));
+            if let IntraFabric::PcieTree { .. } = self.fabric {
+                p.push(self.uplink[nb][self.switch_of(b)]);
+            }
+        }
+        p.push(self.port[b]);
+        p
+    }
+
+    /// Bottleneck bandwidth of the `a → b` path, bytes/s.
+    pub fn pair_bandwidth(&self, a: DeviceId, b: DeviceId) -> f64 {
+        self.path(a, b)
+            .iter()
+            .map(|&l| self.links[l].bandwidth)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Total latency (α) of the `a → b` path, ps.
+    pub fn pair_latency(&self, a: DeviceId, b: DeviceId) -> Ps {
+        self.path(a, b).iter().map(|&l| self.links[l].latency).sum()
+    }
+
+    /// NCCL-style ring order for a communication group: devices sorted so
+    /// that same-node (and same-switch) devices are adjacent, minimizing
+    /// cross-hierarchy hops.
+    pub fn ring_order(&self, group: &[DeviceId]) -> Vec<DeviceId> {
+        let mut g = group.to_vec();
+        g.sort_by_key(|&d| (self.node_of(d), self.switch_of(d), d));
+        g
+    }
+
+    /// Effective per-rank *bus bandwidth* of a ring over `group`: walk
+    /// the NCCL-style ring, count how many ring segments traverse each
+    /// physical link, and take the worst `bandwidth / multiplicity`.
+    /// This is the paper's "NCCL topo detection" analogue (§VII): a ring
+    /// that crosses QPI twice only gets half the QPI bandwidth per
+    /// segment — exactly the fine-grained topology effect flat models
+    /// (FlexFlow-Sim) miss.
+    pub fn ring_bus_bandwidth(&self, group: &[DeviceId]) -> f64 {
+        if group.len() < 2 {
+            return f64::INFINITY;
+        }
+        let ring = self.ring_order(group);
+        let mut uses: std::collections::HashMap<LinkId, u32> = Default::default();
+        for i in 0..ring.len() {
+            let a = ring[i];
+            let b = ring[(i + 1) % ring.len()];
+            for l in self.path(a, b) {
+                *uses.entry(l).or_insert(0) += 1;
+            }
+        }
+        let mut bw = f64::INFINITY;
+        for (l, n) in uses {
+            bw = bw.min(self.links[l].bandwidth / n as f64);
+        }
+        bw
+    }
+
+    /// Worst pairwise α along the ring, ps.
+    pub fn ring_latency(&self, group: &[DeviceId]) -> Ps {
+        if group.len() < 2 {
+            return 0;
+        }
+        let ring = self.ring_order(group);
+        let mut lat = 0;
+        for i in 0..ring.len() {
+            let a = ring[i];
+            let b = ring[(i + 1) % ring.len()];
+            lat = lat.max(self.pair_latency(a, b));
+        }
+        lat
+    }
+
+    /// All links of a given kind (used by bandwidth-sharing detection to
+    /// walk the hierarchy top-down).
+    pub fn links_of_kind(&self, kind: LinkKind) -> impl Iterator<Item = &Link> {
+        self.links.iter().filter(move |l| l.kind == kind)
+    }
+
+    /// Build one of the paper's hardware configurations, overriding the
+    /// node count (the paper sweeps GPU counts within each config).
+    pub fn preset(p: Preset, n_nodes: usize) -> Cluster {
+        presets::build(p, n_nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hc1() -> Cluster {
+        Cluster::preset(Preset::HC1, 1)
+    }
+    fn hc2() -> Cluster {
+        Cluster::preset(Preset::HC2, 4)
+    }
+
+    #[test]
+    fn device_and_node_indexing() {
+        let c = hc2();
+        assert_eq!(c.num_devices(), 32);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(8), 1);
+        assert_eq!(c.node_of(31), 3);
+    }
+
+    #[test]
+    fn path_is_empty_for_self() {
+        let c = hc2();
+        assert!(c.path(3, 3).is_empty());
+    }
+
+    #[test]
+    fn same_node_nvlink_path_has_two_ports() {
+        let c = hc2();
+        let p = c.path(0, 5);
+        assert_eq!(p.len(), 2);
+        assert!(p.iter().all(|&l| c.links[l].kind == LinkKind::NvLink));
+    }
+
+    #[test]
+    fn cross_node_path_crosses_both_nics() {
+        let c = hc2();
+        let p = c.path(0, 9);
+        let nics = p.iter().filter(|&&l| c.links[l].kind == LinkKind::Nic).count();
+        assert_eq!(nics, 2);
+        // NIC is the bottleneck.
+        assert!(c.pair_bandwidth(0, 9) < c.pair_bandwidth(0, 1));
+    }
+
+    #[test]
+    fn hc1_cross_socket_crosses_qpi() {
+        let c = hc1();
+        // GPUs 0-3 on switch 0, 4-7 on switch 1.
+        assert_eq!(c.switch_of(3), 0);
+        assert_eq!(c.switch_of(4), 1);
+        let p = c.path(0, 4);
+        assert!(p.iter().any(|&l| c.links[l].kind == LinkKind::Qpi));
+        let p2 = c.path(0, 3);
+        assert!(p2.iter().all(|&l| c.links[l].kind == LinkKind::Pcie));
+    }
+
+    #[test]
+    fn paths_are_symmetric_in_bandwidth() {
+        let c = hc2();
+        for (a, b) in [(0, 1), (0, 9), (7, 25)] {
+            assert_eq!(c.pair_bandwidth(a, b), c.pair_bandwidth(b, a));
+            assert_eq!(c.pair_latency(a, b), c.pair_latency(b, a));
+        }
+    }
+
+    #[test]
+    fn ring_order_groups_by_node() {
+        let c = hc2();
+        let ring = c.ring_order(&[9, 0, 8, 1]);
+        assert_eq!(ring, vec![0, 1, 8, 9]);
+    }
+
+    #[test]
+    fn intra_node_ring_faster_than_cross_node() {
+        let c = hc2();
+        let intra: Vec<usize> = (0..8).collect();
+        let cross: Vec<usize> = vec![0, 8, 16, 24];
+        assert!(c.ring_bus_bandwidth(&intra) > c.ring_bus_bandwidth(&cross));
+    }
+
+    #[test]
+    fn single_device_group_is_free() {
+        let c = hc2();
+        assert_eq!(c.ring_bus_bandwidth(&[3]), f64::INFINITY);
+        assert_eq!(c.ring_latency(&[3]), 0);
+    }
+
+    #[test]
+    fn from_spec_rejects_empty() {
+        let mut spec = presets::spec(Preset::HC1, 1);
+        spec.n_nodes = 0;
+        assert!(Cluster::from_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let c = hc2();
+        let l = &c.links[c.port_of(0)];
+        let t1 = l.transfer_ps(1 << 20);
+        let t2 = l.transfer_ps(1 << 21);
+        assert!(t2 > t1);
+        assert!(t2 - l.latency >= 2 * (t1 - l.latency) - 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! The paper's three hardware configurations (Table III) as cluster
+//! presets, plus the device parameter tables behind them.
+//!
+//! | Config | Nodes | GPUs/node | Intra-node | Inter-node |
+//! |--------|-------|-----------|------------|------------|
+//! | HC1    | 1     | 8×TitanXp | PCIe       | N/A        |
+//! | HC2    | ≤4    | 8×V100    | NVLink     | 100 Gbps   |
+//! | HC3    | ≤2    | 8×A100    | NVLink     | 200 Gbps   |
+//!
+//! Absolute numbers are public datasheet values; the reproduction's
+//! claims are about *relative* prediction error against the ground-truth
+//! emulator, which shares these parameters (DESIGN.md §3).
+
+use super::{Cluster, ClusterSpec, DeviceSpec};
+use crate::util::time::US;
+
+/// The paper's hardware configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Preset {
+    /// 1 node × 8 TitanXp over a two-socket PCIe tree.
+    HC1,
+    /// Up to 4 nodes × 8 V100 with NVLink and 100 Gbps interconnect.
+    HC2,
+    /// Up to 2 nodes × 8 A100 with NVLink and 200 Gbps interconnect.
+    HC3,
+}
+
+impl Preset {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Option<Preset> {
+        match s.to_ascii_uppercase().as_str() {
+            "HC1" => Some(Preset::HC1),
+            "HC2" => Some(Preset::HC2),
+            "HC3" => Some(Preset::HC3),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Preset::HC1 => "HC1",
+            Preset::HC2 => "HC2",
+            Preset::HC3 => "HC3",
+        }
+    }
+
+    /// Maximum node count evaluated in the paper.
+    pub fn max_nodes(self) -> usize {
+        match self {
+            Preset::HC1 => 1,
+            Preset::HC2 => 4,
+            Preset::HC3 => 2,
+        }
+    }
+
+    /// All presets.
+    pub fn all() -> &'static [Preset] {
+        &[Preset::HC1, Preset::HC2, Preset::HC3]
+    }
+}
+
+const GB: f64 = 1e9;
+
+/// TitanXp (Pascal): 12.15 TFLOP/s FP32, 547 GB/s GDDR5X, 12 GB.
+pub fn titan_xp() -> DeviceSpec {
+    DeviceSpec {
+        name: "TitanXp".into(),
+        peak_flops: 12.15e12,
+        mem_bandwidth: 547.0 * GB,
+        memory_bytes: 12 * (1 << 30),
+        // PCIe-attached GPUs suffer the most compute/DMA interference.
+        overlap_interference: 0.22,
+    }
+}
+
+/// V100 (Volta): 15.7 TFLOP/s FP32, 900 GB/s HBM2, 16 GB.
+pub fn v100() -> DeviceSpec {
+    DeviceSpec {
+        name: "V100".into(),
+        peak_flops: 15.7e12,
+        mem_bandwidth: 900.0 * GB,
+        memory_bytes: 16 * (1 << 30),
+        overlap_interference: 0.12,
+    }
+}
+
+/// A100 (Ampere): 19.5 TFLOP/s FP32, 1555 GB/s HBM2e, 40 GB.
+pub fn a100() -> DeviceSpec {
+    DeviceSpec {
+        name: "A100".into(),
+        peak_flops: 19.5e12,
+        mem_bandwidth: 1555.0 * GB,
+        memory_bytes: 40 * (1 << 30),
+        overlap_interference: 0.08,
+    }
+}
+
+/// The [`ClusterSpec`] for a preset with `n_nodes` nodes (clamped to the
+/// preset's maximum).
+pub fn spec(p: Preset, n_nodes: usize) -> ClusterSpec {
+    let n_nodes = n_nodes.clamp(1, p.max_nodes());
+    match p {
+        Preset::HC1 => ClusterSpec {
+            name: "HC1".into(),
+            n_nodes: 1,
+            gpus_per_node: 8,
+            device: titan_xp(),
+            // Two PCIe switches of 4 GPUs each, one per socket.
+            pcie_tree: Some(4),
+            // PCIe 3.0 x16 effective.
+            port_bandwidth: 13.0 * GB,
+            port_latency: 5 * US,
+            uplink_bandwidth: 13.0 * GB,
+            // QPI between the two sockets.
+            qpi_bandwidth: 19.2 * GB,
+            nic_bandwidth: 0.0,
+            nic_latency: 0,
+        },
+        Preset::HC2 => ClusterSpec {
+            name: "HC2".into(),
+            n_nodes,
+            gpus_per_node: 8,
+            device: v100(),
+            pcie_tree: None,
+            // V100 NVLink2: 6 links × 25 GB/s per direction.
+            port_bandwidth: 150.0 * GB,
+            port_latency: 3 * US,
+            uplink_bandwidth: 0.0,
+            qpi_bandwidth: 0.0,
+            // 100 Gbps ≈ 12.0 GB/s effective.
+            nic_bandwidth: 12.0 * GB,
+            nic_latency: 8 * US,
+        },
+        Preset::HC3 => ClusterSpec {
+            name: "HC3".into(),
+            n_nodes,
+            gpus_per_node: 8,
+            device: a100(),
+            pcie_tree: None,
+            // A100 NVLink3: 12 links × 25 GB/s per direction.
+            port_bandwidth: 300.0 * GB,
+            port_latency: 3 * US,
+            uplink_bandwidth: 0.0,
+            qpi_bandwidth: 0.0,
+            // 200 Gbps ≈ 24.0 GB/s effective.
+            nic_bandwidth: 24.0 * GB,
+            nic_latency: 8 * US,
+        },
+    }
+}
+
+/// Build a preset cluster (infallible: preset specs are valid by
+/// construction).
+pub fn build(p: Preset, n_nodes: usize) -> Cluster {
+    Cluster::from_spec(&spec(p, n_nodes)).expect("preset specs are valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_build() {
+        for &p in Preset::all() {
+            let c = build(p, p.max_nodes());
+            assert_eq!(c.gpus_per_node, 8);
+            assert!(c.num_devices() >= 8);
+        }
+    }
+
+    #[test]
+    fn node_count_clamps_to_preset_max() {
+        let c = build(Preset::HC1, 4);
+        assert_eq!(c.n_nodes, 1);
+        let c = build(Preset::HC3, 8);
+        assert_eq!(c.n_nodes, 2);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for &p in Preset::all() {
+            assert_eq!(Preset::parse(p.name()), Some(p));
+        }
+        assert_eq!(Preset::parse("hc2"), Some(Preset::HC2));
+        assert_eq!(Preset::parse("HC9"), None);
+    }
+
+    #[test]
+    fn faster_generations_have_more_bandwidth() {
+        assert!(v100().mem_bandwidth > titan_xp().mem_bandwidth);
+        assert!(a100().mem_bandwidth > v100().mem_bandwidth);
+        assert!(a100().peak_flops > titan_xp().peak_flops);
+    }
+
+    #[test]
+    fn interference_decreases_with_generation() {
+        assert!(titan_xp().overlap_interference > v100().overlap_interference);
+        assert!(v100().overlap_interference > a100().overlap_interference);
+    }
+}

@@ -1,0 +1,383 @@
+//! Execution graph compiler (paper §V).
+//!
+//! `compile(model, strategy_tree, cluster)` lowers a model + strategy
+//! into a **distributed execution graph**:
+//!
+//! - every layer becomes per-device computation *tasks* — forward,
+//!   backward, and (under recomputation) recompute instances, one set per
+//!   micro-batch;
+//! - wherever a tensor's produced/stored layout differs from what a
+//!   consumer requires, *strategy transformation* ([`transform`]) infers
+//!   communication tasks (collectives with inferred groups, p2p
+//!   fallback); gradient synchronization falls out of the same mechanism
+//!   applied to gradient layouts;
+//! - data dependencies preserve computational equivalence and control
+//!   dependencies encode the subgraph schedule (micro-batch ordering,
+//!   `max_ongoing_micro_batch` memory bounding, recompute-just-before-
+//!   backward);
+//! - every task carries the byte/FLOP features the op estimator consumes
+//!   and the alloc/free events the memory tracker replays.
+
+pub mod emit;
+pub mod transform;
+
+pub use transform::{transform, CollectiveKind, CommOp};
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::graph::{Graph, LayerId, OpKind};
+use crate::strategy::{ScheduleConfig, StrategyTree};
+use crate::Result;
+
+/// Dense task id within one [`ExecGraph`].
+pub type TaskId = usize;
+
+/// Execution phase of a task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Forward computation / feature communication.
+    Fwd,
+    /// Backward computation / gradient flow.
+    Bwd,
+    /// Recomputation of checkpointed activations.
+    Recomp,
+    /// Optimizer step.
+    Optim,
+}
+
+/// Communication stream class (paper §VI-B: feature and gradient
+/// communication live in separate queues so they can overlap).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommClass {
+    /// Activation / parameter-gather traffic (blocks the consumer).
+    Feature,
+    /// Parameter-gradient reduction traffic (asynchronous).
+    Gradient,
+}
+
+/// A computation task: one layer shard on one device.
+#[derive(Debug, Clone)]
+pub struct CompTask {
+    /// Executing device.
+    pub device: DeviceId,
+    /// Operator kind (selects the roofline efficiency profile).
+    pub op: OpKind,
+    /// FLOPs of this shard.
+    pub flops: f64,
+    /// Bytes read from device memory.
+    pub bytes_read: f64,
+    /// Bytes written to device memory.
+    pub bytes_written: f64,
+}
+
+/// A communication task: one collective or p2p transfer over a group.
+#[derive(Debug, Clone)]
+pub struct CommTask {
+    /// Primitive.
+    pub kind: CollectiveKind,
+    /// Participating devices (`[src, dst]` for p2p).
+    pub group: Vec<DeviceId>,
+    /// Per-rank payload bytes.
+    pub bytes: u64,
+    /// Stream class.
+    pub class: CommClass,
+}
+
+/// Task payload.
+#[derive(Debug, Clone)]
+pub enum TaskKind {
+    /// Computation shard.
+    Comp(CompTask),
+    /// Communication operation.
+    Comm(CommTask),
+}
+
+/// One node of the distributed execution graph.
+#[derive(Debug, Clone)]
+pub struct Task {
+    /// Payload.
+    pub kind: TaskKind,
+    /// Originating layer (None for optimizer/aux tasks).
+    pub layer: Option<LayerId>,
+    /// Pipeline stage.
+    pub stage: usize,
+    /// Micro-batch index.
+    pub micro: u32,
+    /// Phase.
+    pub phase: Phase,
+    /// Memory allocated when the task starts: `(device, bytes)`.
+    pub allocs: Vec<(DeviceId, u64)>,
+    /// Memory released after completion: `(device, bytes)`.
+    pub frees: Vec<(DeviceId, u64)>,
+}
+
+impl Task {
+    /// The devices this task occupies.
+    pub fn devices(&self) -> &[DeviceId] {
+        match &self.kind {
+            TaskKind::Comp(c) => std::slice::from_ref(&c.device),
+            TaskKind::Comm(c) => &c.group,
+        }
+    }
+
+    /// True for communication tasks.
+    pub fn is_comm(&self) -> bool {
+        matches!(self.kind, TaskKind::Comm(_))
+    }
+
+    /// Human-readable label for traces.
+    pub fn label(&self, graph: &Graph) -> String {
+        let base = match &self.kind {
+            TaskKind::Comp(c) => {
+                let lname = self
+                    .layer
+                    .map(|l| graph.layers[l].path_string())
+                    .unwrap_or_else(|| "optimizer".into());
+                format!("{lname}@{}", c.device)
+            }
+            TaskKind::Comm(c) => format!("{}[{}]", c.kind.name(), c.group.len()),
+        };
+        format!("{base} {:?} µb{}", self.phase, self.micro)
+    }
+}
+
+/// The compiled distributed execution graph.
+#[derive(Debug, Clone)]
+pub struct ExecGraph {
+    /// All tasks.
+    pub tasks: Vec<Task>,
+    /// Successor lists (data + control dependencies).
+    pub succs: Vec<Vec<TaskId>>,
+    /// Predecessor counts.
+    pub preds: Vec<u32>,
+    /// Pipeline stage count.
+    pub n_stages: usize,
+    /// Devices used (max id + 1).
+    pub n_devices: usize,
+    /// Per-device static memory: parameters + gradients + optimizer
+    /// state bytes.
+    pub static_mem: Vec<u64>,
+    /// Global batch size (throughput denominator).
+    pub batch: usize,
+    /// Schedule config per stage.
+    pub stage_schedule: Vec<ScheduleConfig>,
+}
+
+impl ExecGraph {
+    /// Validate the graph is a DAG (used by tests; compilation
+    /// guarantees it by construction).
+    pub fn is_dag(&self) -> bool {
+        crate::util::topo::topo_sort(self.tasks.len(), &self.succs).is_some()
+    }
+
+    /// Count tasks matching a predicate.
+    pub fn count(&self, f: impl Fn(&Task) -> bool) -> usize {
+        self.tasks.iter().filter(|t| f(t)).count()
+    }
+
+    /// Total communication volume in bytes (per-rank payload × group).
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.tasks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TaskKind::Comm(c) => Some(c.bytes * c.group.len() as u64),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Total computation FLOPs.
+    pub fn total_flops(&self) -> f64 {
+        self.tasks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TaskKind::Comp(c) => Some(c.flops),
+                _ => None,
+            })
+            .sum()
+    }
+}
+
+/// Compile `(model, strategy, cluster)` into a distributed execution
+/// graph. See the module docs for the passes involved.
+pub fn compile(graph: &Graph, tree: &StrategyTree, cluster: &Cluster) -> Result<ExecGraph> {
+    let resolved = crate::strategy::resolve(graph, tree)?;
+    emit::Emitter::new(graph, &resolved, cluster)?.emit()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Preset;
+    use crate::graph::{DType, GraphBuilder};
+    use crate::strategy::{build_strategy, StrategySpec, StrategyTree};
+
+    fn mlp(batch: usize) -> Graph {
+        let mut b = GraphBuilder::new("mlp", batch);
+        let x = b.input("x", &[batch, 64], DType::F32);
+        let h = b.scoped("blk0", |b| {
+            let h = b.linear("fc1", x, 64, 128);
+            b.relu("act", h)
+        });
+        let h = b.scoped("blk1", |b| b.linear("fc2", h, 128, 64));
+        let _ = b.loss("loss", h);
+        b.finish()
+    }
+
+    #[test]
+    fn single_device_compiles_to_dag() {
+        let g = mlp(8);
+        let tree = StrategyTree::from_model(&g);
+        let c = Cluster::preset(Preset::HC1, 1);
+        let eg = compile(&g, &tree, &c).unwrap();
+        assert!(eg.is_dag());
+        // fwd + bwd per layer + optimizer; no comms on 1 device.
+        assert_eq!(eg.count(|t| t.is_comm()), 0);
+        let fwd = eg.count(|t| t.phase == Phase::Fwd);
+        let bwd = eg.count(|t| t.phase == Phase::Bwd);
+        assert_eq!(fwd, g.layers.len());
+        assert_eq!(bwd, g.layers.len());
+        assert_eq!(eg.count(|t| t.phase == Phase::Optim), 1);
+    }
+
+    #[test]
+    fn data_parallel_emits_gradient_allreduce() {
+        let g = mlp(8);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(4)).unwrap();
+        let c = Cluster::preset(Preset::HC1, 1);
+        let eg = compile(&g, &tree, &c).unwrap();
+        assert!(eg.is_dag());
+        let grad_ars: Vec<&Task> = eg
+            .tasks
+            .iter()
+            .filter(|t| {
+                matches!(&t.kind, TaskKind::Comm(c)
+                    if c.class == CommClass::Gradient && c.kind == CollectiveKind::AllReduce)
+            })
+            .collect();
+        // One all-reduce per parameter tensor (fc1 w+b, fc2 w+b).
+        assert_eq!(grad_ars.len(), 4);
+        for t in grad_ars {
+            if let TaskKind::Comm(c) = &t.kind {
+                assert_eq!(c.group, vec![0, 1, 2, 3]);
+            }
+        }
+        // No feature comms in plain DP.
+        assert_eq!(
+            eg.count(|t| matches!(&t.kind, TaskKind::Comm(c) if c.class == CommClass::Feature)),
+            0
+        );
+    }
+
+    #[test]
+    fn zero_emits_gather_and_reduce_scatter() {
+        let g = mlp(8);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(4).with_zero()).unwrap();
+        let c = Cluster::preset(Preset::HC1, 1);
+        let eg = compile(&g, &tree, &c).unwrap();
+        assert!(eg.is_dag());
+        let gathers = eg.count(|t| {
+            matches!(&t.kind, TaskKind::Comm(c)
+                if c.kind == CollectiveKind::AllGather && c.class == CommClass::Feature)
+        });
+        let rs = eg.count(|t| {
+            matches!(&t.kind, TaskKind::Comm(c)
+                if c.kind == CollectiveKind::ReduceScatter && c.class == CommClass::Gradient)
+        });
+        // fc1 w+b, fc2 w+b shardable (loss has no params).
+        assert_eq!(gathers, 4);
+        assert_eq!(rs, 4);
+    }
+
+    #[test]
+    fn pipeline_emits_p2p_and_micro_batches() {
+        let g = mlp(8);
+        let tree = build_strategy(&g, StrategySpec::hybrid(1, 1, 2, 4)).unwrap();
+        let c = Cluster::preset(Preset::HC1, 1);
+        let eg = compile(&g, &tree, &c).unwrap();
+        assert!(eg.is_dag());
+        assert_eq!(eg.n_stages, 2);
+        let p2ps = eg.count(|t| {
+            matches!(&t.kind, TaskKind::Comm(c) if c.kind == CollectiveKind::P2p)
+        });
+        // 4 micro-batches × (1 fwd activation + 1 bwd grad) boundary send.
+        assert_eq!(p2ps, 8);
+        // Each layer appears once per micro-batch in fwd.
+        let fwd = eg.count(|t| t.phase == Phase::Fwd && !t.is_comm());
+        assert_eq!(fwd, g.layers.len() * 4);
+    }
+
+    #[test]
+    fn recompute_duplicates_forward_tasks() {
+        let g = mlp(8);
+        let spec = StrategySpec {
+            recompute: true,
+            ..StrategySpec::data_parallel(2)
+        };
+        let tree = build_strategy(&g, spec).unwrap();
+        let c = Cluster::preset(Preset::HC1, 1);
+        let eg = compile(&g, &tree, &c).unwrap();
+        assert!(eg.is_dag());
+        let recomp = eg.count(|t| t.phase == Phase::Recomp);
+        assert!(recomp > 0, "expected recompute tasks");
+    }
+
+    #[test]
+    fn static_memory_counts_adam_state() {
+        let g = mlp(8);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(2)).unwrap();
+        let c = Cluster::preset(Preset::HC1, 1);
+        let eg = compile(&g, &tree, &c).unwrap();
+        // params replicated: each device holds all params × 4 (p, g, m, v).
+        let params_bytes: u64 = g.num_params() * 4;
+        assert_eq!(eg.static_mem[0], params_bytes * 4);
+        assert_eq!(eg.static_mem[1], params_bytes * 4);
+    }
+
+    #[test]
+    fn zero_shrinks_static_memory() {
+        let g = mlp(8);
+        let c = Cluster::preset(Preset::HC1, 1);
+        let plain = compile(
+            &g,
+            &build_strategy(&g, StrategySpec::data_parallel(4)).unwrap(),
+            &c,
+        )
+        .unwrap();
+        let zero = compile(
+            &g,
+            &build_strategy(&g, StrategySpec::data_parallel(4).with_zero()).unwrap(),
+            &c,
+        )
+        .unwrap();
+        assert!(zero.static_mem[0] < plain.static_mem[0]);
+    }
+
+    #[test]
+    fn flops_conserved_across_strategies() {
+        let g = mlp(64);
+        let c = Cluster::preset(Preset::HC1, 1);
+        let single = compile(&g, &StrategyTree::from_model(&g), &c).unwrap();
+        let dp = compile(
+            &g,
+            &build_strategy(&g, StrategySpec::data_parallel(4)).unwrap(),
+            &c,
+        )
+        .unwrap();
+        // Same total compute flops regardless of distribution. Optimizer
+        // tasks are excluded: replicated parameters are updated on every
+        // replica, so optimizer flops legitimately scale with dp.
+        let non_opt = |eg: &ExecGraph| -> f64 {
+            eg.tasks
+                .iter()
+                .filter(|t| t.phase != Phase::Optim)
+                .filter_map(|t| match &t.kind {
+                    TaskKind::Comp(c) => Some(c.flops),
+                    _ => None,
+                })
+                .sum()
+        };
+        let (a, b) = (non_opt(&single), non_opt(&dp));
+        let rel = (a - b).abs() / a;
+        assert!(rel < 0.01, "{a} vs {b}");
+    }
+}

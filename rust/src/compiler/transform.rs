@@ -1,0 +1,516 @@
+//! Strategy transformation (paper §V-B): given a tensor's *source*
+//! layout (how its producer leaves it / how it is stored) and the
+//! *destination* layout a consumer requires, infer the communication
+//! primitives that convert one into the other.
+//!
+//! Inference is pattern matching over layout pairs, with point-to-point
+//! transfers as the general fallback — exactly the paper's design
+//! ("Proteus automatically infers collective communication primitives,
+//! failing over to point-to-point communication if necessary").
+//!
+//! The same engine serves forward feature transformations (ZeRO
+//! all-gathers, Megatron all-reduces, pipeline-boundary sends) and
+//! backward gradient transformations (data-parallel gradient all-reduce,
+//! ZeRO reduce-scatter): gradients are just tensors whose layouts carry
+//! *partial* groups.
+
+use crate::cluster::DeviceId;
+use crate::strategy::TensorLayout;
+
+/// Collective communication primitives the compiler can emit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    /// Ring all-reduce over a group.
+    AllReduce,
+    /// All-gather: every rank ends with the concatenation.
+    AllGather,
+    /// Reduce-scatter: partial sums reduced, result sharded.
+    ReduceScatter,
+    /// All-to-all shard-axis exchange.
+    AllToAll,
+    /// One-to-many broadcast.
+    Broadcast,
+    /// Point-to-point transfer (possibly many pairs batched).
+    P2p,
+}
+
+impl CollectiveKind {
+    /// Display name for traces and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveKind::AllReduce => "all_reduce",
+            CollectiveKind::AllGather => "all_gather",
+            CollectiveKind::ReduceScatter => "reduce_scatter",
+            CollectiveKind::AllToAll => "all_to_all",
+            CollectiveKind::Broadcast => "broadcast",
+            CollectiveKind::P2p => "p2p",
+        }
+    }
+}
+
+/// One inferred communication operation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommOp {
+    /// Primitive.
+    pub kind: CollectiveKind,
+    /// Participating devices. For `P2p` this is `[src, dst]` per op.
+    pub group: Vec<DeviceId>,
+    /// Payload bytes *per rank* (the collective's input size on each
+    /// device; the estimator applies the algorithm's bus-traffic factor).
+    pub bytes: u64,
+}
+
+/// Infer the communication converting `src` into `dst` for a tensor of
+/// `total_bytes`. Returns an empty vec when no communication is needed.
+pub fn transform(src: &TensorLayout, dst: &TensorLayout, total_bytes: u64) -> Vec<CommOp> {
+    if layout_satisfies(src, dst) {
+        return Vec::new();
+    }
+    // Same part structure → per-part reduction / broadcast patterns.
+    if src.axis_degrees == dst.axis_degrees {
+        if let Some(ops) = same_parts(src, dst, total_bytes) {
+            return ops;
+        }
+    }
+    // dst strictly finer → reduce-scatter or local slice.
+    if finer(dst, src) {
+        if let Some(ops) = refine(src, dst, total_bytes) {
+            return ops;
+        }
+    }
+    // dst strictly coarser → all-gather.
+    if finer(src, dst) {
+        if let Some(ops) = coarsen(src, dst, total_bytes) {
+            return ops;
+        }
+    }
+    // Same part count, different axes → all-to-all.
+    if let Some(ops) = reaxis(src, dst, total_bytes) {
+        return ops;
+    }
+    fallback_p2p(src, dst, total_bytes)
+}
+
+/// True when every complete copy the destination needs already exists at
+/// the right devices (no communication).
+pub fn layout_satisfies(src: &TensorLayout, dst: &TensorLayout) -> bool {
+    if src.axis_degrees != dst.axis_degrees {
+        // A fully replicated source satisfies any sharded destination
+        // whose devices all hold the full tensor (free local slicing).
+        if src.n_parts() == 1 && src.parts[0].complete() {
+            let have = &src.parts[0].groups[0];
+            return dst
+                .parts
+                .iter()
+                .all(|p| p.complete() && p.groups[0].iter().all(|d| have.contains(d)));
+        }
+        return false;
+    }
+    src.parts.iter().zip(&dst.parts).all(|(s, d)| {
+        s.complete()
+            && d.complete()
+            && d.groups[0].iter().all(|dev| s.groups[0].contains(dev))
+    })
+}
+
+/// Per-part patterns when part structures match.
+fn same_parts(src: &TensorLayout, dst: &TensorLayout, total_bytes: u64) -> Option<Vec<CommOp>> {
+    let part_bytes = src.part_bytes(total_bytes);
+    let mut ops = Vec::new();
+    for (s, d) in src.parts.iter().zip(&dst.parts) {
+        let d_devs = d.device_set();
+        if !s.complete() {
+            // Partial → complete: all-reduce over the partial groups
+            // (requires every destination device to hold a partial copy;
+            // otherwise fall back).
+            let s_devs = s.device_set();
+            if d_devs.iter().all(|dev| s_devs.contains(dev)) {
+                ops.push(CommOp {
+                    kind: CollectiveKind::AllReduce,
+                    group: s_devs,
+                    bytes: part_bytes,
+                });
+            } else {
+                return None;
+            }
+        } else {
+            let have = &s.groups[0];
+            let missing: Vec<DeviceId> = d_devs
+                .iter()
+                .copied()
+                .filter(|dev| !have.contains(dev))
+                .collect();
+            if missing.is_empty() {
+                continue;
+            }
+            // Complete somewhere, needed elsewhere: a single missing
+            // destination is a point-to-point send (the pipeline-boundary
+            // pattern); several become a broadcast from the first holder.
+            if missing.len() == 1 {
+                ops.push(CommOp {
+                    kind: CollectiveKind::P2p,
+                    group: vec![have[0], missing[0]],
+                    bytes: part_bytes,
+                });
+            } else {
+                let mut group = vec![have[0]];
+                group.extend(missing);
+                ops.push(CommOp {
+                    kind: CollectiveKind::Broadcast,
+                    group,
+                    bytes: part_bytes,
+                });
+            }
+        }
+    }
+    Some(ops)
+}
+
+/// Componentwise "a is finer than b" (every axis degree of `a` is a
+/// positive multiple of `b`'s, at least one strictly).
+fn finer(a: &TensorLayout, b: &TensorLayout) -> bool {
+    if a.axis_degrees.len() != b.axis_degrees.len() {
+        return false;
+    }
+    let mut strictly = false;
+    for (&da, &db) in a.axis_degrees.iter().zip(&b.axis_degrees) {
+        if db == 0 || da % db != 0 {
+            return false;
+        }
+        if da > db {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// For each dst part index, the src part index containing it (dst finer).
+fn parent_part(dst_idx: usize, dst: &TensorLayout, src: &TensorLayout) -> usize {
+    // Decompose dst_idx into per-axis indices (row-major), divide by the
+    // refinement factor per axis, recompose in src space.
+    let mut rem = dst_idx;
+    let rank = dst.axis_degrees.len();
+    let mut coords = vec![0usize; rank];
+    for ax in (0..rank).rev() {
+        coords[ax] = rem % dst.axis_degrees[ax];
+        rem /= dst.axis_degrees[ax];
+    }
+    let mut out = 0usize;
+    for ax in 0..rank {
+        let f = dst.axis_degrees[ax] / src.axis_degrees[ax];
+        out = out * src.axis_degrees[ax] + coords[ax] / f;
+    }
+    out
+}
+
+/// dst finer than src: reduce-scatter (src partial) or local slicing
+/// (src complete and dst devices already hold the parent part).
+fn refine(src: &TensorLayout, dst: &TensorLayout, total_bytes: u64) -> Option<Vec<CommOp>> {
+    let src_part_bytes = src.part_bytes(total_bytes);
+    // Group dst parts by their src parent.
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); src.n_parts()];
+    for i in 0..dst.n_parts() {
+        children[parent_part(i, dst, src)].push(i);
+    }
+    let mut ops = Vec::new();
+    for (sp, kids) in children.iter().enumerate() {
+        let s = &src.parts[sp];
+        let s_devs = s.device_set();
+        // Each kid must land on a single-device complete group for the
+        // collective patterns below; otherwise bail to p2p.
+        let kid_devs: Option<Vec<DeviceId>> = kids
+            .iter()
+            .map(|&k| {
+                let p = &dst.parts[k];
+                if p.complete() && p.groups[0].len() == 1 {
+                    Some(p.groups[0][0])
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let kid_devs = kid_devs?;
+        if !s.complete() {
+            // Partial parent scattered onto its own group → reduce-scatter.
+            if kid_devs.len() == s_devs.len()
+                && kid_devs.iter().all(|d| s_devs.contains(d))
+            {
+                ops.push(CommOp {
+                    kind: CollectiveKind::ReduceScatter,
+                    group: s_devs,
+                    bytes: src_part_bytes,
+                });
+            } else {
+                return None;
+            }
+        } else {
+            // Complete parent: slicing is free on devices that hold it.
+            let have = &s.groups[0];
+            if kid_devs.iter().all(|d| have.contains(d)) {
+                continue;
+            }
+            return None;
+        }
+    }
+    Some(ops)
+}
+
+/// src finer than dst: all-gather each dst part from its children when
+/// the dst group is exactly the union of single-device child shards.
+fn coarsen(src: &TensorLayout, dst: &TensorLayout, total_bytes: u64) -> Option<Vec<CommOp>> {
+    let src_part_bytes = src.part_bytes(total_bytes);
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); dst.n_parts()];
+    for i in 0..src.n_parts() {
+        children[parent_part(i, src, dst)].push(i);
+    }
+    let mut ops = Vec::new();
+    for (dp, kids) in children.iter().enumerate() {
+        let d = &dst.parts[dp];
+        if !d.complete() {
+            return None;
+        }
+        let want = d.device_set();
+        let mut shard_devs = Vec::new();
+        for &k in kids {
+            let p = &src.parts[k];
+            if !p.complete() {
+                return None;
+            }
+            shard_devs.extend(p.groups[0].iter().copied());
+        }
+        shard_devs.sort_unstable();
+        shard_devs.dedup();
+        // The gather group must cover all wanted devices.
+        if want.iter().all(|dev| shard_devs.contains(dev)) {
+            ops.push(CommOp {
+                kind: CollectiveKind::AllGather,
+                group: shard_devs,
+                bytes: src_part_bytes,
+            });
+        } else {
+            return None;
+        }
+    }
+    Some(ops)
+}
+
+/// Shard-axis change with equal part counts and device sets → all-to-all.
+fn reaxis(src: &TensorLayout, dst: &TensorLayout, total_bytes: u64) -> Option<Vec<CommOp>> {
+    if src.n_parts() != dst.n_parts() || src.n_parts() < 2 {
+        return None;
+    }
+    if src.axis_degrees == dst.axis_degrees {
+        return None;
+    }
+    if !src.fully_sharded() || !dst.fully_sharded() {
+        return None;
+    }
+    let sdevs = src.device_set();
+    let ddevs = dst.device_set();
+    if sdevs != ddevs {
+        return None;
+    }
+    Some(vec![CommOp {
+        kind: CollectiveKind::AllToAll,
+        group: sdevs,
+        bytes: src.part_bytes(total_bytes),
+    }])
+}
+
+/// General fallback: every destination replica pulls its part from a
+/// source device (reducing partials first if necessary via all-reduce on
+/// the source side).
+fn fallback_p2p(src: &TensorLayout, dst: &TensorLayout, total_bytes: u64) -> Vec<CommOp> {
+    let mut ops = Vec::new();
+    // If the source has partial parts, reduce them in place first.
+    for p in &src.parts {
+        if !p.complete() {
+            ops.push(CommOp {
+                kind: CollectiveKind::AllReduce,
+                group: p.device_set(),
+                bytes: src.part_bytes(total_bytes),
+            });
+        }
+    }
+    let dst_part_bytes = dst.part_bytes(total_bytes);
+    let src_all = src.device_set();
+    for (i, p) in dst.parts.iter().enumerate() {
+        for dev in p.device_set() {
+            if src_all.contains(&dev) && src.n_parts() == 1 {
+                continue; // full copy already resident
+            }
+            // Pull from a deterministic source holder (round-robin).
+            let from = src_all[i % src_all.len()];
+            if from == dev {
+                continue;
+            }
+            ops.push(CommOp {
+                kind: CollectiveKind::P2p,
+                group: vec![from, dev],
+                bytes: dst_part_bytes,
+            });
+        }
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy::LayoutPart;
+
+    fn sharded(devs: &[DeviceId]) -> TensorLayout {
+        TensorLayout {
+            axis_degrees: vec![devs.len(), 1],
+            parts: devs
+                .iter()
+                .map(|&d| LayoutPart {
+                    groups: vec![vec![d]],
+                })
+                .collect(),
+        }
+    }
+
+    fn replicated(devs: &[DeviceId]) -> TensorLayout {
+        TensorLayout::replicated(2, devs.to_vec())
+    }
+
+    fn partial(devs: &[DeviceId]) -> TensorLayout {
+        TensorLayout {
+            axis_degrees: vec![1, 1],
+            parts: vec![LayoutPart {
+                groups: devs.iter().map(|&d| vec![d]).collect(),
+            }],
+        }
+    }
+
+    #[test]
+    fn identity_needs_no_comm() {
+        let l = sharded(&[0, 1, 2, 3]);
+        assert!(transform(&l, &l, 1024).is_empty());
+        let r = replicated(&[0, 1]);
+        assert!(transform(&r, &r, 1024).is_empty());
+    }
+
+    #[test]
+    fn partial_to_replicated_is_allreduce() {
+        // Megatron row-parallel output / DP gradient sync.
+        let src = partial(&[0, 1, 2, 3]);
+        let dst = replicated(&[0, 1, 2, 3]);
+        let ops = transform(&src, &dst, 4096);
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].kind, CollectiveKind::AllReduce);
+        assert_eq!(ops[0].group, vec![0, 1, 2, 3]);
+        assert_eq!(ops[0].bytes, 4096);
+    }
+
+    #[test]
+    fn partial_to_sharded_is_reduce_scatter() {
+        // ZeRO gradient sync.
+        let src = partial(&[0, 1, 2, 3]);
+        let dst = sharded(&[0, 1, 2, 3]);
+        let ops = transform(&src, &dst, 4096);
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].kind, CollectiveKind::ReduceScatter);
+        assert_eq!(ops[0].bytes, 4096);
+    }
+
+    #[test]
+    fn sharded_to_replicated_is_allgather() {
+        // ZeRO parameter gather.
+        let src = sharded(&[0, 1, 2, 3]);
+        let dst = replicated(&[0, 1, 2, 3]);
+        let ops = transform(&src, &dst, 4096);
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].kind, CollectiveKind::AllGather);
+        // per-rank shard bytes
+        assert_eq!(ops[0].bytes, 1024);
+    }
+
+    #[test]
+    fn replicated_to_sharded_is_free() {
+        let src = replicated(&[0, 1, 2, 3]);
+        let dst = sharded(&[0, 1, 2, 3]);
+        assert!(transform(&src, &dst, 4096).is_empty());
+    }
+
+    #[test]
+    fn replicated_subset_is_free() {
+        let src = replicated(&[0, 1, 2, 3]);
+        let dst = replicated(&[1, 2]);
+        assert!(transform(&src, &dst, 4096).is_empty());
+    }
+
+    #[test]
+    fn axis_change_is_all_to_all() {
+        let src = sharded(&[0, 1, 2, 3]); // axis 0
+        let dst = TensorLayout {
+            axis_degrees: vec![1, 4],
+            parts: (0..4)
+                .map(|d| LayoutPart {
+                    groups: vec![vec![d]],
+                })
+                .collect(),
+        };
+        let ops = transform(&src, &dst, 4096);
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].kind, CollectiveKind::AllToAll);
+    }
+
+    #[test]
+    fn pipeline_boundary_is_p2p() {
+        // Producer on devices {0,1}, consumer on {2,3} (sharded b both).
+        let src = sharded(&[0, 1]);
+        let dst = sharded(&[2, 3]);
+        let ops = transform(&src, &dst, 4096);
+        assert!(!ops.is_empty());
+        assert!(ops.iter().all(|o| o.kind == CollectiveKind::P2p));
+        // Each dst device receives one part.
+        let dsts: Vec<DeviceId> = ops.iter().map(|o| o.group[1]).collect();
+        assert_eq!(dsts, vec![2, 3]);
+    }
+
+    #[test]
+    fn broadcast_for_new_replicas() {
+        let src = replicated(&[0]);
+        let dst = replicated(&[0, 1, 2]);
+        let ops = transform(&src, &dst, 4096);
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].kind, CollectiveKind::Broadcast);
+        assert_eq!(ops[0].group, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn partial_cross_device_falls_back_to_reduce_then_p2p() {
+        // Partial on {0,1}, needed replicated on {2}.
+        let src = partial(&[0, 1]);
+        let dst = replicated(&[2]);
+        let ops = transform(&src, &dst, 4096);
+        assert!(ops.iter().any(|o| o.kind == CollectiveKind::AllReduce));
+        assert!(ops.iter().any(|o| o.kind == CollectiveKind::P2p));
+    }
+
+    #[test]
+    fn per_part_allreduce_groups_are_separate() {
+        // Two b-parts, each partial over its own pair (hybrid dp×mp).
+        let src = TensorLayout {
+            axis_degrees: vec![2, 1],
+            parts: vec![
+                LayoutPart { groups: vec![vec![0], vec![1]] },
+                LayoutPart { groups: vec![vec![2], vec![3]] },
+            ],
+        };
+        let dst = TensorLayout {
+            axis_degrees: vec![2, 1],
+            parts: vec![
+                LayoutPart { groups: vec![vec![0, 1]] },
+                LayoutPart { groups: vec![vec![2, 3]] },
+            ],
+        };
+        let ops = transform(&src, &dst, 8192);
+        assert_eq!(ops.len(), 2);
+        assert_eq!(ops[0].group, vec![0, 1]);
+        assert_eq!(ops[1].group, vec![2, 3]);
+        assert_eq!(ops[0].bytes, 4096);
+    }
+}

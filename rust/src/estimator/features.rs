@@ -1,0 +1,217 @@
+//! Feature schema shared between the Rust analytical cost mirror and the
+//! AOT Pallas cost kernel (L1).
+//!
+//! Every task becomes one row of `FEATURES` f32 values; the kernel (and
+//! the bit-faithful Rust mirror, [`cost_ns`]) evaluates
+//!
+//! ```text
+//! comp:  cost_ns = launch_ns + max(flops/eff_flops, bytes/eff_bw) · 1e9
+//! comm:  cost_ns = steps · alpha_ns + traffic/bus_bw · 1e9
+//! blended: cost = (1-is_comm)·comp + is_comm·comm
+//! ```
+//!
+//! Topology-dependent quantities (`bus_bw`, `alpha`, `traffic`, `steps`)
+//! are computed on the Rust side from the cluster model; the kernel is
+//! pure elementwise arithmetic over the row — which is what makes it a
+//! clean Pallas tile kernel. Keep in sync with
+//! `python/compile/kernels/costmodel.py` and `ref.py`.
+
+use crate::cluster::Cluster;
+use crate::compiler::{CollectiveKind, CommTask, CompTask};
+
+/// Row width of the feature matrix (padded; the kernel reads the first
+/// [`USED_FEATURES`]).
+pub const FEATURES: usize = 16;
+/// Populated feature slots.
+pub const USED_FEATURES: usize = 10;
+
+/// Feature slot indices.
+pub mod slot {
+    /// 1.0 for communication rows, 0.0 for computation rows.
+    pub const IS_COMM: usize = 0;
+    /// Computation FLOPs.
+    pub const FLOPS: usize = 1;
+    /// Computation bytes touched (read + written).
+    pub const BYTES: usize = 2;
+    /// Effective FLOP/s (device peak × kind efficiency).
+    pub const EFF_FLOPS: usize = 3;
+    /// Effective bytes/s (device bandwidth × kind efficiency).
+    pub const EFF_BW: usize = 4;
+    /// Launch overhead in ns.
+    pub const LAUNCH_NS: usize = 5;
+    /// Collective latency steps.
+    pub const STEPS: usize = 6;
+    /// Per-step latency α in ns.
+    pub const ALPHA_NS: usize = 7;
+    /// Bus traffic bytes (collective-algorithm adjusted).
+    pub const TRAFFIC: usize = 8;
+    /// Bus bandwidth bytes/s.
+    pub const BUS_BW: usize = 9;
+}
+
+/// One feature row.
+pub type Row = [f32; FEATURES];
+
+/// Build the feature row of a computation task.
+pub fn comp_row(t: &CompTask, cluster: &Cluster) -> Row {
+    let dev = &cluster.device;
+    let mut r = [0f32; FEATURES];
+    r[slot::IS_COMM] = 0.0;
+    r[slot::FLOPS] = t.flops as f32;
+    r[slot::BYTES] = (t.bytes_read + t.bytes_written) as f32;
+    r[slot::EFF_FLOPS] = (dev.peak_flops * t.op.flops_efficiency()) as f32;
+    r[slot::EFF_BW] = (dev.mem_bandwidth * t.op.mem_efficiency()) as f32;
+    r[slot::LAUNCH_NS] = t.op.launch_overhead_ns() as f32;
+    r
+}
+
+/// Collective algorithm profile: `(steps, traffic_factor)` such that
+/// bus traffic = `traffic_factor × bytes` and latency = `steps × α`.
+/// Ring algorithms for the reduction collectives, binomial tree for
+/// broadcast (the standard NCCL-era cost model).
+pub fn collective_profile(kind: CollectiveKind, n: usize) -> (f64, f64) {
+    let n = n.max(1) as f64;
+    match kind {
+        CollectiveKind::AllReduce => (2.0 * (n - 1.0), 2.0 * (n - 1.0) / n),
+        CollectiveKind::AllGather | CollectiveKind::ReduceScatter => {
+            (n - 1.0, (n - 1.0) / n)
+        }
+        CollectiveKind::AllToAll => (n - 1.0, (n - 1.0) / n),
+        CollectiveKind::Broadcast => (n.log2().ceil().max(1.0), 1.0),
+        CollectiveKind::P2p => (1.0, 1.0),
+    }
+}
+
+/// Build the feature row of a communication task.
+pub fn comm_row(t: &CommTask, cluster: &Cluster) -> Row {
+    let mut r = [0f32; FEATURES];
+    r[slot::IS_COMM] = 1.0;
+    let n = t.group.len();
+    let (steps, factor) = collective_profile(t.kind, n);
+    let (bus_bw, alpha_ps) = match t.kind {
+        CollectiveKind::P2p => {
+            let (a, b) = (t.group[0], t.group[1]);
+            (cluster.pair_bandwidth(a, b), cluster.pair_latency(a, b))
+        }
+        _ => (
+            cluster.ring_bus_bandwidth(&t.group),
+            cluster.ring_latency(&t.group),
+        ),
+    };
+    r[slot::STEPS] = steps as f32;
+    r[slot::ALPHA_NS] = (alpha_ps as f64 / 1e3) as f32;
+    r[slot::TRAFFIC] = (t.bytes as f64 * factor) as f32;
+    r[slot::BUS_BW] = if bus_bw.is_finite() {
+        bus_bw as f32
+    } else {
+        f32::MAX
+    };
+    r
+}
+
+/// The cost function over one row, in nanoseconds. This is the exact
+/// arithmetic the Pallas kernel performs (f32), so the PJRT backend and
+/// this mirror agree to float rounding.
+pub fn cost_ns(r: &Row) -> f32 {
+    let comp = r[slot::LAUNCH_NS]
+        + (r[slot::FLOPS] / r[slot::EFF_FLOPS].max(1.0))
+            .max(r[slot::BYTES] / r[slot::EFF_BW].max(1.0))
+            * 1e9;
+    let comm = r[slot::STEPS] * r[slot::ALPHA_NS]
+        + r[slot::TRAFFIC] / r[slot::BUS_BW].max(1.0) * 1e9;
+    (1.0 - r[slot::IS_COMM]) * comp + r[slot::IS_COMM] * comm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Preset;
+    use crate::graph::OpKind;
+
+    fn cluster() -> Cluster {
+        Cluster::preset(Preset::HC2, 2)
+    }
+
+    #[test]
+    fn comp_row_roofline_picks_the_max() {
+        let c = cluster();
+        // Huge flops, tiny bytes → compute bound.
+        let t = CompTask {
+            device: 0,
+            op: OpKind::Linear,
+            flops: 1e12,
+            bytes_read: 1e3,
+            bytes_written: 1e3,
+        };
+        let r = comp_row(&t, &c);
+        let ns = cost_ns(&r);
+        let expect = 5_000.0 + 1e12 / (15.7e12 * 0.62) * 1e9;
+        assert!((ns - expect as f32).abs() / (expect as f32) < 1e-3);
+    }
+
+    #[test]
+    fn bandwidth_bound_op_ignores_flops() {
+        let c = cluster();
+        let t = CompTask {
+            device: 0,
+            op: OpKind::Elementwise,
+            flops: 1.0,
+            bytes_read: 1e9,
+            bytes_written: 1e9,
+        };
+        let ns = cost_ns(&comp_row(&t, &c));
+        let expect = 5_000.0 + 2e9 / (900e9 * 0.82) * 1e9;
+        assert!((ns - expect as f32).abs() / (expect as f32) < 1e-3);
+    }
+
+    #[test]
+    fn allreduce_traffic_factor() {
+        let (steps, f) = collective_profile(CollectiveKind::AllReduce, 4);
+        assert_eq!(steps, 6.0);
+        assert!((f - 1.5).abs() < 1e-12);
+        let (_, f2) = collective_profile(CollectiveKind::AllGather, 4);
+        assert!((f2 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intra_node_comm_cheaper_than_cross_node() {
+        let c = cluster();
+        let mk = |group: Vec<usize>| CommTask {
+            kind: CollectiveKind::AllReduce,
+            group,
+            bytes: 1 << 24,
+            class: crate::compiler::CommClass::Gradient,
+        };
+        let intra = cost_ns(&comm_row(&mk((0..8).collect()), &c));
+        let cross = cost_ns(&comm_row(&mk(vec![0, 8]), &c));
+        assert!(cross > intra, "{cross} vs {intra}");
+    }
+
+    #[test]
+    fn singleton_group_comm_is_latency_only() {
+        let c = cluster();
+        let t = CommTask {
+            kind: CollectiveKind::AllReduce,
+            group: vec![3],
+            bytes: 1 << 20,
+            class: crate::compiler::CommClass::Gradient,
+        };
+        let r = comm_row(&t, &c);
+        // traffic factor 0 for n=1
+        assert_eq!(r[slot::TRAFFIC], 0.0);
+    }
+
+    #[test]
+    fn p2p_uses_pair_path() {
+        let c = cluster();
+        let t = CommTask {
+            kind: CollectiveKind::P2p,
+            group: vec![0, 9],
+            bytes: 1 << 24,
+            class: crate::compiler::CommClass::Feature,
+        };
+        let r = comm_row(&t, &c);
+        // Cross-node: NIC 12 GB/s is the bottleneck.
+        assert!((r[slot::BUS_BW] - 12e9 as f32).abs() / 12e9 < 1e-3);
+    }
+}

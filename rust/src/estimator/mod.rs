@@ -1,0 +1,183 @@
+//! Op estimator (paper §VII): per-operator base costs.
+//!
+//! The estimator assigns every task of an execution graph its
+//! *contention-free* cost: a roofline model for computation shards
+//! (device peak × per-kind profiled efficiency) and an α-β model with
+//! collective-algorithm corrections for communication, using the
+//! cluster's detailed topology for group bandwidth (the paper's
+//! NCCL-topo-detection analogue).
+//!
+//! Two interchangeable backends evaluate the (identical) cost
+//! arithmetic:
+//!
+//! - [`CostBackend::Analytical`] — pure Rust mirror, used by unit tests
+//!   and as a fallback;
+//! - [`CostBackend::Pjrt`] — the AOT-compiled JAX/Pallas kernel
+//!   (`artifacts/costmodel.hlo.txt`) executed through the PJRT C API;
+//!   this is the production path exercising the three-layer stack.
+//!
+//! Feature extraction (topology lookups) is Rust either way; the kernel
+//! is pure elementwise math over the feature matrix — see
+//! [`features`].
+
+pub mod features;
+
+pub use features::{comm_row, comp_row, cost_ns, Row, FEATURES};
+
+use crate::cluster::Cluster;
+use crate::compiler::{ExecGraph, TaskKind};
+use crate::runtime::CostKernel;
+use crate::util::time::Ps;
+use crate::Result;
+
+/// Cost evaluation backend.
+pub enum CostBackend {
+    /// Pure-Rust mirror of the kernel arithmetic.
+    Analytical,
+    /// AOT XLA kernel via PJRT.
+    Pjrt(CostKernel),
+}
+
+/// The op estimator: topology-aware feature extraction + cost backend.
+pub struct OpEstimator<'c> {
+    cluster: &'c Cluster,
+    backend: CostBackend,
+}
+
+impl<'c> OpEstimator<'c> {
+    /// Estimator with the analytical backend.
+    pub fn analytical(cluster: &'c Cluster) -> Self {
+        OpEstimator {
+            cluster,
+            backend: CostBackend::Analytical,
+        }
+    }
+
+    /// Estimator with the PJRT backend, loading the AOT artifact at
+    /// `path` (e.g. `artifacts/costmodel.hlo.txt`).
+    pub fn pjrt(cluster: &'c Cluster, path: &str) -> Result<Self> {
+        Ok(OpEstimator {
+            cluster,
+            backend: CostBackend::Pjrt(CostKernel::load(path)?),
+        })
+    }
+
+    /// Estimator with the PJRT backend if the artifact exists, falling
+    /// back to the analytical mirror (used by examples so they run
+    /// before `make artifacts`).
+    pub fn best_available(cluster: &'c Cluster, path: &str) -> Self {
+        match std::path::Path::new(path).exists() {
+            true => Self::pjrt(cluster, path).unwrap_or_else(|e| {
+                log::warn!("PJRT cost kernel unavailable ({e}); using analytical backend");
+                Self::analytical(cluster)
+            }),
+            false => Self::analytical(cluster),
+        }
+    }
+
+    /// Whether the PJRT backend is active.
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self.backend, CostBackend::Pjrt(_))
+    }
+
+    /// The cluster this estimator models.
+    pub fn cluster(&self) -> &Cluster {
+        self.cluster
+    }
+
+    /// Build the feature matrix for a whole execution graph.
+    pub fn feature_matrix(&self, eg: &ExecGraph) -> Vec<Row> {
+        eg.tasks
+            .iter()
+            .map(|t| match &t.kind {
+                TaskKind::Comp(c) => comp_row(c, self.cluster),
+                TaskKind::Comm(c) => comm_row(c, self.cluster),
+            })
+            .collect()
+    }
+
+    /// Estimate the contention-free cost of every task, in picoseconds.
+    pub fn estimate_all(&self, eg: &ExecGraph) -> Result<Vec<Ps>> {
+        let rows = self.feature_matrix(eg);
+        let ns = self.eval_rows(&rows)?;
+        Ok(ns.iter().map(|&v| ns_to_ps(v)).collect())
+    }
+
+    /// Evaluate cost rows through the active backend (ns per row).
+    pub fn eval_rows(&self, rows: &[Row]) -> Result<Vec<f32>> {
+        match &self.backend {
+            CostBackend::Analytical => Ok(rows.iter().map(cost_ns).collect()),
+            CostBackend::Pjrt(k) => k.eval(rows),
+        }
+    }
+}
+
+fn ns_to_ps(ns: f32) -> Ps {
+    if !ns.is_finite() || ns <= 0.0 {
+        return 0;
+    }
+    (ns as f64 * 1e3).round() as Ps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Preset;
+    use crate::graph::{DType, GraphBuilder};
+    use crate::strategy::{build_strategy, StrategySpec};
+
+    fn small_dp_graph() -> (crate::graph::Graph, Cluster) {
+        let mut b = GraphBuilder::new("m", 8);
+        let x = b.input("x", &[8, 256], DType::F32);
+        let h = b.linear("fc1", x, 256, 1024);
+        let h = b.relu("act", h);
+        let h = b.linear("fc2", h, 1024, 256);
+        let _ = b.loss("loss", h);
+        (b.finish(), Cluster::preset(Preset::HC1, 1))
+    }
+
+    #[test]
+    fn analytical_costs_are_positive_and_finite() {
+        let (g, c) = small_dp_graph();
+        let tree = build_strategy(&g, StrategySpec::data_parallel(4)).unwrap();
+        let eg = crate::compiler::compile(&g, &tree, &c).unwrap();
+        let est = OpEstimator::analytical(&c);
+        let costs = est.estimate_all(&eg).unwrap();
+        assert_eq!(costs.len(), eg.tasks.len());
+        for (i, &ps) in costs.iter().enumerate() {
+            assert!(ps > 0, "task {i} has zero cost: {:?}", eg.tasks[i].kind);
+            assert!(ps < crate::util::time::SEC, "task {i} absurdly slow");
+        }
+    }
+
+    #[test]
+    fn bigger_shards_cost_more() {
+        let (g, c) = small_dp_graph();
+        let t2 = build_strategy(&g, StrategySpec::data_parallel(2)).unwrap();
+        let t8 = build_strategy(&g, StrategySpec::data_parallel(8)).unwrap();
+        let eg2 = crate::compiler::compile(&g, &t2, &c).unwrap();
+        let eg8 = crate::compiler::compile(&g, &t8, &c).unwrap();
+        let est = OpEstimator::analytical(&c);
+        // Compare the fc1 fwd task cost: dp=2 shard is 4× the dp=8 shard.
+        let cost_of_fc1 = |eg: &ExecGraph, costs: &[Ps]| -> Ps {
+            eg.tasks
+                .iter()
+                .zip(costs)
+                .find(|(t, _)| {
+                    t.layer == Some(0) && t.phase == crate::compiler::Phase::Fwd && !t.is_comm()
+                })
+                .map(|(_, &c)| c)
+                .unwrap()
+        };
+        let c2 = cost_of_fc1(&eg2, &est.estimate_all(&eg2).unwrap());
+        let c8 = cost_of_fc1(&eg8, &est.estimate_all(&eg8).unwrap());
+        assert!(c2 > c8, "{c2} vs {c8}");
+    }
+
+    #[test]
+    fn best_available_falls_back_without_artifact() {
+        let c = Cluster::preset(Preset::HC1, 1);
+        let est = OpEstimator::best_available(&c, "/nonexistent/costmodel.hlo.txt");
+        assert!(!est.is_pjrt());
+    }
+}

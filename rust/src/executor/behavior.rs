@@ -1,0 +1,311 @@
+//! Runtime behavior detector (paper §VI-C).
+//!
+//! Keeps execution-history records per stream and answers two questions
+//! at operator start time:
+//!
+//! - *bandwidth sharing*: how many concurrent communication operators
+//!   share this operator's bottleneck physical links? Detection walks the
+//!   link hierarchy exactly as Fig. 7 prescribes — NIC first, then QPI,
+//!   PCIe, NVLink — because a group that spans nodes is throttled at the
+//!   NIC regardless of its intra-node links. Concurrent operators are
+//!   assumed to share a link's bandwidth fairly (§VI-C).
+//! - *comp-comm overlap*: is a gradient communication in flight on this
+//!   computation's device (or a computation in flight on this
+//!   communication's devices)? If so the cost inflates by γ.
+
+use std::collections::HashMap;
+
+use crate::cluster::{Cluster, DeviceId, LinkId};
+use crate::compiler::{CollectiveKind, CommTask};
+use crate::estimator::features::{collective_profile, slot};
+use crate::util::time::{Ps, US};
+
+/// Active-span counter exploiting the DES's monotone time: spans are
+/// recorded at their start time and queries never go backwards, so a
+/// min-heap of end times pruned on each query gives O(log n) amortized
+/// counting instead of a linear scan.
+#[derive(Debug, Default)]
+struct Intervals {
+    ends: std::collections::BinaryHeap<std::cmp::Reverse<Ps>>,
+}
+
+impl Intervals {
+    fn push(&mut self, _s: Ps, e: Ps) {
+        self.ends.push(std::cmp::Reverse(e));
+    }
+
+    /// Number of spans active at time `t` (t must be non-decreasing
+    /// across queries — guaranteed by the event-driven executor).
+    fn active_at(&mut self, t: Ps) -> usize {
+        while let Some(&std::cmp::Reverse(e)) = self.ends.peek() {
+            if e <= t {
+                self.ends.pop();
+            } else {
+                break;
+            }
+        }
+        self.ends.len()
+    }
+}
+
+/// The runtime behavior detector + execution history.
+pub struct BehaviorDetector<'a> {
+    cluster: &'a Cluster,
+    /// Communication activity per physical link.
+    link_comms: HashMap<LinkId, Intervals>,
+    /// Computation activity per device.
+    dev_comp: Vec<Intervals>,
+    /// Gradient-communication activity per device.
+    dev_grad_comm: Vec<Intervals>,
+    /// Cached link sets per (kind, group) signature.
+    links_cache: HashMap<(u8, Vec<DeviceId>), Vec<LinkId>>,
+    overlapped: usize,
+    shared: usize,
+}
+
+impl<'a> BehaviorDetector<'a> {
+    /// New detector over `n_dev` devices of `cluster`.
+    pub fn new(cluster: &'a Cluster, n_dev: usize) -> Self {
+        BehaviorDetector {
+            cluster,
+            link_comms: HashMap::new(),
+            dev_comp: (0..n_dev).map(|_| Intervals::default()).collect(),
+            dev_grad_comm: (0..n_dev).map(|_| Intervals::default()).collect(),
+            links_cache: HashMap::new(),
+            overlapped: 0,
+            shared: 0,
+        }
+    }
+
+    /// The physical links a communication op stresses: ring-consecutive
+    /// pair paths for collectives, the pair path for p2p, star from root
+    /// for broadcast.
+    pub fn links_of(&mut self, c: &CommTask) -> Vec<LinkId> {
+        let key = (kind_key(c.kind), c.group.clone());
+        if let Some(l) = self.links_cache.get(&key) {
+            return l.clone();
+        }
+        let mut links: Vec<LinkId> = Vec::new();
+        match c.kind {
+            CollectiveKind::P2p => {
+                links.extend(self.cluster.path(c.group[0], c.group[1]));
+            }
+            CollectiveKind::Broadcast => {
+                let root = c.group[0];
+                for &d in &c.group[1..] {
+                    links.extend(self.cluster.path(root, d));
+                }
+            }
+            _ => {
+                let ring = self.cluster.ring_order(&c.group);
+                for i in 0..ring.len() {
+                    let a = ring[i];
+                    let b = ring[(i + 1) % ring.len()];
+                    links.extend(self.cluster.path(a, b));
+                }
+            }
+        }
+        links.sort_unstable();
+        links.dedup();
+        self.links_cache.insert(key, links.clone());
+        links
+    }
+
+    /// Fair-sharing factor for a communication op starting at `t`: the
+    /// maximum number of concurrent communication ops (including this
+    /// one) on any physical link it uses, walking the hierarchy from the
+    /// NIC down (the maximum over links IS the hierarchy walk: the most
+    /// contended shared ancestor link dominates).
+    pub fn sharing_factor(&mut self, c: &CommTask, t: Ps) -> f64 {
+        let links = self.links_of(c);
+        let mut worst = 0usize;
+        for l in &links {
+            if let Some(iv) = self.link_comms.get_mut(l) {
+                worst = worst.max(iv.active_at(t));
+            }
+        }
+        (worst + 1) as f64
+    }
+
+    /// Record a communication op's execution on its links and devices.
+    pub fn record_comm(&mut self, c: &CommTask, start: Ps, end: Ps) {
+        let links = self.links_of(c);
+        for l in links {
+            self.link_comms.entry(l).or_default().push(start, end);
+        }
+        if c.class == crate::compiler::CommClass::Gradient {
+            for &d in &c.group {
+                self.dev_grad_comm[d].push(start, end);
+            }
+        }
+    }
+
+    /// Record a computation's execution on its device.
+    pub fn record_comp(&mut self, d: DeviceId, start: Ps, end: Ps) {
+        self.dev_comp[d].push(start, end);
+    }
+
+    /// Is a gradient communication active on device `d` at time `t`?
+    pub fn comp_overlaps_grad_comm(&mut self, d: DeviceId, t: Ps) -> bool {
+        self.dev_grad_comm[d].active_at(t) > 0
+    }
+
+    /// Is a computation active on any of `group` at time `t`?
+    pub fn comm_overlaps_comp(&mut self, group: &[DeviceId], t: Ps) -> bool {
+        group.iter().any(|&d| self.dev_comp[d].active_at(t) > 0)
+    }
+
+    /// Split a communication op's total cost into `(α, β)` — the latency
+    /// term (unaffected by sharing) and the bandwidth term (scaled by the
+    /// sharing factor).
+    pub fn split_alpha_beta(&self, c: &CommTask, total: Ps) -> (Ps, Ps) {
+        let n = c.group.len();
+        let (steps, _) = collective_profile(c.kind, n);
+        let alpha_ps = match c.kind {
+            CollectiveKind::P2p => self.cluster.pair_latency(c.group[0], c.group[1]),
+            _ => self.cluster.ring_latency(&c.group),
+        };
+        let alpha = (steps * alpha_ps as f64) as Ps;
+        let alpha = alpha.min(total);
+        (alpha, total - alpha)
+    }
+
+    /// Bump the overlapped-computation counter.
+    pub fn note_overlapped_comp(&mut self) {
+        self.overlapped += 1;
+    }
+
+    /// Bump the bandwidth-shared counter.
+    pub fn note_shared(&mut self) {
+        self.shared += 1;
+    }
+
+    /// Computation ops flagged overlapped so far.
+    pub fn overlapped_count(&self) -> usize {
+        self.overlapped
+    }
+
+    /// Communication ops that shared bandwidth so far.
+    pub fn shared_count(&self) -> usize {
+        self.shared
+    }
+}
+
+fn kind_key(k: CollectiveKind) -> u8 {
+    match k {
+        CollectiveKind::AllReduce => 0,
+        CollectiveKind::AllGather => 1,
+        CollectiveKind::ReduceScatter => 2,
+        CollectiveKind::AllToAll => 3,
+        CollectiveKind::Broadcast => 4,
+        CollectiveKind::P2p => 5,
+    }
+}
+
+/// Suppress an unused-import warning when compiled without debug slots.
+#[allow(unused)]
+fn _slot_anchor() {
+    let _ = slot::IS_COMM;
+    let _ = US;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Preset;
+    use crate::compiler::CommClass;
+
+    fn comm(kind: CollectiveKind, group: Vec<usize>, class: CommClass) -> CommTask {
+        CommTask {
+            kind,
+            group,
+            bytes: 1 << 20,
+            class,
+        }
+    }
+
+    #[test]
+    fn sharing_counts_concurrent_groups_on_shared_links() {
+        let c = Cluster::preset(Preset::HC1, 1);
+        let mut det = BehaviorDetector::new(&c, 8);
+        // Paper Fig. 5a: 4 cross-socket gradient groups {0,4},{1,5},...
+        // all cross the single QPI link.
+        for i in 0..3usize {
+            let t = comm(
+                CollectiveKind::AllReduce,
+                vec![i, i + 4],
+                CommClass::Gradient,
+            );
+            det.record_comm(&t, 0, 1_000_000);
+        }
+        let t4 = comm(
+            CollectiveKind::AllReduce,
+            vec![3, 7],
+            CommClass::Gradient,
+        );
+        let share = det.sharing_factor(&t4, 500_000);
+        assert_eq!(share, 4.0, "four groups share the QPI link");
+    }
+
+    #[test]
+    fn no_sharing_on_disjoint_links() {
+        let c = Cluster::preset(Preset::HC2, 1);
+        let mut det = BehaviorDetector::new(&c, 8);
+        // NVSwitch: rings {0,1} and {2,3} share no port links.
+        let a = comm(CollectiveKind::AllReduce, vec![0, 1], CommClass::Gradient);
+        det.record_comm(&a, 0, 1_000_000);
+        let b = comm(CollectiveKind::AllReduce, vec![2, 3], CommClass::Gradient);
+        assert_eq!(det.sharing_factor(&b, 500_000), 1.0);
+    }
+
+    #[test]
+    fn sharing_is_time_sensitive() {
+        // Queries must be in non-decreasing time order (the DES is
+        // monotone; the detector exploits that).
+        let c = Cluster::preset(Preset::HC1, 1);
+        let mut det = BehaviorDetector::new(&c, 8);
+        let a = comm(CollectiveKind::AllReduce, vec![0, 4], CommClass::Gradient);
+        det.record_comm(&a, 0, 100);
+        let b = comm(CollectiveKind::AllReduce, vec![1, 5], CommClass::Gradient);
+        assert_eq!(det.sharing_factor(&b, 50), 2.0, "a still active");
+        assert_eq!(det.sharing_factor(&b, 500), 1.0, "a already finished");
+    }
+
+    #[test]
+    fn overlap_detection_is_per_device() {
+        let c = Cluster::preset(Preset::HC2, 1);
+        let mut det = BehaviorDetector::new(&c, 8);
+        let g = comm(CollectiveKind::AllReduce, vec![0, 1], CommClass::Gradient);
+        det.record_comm(&g, 0, 1000);
+        assert!(det.comp_overlaps_grad_comm(0, 500));
+        assert!(det.comp_overlaps_grad_comm(1, 500));
+        assert!(!det.comp_overlaps_grad_comm(2, 500));
+        assert!(!det.comp_overlaps_grad_comm(0, 1500));
+    }
+
+    #[test]
+    fn feature_comms_do_not_count_as_gradient_overlap() {
+        let c = Cluster::preset(Preset::HC2, 1);
+        let mut det = BehaviorDetector::new(&c, 8);
+        let f = comm(CollectiveKind::AllGather, vec![0, 1], CommClass::Feature);
+        det.record_comm(&f, 0, 1000);
+        assert!(!det.comp_overlaps_grad_comm(0, 500));
+    }
+
+    #[test]
+    fn alpha_beta_split_is_bounded() {
+        let c = Cluster::preset(Preset::HC2, 2);
+        let det = BehaviorDetector::new(&c, 16);
+        let t = comm(
+            CollectiveKind::AllReduce,
+            vec![0, 8],
+            CommClass::Gradient,
+        );
+        let total = 10_000_000_000; // 10 ms
+        let (a, b) = det.split_alpha_beta(&t, total);
+        assert_eq!(a + b, total);
+        assert!(a > 0);
+        let (a2, b2) = det.split_alpha_beta(&t, 1);
+        assert_eq!(a2 + b2, 1);
+    }
+}

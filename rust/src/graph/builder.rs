@@ -1,0 +1,840 @@
+//! Fluent builder for layer-level computation graphs.
+//!
+//! Model-zoo files ([`crate::models`]) use these helpers; each helper
+//! creates the layer's parameter tensors, its output tensor, the
+//! dimension table, and the operand axis annotations that the compiler
+//! needs for op-shard splitting and collective inference.
+//!
+//! A scope stack (`push_scope`/`pop_scope`) records the module path of
+//! every layer; the strategy tree is built from these paths (§VII
+//! "Construction of Strategy Tree").
+
+use super::op::OpKind;
+use super::tensor::{DType, Operand, TensorId, TensorKind, TensorMeta};
+use super::{Graph, Layer, LayerId, MpHint};
+
+/// Builder for a [`Graph`]. Layers must be added in topological order
+/// (helpers naturally do so since they consume previously created
+/// tensors).
+pub struct GraphBuilder {
+    name: String,
+    batch: usize,
+    scope: Vec<String>,
+    layers: Vec<Layer>,
+    tensors: Vec<TensorMeta>,
+}
+
+impl GraphBuilder {
+    /// Start building a model named `name` with global batch size
+    /// `batch`.
+    pub fn new(name: &str, batch: usize) -> Self {
+        GraphBuilder {
+            name: name.to_string(),
+            batch,
+            scope: Vec::new(),
+            layers: Vec::new(),
+            tensors: Vec::new(),
+        }
+    }
+
+    /// The global batch size the graph is being built for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Enter a module scope (e.g. `"encoder"`, `"block3"`).
+    pub fn push_scope(&mut self, name: &str) {
+        self.scope.push(name.to_string());
+    }
+
+    /// Leave the innermost module scope.
+    pub fn pop_scope(&mut self) {
+        self.scope.pop().expect("pop_scope on empty scope stack");
+    }
+
+    /// Run `f` inside scope `name`.
+    pub fn scoped<R>(&mut self, name: &str, f: impl FnOnce(&mut Self) -> R) -> R {
+        self.push_scope(name);
+        let r = f(self);
+        self.pop_scope();
+        r
+    }
+
+    /// Declare a graph input (activation with no producer).
+    pub fn input(&mut self, name: &str, shape: &[usize], dtype: DType) -> TensorId {
+        self.new_tensor(name, shape, dtype, TensorKind::Activation, None)
+    }
+
+    fn new_tensor(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+        dtype: DType,
+        kind: TensorKind,
+        producer: Option<LayerId>,
+    ) -> TensorId {
+        let id = self.tensors.len();
+        let full = if self.scope.is_empty() {
+            name.to_string()
+        } else {
+            format!("{}.{}", self.scope.join("."), name)
+        };
+        self.tensors.push(TensorMeta {
+            id,
+            name: full,
+            shape: shape.to_vec(),
+            dtype,
+            kind,
+            producer,
+        });
+        id
+    }
+
+    /// Shape of a previously created tensor.
+    pub fn shape(&self, t: TensorId) -> &[usize] {
+        &self.tensors[t].shape
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn add_layer(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        dims: Vec<(String, usize)>,
+        reduce_dims: Vec<&str>,
+        inputs: Vec<Operand>,
+        params: Vec<Operand>,
+        out_shape: &[usize],
+        out_axes: &[&str],
+        out_dtype: DType,
+        flops_multiplier: f64,
+        bwd_flops_factor: f64,
+        param_read_factor: f64,
+    ) -> (LayerId, TensorId) {
+        let id = self.layers.len();
+        let out = self.new_tensor(&format!("{name}.out"), out_shape, out_dtype, TensorKind::Activation, Some(id));
+        let mut path = self.scope.clone();
+        path.push(name.to_string());
+        let mp_hint = match kind {
+            OpKind::Linear | OpKind::Conv2d => MpHint::ColSplit,
+            OpKind::Attention => MpHint::Heads,
+            OpKind::Embedding => MpHint::Vocab,
+            _ => MpHint::Replicate,
+        };
+        self.layers.push(Layer {
+            id,
+            name: name.to_string(),
+            path,
+            kind,
+            dims,
+            reduce_dims: reduce_dims.iter().map(|s| s.to_string()).collect(),
+            inputs,
+            params,
+            outputs: vec![Operand::new(out, out_axes)],
+            flops_multiplier,
+            bwd_flops_factor,
+            param_read_factor,
+            mp_hint,
+        });
+        (id, out)
+    }
+
+    /// Override the model-parallel hint of the most recently added layer
+    /// (e.g. mark an MLP's second linear as row-parallel).
+    pub fn hint_last(&mut self, hint: MpHint) {
+        self.layers
+            .last_mut()
+            .expect("hint_last before any layer")
+            .mp_hint = hint;
+    }
+
+    fn param(&mut self, name: &str, shape: &[usize], dtype: DType) -> TensorId {
+        self.new_tensor(name, shape, dtype, TensorKind::Param, None)
+    }
+
+    /// Dense layer `y[b,(s,)o] = x[b,(s,)h] W[o,h] + bias[o]`.
+    ///
+    /// Accepts 2-D `[b, h]` or 3-D `[b, s, h]` inputs; the trailing axis
+    /// must equal `in_features`.
+    pub fn linear(&mut self, name: &str, x: TensorId, in_features: usize, out_features: usize) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        assert_eq!(*xs.last().unwrap(), in_features, "linear {name}: input trailing dim");
+        let dtype = self.tensors[x].dtype;
+        let (dims, in_axes, out_shape, out_axes): (Vec<(String, usize)>, Vec<&str>, Vec<usize>, Vec<&str>) =
+            match xs.len() {
+                2 => (
+                    vec![("b".into(), xs[0]), ("o".into(), out_features), ("h".into(), in_features)],
+                    vec!["b", "h"],
+                    vec![xs[0], out_features],
+                    vec!["b", "o"],
+                ),
+                3 => (
+                    vec![
+                        ("b".into(), xs[0]),
+                        ("s".into(), xs[1]),
+                        ("o".into(), out_features),
+                        ("h".into(), in_features),
+                    ],
+                    vec!["b", "s", "h"],
+                    vec![xs[0], xs[1], out_features],
+                    vec!["b", "s", "o"],
+                ),
+                r => panic!("linear {name}: unsupported input rank {r}"),
+            };
+        let w = self.param(&format!("{name}.weight"), &[out_features, in_features], dtype);
+        let bias = self.param(&format!("{name}.bias"), &[out_features], dtype);
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Linear,
+            dims,
+            vec!["h"],
+            vec![Operand::new(x, &in_axes)],
+            vec![Operand::new(w, &["o", "h"]), Operand::new(bias, &["o"])],
+            &out_shape,
+            &out_axes,
+            dtype,
+            2.0,
+            2.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Look up a tensor by its fully qualified name.
+    pub fn find_tensor(&self, name: &str) -> Option<TensorId> {
+        self.tensors.iter().find(|t| t.name == name).map(|t| t.id)
+    }
+
+    /// Dense layer whose weight is an existing `[o, h]` parameter tensor
+    /// (weight tying, e.g. a GPT LM head sharing the embedding table).
+    pub fn linear_shared(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        in_features: usize,
+        out_features: usize,
+        weight: TensorId,
+    ) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        assert_eq!(xs.len(), 3, "linear_shared {name}: want [b, s, h]");
+        assert_eq!(xs[2], in_features);
+        assert_eq!(
+            self.shape(weight),
+            &[out_features, in_features],
+            "linear_shared {name}: weight shape"
+        );
+        let dtype = self.tensors[x].dtype;
+        let dims = vec![
+            ("b".into(), xs[0]),
+            ("s".into(), xs[1]),
+            ("o".into(), out_features),
+            ("h".into(), in_features),
+        ];
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Linear,
+            dims,
+            vec!["h"],
+            vec![Operand::new(x, &["b", "s", "h"])],
+            vec![Operand::new(weight, &["o", "h"])],
+            &[xs[0], xs[1], out_features],
+            &["b", "s", "o"],
+            dtype,
+            2.0,
+            2.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Head-factored QKV projection for transformer blocks: input
+    /// `[b, s, h_model]`, output `[b, s, a, 3*d_head]` where the `o`
+    /// dimension is the head count `a` — partitioning `o` is Megatron
+    /// head-parallelism.
+    pub fn qkv_proj(&mut self, name: &str, x: TensorId, h_model: usize, heads: usize) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2], h_model);
+        assert_eq!(h_model % heads, 0);
+        let d_head = h_model / heads;
+        let dtype = self.tensors[x].dtype;
+        let w = self.param(&format!("{name}.weight"), &[heads, 3 * d_head, h_model], dtype);
+        let bias = self.param(&format!("{name}.bias"), &[heads, 3 * d_head], dtype);
+        let dims = vec![
+            ("b".into(), xs[0]),
+            ("s".into(), xs[1]),
+            ("o".into(), heads),
+            ("h".into(), h_model),
+        ];
+        // flops = 2 * b*s*3h*h = (2*3*d_head) * (b*s*heads*h)
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Linear,
+            dims,
+            vec!["h"],
+            vec![Operand::new(x, &["b", "s", "h"])],
+            vec![Operand::new(w, &["o", "", "h"]), Operand::new(bias, &["o", ""])],
+            &[xs[0], xs[1], heads, 3 * d_head],
+            &["b", "s", "o", ""],
+            dtype,
+            (2 * 3 * d_head) as f64,
+            2.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Fused attention core over head-factored QKV `[b, s, a, 3*d_head]`
+    /// → `[b, s, a, d_head]`. FLOPs `≈ 4 b s² h_model`.
+    pub fn attention(&mut self, name: &str, qkv: TensorId) -> TensorId {
+        let xs = self.shape(qkv).to_vec();
+        assert_eq!(xs.len(), 4, "attention {name}: want [b,s,a,3d]");
+        let (b, s, a, d3) = (xs[0], xs[1], xs[2], xs[3]);
+        assert_eq!(d3 % 3, 0);
+        let d_head = d3 / 3;
+        let dtype = self.tensors[qkv].dtype;
+        let dims = vec![("b".into(), b), ("s".into(), s), ("a".into(), a)];
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Attention,
+            dims,
+            vec![],
+            vec![Operand::new(qkv, &["b", "s", "a", ""])],
+            vec![],
+            &[b, s, a, d_head],
+            &["b", "s", "a", ""],
+            dtype,
+            (4 * s * d_head) as f64,
+            2.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Attention output projection: `[b, s, a, d_head] → [b, s, h_model]`
+    /// with reduction over the head dimension (named `h` here), so
+    /// head-partitioned attention yields a *partial* output — exactly the
+    /// Megatron pattern that triggers an all-reduce.
+    pub fn out_proj(&mut self, name: &str, x: TensorId, h_model: usize) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        assert_eq!(xs.len(), 4);
+        let (b, s, a, d_head) = (xs[0], xs[1], xs[2], xs[3]);
+        assert_eq!(a * d_head, h_model);
+        let dtype = self.tensors[x].dtype;
+        let w = self.param(&format!("{name}.weight"), &[h_model, a, d_head], dtype);
+        let bias = self.param(&format!("{name}.bias"), &[h_model], dtype);
+        let dims = vec![
+            ("b".into(), b),
+            ("s".into(), s),
+            ("o".into(), h_model),
+            ("h".into(), a),
+        ];
+        // flops = 2*b*s*h_model*(a*d_head) = (2*d_head) * (b*s*o*a)
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Linear,
+            dims,
+            vec!["h"],
+            vec![Operand::new(x, &["b", "s", "h", ""])],
+            vec![Operand::new(w, &["o", "h", ""]), Operand::new(bias, &["o"])],
+            &[b, s, h_model],
+            &["b", "s", "o"],
+            dtype,
+            (2 * d_head) as f64,
+            2.0,
+            1.0,
+        );
+        self.hint_last(MpHint::RowSplit);
+        out
+    }
+
+    /// 2-D convolution with square kernel. Spatial dims are flattened
+    /// into one axis; the *output* spatial axis is the partitionable
+    /// `s` dimension, the input spatial axis is unpartitionable (its size
+    /// differs under stride/padding).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        c_in: usize,
+        c_out: usize,
+        hw_in: (usize, usize),
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> (TensorId, (usize, usize)) {
+        self.conv2d_rect(name, x, c_in, c_out, hw_in, (k, k), stride, (pad, pad))
+    }
+
+    /// 2-D convolution with rectangular kernel (e.g. Inception's 1×7 and
+    /// 7×1 factorized convolutions).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_rect(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        c_in: usize,
+        c_out: usize,
+        hw_in: (usize, usize),
+        k: (usize, usize),
+        stride: usize,
+        pad: (usize, usize),
+    ) -> (TensorId, (usize, usize)) {
+        let xs = self.shape(x).to_vec();
+        assert_eq!(xs.len(), 3, "conv {name}: want [b, c, s]");
+        assert_eq!(xs[1], c_in, "conv {name}: c_in");
+        assert_eq!(xs[2], hw_in.0 * hw_in.1, "conv {name}: spatial");
+        let h_out = (hw_in.0 + 2 * pad.0 - k.0) / stride + 1;
+        let w_out = (hw_in.1 + 2 * pad.1 - k.1) / stride + 1;
+        let s_out = h_out * w_out;
+        let b = xs[0];
+        let dtype = self.tensors[x].dtype;
+        let w = self.param(&format!("{name}.weight"), &[c_out, c_in, k.0 * k.1], dtype);
+        let dims = vec![
+            ("b".into(), b),
+            ("s".into(), s_out),
+            ("o".into(), c_out),
+            ("h".into(), c_in),
+        ];
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Conv2d,
+            dims,
+            vec!["h"],
+            vec![Operand::new(x, &["b", "h", ""])],
+            vec![Operand::new(w, &["o", "h", ""])],
+            &[b, c_out, s_out],
+            &["b", "o", "s"],
+            dtype,
+            (2 * k.0 * k.1) as f64,
+            2.0,
+            1.0,
+        );
+        (out, (h_out, w_out))
+    }
+
+    /// Generic bandwidth-bound elementwise layer (activation, dropout,
+    /// residual add when given two inputs). Dims: `b` plus one generic
+    /// dim per remaining axis (`d1`, `d2`, ...).
+    pub fn elementwise(&mut self, name: &str, kind: OpKind, inputs: &[TensorId], flops_per_elem: f64, bwd_factor: f64) -> TensorId {
+        assert!(!inputs.is_empty());
+        let xs = self.shape(inputs[0]).to_vec();
+        for &i in inputs {
+            assert_eq!(self.shape(i), &xs[..], "elementwise {name}: shape mismatch");
+        }
+        let dtype = self.tensors[inputs[0]].dtype;
+        let mut dims = vec![("b".to_string(), xs[0])];
+        let mut axes: Vec<String> = vec!["b".into()];
+        for (i, &sz) in xs.iter().enumerate().skip(1) {
+            let d = format!("d{i}");
+            dims.push((d.clone(), sz));
+            axes.push(d);
+        }
+        let axes_ref: Vec<&str> = axes.iter().map(|s| s.as_str()).collect();
+        let ins = inputs.iter().map(|&t| Operand::new(t, &axes_ref)).collect();
+        let (_, out) = self.add_layer(
+            name, kind, dims, vec![], ins, vec![], &xs, &axes_ref, dtype,
+            flops_per_elem, bwd_factor, 1.0,
+        );
+        out
+    }
+
+    /// ReLU / GeLU style activation.
+    pub fn relu(&mut self, name: &str, x: TensorId) -> TensorId {
+        self.elementwise(name, OpKind::Elementwise, &[x], 1.0, 1.0)
+    }
+
+    /// Residual addition of two same-shape activations.
+    pub fn add(&mut self, name: &str, x: TensorId, y: TensorId) -> TensorId {
+        self.elementwise(name, OpKind::Elementwise, &[x, y], 1.0, 1.0)
+    }
+
+    /// LayerNorm with elementwise affine params over the trailing axis.
+    pub fn layer_norm(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        let dtype = self.tensors[x].dtype;
+        let feat = *xs.last().unwrap();
+        let g = self.param(&format!("{name}.weight"), &[feat], dtype);
+        let bta = self.param(&format!("{name}.bias"), &[feat], dtype);
+        let mut dims = vec![("b".to_string(), xs[0])];
+        let mut axes: Vec<String> = vec!["b".into()];
+        for (i, &sz) in xs.iter().enumerate().skip(1) {
+            let d = format!("d{i}");
+            dims.push((d.clone(), sz));
+            axes.push(d);
+        }
+        let axes_ref: Vec<&str> = axes.iter().map(|s| s.as_str()).collect();
+        let last = axes_ref.last().copied().unwrap();
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::LayerNorm,
+            dims,
+            vec![],
+            vec![Operand::new(x, &axes_ref)],
+            vec![Operand::new(g, &[last]), Operand::new(bta, &[last])],
+            &xs,
+            &axes_ref,
+            dtype,
+            8.0,
+            1.5,
+            1.0,
+        );
+        out
+    }
+
+    /// BatchNorm over `[b, c, s]` activations.
+    pub fn batch_norm(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        assert_eq!(xs.len(), 3, "batch_norm {name}: want [b, c, s]");
+        let dtype = self.tensors[x].dtype;
+        let g = self.param(&format!("{name}.weight"), &[xs[1]], dtype);
+        let bta = self.param(&format!("{name}.bias"), &[xs[1]], dtype);
+        let dims = vec![("b".to_string(), xs[0]), ("c".to_string(), xs[1]), ("sp".to_string(), xs[2])];
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::BatchNorm,
+            dims,
+            vec![],
+            vec![Operand::new(x, &["b", "c", "sp"])],
+            vec![Operand::new(g, &["c"]), Operand::new(bta, &["c"])],
+            &xs,
+            &["b", "c", "sp"],
+            dtype,
+            8.0,
+            1.5,
+            1.0,
+        );
+        out
+    }
+
+    /// Pooling `[b, c, s_in] → [b, c, s_out]` (input spatial axis is
+    /// unpartitionable; output spatial is).
+    pub fn pool(&mut self, name: &str, x: TensorId, s_out: usize) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        assert_eq!(xs.len(), 3, "pool {name}: want [b, c, s]");
+        let dtype = self.tensors[x].dtype;
+        let dims = vec![("b".to_string(), xs[0]), ("c".to_string(), xs[1]), ("sp".to_string(), s_out)];
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Pool,
+            dims,
+            vec![],
+            vec![Operand::new(x, &["b", "c", ""])],
+            vec![],
+            &[xs[0], xs[1], s_out],
+            &["b", "c", "sp"],
+            dtype,
+            (xs[2] / s_out.max(1)).max(1) as f64,
+            1.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Flatten trailing axes into one: `[b, c, s] → [b, c*s]`. Free
+    /// reshaping is modeled as a zero-cost elementwise layer so data
+    /// dependencies are preserved.
+    pub fn flatten(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        let feat: usize = xs[1..].iter().product();
+        let dtype = self.tensors[x].dtype;
+        let dims = vec![("b".to_string(), xs[0]), ("d1".to_string(), feat)];
+        let in_axes: Vec<&str> = std::iter::once("b").chain(xs[1..].iter().map(|_| "")).collect();
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Elementwise,
+            dims,
+            vec![],
+            vec![Operand::new(x, &in_axes)],
+            vec![],
+            &[xs[0], feat],
+            &["b", "d1"],
+            dtype,
+            0.1,
+            1.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Vocabulary-parallel token embedding: tokens `[b, s]` × table
+    /// `[v, d]` → `[b, s, d]`. `v` is a reduction dimension: partitioning
+    /// it yields partial outputs (each shard contributes only its rows),
+    /// matching Megatron's vocab-parallel embedding + all-reduce.
+    pub fn embedding(&mut self, name: &str, tokens: TensorId, vocab: usize, d_model: usize, dtype: DType) -> TensorId {
+        let xs = self.shape(tokens).to_vec();
+        assert_eq!(xs.len(), 2, "embedding {name}: want [b, s] tokens");
+        let (b, s) = (xs[0], xs[1]);
+        let table = self.param(&format!("{name}.weight"), &[vocab, d_model], dtype);
+        let dims = vec![("b".to_string(), b), ("s".to_string(), s), ("v".to_string(), vocab)];
+        let lookups = (b * s) as f64;
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Embedding,
+            dims,
+            vec!["v"],
+            vec![Operand::new(tokens, &["b", "s"])],
+            vec![Operand::new(table, &["v", ""])],
+            &[b, s, d_model],
+            &["b", "s", ""],
+            dtype,
+            d_model as f64 / vocab as f64,
+            1.0,
+            (lookups / vocab as f64).min(1.0),
+        );
+        out
+    }
+
+    /// Multi-hot embedding bag (DLRM): indices `[b, n_hot]` × table
+    /// `[v, d]` → pooled `[b, d]`. Row-sharding `v` gives partial
+    /// outputs (per-shard partial sums).
+    pub fn embedding_bag(&mut self, name: &str, idx: TensorId, vocab: usize, d: usize, n_hot: usize, dtype: DType) -> TensorId {
+        let xs = self.shape(idx).to_vec();
+        assert_eq!(xs.len(), 2, "embedding_bag {name}: want [b, n_hot]");
+        let b = xs[0];
+        let table = self.param(&format!("{name}.weight"), &[vocab, d], dtype);
+        let dims = vec![("b".to_string(), b), ("v".to_string(), vocab)];
+        let lookups = (b * n_hot) as f64;
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Embedding,
+            dims,
+            vec!["v"],
+            vec![Operand::new(idx, &["b", ""])],
+            vec![Operand::new(table, &["v", ""])],
+            &[b, d],
+            &["b", ""],
+            dtype,
+            (n_hot * d) as f64 / vocab as f64,
+            1.0,
+            (lookups / vocab as f64).min(1.0),
+        );
+        out
+    }
+
+    /// DLRM pairwise feature interaction: `[b, f, d] → [b, f*(f+1)/2]`.
+    pub fn interaction(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        assert_eq!(xs.len(), 3, "interaction {name}: want [b, f, d]");
+        let (b, f, d) = (xs[0], xs[1], xs[2]);
+        let dtype = self.tensors[x].dtype;
+        let out_feat = f * (f + 1) / 2;
+        let dims = vec![("b".to_string(), b)];
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Interaction,
+            dims,
+            vec![],
+            vec![Operand::new(x, &["b", "", ""])],
+            vec![],
+            &[b, out_feat],
+            &["b", ""],
+            dtype,
+            (2 * f * f * d) as f64,
+            2.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Concatenate same-batch activations along a new feature axis:
+    /// `k × [b, d] → [b, k, d]` (zero-ish cost, preserves deps).
+    pub fn concat_features(&mut self, name: &str, inputs: &[TensorId], d: usize) -> TensorId {
+        assert!(!inputs.is_empty());
+        let b = self.shape(inputs[0])[0];
+        let dtype = self.tensors[inputs[0]].dtype;
+        for &t in inputs {
+            let s = self.shape(t);
+            assert_eq!(s[0], b, "concat {name}: batch mismatch");
+            assert_eq!(s.iter().product::<usize>() / b, d, "concat {name}: feature size");
+        }
+        let dims = vec![("b".to_string(), b)];
+        let ins = inputs
+            .iter()
+            .map(|&t| {
+                let rank = self.shape(t).len();
+                let axes: Vec<&str> = std::iter::once("b").chain((1..rank).map(|_| "")).collect();
+                Operand::new(t, &axes)
+            })
+            .collect();
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Elementwise,
+            dims,
+            vec![],
+            ins,
+            vec![],
+            &[b, inputs.len(), d],
+            &["b", "", ""],
+            dtype,
+            (inputs.len() * d) as f64,
+            1.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Concatenate `[b, c_i, s]` activations along the channel axis
+    /// (Inception-style branch merge): output `[b, Σc_i, s]`.
+    pub fn concat_channels(&mut self, name: &str, inputs: &[TensorId]) -> TensorId {
+        assert!(!inputs.is_empty());
+        let b = self.shape(inputs[0])[0];
+        let s = self.shape(inputs[0])[2];
+        let dtype = self.tensors[inputs[0]].dtype;
+        let mut c_total = 0;
+        for &t in inputs {
+            let sh = self.shape(t);
+            assert_eq!(sh.len(), 3, "concat_channels {name}: want [b, c, s]");
+            assert_eq!(sh[0], b, "concat_channels {name}: batch mismatch");
+            assert_eq!(sh[2], s, "concat_channels {name}: spatial mismatch");
+            c_total += sh[1];
+        }
+        let dims = vec![
+            ("b".to_string(), b),
+            ("c".to_string(), c_total),
+            ("sp".to_string(), s),
+        ];
+        let ins = inputs
+            .iter()
+            .map(|&t| Operand::new(t, &["b", "", "sp"]))
+            .collect();
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Elementwise,
+            dims,
+            vec![],
+            ins,
+            vec![],
+            &[b, c_total, s],
+            &["b", "c", "sp"],
+            dtype,
+            0.1,
+            1.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Softmax cross-entropy loss head over `[b, ...]` logits.
+    pub fn loss(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        let dtype = self.tensors[x].dtype;
+        let per_sample: usize = xs[1..].iter().product();
+        let dims = vec![("b".to_string(), xs[0])];
+        let in_axes: Vec<&str> = std::iter::once("b").chain(xs[1..].iter().map(|_| "")).collect();
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Loss,
+            dims,
+            vec![],
+            vec![Operand::new(x, &in_axes)],
+            vec![],
+            &[xs[0]],
+            &["b"],
+            dtype,
+            (5 * per_sample.max(1)) as f64,
+            1.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Finish and validate; panics on structural errors (model-zoo bugs
+    /// should fail loudly at construction).
+    pub fn finish(self) -> Graph {
+        let g = Graph {
+            name: self.name,
+            batch_size: self.batch,
+            layers: self.layers,
+            tensors: self.tensors,
+        };
+        let errs = g.validate();
+        assert!(errs.is_empty(), "graph '{}' invalid: {:#?}", g.name, errs);
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scopes_become_paths() {
+        let mut b = GraphBuilder::new("m", 4);
+        let x = b.input("x", &[4, 8], DType::F32);
+        let y = b.scoped("enc", |b| b.scoped("0", |b| b.linear("fc", x, 8, 8)));
+        let _ = b.loss("loss", y);
+        let g = b.finish();
+        assert_eq!(g.layers[0].path, vec!["enc", "0", "fc"]);
+        assert_eq!(g.layers[0].path_string(), "enc.0.fc");
+    }
+
+    #[test]
+    fn conv_shapes_follow_stride_and_padding() {
+        let mut b = GraphBuilder::new("m", 2);
+        let x = b.input("x", &[2, 3, 224 * 224], DType::F32);
+        let (y, hw) = b.conv2d("c1", x, 3, 64, (224, 224), 7, 2, 3);
+        assert_eq!(hw, (112, 112));
+        assert_eq!(b.shape(y), &[2, 64, 112 * 112]);
+        let _ = b.finish();
+    }
+
+    #[test]
+    fn qkv_attention_outproj_compose() {
+        let mut b = GraphBuilder::new("m", 2);
+        let x = b.input("x", &[2, 16, 64], DType::F32);
+        let qkv = b.qkv_proj("qkv", x, 64, 4);
+        assert_eq!(b.shape(qkv), &[2, 16, 4, 48]);
+        let att = b.attention("attn", qkv);
+        assert_eq!(b.shape(att), &[2, 16, 4, 16]);
+        let out = b.out_proj("proj", att, 64);
+        assert_eq!(b.shape(out), &[2, 16, 64]);
+        let g = b.finish();
+        // attention flops = 4*b*s^2*h = 4*2*16*16*64
+        assert_eq!(g.layers[1].fwd_flops(), 4 * 2 * 16 * 16 * 64);
+        // out_proj reduces over heads dim 'h'
+        assert_eq!(g.layers[2].reduce_dims, vec!["h".to_string()]);
+    }
+
+    #[test]
+    fn embedding_is_vocab_reduction() {
+        let mut b = GraphBuilder::new("m", 4);
+        let t = b.input("tok", &[4, 8], DType::I64);
+        let e = b.embedding("wte", t, 1000, 32, DType::F32);
+        assert_eq!(b.shape(e), &[4, 8, 32]);
+        let g = b.finish();
+        assert_eq!(g.layers[0].reduce_dims, vec!["v".to_string()]);
+        assert!(g.layers[0].param_read_factor < 1.0);
+    }
+
+    #[test]
+    fn embedding_bag_partial_read() {
+        let mut b = GraphBuilder::new("m", 16);
+        let idx = b.input("idx", &[16, 32], DType::I64);
+        let e = b.embedding_bag("emb", idx, 100_000, 64, 32, DType::F32);
+        assert_eq!(b.shape(e), &[16, 64]);
+        let g = b.finish();
+        let l = &g.layers[0];
+        // 16*32 lookups out of 100k rows
+        assert!((l.param_read_factor - 512.0 / 100_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interaction_output_size() {
+        let mut b = GraphBuilder::new("m", 8);
+        let x = b.input("x", &[8, 4, 16], DType::F32);
+        let y = b.interaction("int", x);
+        assert_eq!(b.shape(y), &[8, 10]); // 4*5/2
+        let _ = b.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn add_rejects_shape_mismatch() {
+        let mut b = GraphBuilder::new("m", 2);
+        let x = b.input("x", &[2, 4], DType::F32);
+        let y = b.input("y", &[2, 5], DType::F32);
+        b.add("a", x, y);
+    }
+}

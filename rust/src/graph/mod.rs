@@ -1,0 +1,326 @@
+//! Layer-level computation graph IR.
+//!
+//! DNNs are modeled as the paper models them (§II, §IV-A): a graph of
+//! *layers*, where each layer carries
+//!
+//! - a set of named **parallelizable dimensions** with sizes (the unique
+//!   dimensions occurring in its input/output tensors, e.g. `b, s, o, h`
+//!   for a linear layer),
+//! - **operands**: activation inputs, parameters, and activation outputs,
+//!   each annotated with the mapping from tensor axes to dimension names,
+//! - FLOP formulas for the forward and backward computations.
+//!
+//! Parallelization (op shard) partitions a subset of a layer's dimensions;
+//! the operand axis annotations let the compiler derive each tensor's
+//! implicit partitioning, detect partial outputs (reduction dimensions),
+//! and infer collective communication (§V).
+
+pub mod builder;
+pub mod op;
+pub mod tensor;
+
+pub use builder::GraphBuilder;
+pub use op::OpKind;
+pub use tensor::{DType, Operand, TensorId, TensorKind, TensorMeta};
+
+/// Dense layer id within one [`Graph`].
+pub type LayerId = usize;
+
+/// One DNN layer: the unit that strategy-tree leaf nodes configure.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Dense id (also the topological position; builders append layers in
+    /// topological order).
+    pub id: LayerId,
+    /// Leaf name, e.g. `"fc1"`.
+    pub name: String,
+    /// Module path from the root, e.g. `["encoder", "3", "fc1"]`. This is
+    /// the strategy-tree address of the layer.
+    pub path: Vec<String>,
+    /// Operator kind (drives the cost profile).
+    pub kind: OpKind,
+    /// Named parallelizable dimensions and their sizes.
+    pub dims: Vec<(String, usize)>,
+    /// Dimensions that are reduced away (appear in inputs but not in
+    /// outputs). Partitioning these makes the output *partial*.
+    pub reduce_dims: Vec<String>,
+    /// Activation inputs.
+    pub inputs: Vec<Operand>,
+    /// Parameters (weights/biases).
+    pub params: Vec<Operand>,
+    /// Activation outputs.
+    pub outputs: Vec<Operand>,
+    /// Forward FLOPs = `flops_multiplier * prod(dims)`.
+    pub flops_multiplier: f64,
+    /// Backward FLOPs = `bwd_flops_factor * forward FLOPs` (≈2 for layers
+    /// with parameters: dgrad + wgrad; ≈1 for elementwise).
+    pub bwd_flops_factor: f64,
+    /// Fraction of the parameter bytes actually read per step. 1.0 for
+    /// dense layers; `min(1, lookups/rows)` for embedding gathers, which
+    /// touch only the gathered rows.
+    pub param_read_factor: f64,
+    /// Which dimension strategy builders should split when the user asks
+    /// for model parallelism on this layer (Megatron-style column/row
+    /// alternation). Purely a hint — explicit strategy-tree configs
+    /// override it.
+    pub mp_hint: MpHint,
+}
+
+/// Model-parallel splitting hint per layer (see [`Layer::mp_hint`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MpHint {
+    /// Split the output-channel dim `o` (Megatron column parallel).
+    ColSplit,
+    /// Split the reduction dim `h` (Megatron row parallel → partial
+    /// output → all-reduce).
+    RowSplit,
+    /// Split the attention-heads dim `a`.
+    Heads,
+    /// Split the vocabulary/rows dim `v` (vocab-parallel embedding).
+    Vocab,
+    /// Split the layer's last generic dimension (elementwise layers
+    /// sandwiched between column- and row-parallel linears — Megatron's
+    /// GeLU stays sharded along the hidden axis).
+    LastDim,
+    /// Replicate under model parallelism (norms, elementwise, loss).
+    Replicate,
+}
+
+impl Layer {
+    /// Size of a named dimension.
+    pub fn dim_size(&self, name: &str) -> Option<usize> {
+        self.dims
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+    }
+
+    /// Forward FLOPs of the unpartitioned layer.
+    pub fn fwd_flops(&self) -> u64 {
+        let prod: f64 = self.dims.iter().map(|(_, s)| *s as f64).product();
+        (self.flops_multiplier * prod) as u64
+    }
+
+    /// Backward FLOPs of the unpartitioned layer.
+    pub fn bwd_flops(&self) -> u64 {
+        (self.fwd_flops() as f64 * self.bwd_flops_factor) as u64
+    }
+
+    /// True if the layer has trainable parameters.
+    pub fn has_params(&self) -> bool {
+        !self.params.is_empty()
+    }
+
+    /// The dotted path string (strategy-tree address).
+    pub fn path_string(&self) -> String {
+        self.path.join(".")
+    }
+}
+
+/// A whole model: layers in topological order plus the tensor table.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Model name (used in reports and config files).
+    pub name: String,
+    /// Global batch size the graph was built for.
+    pub batch_size: usize,
+    /// Layers in topological order.
+    pub layers: Vec<Layer>,
+    /// All tensors (activations + parameters).
+    pub tensors: Vec<TensorMeta>,
+}
+
+impl Graph {
+    /// Total number of trainable parameters.
+    pub fn num_params(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Param)
+            .map(|t| t.numel())
+            .sum()
+    }
+
+    /// Total forward FLOPs for one step (unpartitioned).
+    pub fn total_fwd_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.fwd_flops()).sum()
+    }
+
+    /// Consumers of each tensor: `consumers()[t]` lists layer ids reading
+    /// tensor `t` as an activation input.
+    pub fn consumers(&self) -> Vec<Vec<LayerId>> {
+        let mut out = vec![Vec::new(); self.tensors.len()];
+        for l in &self.layers {
+            for inp in &l.inputs {
+                out[inp.tensor].push(l.id);
+            }
+        }
+        out
+    }
+
+    /// Validate structural invariants; returns a list of problems (empty
+    /// = valid). Checked by model-zoo tests for every model.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.id != i {
+                errs.push(format!("layer {i} has id {}", l.id));
+            }
+            // Dims must be unique.
+            for (j, (d, _)) in l.dims.iter().enumerate() {
+                if l.dims[..j].iter().any(|(d2, _)| d2 == d) {
+                    errs.push(format!("layer {}: duplicate dim '{d}'", l.name));
+                }
+            }
+            // reduce_dims must be declared dims, present in some input
+            // and absent from every output.
+            for rd in &l.reduce_dims {
+                if l.dim_size(rd).is_none() {
+                    errs.push(format!("layer {}: reduce dim '{rd}' not declared", l.name));
+                }
+                for out in &l.outputs {
+                    if out.axis_of(rd).is_some() {
+                        errs.push(format!(
+                            "layer {}: reduce dim '{rd}' appears in an output",
+                            l.name
+                        ));
+                    }
+                }
+            }
+            // Operand axis names must be declared, and axis sizes must
+            // match the dim sizes.
+            for (role, ops) in [
+                ("input", &l.inputs),
+                ("param", &l.params),
+                ("output", &l.outputs),
+            ] {
+                for o in ops.iter() {
+                    let t = match self.tensors.get(o.tensor) {
+                        Some(t) => t,
+                        None => {
+                            errs.push(format!(
+                                "layer {}: {role} references unknown tensor {}",
+                                l.name, o.tensor
+                            ));
+                            continue;
+                        }
+                    };
+                    if o.axes.len() != t.shape.len() {
+                        errs.push(format!(
+                            "layer {}: {role} '{}' axes/shape rank mismatch",
+                            l.name, t.name
+                        ));
+                        continue;
+                    }
+                    for (ax, dim) in o.axes.iter().enumerate() {
+                        if let Some(d) = dim {
+                            match l.dim_size(d) {
+                                None => errs.push(format!(
+                                    "layer {}: {role} '{}' axis {ax} uses undeclared dim '{d}'",
+                                    l.name, t.name
+                                )),
+                                Some(sz) if sz != t.shape[ax] => errs.push(format!(
+                                    "layer {}: {role} '{}' axis {ax} dim '{d}' size {} != shape {}",
+                                    l.name, t.name, sz, t.shape[ax]
+                                )),
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+            }
+            // Inputs must be produced by earlier layers or be graph
+            // inputs (topological construction order).
+            for inp in &l.inputs {
+                if let Some(t) = self.tensors.get(inp.tensor) {
+                    if let Some(p) = t.producer {
+                        if p >= i {
+                            errs.push(format!(
+                                "layer {}: input '{}' produced by later layer {p}",
+                                l.name, t.name
+                            ));
+                        }
+                    }
+                    if t.kind == TensorKind::Param {
+                        errs.push(format!(
+                            "layer {}: param tensor '{}' listed as activation input",
+                            l.name, t.name
+                        ));
+                    }
+                }
+            }
+            // Outputs must be produced by this layer.
+            for out in &l.outputs {
+                if let Some(t) = self.tensors.get(out.tensor) {
+                    if t.producer != Some(i) {
+                        errs.push(format!(
+                            "layer {}: output '{}' has producer {:?}",
+                            l.name, t.name, t.producer
+                        ));
+                    }
+                }
+            }
+        }
+        errs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut b = GraphBuilder::new("tiny", 8);
+        let x = b.input("x", &[8, 32], DType::F32);
+        let h = b.linear("fc1", x, 32, 64);
+        let h = b.relu("act", h);
+        let _ = b.linear("fc2", h, 64, 16);
+        b.finish()
+    }
+
+    #[test]
+    fn tiny_graph_is_valid() {
+        let g = tiny_graph();
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert_eq!(g.layers.len(), 3);
+    }
+
+    #[test]
+    fn param_count_matches_hand_computation() {
+        let g = tiny_graph();
+        // fc1: 32*64 + 64; fc2: 64*16 + 16
+        assert_eq!(g.num_params(), 32 * 64 + 64 + 64 * 16 + 16);
+    }
+
+    #[test]
+    fn linear_flops_formula() {
+        let g = tiny_graph();
+        let fc1 = &g.layers[0];
+        // 2 * b * o * h = 2 * 8 * 64 * 32
+        assert_eq!(fc1.fwd_flops(), 2 * 8 * 64 * 32);
+        assert_eq!(fc1.bwd_flops(), 2 * fc1.fwd_flops());
+    }
+
+    #[test]
+    fn consumers_index() {
+        let g = tiny_graph();
+        let fc1_out = g.layers[0].outputs[0].tensor;
+        let cons = g.consumers();
+        assert_eq!(cons[fc1_out], vec![1]); // consumed by relu
+    }
+
+    #[test]
+    fn validate_catches_reduce_dim_in_output() {
+        let mut g = tiny_graph();
+        g.layers[0].reduce_dims.push("o".into()); // 'o' IS in the output
+        assert!(!g.validate().is_empty());
+    }
+
+    #[test]
+    fn validate_catches_bad_axis_size() {
+        let mut g = tiny_graph();
+        // Corrupt fc1's weight shape.
+        let w = g.layers[0].params[0].tensor;
+        g.tensors[w].shape[0] += 1;
+        assert!(!g.validate().is_empty());
+    }
+}

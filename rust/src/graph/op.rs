@@ -1,0 +1,151 @@
+//! Operator kinds and their arithmetic-intensity profiles.
+//!
+//! The op estimator's roofline model needs, per operator kind, an
+//! *efficiency profile*: how close the kernel gets to peak FLOPs (or to
+//! peak memory bandwidth for bandwidth-bound ops). These are the
+//! per-layer-type constants the paper obtains by profiling computation
+//! operators on the target hardware (§VII "Op Estimator"); here they are
+//! table-driven so the ground-truth emulator and HTAE share one source.
+
+/// Layer/operator kinds modeled by the graph IR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Dense matmul: `out[b,(s,)o] = in[b,(s,)h] * w[o,h]`.
+    Linear,
+    /// 2-D convolution (dims: b, s = out spatial, o = C_out, h = C_in).
+    Conv2d,
+    /// Fused scaled-dot-product attention core (dims: b, a = heads, s).
+    Attention,
+    /// Table lookup, dims: b, (s,) v = vocab/rows (reduction-like for
+    /// bag lookups), d is folded into the flops multiplier.
+    Embedding,
+    /// LayerNorm / RMSNorm (bandwidth-bound).
+    LayerNorm,
+    /// BatchNorm (bandwidth-bound; has cross-batch statistics).
+    BatchNorm,
+    /// Elementwise activation / residual add / dropout (bandwidth-bound).
+    Elementwise,
+    /// Pooling (bandwidth-bound).
+    Pool,
+    /// Softmax + cross-entropy loss head.
+    Loss,
+    /// Feature interaction (DLRM pairwise dot products).
+    Interaction,
+}
+
+impl OpKind {
+    /// True for kinds whose FLOPs dominate (MXU/tensor-core bound);
+    /// false for bandwidth-bound kinds.
+    pub fn compute_bound(self) -> bool {
+        matches!(
+            self,
+            OpKind::Linear | OpKind::Conv2d | OpKind::Attention | OpKind::Interaction
+        )
+    }
+
+    /// Fraction of device peak FLOPs this kind achieves when
+    /// compute-bound (the profiled kernel efficiency).
+    pub fn flops_efficiency(self) -> f64 {
+        match self {
+            OpKind::Linear => 0.62,
+            OpKind::Conv2d => 0.55,
+            OpKind::Attention => 0.38,
+            OpKind::Interaction => 0.30,
+            // Bandwidth-bound kinds still do some flops; give them a
+            // nominal efficiency so the roofline max() picks bandwidth.
+            _ => 0.25,
+        }
+    }
+
+    /// Fraction of device peak memory bandwidth this kind achieves when
+    /// bandwidth-bound.
+    pub fn mem_efficiency(self) -> f64 {
+        match self {
+            OpKind::Elementwise => 0.82,
+            OpKind::LayerNorm => 0.70,
+            OpKind::BatchNorm => 0.65,
+            OpKind::Pool => 0.75,
+            OpKind::Loss => 0.60,
+            OpKind::Embedding => 0.35, // gather: random access
+            _ => 0.80,
+        }
+    }
+
+    /// Fixed per-launch overhead in nanoseconds (kernel launch + setup).
+    /// Small ops are launch-bound; this term keeps tiny-tensor costs from
+    /// rounding to zero.
+    pub fn launch_overhead_ns(self) -> u64 {
+        match self {
+            OpKind::Attention => 12_000,
+            OpKind::BatchNorm => 8_000,
+            _ => 5_000,
+        }
+    }
+
+    /// Stable numeric id used in the feature matrix fed to the
+    /// AOT cost kernel (L1). Keep in sync with
+    /// `python/compile/kernels/costmodel.py::OP_KIND_*`.
+    pub fn feature_id(self) -> u32 {
+        match self {
+            OpKind::Linear => 0,
+            OpKind::Conv2d => 1,
+            OpKind::Attention => 2,
+            OpKind::Embedding => 3,
+            OpKind::LayerNorm => 4,
+            OpKind::BatchNorm => 5,
+            OpKind::Elementwise => 6,
+            OpKind::Pool => 7,
+            OpKind::Loss => 8,
+            OpKind::Interaction => 9,
+        }
+    }
+
+    /// All kinds (for table-driven tests).
+    pub fn all() -> &'static [OpKind] {
+        &[
+            OpKind::Linear,
+            OpKind::Conv2d,
+            OpKind::Attention,
+            OpKind::Embedding,
+            OpKind::LayerNorm,
+            OpKind::BatchNorm,
+            OpKind::Elementwise,
+            OpKind::Pool,
+            OpKind::Loss,
+            OpKind::Interaction,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_ids_are_unique_and_dense() {
+        let mut seen = vec![false; OpKind::all().len()];
+        for k in OpKind::all() {
+            let id = k.feature_id() as usize;
+            assert!(id < seen.len(), "id {id} out of range");
+            assert!(!seen[id], "duplicate id {id}");
+            seen[id] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn efficiencies_are_fractions() {
+        for k in OpKind::all() {
+            assert!(k.flops_efficiency() > 0.0 && k.flops_efficiency() <= 1.0);
+            assert!(k.mem_efficiency() > 0.0 && k.mem_efficiency() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn matmul_like_kinds_are_compute_bound() {
+        assert!(OpKind::Linear.compute_bound());
+        assert!(OpKind::Conv2d.compute_bound());
+        assert!(!OpKind::Elementwise.compute_bound());
+        assert!(!OpKind::Embedding.compute_bound());
+    }
+}

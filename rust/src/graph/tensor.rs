@@ -1,0 +1,145 @@
+//! Tensor metadata for the layer-level computation graph.
+
+use crate::util::numel;
+
+/// Dense tensor id within one [`crate::graph::Graph`].
+pub type TensorId = usize;
+
+/// Element types we model. Costs only depend on the element size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// 16-bit float (half).
+    F16,
+    /// bfloat16.
+    BF16,
+    /// 64-bit integer (token ids, embedding indices).
+    I64,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> u64 {
+        match self {
+            DType::F32 => 4,
+            DType::F16 | DType::BF16 => 2,
+            DType::I64 => 8,
+        }
+    }
+}
+
+/// What role a tensor plays in training. Determines lifetime during
+/// simulation (activations are freed after their last consumer; params
+/// live forever; gradients live until the optimizer step).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorKind {
+    /// Forward activation (including graph inputs).
+    Activation,
+    /// Trainable parameter.
+    Param,
+}
+
+/// Metadata for one logical (unpartitioned) tensor.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    /// Dense id.
+    pub id: TensorId,
+    /// Human-readable name, e.g. `"encoder.3.fc1.weight"`.
+    pub name: String,
+    /// Full (unpartitioned) shape.
+    pub shape: Vec<usize>,
+    /// Element type.
+    pub dtype: DType,
+    /// Role in training.
+    pub kind: TensorKind,
+    /// Layer that produces this tensor (`None` for graph inputs and
+    /// parameters).
+    pub producer: Option<usize>,
+}
+
+impl TensorMeta {
+    /// Number of elements.
+    pub fn numel(&self) -> u64 {
+        numel(&self.shape)
+    }
+
+    /// Total bytes of the unpartitioned tensor.
+    pub fn bytes(&self) -> u64 {
+        self.numel() * self.dtype.size()
+    }
+}
+
+/// A layer's view of a tensor: which of the layer's named parallelizable
+/// dimensions each tensor axis corresponds to (`None` = this axis cannot
+/// be partitioned by the layer's computation config, e.g. the kernel
+/// spatial axes of a convolution weight).
+#[derive(Debug, Clone)]
+pub struct Operand {
+    /// The referenced tensor.
+    pub tensor: TensorId,
+    /// Per-axis dimension names, aligned with `TensorMeta::shape`.
+    pub axes: Vec<Option<String>>,
+}
+
+impl Operand {
+    /// Operand whose axes map 1:1 to the given dim names.
+    pub fn new(tensor: TensorId, axes: &[&str]) -> Self {
+        Operand {
+            tensor,
+            axes: axes
+                .iter()
+                .map(|a| {
+                    if a.is_empty() {
+                        None
+                    } else {
+                        Some(a.to_string())
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Axis index carrying dimension `dim`, if any.
+    pub fn axis_of(&self, dim: &str) -> Option<usize> {
+        self.axes
+            .iter()
+            .position(|a| a.as_deref() == Some(dim))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::F16.size(), 2);
+        assert_eq!(DType::BF16.size(), 2);
+        assert_eq!(DType::I64.size(), 8);
+    }
+
+    #[test]
+    fn tensor_bytes() {
+        let t = TensorMeta {
+            id: 0,
+            name: "w".into(),
+            shape: vec![128, 64],
+            dtype: DType::F32,
+            kind: TensorKind::Param,
+            producer: None,
+        };
+        assert_eq!(t.numel(), 128 * 64);
+        assert_eq!(t.bytes(), 128 * 64 * 4);
+    }
+
+    #[test]
+    fn operand_axis_lookup() {
+        let op = Operand::new(3, &["b", "", "h"]);
+        assert_eq!(op.axis_of("b"), Some(0));
+        assert_eq!(op.axis_of("h"), Some(2));
+        assert_eq!(op.axis_of("o"), None);
+        assert_eq!(op.axes[1], None);
+    }
+}

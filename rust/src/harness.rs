@@ -1,0 +1,159 @@
+//! Shared experiment harness used by the bench targets (`rust/benches/`)
+//! and the end-to-end example: one place that knows how to run a
+//! `(model, strategy, cluster)` case through HTAE, the emulator, and the
+//! baselines, and to aggregate the error statistics the paper's tables
+//! report.
+
+use crate::baselines::FlexFlowSim;
+use crate::cluster::{Cluster, Preset};
+use crate::compiler::compile;
+use crate::emulator::Emulator;
+use crate::estimator::OpEstimator;
+use crate::executor::{calibrate, Htae, HtaeConfig};
+use crate::models::ModelKind;
+use crate::strategy::{build_strategy, StrategySpec};
+use crate::Result;
+
+/// Default artifact path used by harness runs.
+pub const ARTIFACT: &str = "artifacts/costmodel.hlo.txt";
+
+/// One experiment case.
+#[derive(Debug, Clone, Copy)]
+pub struct Case {
+    /// Model under test.
+    pub model: ModelKind,
+    /// Global batch size.
+    pub batch: usize,
+    /// Hardware preset.
+    pub preset: Preset,
+    /// Nodes of the preset to instantiate.
+    pub nodes: usize,
+    /// Parallelization strategy.
+    pub spec: StrategySpec,
+}
+
+/// Outcome of simulating one case with every model.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    /// Emulated ground-truth throughput (samples/s).
+    pub truth_sps: f64,
+    /// Ground truth step time (ms).
+    pub truth_ms: f64,
+    /// HTAE-predicted throughput.
+    pub htae_sps: f64,
+    /// HTAE step time (ms).
+    pub htae_ms: f64,
+    /// |error| of HTAE vs truth, percent.
+    pub err_pct: f64,
+    /// FlexFlow-Sim throughput (None = strategy unsupported).
+    pub ff_sps: Option<f64>,
+    /// |error| of FlexFlow-Sim, percent.
+    pub ff_err_pct: Option<f64>,
+    /// OOM predicted by the emulator.
+    pub oom: bool,
+    /// Task count of the execution graph.
+    pub n_tasks: usize,
+}
+
+/// Run one case end-to-end (emulator truth + HTAE + FlexFlow-Sim).
+pub fn run_case(case: &Case) -> Result<CaseResult> {
+    run_case_with(case, &HtaeCustom::default())
+}
+
+/// Knobs for ablation benches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HtaeCustom {
+    /// Disable bandwidth-sharing modeling.
+    pub no_sharing: bool,
+    /// Disable comp-comm overlap modeling.
+    pub no_overlap: bool,
+    /// Skip the FlexFlow-Sim baseline (faster benches).
+    pub skip_flexflow: bool,
+}
+
+/// Run one case with ablation knobs.
+pub fn run_case_with(case: &Case, custom: &HtaeCustom) -> Result<CaseResult> {
+    let cluster = Cluster::preset(case.preset, case.nodes);
+    let graph = case.model.build(case.batch);
+    let tree = build_strategy(&graph, case.spec)?;
+    let eg = compile(&graph, &tree, &cluster)?;
+    let est = OpEstimator::best_available(&cluster, ARTIFACT);
+    let base = est.estimate_all(&eg)?;
+
+    let truth = Emulator::new(&cluster, &est).simulate_with_costs(&eg, &base)?;
+    let config = HtaeConfig {
+        gamma: if custom.no_overlap {
+            0.0
+        } else {
+            calibrate::default_gamma(&cluster)
+        },
+        bandwidth_sharing: !custom.no_sharing,
+        overlap: !custom.no_overlap,
+        record_timeline: false,
+    };
+    let pred = Htae::with_config(&cluster, &est, config).simulate_with_costs(&eg, &base)?;
+    let err_pct = (pred.throughput - truth.throughput).abs() / truth.throughput * 100.0;
+
+    let (ff_sps, ff_err_pct) = if custom.skip_flexflow {
+        (None, None)
+    } else {
+        match FlexFlowSim::new(&cluster).simulate(&graph, &tree, &eg) {
+            Ok(f) => {
+                let e = (f.throughput - truth.throughput).abs() / truth.throughput * 100.0;
+                (Some(f.throughput), Some(e))
+            }
+            Err(_) => (None, None),
+        }
+    };
+    Ok(CaseResult {
+        truth_sps: truth.throughput,
+        truth_ms: truth.step_ms,
+        htae_sps: pred.throughput,
+        htae_ms: pred.step_ms,
+        err_pct,
+        ff_sps,
+        ff_err_pct,
+        oom: truth.oom,
+        n_tasks: eg.tasks.len(),
+    })
+}
+
+/// Aggregate error statistics: `(avg, max)` of a percent-error series.
+pub fn err_stats(errs: &[f64]) -> (f64, f64) {
+    if errs.is_empty() {
+        return (0.0, 0.0);
+    }
+    (
+        errs.iter().sum::<f64>() / errs.len() as f64,
+        errs.iter().cloned().fold(0.0, f64::max),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy::paper::{batch_for, s1};
+
+    #[test]
+    fn harness_runs_a_small_case() {
+        let case = Case {
+            model: ModelKind::Vgg19,
+            batch: batch_for(ModelKind::Vgg19, 2),
+            preset: Preset::HC1,
+            nodes: 1,
+            spec: s1(ModelKind::Vgg19, 2),
+        };
+        let r = run_case(&case).unwrap();
+        assert!(r.truth_sps > 0.0 && r.htae_sps > 0.0);
+        assert!(r.err_pct.is_finite());
+        assert!(r.ff_sps.is_some(), "plain DP is inside SOAP");
+    }
+
+    #[test]
+    fn err_stats_basics() {
+        let (avg, max) = err_stats(&[1.0, 3.0]);
+        assert_eq!(avg, 2.0);
+        assert_eq!(max, 3.0);
+        assert_eq!(err_stats(&[]), (0.0, 0.0));
+    }
+}

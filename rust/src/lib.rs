@@ -1,0 +1,124 @@
+//! # Proteus-RS
+//!
+//! A Rust + JAX + Pallas reproduction of **"Proteus: Simulating the
+//! Performance of Distributed DNN Training"** (CS.DC 2023).
+//!
+//! Proteus predicts the training throughput, step time, and memory
+//! footprint of a DNN model parallelized with an arbitrary combination of
+//! operator-level strategies (data / model / hybrid / general op-shard
+//! parallelism, ZeRO-style memory partitioning) and subgraph-level
+//! strategies (pipeline parallelism, recomputation) on a described GPU
+//! cluster — without running the model on real hardware.
+//!
+//! The pipeline mirrors the paper:
+//!
+//! 1. [`graph`] + [`models`]: the DNN is a layer-level computation graph
+//!    with forward and backward operators.
+//! 2. [`strategy`]: the parallelization strategy is a **strategy tree** —
+//!    leaf nodes carry computation/memory configs for operators/tensors,
+//!    non-leaf nodes carry schedule configs (micro-batching,
+//!    recomputation).
+//! 3. [`compiler`]: `(model, tree, cluster)` is compiled into a
+//!    **distributed execution graph**: operators and tensors are split
+//!    into per-device partitions, collective communication operators are
+//!    inferred via *strategy transformation*, and control dependencies
+//!    encode the pipeline/recompute schedule.
+//! 4. [`estimator`]: per-operator costs come from a roofline compute
+//!    model and an α-β collective model. The batched hot path is an AOT
+//!    Pallas/XLA artifact executed through [`runtime`] (PJRT); a
+//!    bit-faithful pure-Rust mirror backs unit tests.
+//! 5. [`executor`]: **HTAE** (Hierarchical Topo-Aware Executor) simulates
+//!    the schedule, detects *comp-comm overlap* and *bandwidth sharing*
+//!    at runtime, adapts operator costs, tracks memory, and reports
+//!    throughput/OOM.
+//! 6. [`emulator`]: a strictly finer-grained flow-level emulator stands in
+//!    for the paper's physical testbed (ground truth) — see DESIGN.md §3.
+//! 7. [`baselines`]: FlexFlow-Sim and a Paleo-style analytical model for
+//!    the paper's comparisons.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use proteus::prelude::*;
+//!
+//! let model = proteus::models::gpt2(proteus::models::GptConfig::gpt2_117m(), 8);
+//! let cluster = Cluster::preset(Preset::HC2, 1);
+//! let mut tree = StrategyTree::from_model(&model);
+//! tree.assign_data_parallel(&model, cluster.num_devices()).unwrap();
+//! let exec = compile(&model, &tree, &cluster).unwrap();
+//! let est = OpEstimator::analytical(&cluster);
+//! let report = Htae::new(&cluster, &est).simulate(&exec).unwrap();
+//! println!("throughput: {:.1} samples/s", report.throughput);
+//! ```
+
+pub mod baselines;
+pub mod cli;
+pub mod harness;
+pub mod cluster;
+pub mod compiler;
+pub mod emulator;
+pub mod estimator;
+pub mod executor;
+pub mod graph;
+pub mod models;
+pub mod runtime;
+pub mod strategy;
+pub mod testing;
+pub mod trace;
+pub mod util;
+
+/// Convenience re-exports covering the common simulation pipeline.
+pub mod prelude {
+    pub use crate::baselines::FlexFlowSim;
+    pub use crate::cluster::{Cluster, Preset};
+    pub use crate::compiler::{compile, ExecGraph};
+    pub use crate::emulator::{Emulator, EmulatorConfig};
+    pub use crate::estimator::OpEstimator;
+    pub use crate::executor::{Htae, HtaeConfig, SimReport};
+    pub use crate::graph::{Graph, OpKind};
+    pub use crate::models::ModelKind;
+    pub use crate::strategy::{
+        build_strategy, ParallelConfig, ScheduleConfig, StrategySpec, StrategyTree,
+    };
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Library-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Strategy is structurally invalid (bad partition degrees, device
+    /// mapping mismatch, unknown node path, ...).
+    #[error("invalid strategy: {0}")]
+    InvalidStrategy(String),
+    /// Execution graph compilation failed.
+    #[error("compile error: {0}")]
+    Compile(String),
+    /// Simulation failed (deadlock, inconsistent graph, ...).
+    #[error("simulation error: {0}")]
+    Simulation(String),
+    /// Cluster topology is invalid.
+    #[error("invalid cluster: {0}")]
+    InvalidCluster(String),
+    /// Configuration file / JSON error.
+    #[error("config error: {0}")]
+    Config(String),
+    /// PJRT runtime error (artifact loading / execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand constructor used pervasively in the compiler.
+    pub fn compile(msg: impl Into<String>) -> Self {
+        Error::Compile(msg.into())
+    }
+    /// Shorthand constructor for simulation errors.
+    pub fn sim(msg: impl Into<String>) -> Self {
+        Error::Simulation(msg.into())
+    }
+}

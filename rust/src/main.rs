@@ -1,0 +1,17 @@
+//! `proteus` — the CLI launcher. All logic lives in [`proteus::cli`].
+
+use proteus::cli::{run, Args};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,187 @@
+//! GPT-2 family (117M and 1.5B) transformer language models.
+//!
+//! Architecture follows the GPT-2 reference: token embedding, `n_layer`
+//! pre-norm transformer blocks (LN → QKV → attention → output projection
+//! → residual; LN → 4× MLP → residual), final LayerNorm, and a weight-
+//! untied LM head folded into the vocabulary projection.
+//!
+//! Megatron-style model parallelism falls out of the layer hints: the
+//! QKV projection is head/column-split, the output projection and second
+//! MLP linear are row-split (partial outputs → all-reduce), and the
+//! embedding is vocabulary-split.
+
+use crate::graph::{DType, Graph, GraphBuilder, MpHint};
+
+/// GPT model hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GptConfig {
+    /// Transformer blocks.
+    pub n_layer: usize,
+    /// Model width.
+    pub d_model: usize,
+    /// Attention heads.
+    pub n_head: usize,
+    /// Sequence length.
+    pub seq: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+}
+
+impl GptConfig {
+    /// GPT-2 small: 117M parameters (12 × 768, 12 heads).
+    pub fn gpt2_117m() -> Self {
+        GptConfig {
+            n_layer: 12,
+            d_model: 768,
+            n_head: 12,
+            seq: 1024,
+            vocab: 50257,
+        }
+    }
+
+    /// GPT-2 XL: 1.5B parameters (48 × 1600, 25 heads).
+    pub fn gpt2_1_5b() -> Self {
+        GptConfig {
+            n_layer: 48,
+            d_model: 1600,
+            n_head: 25,
+            seq: 1024,
+            vocab: 50257,
+        }
+    }
+
+    /// A tiny config for fast tests.
+    pub fn tiny() -> Self {
+        GptConfig {
+            n_layer: 2,
+            d_model: 64,
+            n_head: 4,
+            seq: 32,
+            vocab: 1000,
+        }
+    }
+
+    /// Approximate parameter count (12 h² per block + embeddings).
+    pub fn approx_params(&self) -> u64 {
+        let h = self.d_model as u64;
+        let blocks = self.n_layer as u64 * 12 * h * h;
+        let emb = (self.vocab as u64 + self.seq as u64) * h;
+        blocks + emb
+    }
+}
+
+/// Build a GPT-2 style model at `batch` sequences per step.
+pub fn gpt2(cfg: GptConfig, batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("gpt2", batch);
+    let h = cfg.d_model;
+    let tokens = b.input("tokens", &[batch, cfg.seq], DType::I64);
+    // Token + (learned) position embeddings; wpe is folded into wte's
+    // layer as an extra elementwise add of a learned table.
+    let mut x = b.scoped("embed", |b| {
+        let e = b.embedding("wte", tokens, cfg.vocab, h, DType::F32);
+        // Positional embedding is tiny (seq × h); modeled as an
+        // elementwise add so the residual stream shape is preserved.
+        b.elementwise("wpe_add", crate::graph::OpKind::Elementwise, &[e], 1.0, 1.0)
+    });
+    for i in 0..cfg.n_layer {
+        x = b.scoped(&format!("block{i}"), |b| {
+            // Attention sub-block.
+            let ln1 = b.layer_norm("ln1", x);
+            let qkv = b.qkv_proj("qkv", ln1, h, cfg.n_head);
+            let att = b.attention("attn", qkv);
+            let proj = b.out_proj("proj", att, h);
+            let x1 = b.add("res1", x, proj);
+            // MLP sub-block.
+            let ln2 = b.layer_norm("ln2", x1);
+            let fc1 = b.linear("fc1", ln2, h, 4 * h);
+            let gelu = b.relu("gelu", fc1);
+            // Megatron keeps the GeLU sharded along the 4h axis between
+            // the column-parallel fc1 and row-parallel fc2 — no gather.
+            b.hint_last(MpHint::LastDim);
+            let fc2 = b.linear("fc2", gelu, 4 * h, h);
+            b.hint_last(MpHint::RowSplit);
+            b.add("res2", x1, fc2)
+        });
+    }
+    b.scoped("head", |b| {
+        let lnf = b.layer_norm("ln_f", x);
+        // Weight-tied LM head: reuse the embedding table (the GPT-2
+        // convention behind the 117M/1.5B parameter counts).
+        let wte = b
+            .find_tensor("embed.wte.weight")
+            .expect("embedding table exists");
+        let logits = b.linear_shared("lm_head", lnf, h, cfg.vocab, wte);
+        let _ = b.loss("loss", logits);
+    });
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn gpt2_small_params_near_117m() {
+        let g = gpt2(GptConfig::gpt2_117m(), 8);
+        let p = g.num_params() as f64;
+        let err = (p - 117e6).abs() / 117e6;
+        assert!(err < 0.08, "params {p:.3e}");
+    }
+
+    #[test]
+    fn lm_head_shares_the_embedding_table() {
+        let g = gpt2(GptConfig::tiny(), 4);
+        let head = g.layers.iter().find(|l| l.name == "lm_head").unwrap();
+        let wte = g
+            .tensors
+            .iter()
+            .find(|t| t.name == "embed.wte.weight")
+            .unwrap();
+        assert_eq!(head.params[0].tensor, wte.id);
+    }
+
+    #[test]
+    fn block_structure_repeats() {
+        let cfg = GptConfig::tiny();
+        let g = gpt2(cfg, 4);
+        let attn_layers = g
+            .layers
+            .iter()
+            .filter(|l| l.kind == OpKind::Attention)
+            .count();
+        assert_eq!(attn_layers, cfg.n_layer);
+        // Rowsplit hints on proj + fc2 per block.
+        let rowsplit = g
+            .layers
+            .iter()
+            .filter(|l| l.mp_hint == MpHint::RowSplit)
+            .count();
+        assert_eq!(rowsplit, 2 * cfg.n_layer);
+    }
+
+    #[test]
+    fn residual_stream_shape_is_stable() {
+        let cfg = GptConfig::tiny();
+        let g = gpt2(cfg, 4);
+        for l in &g.layers {
+            if l.name == "res2" {
+                let out = &g.tensors[l.outputs[0].tensor];
+                assert_eq!(out.shape, vec![4, cfg.seq, cfg.d_model]);
+            }
+        }
+    }
+
+    #[test]
+    fn flops_dominated_by_matmuls() {
+        let g = gpt2(GptConfig::tiny(), 4);
+        let total = g.total_fwd_flops() as f64;
+        let linear: u64 = g
+            .layers
+            .iter()
+            .filter(|l| l.kind == OpKind::Linear)
+            .map(|l| l.fwd_flops())
+            .sum();
+        assert!(linear as f64 / total > 0.6);
+    }
+}

@@ -1,0 +1,203 @@
+//! Inception-V3 for 299×299 images (torchvision channel configuration).
+//!
+//! The branchy inception blocks exercise the graph IR's multi-consumer /
+//! multi-producer paths: each block fans an activation out to 3-4
+//! parallel branches whose outputs merge through channel concatenation.
+
+use crate::graph::{DType, Graph, GraphBuilder, TensorId};
+
+/// conv → bn → relu, square kernel.
+#[allow(clippy::too_many_arguments)]
+fn cbr(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    c_in: usize,
+    c_out: usize,
+    hw: (usize, usize),
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> (TensorId, (usize, usize)) {
+    let (y, nhw) = b.conv2d(&format!("{name}_conv"), x, c_in, c_out, hw, k, stride, pad);
+    let y = b.batch_norm(&format!("{name}_bn"), y);
+    (b.relu(&format!("{name}_relu"), y), nhw)
+}
+
+/// conv → bn → relu, rectangular kernel (same-size output).
+#[allow(clippy::too_many_arguments)]
+fn cbr_rect(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    c_in: usize,
+    c_out: usize,
+    hw: (usize, usize),
+    k: (usize, usize),
+    pad: (usize, usize),
+) -> TensorId {
+    let (y, _) = b.conv2d_rect(&format!("{name}_conv"), x, c_in, c_out, hw, k, 1, pad);
+    let y = b.batch_norm(&format!("{name}_bn"), y);
+    b.relu(&format!("{name}_relu"), y)
+}
+
+/// InceptionA: 1×1 / 5×5 / double-3×3 / pool branches, same spatial.
+fn inception_a(b: &mut GraphBuilder, name: &str, x: TensorId, c_in: usize, pool_f: usize, hw: (usize, usize)) -> TensorId {
+    b.scoped(name, |b| {
+        let (b1, _) = cbr(b, "b1x1", x, c_in, 64, hw, 1, 1, 0);
+        let (b5, _) = cbr(b, "b5x5_1", x, c_in, 48, hw, 1, 1, 0);
+        let (b5, _) = cbr(b, "b5x5_2", b5, 48, 64, hw, 5, 1, 2);
+        let (d3, _) = cbr(b, "b3x3dbl_1", x, c_in, 64, hw, 1, 1, 0);
+        let (d3, _) = cbr(b, "b3x3dbl_2", d3, 64, 96, hw, 3, 1, 1);
+        let (d3, _) = cbr(b, "b3x3dbl_3", d3, 96, 96, hw, 3, 1, 1);
+        let p = b.pool("pool", x, hw.0 * hw.1);
+        let (bp, _) = cbr(b, "bpool", p, c_in, pool_f, hw, 1, 1, 0);
+        b.concat_channels("cat", &[b1, b5, d3, bp])
+    })
+}
+
+/// InceptionB: grid reduction 35→17.
+fn inception_b(b: &mut GraphBuilder, name: &str, x: TensorId, c_in: usize, hw: (usize, usize)) -> (TensorId, (usize, usize)) {
+    b.scoped(name, |b| {
+        let (b3, nhw) = cbr(b, "b3x3", x, c_in, 384, hw, 3, 2, 0);
+        let (d3, _) = cbr(b, "b3x3dbl_1", x, c_in, 64, hw, 1, 1, 0);
+        let (d3, _) = cbr(b, "b3x3dbl_2", d3, 64, 96, hw, 3, 1, 1);
+        let (d3, _) = cbr(b, "b3x3dbl_3", d3, 96, 96, hw, 3, 2, 0);
+        let p = b.pool("pool", x, nhw.0 * nhw.1);
+        (b.concat_channels("cat", &[b3, d3, p]), nhw)
+    })
+}
+
+/// InceptionC: factorized 7×7 branches at 17×17.
+fn inception_c(b: &mut GraphBuilder, name: &str, x: TensorId, c_in: usize, c7: usize, hw: (usize, usize)) -> TensorId {
+    b.scoped(name, |b| {
+        let (b1, _) = cbr(b, "b1x1", x, c_in, 192, hw, 1, 1, 0);
+        let (s7, _) = cbr(b, "b7x7_1", x, c_in, c7, hw, 1, 1, 0);
+        let s7 = cbr_rect(b, "b7x7_2", s7, c7, c7, hw, (1, 7), (0, 3));
+        let s7 = cbr_rect(b, "b7x7_3", s7, c7, 192, hw, (7, 1), (3, 0));
+        let (d7, _) = cbr(b, "b7x7dbl_1", x, c_in, c7, hw, 1, 1, 0);
+        let d7 = cbr_rect(b, "b7x7dbl_2", d7, c7, c7, hw, (7, 1), (3, 0));
+        let d7 = cbr_rect(b, "b7x7dbl_3", d7, c7, c7, hw, (1, 7), (0, 3));
+        let d7 = cbr_rect(b, "b7x7dbl_4", d7, c7, c7, hw, (7, 1), (3, 0));
+        let d7 = cbr_rect(b, "b7x7dbl_5", d7, c7, 192, hw, (1, 7), (0, 3));
+        let p = b.pool("pool", x, hw.0 * hw.1);
+        let (bp, _) = cbr(b, "bpool", p, c_in, 192, hw, 1, 1, 0);
+        b.concat_channels("cat", &[b1, s7, d7, bp])
+    })
+}
+
+/// InceptionD: grid reduction 17→8.
+fn inception_d(b: &mut GraphBuilder, name: &str, x: TensorId, c_in: usize, hw: (usize, usize)) -> (TensorId, (usize, usize)) {
+    b.scoped(name, |b| {
+        let (b3, _) = cbr(b, "b3x3_1", x, c_in, 192, hw, 1, 1, 0);
+        let (b3, nhw) = cbr(b, "b3x3_2", b3, 192, 320, hw, 3, 2, 0);
+        let (b7, _) = cbr(b, "b7x7_1", x, c_in, 192, hw, 1, 1, 0);
+        let b7 = cbr_rect(b, "b7x7_2", b7, 192, 192, hw, (1, 7), (0, 3));
+        let b7 = cbr_rect(b, "b7x7_3", b7, 192, 192, hw, (7, 1), (3, 0));
+        let (b7, _) = cbr(b, "b7x7_4", b7, 192, 192, hw, 3, 2, 0);
+        let p = b.pool("pool", x, nhw.0 * nhw.1);
+        (b.concat_channels("cat", &[b3, b7, p]), nhw)
+    })
+}
+
+/// InceptionE: expanded 3×3 branches at 8×8.
+fn inception_e(b: &mut GraphBuilder, name: &str, x: TensorId, c_in: usize, hw: (usize, usize)) -> TensorId {
+    b.scoped(name, |b| {
+        let (b1, _) = cbr(b, "b1x1", x, c_in, 320, hw, 1, 1, 0);
+        let (b3, _) = cbr(b, "b3x3_1", x, c_in, 384, hw, 1, 1, 0);
+        let b3a = cbr_rect(b, "b3x3_2a", b3, 384, 384, hw, (1, 3), (0, 1));
+        let b3b = cbr_rect(b, "b3x3_2b", b3, 384, 384, hw, (3, 1), (1, 0));
+        let b3 = b.concat_channels("b3cat", &[b3a, b3b]);
+        let (d3, _) = cbr(b, "b3x3dbl_1", x, c_in, 448, hw, 1, 1, 0);
+        let (d3, _) = cbr(b, "b3x3dbl_2", d3, 448, 384, hw, 3, 1, 1);
+        let d3a = cbr_rect(b, "b3x3dbl_3a", d3, 384, 384, hw, (1, 3), (0, 1));
+        let d3b = cbr_rect(b, "b3x3dbl_3b", d3, 384, 384, hw, (3, 1), (1, 0));
+        let d3 = b.concat_channels("d3cat", &[d3a, d3b]);
+        let p = b.pool("pool", x, hw.0 * hw.1);
+        let (bp, _) = cbr(b, "bpool", p, c_in, 192, hw, 1, 1, 0);
+        b.concat_channels("cat", &[b1, b3, d3, bp])
+    })
+}
+
+/// Build Inception-V3 for 299×299×3 inputs and 1000 classes.
+pub fn inception_v3(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("inception_v3", batch);
+    let x = b.input("images", &[batch, 3, 299 * 299], DType::F32);
+    // Stem: 299→35.
+    let (x, hw) = b.scoped("stem", |b| {
+        let (x, hw) = cbr(b, "conv1", x, 3, 32, (299, 299), 3, 2, 0); // 149
+        let (x, hw) = cbr(b, "conv2", x, 32, 32, hw, 3, 1, 0); // 147
+        let (x, hw) = cbr(b, "conv3", x, 32, 64, hw, 3, 1, 1); // 147
+        let hw2 = ((hw.0 - 1) / 2, (hw.1 - 1) / 2); // maxpool 3/2 → 73
+        let x = b.pool("pool1", x, hw2.0 * hw2.1);
+        let (x, hw3) = cbr(b, "conv4", x, 64, 80, hw2, 1, 1, 0); // 73
+        let (x, hw4) = cbr(b, "conv5", x, 80, 192, hw3, 3, 1, 0); // 71
+        let hw5 = ((hw4.0 - 1) / 2, (hw4.1 - 1) / 2); // maxpool → 35
+        let x = b.pool("pool2", x, hw5.0 * hw5.1);
+        (x, hw5)
+    });
+    assert_eq!(hw, (35, 35));
+    let x = inception_a(&mut b, "mixed5b", x, 192, 32, hw);
+    let x = inception_a(&mut b, "mixed5c", x, 256, 64, hw);
+    let x = inception_a(&mut b, "mixed5d", x, 288, 64, hw);
+    let (x, hw) = inception_b(&mut b, "mixed6a", x, 288, hw);
+    assert_eq!(hw, (17, 17));
+    let x = inception_c(&mut b, "mixed6b", x, 768, 128, hw);
+    let x = inception_c(&mut b, "mixed6c", x, 768, 160, hw);
+    let x = inception_c(&mut b, "mixed6d", x, 768, 160, hw);
+    let x = inception_c(&mut b, "mixed6e", x, 768, 192, hw);
+    let (x, hw) = inception_d(&mut b, "mixed7a", x, 768, hw);
+    assert_eq!(hw, (8, 8));
+    let x = inception_e(&mut b, "mixed7b", x, 1280, hw);
+    let x = inception_e(&mut b, "mixed7c", x, 2048, hw);
+    b.scoped("head", |b| {
+        let pooled = b.pool("avgpool", x, 1);
+        let flat = b.flatten("flatten", pooled);
+        let logits = b.linear("fc", flat, 2048, 1000);
+        let _ = b.loss("loss", logits);
+    });
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn builds_and_validates() {
+        let g = inception_v3(8);
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn conv_count_matches_torchvision() {
+        // torchvision Inception-V3 has 94 conv layers.
+        let g = inception_v3(8);
+        let convs = g.layers.iter().filter(|l| l.kind == OpKind::Conv2d).count();
+        assert_eq!(convs, 94);
+    }
+
+    #[test]
+    fn branches_share_the_block_input() {
+        let g = inception_v3(8);
+        let cons = g.consumers();
+        // The stem output feeds all 4 branches of mixed5b.
+        let stem_out = g
+            .layers
+            .iter()
+            .find(|l| l.path_string() == "stem.pool2")
+            .unwrap()
+            .outputs[0]
+            .tensor;
+        assert!(cons[stem_out].len() >= 4, "{:?}", cons[stem_out]);
+    }
+
+    #[test]
+    fn total_fwd_flops_near_reference() {
+        // Inception-V3 ≈ 5.7 GMACs → ≈ 11.4 GFLOP per image.
+        let g = inception_v3(1);
+        let gf = g.total_fwd_flops() as f64 / 1e9;
+        assert!((gf - 11.4).abs() / 11.4 < 0.25, "got {gf} GFLOP");
+    }
+}

@@ -1,0 +1,161 @@
+//! Model zoo: the six benchmark DNNs of the paper's evaluation
+//! (Table II), built with the layer-level graph IR.
+//!
+//! | Task           | Model        | #Params |
+//! |----------------|--------------|---------|
+//! | Vision         | ResNet-50    | 25.6 M  |
+//! | Vision         | Inception-V3 | 23.8 M  |
+//! | Vision         | VGG-19       | 144 M   |
+//! | NLP            | GPT-2        | 117 M   |
+//! | NLP            | GPT-1.5B     | 1.5 B   |
+//! | Recommendation | DLRM         | 516 M   |
+//!
+//! All models use synthetic data shapes (the paper evaluates with
+//! synthetic datasets; data loading is out of scope). Parameter counts
+//! are asserted against the reference implementations in the test suite.
+
+pub mod dlrm;
+pub mod gpt;
+pub mod inception;
+pub mod resnet;
+pub mod vgg;
+
+pub use dlrm::{dlrm, DlrmConfig};
+pub use gpt::{gpt2, GptConfig};
+pub use inception::inception_v3;
+pub use resnet::resnet50;
+pub use vgg::vgg19;
+
+use crate::graph::Graph;
+
+/// Model selector for CLI / bench drivers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// ResNet-50 on 224×224 images.
+    ResNet50,
+    /// Inception-V3 on 299×299 images.
+    InceptionV3,
+    /// VGG-19 on 224×224 images.
+    Vgg19,
+    /// GPT-2 117M, sequence length 1024.
+    Gpt2,
+    /// GPT-2 XL scale (1.5B), sequence length 1024.
+    Gpt15B,
+    /// DLRM with 26 embedding tables.
+    Dlrm,
+}
+
+impl ModelKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "resnet50" | "resnet" => Some(ModelKind::ResNet50),
+            "inception_v3" | "inception" => Some(ModelKind::InceptionV3),
+            "vgg19" | "vgg" => Some(ModelKind::Vgg19),
+            "gpt2" | "gpt-2" => Some(ModelKind::Gpt2),
+            "gpt1.5b" | "gpt-1.5b" | "gpt15b" => Some(ModelKind::Gpt15B),
+            "dlrm" => Some(ModelKind::Dlrm),
+            _ => None,
+        }
+    }
+
+    /// Display name matching the paper's tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::ResNet50 => "ResNet50",
+            ModelKind::InceptionV3 => "Inception_V3",
+            ModelKind::Vgg19 => "VGG19",
+            ModelKind::Gpt2 => "GPT-2",
+            ModelKind::Gpt15B => "GPT-1.5B",
+            ModelKind::Dlrm => "DLRM",
+        }
+    }
+
+    /// Build the model at a given global batch size.
+    pub fn build(self, batch: usize) -> Graph {
+        match self {
+            ModelKind::ResNet50 => resnet50(batch),
+            ModelKind::InceptionV3 => inception_v3(batch),
+            ModelKind::Vgg19 => vgg19(batch),
+            ModelKind::Gpt2 => gpt2(GptConfig::gpt2_117m(), batch),
+            ModelKind::Gpt15B => gpt2(GptConfig::gpt2_1_5b(), batch),
+            ModelKind::Dlrm => dlrm(DlrmConfig::paper_516m(), batch),
+        }
+    }
+
+    /// All models, in the paper's table order.
+    pub fn all() -> &'static [ModelKind] {
+        &[
+            ModelKind::ResNet50,
+            ModelKind::InceptionV3,
+            ModelKind::Vgg19,
+            ModelKind::Gpt2,
+            ModelKind::Gpt15B,
+            ModelKind::Dlrm,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_names() {
+        assert_eq!(ModelKind::parse("resnet50"), Some(ModelKind::ResNet50));
+        assert_eq!(ModelKind::parse("Inception_V3"), Some(ModelKind::InceptionV3));
+        assert_eq!(ModelKind::parse("VGG19"), Some(ModelKind::Vgg19));
+        assert_eq!(ModelKind::parse("gpt-2"), Some(ModelKind::Gpt2));
+        assert_eq!(ModelKind::parse("GPT-1.5B"), Some(ModelKind::Gpt15B));
+        assert_eq!(ModelKind::parse("dlrm"), Some(ModelKind::Dlrm));
+        assert_eq!(ModelKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_models_build_and_validate_small_batch() {
+        for &m in ModelKind::all() {
+            let g = m.build(8);
+            assert!(g.validate().is_empty(), "{} invalid", m.name());
+            assert!(!g.layers.is_empty());
+        }
+    }
+
+    /// Table II parameter counts (±8% tolerance: our IR models layers at
+    /// coarse granularity and omits some odds and ends).
+    #[test]
+    fn parameter_counts_match_table2() {
+        let checks: &[(ModelKind, f64)] = &[
+            (ModelKind::ResNet50, 25.6e6),
+            (ModelKind::InceptionV3, 23.8e6),
+            (ModelKind::Vgg19, 143.7e6),
+            (ModelKind::Gpt2, 117e6),
+            (ModelKind::Gpt15B, 1.5e9),
+            (ModelKind::Dlrm, 516e6),
+        ];
+        for &(m, want) in checks {
+            let got = m.build(8).num_params() as f64;
+            let err = (got - want).abs() / want;
+            assert!(
+                err < 0.08,
+                "{}: {got:.3e} params, want ≈{want:.3e} ({:.1}% off)",
+                m.name(),
+                err * 100.0
+            );
+        }
+    }
+
+    /// Every model's layer count and FLOPs should scale sanely.
+    #[test]
+    fn flops_scale_with_batch() {
+        for &m in [ModelKind::ResNet50, ModelKind::Gpt2].iter() {
+            let f8 = m.build(8).total_fwd_flops() as f64;
+            let f16 = m.build(16).total_fwd_flops() as f64;
+            let ratio = f16 / f8;
+            assert!(
+                (ratio - 2.0).abs() < 0.05,
+                "{}: flops ratio {ratio}",
+                m.name()
+            );
+        }
+    }
+}

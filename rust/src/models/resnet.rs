@@ -1,0 +1,139 @@
+//! ResNet-50: bottleneck residual network for 224×224 images.
+//!
+//! Standard v1.5 layout: 7×7/2 stem, max-pool, four stages of bottleneck
+//! blocks `[3, 4, 6, 3]` (1×1 reduce → 3×3 → 1×1 expand, projection
+//! shortcut on the first block of each stage, stride-2 in the 3×3 of
+//! stages 2-4), global average pool, 1000-way classifier.
+
+use crate::graph::{DType, Graph, GraphBuilder, TensorId};
+
+struct BlockIo {
+    out: TensorId,
+    hw: (usize, usize),
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    c_in: usize,
+    width: usize,
+    c_out: usize,
+    hw: (usize, usize),
+    stride: usize,
+    project: bool,
+) -> BlockIo {
+    b.push_scope(name);
+    let (y, _) = b.conv2d("conv1", x, c_in, width, hw, 1, 1, 0);
+    let y = b.batch_norm("bn1", y);
+    let y = b.relu("relu1", y);
+    let (y, hw2) = b.conv2d("conv2", y, width, width, hw, 3, stride, 1);
+    let y = b.batch_norm("bn2", y);
+    let y = b.relu("relu2", y);
+    let (y, _) = b.conv2d("conv3", y, width, c_out, hw2, 1, 1, 0);
+    let y = b.batch_norm("bn3", y);
+    let shortcut = if project {
+        let (s, _) = b.conv2d("downsample", x, c_in, c_out, hw, 1, stride, 0);
+        b.batch_norm("bn_ds", s)
+    } else {
+        x
+    };
+    let y = b.add("res", y, shortcut);
+    let out = b.relu("relu_out", y);
+    b.pop_scope();
+    BlockIo { out, hw: hw2 }
+}
+
+fn res_stage(
+    b: &mut GraphBuilder,
+    name: &str,
+    mut x: TensorId,
+    c_in: usize,
+    width: usize,
+    blocks: usize,
+    mut hw: (usize, usize),
+    stride: usize,
+) -> BlockIo {
+    let c_out = width * 4;
+    b.push_scope(name);
+    for i in 0..blocks {
+        let io = bottleneck(
+            b,
+            &format!("block{i}"),
+            x,
+            if i == 0 { c_in } else { c_out },
+            width,
+            c_out,
+            hw,
+            if i == 0 { stride } else { 1 },
+            i == 0,
+        );
+        x = io.out;
+        hw = io.hw;
+    }
+    b.pop_scope();
+    BlockIo { out: x, hw }
+}
+
+/// Build ResNet-50 for 224×224×3 inputs and 1000 classes.
+pub fn resnet50(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("resnet50", batch);
+    let x = b.input("images", &[batch, 3, 224 * 224], DType::F32);
+    let (x, hw) = b.scoped("stem", |b| {
+        let (y, _hw) = b.conv2d("conv1", x, 3, 64, (224, 224), 7, 2, 3);
+        let y = b.batch_norm("bn1", y);
+        let y = b.relu("relu1", y);
+        // 3×3/2 max pool: 112→56.
+        let y = b.pool("maxpool", y, 56 * 56);
+        (y, (56usize, 56usize))
+    });
+    let s1 = res_stage(&mut b, "layer1", x, 64, 64, 3, hw, 1);
+    let s2 = res_stage(&mut b, "layer2", s1.out, 256, 128, 4, s1.hw, 2);
+    let s3 = res_stage(&mut b, "layer3", s2.out, 512, 256, 6, s2.hw, 2);
+    let s4 = res_stage(&mut b, "layer4", s3.out, 1024, 512, 3, s3.hw, 2);
+    assert_eq!(s4.hw, (7, 7));
+    b.scoped("head", |b| {
+        let pooled = b.pool("avgpool", s4.out, 1);
+        let flat = b.flatten("flatten", pooled);
+        let logits = b.linear("fc", flat, 2048, 1000);
+        let _ = b.loss("loss", logits);
+    });
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn conv_count_is_53() {
+        // 1 stem + 3×(3+1) + 4×3+1 + 6×3+1 + 3×3+1 = 53 convs
+        let g = resnet50(8);
+        let convs = g.layers.iter().filter(|l| l.kind == OpKind::Conv2d).count();
+        assert_eq!(convs, 53);
+    }
+
+    #[test]
+    fn spatial_sizes_halve_per_stage() {
+        let g = resnet50(8);
+        // layer4 output is [b, 2048, 49]
+        let l4 = g
+            .layers
+            .iter()
+            .filter(|l| l.path_string().starts_with("layer4"))
+            .last()
+            .unwrap();
+        let out = &g.tensors[l4.outputs[0].tensor];
+        assert_eq!(out.shape, vec![8, 2048, 49]);
+    }
+
+    #[test]
+    fn total_fwd_flops_near_reference() {
+        // ResNet-50 ≈ 4.1 GFLOPs MACs → ~8.2 GFLOP (mul+add) per image.
+        let g = resnet50(1);
+        let gf = g.total_fwd_flops() as f64 / 1e9;
+        assert!((gf - 8.2).abs() / 8.2 < 0.2, "got {gf} GFLOP");
+    }
+}

@@ -1,0 +1,110 @@
+//! VGG-19 (configuration E): 16 conv layers + 3 fully connected.
+//!
+//! The heavy, communication-hungry classifier (fc6/fc7 at 4096 wide,
+//! ≈124M of the ≈144M parameters) is what makes VGG-19 the paper's
+//! canonical comp-comm-overlap stress test (§VIII-D): gradient
+//! all-reduce of the FC weights overlaps the convolutional backward
+//! pass.
+
+use crate::graph::{DType, Graph, GraphBuilder, TensorId};
+
+/// Conv stage: `n` 3×3 same-pad convs at `c_out` channels, then 2×2 pool.
+fn stage(
+    b: &mut GraphBuilder,
+    name: &str,
+    mut x: TensorId,
+    mut c_in: usize,
+    c_out: usize,
+    n: usize,
+    hw: (usize, usize),
+) -> (TensorId, (usize, usize)) {
+    b.push_scope(name);
+    let mut cur_hw = hw;
+    for i in 0..n {
+        let (y, nhw) = b.conv2d(&format!("conv{i}"), x, c_in, c_out, cur_hw, 3, 1, 1);
+        cur_hw = nhw;
+        x = b.batch_norm(&format!("bn{i}"), y);
+        x = b.relu(&format!("relu{i}"), x);
+        c_in = c_out;
+    }
+    let pooled_hw = (cur_hw.0 / 2, cur_hw.1 / 2);
+    let x = b.pool("pool", x, pooled_hw.0 * pooled_hw.1);
+    b.pop_scope();
+    (x, pooled_hw)
+}
+
+/// Build VGG-19 for 224×224×3 inputs and 1000 classes.
+pub fn vgg19(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("vgg19", batch);
+    let x = b.input("images", &[batch, 3, 224 * 224], DType::F32);
+    let (x, hw) = stage(&mut b, "stage1", x, 3, 64, 2, (224, 224));
+    let (x, hw) = stage(&mut b, "stage2", x, 64, 128, 2, hw);
+    let (x, hw) = stage(&mut b, "stage3", x, 128, 256, 4, hw);
+    let (x, hw) = stage(&mut b, "stage4", x, 256, 512, 4, hw);
+    let (x, hw) = stage(&mut b, "stage5", x, 512, 512, 4, hw);
+    assert_eq!(hw, (7, 7));
+    b.scoped("classifier", |b| {
+        let flat = b.flatten("flatten", x);
+        let h = b.linear("fc6", flat, 512 * 7 * 7, 4096);
+        let h = b.relu("relu6", h);
+        let h = b.linear("fc7", h, 4096, 4096);
+        // Megatron-style column/row alternation: under model parallelism
+        // fc7 partitions its reduction dimension (the paper's S2 for
+        // VGG19 "partitions data, output channels and reduction
+        // dimensions" — which is what pushes it outside FlexFlow's SOAP
+        // space, Table IV ✗).
+        b.hint_last(crate::graph::MpHint::RowSplit);
+        let h = b.relu("relu7", h);
+        let logits = b.linear("fc8", h, 4096, 1000);
+        let _ = b.loss("loss", logits);
+    });
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn vgg19_has_16_convs_and_3_fcs() {
+        let g = vgg19(8);
+        let convs = g.layers.iter().filter(|l| l.kind == OpKind::Conv2d).count();
+        let fcs = g.layers.iter().filter(|l| l.kind == OpKind::Linear).count();
+        assert_eq!(convs, 16);
+        assert_eq!(fcs, 3);
+    }
+
+    #[test]
+    fn classifier_holds_most_parameters() {
+        let g = vgg19(8);
+        let fc_params: u64 = g
+            .layers
+            .iter()
+            .filter(|l| l.kind == OpKind::Linear)
+            .flat_map(|l| l.params.iter())
+            .map(|p| g.tensors[p.tensor].numel())
+            .sum();
+        assert!(fc_params as f64 / g.num_params() as f64 > 0.8);
+    }
+
+    #[test]
+    fn convs_hold_most_flops() {
+        let g = vgg19(8);
+        let conv: u64 = g
+            .layers
+            .iter()
+            .filter(|l| l.kind == OpKind::Conv2d)
+            .map(|l| l.fwd_flops())
+            .sum();
+        assert!(conv as f64 / g.total_fwd_flops() as f64 > 0.9);
+    }
+
+    #[test]
+    fn total_fwd_flops_near_reference() {
+        // VGG-19 forward ≈ 19.6 GFLOPs/image (multiply-add counted as 2).
+        let g = vgg19(1);
+        let gf = g.total_fwd_flops() as f64 / 1e9;
+        assert!((gf - 39.0).abs() / 39.0 < 0.15, "got {gf} GFLOP");
+    }
+}

@@ -1,0 +1,113 @@
+//! PJRT runtime: loads the AOT-compiled cost kernel and executes it from
+//! the Rust hot path.
+//!
+//! The artifact is **HLO text** (not a serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the pinned
+//! `xla_extension` 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see `/opt/xla-example/README.md` and
+//! `python/compile/aot.py`).
+//!
+//! Python never runs at simulation time: `make artifacts` lowers the
+//! JAX/Pallas cost model once; this module compiles the text with the
+//! PJRT CPU client at startup and then executes batches of feature rows
+//! with no Python involvement.
+
+use crate::estimator::features::{Row, FEATURES};
+use crate::{Error, Result};
+
+/// Fixed batch size the kernel was lowered with (rows are padded to a
+/// multiple of this). Keep in sync with `python/compile/aot.py`.
+pub const KERNEL_BATCH: usize = 4096;
+
+/// A compiled cost-model executable on the PJRT CPU client.
+pub struct CostKernel {
+    exe: xla::PjRtLoadedExecutable,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+}
+
+impl CostKernel {
+    /// Load and compile `artifacts/costmodel.hlo.txt`.
+    pub fn load(path: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::Runtime(format!("parse {path}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {path}: {e}")))?;
+        Ok(CostKernel { exe, client })
+    }
+
+    /// Evaluate cost rows; returns one cost (ns) per input row.
+    pub fn eval(&self, rows: &[Row]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(KERNEL_BATCH) {
+            let mut flat = vec![0f32; KERNEL_BATCH * FEATURES];
+            for (i, row) in chunk.iter().enumerate() {
+                flat[i * FEATURES..(i + 1) * FEATURES].copy_from_slice(row);
+            }
+            // Padding rows are all-zero: is_comm=0, flops=0, bytes=0,
+            // eff=0 → cost = launch 0 + max(0,0) = 0; harmless.
+            let lit = xla::Literal::vec1(&flat)
+                .reshape(&[KERNEL_BATCH as i64, FEATURES as i64])
+                .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+            // aot.py lowers with return_tuple=True → 1-tuple.
+            let tup = lit
+                .to_tuple1()
+                .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+            let vals = tup
+                .to_vec::<f32>()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+            out.extend_from_slice(&vals[..chunk.len()]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Full PJRT round-trip — requires `make artifacts` to have run.
+    /// Validates the kernel against the Rust analytical mirror on real
+    /// feature rows; this is the cross-layer correctness gate.
+    #[test]
+    fn pjrt_kernel_matches_analytical_mirror() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/costmodel.hlo.txt");
+        if !std::path::Path::new(path).exists() {
+            eprintln!("skipping: {path} missing (run `make artifacts`)");
+            return;
+        }
+        let kernel = CostKernel::load(path).expect("load kernel");
+        // Build rows straight from a compiled model.
+        use crate::cluster::{Cluster, Preset};
+        use crate::estimator::OpEstimator;
+        use crate::models::ModelKind;
+        use crate::strategy::{build_strategy, StrategySpec};
+        let g = ModelKind::Gpt2.build(8);
+        let tree = build_strategy(&g, StrategySpec::hybrid(2, 2, 1, 1)).unwrap();
+        let c = Cluster::preset(Preset::HC2, 1);
+        let eg = crate::compiler::compile(&g, &tree, &c).unwrap();
+        let est = OpEstimator::analytical(&c);
+        let rows = est.feature_matrix(&eg);
+        let expect: Vec<f32> = rows.iter().map(crate::estimator::cost_ns).collect();
+        let got = kernel.eval(&rows).expect("eval");
+        assert_eq!(got.len(), expect.len());
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            let denom = e.abs().max(1.0);
+            assert!(
+                (g - e).abs() / denom < 1e-4,
+                "row {i}: kernel {g} vs mirror {e}"
+            );
+        }
+    }
+}

@@ -1,0 +1,460 @@
+//! High-level strategy constructors: the `DP × MP × PP (n_micro_batch)`
+//! family the paper sweeps in its evaluation (§VIII-C), plus ZeRO and
+//! recomputation toggles.
+//!
+//! These build ordinary [`StrategyTree`]s — everything they do can be
+//! done by hand through the tree API; they encode the common expert
+//! patterns (Megatron-style column/row alternation via each layer's
+//! [`MpHint`], FLOP-balanced contiguous pipeline stages, ZeRO sharding of
+//! replicated parameters).
+
+use crate::cluster::DeviceId;
+use crate::graph::{Graph, MpHint, OpKind, TensorKind};
+use crate::strategy::config::{
+    operand_layout, LayoutPart, ParallelConfig, ScheduleConfig, TensorLayout,
+};
+use crate::strategy::tree::StrategyTree;
+use crate::{Error, Result};
+
+/// A composite strategy specification: degrees of data / model / pipeline
+/// parallelism plus memory-side options.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StrategySpec {
+    /// Data-parallel degree (splits `b`).
+    pub dp: usize,
+    /// Model-parallel degree (splits each layer's [`MpHint`] dim).
+    pub mp: usize,
+    /// Pipeline-parallel degree (contiguous FLOP-balanced stages).
+    pub pp: usize,
+    /// Micro-batches per step (≥ 1; only meaningful with `pp > 1` or for
+    /// gradient accumulation).
+    pub n_micro_batch: usize,
+    /// Bound on in-flight forward micro-batches (0 = 1F1B default: the
+    /// pipeline depth).
+    pub max_ongoing: usize,
+    /// ZeRO: shard replicated parameters (and their optimizer state)
+    /// across their replica groups.
+    pub zero: bool,
+    /// Recompute forward activations during backward.
+    pub recompute: bool,
+    /// Shard embedding tables over all devices instead of replicating
+    /// (DLRM expert strategy).
+    pub shard_embeddings: bool,
+}
+
+impl StrategySpec {
+    /// Pure data parallelism over `n` devices.
+    pub fn data_parallel(n: usize) -> Self {
+        StrategySpec {
+            dp: n,
+            mp: 1,
+            pp: 1,
+            n_micro_batch: 1,
+            max_ongoing: 0,
+            zero: false,
+            recompute: false,
+            shard_embeddings: false,
+        }
+    }
+
+    /// `DP × MP × PP (n_micro)` hybrid.
+    pub fn hybrid(dp: usize, mp: usize, pp: usize, n_micro: usize) -> Self {
+        StrategySpec {
+            dp,
+            mp,
+            pp,
+            n_micro_batch: n_micro,
+            max_ongoing: 0,
+            zero: false,
+            recompute: false,
+            shard_embeddings: false,
+        }
+    }
+
+    /// Enable ZeRO parameter/optimizer sharding.
+    pub fn with_zero(mut self) -> Self {
+        self.zero = true;
+        self
+    }
+
+    /// Enable recomputation.
+    pub fn with_recompute(mut self) -> Self {
+        self.recompute = true;
+        self
+    }
+
+    /// Enable embedding-table sharding.
+    pub fn with_sharded_embeddings(mut self) -> Self {
+        self.shard_embeddings = true;
+        self
+    }
+
+    /// Total devices used.
+    pub fn n_devices(self) -> usize {
+        self.dp * self.mp * self.pp
+    }
+
+    /// Short display form, e.g. `"4x2x2(8)"`.
+    pub fn label(self) -> String {
+        let mut s = format!("{}x{}x{}({})", self.dp, self.mp, self.pp, self.n_micro_batch);
+        if self.zero {
+            s.push_str("+zero");
+        }
+        if self.recompute {
+            s.push_str("+rc");
+        }
+        if self.shard_embeddings {
+            s.push_str("+emb");
+        }
+        s
+    }
+}
+
+/// Build a strategy tree implementing `spec` for `graph`.
+pub fn build_strategy(graph: &Graph, spec: StrategySpec) -> Result<StrategyTree> {
+    if spec.dp == 0 || spec.mp == 0 || spec.pp == 0 || spec.n_micro_batch == 0 {
+        return Err(Error::InvalidStrategy("degrees must be ≥ 1".into()));
+    }
+    let micro = spec.dp * spec.n_micro_batch;
+    if graph.batch_size % micro != 0 {
+        return Err(Error::InvalidStrategy(format!(
+            "batch {} not divisible by dp*n_micro = {micro}",
+            graph.batch_size
+        )));
+    }
+    let mut tree = StrategyTree::from_model(graph);
+
+    // --- Pipeline stages: contiguous, FLOP-balanced. -------------------
+    let stages = balance_stages(graph, spec.pp);
+    if stages.len() < spec.pp {
+        return Err(Error::InvalidStrategy(format!(
+            "model '{}' has too few top-level modules for pp={} (got {} stages)",
+            graph.name,
+            spec.pp,
+            stages.len()
+        )));
+    }
+
+    for (stage_idx, layer_range) in stages.iter().enumerate() {
+        let base = stage_idx * spec.dp * spec.mp;
+        for &layer_id in layer_range {
+            let layer = &graph.layers[layer_id];
+            let mut partition: Vec<(&str, usize)> = Vec::new();
+            if spec.dp > 1 {
+                partition.push(("b", spec.dp));
+            }
+            let mp_dim = match layer.mp_hint {
+                MpHint::ColSplit => Some("o"),
+                MpHint::RowSplit => Some("h"),
+                MpHint::Heads => Some("a"),
+                MpHint::Vocab => Some("v"),
+                // Last generic dim (e.g. the 4h axis of a Megatron GeLU).
+                MpHint::LastDim => layer
+                    .dims
+                    .iter()
+                    .rev()
+                    .find(|(n, _)| n.starts_with('d'))
+                    .map(|(n, _)| n.as_str()),
+                MpHint::Replicate => None,
+            };
+            let mut emb_override = false;
+            if spec.shard_embeddings && layer.kind == OpKind::Embedding {
+                // Shard the table over the whole stage group; do not split
+                // the batch (classic DLRM model-parallel embeddings).
+                let n = spec.dp * spec.mp;
+                if layer.dim_size("v").map(|v| v >= n).unwrap_or(false) {
+                    partition = vec![("v", n)];
+                    emb_override = true;
+                }
+            }
+            if !emb_override && spec.mp > 1 {
+                if let Some(d) = mp_dim {
+                    if layer.dim_size(d).map(|sz| sz >= spec.mp).unwrap_or(false) {
+                        partition.push((d, spec.mp));
+                    }
+                    // Otherwise: replicate over the mp group.
+                }
+            }
+            let devices: Vec<DeviceId> = (base..base + spec.dp * spec.mp).collect();
+            let cfg = ParallelConfig::sharded(&partition, devices);
+            tree.assign_layer(graph, layer_id, cfg)?;
+        }
+    }
+
+    // --- Schedule. ------------------------------------------------------
+    let max_ongoing = if spec.max_ongoing == 0 {
+        if spec.pp > 1 {
+            spec.pp
+        } else {
+            usize::MAX
+        }
+    } else {
+        spec.max_ongoing
+    };
+    tree.set_schedule(
+        "",
+        ScheduleConfig {
+            n_micro_batch: spec.n_micro_batch,
+            max_ongoing_micro_batch: max_ongoing,
+            recompute: spec.recompute,
+        },
+    )?;
+
+    // --- ZeRO memory layouts. --------------------------------------------
+    if spec.zero {
+        apply_zero(graph, &mut tree)?;
+    }
+    Ok(tree)
+}
+
+/// Split layers into `pp` contiguous groups with roughly equal forward
+/// FLOPs. Cuts are made at *top-level module boundaries* (the root's
+/// children in the strategy tree) so that subgraph division finds
+/// disjoint device groups — mirroring how expert pipelines cut at block
+/// boundaries.
+pub fn balance_stages(graph: &Graph, pp: usize) -> Vec<Vec<usize>> {
+    let n = graph.layers.len();
+    if pp <= 1 {
+        return vec![(0..n).collect()];
+    }
+    // Contiguous units: runs of layers sharing the same first path
+    // component (a top-level module); scope-less layers are their own
+    // unit.
+    let mut units: Vec<Vec<usize>> = Vec::new();
+    let mut last_key: Option<&str> = None;
+    for l in &graph.layers {
+        let key = if l.path.len() > 1 {
+            Some(l.path[0].as_str())
+        } else {
+            None
+        };
+        if key.is_some() && key == last_key {
+            units.last_mut().unwrap().push(l.id);
+        } else {
+            units.push(vec![l.id]);
+        }
+        last_key = key;
+    }
+    let unit_flops: Vec<f64> = units
+        .iter()
+        .map(|u| u.iter().map(|&l| graph.layers[l].fwd_flops() as f64).sum())
+        .collect();
+    let total: f64 = unit_flops.iter().sum();
+    let target = total / pp as f64;
+    let mut out: Vec<Vec<usize>> = Vec::with_capacity(pp);
+    let mut cur: Vec<usize> = Vec::new();
+    let mut acc = 0.0;
+    let mut remaining_stages = pp;
+    for (i, u) in units.iter().enumerate() {
+        cur.extend(u.iter().copied());
+        acc += unit_flops[i];
+        let remaining_units = units.len() - i - 1;
+        if remaining_stages > 1 && acc >= target * 0.95 && remaining_units >= remaining_stages - 1
+        {
+            out.push(std::mem::take(&mut cur));
+            acc = 0.0;
+            remaining_stages -= 1;
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Apply ZeRO sharding: every parameter whose implicit layout replicates
+/// parts across a group of ≥ 2 devices gets its stored layout re-sharded
+/// along axis 0 within each replica group.
+fn apply_zero(graph: &Graph, tree: &mut StrategyTree) -> Result<()> {
+    for layer in &graph.layers {
+        let cfg = match tree.comp_of(layer.id) {
+            Some(c) => c.clone(),
+            None => continue,
+        };
+        for p in &layer.params {
+            let t = &graph.tensors[p.tensor];
+            if t.kind != TensorKind::Param {
+                continue;
+            }
+            let implicit = operand_layout(&cfg, p, t, &layer.reduce_dims, false);
+            if let Some(z) = zero_refine(&implicit, &t.shape) {
+                tree.set_mem_layout(p.tensor, z);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Refine a replicated layout by sharding axis 0 of each part across its
+/// replica group. Returns `None` when the layout has no replication, the
+/// replica counts are non-uniform, or axis 0 is too small.
+pub fn zero_refine(layout: &TensorLayout, shape: &[usize]) -> Option<TensorLayout> {
+    let g = layout.parts.first()?.groups.first()?.len();
+    if g < 2 {
+        return None;
+    }
+    for p in &layout.parts {
+        if p.groups.len() != 1 || p.groups[0].len() != g {
+            return None; // partial or non-uniform: leave as-is
+        }
+    }
+    let part0 = shape[0] / layout.axis_degrees[0].max(1);
+    if part0 < g {
+        return None;
+    }
+    let mut axis_degrees = layout.axis_degrees.clone();
+    axis_degrees[0] *= g;
+    let inner: usize = layout.axis_degrees[1..].iter().product();
+    let mut parts = Vec::with_capacity(layout.parts.len() * g);
+    for j in 0..axis_degrees[0] {
+        let (i0, k) = (j / g, j % g);
+        for rest in 0..inner {
+            let old = i0 * inner + rest;
+            parts.push(LayoutPart {
+                groups: vec![vec![layout.parts[old].groups[0][k]]],
+            });
+        }
+    }
+    Some(TensorLayout {
+        axis_degrees,
+        parts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, GraphBuilder};
+    use crate::strategy::propagate::resolve;
+
+    fn mlp(batch: usize, layers: usize) -> Graph {
+        let mut b = GraphBuilder::new("mlp", batch);
+        let mut h = b.input("x", &[batch, 64], DType::F32);
+        for i in 0..layers {
+            h = b.scoped(&format!("blk{i}"), |b| {
+                let h = b.linear("fc1", h, 64, 256);
+                let h = b.relu("act", h);
+                let h = b.linear("fc2", h, 256, 64);
+                b.hint_last(crate::graph::MpHint::RowSplit);
+                h
+            });
+        }
+        let _ = b.loss("loss", h);
+        b.finish()
+    }
+
+    #[test]
+    fn data_parallel_spec() {
+        let g = mlp(16, 2);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(4)).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        assert_eq!(r.stages.len(), 1);
+        for c in &r.comp {
+            assert_eq!(c.degree("b"), 4);
+        }
+    }
+
+    #[test]
+    fn hybrid_dp_mp_uses_hints() {
+        let g = mlp(16, 1);
+        let tree = build_strategy(&g, StrategySpec::hybrid(2, 2, 1, 1)).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        let fc1 = &r.comp[0];
+        assert_eq!(fc1.degree("b"), 2);
+        assert_eq!(fc1.degree("o"), 2);
+        let fc2 = &r.comp[2];
+        assert_eq!(fc2.degree("h"), 2);
+        // relu replicates over the mp group
+        let act = &r.comp[1];
+        assert_eq!(act.degree("b"), 2);
+        assert_eq!(act.n_parts(), 2);
+        assert_eq!(act.replicas(), 2);
+    }
+
+    #[test]
+    fn pipeline_splits_into_disjoint_stages() {
+        let g = mlp(16, 4);
+        let tree = build_strategy(&g, StrategySpec::hybrid(1, 1, 2, 4)).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        assert_eq!(r.stages.len(), 2);
+        assert_eq!(r.stages[0].devices, vec![0]);
+        assert_eq!(r.stages[1].devices, vec![1]);
+        assert_eq!(r.stages[0].schedule.n_micro_batch, 4);
+        // stages are contiguous and cover all layers
+        let all: Vec<usize> = r.stages.iter().flat_map(|s| s.layers.clone()).collect();
+        assert_eq!(all, (0..g.layers.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stage_flops_are_balanced() {
+        let g = mlp(16, 8);
+        let st = balance_stages(&g, 4);
+        assert_eq!(st.len(), 4);
+        let flops: Vec<f64> = st
+            .iter()
+            .map(|ls| ls.iter().map(|&l| g.layers[l].fwd_flops() as f64).sum())
+            .collect();
+        let maxf = flops.iter().cloned().fold(0.0, f64::max);
+        let minf = flops.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(maxf / minf < 2.5, "imbalance {flops:?}");
+    }
+
+    #[test]
+    fn zero_shards_replicated_params() {
+        let g = mlp(16, 1);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(4).with_zero()).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        let w = g.layers[0].params[0].tensor; // fc1 weight [256, 64]
+        assert!(r.mem[w].fully_sharded());
+        assert_eq!(r.mem[w].axis_degrees[0], 4);
+        // Bias [256] also sharded.
+        let bias = g.layers[0].params[1].tensor;
+        assert!(r.mem[bias].fully_sharded());
+    }
+
+    #[test]
+    fn zero_refine_interleaves_mp_and_dp() {
+        // Layout: weight [8, 4] split 2 on axis1 (mp), replicated on 2 (dp).
+        let layout = TensorLayout {
+            axis_degrees: vec![1, 2],
+            parts: vec![
+                LayoutPart { groups: vec![vec![0, 2]] },
+                LayoutPart { groups: vec![vec![1, 3]] },
+            ],
+        };
+        let z = zero_refine(&layout, &[8, 4]).unwrap();
+        assert_eq!(z.axis_degrees, vec![2, 2]);
+        assert_eq!(z.parts.len(), 4);
+        // part (0,0) -> dev 0, (0,1) -> dev 1, (1,0) -> dev 2, (1,1) -> dev 3
+        assert_eq!(z.parts[0].groups, vec![vec![0]]);
+        assert_eq!(z.parts[1].groups, vec![vec![1]]);
+        assert_eq!(z.parts[2].groups, vec![vec![2]]);
+        assert_eq!(z.parts[3].groups, vec![vec![3]]);
+    }
+
+    #[test]
+    fn zero_refine_skips_unshardable() {
+        let layout = TensorLayout::replicated(1, vec![0]);
+        assert!(zero_refine(&layout, &[64]).is_none());
+        // axis too small
+        let layout = TensorLayout::replicated(1, vec![0, 1, 2, 3]);
+        assert!(zero_refine(&layout, &[2]).is_none());
+    }
+
+    #[test]
+    fn spec_validation() {
+        let g = mlp(16, 2);
+        assert!(build_strategy(&g, StrategySpec::hybrid(0, 1, 1, 1)).is_err());
+        // 16 % (3*1) != 0
+        assert!(build_strategy(&g, StrategySpec::data_parallel(3)).is_err());
+    }
+
+    #[test]
+    fn labels_read_well() {
+        assert_eq!(StrategySpec::hybrid(4, 2, 1, 1).label(), "4x2x1(1)");
+        assert_eq!(
+            StrategySpec::data_parallel(8).with_zero().with_recompute().label(),
+            "8x1x1(1)+zero+rc"
+        );
+    }
+}

@@ -1,0 +1,562 @@
+//! Parallel configurations and resolved tensor layouts.
+//!
+//! A **computation config** (paper §IV-B) has two aspects:
+//!
+//! - *partition* 𝒫: how many parts each named parallelizable dimension is
+//!   split into; the operator becomes `|𝒫|` disjoint parts;
+//! - *map*: which device(s) each part lands on — a part mapped to several
+//!   devices is replicated on that group.
+//!
+//! A **memory config** is the same structure applied to a tensor's axes
+//! and defines the tensor's *stored* placement (this is where ZeRO-style
+//! partitioning lives).
+//!
+//! From a layer's computation config and an operand's axis annotations we
+//! derive the operand's **implicit layout** ([`TensorLayout`]): per-axis
+//! split degrees plus, for every tensor part, the device groups holding
+//! full or *partial* copies (partial = a reduction dimension was
+//! partitioned). Strategy transformation (compiler) compares implicit and
+//! explicit layouts and inserts collectives where they disagree.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::DeviceId;
+use crate::graph::{Operand, TensorMeta};
+
+/// Partition + map for an operator (over named dims) or a tensor (over
+/// axis indices encoded as dim names `"0"`, `"1"`, ...).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Ordered `(dim, degree)` pairs; degree ≥ 1. Dims absent here have
+    /// degree 1. Order defines the row-major part index.
+    pub partition: Vec<(String, usize)>,
+    /// Flattened map: `devices.len() = n_parts() * replicas()`; part `i`
+    /// occupies `devices[i*r .. (i+1)*r]`.
+    pub devices: Vec<DeviceId>,
+}
+
+impl ParallelConfig {
+    /// Config that replicates the whole operator/tensor on `devices`.
+    pub fn replicated(devices: Vec<DeviceId>) -> Self {
+        ParallelConfig {
+            partition: Vec::new(),
+            devices,
+        }
+    }
+
+    /// Config splitting the listed dims with the given degrees, mapped
+    /// row-major (last dim fastest) onto `devices`.
+    pub fn sharded(partition: &[(&str, usize)], devices: Vec<DeviceId>) -> Self {
+        ParallelConfig {
+            partition: partition
+                .iter()
+                .map(|(d, k)| (d.to_string(), *k))
+                .collect(),
+            devices,
+        }
+    }
+
+    /// Number of disjoint parts `|𝒫|`.
+    pub fn n_parts(&self) -> usize {
+        self.partition.iter().map(|(_, k)| *k).product()
+    }
+
+    /// Replication factor of each part.
+    pub fn replicas(&self) -> usize {
+        let p = self.n_parts();
+        if p == 0 || self.devices.len() % p != 0 {
+            0 // invalid; caught by validate()
+        } else {
+            self.devices.len() / p
+        }
+    }
+
+    /// Split degree of a named dim (1 if absent).
+    pub fn degree(&self, dim: &str) -> usize {
+        self.partition
+            .iter()
+            .find(|(d, _)| d == dim)
+            .map(|(_, k)| *k)
+            .unwrap_or(1)
+    }
+
+    /// Devices of part `i`.
+    pub fn part_devices(&self, i: usize) -> &[DeviceId] {
+        let r = self.replicas();
+        &self.devices[i * r..(i + 1) * r]
+    }
+
+    /// All devices, deduplicated and sorted.
+    pub fn device_set(&self) -> Vec<DeviceId> {
+        let mut d = self.devices.clone();
+        d.sort_unstable();
+        d.dedup();
+        d
+    }
+
+    /// Structural validation against a layer's dim table.
+    pub fn validate(&self, dims: &[(String, usize)]) -> Result<(), String> {
+        if self.devices.is_empty() {
+            return Err("empty device map".into());
+        }
+        let p = self.n_parts();
+        if p == 0 {
+            return Err("zero-degree partition".into());
+        }
+        if self.devices.len() % p != 0 {
+            return Err(format!(
+                "device map size {} not divisible by |partition| {p}",
+                self.devices.len()
+            ));
+        }
+        for (d, k) in &self.partition {
+            match dims.iter().find(|(n, _)| n == d) {
+                None => return Err(format!("partitioned dim '{d}' not a layer dim")),
+                Some((_, sz)) if *k > *sz => {
+                    return Err(format!("dim '{d}' degree {k} exceeds size {sz}"))
+                }
+                _ => {}
+            }
+            if *k == 0 {
+                return Err(format!("dim '{d}' has degree 0"));
+            }
+        }
+        // No duplicate dims.
+        for (i, (d, _)) in self.partition.iter().enumerate() {
+            if self.partition[..i].iter().any(|(d2, _)| d2 == d) {
+                return Err(format!("dim '{d}' partitioned twice"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Decompose a flat part index into per-dim indices (mixed radix,
+    /// row-major over `partition` order).
+    pub fn part_index(&self, mut flat: usize) -> Vec<usize> {
+        let mut idx = vec![0; self.partition.len()];
+        for (j, (_, k)) in self.partition.iter().enumerate().rev() {
+            idx[j] = flat % k;
+            flat /= k;
+        }
+        idx
+    }
+}
+
+/// Schedule config on a non-leaf strategy-tree node (§IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduleConfig {
+    /// Number of micro-batches the subgraph's batch is split into.
+    pub n_micro_batch: usize,
+    /// Maximum forward micro-batches in flight before their backward
+    /// completes (bounds activation memory).
+    pub max_ongoing_micro_batch: usize,
+    /// Whether to recompute forward activations in the backward pass
+    /// (activation checkpointing).
+    pub recompute: bool,
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        ScheduleConfig {
+            n_micro_batch: 1,
+            max_ongoing_micro_batch: usize::MAX,
+            recompute: false,
+        }
+    }
+}
+
+impl ScheduleConfig {
+    /// Plain single-micro-batch schedule.
+    pub fn simple() -> Self {
+        Self::default()
+    }
+
+    /// Pipeline schedule with `n` micro-batches and 1F1B-style bound.
+    pub fn pipeline(n: usize, max_ongoing: usize) -> Self {
+        ScheduleConfig {
+            n_micro_batch: n,
+            max_ongoing_micro_batch: max_ongoing,
+            recompute: false,
+        }
+    }
+
+    /// Enable recomputation.
+    pub fn with_recompute(mut self, on: bool) -> Self {
+        self.recompute = on;
+        self
+    }
+}
+
+/// Devices holding one tensor part: `groups[k]` is the replica group of
+/// partial-copy `k`. `groups.len() == 1` means the part is complete
+/// (full copies); more means each group holds a partial sum that must be
+/// reduced before use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayoutPart {
+    /// Partial groups (each inner vec: devices holding identical data).
+    pub groups: Vec<Vec<DeviceId>>,
+}
+
+impl LayoutPart {
+    /// True if this part needs no reduction.
+    pub fn complete(&self) -> bool {
+        self.groups.len() == 1
+    }
+
+    /// All devices holding any copy of this part, sorted + deduped.
+    pub fn device_set(&self) -> Vec<DeviceId> {
+        let mut d: Vec<DeviceId> = self.groups.iter().flatten().copied().collect();
+        d.sort_unstable();
+        d.dedup();
+        d
+    }
+}
+
+/// Fully resolved layout of one tensor: per-axis split degrees plus the
+/// placement of every part.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorLayout {
+    /// Split degree per tensor axis.
+    pub axis_degrees: Vec<usize>,
+    /// Row-major parts (`len = prod(axis_degrees)`).
+    pub parts: Vec<LayoutPart>,
+}
+
+impl TensorLayout {
+    /// Layout with the whole tensor replicated on `devices`.
+    pub fn replicated(rank: usize, devices: Vec<DeviceId>) -> Self {
+        TensorLayout {
+            axis_degrees: vec![1; rank],
+            parts: vec![LayoutPart {
+                groups: vec![devices],
+            }],
+        }
+    }
+
+    /// Number of parts.
+    pub fn n_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// True if any part is partial (needs reduction).
+    pub fn has_partial(&self) -> bool {
+        self.parts.iter().any(|p| !p.complete())
+    }
+
+    /// Bytes of one part given the full tensor's byte size.
+    pub fn part_bytes(&self, total_bytes: u64) -> u64 {
+        total_bytes / self.n_parts().max(1) as u64
+    }
+
+    /// All devices participating in this layout.
+    pub fn device_set(&self) -> Vec<DeviceId> {
+        let mut d: Vec<DeviceId> = self
+            .parts
+            .iter()
+            .flat_map(|p| p.device_set())
+            .collect();
+        d.sort_unstable();
+        d.dedup();
+        d
+    }
+
+    /// True when every part has exactly one copy on one device and the
+    /// parts tile the tensor across distinct devices (fully sharded).
+    pub fn fully_sharded(&self) -> bool {
+        self.n_parts() > 1
+            && self
+                .parts
+                .iter()
+                .all(|p| p.complete() && p.groups[0].len() == 1)
+    }
+}
+
+/// Compute the implicit [`TensorLayout`] of an operand under a layer's
+/// computation config.
+///
+/// `reduce_dims` must be the layer's reduction dims; `is_output` controls
+/// whether partitioned reduction dims produce *partial* groups (outputs)
+/// or plain replication over the reduction index (inputs are simply read
+/// by all reduction shards that need them — each reads its own slice
+/// along the reduce axis if the tensor carries it, or the whole tensor
+/// otherwise).
+pub fn operand_layout(
+    cfg: &ParallelConfig,
+    operand: &Operand,
+    tensor: &TensorMeta,
+    reduce_dims: &[String],
+    is_output: bool,
+) -> TensorLayout {
+    let rank = tensor.shape.len();
+    let mut axis_degrees = vec![1usize; rank];
+    for (ax, dim) in operand.axes.iter().enumerate() {
+        if let Some(d) = dim {
+            axis_degrees[ax] = cfg.degree(d);
+        }
+    }
+    let n_tensor_parts: usize = axis_degrees.iter().product();
+    // part key -> (reduce key -> devices)
+    let mut acc: Vec<BTreeMap<usize, Vec<DeviceId>>> =
+        vec![BTreeMap::new(); n_tensor_parts];
+
+    let n_parts = cfg.n_parts();
+    let replicas = cfg.replicas();
+    for flat in 0..n_parts {
+        let idx = cfg.part_index(flat);
+        // Tensor part index: row-major over axes.
+        let mut tpart = 0usize;
+        for ax in 0..rank {
+            tpart *= axis_degrees[ax];
+            if axis_degrees[ax] > 1 {
+                let dim = operand.axes[ax].as_ref().unwrap();
+                let j = cfg
+                    .partition
+                    .iter()
+                    .position(|(d, _)| d == dim)
+                    .expect("degree>1 implies dim in partition");
+                tpart += idx[j];
+            }
+        }
+        // Reduce key: combined index over partitioned reduce dims that are
+        // NOT axes of this tensor (if the tensor carries the reduce dim as
+        // an axis, splitting it splits the tensor, not partial-sums).
+        let mut rkey = 0usize;
+        if is_output {
+            for (j, (d, k)) in cfg.partition.iter().enumerate() {
+                if *k > 1 && reduce_dims.contains(d) && operand.axis_of(d).is_none() {
+                    rkey = rkey * k + idx[j];
+                }
+            }
+        }
+        let devs = acc[tpart].entry(rkey).or_default();
+        for r in 0..replicas {
+            devs.push(cfg.devices[flat * replicas + r]);
+        }
+    }
+
+    let parts = acc
+        .into_iter()
+        .map(|m| {
+            let mut groups: Vec<Vec<DeviceId>> = m
+                .into_values()
+                .map(|mut v| {
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                })
+                .collect();
+            groups.sort();
+            LayoutPart { groups }
+        })
+        .collect();
+    TensorLayout {
+        axis_degrees,
+        parts,
+    }
+}
+
+/// Convert an explicit tensor **memory config** (partition over axis
+/// indices `"0"`, `"1"`, ... ) into a [`TensorLayout`].
+pub fn memory_layout(cfg: &ParallelConfig, tensor: &TensorMeta) -> Result<TensorLayout, String> {
+    let rank = tensor.shape.len();
+    let mut axis_degrees = vec![1usize; rank];
+    for (d, k) in &cfg.partition {
+        let ax: usize = d
+            .parse()
+            .map_err(|_| format!("memory config dim '{d}' is not an axis index"))?;
+        if ax >= rank {
+            return Err(format!("axis {ax} out of range for rank {rank}"));
+        }
+        if *k > tensor.shape[ax] {
+            return Err(format!(
+                "axis {ax} degree {k} exceeds size {}",
+                tensor.shape[ax]
+            ));
+        }
+        axis_degrees[ax] = *k;
+    }
+    let n: usize = axis_degrees.iter().product();
+    if n != cfg.n_parts() {
+        return Err("internal: part count mismatch".into());
+    }
+    let replicas = cfg.replicas();
+    if replicas == 0 {
+        return Err(format!(
+            "device map size {} not divisible by part count {n}",
+            cfg.devices.len()
+        ));
+    }
+    // cfg.partition order may differ from axis order; recompute row-major
+    // part indices over axes.
+    let mut parts = vec![
+        LayoutPart {
+            groups: vec![Vec::new()]
+        };
+        n
+    ];
+    for flat in 0..n {
+        let idx = cfg.part_index(flat);
+        let mut tpart = 0usize;
+        for ax in 0..rank {
+            tpart *= axis_degrees[ax];
+            if axis_degrees[ax] > 1 {
+                let j = cfg
+                    .partition
+                    .iter()
+                    .position(|(d, _)| d.parse::<usize>() == Ok(ax))
+                    .unwrap();
+                tpart += idx[j];
+            }
+        }
+        let mut devs = cfg.part_devices(flat).to_vec();
+        devs.sort_unstable();
+        parts[tpart].groups[0] = devs;
+    }
+    Ok(TensorLayout {
+        axis_degrees,
+        parts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, TensorKind};
+
+    fn tensor(shape: &[usize]) -> TensorMeta {
+        TensorMeta {
+            id: 0,
+            name: "t".into(),
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+            kind: TensorKind::Activation,
+            producer: None,
+        }
+    }
+
+    #[test]
+    fn config_basics() {
+        let c = ParallelConfig::sharded(&[("b", 2), ("h", 4)], (0..8).collect());
+        assert_eq!(c.n_parts(), 8);
+        assert_eq!(c.replicas(), 1);
+        assert_eq!(c.degree("b"), 2);
+        assert_eq!(c.degree("o"), 1);
+        assert_eq!(c.part_index(5), vec![1, 1]); // b=1, h=1
+    }
+
+    #[test]
+    fn replication_from_excess_devices() {
+        let c = ParallelConfig::sharded(&[("b", 2)], vec![0, 1, 2, 3]);
+        assert_eq!(c.replicas(), 2);
+        assert_eq!(c.part_devices(0), &[0, 1]);
+        assert_eq!(c.part_devices(1), &[2, 3]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let dims = vec![("b".to_string(), 8), ("h".to_string(), 4)];
+        assert!(ParallelConfig::sharded(&[("b", 3)], vec![0, 1, 2])
+            .validate(&dims)
+            .is_ok());
+        // unknown dim
+        assert!(ParallelConfig::sharded(&[("z", 2)], vec![0, 1])
+            .validate(&dims)
+            .is_err());
+        // degree exceeds size
+        assert!(ParallelConfig::sharded(&[("h", 8)], (0..8).collect())
+            .validate(&dims)
+            .is_err());
+        // devices not divisible
+        assert!(ParallelConfig::sharded(&[("b", 2)], vec![0, 1, 2])
+            .validate(&dims)
+            .is_err());
+        // duplicate dim
+        assert!(ParallelConfig::sharded(&[("b", 2), ("b", 2)], vec![0, 1, 2, 3])
+            .validate(&dims)
+            .is_err());
+    }
+
+    /// Paper Fig. 1a: linear sharded b×h on 4 GPUs. Input (b,h) splits
+    /// 2×2; weight (o,h) splits h only, each part on 2 devices; output
+    /// (b,o) has 2 parts, each with 2 partial copies.
+    #[test]
+    fn fig1a_linear_shard_b_h() {
+        let cfg = ParallelConfig::sharded(&[("b", 2), ("h", 2)], vec![0, 1, 2, 3]);
+        let reduce = vec!["h".to_string()];
+
+        let input = tensor(&[8, 16]);
+        let in_op = Operand::new(0, &["b", "h"]);
+        let lin = operand_layout(&cfg, &in_op, &input, &reduce, false);
+        assert_eq!(lin.axis_degrees, vec![2, 2]);
+        assert!(lin.fully_sharded());
+
+        let weight = tensor(&[32, 16]);
+        let w_op = Operand::new(0, &["o", "h"]);
+        let lw = operand_layout(&cfg, &w_op, &weight, &reduce, false);
+        assert_eq!(lw.axis_degrees, vec![1, 2]);
+        // each h-part replicated on the two b-shards
+        assert_eq!(lw.parts[0].groups, vec![vec![0, 2]]);
+        assert_eq!(lw.parts[1].groups, vec![vec![1, 3]]);
+
+        let output = tensor(&[8, 32]);
+        let o_op = Operand::new(0, &["b", "o"]);
+        let lo = operand_layout(&cfg, &o_op, &output, &reduce, true);
+        assert_eq!(lo.axis_degrees, vec![2, 1]);
+        assert_eq!(lo.parts.len(), 2);
+        // b-part 0 has partial copies on devices 0 and 1 (h=0,1)
+        assert_eq!(lo.parts[0].groups, vec![vec![0], vec![1]]);
+        assert!(!lo.parts[0].complete());
+    }
+
+    #[test]
+    fn data_parallel_weight_is_replicated() {
+        let cfg = ParallelConfig::sharded(&[("b", 4)], vec![0, 1, 2, 3]);
+        let weight = tensor(&[32, 16]);
+        let w_op = Operand::new(0, &["o", "h"]);
+        let lw = operand_layout(&cfg, &w_op, &weight, &["h".to_string()], false);
+        assert_eq!(lw.n_parts(), 1);
+        assert_eq!(lw.parts[0].groups, vec![vec![0, 1, 2, 3]]);
+        assert!(lw.parts[0].complete());
+    }
+
+    #[test]
+    fn output_not_partial_when_reduce_dim_unsplit() {
+        let cfg = ParallelConfig::sharded(&[("o", 2)], vec![0, 1]);
+        let output = tensor(&[8, 32]);
+        let o_op = Operand::new(0, &["b", "o"]);
+        let lo = operand_layout(&cfg, &o_op, &output, &["h".to_string()], true);
+        assert_eq!(lo.axis_degrees, vec![1, 2]);
+        assert!(lo.parts.iter().all(|p| p.complete()));
+        assert!(lo.fully_sharded());
+    }
+
+    #[test]
+    fn memory_layout_zero_style() {
+        // ZeRO: partition axis 0 of a (32,16) weight across 4 devices.
+        let w = tensor(&[32, 16]);
+        let cfg = ParallelConfig::sharded(&[("0", 4)], vec![0, 1, 2, 3]);
+        let l = memory_layout(&cfg, &w).unwrap();
+        assert_eq!(l.axis_degrees, vec![4, 1]);
+        assert!(l.fully_sharded());
+        assert_eq!(l.part_bytes(w.bytes()), w.bytes() / 4);
+    }
+
+    #[test]
+    fn memory_layout_rejects_bad_axis() {
+        let w = tensor(&[32, 16]);
+        let cfg = ParallelConfig::sharded(&[("5", 2)], vec![0, 1]);
+        assert!(memory_layout(&cfg, &w).is_err());
+        let cfg = ParallelConfig::sharded(&[("x", 2)], vec![0, 1]);
+        assert!(memory_layout(&cfg, &w).is_err());
+    }
+
+    #[test]
+    fn schedule_defaults() {
+        let s = ScheduleConfig::default();
+        assert_eq!(s.n_micro_batch, 1);
+        assert!(!s.recompute);
+        let p = ScheduleConfig::pipeline(8, 2).with_recompute(true);
+        assert_eq!(p.n_micro_batch, 8);
+        assert!(p.recompute);
+    }
+}

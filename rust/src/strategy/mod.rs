@@ -1,0 +1,16 @@
+//! Strategy trees: the paper's unified representation of parallelization
+//! strategies (§IV), plus propagation/resolution (§VII) and high-level
+//! `DP × MP × PP` strategy builders.
+
+pub mod builders;
+pub mod config;
+pub mod paper;
+pub mod propagate;
+pub mod tree;
+
+pub use builders::{build_strategy, StrategySpec};
+pub use config::{
+    memory_layout, operand_layout, LayoutPart, ParallelConfig, ScheduleConfig, TensorLayout,
+};
+pub use propagate::{resolve, ResolvedStrategy, Stage};
+pub use tree::{NodeId, NodeKind, StrategyTree, TreeNode};

@@ -1,0 +1,511 @@
+//! Strategy propagation and resolution (paper §VII "Strategy
+//! Propagation" + §V-A subgraph division).
+//!
+//! Users specify configs on *critical* nodes only; resolution fills in
+//! the rest:
+//!
+//! 1. **Top-down**: schedule configs inherit from the parent node unless
+//!    explicitly set.
+//! 2. **Dataflow**: a leaf without a computation config inherits from the
+//!    producer of its first input (restricted to the dims it declares),
+//!    in topological order.
+//! 3. **Memory**: a tensor without an explicit memory layout gets its
+//!    producer's implicit output layout (activations) or its consumer's
+//!    implicit operand layout (parameters / graph inputs).
+//!
+//! Resolution then performs **subgraph division**: walking from the root,
+//! a node is divided when its children's device groups are pairwise
+//! disjoint (the paper's example: root R splits into S1/S2 because they
+//! share no devices). Each undivided subtree becomes a pipeline *stage*
+//! with an effective schedule config.
+
+use crate::cluster::DeviceId;
+use crate::graph::{Graph, LayerId, TensorId};
+use crate::strategy::config::{
+    memory_layout, operand_layout, ParallelConfig, ScheduleConfig, TensorLayout,
+};
+use crate::strategy::tree::{NodeId, NodeKind, StrategyTree};
+use crate::{Error, Result};
+
+/// One pipeline stage: an undivided subtree of the strategy tree.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Dense stage id in model order.
+    pub id: usize,
+    /// Subtree root in the strategy tree.
+    pub root: NodeId,
+    /// Layers in this stage (model order).
+    pub layers: Vec<LayerId>,
+    /// Union of the stage's layers' devices.
+    pub devices: Vec<DeviceId>,
+    /// Effective schedule config.
+    pub schedule: ScheduleConfig,
+}
+
+/// A fully resolved strategy: every layer has a computation config, every
+/// tensor a layout, every layer a stage.
+#[derive(Debug, Clone)]
+pub struct ResolvedStrategy {
+    /// Per-layer computation configs.
+    pub comp: Vec<ParallelConfig>,
+    /// Per-tensor *stored* layouts (explicit if given, implicit
+    /// otherwise). Activations produced partial keep their partial
+    /// layout — consumers trigger strategy transformation.
+    pub mem: Vec<TensorLayout>,
+    /// Pipeline stages in model order.
+    pub stages: Vec<Stage>,
+    /// Stage of each layer.
+    pub stage_of_layer: Vec<usize>,
+}
+
+impl ResolvedStrategy {
+    /// Total number of distinct devices used.
+    pub fn device_set(&self) -> Vec<DeviceId> {
+        let mut d: Vec<DeviceId> = self
+            .comp
+            .iter()
+            .flat_map(|c| c.devices.iter().copied())
+            .collect();
+        d.sort_unstable();
+        d.dedup();
+        d
+    }
+}
+
+/// Resolve a strategy tree against its model.
+pub fn resolve(graph: &Graph, tree: &StrategyTree) -> Result<ResolvedStrategy> {
+    let comp = resolve_comp(graph, tree)?;
+    let mem = resolve_mem(graph, tree, &comp)?;
+    let stages = divide_stages(graph, tree, &comp)?;
+    let mut stage_of_layer = vec![usize::MAX; graph.layers.len()];
+    for st in &stages {
+        for &l in &st.layers {
+            stage_of_layer[l] = st.id;
+        }
+    }
+    if let Some(l) = stage_of_layer.iter().position(|&s| s == usize::MAX) {
+        return Err(Error::InvalidStrategy(format!(
+            "layer '{}' not covered by any stage",
+            graph.layers[l].name
+        )));
+    }
+    Ok(ResolvedStrategy {
+        comp,
+        mem,
+        stages,
+        stage_of_layer,
+    })
+}
+
+/// Step 2: dataflow propagation of computation configs.
+fn resolve_comp(graph: &Graph, tree: &StrategyTree) -> Result<Vec<ParallelConfig>> {
+    let mut comp: Vec<Option<ParallelConfig>> = graph
+        .layers
+        .iter()
+        .map(|l| tree.comp_of(l.id).cloned())
+        .collect();
+    for layer in &graph.layers {
+        if comp[layer.id].is_some() {
+            continue;
+        }
+        // Inherit from the first input's producer.
+        let inherited = layer
+            .inputs
+            .iter()
+            .filter_map(|inp| graph.tensors[inp.tensor].producer)
+            .find_map(|p| comp[p].clone());
+        let cfg = match inherited {
+            Some(src) => restrict_config(&src, &layer.dims),
+            // No producer config anywhere upstream: single device 0.
+            None => ParallelConfig::replicated(vec![0]),
+        };
+        cfg.validate(&layer.dims).map_err(|e| {
+            Error::InvalidStrategy(format!(
+                "propagated config invalid for layer '{}': {e}",
+                layer.name
+            ))
+        })?;
+        comp[layer.id] = Some(cfg);
+    }
+    Ok(comp.into_iter().map(|c| c.unwrap()).collect())
+}
+
+/// Restrict a producer's config to the dims a consumer layer declares;
+/// dropped dims turn into replication over the same devices.
+fn restrict_config(src: &ParallelConfig, dims: &[(String, usize)]) -> ParallelConfig {
+    let kept: Vec<(String, usize)> = src
+        .partition
+        .iter()
+        .filter(|(d, k)| {
+            dims.iter()
+                .any(|(n, sz)| n == d && *sz >= *k)
+        })
+        .cloned()
+        .collect();
+    ParallelConfig {
+        partition: kept,
+        devices: src.devices.clone(),
+    }
+}
+
+/// Step 3: memory layouts.
+fn resolve_mem(
+    graph: &Graph,
+    tree: &StrategyTree,
+    comp: &[ParallelConfig],
+) -> Result<Vec<TensorLayout>> {
+    let mut mem: Vec<Option<TensorLayout>> = vec![None; graph.tensors.len()];
+    // Explicit layouts win.
+    for (&t, layout) in &tree.mem {
+        if t >= graph.tensors.len() {
+            return Err(Error::InvalidStrategy(format!(
+                "memory layout for unknown tensor {t}"
+            )));
+        }
+        mem[t] = Some(layout.clone());
+    }
+    // Producer-implicit layouts for produced activations.
+    for layer in &graph.layers {
+        let cfg = &comp[layer.id];
+        for out in &layer.outputs {
+            if mem[out.tensor].is_none() {
+                mem[out.tensor] = Some(operand_layout(
+                    cfg,
+                    out,
+                    &graph.tensors[out.tensor],
+                    &layer.reduce_dims,
+                    true,
+                ));
+            }
+        }
+    }
+    // Consumer-implicit layouts for params and graph inputs.
+    for layer in &graph.layers {
+        let cfg = &comp[layer.id];
+        for op in layer.params.iter().chain(layer.inputs.iter()) {
+            if mem[op.tensor].is_none() {
+                mem[op.tensor] = Some(operand_layout(
+                    cfg,
+                    op,
+                    &graph.tensors[op.tensor],
+                    &layer.reduce_dims,
+                    false,
+                ));
+            }
+        }
+    }
+    Ok(mem
+        .into_iter()
+        .enumerate()
+        .map(|(t, m)| {
+            // Unreferenced tensors (shouldn't exist) live on device 0.
+            m.unwrap_or_else(|| {
+                TensorLayout::replicated(graph.tensors[t].shape.len(), vec![0])
+            })
+        })
+        .collect())
+}
+
+/// Subgraph division (paper §V-A): BFS from root, divide a node when its
+/// children's device groups are pairwise disjoint.
+fn divide_stages(
+    graph: &Graph,
+    tree: &StrategyTree,
+    comp: &[ParallelConfig],
+) -> Result<Vec<Stage>> {
+    // Device group of every tree node (bottom-up union).
+    let mut devgroup: Vec<Vec<DeviceId>> = vec![Vec::new(); tree.nodes.len()];
+    // Children precede parents nowhere in general; compute recursively.
+    fn group(
+        n: NodeId,
+        tree: &StrategyTree,
+        comp: &[ParallelConfig],
+        memo: &mut Vec<Vec<DeviceId>>,
+    ) -> Vec<DeviceId> {
+        if !memo[n].is_empty() {
+            return memo[n].clone();
+        }
+        let g = match tree.nodes[n].kind {
+            NodeKind::Leaf { layer } => comp[layer].device_set(),
+            NodeKind::Inner => {
+                let mut g: Vec<DeviceId> = tree.nodes[n]
+                    .children
+                    .iter()
+                    .flat_map(|&c| group(c, tree, comp, memo))
+                    .collect();
+                g.sort_unstable();
+                g.dedup();
+                g
+            }
+        };
+        memo[n] = g.clone();
+        g
+    }
+    group(0, tree, comp, &mut devgroup);
+
+    // Walk down: a node divides when its children split into more than
+    // one connected component under device-group overlap (the paper's
+    // example: R divides because S1 and S2 share no devices). Components
+    // of several children become one stage together; single-child
+    // components recurse.
+    let mut stages: Vec<Stage> = Vec::new();
+    let mut queue = vec![0usize];
+    while let Some(n) = queue.pop() {
+        let node = &tree.nodes[n];
+        if node.is_leaf() || node.children.len() <= 1 {
+            let next = node.children.first().copied();
+            match next {
+                Some(c) if !node.is_leaf() => queue.push(c),
+                _ => stages.push(make_stage(n, tree, &devgroup)),
+            }
+            continue;
+        }
+        let comps = overlap_components(&node.children, &devgroup);
+        if comps.len() <= 1 {
+            stages.push(make_stage(n, tree, &devgroup));
+            continue;
+        }
+        for comp in comps {
+            if comp.len() == 1 {
+                queue.push(comp[0]);
+            } else {
+                // Multi-child component: one stage spanning them.
+                let mut layers: Vec<usize> = comp
+                    .iter()
+                    .flat_map(|&c| tree.layers_under(c))
+                    .collect();
+                layers.sort_unstable();
+                let mut devices: Vec<DeviceId> = comp
+                    .iter()
+                    .flat_map(|&c| devgroup[c].iter().copied())
+                    .collect();
+                devices.sort_unstable();
+                devices.dedup();
+                stages.push(Stage {
+                    id: 0,
+                    root: comp[0],
+                    devices,
+                    schedule: tree.effective_schedule(comp[0]),
+                    layers,
+                });
+            }
+        }
+    }
+    let mut stages: Vec<Stage> = stages
+        .into_iter()
+        .filter(|s| !s.layers.is_empty())
+        .collect();
+    stages.sort_by_key(|s| s.layers[0]);
+    for (i, s) in stages.iter_mut().enumerate() {
+        s.id = i;
+    }
+    // Sanity: stages must partition the layer set.
+    let covered: usize = stages.iter().map(|s| s.layers.len()).sum();
+    if covered != graph.layers.len() {
+        return Err(Error::InvalidStrategy(format!(
+            "stages cover {covered} layers, model has {}",
+            graph.layers.len()
+        )));
+    }
+    Ok(stages)
+}
+
+fn make_stage(root: NodeId, tree: &StrategyTree, devgroup: &[Vec<DeviceId>]) -> Stage {
+    Stage {
+        id: 0,
+        root,
+        devices: devgroup[root].clone(),
+        schedule: tree.effective_schedule(root),
+        layers: tree.layers_under(root),
+    }
+}
+
+/// Connected components of `children` under device-group overlap,
+/// preserving child order within and across components.
+fn overlap_components(children: &[NodeId], devgroup: &[Vec<DeviceId>]) -> Vec<Vec<NodeId>> {
+    let n = children.len();
+    let overlaps = |a: &[DeviceId], b: &[DeviceId]| -> bool {
+        // Both sorted; merge scan.
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => return true,
+            }
+        }
+        false
+    };
+    // Union-find over children indices.
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut [usize], x: usize) -> usize {
+        if parent[x] != x {
+            let r = find(parent, parent[x]);
+            parent[x] = r;
+        }
+        parent[x]
+    }
+    for i in 0..n {
+        for j in i + 1..n {
+            if overlaps(&devgroup[children[i]], &devgroup[children[j]]) {
+                let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+                if ri != rj {
+                    parent[ri] = rj;
+                }
+            }
+        }
+    }
+    let mut comps: Vec<Vec<NodeId>> = Vec::new();
+    let mut comp_of_root: std::collections::BTreeMap<usize, usize> = Default::default();
+    for i in 0..n {
+        let r = find(&mut parent, i);
+        let idx = *comp_of_root.entry(r).or_insert_with(|| {
+            comps.push(Vec::new());
+            comps.len() - 1
+        });
+        comps[idx].push(children[i]);
+    }
+    comps
+}
+
+/// Convenience for tests/builders: explicit ZeRO layout for a parameter —
+/// axis 0 sharded across `group` (which must divide the axis size).
+pub fn zero_shard_layout(
+    graph: &Graph,
+    tensor: TensorId,
+    group: &[DeviceId],
+) -> Result<TensorLayout> {
+    let t = &graph.tensors[tensor];
+    let n = group.len();
+    if n < 2 || t.shape[0] < n {
+        return Err(Error::InvalidStrategy(format!(
+            "tensor '{}' axis 0 ({}) cannot shard over {n} devices",
+            t.name, t.shape[0]
+        )));
+    }
+    let cfg = ParallelConfig::sharded(&[("0", n)], group.to_vec());
+    memory_layout(&cfg, t).map_err(Error::InvalidStrategy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, GraphBuilder};
+
+    fn model() -> Graph {
+        let mut b = GraphBuilder::new("m", 8);
+        let x = b.input("x", &[8, 32], DType::F32);
+        let h = b.scoped("s1", |b| b.linear("fc1", x, 32, 64));
+        let h = b.scoped("s2", |b| {
+            let h = b.linear("fc2", h, 64, 64);
+            b.relu("act", h)
+        });
+        let _ = b.loss("loss", h);
+        b.finish()
+    }
+
+    #[test]
+    fn unassigned_layers_inherit_from_producers() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        // Only assign fc1; everything downstream inherits dp=4.
+        t.assign_under(&g, "s1", &[("b", 4)], &[0, 1, 2, 3]).unwrap();
+        let r = resolve(&g, &t).unwrap();
+        for l in &g.layers {
+            assert_eq!(r.comp[l.id].degree("b"), 4, "layer {}", l.name);
+            assert_eq!(r.comp[l.id].devices, vec![0, 1, 2, 3]);
+        }
+        // Single stage: all layers share devices.
+        assert_eq!(r.stages.len(), 1);
+        assert_eq!(r.stages[0].devices, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn no_configs_at_all_defaults_to_device_zero() {
+        let g = model();
+        let t = StrategyTree::from_model(&g);
+        let r = resolve(&g, &t).unwrap();
+        for c in &r.comp {
+            assert_eq!(c.devices, vec![0]);
+            assert_eq!(c.n_parts(), 1);
+        }
+        assert_eq!(r.stages.len(), 1);
+    }
+
+    #[test]
+    fn disjoint_device_groups_become_stages() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        t.assign_under(&g, "s1", &[("b", 2)], &[0, 1]).unwrap();
+        t.assign_under(&g, "s2", &[("b", 2)], &[2, 3]).unwrap();
+        t.assign_under(&g, "loss", &[("b", 2)], &[2, 3]).unwrap();
+        let r = resolve(&g, &t).unwrap();
+        assert_eq!(r.stages.len(), 2);
+        assert_eq!(r.stages[0].devices, vec![0, 1]);
+        assert_eq!(r.stages[1].devices, vec![2, 3]);
+        assert_eq!(r.stage_of_layer, vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn overlapping_groups_stay_one_stage() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        t.assign_under(&g, "s1", &[("b", 2)], &[0, 1]).unwrap();
+        t.assign_under(&g, "s2", &[("b", 2)], &[1, 2]).unwrap();
+        t.assign_under(&g, "loss", &[("b", 2)], &[1, 2]).unwrap();
+        let r = resolve(&g, &t).unwrap();
+        assert_eq!(r.stages.len(), 1);
+    }
+
+    #[test]
+    fn stage_schedule_comes_from_subtree() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        t.assign_under(&g, "s1", &[("b", 2)], &[0, 1]).unwrap();
+        t.assign_under(&g, "s2", &[("b", 2)], &[2, 3]).unwrap();
+        t.assign_under(&g, "loss", &[("b", 2)], &[2, 3]).unwrap();
+        t.set_schedule("", ScheduleConfig::pipeline(4, 2)).unwrap();
+        let r = resolve(&g, &t).unwrap();
+        for st in &r.stages {
+            assert_eq!(st.schedule.n_micro_batch, 4);
+        }
+    }
+
+    #[test]
+    fn mem_layout_defaults_to_producer_implicit() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        t.assign_data_parallel(&g, 4).unwrap();
+        let r = resolve(&g, &t).unwrap();
+        // fc1 output: b split 4 ways.
+        let out = g.layers[0].outputs[0].tensor;
+        assert_eq!(r.mem[out].axis_degrees, vec![4, 1]);
+        assert!(r.mem[out].fully_sharded());
+        // fc1 weight: replicated on all 4.
+        let w = g.layers[0].params[0].tensor;
+        assert_eq!(r.mem[w].n_parts(), 1);
+        assert_eq!(r.mem[w].parts[0].groups[0], vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn explicit_zero_layout_wins() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        t.assign_data_parallel(&g, 4).unwrap();
+        let w = g.layers[0].params[0].tensor;
+        let zl = zero_shard_layout(&g, w, &[0, 1, 2, 3]).unwrap();
+        t.set_mem_layout(w, zl);
+        let r = resolve(&g, &t).unwrap();
+        assert!(r.mem[w].fully_sharded());
+        assert_eq!(r.mem[w].axis_degrees[0], 4);
+    }
+
+    #[test]
+    fn zero_layout_rejects_small_axis() {
+        let g = model();
+        // bias of fc1 has 64 elements; group of 128 devices is too big.
+        let bias = g.layers[0].params[1].tensor;
+        let group: Vec<usize> = (0..128).collect();
+        assert!(zero_shard_layout(&g, bias, &group).is_err());
+    }
+}

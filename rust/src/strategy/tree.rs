@@ -1,0 +1,360 @@
+//! The strategy tree (paper §IV): a unified, hierarchical representation
+//! of parallelization strategies.
+//!
+//! The tree mirrors the model's module structure (built from layer paths,
+//! §VII "Construction of Strategy Tree"):
+//!
+//! - **leaf nodes** model one DNN layer and carry its *computation
+//!   config* plus *memory configs* for its tensors;
+//! - **non-leaf nodes** model subgraphs and carry *schedule configs*
+//!   (micro-batching, recomputation).
+//!
+//! Changing the strategy means editing tree configs — never the model.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Graph, LayerId, TensorId};
+use crate::strategy::config::{ParallelConfig, ScheduleConfig, TensorLayout};
+use crate::{Error, Result};
+
+/// Dense strategy-tree node id; 0 is always the root.
+pub type NodeId = usize;
+
+/// Node payload.
+#[derive(Debug, Clone)]
+pub enum NodeKind {
+    /// Subgraph node.
+    Inner,
+    /// Layer node.
+    Leaf {
+        /// The graph layer this leaf models.
+        layer: LayerId,
+    },
+}
+
+/// One strategy-tree node.
+#[derive(Debug, Clone)]
+pub struct TreeNode {
+    /// Dense id.
+    pub id: NodeId,
+    /// Path component name (root has `""`).
+    pub name: String,
+    /// Parent id (`None` for root).
+    pub parent: Option<NodeId>,
+    /// Children ids in model order.
+    pub children: Vec<NodeId>,
+    /// Leaf/inner payload.
+    pub kind: NodeKind,
+    /// Schedule config (non-leaf; `None` = inherit from parent).
+    pub schedule: Option<ScheduleConfig>,
+    /// Computation config (leaf; `None` = inferred by propagation).
+    pub comp: Option<ParallelConfig>,
+}
+
+impl TreeNode {
+    /// True for leaf (layer) nodes.
+    pub fn is_leaf(&self) -> bool {
+        matches!(self.kind, NodeKind::Leaf { .. })
+    }
+}
+
+/// The strategy tree for one model.
+#[derive(Debug, Clone)]
+pub struct StrategyTree {
+    /// All nodes; index = id; `nodes[0]` is the root.
+    pub nodes: Vec<TreeNode>,
+    /// Leaf node of each layer.
+    pub leaf_of_layer: Vec<NodeId>,
+    /// Explicit memory layouts (ZeRO-style placements), keyed by tensor.
+    pub mem: BTreeMap<TensorId, TensorLayout>,
+}
+
+impl StrategyTree {
+    /// Build the tree skeleton from a model's layer paths. The module
+    /// structure is preserved: every distinct path prefix becomes a
+    /// non-leaf node, every layer a leaf.
+    pub fn from_model(graph: &Graph) -> Self {
+        let mut nodes = vec![TreeNode {
+            id: 0,
+            name: String::new(),
+            parent: None,
+            children: Vec::new(),
+            kind: NodeKind::Inner,
+            schedule: Some(ScheduleConfig::default()),
+            comp: None,
+        }];
+        let mut leaf_of_layer = vec![usize::MAX; graph.layers.len()];
+        for layer in &graph.layers {
+            let mut cur = 0usize;
+            // Inner nodes for every prefix.
+            for comp in &layer.path[..layer.path.len() - 1] {
+                let found = nodes[cur]
+                    .children
+                    .iter()
+                    .copied()
+                    .find(|&c| nodes[c].name == *comp && !nodes[c].is_leaf());
+                cur = match found {
+                    Some(c) => c,
+                    None => {
+                        let id = nodes.len();
+                        nodes.push(TreeNode {
+                            id,
+                            name: comp.clone(),
+                            parent: Some(cur),
+                            children: Vec::new(),
+                            kind: NodeKind::Inner,
+                            schedule: None,
+                            comp: None,
+                        });
+                        nodes[cur].children.push(id);
+                        id
+                    }
+                };
+            }
+            let id = nodes.len();
+            nodes.push(TreeNode {
+                id,
+                name: layer.path.last().cloned().unwrap_or_default(),
+                parent: Some(cur),
+                children: Vec::new(),
+                kind: NodeKind::Leaf { layer: layer.id },
+                schedule: None,
+                comp: None,
+            });
+            nodes[cur].children.push(id);
+            leaf_of_layer[layer.id] = id;
+        }
+        StrategyTree {
+            nodes,
+            leaf_of_layer,
+            mem: BTreeMap::new(),
+        }
+    }
+
+    /// Look up a node by dotted path (`""` = root).
+    pub fn node_by_path(&self, path: &str) -> Option<NodeId> {
+        if path.is_empty() {
+            return Some(0);
+        }
+        let mut cur = 0usize;
+        for comp in path.split('.') {
+            cur = self.nodes[cur]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c].name == comp)?;
+        }
+        Some(cur)
+    }
+
+    /// All layer ids under a node (in model order).
+    pub fn layers_under(&self, node: NodeId) -> Vec<LayerId> {
+        let mut out = Vec::new();
+        let mut stack = vec![node];
+        while let Some(n) = stack.pop() {
+            match self.nodes[n].kind {
+                NodeKind::Leaf { layer } => out.push(layer),
+                NodeKind::Inner => {
+                    for &c in self.nodes[n].children.iter().rev() {
+                        stack.push(c);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Assign a computation config to one layer's leaf node. Validates
+    /// against the layer's dim table.
+    pub fn assign_layer(&mut self, graph: &Graph, layer: LayerId, cfg: ParallelConfig) -> Result<()> {
+        let l = graph
+            .layers
+            .get(layer)
+            .ok_or_else(|| Error::InvalidStrategy(format!("unknown layer {layer}")))?;
+        cfg.validate(&l.dims)
+            .map_err(|e| Error::InvalidStrategy(format!("layer '{}': {e}", l.name)))?;
+        let leaf = self.leaf_of_layer[layer];
+        self.nodes[leaf].comp = Some(cfg);
+        Ok(())
+    }
+
+    /// Assign a partition to every layer under `path`, restricted per
+    /// layer to the dims it declares (missing dims are dropped; a dropped
+    /// dim's device axis becomes replication). This is the bulk-
+    /// assignment convenience used by strategy builders.
+    pub fn assign_under(
+        &mut self,
+        graph: &Graph,
+        path: &str,
+        partition: &[(&str, usize)],
+        devices: &[usize],
+    ) -> Result<()> {
+        let node = self
+            .node_by_path(path)
+            .ok_or_else(|| Error::InvalidStrategy(format!("no node at path '{path}'")))?;
+        for layer in self.layers_under(node) {
+            let l = &graph.layers[layer];
+            let kept: Vec<(&str, usize)> = partition
+                .iter()
+                .filter(|(d, k)| l.dim_size(d).map(|sz| sz >= *k).unwrap_or(false))
+                .map(|(d, k)| (*d, *k))
+                .collect();
+            let cfg = ParallelConfig::sharded(&kept, devices.to_vec());
+            self.assign_layer(graph, layer, cfg)?;
+        }
+        Ok(())
+    }
+
+    /// Convenience: pure data parallelism over devices `0..n` for every
+    /// layer (the paper's S1 baseline strategy).
+    pub fn assign_data_parallel(&mut self, graph: &Graph, n: usize) -> Result<()> {
+        if graph.batch_size % n != 0 {
+            return Err(Error::InvalidStrategy(format!(
+                "batch {} not divisible by dp degree {n}",
+                graph.batch_size
+            )));
+        }
+        let devices: Vec<usize> = (0..n).collect();
+        self.assign_under(graph, "", &[("b", n)], &devices)
+    }
+
+    /// Set the schedule config of a non-leaf node.
+    pub fn set_schedule(&mut self, path: &str, cfg: ScheduleConfig) -> Result<()> {
+        let node = self
+            .node_by_path(path)
+            .ok_or_else(|| Error::InvalidStrategy(format!("no node at path '{path}'")))?;
+        if self.nodes[node].is_leaf() {
+            return Err(Error::InvalidStrategy(format!(
+                "'{path}' is a leaf; schedule configs go on subgraph nodes"
+            )));
+        }
+        self.nodes[node].schedule = Some(cfg);
+        Ok(())
+    }
+
+    /// Set an explicit memory layout (e.g. ZeRO sharding) for a tensor.
+    pub fn set_mem_layout(&mut self, tensor: TensorId, layout: TensorLayout) {
+        self.mem.insert(tensor, layout);
+    }
+
+    /// The computation config currently assigned to a layer, if any.
+    pub fn comp_of(&self, layer: LayerId) -> Option<&ParallelConfig> {
+        self.nodes[self.leaf_of_layer[layer]].comp.as_ref()
+    }
+
+    /// Effective schedule config of a node: nearest ancestor-or-self with
+    /// an explicit config (the root always has one).
+    pub fn effective_schedule(&self, mut node: NodeId) -> ScheduleConfig {
+        loop {
+            if let Some(s) = self.nodes[node].schedule {
+                return s;
+            }
+            match self.nodes[node].parent {
+                Some(p) => node = p,
+                None => return ScheduleConfig::default(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, GraphBuilder};
+
+    fn model() -> Graph {
+        let mut b = GraphBuilder::new("m", 8);
+        let x = b.input("x", &[8, 32], DType::F32);
+        let h = b.scoped("enc", |b| {
+            let h = b.scoped("0", |b| b.linear("fc", x, 32, 32));
+            b.scoped("1", |b| b.linear("fc", h, 32, 32))
+        });
+        let _ = b.loss("loss", h);
+        b.finish()
+    }
+
+    #[test]
+    fn tree_mirrors_module_structure() {
+        let g = model();
+        let t = StrategyTree::from_model(&g);
+        // root, enc, enc.0, enc.0.fc, enc.1, enc.1.fc, loss
+        assert_eq!(t.nodes.len(), 7);
+        let enc = t.node_by_path("enc").unwrap();
+        assert_eq!(t.nodes[enc].children.len(), 2);
+        assert!(t.node_by_path("enc.0.fc").is_some());
+        assert!(t.node_by_path("enc.9").is_none());
+        assert_eq!(t.layers_under(enc), vec![0, 1]);
+        assert_eq!(t.layers_under(0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn leaf_lookup_matches_layers() {
+        let g = model();
+        let t = StrategyTree::from_model(&g);
+        for l in &g.layers {
+            let leaf = t.leaf_of_layer[l.id];
+            assert!(t.nodes[leaf].is_leaf());
+            assert_eq!(t.nodes[leaf].name, l.name);
+        }
+    }
+
+    #[test]
+    fn assign_data_parallel_covers_all_layers() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        t.assign_data_parallel(&g, 4).unwrap();
+        for l in &g.layers {
+            let cfg = t.comp_of(l.id).unwrap();
+            assert_eq!(cfg.degree("b"), 4);
+            assert_eq!(cfg.devices.len(), 4);
+        }
+    }
+
+    #[test]
+    fn assign_data_parallel_rejects_indivisible_batch() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        assert!(t.assign_data_parallel(&g, 3).is_err());
+    }
+
+    #[test]
+    fn assign_under_drops_missing_dims() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        // 'o' exists on linears but not on loss.
+        t.assign_under(&g, "", &[("b", 2), ("o", 2)], &[0, 1, 2, 3])
+            .unwrap();
+        assert_eq!(t.comp_of(0).unwrap().n_parts(), 4);
+        let loss_cfg = t.comp_of(2).unwrap();
+        assert_eq!(loss_cfg.degree("o"), 1);
+        assert_eq!(loss_cfg.n_parts(), 2); // b only
+        assert_eq!(loss_cfg.replicas(), 2);
+    }
+
+    #[test]
+    fn schedule_inheritance() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        t.set_schedule("enc", ScheduleConfig::pipeline(4, 2)).unwrap();
+        let leaf = t.node_by_path("enc.0.fc").unwrap();
+        assert_eq!(t.effective_schedule(leaf).n_micro_batch, 4);
+        let loss_leaf = t.node_by_path("loss").unwrap();
+        assert_eq!(t.effective_schedule(loss_leaf).n_micro_batch, 1);
+    }
+
+    #[test]
+    fn schedule_rejected_on_leaf() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        assert!(t.set_schedule("enc.0.fc", ScheduleConfig::simple()).is_err());
+    }
+
+    #[test]
+    fn assign_validates_against_dims() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        let bad = ParallelConfig::sharded(&[("nope", 2)], vec![0, 1]);
+        assert!(t.assign_layer(&g, 0, bad).is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! In-tree property-based testing framework.
+//!
+//! The offline vendored crate set has no `proptest`/`quickcheck`, so this
+//! module provides a small deterministic substitute used by the test
+//! suites: a seeded generator handle ([`Gen`]) plus a [`check`] driver
+//! that runs a property across many generated cases and reports the
+//! failing seed for exact reproduction.
+//!
+//! There is no shrinking; instead every case is tagged with `(base_seed,
+//! case_index)` so a failure message pinpoints one deterministic input —
+//! rerun with [`check_seeded`] to debug.
+
+use crate::util::rng::Rng;
+
+/// Generator handle passed to properties. Wraps the deterministic PRNG
+/// with convenience constructors for common shapes of test data.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    /// Construct from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// Uniform u64 in `[lo, hi]`.
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.rng.next_below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// A power of two in `[1, max]` (max need not be a power of two).
+    pub fn pow2_upto(&mut self, max: usize) -> usize {
+        debug_assert!(max >= 1);
+        let maxexp = (usize::BITS - 1 - max.leading_zeros()) as usize;
+        1usize << self.usize_in(0, maxexp)
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Pick an element of a non-empty slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.pick(xs)
+    }
+
+    /// Pick an index into a collection of length `len`.
+    pub fn index(&mut self, len: usize) -> usize {
+        debug_assert!(len > 0);
+        self.usize_in(0, len - 1)
+    }
+
+    /// Generate a vector of `n` items.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Shuffle a slice in place.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        self.rng.shuffle(xs)
+    }
+
+    /// Access the underlying PRNG for ad-hoc draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` against `cases` generated inputs derived from `base_seed`.
+/// Panics with the failing `(base_seed, case)` pair on the first failure.
+pub fn check_with_seed(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    mut prop: impl FnMut(&mut Gen) -> PropResult,
+) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (reproduce with seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run a property with the default seed and case count (256).
+pub fn check(name: &str, prop: impl FnMut(&mut Gen) -> PropResult) {
+    check_with_seed(name, 0xC0FFEE, 256, prop)
+}
+
+/// Re-run a single failing case by seed (debug helper).
+pub fn check_seeded(name: &str, seed: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert two floats are within relative tolerance.
+pub fn assert_close(a: f64, b: f64, rel: f64) -> PropResult {
+    let denom = b.abs().max(1e-30);
+    if ((a - b) / denom).abs() <= rel {
+        Ok(())
+    } else {
+        Err(format!("{a} vs {b} exceeds rel tol {rel}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("x+0=x", |g| {
+            let x = g.u64_in(0, 1_000_000);
+            if x + 0 == x {
+                Ok(())
+            } else {
+                Err("math is broken".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failures() {
+        check("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn pow2_upto_is_a_power_of_two_and_bounded() {
+        check("pow2", |g| {
+            let max = g.usize_in(1, 1000);
+            let p = g.pow2_upto(max);
+            if p.is_power_of_two() && p <= max.next_power_of_two() {
+                Ok(())
+            } else {
+                Err(format!("p={p} max={max}"))
+            }
+        });
+    }
+
+    #[test]
+    fn u64_in_respects_bounds() {
+        check("u64_in", |g| {
+            let lo = g.u64_in(0, 100);
+            let hi = lo + g.u64_in(0, 100);
+            let x = g.u64_in(lo, hi);
+            if x >= lo && x <= hi {
+                Ok(())
+            } else {
+                Err(format!("{x} outside [{lo},{hi}]"))
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_behaves() {
+        assert!(assert_close(1.0, 1.0005, 1e-3).is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-3).is_err());
+    }
+}

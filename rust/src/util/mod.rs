@@ -1,0 +1,103 @@
+//! Small self-contained utilities: JSON, PRNG, time units, topological
+//! sort, and formatting helpers.
+//!
+//! The build is fully offline (vendored crates only), so a handful of
+//! things that would normally come from crates.io — a JSON codec, a
+//! deterministic PRNG, a table formatter — live here instead.
+
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod time;
+pub mod topo;
+
+/// Integer division rounding up.
+#[inline]
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Product of a shape's dimensions (number of elements).
+#[inline]
+pub fn numel(shape: &[usize]) -> u64 {
+    shape.iter().map(|&d| d as u64).product()
+}
+
+/// Mean of a slice of f64 (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Relative error |a-b| / |b| in percent; `b` is the reference value.
+pub fn rel_err_pct(pred: f64, truth: f64) -> f64 {
+    if truth == 0.0 {
+        if pred == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        ((pred - truth) / truth).abs() * 100.0
+    }
+}
+
+/// Format a byte count in a human-readable way (MiB/GiB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{} B", bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_exact_and_inexact() {
+        assert_eq!(div_ceil(8, 4), 2);
+        assert_eq!(div_ceil(9, 4), 3);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(0, 4), 0);
+    }
+
+    #[test]
+    fn numel_basic() {
+        assert_eq!(numel(&[2, 3, 4]), 24);
+        assert_eq!(numel(&[]), 1);
+    }
+
+    #[test]
+    fn rel_err_pct_signs_and_zero() {
+        assert!((rel_err_pct(110.0, 100.0) - 10.0).abs() < 1e-12);
+        assert!((rel_err_pct(90.0, 100.0) - 10.0).abs() < 1e-12);
+        assert_eq!(rel_err_pct(0.0, 0.0), 0.0);
+        assert!(rel_err_pct(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn mean_empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,91 @@
+//! Simulation time units.
+//!
+//! All simulator-internal times are integer **picoseconds** (`Ps`) so that
+//! discrete-event ordering is exact and reproducible; floats appear only
+//! at the user-facing edges (milliseconds, samples/second).
+
+/// Simulated time in integer picoseconds.
+pub type Ps = u64;
+
+/// One nanosecond in picoseconds.
+pub const NS: Ps = 1_000;
+/// One microsecond in picoseconds.
+pub const US: Ps = 1_000_000;
+/// One millisecond in picoseconds.
+pub const MS: Ps = 1_000_000_000;
+/// One second in picoseconds.
+pub const SEC: Ps = 1_000_000_000_000;
+
+/// Convert picoseconds to fractional milliseconds.
+#[inline]
+pub fn ps_to_ms(ps: Ps) -> f64 {
+    ps as f64 / MS as f64
+}
+
+/// Convert fractional seconds to picoseconds (saturating at u64::MAX).
+#[inline]
+pub fn secs_to_ps(s: f64) -> Ps {
+    if !s.is_finite() || s <= 0.0 {
+        return 0;
+    }
+    let ps = s * SEC as f64;
+    if ps >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        ps as Ps
+    }
+}
+
+/// Convert picoseconds to fractional seconds.
+#[inline]
+pub fn ps_to_secs(ps: Ps) -> f64 {
+    ps as f64 / SEC as f64
+}
+
+/// Scale a duration by a float factor (e.g. the γ overlap penalty),
+/// rounding to nearest and saturating.
+#[inline]
+pub fn scale(ps: Ps, factor: f64) -> Ps {
+    debug_assert!(factor >= 0.0);
+    let v = ps as f64 * factor;
+    if v >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        v.round() as Ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_secs() {
+        let ps = secs_to_ps(1.5);
+        assert_eq!(ps, 1_500_000_000_000);
+        assert!((ps_to_secs(ps) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ms_conversion() {
+        assert!((ps_to_ms(2 * MS) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_rounds() {
+        assert_eq!(scale(10, 1.26), 13); // 12.6 → 13
+        assert_eq!(scale(10, 0.0), 0);
+    }
+
+    #[test]
+    fn scale_saturates() {
+        assert_eq!(scale(u64::MAX, 2.0), u64::MAX);
+    }
+
+    #[test]
+    fn secs_to_ps_handles_garbage() {
+        assert_eq!(secs_to_ps(-1.0), 0);
+        assert_eq!(secs_to_ps(f64::NAN), 0);
+        assert_eq!(secs_to_ps(f64::INFINITY), 0);
+    }
+}

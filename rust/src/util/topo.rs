@@ -1,0 +1,107 @@
+//! Topological ordering over index-based DAGs.
+//!
+//! The compiler and both simulators need topological traversals of
+//! execution graphs where nodes are dense `usize` ids.
+
+/// Kahn's algorithm over an adjacency list. `succs[i]` lists the
+/// successors of node `i`. Returns `None` if the graph has a cycle.
+pub fn topo_sort(n: usize, succs: &[Vec<usize>]) -> Option<Vec<usize>> {
+    debug_assert_eq!(succs.len(), n);
+    let mut indeg = vec![0usize; n];
+    for ss in succs {
+        for &s in ss {
+            indeg[s] += 1;
+        }
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    // Process in ascending id order for determinism: `queue` is kept as a
+    // simple FIFO which preserves insertion (id) order well enough because
+    // ids are assigned in construction order.
+    let mut head = 0;
+    let mut order = Vec::with_capacity(n);
+    while head < queue.len() {
+        let u = queue[head];
+        head += 1;
+        order.push(u);
+        for &v in &succs[u] {
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                queue.push(v);
+            }
+        }
+    }
+    if order.len() == n {
+        Some(order)
+    } else {
+        None
+    }
+}
+
+/// Check whether `order` is a valid topological order of the DAG.
+pub fn is_topo_order(order: &[usize], succs: &[Vec<usize>]) -> bool {
+    let n = succs.len();
+    if order.len() != n {
+        return false;
+    }
+    let mut pos = vec![usize::MAX; n];
+    for (i, &u) in order.iter().enumerate() {
+        if u >= n || pos[u] != usize::MAX {
+            return false;
+        }
+        pos[u] = i;
+    }
+    for (u, ss) in succs.iter().enumerate() {
+        for &v in ss {
+            if pos[u] >= pos[v] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorts_a_chain() {
+        let succs = vec![vec![1], vec![2], vec![]];
+        let order = topo_sort(3, &succs).unwrap();
+        assert_eq!(order, vec![0, 1, 2]);
+        assert!(is_topo_order(&order, &succs));
+    }
+
+    #[test]
+    fn sorts_a_diamond() {
+        // 0 -> {1,2} -> 3
+        let succs = vec![vec![1, 2], vec![3], vec![3], vec![]];
+        let order = topo_sort(4, &succs).unwrap();
+        assert!(is_topo_order(&order, &succs));
+    }
+
+    #[test]
+    fn detects_cycle() {
+        let succs = vec![vec![1], vec![0]];
+        assert!(topo_sort(2, &succs).is_none());
+    }
+
+    #[test]
+    fn self_loop_is_a_cycle() {
+        let succs = vec![vec![0]];
+        assert!(topo_sort(1, &succs).is_none());
+    }
+
+    #[test]
+    fn empty_graph() {
+        assert_eq!(topo_sort(0, &[]).unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn validator_rejects_bad_orders() {
+        let succs = vec![vec![1], vec![]];
+        assert!(!is_topo_order(&[1, 0], &succs));
+        assert!(!is_topo_order(&[0], &succs));
+        assert!(!is_topo_order(&[0, 0], &succs));
+    }
+}

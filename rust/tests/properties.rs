@@ -1,0 +1,253 @@
+//! Property-based tests over randomly generated models, strategies, and
+//! clusters, using the in-tree `proteus::testing` framework.
+//!
+//! Invariants exercised:
+//! - random strategy trees always compile to DAGs whose alloc/free
+//!   events balance per device;
+//! - FLOP conservation across arbitrary shardings;
+//! - simulation determinism and cost monotonicity;
+//! - layout transformation correctness properties.
+
+use proteus::prelude::*;
+use proteus::strategy::{operand_layout, ParallelConfig};
+use proteus::testing::{check, Gen, PropResult};
+
+/// Generate a random layered MLP-ish model.
+fn gen_model(g: &mut Gen) -> Graph {
+    let batch = 8 * g.pow2_upto(8); // 8..64
+    let mut b = proteus::graph::GraphBuilder::new("rand", batch);
+    let mut width = 8 * g.pow2_upto(16); // 8..128
+    let mut h = b.input("x", &[batch, width], proteus::graph::DType::F32);
+    let blocks = g.usize_in(1, 4);
+    for i in 0..blocks {
+        let next = 8 * g.pow2_upto(16);
+        h = b.scoped(&format!("blk{i}"), |b| {
+            let mut y = b.linear("fc", h, width, next);
+            if g.chance(0.5) {
+                y = b.relu("act", y);
+            }
+            if g.chance(0.3) {
+                y = b.layer_norm("ln", y);
+            }
+            y
+        });
+        width = next;
+    }
+    let _ = b.loss("loss", h);
+    b.finish()
+}
+
+/// Generate a random valid strategy spec for `model` with ≤ 8 devices.
+fn gen_spec(g: &mut Gen, batch: usize) -> StrategySpec {
+    let mp = *g.pick(&[1usize, 2]);
+    // dp must divide batch and dp×mp must fit one 8-GPU node.
+    let dp_candidates: Vec<usize> = [1usize, 2, 4, 8]
+        .iter()
+        .copied()
+        .filter(|&d| batch % d == 0 && d * mp <= 8)
+        .collect();
+    let dp = *g.pick(&dp_candidates);
+    let mut spec = StrategySpec::hybrid(dp, mp, 1, 1);
+    if g.chance(0.3) {
+        spec = spec.with_zero();
+    }
+    if g.chance(0.3) {
+        spec = spec.with_recompute();
+    }
+    spec
+}
+
+#[test]
+fn random_strategies_compile_to_balanced_dags() {
+    let cluster = Cluster::preset(Preset::HC2, 2);
+    check("compile-dag-balance", |g| {
+        let model = gen_model(g);
+        let spec = gen_spec(g, model.batch_size);
+        let tree = build_strategy(&model, spec).map_err(|e| e.to_string())?;
+        let eg = compile(&model, &tree, &cluster).map_err(|e| e.to_string())?;
+        if !eg.is_dag() {
+            return Err("not a DAG".into());
+        }
+        // Alloc/free balance per device.
+        let mut bal = vec![0i64; eg.n_devices];
+        for t in &eg.tasks {
+            for &(d, b) in &t.allocs {
+                bal[d] += b as i64;
+            }
+            for &(d, b) in &t.frees {
+                bal[d] -= b as i64;
+            }
+        }
+        if bal.iter().any(|&x| x != 0) {
+            return Err(format!("alloc/free imbalance: {bal:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn flops_are_conserved_across_shardings() {
+    let cluster = Cluster::preset(Preset::HC2, 1);
+    check("flop-conservation", |g| {
+        let model = gen_model(g);
+        let single = compile(&model, &StrategyTree::from_model(&model), &cluster)
+            .map_err(|e| e.to_string())?;
+        let spec = gen_spec(g, model.batch_size);
+        let tree = build_strategy(&model, spec).map_err(|e| e.to_string())?;
+        let sharded = compile(&model, &tree, &cluster).map_err(|e| e.to_string())?;
+        let non_opt = |eg: &ExecGraph| -> f64 {
+            eg.tasks
+                .iter()
+                .filter(|t| t.phase != proteus::compiler::Phase::Optim)
+                .filter(|t| t.phase != proteus::compiler::Phase::Recomp)
+                .filter_map(|t| match &t.kind {
+                    proteus::compiler::TaskKind::Comp(c) => Some(c.flops),
+                    _ => None,
+                })
+                .sum()
+        };
+        // No FLOPs may be lost by sharding; model-parallel replication
+        // of elementwise/norm layers may legitimately duplicate up to an
+        // mp factor of the (small) non-matmul work.
+        let (s, base) = (non_opt(&sharded), non_opt(&single));
+        if s < base * 0.999 {
+            return Err(format!("flops lost: {s} < {base}"));
+        }
+        if s > base * (1.0 + 0.25 * spec.mp as f64) {
+            return Err(format!("flops exploded: {s} vs {base} (mp={})", spec.mp));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulation_is_deterministic_and_positive() {
+    let cluster = Cluster::preset(Preset::HC1, 1);
+    let est = OpEstimator::analytical(&cluster);
+    check("sim-deterministic", |g| {
+        let model = gen_model(g);
+        let spec = gen_spec(g, model.batch_size);
+        let tree = build_strategy(&model, spec).map_err(|e| e.to_string())?;
+        let eg = compile(&model, &tree, &cluster).map_err(|e| e.to_string())?;
+        let htae = Htae::new(&cluster, &est);
+        let a = htae.simulate(&eg).map_err(|e| e.to_string())?;
+        let b = htae.simulate(&eg).map_err(|e| e.to_string())?;
+        if a.step_ms != b.step_ms {
+            return Err(format!("nondeterministic: {} vs {}", a.step_ms, b.step_ms));
+        }
+        if !(a.step_ms > 0.0) {
+            return Err("non-positive step".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn emulator_agrees_with_htae_within_bounds_on_random_models() {
+    let cluster = Cluster::preset(Preset::HC2, 1);
+    let est = OpEstimator::analytical(&cluster);
+    proteus::testing::check_with_seed("emu-htae-agreement", 0xFEED, 24, |g| {
+        let model = gen_model(g);
+        let spec = gen_spec(g, model.batch_size);
+        let tree = build_strategy(&model, spec).map_err(|e| e.to_string())?;
+        let eg = compile(&model, &tree, &cluster).map_err(|e| e.to_string())?;
+        let pred = Htae::new(&cluster, &est)
+            .simulate(&eg)
+            .map_err(|e| e.to_string())?;
+        let truth = Emulator::new(&cluster, &est)
+            .simulate(&eg)
+            .map_err(|e| e.to_string())?;
+        let err = (pred.step_ms - truth.step_ms).abs() / truth.step_ms;
+        if err > 0.30 {
+            return Err(format!(
+                "HTAE diverges {:.0}% on random model (spec {})",
+                err * 100.0,
+                spec.label()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn operand_layout_covers_all_partition_devices() {
+    check("layout-coverage", |g| {
+        // Random dims for a 2-D tensor layer.
+        let o = 2 * g.usize_in(1, 16);
+        let h = 2 * g.usize_in(1, 16);
+        let b = 8 * g.usize_in(1, 8);
+        let dims = vec![
+            ("b".to_string(), b),
+            ("o".to_string(), o),
+            ("h".to_string(), h),
+        ];
+        let mut partition: Vec<(&str, usize)> = Vec::new();
+        for (d, sz) in [("b", b), ("o", o), ("h", h)] {
+            if g.chance(0.5) {
+                let k = *g.pick(&[1usize, 2, 4]);
+                if sz >= k {
+                    partition.push((d, k));
+                }
+            }
+        }
+        let n_parts: usize = partition.iter().map(|(_, k)| k).product();
+        let replicas = g.usize_in(1, 2);
+        let devices: Vec<usize> = (0..n_parts * replicas).collect();
+        let cfg = ParallelConfig::sharded(&partition, devices.clone());
+        cfg.validate(&dims).map_err(|e| e)?;
+        let tensor = proteus::graph::TensorMeta {
+            id: 0,
+            name: "w".into(),
+            shape: vec![o, h],
+            dtype: proteus::graph::DType::F32,
+            kind: proteus::graph::TensorKind::Param,
+            producer: None,
+        };
+        let op = proteus::graph::Operand::new(0, &["o", "h"]);
+        let layout = operand_layout(&cfg, &op, &tensor, &["h".to_string()], false);
+        // Every config device must hold some part; total device slots
+        // must cover all devices.
+        let all = layout.device_set();
+        if all != devices {
+            return Err(format!("device coverage mismatch: {all:?} vs {devices:?}"));
+        }
+        // Part count must equal the product of axis degrees.
+        if layout.parts.len() != layout.axis_degrees.iter().product::<usize>() {
+            return Err("part count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_costs_shrink_with_more_devices() {
+    let cluster = Cluster::preset(Preset::HC3, 1);
+    let est = OpEstimator::analytical(&cluster);
+    check("cost-monotonic-in-sharding", |g| {
+        let model = gen_model(g);
+        let batch = model.batch_size;
+        if batch % 8 != 0 {
+            return Ok(());
+        }
+        let cost_of = |dp: usize| -> Result<f64, String> {
+            let tree = build_strategy(&model, StrategySpec::data_parallel(dp))
+                .map_err(|e| e.to_string())?;
+            let eg = compile(&model, &tree, &cluster).map_err(|e| e.to_string())?;
+            let costs = est.estimate_all(&eg).map_err(|e| e.to_string())?;
+            // Max per-device compute sum (communication excluded).
+            let mut per = vec![0u64; eg.n_devices];
+            for (t, &c) in eg.tasks.iter().zip(&costs) {
+                if let proteus::compiler::TaskKind::Comp(ct) = &t.kind {
+                    per[ct.device] += c;
+                }
+            }
+            Ok(*per.iter().max().unwrap() as f64)
+        };
+        let c1 = cost_of(1)?;
+        let c8 = cost_of(8)?;
+        if c8 >= c1 {
+            return Err(format!("8-way sharding not cheaper: {c8} vs {c1}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,235 @@
+//! Regression tests pinning the subtle behaviors discovered during the
+//! reproduction (DESIGN.md §10) plus end-to-end pattern checks on the
+//! paper's expert strategies.
+
+use proteus::compiler::{CollectiveKind, CommClass, Phase, TaskKind};
+use proteus::executor::calibrate;
+use proteus::prelude::*;
+use proteus::strategy::paper::{batch_for, s2};
+
+/// Megatron-style GPT block under mp=2: the qkv → attention → out-proj
+/// chain must produce exactly ONE forward all-reduce per sub-block
+/// (after the row-parallel layer), not gathers between every layer.
+#[test]
+fn megatron_block_emits_one_allreduce_per_sublock() {
+    let g = ModelKind::Gpt2.build(8);
+    let tree = build_strategy(&g, StrategySpec::hybrid(1, 2, 1, 1)).unwrap();
+    let c = Cluster::preset(Preset::HC2, 1);
+    let eg = compile(&g, &tree, &c).unwrap();
+    let n_blocks = 12;
+    let fwd_ars = eg.count(|t| {
+        t.phase == Phase::Fwd
+            && matches!(&t.kind, TaskKind::Comm(c)
+                if c.kind == CollectiveKind::AllReduce && c.class == CommClass::Feature)
+    });
+    // 2 per transformer block (attention out-proj + MLP fc2) + 1 for the
+    // vocab-parallel embedding. The tied LM head is column-split (o =
+    // vocab), so its sharded logits reach the loss via a gather, not an
+    // all-reduce.
+    let expected = 2 * n_blocks + 1;
+    assert_eq!(fwd_ars, expected, "Megatron all-reduce count");
+    // The residual stream itself must stay local: the only forward
+    // gather is the LM-head logits one.
+    let fwd_ags = eg.count(|t| {
+        t.phase == Phase::Fwd
+            && matches!(&t.kind, TaskKind::Comm(c) if c.kind == CollectiveKind::AllGather)
+    });
+    assert!(fwd_ags <= 1, "unexpected gathers on the residual stream: {fwd_ags}");
+}
+
+/// DLRM expert strategy: sharded embedding tables produce
+/// reduce-scatter (partial per-table contributions → batch-sharded
+/// consumers), the pattern behind the paper's DLRM-S2 row.
+#[test]
+fn dlrm_sharded_embeddings_reduce_scatter() {
+    let m = ModelKind::Dlrm;
+    let g = m.build(batch_for(m, 8));
+    let tree = build_strategy(&g, s2(m, 8)).unwrap();
+    let c = Cluster::preset(Preset::HC2, 1);
+    let eg = compile(&g, &tree, &c).unwrap();
+    let rs = eg.count(|t| {
+        matches!(&t.kind, TaskKind::Comm(c)
+            if c.kind == CollectiveKind::ReduceScatter && c.class == CommClass::Feature)
+    });
+    assert!(rs >= 26, "one reduce-scatter per sharded table, got {rs}");
+}
+
+/// Ring bus bandwidth accounts for link multiplicity: every device's
+/// PCIe port carries both its in- and out-segment, so a PCIe ring runs
+/// at half the port bandwidth — and the cross-socket ring additionally
+/// puts two segments through QPI.
+#[test]
+fn ring_multiplicity_on_qpi() {
+    let c = Cluster::preset(Preset::HC1, 1);
+    let bw = c.ring_bus_bandwidth(&(0..8).collect::<Vec<_>>());
+    assert!(
+        bw <= 13.0e9 / 2.0 + 1.0,
+        "port crossed twice → ≤ 6.5 GB/s, got {bw:.2e}"
+    );
+    // Same-switch ring: identical port-dominated bottleneck.
+    let bw4 = c.ring_bus_bandwidth(&[0, 1, 2, 3]);
+    assert!((bw4 - bw).abs() < 1.0, "{bw4} vs {bw}");
+    // Pairwise (non-ring) bandwidth is the full port rate.
+    assert!(c.pair_bandwidth(0, 1) > bw4 * 1.9);
+}
+
+/// Cross-node rings on HC2 put two segments through each NIC.
+#[test]
+fn ring_multiplicity_on_nic() {
+    let c = Cluster::preset(Preset::HC2, 4);
+    let ring32: Vec<usize> = (0..32).collect();
+    let bw = c.ring_bus_bandwidth(&ring32);
+    assert!(bw <= 12.0e9 / 2.0 + 1.0, "NIC crossed twice, got {bw:.2e}");
+}
+
+/// Recompute tasks must not start before the backward reaches their
+/// segment (the per-chain gate; DESIGN.md §10).
+#[test]
+fn recompute_waits_for_backward() {
+    let g = ModelKind::Gpt2.build(8);
+    let tree = build_strategy(&g, StrategySpec::data_parallel(4).with_recompute()).unwrap();
+    let c = Cluster::preset(Preset::HC2, 1);
+    let eg = compile(&g, &tree, &c).unwrap();
+    let est = OpEstimator::analytical(&c);
+    let cfg = HtaeConfig {
+        record_timeline: true,
+        ..HtaeConfig::plain()
+    };
+    let r = Htae::with_config(&c, &est, cfg).simulate(&eg).unwrap();
+    // Forward finishes on each device before any recompute of the same
+    // block starts (excluding the final segment whose gate is the loss).
+    let mut fwd_end = vec![0u64; eg.n_devices];
+    for s in &r.timeline {
+        if eg.tasks[s.task].phase == Phase::Fwd && !eg.tasks[s.task].is_comm() {
+            if let TaskKind::Comp(ct) = &eg.tasks[s.task].kind {
+                fwd_end[ct.device] = fwd_end[ct.device].max(s.end);
+            }
+        }
+    }
+    let mut early_recomp = 0;
+    let mut total_recomp = 0;
+    for s in &r.timeline {
+        if eg.tasks[s.task].phase == Phase::Recomp {
+            if let TaskKind::Comp(ct) = &eg.tasks[s.task].kind {
+                total_recomp += 1;
+                // Recompute of non-final blocks must start at/after the
+                // device's forward frontier minus the last segment.
+                if s.start * 2 < fwd_end[ct.device] {
+                    early_recomp += 1;
+                }
+            }
+        }
+    }
+    assert!(total_recomp > 0);
+    assert_eq!(
+        early_recomp, 0,
+        "{early_recomp}/{total_recomp} recompute tasks ran during early forward"
+    );
+}
+
+/// Tighter `max_ongoing_micro_batch` must not increase peak activation
+/// memory (that is its whole purpose).
+#[test]
+fn max_ongoing_bounds_activation_memory() {
+    let g = ModelKind::Gpt2.build(32);
+    let c = Cluster::preset(Preset::HC2, 1);
+    let est = OpEstimator::analytical(&c);
+    let peak = |max_ongoing: usize| {
+        let mut spec = StrategySpec::hybrid(1, 1, 2, 8);
+        spec.max_ongoing = max_ongoing;
+        let tree = build_strategy(&g, spec).unwrap();
+        let eg = compile(&g, &tree, &c).unwrap();
+        let r = Htae::new(&c, &est).simulate(&eg).unwrap();
+        let static_max = *eg.static_mem.iter().max().unwrap();
+        r.peak_mem.iter().copied().max().unwrap() - static_max
+    };
+    let tight = peak(1);
+    let loose = peak(8);
+    assert!(
+        tight <= loose,
+        "max_ongoing=1 peak {tight} must be ≤ max_ongoing=8 peak {loose}"
+    );
+}
+
+/// γ only ever slows the simulation down, proportionally to its value.
+#[test]
+fn gamma_is_monotone() {
+    let g = ModelKind::Vgg19.build(64);
+    let tree = build_strategy(&g, StrategySpec::data_parallel(8)).unwrap();
+    let c = Cluster::preset(Preset::HC1, 1);
+    let eg = compile(&g, &tree, &c).unwrap();
+    let est = OpEstimator::analytical(&c);
+    let step = |gamma: f64| {
+        let cfg = HtaeConfig {
+            gamma,
+            bandwidth_sharing: false,
+            overlap: true,
+            record_timeline: false,
+        };
+        Htae::with_config(&c, &est, cfg).simulate(&eg).unwrap().step_ms
+    };
+    let s0 = step(0.0);
+    let s1 = step(0.2);
+    let s2 = step(0.5);
+    assert!(s0 <= s1 && s1 <= s2, "{s0} {s1} {s2}");
+}
+
+/// The CLI `compare` command consumes a config file end-to-end.
+#[test]
+fn cli_compare_roundtrip() {
+    let dir = std::env::temp_dir().join("proteus_test_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cmp.json");
+    std::fs::write(
+        &path,
+        r#"{"model":"vgg19","batch":16,"preset":"HC1","nodes":1,
+            "strategies":[{"dp":2},{"dp":4},{"dp":2,"mp":2}]}"#,
+    )
+    .unwrap();
+    let args = proteus::cli::Args::parse(
+        [
+            "compare".to_string(),
+            "--config".to_string(),
+            path.to_str().unwrap().to_string(),
+        ]
+        .into_iter(),
+    )
+    .unwrap();
+    proteus::cli::run(&args).unwrap();
+}
+
+/// The calibrated γ ordering across presets matches physics.
+#[test]
+fn calibrated_gamma_ordering() {
+    let g1 = calibrate::default_gamma(&Cluster::preset(Preset::HC1, 1));
+    let g2 = calibrate::default_gamma(&Cluster::preset(Preset::HC2, 1));
+    let g3 = calibrate::default_gamma(&Cluster::preset(Preset::HC3, 1));
+    assert!(g1 > g2, "PCIe γ {g1} must exceed NVLink γ {g2}");
+    assert!(g2 >= g3, "V100 γ {g2} must be ≥ A100 γ {g3}");
+}
+
+/// Emulator seeds model run-to-run hardware variance but stay within a
+/// tight band; the default seed is exactly reproducible.
+#[test]
+fn emulator_seed_band() {
+    let g = ModelKind::ResNet50.build(32);
+    let tree = build_strategy(&g, StrategySpec::data_parallel(4)).unwrap();
+    let c = Cluster::preset(Preset::HC2, 1);
+    let eg = compile(&g, &tree, &c).unwrap();
+    let est = OpEstimator::analytical(&c);
+    let base = Emulator::new(&c, &est).simulate(&eg).unwrap().step_ms;
+    for seed in [1u64, 2, 3] {
+        let r = Emulator::with_config(
+            &c,
+            &est,
+            EmulatorConfig {
+                seed,
+                ..EmulatorConfig::default()
+            },
+        )
+        .simulate(&eg)
+        .unwrap();
+        let rel = (r.step_ms - base).abs() / base;
+        assert!(rel < 0.05, "seed {seed}: {rel}");
+    }
+}
