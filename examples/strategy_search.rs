@@ -2,86 +2,70 @@
 //! "performance models can be leveraged to ... compare different
 //! parallelization strategies in automated parallelization systems").
 //!
-//! Exhaustively searches the `DP × MP × PP (n_micro) × {zero, recompute}`
-//! space for GPT-2 on two HC2 nodes using Proteus as the cost model
-//! (skipping OOM configs), then validates the chosen strategy against
-//! the testbed emulator. Every candidate is evaluated in milliseconds —
-//! the whole search costs less than profiling a single real strategy.
+//! Generates the exhaustive `DP × MP × PP (n_micro) × {zero, recompute}`
+//! grid for GPT-2 on two HC2 nodes and hands it to
+//! [`proteus::runtime::SweepRunner`], which simulates every candidate in
+//! parallel (deduplicating the shared model-graph build) and ranks the
+//! survivors. The chosen strategy is then validated against the
+//! flow-level testbed emulator. Every candidate is evaluated in
+//! milliseconds — the whole search costs less than profiling a single
+//! real strategy.
 //!
 //! ```bash
 //! cargo run --release --example strategy_search
+//! # equivalently: cargo run --release -- sweep --model gpt2 --batch 64 \
+//! #               --preset HC2 --nodes 2 --truth
 //! ```
 
-use proteus::executor::calibrate;
 use proteus::prelude::*;
 use proteus::util::table::Table;
 
 fn main() -> proteus::Result<()> {
     let batch = 64;
-    let cluster = Cluster::preset(Preset::HC2, 2);
+    let preset = Preset::HC2;
+    let nodes = 2;
+    let cluster = Cluster::preset(preset, nodes);
     let n = cluster.num_devices();
-    let model = ModelKind::Gpt2.build(batch);
-    let est = OpEstimator::best_available(&cluster, "artifacts/costmodel.hlo.txt");
-    let config = HtaeConfig {
-        gamma: calibrate::default_gamma(&cluster),
-        ..HtaeConfig::default()
-    };
+    let model = ModelKind::Gpt2;
 
     // Candidate grid: every (dp, mp, pp) factorization of the cluster,
-    // micro-batch counts for pipelines, ZeRO / recompute toggles.
-    let mut candidates: Vec<StrategySpec> = Vec::new();
-    for dp in [1usize, 2, 4, 8, 16] {
-        for mp in [1usize, 2, 4, 8] {
-            for pp in [1usize, 2] {
-                if dp * mp * pp != n || batch % dp != 0 {
-                    continue;
-                }
-                let micros: &[usize] = if pp > 1 { &[2, 4, 8] } else { &[1] };
-                for &micro in micros {
-                    if batch % (dp * micro) != 0 {
-                        continue;
-                    }
-                    let base = StrategySpec::hybrid(dp, mp, pp, micro);
-                    candidates.push(base);
-                    candidates.push(base.with_zero());
-                    if pp == 1 {
-                        candidates.push(base.with_recompute());
-                    }
-                }
-            }
-        }
-    }
+    // micro-batch counts compatible with the batch, ZeRO / recompute
+    // toggles.
+    let scenarios: Vec<Scenario> = candidate_grid(n, batch)
+        .into_iter()
+        .map(|spec| Scenario {
+            model,
+            batch,
+            preset,
+            nodes,
+            spec,
+        })
+        .collect();
 
+    let runner = SweepRunner::new();
+    let threads = runner.effective_threads(scenarios.len());
     let t0 = std::time::Instant::now();
-    let mut evaluated: Vec<(StrategySpec, SimReport)> = Vec::new();
-    let mut skipped_oom = 0;
-    for &spec in &candidates {
-        let tree = match build_strategy(&model, spec) {
-            Ok(t) => t,
-            Err(_) => continue,
-        };
-        let eg = compile(&model, &tree, &cluster)?;
-        let r = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
-        if r.oom {
-            skipped_oom += 1;
-            continue;
-        }
-        evaluated.push((spec, r));
-    }
-    evaluated.sort_by(|a, b| b.1.throughput.partial_cmp(&a.1.throughput).unwrap());
+    let outcomes = runner.run(&scenarios);
     let search_time = t0.elapsed();
+    let ranked = SweepRunner::rank(&outcomes);
+    let skipped_oom = outcomes
+        .iter()
+        .filter(|o| matches!(&o.report, Ok(r) if r.oom))
+        .count();
 
     println!(
-        "searched {} candidates ({} OOM) in {:.2?} — top 5:",
-        candidates.len(),
+        "searched {} candidates ({} OOM, {} viable) in {:.2?} on {threads} threads — top 5:",
+        outcomes.len(),
         skipped_oom,
+        ranked.len(),
         search_time
     );
     let mut table = Table::new(&["rank", "strategy", "pred samples/s", "pred step ms"]);
-    for (i, (spec, r)) in evaluated.iter().take(5).enumerate() {
+    for (i, o) in ranked.iter().take(5).enumerate() {
+        let r = o.report.as_ref().unwrap();
         table.row(vec![
             (i + 1).to_string(),
-            spec.label(),
+            o.scenario.spec.label(),
             format!("{:.1}", r.throughput),
             format!("{:.2}", r.step_ms),
         ]);
@@ -89,25 +73,28 @@ fn main() -> proteus::Result<()> {
     print!("{}", table.render());
 
     // Validate the winner on the testbed emulator.
-    let (best_spec, best_pred) = &evaluated[0];
-    let tree = build_strategy(&model, *best_spec)?;
-    let eg = compile(&model, &tree, &cluster)?;
+    let graph = model.build(batch);
+    let est = OpEstimator::best_available(&cluster, "artifacts/costmodel.hlo.txt");
+    let best = ranked.first().expect("at least one viable strategy");
+    let best_pred = best.report.as_ref().unwrap();
+    let tree = build_strategy(&graph, best.scenario.spec)?;
+    let eg = compile(&graph, &tree, &cluster)?;
     let truth = Emulator::new(&cluster, &est).simulate(&eg)?;
     let err = (best_pred.throughput - truth.throughput).abs() / truth.throughput * 100.0;
     println!(
         "\nwinner {} validated on the emulator: predicted {:.1} vs true {:.1} samples/s ({err:.2}% error)",
-        best_spec.label(),
+        best.scenario.spec.label(),
         best_pred.throughput,
         truth.throughput
     );
     // And confirm nothing in the top-5 would actually have beaten it.
-    let mut best_true = (best_spec.label(), truth.throughput);
-    for (spec, _) in evaluated.iter().take(5).skip(1) {
-        let tree = build_strategy(&model, *spec)?;
-        let eg = compile(&model, &tree, &cluster)?;
+    let mut best_true = (best.scenario.spec.label(), truth.throughput);
+    for o in ranked.iter().take(5).skip(1) {
+        let tree = build_strategy(&graph, o.scenario.spec)?;
+        let eg = compile(&graph, &tree, &cluster)?;
         let t = Emulator::new(&cluster, &est).simulate(&eg)?;
         if t.throughput > best_true.1 {
-            best_true = (spec.label(), t.throughput);
+            best_true = (o.scenario.spec.label(), t.throughput);
         }
     }
     println!(

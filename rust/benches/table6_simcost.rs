@@ -11,6 +11,7 @@
 use std::time::Instant;
 
 use proteus::cluster::{Cluster, Preset};
+use proteus::emulator::Emulator;
 use proteus::estimator::OpEstimator;
 use proteus::executor::{calibrate, Htae, HtaeConfig};
 use proteus::models::ModelKind;
@@ -56,4 +57,32 @@ fn main() {
     }
     print!("{}", table.render());
     println!("\npaper (Python): VGG19 1.7 s, GPT-2 6.3 s at 32 GPUs.");
+
+    // Before/after of the event-driven emulator rewrite: ground-truth
+    // emulation cost for GPT-2 DP as the flow count grows. "reference"
+    // is the original rescan-everything loop, "event" the binary-heap
+    // engine with incremental max-min.
+    println!("\n=== Emulator engine cost, GPT-2 DP on HC2 (seconds) ===\n");
+    let mut etable = Table::new(&["#GPUs", "reference", "event", "speedup", "rel err"]);
+    for n in [1usize, 2, 4, 8, 16, 32] {
+        let g = ModelKind::Gpt2.build(32 * n);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(n)).unwrap();
+        let eg = proteus::compiler::compile(&g, &tree, &cluster).unwrap();
+        let base = est.estimate_all(&eg).unwrap();
+        let emu = Emulator::new(&cluster, &est);
+        let t0 = Instant::now();
+        let rf = emu.simulate_with_costs_reference(&eg, &base).unwrap();
+        let ref_s = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let ev = emu.simulate_with_costs(&eg, &base).unwrap();
+        let ev_s = t1.elapsed().as_secs_f64();
+        etable.row(vec![
+            n.to_string(),
+            format!("{ref_s:.4}"),
+            format!("{ev_s:.4}"),
+            format!("{:.1}x", ref_s / ev_s),
+            format!("{:.1e}", (ev.step_ms - rf.step_ms).abs() / rf.step_ms),
+        ]);
+    }
+    print!("{}", etable.render());
 }

@@ -7,6 +7,8 @@
 //!                   [--emb-shard] [--plain] [--truth] [--trace out.json]
 //!                   [--artifacts artifacts/costmodel.hlo.txt]
 //! proteus compare   --config configs/gpt2_hc2.json [--truth]
+//! proteus sweep     --model gpt2 --batch 64 --preset HC2 --nodes 2
+//!                   [--threads N] [--top 10] [--plain] [--truth]
 //! proteus calibrate [--out configs/gamma.json]
 //! proteus info      --model resnet50 [--batch 32]
 //! proteus bench-cost [--rows 65536] [--artifacts ...]
@@ -36,6 +38,7 @@ pub fn run(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "simulate" => cmd_simulate(args),
         "compare" => cmd_compare(args),
+        "sweep" => cmd_sweep(args),
         "calibrate" => cmd_calibrate(args),
         "info" => cmd_info(args),
         "bench-cost" => cmd_bench_cost(args),
@@ -57,6 +60,7 @@ USAGE: proteus <command> [options]
 COMMANDS:
   simulate    Predict throughput/memory of one (model, strategy, cluster)
   compare     Sweep the strategies of a JSON experiment config
+  sweep       Rank an exhaustive strategy grid in parallel (SweepRunner)
   calibrate   Measure the overlap factor gamma per hardware preset
   info        Print a model's structure statistics
   bench-cost  Benchmark the PJRT vs analytical cost backends
@@ -263,6 +267,94 @@ fn cmd_compare(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Rank an exhaustive strategy grid with the parallel [`SweepRunner`].
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use crate::runtime::{candidate_grid, Scenario, SweepRunner};
+
+    let model = args.get_or("model", "gpt2");
+    let model = ModelKind::parse(&model)
+        .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
+    let batch = args.get_usize("batch", 64)?;
+    let preset = args.get_or("preset", "HC2");
+    let preset = Preset::parse(&preset)
+        .ok_or_else(|| Error::Config(format!("unknown preset '{preset}'")))?;
+    let nodes = args.get_usize("nodes", 2)?;
+    let threads = args.get_usize("threads", 0)?;
+    let top = args.get_usize("top", 10)?;
+    let plain = args.flag("plain");
+    let truth = args.flag("truth");
+    let artifact = args.get_or("artifacts", DEFAULT_ARTIFACT);
+    args.reject_unknown()?;
+
+    let cluster = Cluster::preset(preset, nodes);
+    let n = cluster.num_devices();
+    let specs = candidate_grid(n, batch);
+    let scenarios: Vec<Scenario> = specs
+        .into_iter()
+        .map(|spec| Scenario {
+            model,
+            batch,
+            preset,
+            nodes,
+            spec,
+        })
+        .collect();
+    let runner = SweepRunner::new().with_threads(threads).plain(plain);
+    let n_threads = runner.effective_threads(scenarios.len());
+    let t0 = std::time::Instant::now();
+    let outcomes = runner.run(&scenarios);
+    let wall = t0.elapsed();
+    let ranked = SweepRunner::rank(&outcomes);
+    let oom = outcomes
+        .iter()
+        .filter(|o| matches!(&o.report, Ok(r) if r.oom))
+        .count();
+    let failed = outcomes.iter().filter(|o| o.report.is_err()).count();
+    println!(
+        "swept {} strategies for {} b={} on {}({} GPUs): {} viable, {} OOM, {} invalid — {:.2?} on {} threads",
+        outcomes.len(),
+        model.name(),
+        batch,
+        cluster.name,
+        n,
+        ranked.len(),
+        oom,
+        failed,
+        wall,
+        n_threads,
+    );
+    let mut table = Table::new(&["rank", "strategy", "step_ms", "samples/s"]);
+    for (i, o) in ranked.iter().take(top).enumerate() {
+        let r = o.report.as_ref().unwrap();
+        table.row(vec![
+            (i + 1).to_string(),
+            o.scenario.spec.label(),
+            format!("{:.2}", r.step_ms),
+            format!("{:.1}", r.throughput),
+        ]);
+    }
+    print!("{}", table.render());
+    if truth {
+        // Validate the top candidates against the flow-level emulator.
+        let graph = model.build(batch);
+        let est = OpEstimator::best_available(&cluster, &artifact);
+        for o in ranked.iter().take(3) {
+            let tree = build_strategy(&graph, o.scenario.spec)?;
+            let eg = crate::compiler::compile(&graph, &tree, &cluster)?;
+            let t = Emulator::new(&cluster, &est).simulate(&eg)?;
+            let pred = o.report.as_ref().unwrap();
+            println!(
+                "truth {}: {:.2} ms ({:.1} samples/s), HTAE error {:.2}%",
+                o.scenario.spec.label(),
+                t.step_ms,
+                t.throughput,
+                rel_err_pct(pred.step_ms, t.step_ms)
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_calibrate(args: &Args) -> Result<()> {
     let out = args.get("out").map(|s| s.to_string());
     args.reject_unknown()?;
@@ -393,6 +485,12 @@ mod tests {
     #[test]
     fn info_command_runs() {
         let a = parse("info --model resnet50 --batch 8");
+        run(&a).unwrap();
+    }
+
+    #[test]
+    fn sweep_command_runs() {
+        let a = parse("sweep --model vgg19 --batch 16 --preset HC1 --nodes 1 --top 3 --threads 2");
         run(&a).unwrap();
     }
 }

@@ -1,0 +1,528 @@
+//! Event-driven emulator core.
+//!
+//! The reference loop ([`super::reference`]) pays `O(flows + links +
+//! devices)` at *every* state change: it re-solves max-min fair sharing
+//! from scratch and rescans every running job to find the next event.
+//! This engine makes the emulator a true discrete-event simulator whose
+//! cost scales with **events × touched state** instead:
+//!
+//! - a binary-heap **event queue** keyed on predicted completion times
+//!   (compute finishes, α-phase expiries, flow completions), with
+//!   epoch-based lazy invalidation — a stale event is discarded on pop
+//!   instead of being searched for in the heap;
+//! - **lazily settled entities**: each compute job / flow stores
+//!   `(remaining, rate, last_t)` and is advanced only when its rate
+//!   changes or it completes, so untouched work is never rescanned;
+//! - **incremental max-min** ([`super::fairshare::IncrementalMaxMin`]):
+//!   a flow arrival/departure re-solves only the link-connected
+//!   component it touches, and only flows whose rate actually moved get
+//!   their completion events rescheduled;
+//! - per-device ready queues (min-heap by task id) identical to the
+//!   reference engine, so the *schedule* — and therefore the makespan —
+//!   is unchanged (pinned by `event_engine_matches_reference_loop`).
+//!
+//! Interference bookkeeping: a device's compute rate is `1/(1+δ)` while
+//! any active flow touches it, and a flow's effective rate is its
+//! max-min share divided by `(1+δ)` while either endpoint computes.
+//! Both toggles are piecewise-constant between events, so the engine
+//! marks the affected devices/flows dirty at each event and re-rates
+//! exactly those.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::cluster::DeviceId;
+use crate::compiler::{ExecGraph, TaskId, TaskKind};
+use crate::emulator::fairshare::IncrementalMaxMin;
+use crate::executor::memory::MemoryTracker;
+use crate::executor::{SimReport, Span};
+use crate::util::time::{secs_to_ps, Ps};
+use crate::Result;
+
+use super::{mem_alloc, mem_free, CommClass, Emulator};
+
+/// Event identity. The derived `Ord` (variant order, then index) is the
+/// tie-break for simultaneous events, chosen to match the reference
+/// loop's processing order within one instant: compute completions (by
+/// device), then α expiries, then flow completions (both by index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    Comp(DeviceId),
+    Alpha(usize),
+    Flow(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct HeapItem {
+    t: f64,
+    ev: Ev,
+    epoch: u32,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then(self.ev.cmp(&other.ev))
+            .then(self.epoch.cmp(&other.epoch))
+    }
+}
+
+/// A running computation: lazily settled unit-rate work.
+struct EvComp {
+    task: TaskId,
+    remaining: f64, // seconds of unit-rate work
+    rate: f64,
+    last_t: f64,
+    started: Ps,
+}
+
+/// A running communication job (one collective).
+struct EvJob {
+    task: TaskId,
+    flows_left: usize,
+    started: Ps,
+    class: CommClass,
+    group: Vec<DeviceId>,
+    alpha_done: bool,
+    finished: bool,
+}
+
+/// One flow of a collective: lazily settled byte count.
+struct EvFlow {
+    job: usize,
+    src: DeviceId,
+    dst: DeviceId,
+    links: Vec<crate::cluster::LinkId>,
+    remaining: f64, // bytes
+    rate: f64,      // effective bytes/s (max-min share ÷ interference)
+    last_t: f64,
+    active: bool,
+    done: bool,
+}
+
+/// Emulate one step with the event-driven engine (see module docs).
+pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Result<SimReport> {
+    let n = eg.tasks.len();
+    let n_dev = eg.n_devices;
+    let delta = if emu.config.interference {
+        emu.cluster.device.overlap_interference
+    } else {
+        0.0
+    };
+
+    let mut preds = eg.preds.clone();
+    let mut comp_ready: Vec<BinaryHeap<Reverse<TaskId>>> =
+        (0..n_dev).map(|_| BinaryHeap::new()).collect();
+    let mut comm_ready: Vec<TaskId> = Vec::new();
+    let mut comp_busy = vec![false; n_dev];
+    let mut feat_busy = vec![false; n_dev];
+    let mut grad_busy = vec![false; n_dev];
+
+    let mut comp_jobs: Vec<Option<EvComp>> = (0..n_dev).map(|_| None).collect();
+    let mut comp_epoch = vec![0u32; n_dev];
+    let mut jobs: Vec<EvJob> = Vec::new();
+    let mut job_flows: Vec<Vec<usize>> = Vec::new();
+    let mut flows: Vec<EvFlow> = Vec::new();
+    let mut flow_epoch: Vec<u32> = Vec::new();
+    // Active (post-α, unfinished) flows touching each device.
+    let mut dev_flows: Vec<Vec<usize>> = vec![Vec::new(); n_dev];
+    let mut dev_computing = vec![false; n_dev];
+
+    let caps: Vec<f64> = emu.cluster.links.iter().map(|l| l.bandwidth).collect();
+    let mut mm = IncrementalMaxMin::new(caps);
+
+    let mut mem = MemoryTracker::new(&eg.static_mem, emu.cluster.device.memory_bytes);
+    let mut timeline = Vec::new();
+    let mut heap: BinaryHeap<Reverse<HeapItem>> = BinaryHeap::new();
+    let mut t = 0.0f64; // seconds
+    let mut done = 0usize;
+
+    // Per-instant dirty sets (entities whose rate may have changed).
+    let mut dirty_flows: Vec<usize> = Vec::new();
+    let mut dirty_flow_mark: Vec<bool> = Vec::new();
+    let mut dirty_devs: Vec<DeviceId> = Vec::new();
+    let mut dirty_dev_mark = vec![false; n_dev];
+    // Reused batch of same-instant events.
+    let mut batch: Vec<HeapItem> = Vec::new();
+    let mut completed_jobs: Vec<usize> = Vec::new();
+
+    let enqueue = |id: TaskId,
+                   comp_ready: &mut Vec<BinaryHeap<Reverse<TaskId>>>,
+                   comm_ready: &mut Vec<TaskId>| {
+        match &eg.tasks[id].kind {
+            TaskKind::Comp(c) => comp_ready[c.device].push(Reverse(id)),
+            TaskKind::Comm(_) => comm_ready.push(id),
+        }
+    };
+    for (i, &p) in preds.iter().enumerate() {
+        if p == 0 {
+            enqueue(i, &mut comp_ready, &mut comm_ready);
+        }
+    }
+
+    loop {
+        // ---- Start everything startable at time t. ----------------
+        let mut started_any = true;
+        while started_any {
+            started_any = false;
+            for d in 0..n_dev {
+                if comp_busy[d] {
+                    continue;
+                }
+                if let Some(Reverse(id)) = comp_ready[d].pop() {
+                    let work = (base[id] as f64 / 1e12 * emu.ripple(id)).max(1e-12);
+                    comp_busy[d] = true;
+                    dev_computing[d] = true;
+                    comp_jobs[d] = Some(EvComp {
+                        task: id,
+                        remaining: work,
+                        rate: 0.0, // assigned in the refresh pass below
+                        last_t: t,
+                        started: secs_to_ps(t),
+                    });
+                    mem_alloc(&mut mem, eg, id, secs_to_ps(t));
+                    if !dirty_dev_mark[d] {
+                        dirty_dev_mark[d] = true;
+                        dirty_devs.push(d);
+                    }
+                    started_any = true;
+                }
+            }
+            comm_ready.sort_unstable();
+            let mut i = 0;
+            while i < comm_ready.len() {
+                let id = comm_ready[i];
+                let c = match &eg.tasks[id].kind {
+                    TaskKind::Comm(c) => c,
+                    _ => unreachable!(),
+                };
+                let busy = match c.class {
+                    CommClass::Feature => &feat_busy,
+                    CommClass::Gradient => &grad_busy,
+                };
+                if c.group.iter().any(|&d| busy[d]) {
+                    i += 1;
+                    continue;
+                }
+                comm_ready.swap_remove(i);
+                let busy = match c.class {
+                    CommClass::Feature => &mut feat_busy,
+                    CommClass::Gradient => &mut grad_busy,
+                };
+                for &d in &c.group {
+                    busy[d] = true;
+                }
+                let (alpha, decomposed) = emu.comm_launch(c, id);
+                let ji = jobs.len();
+                let mut fl = Vec::with_capacity(decomposed.len());
+                for (src, dst, bytes) in decomposed {
+                    let fi = flows.len();
+                    flows.push(EvFlow {
+                        job: ji,
+                        src,
+                        dst,
+                        links: emu.cluster.path(src, dst),
+                        remaining: bytes.max(1.0),
+                        rate: 0.0,
+                        last_t: t,
+                        active: false,
+                        done: false,
+                    });
+                    flow_epoch.push(0);
+                    dirty_flow_mark.push(false);
+                    fl.push(fi);
+                }
+                jobs.push(EvJob {
+                    task: id,
+                    flows_left: fl.len(),
+                    started: secs_to_ps(t),
+                    class: c.class,
+                    group: c.group.clone(),
+                    alpha_done: false,
+                    finished: false,
+                });
+                job_flows.push(fl);
+                mem_alloc(&mut mem, eg, id, secs_to_ps(t));
+                heap.push(Reverse(HeapItem {
+                    t: t + alpha.max(1e-12),
+                    ev: Ev::Alpha(ji),
+                    epoch: 0,
+                }));
+                started_any = true;
+            }
+        }
+
+        // ---- Refresh dirty entities: settle, re-rate, reschedule. ---
+        // A device whose compute/flow occupancy toggled dirties every
+        // active flow touching it (interference) and its own compute.
+        for k in 0..dirty_devs.len() {
+            let d = dirty_devs[k];
+            for idx in 0..dev_flows[d].len() {
+                let fi = dev_flows[d][idx];
+                if !dirty_flow_mark[fi] {
+                    dirty_flow_mark[fi] = true;
+                    dirty_flows.push(fi);
+                }
+            }
+        }
+        for k in 0..dirty_flows.len() {
+            let fi = dirty_flows[k];
+            dirty_flow_mark[fi] = false;
+            let f = &mut flows[fi];
+            if f.done || !f.active {
+                continue;
+            }
+            if f.rate.is_finite() {
+                f.remaining -= (t - f.last_t) * f.rate;
+                if f.remaining < 0.0 {
+                    f.remaining = 0.0;
+                }
+            }
+            f.last_t = t;
+            let share = mm.rate(fi);
+            f.rate = if delta > 0.0 && (dev_computing[f.src] || dev_computing[f.dst]) {
+                share / (1.0 + delta)
+            } else {
+                share
+            };
+            flow_epoch[fi] = flow_epoch[fi].wrapping_add(1);
+            let tc = if f.rate.is_infinite() {
+                t
+            } else if f.rate > 0.0 {
+                t + f.remaining / f.rate
+            } else {
+                f64::INFINITY
+            };
+            if tc.is_finite() {
+                heap.push(Reverse(HeapItem {
+                    t: tc,
+                    ev: Ev::Flow(fi),
+                    epoch: flow_epoch[fi],
+                }));
+            }
+        }
+        dirty_flows.clear();
+        for k in 0..dirty_devs.len() {
+            let d = dirty_devs[k];
+            dirty_dev_mark[d] = false;
+            if let Some(j) = comp_jobs[d].as_mut() {
+                j.remaining -= (t - j.last_t) * j.rate;
+                if j.remaining < 0.0 {
+                    j.remaining = 0.0;
+                }
+                j.last_t = t;
+                j.rate = if delta > 0.0 && !dev_flows[d].is_empty() {
+                    1.0 / (1.0 + delta)
+                } else {
+                    1.0
+                };
+                comp_epoch[d] = comp_epoch[d].wrapping_add(1);
+                heap.push(Reverse(HeapItem {
+                    t: t + j.remaining / j.rate,
+                    ev: Ev::Comp(d),
+                    epoch: comp_epoch[d],
+                }));
+            }
+        }
+        dirty_devs.clear();
+
+        // ---- Pop the next batch of simultaneous valid events. -------
+        let stale = |it: &HeapItem,
+                     comp_jobs: &[Option<EvComp>],
+                     comp_epoch: &[u32],
+                     flows: &[EvFlow],
+                     flow_epoch: &[u32]| match it.ev {
+            Ev::Comp(d) => comp_jobs[d].is_none() || comp_epoch[d] != it.epoch,
+            Ev::Alpha(_) => false,
+            Ev::Flow(fi) => {
+                flows[fi].done || !flows[fi].active || flow_epoch[fi] != it.epoch
+            }
+        };
+        batch.clear();
+        let first = loop {
+            match heap.pop() {
+                None => break None,
+                Some(Reverse(it)) => {
+                    if !stale(&it, &comp_jobs, &comp_epoch, &flows, &flow_epoch) {
+                        break Some(it);
+                    }
+                }
+            }
+        };
+        let Some(first) = first else {
+            break; // no pending events: simulation drained
+        };
+        t = first.t;
+        batch.push(first);
+        while let Some(&Reverse(nx)) = heap.peek() {
+            if nx.t != t {
+                break;
+            }
+            let Reverse(it) = heap.pop().unwrap();
+            if !stale(&it, &comp_jobs, &comp_epoch, &flows, &flow_epoch) {
+                batch.push(it);
+            }
+        }
+
+        // ---- Process the batch (completions only; no re-rating). ----
+        // Rates used for this instant are the interval-start rates, like
+        // the reference loop; re-rating happens in the refresh pass of
+        // the next iteration via the dirty sets filled here.
+        completed_jobs.clear();
+        let end = secs_to_ps(t);
+        for bi in 0..batch.len() {
+            match batch[bi].ev {
+                Ev::Comp(d) => {
+                    let j = comp_jobs[d].take().expect("validated on pop");
+                    comp_busy[d] = false;
+                    dev_computing[d] = false;
+                    mem_free(&mut mem, eg, j.task, end);
+                    if emu.config.record_timeline {
+                        timeline.push(Span {
+                            task: j.task,
+                            start: j.started,
+                            end,
+                        });
+                    }
+                    done += 1;
+                    for &s in &eg.succs[j.task] {
+                        preds[s] -= 1;
+                        if preds[s] == 0 {
+                            enqueue(s, &mut comp_ready, &mut comm_ready);
+                        }
+                    }
+                    if !dirty_dev_mark[d] {
+                        dirty_dev_mark[d] = true;
+                        dirty_devs.push(d);
+                    }
+                }
+                Ev::Alpha(ji) => {
+                    jobs[ji].alpha_done = true;
+                    if jobs[ji].flows_left == 0 {
+                        completed_jobs.push(ji);
+                        continue;
+                    }
+                    // The job's flows enter the fluid model now.
+                    for idx in 0..job_flows[ji].len() {
+                        let fi = job_flows[ji][idx];
+                        flows[fi].active = true;
+                        flows[fi].last_t = t;
+                        mm.insert(fi, &flows[fi].links);
+                        for ci in 0..mm.changed().len() {
+                            let cf = mm.changed()[ci];
+                            if !dirty_flow_mark[cf] {
+                                dirty_flow_mark[cf] = true;
+                                dirty_flows.push(cf);
+                            }
+                        }
+                        if !dirty_flow_mark[fi] {
+                            dirty_flow_mark[fi] = true;
+                            dirty_flows.push(fi);
+                        }
+                        let (src, dst) = (flows[fi].src, flows[fi].dst);
+                        dev_flows[src].push(fi);
+                        dev_flows[dst].push(fi);
+                        for d in [src, dst] {
+                            if !dirty_dev_mark[d] {
+                                dirty_dev_mark[d] = true;
+                                dirty_devs.push(d);
+                            }
+                        }
+                    }
+                }
+                Ev::Flow(fi) => {
+                    flows[fi].done = true;
+                    flows[fi].remaining = 0.0;
+                    mm.remove(fi);
+                    for ci in 0..mm.changed().len() {
+                        let cf = mm.changed()[ci];
+                        if !dirty_flow_mark[cf] {
+                            dirty_flow_mark[cf] = true;
+                            dirty_flows.push(cf);
+                        }
+                    }
+                    let (src, dst) = (flows[fi].src, flows[fi].dst);
+                    for d in [src, dst] {
+                        if let Some(p) = dev_flows[d].iter().position(|&x| x == fi) {
+                            dev_flows[d].swap_remove(p);
+                        }
+                        if !dirty_dev_mark[d] {
+                            dirty_dev_mark[d] = true;
+                            dirty_devs.push(d);
+                        }
+                    }
+                    let ji = flows[fi].job;
+                    jobs[ji].flows_left -= 1;
+                    if jobs[ji].flows_left == 0 && jobs[ji].alpha_done {
+                        completed_jobs.push(ji);
+                    }
+                }
+            }
+        }
+        completed_jobs.sort_unstable();
+        completed_jobs.dedup();
+        for k in 0..completed_jobs.len() {
+            let ji = completed_jobs[k];
+            if jobs[ji].finished {
+                continue;
+            }
+            jobs[ji].finished = true;
+            let task = jobs[ji].task;
+            let busy = match jobs[ji].class {
+                CommClass::Feature => &mut feat_busy,
+                CommClass::Gradient => &mut grad_busy,
+            };
+            for gi in 0..jobs[ji].group.len() {
+                busy[jobs[ji].group[gi]] = false;
+            }
+            mem_free(&mut mem, eg, task, end);
+            if emu.config.record_timeline {
+                timeline.push(Span {
+                    task,
+                    start: jobs[ji].started,
+                    end,
+                });
+            }
+            done += 1;
+            for &s in &eg.succs[task] {
+                preds[s] -= 1;
+                if preds[s] == 0 {
+                    enqueue(s, &mut comp_ready, &mut comm_ready);
+                }
+            }
+        }
+    }
+
+    if done != n {
+        return Err(crate::Error::sim(format!(
+            "emulator deadlock: {done} of {n} tasks (event queue drained early)"
+        )));
+    }
+    let secs = t;
+    Ok(SimReport {
+        step_ms: secs * 1e3,
+        throughput: if secs > 0.0 {
+            eg.batch as f64 / secs
+        } else {
+            0.0
+        },
+        peak_mem: mem.peaks().to_vec(),
+        oom: mem.oom(),
+        overlapped_ops: 0,
+        shared_ops: 0,
+        n_tasks: n,
+        timeline,
+    })
+}

@@ -6,6 +6,18 @@
 //! the fair share, remove them, and continue. This is the fluid model
 //! the ground-truth emulator uses where HTAE uses start-time fair-share
 //! *counting* — the fidelity gap the paper's evaluation quantifies.
+//!
+//! Two entry points share the same arithmetic:
+//!
+//! - [`maxmin_rates`] / [`maxmin_rates_into`] — from-scratch solves over
+//!   an explicit flow list (the reference emulator loop, tests);
+//! - [`IncrementalMaxMin`] — a stateful solver for the event-driven
+//!   emulator core: on each flow arrival/departure it re-solves only
+//!   the *link-connected component* the change touches. Max-min
+//!   allocations decompose exactly over link-connected components
+//!   (flows in different components share no capacity), so the
+//!   incremental rates are identical to a global re-solve — the
+//!   property `incremental_matches_scratch_solver` pins this down.
 
 
 use crate::cluster::LinkId;
@@ -57,7 +69,21 @@ pub fn maxmin_rates_into(
     scratch: &mut Scratch,
     out: &mut Vec<f64>,
 ) {
-    let n = flows.len();
+    maxmin_rates_indexed(flows.len(), |i| flows[i], n_links, capacity, scratch, out)
+}
+
+/// Progressive filling over flows addressed by index: `links_of(i)` is
+/// flow `i`'s link path. Lets callers that already hold a flow arena
+/// (the incremental solver) avoid materializing a slice-of-slices per
+/// solve — this runs on the emulator's per-event hot path.
+pub fn maxmin_rates_indexed<'a>(
+    n: usize,
+    links_of: impl Fn(usize) -> &'a [LinkId],
+    n_links: usize,
+    capacity: &impl Fn(LinkId) -> f64,
+    scratch: &mut Scratch,
+    out: &mut Vec<f64>,
+) {
     out.clear();
     out.resize(n, f64::INFINITY);
     if n == 0 {
@@ -68,8 +94,13 @@ pub fn maxmin_rates_into(
     let cnt = &mut scratch.cnt[..n_links];
     // Reset only the links we touch.
     let mut touched: Vec<LinkId> = Vec::with_capacity(16);
-    for f in flows {
-        for &l in *f {
+    let mut remaining = 0usize;
+    for i in 0..n {
+        let f = links_of(i);
+        if !f.is_empty() {
+            remaining += 1;
+        }
+        for &l in f {
             if cnt[l] == 0 && !touched.contains(&l) {
                 cap[l] = capacity(l);
                 touched.push(l);
@@ -78,7 +109,6 @@ pub fn maxmin_rates_into(
         }
     }
     let mut frozen = vec![false; n];
-    let mut remaining = flows.iter().filter(|f| !f.is_empty()).count();
     while remaining > 0 {
         // Most contended link: minimal fair share.
         let mut best: Option<(LinkId, f64)> = None;
@@ -98,7 +128,8 @@ pub fn maxmin_rates_into(
         };
         // Freeze every unfrozen flow crossing the bottleneck.
         let mut any = false;
-        for (i, f) in flows.iter().enumerate() {
+        for i in 0..n {
+            let f = links_of(i);
             if frozen[i] || f.is_empty() || !f.contains(&bottleneck) {
                 continue;
             }
@@ -106,7 +137,7 @@ pub fn maxmin_rates_into(
             out[i] = fair;
             any = true;
             remaining -= 1;
-            for &l in *f {
+            for &l in f {
                 cap[l] -= fair;
                 cnt[l] -= 1;
             }
@@ -120,6 +151,199 @@ pub fn maxmin_rates_into(
     for &l in &touched {
         cnt[l] = 0;
         cap[l] = 0.0;
+    }
+}
+
+/// Incremental max-min fair-share solver.
+///
+/// Flows are identified by caller-chosen dense ids (the event-driven
+/// emulator uses its flow-arena indices). [`IncrementalMaxMin::insert`]
+/// and [`IncrementalMaxMin::remove`] re-solve only the link-connected
+/// component the changed flow belongs to and record which *other* flows'
+/// rates moved in [`IncrementalMaxMin::changed`], so the caller can
+/// reschedule exactly the affected completion events.
+#[derive(Debug)]
+pub struct IncrementalMaxMin {
+    caps: Vec<f64>,
+    /// Per link: ids of active flows crossing it.
+    link_flows: Vec<Vec<usize>>,
+    /// Per flow id: its link path (empty when inactive).
+    flow_links: Vec<Vec<LinkId>>,
+    active: Vec<bool>,
+    rates: Vec<f64>,
+    changed: Vec<usize>,
+    // Reusable scratch for the component BFS + solve.
+    scratch: Scratch,
+    rates_buf: Vec<f64>,
+    mark_flow: Vec<u64>,
+    mark_link: Vec<u64>,
+    stamp: u64,
+    comp_flows: Vec<usize>,
+    link_queue: Vec<LinkId>,
+}
+
+impl IncrementalMaxMin {
+    /// Solver over links with the given capacities (bytes/s).
+    pub fn new(caps: Vec<f64>) -> Self {
+        let n_links = caps.len();
+        IncrementalMaxMin {
+            link_flows: vec![Vec::new(); n_links],
+            mark_link: vec![0; n_links],
+            scratch: Scratch::new(n_links),
+            caps,
+            flow_links: Vec::new(),
+            active: Vec::new(),
+            rates: Vec::new(),
+            changed: Vec::new(),
+            rates_buf: Vec::new(),
+            mark_flow: Vec::new(),
+            stamp: 0,
+            comp_flows: Vec::new(),
+            link_queue: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, id: usize) {
+        if id >= self.active.len() {
+            self.active.resize(id + 1, false);
+            self.rates.resize(id + 1, f64::INFINITY);
+            self.flow_links.resize(id + 1, Vec::new());
+            self.mark_flow.resize(id + 1, 0);
+        }
+    }
+
+    /// Activate flow `id` over `links` and re-solve its component.
+    pub fn insert(&mut self, id: usize, links: &[LinkId]) {
+        self.ensure(id);
+        debug_assert!(!self.active[id], "flow {id} inserted twice");
+        self.active[id] = true;
+        self.flow_links[id] = links.to_vec();
+        for &l in links {
+            self.link_flows[l].push(id);
+        }
+        self.changed.clear();
+        if links.is_empty() {
+            self.rates[id] = f64::INFINITY;
+            self.changed.push(id);
+            return;
+        }
+        self.resolve_component(id);
+    }
+
+    /// Deactivate flow `id` and re-solve what is left of its component.
+    pub fn remove(&mut self, id: usize) {
+        debug_assert!(self.active[id], "flow {id} removed while inactive");
+        self.active[id] = false;
+        let links = std::mem::take(&mut self.flow_links[id]);
+        for &l in &links {
+            let lf = &mut self.link_flows[l];
+            if let Some(p) = lf.iter().position(|&f| f == id) {
+                lf.swap_remove(p);
+            }
+        }
+        self.rates[id] = f64::INFINITY;
+        self.changed.clear();
+        // Seed the BFS with the departed links; the remaining flows of
+        // the (possibly now split) component get fresh rates.
+        self.stamp += 1;
+        self.comp_flows.clear();
+        self.link_queue.clear();
+        for &l in &links {
+            if self.mark_link[l] != self.stamp {
+                self.mark_link[l] = self.stamp;
+                self.link_queue.push(l);
+            }
+        }
+        self.bfs_and_solve();
+    }
+
+    /// Whether flow `id` is currently active.
+    pub fn is_active(&self, id: usize) -> bool {
+        id < self.active.len() && self.active[id]
+    }
+
+    /// Current max-min rate of active flow `id` (bytes/s; `INFINITY`
+    /// for link-less flows).
+    pub fn rate(&self, id: usize) -> f64 {
+        self.rates[id]
+    }
+
+    /// Flows whose stored rate was updated by the last `insert`/`remove`
+    /// (includes the inserted flow when its rate value changed).
+    pub fn changed(&self) -> &[usize] {
+        &self.changed
+    }
+
+    /// Re-solve the component containing active flow `seed`.
+    fn resolve_component(&mut self, seed: usize) {
+        self.stamp += 1;
+        self.comp_flows.clear();
+        self.link_queue.clear();
+        self.mark_flow[seed] = self.stamp;
+        self.comp_flows.push(seed);
+        for k in 0..self.flow_links[seed].len() {
+            let l = self.flow_links[seed][k];
+            if self.mark_link[l] != self.stamp {
+                self.mark_link[l] = self.stamp;
+                self.link_queue.push(l);
+            }
+        }
+        self.bfs_and_solve();
+    }
+
+    /// Expand `link_queue` to the full link-connected component, then
+    /// solve max-min over the collected flows and record rate changes.
+    fn bfs_and_solve(&mut self) {
+        let st = self.stamp;
+        let mut qi = 0;
+        while qi < self.link_queue.len() {
+            let l = self.link_queue[qi];
+            qi += 1;
+            for fi in 0..self.link_flows[l].len() {
+                let f = self.link_flows[l][fi];
+                if self.mark_flow[f] == st {
+                    continue;
+                }
+                self.mark_flow[f] = st;
+                self.comp_flows.push(f);
+                for li in 0..self.flow_links[f].len() {
+                    let fl = self.flow_links[f][li];
+                    if self.mark_link[fl] != st {
+                        self.mark_link[fl] = st;
+                        self.link_queue.push(fl);
+                    }
+                }
+            }
+        }
+        if self.comp_flows.is_empty() {
+            return;
+        }
+        {
+            let Self {
+                ref flow_links,
+                ref comp_flows,
+                ref caps,
+                ref mut scratch,
+                ref mut rates_buf,
+                ..
+            } = *self;
+            maxmin_rates_indexed(
+                comp_flows.len(),
+                |k| flow_links[comp_flows[k]].as_slice(),
+                caps.len(),
+                &|l| caps[l],
+                scratch,
+                rates_buf,
+            );
+        }
+        for k in 0..self.comp_flows.len() {
+            let f = self.comp_flows[k];
+            let r = self.rates_buf[k];
+            if self.rates[f] != r {
+                self.rates[f] = r;
+                self.changed.push(f);
+            }
+        }
     }
 }
 
@@ -197,5 +421,83 @@ mod tests {
             (used - caps(l)).abs() < 1e-9
         });
         assert!(saturated);
+    }
+
+    #[test]
+    fn incremental_basic_arrival_and_departure() {
+        let mut inc = IncrementalMaxMin::new(vec![100.0, 200.0]);
+        inc.insert(0, &[0]);
+        assert_eq!(inc.rate(0), 100.0);
+        inc.insert(1, &[0]);
+        assert_eq!(inc.rate(0), 50.0);
+        assert_eq!(inc.rate(1), 50.0);
+        // Flow 0's rate changed when flow 1 arrived.
+        assert!(inc.changed().contains(&0));
+        inc.insert(2, &[1]);
+        // Disjoint link: nothing else moves.
+        assert_eq!(inc.rate(2), 200.0);
+        assert!(!inc.changed().contains(&0) && !inc.changed().contains(&1));
+        inc.remove(1);
+        assert_eq!(inc.rate(0), 100.0);
+        assert!(inc.changed().contains(&0));
+        assert!(!inc.is_active(1));
+    }
+
+    #[test]
+    fn incremental_linkless_flow_is_unconstrained() {
+        let mut inc = IncrementalMaxMin::new(vec![100.0]);
+        inc.insert(0, &[]);
+        assert!(inc.rate(0).is_infinite());
+        inc.insert(1, &[0]);
+        assert_eq!(inc.rate(1), 100.0);
+        inc.remove(0);
+        assert_eq!(inc.rate(1), 100.0);
+    }
+
+    /// The satellite property: after every arrival/departure in a random
+    /// sequence, every active incremental rate matches a from-scratch
+    /// [`maxmin_rates`] solve over the live flow set.
+    #[test]
+    fn incremental_matches_scratch_solver() {
+        use crate::testing::Gen;
+        let mut g = Gen::new(0xFA15);
+        for _case in 0..40 {
+            let n_links = g.usize_in(1, 12);
+            let caps: Vec<f64> = (0..n_links)
+                .map(|_| 10.0 * g.usize_in(1, 20) as f64)
+                .collect();
+            let mut inc = IncrementalMaxMin::new(caps.clone());
+            let mut live: Vec<(usize, Vec<LinkId>)> = Vec::new();
+            let mut next_id = 0usize;
+            for _op in 0..40 {
+                if live.is_empty() || g.chance(0.6) {
+                    let n = g.usize_in(0, n_links.min(4));
+                    let mut links: Vec<LinkId> = (0..n_links).collect();
+                    g.shuffle(&mut links);
+                    links.truncate(n);
+                    inc.insert(next_id, &links);
+                    live.push((next_id, links));
+                    next_id += 1;
+                } else {
+                    let k = g.index(live.len());
+                    let (id, _) = live.swap_remove(k);
+                    inc.remove(id);
+                }
+                let flows: Vec<Vec<LinkId>> =
+                    live.iter().map(|(_, l)| l.clone()).collect();
+                let want = maxmin_rates(&flows, |l| caps[l]);
+                for ((id, _), w) in live.iter().zip(&want) {
+                    let got = inc.rate(*id);
+                    if w.is_infinite() {
+                        assert!(got.is_infinite(), "flow {id}");
+                    } else {
+                        assert!(
+                            (got - w).abs() <= 1e-9 * w.max(1.0),
+                            "flow {id}: incremental {got} vs scratch {w}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -22,19 +22,35 @@
 //! mechanism well (≈ the paper's 3% error); a fixed-cost, flat-topology
 //! simulator (FlexFlow-Sim) does not — which is exactly the comparison
 //! the paper's evaluation makes.
+//!
+//! ## Engines
+//!
+//! Two interchangeable engines execute the same physics:
+//!
+//! - `engine` (default, [`Emulator::simulate`]) — a true
+//!   discrete-event core: binary-heap event queue, lazily settled jobs
+//!   and flows, and incremental max-min ([`fairshare::IncrementalMaxMin`])
+//!   re-solving only the link-connected component each flow
+//!   arrival/departure touches. Cost scales with events × touched state.
+//! - `reference` ([`Emulator::simulate_reference`]) — the original
+//!   loop that rescans every running entity and re-solves fair sharing
+//!   globally at each state change. Kept as the semantic oracle: tests
+//!   pin the event engine's makespans to it, and `perf_hotpath.rs`
+//!   measures the speedup.
 
 pub mod fairshare;
 
-use std::collections::BinaryHeap;
+mod engine;
+mod reference;
 
 use crate::cluster::{Cluster, DeviceId, LinkId};
-use crate::compiler::{CollectiveKind, CommClass, ExecGraph, TaskId, TaskKind};
+use crate::compiler::{CollectiveKind, CommClass, CommTask, ExecGraph, TaskId};
 use crate::estimator::features::collective_profile;
 use crate::estimator::OpEstimator;
 use crate::executor::memory::MemoryTracker;
-use crate::executor::{SimReport, Span};
+use crate::executor::SimReport;
 use crate::util::rng::Rng;
-use crate::util::time::{secs_to_ps, Ps};
+use crate::util::time::Ps;
 use crate::Result;
 
 /// Emulator configuration.
@@ -68,6 +84,7 @@ pub struct Emulator<'a> {
     config: EmulatorConfig,
 }
 
+/// Reference-engine flow state (bytes remaining; see [`reference`]).
 #[derive(Debug)]
 struct Flow {
     job: usize,
@@ -77,6 +94,7 @@ struct Flow {
     remaining: f64, // bytes
 }
 
+/// Reference-engine communication job.
 #[derive(Debug)]
 struct CommJob {
     task: TaskId,
@@ -87,6 +105,7 @@ struct CommJob {
     group: Vec<DeviceId>,
 }
 
+/// Reference-engine computation job.
 #[derive(Debug)]
 struct CompJob {
     task: TaskId,
@@ -120,358 +139,42 @@ impl<'a> Emulator<'a> {
         1.0 + self.config.ripple * (rng.next_f64() - 0.5)
     }
 
-    /// Emulate one training step ("run it on the testbed").
+    /// Launch bookkeeping shared by both engines: the α (latency) phase
+    /// duration in seconds and the `(src, dst, bytes)` flow decomposition
+    /// of communication task `id`.
+    fn comm_launch(&self, c: &CommTask, id: TaskId) -> (f64, Vec<(DeviceId, DeviceId, f64)>) {
+        let (steps, factor) = collective_profile(c.kind, c.group.len());
+        let alpha_ps = match c.kind {
+            CollectiveKind::P2p => self.cluster.pair_latency(c.group[0], c.group[1]),
+            _ => self.cluster.ring_latency(&c.group),
+        };
+        let alpha = steps * alpha_ps as f64 / 1e12 * self.ripple(id);
+        (alpha, self.decompose(c, factor))
+    }
+
+    /// Emulate one training step ("run it on the testbed") with the
+    /// event-driven engine.
     pub fn simulate(&self, eg: &ExecGraph) -> Result<SimReport> {
         let base = self.estimator.estimate_all(eg)?;
         self.simulate_with_costs(eg, &base)
     }
 
-    /// Emulate with precomputed contention-free base costs.
+    /// Emulate with precomputed contention-free base costs
+    /// (event-driven engine).
     pub fn simulate_with_costs(&self, eg: &ExecGraph, base: &[Ps]) -> Result<SimReport> {
-        let n = eg.tasks.len();
-        let n_dev = eg.n_devices;
-        let delta = if self.config.interference {
-            self.cluster.device.overlap_interference
-        } else {
-            0.0
-        };
+        engine::simulate(self, eg, base)
+    }
 
-        let mut preds = eg.preds.clone();
-        // Ready queues.
-        let mut comp_ready: Vec<BinaryHeap<std::cmp::Reverse<TaskId>>> =
-            (0..n_dev).map(|_| BinaryHeap::new()).collect();
-        let mut comm_ready: Vec<TaskId> = Vec::new();
-        // Stream occupancy.
-        let mut comp_busy = vec![false; n_dev];
-        let mut feat_busy = vec![false; n_dev];
-        let mut grad_busy = vec![false; n_dev];
+    /// Emulate one step with the pre-event-driven reference loop (the
+    /// semantic oracle the event engine is pinned against).
+    pub fn simulate_reference(&self, eg: &ExecGraph) -> Result<SimReport> {
+        let base = self.estimator.estimate_all(eg)?;
+        self.simulate_with_costs_reference(eg, &base)
+    }
 
-        let mut comp_jobs: Vec<Option<CompJob>> = (0..n_dev).map(|_| None).collect();
-        let mut comm_jobs: Vec<CommJob> = Vec::new();
-        let mut flows: Vec<Flow> = Vec::new();
-
-        let mut mem = MemoryTracker::new(&eg.static_mem, self.cluster.device.memory_bytes);
-        let mut timeline = Vec::new();
-        let mut t = 0.0f64; // seconds
-        let mut done = 0usize;
-        let mut makespan: Ps = 0;
-        // Fluid-model state reused across events.
-        let mut active_flows: Vec<usize> = Vec::new();
-        let mut mm_scratch = fairshare::Scratch::new(self.cluster.links.len());
-        let mut rates: Vec<f64> = Vec::new();
-        // Jobs still in their α (latency) phase; pruned on expiry so the
-        // event loop never rescans completed jobs.
-        let mut alpha_active: Vec<usize> = Vec::new();
-        let mut running_jobs: usize = 0;
-
-        let mut enqueue = |id: TaskId,
-                           comp_ready: &mut Vec<BinaryHeap<std::cmp::Reverse<TaskId>>>,
-                           comm_ready: &mut Vec<TaskId>| {
-            match &eg.tasks[id].kind {
-                TaskKind::Comp(c) => comp_ready[c.device].push(std::cmp::Reverse(id)),
-                TaskKind::Comm(_) => comm_ready.push(id),
-            }
-        };
-        for (i, &p) in preds.iter().enumerate() {
-            if p == 0 {
-                enqueue(i, &mut comp_ready, &mut comm_ready);
-            }
-        }
-
-        loop {
-            // ---- Start everything startable at time t. ----------------
-            let mut started_any = true;
-            while started_any {
-                started_any = false;
-                for d in 0..n_dev {
-                    if comp_busy[d] {
-                        continue;
-                    }
-                    if let Some(std::cmp::Reverse(id)) = comp_ready[d].pop() {
-                        let work = base[id] as f64 / 1e12 * self.ripple(id);
-                        comp_busy[d] = true;
-                        comp_jobs[d] = Some(CompJob {
-                            task: id,
-                            device: d,
-                            remaining: work.max(1e-12),
-                            started: secs_to_ps(t),
-                        });
-                        mem_alloc(&mut mem, eg, id, secs_to_ps(t));
-                        started_any = true;
-                    }
-                }
-                // Communication: attempt in id order.
-                comm_ready.sort_unstable();
-                let mut i = 0;
-                while i < comm_ready.len() {
-                    let id = comm_ready[i];
-                    let c = match &eg.tasks[id].kind {
-                        TaskKind::Comm(c) => c,
-                        _ => unreachable!(),
-                    };
-                    let busy = match c.class {
-                        CommClass::Feature => &feat_busy,
-                        CommClass::Gradient => &grad_busy,
-                    };
-                    if c.group.iter().any(|&d| busy[d]) {
-                        i += 1;
-                        continue;
-                    }
-                    // Start this comm job.
-                    comm_ready.swap_remove(i);
-                    let busy = match c.class {
-                        CommClass::Feature => &mut feat_busy,
-                        CommClass::Gradient => &mut grad_busy,
-                    };
-                    for &d in &c.group {
-                        busy[d] = true;
-                    }
-                    let (steps, factor) = collective_profile(c.kind, c.group.len());
-                    let alpha_ps = match c.kind {
-                        CollectiveKind::P2p => {
-                            self.cluster.pair_latency(c.group[0], c.group[1])
-                        }
-                        _ => self.cluster.ring_latency(&c.group),
-                    };
-                    let alpha = steps * alpha_ps as f64 / 1e12 * self.ripple(id);
-                    let job_idx = comm_jobs.len();
-                    let job_flows = self.decompose(c, factor);
-                    let flows_left = job_flows.len();
-                    for (src, dst, bytes) in job_flows {
-                        active_flows.push(flows.len());
-                        flows.push(Flow {
-                            job: job_idx,
-                            src,
-                            dst,
-                            links: self.cluster.path(src, dst),
-                            remaining: bytes.max(1.0),
-                        });
-                    }
-                    alpha_active.push(job_idx);
-                    running_jobs += 1;
-                    comm_jobs.push(CommJob {
-                        task: id,
-                        alpha_remaining: alpha.max(1e-12),
-                        flows_left,
-                        started: secs_to_ps(t),
-                        class: c.class,
-                        group: c.group.clone(),
-                    });
-                    mem_alloc(&mut mem, eg, id, secs_to_ps(t));
-                    started_any = true;
-                }
-            }
-
-            // ---- Anything running? ------------------------------------
-            let comp_running = comp_jobs.iter().any(|j| j.is_some());
-            if !comp_running && running_jobs == 0 {
-                break;
-            }
-
-            // ---- Rates under the fluid model. --------------------------
-            // Prune finished flows once (swap_remove keeps this O(1)
-            // amortized; order is irrelevant to the fluid model).
-            {
-                let mut i = 0;
-                while i < active_flows.len() {
-                    let fi = active_flows[i];
-                    if flows[fi].remaining <= 0.0 {
-                        active_flows.swap_remove(i);
-                    } else {
-                        i += 1;
-                    }
-                }
-            }
-            // Devices with active flows (past their alpha phase).
-            let mut dev_has_flow = vec![false; n_dev];
-            let active_flow_idx: Vec<usize> = active_flows
-                .iter()
-                .copied()
-                .filter(|&fi| comm_jobs[flows[fi].job].alpha_remaining <= 0.0)
-                .collect();
-            for &fi in &active_flow_idx {
-                dev_has_flow[flows[fi].src] = true;
-                dev_has_flow[flows[fi].dst] = true;
-            }
-            let dev_computing: Vec<bool> = comp_jobs.iter().map(|j| j.is_some()).collect();
-
-            let flow_links: Vec<&[LinkId]> = active_flow_idx
-                .iter()
-                .map(|&fi| flows[fi].links.as_slice())
-                .collect();
-            fairshare::maxmin_rates_into(
-                &flow_links,
-                self.cluster.links.len(),
-                &|l| self.cluster.links[l].bandwidth,
-                &mut mm_scratch,
-                &mut rates,
-            );
-
-            // ---- Next event horizon. -----------------------------------
-            let mut dt = f64::INFINITY;
-            for j in comp_jobs.iter().flatten() {
-                let rate = if delta > 0.0 && dev_has_flow[j.device] {
-                    1.0 / (1.0 + delta)
-                } else {
-                    1.0
-                };
-                dt = dt.min(j.remaining / rate);
-            }
-            for &ji in &alpha_active {
-                if comm_jobs[ji].alpha_remaining > 0.0 {
-                    dt = dt.min(comm_jobs[ji].alpha_remaining);
-                }
-            }
-            let mut flow_rate = vec![0.0f64; active_flow_idx.len()];
-            for (k, &fi) in active_flow_idx.iter().enumerate() {
-                let f = &flows[fi];
-                let mut r = rates[k];
-                if delta > 0.0 && (dev_computing[f.src] || dev_computing[f.dst]) {
-                    r /= 1.0 + delta;
-                }
-                flow_rate[k] = r;
-                if r > 0.0 && r.is_finite() {
-                    dt = dt.min(f.remaining / r);
-                } else if r.is_infinite() {
-                    dt = dt.min(0.0);
-                }
-            }
-            if !dt.is_finite() {
-                return Err(crate::Error::sim("emulator stalled: no progress possible"));
-            }
-            let dt = dt.max(0.0);
-            t += dt;
-
-            // ---- Advance state & collect completions. ------------------
-            let eps = 1e-12;
-            // Compute jobs.
-            for d in 0..n_dev {
-                let finished = if let Some(j) = comp_jobs[d].as_mut() {
-                    let rate = if delta > 0.0 && dev_has_flow[d] {
-                        1.0 / (1.0 + delta)
-                    } else {
-                        1.0
-                    };
-                    j.remaining -= dt * rate;
-                    j.remaining <= eps
-                } else {
-                    false
-                };
-                if finished {
-                    let j = comp_jobs[d].take().unwrap();
-                    comp_busy[d] = false;
-                    let end = secs_to_ps(t);
-                    makespan = makespan.max(end);
-                    mem_free(&mut mem, eg, j.task, end);
-                    if self.config.record_timeline {
-                        timeline.push(Span {
-                            task: j.task,
-                            start: j.started,
-                            end,
-                        });
-                    }
-                    done += 1;
-                    for &s in &eg.succs[j.task] {
-                        preds[s] -= 1;
-                        if preds[s] == 0 {
-                            enqueue(s, &mut comp_ready, &mut comm_ready);
-                        }
-                    }
-                }
-            }
-            // Alpha phases (α-expired jobs with no flows complete here).
-            let mut completed_jobs: Vec<usize> = Vec::new();
-            {
-                let mut i = 0;
-                while i < alpha_active.len() {
-                    let ji = alpha_active[i];
-                    let job = &mut comm_jobs[ji];
-                    job.alpha_remaining -= dt;
-                    if job.alpha_remaining < eps {
-                        job.alpha_remaining = 0.0;
-                        if job.flows_left == 0 {
-                            completed_jobs.push(ji);
-                        }
-                        alpha_active.swap_remove(i);
-                    } else {
-                        i += 1;
-                    }
-                }
-            }
-            // Flows.
-            for (k, &fi) in active_flow_idx.iter().enumerate() {
-                let f = &mut flows[fi];
-                if flow_rate[k].is_finite() {
-                    f.remaining -= dt * flow_rate[k];
-                } else {
-                    f.remaining = 0.0;
-                }
-                if f.remaining <= 1e-6 && f.remaining > -1.0 {
-                    f.remaining = -2.0; // mark done
-                    let job = f.job;
-                    comm_jobs[job].flows_left -= 1;
-                    if comm_jobs[job].flows_left == 0 && comm_jobs[job].alpha_remaining <= 0.0 {
-                        completed_jobs.push(job);
-                    }
-                }
-            }
-            completed_jobs.sort_unstable();
-            completed_jobs.dedup();
-            for ji in completed_jobs {
-                if comm_jobs[ji].group.is_empty() {
-                    continue; // already finalized
-                }
-                running_jobs -= 1;
-                let end = secs_to_ps(t);
-                makespan = makespan.max(end);
-                let task = comm_jobs[ji].task;
-                let class = comm_jobs[ji].class;
-                let group = std::mem::take(&mut comm_jobs[ji].group);
-                let busy = match class {
-                    CommClass::Feature => &mut feat_busy,
-                    CommClass::Gradient => &mut grad_busy,
-                };
-                for &d in &group {
-                    busy[d] = false;
-                }
-                mem_free(&mut mem, eg, task, end);
-                if self.config.record_timeline {
-                    timeline.push(Span {
-                        task,
-                        start: comm_jobs[ji].started,
-                        end,
-                    });
-                }
-                done += 1;
-                for &s in &eg.succs[task] {
-                    preds[s] -= 1;
-                    if preds[s] == 0 {
-                        enqueue(s, &mut comp_ready, &mut comm_ready);
-                    }
-                }
-            }
-        }
-
-        if done != n {
-            return Err(crate::Error::sim(format!(
-                "emulator deadlock: {done} of {n} tasks"
-            )));
-        }
-        let secs = t;
-        Ok(SimReport {
-            step_ms: secs * 1e3,
-            throughput: if secs > 0.0 {
-                eg.batch as f64 / secs
-            } else {
-                0.0
-            },
-            peak_mem: mem.peaks().to_vec(),
-            oom: mem.oom(),
-            overlapped_ops: 0,
-            shared_ops: 0,
-            n_tasks: n,
-            timeline,
-        })
+    /// Reference-loop emulation with precomputed base costs.
+    pub fn simulate_with_costs_reference(&self, eg: &ExecGraph, base: &[Ps]) -> Result<SimReport> {
+        reference::simulate(self, eg, base)
     }
 
     /// Decompose a collective into `(src, dst, bytes)` flows.
@@ -586,6 +289,74 @@ mod tests {
         assert_eq!(a.n_tasks, eg.tasks.len());
     }
 
+    /// The tentpole invariant: the event-driven engine reproduces the
+    /// reference loop's makespans on the seed example graphs. Tolerance
+    /// is 1e-6 relative — the engines accumulate floating-point error in
+    /// different orders but share every scheduling decision.
+    #[test]
+    fn event_engine_matches_reference_loop() {
+        for (dp, preset, nodes) in [
+            (2usize, Preset::HC1, 1usize),
+            (4, Preset::HC1, 1),
+            (8, Preset::HC1, 1),
+            (4, Preset::HC2, 1),
+            (8, Preset::HC2, 1),
+            (16, Preset::HC2, 2),
+        ] {
+            let (_g, c, eg) = setup(dp, preset, nodes);
+            let est = OpEstimator::analytical(&c);
+            let base = est.estimate_all(&eg).unwrap();
+            let emu = Emulator::new(&c, &est);
+            let ev = emu.simulate_with_costs(&eg, &base).unwrap();
+            let rf = emu.simulate_with_costs_reference(&eg, &base).unwrap();
+            let rel = (ev.step_ms - rf.step_ms).abs() / rf.step_ms;
+            assert!(
+                rel < 1e-6,
+                "dp={dp} {preset:?}x{nodes}: event {} vs reference {} (rel {rel:.2e})",
+                ev.step_ms,
+                rf.step_ms
+            );
+            assert_eq!(ev.oom, rf.oom);
+            assert_eq!(ev.n_tasks, rf.n_tasks);
+            for (d, (&a, &b)) in ev.peak_mem.iter().zip(&rf.peak_mem).enumerate() {
+                let diff = a.abs_diff(b) as f64;
+                assert!(
+                    diff <= 0.01 * b as f64 + 1.0,
+                    "device {d}: peak {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    /// Same check with interference disabled (pure fluid model) and with
+    /// a non-default seed, so both config axes stay pinned.
+    #[test]
+    fn event_engine_matches_reference_under_configs() {
+        let (_g, c, eg) = setup(4, Preset::HC1, 1);
+        let est = OpEstimator::analytical(&c);
+        for config in [
+            EmulatorConfig {
+                interference: false,
+                ..EmulatorConfig::default()
+            },
+            EmulatorConfig {
+                seed: 0xBEEF,
+                ..EmulatorConfig::default()
+            },
+            EmulatorConfig {
+                ripple: 0.0,
+                ..EmulatorConfig::default()
+            },
+        ] {
+            let emu = Emulator::with_config(&c, &est, config);
+            let base = est.estimate_all(&eg).unwrap();
+            let ev = emu.simulate_with_costs(&eg, &base).unwrap();
+            let rf = emu.simulate_with_costs_reference(&eg, &base).unwrap();
+            let rel = (ev.step_ms - rf.step_ms).abs() / rf.step_ms;
+            assert!(rel < 1e-6, "config {config:?}: rel {rel:.2e}");
+        }
+    }
+
     #[test]
     fn different_seeds_differ_slightly() {
         let (_g, c, eg) = setup(4, Preset::HC1, 1);
@@ -623,7 +394,13 @@ mod tests {
         .simulate(&eg)
         .unwrap();
         let err = (htae.step_ms - truth.step_ms).abs() / truth.step_ms;
-        assert!(err < 0.15, "HTAE err {:.1}% (htae {} truth {})", err * 100.0, htae.step_ms, truth.step_ms);
+        assert!(
+            err < 0.15,
+            "HTAE err {:.1}% (htae {} truth {})",
+            err * 100.0,
+            htae.step_ms,
+            truth.step_ms
+        );
     }
 
     #[test]
@@ -642,6 +419,26 @@ mod tests {
         .simulate(&eg)
         .unwrap();
         assert!(with.step_ms >= without.step_ms);
+    }
+
+    #[test]
+    fn timeline_has_all_tasks_and_is_well_formed() {
+        let (_g, c, eg) = setup(4, Preset::HC1, 1);
+        let est = OpEstimator::analytical(&c);
+        let r = Emulator::with_config(
+            &c,
+            &est,
+            EmulatorConfig {
+                record_timeline: true,
+                ..EmulatorConfig::default()
+            },
+        )
+        .simulate(&eg)
+        .unwrap();
+        assert_eq!(r.timeline.len(), r.n_tasks);
+        for s in &r.timeline {
+            assert!(s.end >= s.start);
+        }
     }
 
     #[test]

@@ -1,0 +1,363 @@
+//! Reference emulator loop (the pre-event-driven engine).
+//!
+//! This is the original fluid-model iteration: at every state change it
+//! rescans *all* running jobs and flows, re-solves max-min fair sharing
+//! from scratch over the whole active flow set, and advances time to the
+//! nearest completion. Cost per event is `O(flows + links + devices)`,
+//! so large scenarios pay `O(events × flows)` overall.
+//!
+//! It is retained verbatim as the semantic oracle for the event-driven
+//! engine ([`super::engine`]): `Emulator::simulate_with_costs_reference`
+//! runs it, and the `event_engine_matches_reference_loop` tests plus
+//! `benches/perf_hotpath.rs` compare the two on identical inputs.
+
+use std::collections::BinaryHeap;
+
+use crate::compiler::{ExecGraph, TaskId, TaskKind};
+use crate::emulator::fairshare;
+use crate::executor::memory::MemoryTracker;
+use crate::executor::{SimReport, Span};
+use crate::util::time::{secs_to_ps, Ps};
+use crate::Result;
+
+use super::{mem_alloc, mem_free, CommClass, CommJob, CompJob, Emulator, Flow};
+
+/// Emulate one step with the reference loop (see module docs).
+pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Result<SimReport> {
+    let n = eg.tasks.len();
+    let n_dev = eg.n_devices;
+    let delta = if emu.config.interference {
+        emu.cluster.device.overlap_interference
+    } else {
+        0.0
+    };
+
+    let mut preds = eg.preds.clone();
+    // Ready queues.
+    let mut comp_ready: Vec<BinaryHeap<std::cmp::Reverse<TaskId>>> =
+        (0..n_dev).map(|_| BinaryHeap::new()).collect();
+    let mut comm_ready: Vec<TaskId> = Vec::new();
+    // Stream occupancy.
+    let mut comp_busy = vec![false; n_dev];
+    let mut feat_busy = vec![false; n_dev];
+    let mut grad_busy = vec![false; n_dev];
+
+    let mut comp_jobs: Vec<Option<CompJob>> = (0..n_dev).map(|_| None).collect();
+    let mut comm_jobs: Vec<CommJob> = Vec::new();
+    let mut flows: Vec<Flow> = Vec::new();
+
+    let mut mem = MemoryTracker::new(&eg.static_mem, emu.cluster.device.memory_bytes);
+    let mut timeline = Vec::new();
+    let mut t = 0.0f64; // seconds
+    let mut done = 0usize;
+    let mut makespan: Ps = 0;
+    // Fluid-model state reused across events.
+    let mut active_flows: Vec<usize> = Vec::new();
+    let mut mm_scratch = fairshare::Scratch::new(emu.cluster.links.len());
+    let mut rates: Vec<f64> = Vec::new();
+    // Jobs still in their α (latency) phase; pruned on expiry so the
+    // event loop never rescans completed jobs.
+    let mut alpha_active: Vec<usize> = Vec::new();
+    let mut running_jobs: usize = 0;
+
+    let enqueue = |id: TaskId,
+                   comp_ready: &mut Vec<BinaryHeap<std::cmp::Reverse<TaskId>>>,
+                   comm_ready: &mut Vec<TaskId>| {
+        match &eg.tasks[id].kind {
+            TaskKind::Comp(c) => comp_ready[c.device].push(std::cmp::Reverse(id)),
+            TaskKind::Comm(_) => comm_ready.push(id),
+        }
+    };
+    for (i, &p) in preds.iter().enumerate() {
+        if p == 0 {
+            enqueue(i, &mut comp_ready, &mut comm_ready);
+        }
+    }
+
+    loop {
+        // ---- Start everything startable at time t. ----------------
+        let mut started_any = true;
+        while started_any {
+            started_any = false;
+            for d in 0..n_dev {
+                if comp_busy[d] {
+                    continue;
+                }
+                if let Some(std::cmp::Reverse(id)) = comp_ready[d].pop() {
+                    let work = base[id] as f64 / 1e12 * emu.ripple(id);
+                    comp_busy[d] = true;
+                    comp_jobs[d] = Some(CompJob {
+                        task: id,
+                        device: d,
+                        remaining: work.max(1e-12),
+                        started: secs_to_ps(t),
+                    });
+                    mem_alloc(&mut mem, eg, id, secs_to_ps(t));
+                    started_any = true;
+                }
+            }
+            // Communication: attempt in id order.
+            comm_ready.sort_unstable();
+            let mut i = 0;
+            while i < comm_ready.len() {
+                let id = comm_ready[i];
+                let c = match &eg.tasks[id].kind {
+                    TaskKind::Comm(c) => c,
+                    _ => unreachable!(),
+                };
+                let busy = match c.class {
+                    CommClass::Feature => &feat_busy,
+                    CommClass::Gradient => &grad_busy,
+                };
+                if c.group.iter().any(|&d| busy[d]) {
+                    i += 1;
+                    continue;
+                }
+                // Start this comm job.
+                comm_ready.swap_remove(i);
+                let busy = match c.class {
+                    CommClass::Feature => &mut feat_busy,
+                    CommClass::Gradient => &mut grad_busy,
+                };
+                for &d in &c.group {
+                    busy[d] = true;
+                }
+                let (alpha, job_flows) = emu.comm_launch(c, id);
+                let job_idx = comm_jobs.len();
+                let flows_left = job_flows.len();
+                for (src, dst, bytes) in job_flows {
+                    active_flows.push(flows.len());
+                    flows.push(Flow {
+                        job: job_idx,
+                        src,
+                        dst,
+                        links: emu.cluster.path(src, dst),
+                        remaining: bytes.max(1.0),
+                    });
+                }
+                alpha_active.push(job_idx);
+                running_jobs += 1;
+                comm_jobs.push(CommJob {
+                    task: id,
+                    alpha_remaining: alpha.max(1e-12),
+                    flows_left,
+                    started: secs_to_ps(t),
+                    class: c.class,
+                    group: c.group.clone(),
+                });
+                mem_alloc(&mut mem, eg, id, secs_to_ps(t));
+                started_any = true;
+            }
+        }
+
+        // ---- Anything running? ------------------------------------
+        let comp_running = comp_jobs.iter().any(|j| j.is_some());
+        if !comp_running && running_jobs == 0 {
+            break;
+        }
+
+        // ---- Rates under the fluid model. --------------------------
+        // Prune finished flows once (swap_remove keeps this O(1)
+        // amortized; order is irrelevant to the fluid model).
+        {
+            let mut i = 0;
+            while i < active_flows.len() {
+                let fi = active_flows[i];
+                if flows[fi].remaining <= 0.0 {
+                    active_flows.swap_remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        // Devices with active flows (past their alpha phase).
+        let mut dev_has_flow = vec![false; n_dev];
+        let active_flow_idx: Vec<usize> = active_flows
+            .iter()
+            .copied()
+            .filter(|&fi| comm_jobs[flows[fi].job].alpha_remaining <= 0.0)
+            .collect();
+        for &fi in &active_flow_idx {
+            dev_has_flow[flows[fi].src] = true;
+            dev_has_flow[flows[fi].dst] = true;
+        }
+        let dev_computing: Vec<bool> = comp_jobs.iter().map(|j| j.is_some()).collect();
+
+        let flow_links: Vec<&[crate::cluster::LinkId]> = active_flow_idx
+            .iter()
+            .map(|&fi| flows[fi].links.as_slice())
+            .collect();
+        fairshare::maxmin_rates_into(
+            &flow_links,
+            emu.cluster.links.len(),
+            &|l| emu.cluster.links[l].bandwidth,
+            &mut mm_scratch,
+            &mut rates,
+        );
+
+        // ---- Next event horizon. -----------------------------------
+        let mut dt = f64::INFINITY;
+        for j in comp_jobs.iter().flatten() {
+            let rate = if delta > 0.0 && dev_has_flow[j.device] {
+                1.0 / (1.0 + delta)
+            } else {
+                1.0
+            };
+            dt = dt.min(j.remaining / rate);
+        }
+        for &ji in &alpha_active {
+            if comm_jobs[ji].alpha_remaining > 0.0 {
+                dt = dt.min(comm_jobs[ji].alpha_remaining);
+            }
+        }
+        let mut flow_rate = vec![0.0f64; active_flow_idx.len()];
+        for (k, &fi) in active_flow_idx.iter().enumerate() {
+            let f = &flows[fi];
+            let mut r = rates[k];
+            if delta > 0.0 && (dev_computing[f.src] || dev_computing[f.dst]) {
+                r /= 1.0 + delta;
+            }
+            flow_rate[k] = r;
+            if r > 0.0 && r.is_finite() {
+                dt = dt.min(f.remaining / r);
+            } else if r.is_infinite() {
+                dt = dt.min(0.0);
+            }
+        }
+        if !dt.is_finite() {
+            return Err(crate::Error::sim("emulator stalled: no progress possible"));
+        }
+        let dt = dt.max(0.0);
+        t += dt;
+
+        // ---- Advance state & collect completions. ------------------
+        let eps = 1e-12;
+        // Compute jobs.
+        for d in 0..n_dev {
+            let finished = if let Some(j) = comp_jobs[d].as_mut() {
+                let rate = if delta > 0.0 && dev_has_flow[d] {
+                    1.0 / (1.0 + delta)
+                } else {
+                    1.0
+                };
+                j.remaining -= dt * rate;
+                j.remaining <= eps
+            } else {
+                false
+            };
+            if finished {
+                let j = comp_jobs[d].take().unwrap();
+                comp_busy[d] = false;
+                let end = secs_to_ps(t);
+                makespan = makespan.max(end);
+                mem_free(&mut mem, eg, j.task, end);
+                if emu.config.record_timeline {
+                    timeline.push(Span {
+                        task: j.task,
+                        start: j.started,
+                        end,
+                    });
+                }
+                done += 1;
+                for &s in &eg.succs[j.task] {
+                    preds[s] -= 1;
+                    if preds[s] == 0 {
+                        enqueue(s, &mut comp_ready, &mut comm_ready);
+                    }
+                }
+            }
+        }
+        // Alpha phases (α-expired jobs with no flows complete here).
+        let mut completed_jobs: Vec<usize> = Vec::new();
+        {
+            let mut i = 0;
+            while i < alpha_active.len() {
+                let ji = alpha_active[i];
+                let job = &mut comm_jobs[ji];
+                job.alpha_remaining -= dt;
+                if job.alpha_remaining < eps {
+                    job.alpha_remaining = 0.0;
+                    if job.flows_left == 0 {
+                        completed_jobs.push(ji);
+                    }
+                    alpha_active.swap_remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        // Flows.
+        for (k, &fi) in active_flow_idx.iter().enumerate() {
+            let f = &mut flows[fi];
+            if flow_rate[k].is_finite() {
+                f.remaining -= dt * flow_rate[k];
+            } else {
+                f.remaining = 0.0;
+            }
+            if f.remaining <= 1e-6 && f.remaining > -1.0 {
+                f.remaining = -2.0; // mark done
+                let job = f.job;
+                comm_jobs[job].flows_left -= 1;
+                if comm_jobs[job].flows_left == 0 && comm_jobs[job].alpha_remaining <= 0.0 {
+                    completed_jobs.push(job);
+                }
+            }
+        }
+        completed_jobs.sort_unstable();
+        completed_jobs.dedup();
+        for ji in completed_jobs {
+            if comm_jobs[ji].group.is_empty() {
+                continue; // already finalized
+            }
+            running_jobs -= 1;
+            let end = secs_to_ps(t);
+            makespan = makespan.max(end);
+            let task = comm_jobs[ji].task;
+            let class = comm_jobs[ji].class;
+            let group = std::mem::take(&mut comm_jobs[ji].group);
+            let busy = match class {
+                CommClass::Feature => &mut feat_busy,
+                CommClass::Gradient => &mut grad_busy,
+            };
+            for &d in &group {
+                busy[d] = false;
+            }
+            mem_free(&mut mem, eg, task, end);
+            if emu.config.record_timeline {
+                timeline.push(Span {
+                    task,
+                    start: comm_jobs[ji].started,
+                    end,
+                });
+            }
+            done += 1;
+            for &s in &eg.succs[task] {
+                preds[s] -= 1;
+                if preds[s] == 0 {
+                    enqueue(s, &mut comp_ready, &mut comm_ready);
+                }
+            }
+        }
+    }
+
+    if done != n {
+        return Err(crate::Error::sim(format!(
+            "emulator deadlock: {done} of {n} tasks"
+        )));
+    }
+    let secs = t;
+    Ok(SimReport {
+        step_ms: secs * 1e3,
+        throughput: if secs > 0.0 {
+            eg.batch as f64 / secs
+        } else {
+            0.0
+        },
+        peak_mem: mem.peaks().to_vec(),
+        oom: mem.oom(),
+        overlapped_ops: 0,
+        shared_ops: 0,
+        n_tasks: n,
+        timeline,
+    })
+}

@@ -68,7 +68,7 @@ impl<'c> OpEstimator<'c> {
     pub fn best_available(cluster: &'c Cluster, path: &str) -> Self {
         match std::path::Path::new(path).exists() {
             true => Self::pjrt(cluster, path).unwrap_or_else(|e| {
-                log::warn!("PJRT cost kernel unavailable ({e}); using analytical backend");
+                eprintln!("warning: PJRT cost kernel unavailable ({e}); using analytical backend");
                 Self::analytical(cluster)
             }),
             false => Self::analytical(cluster),

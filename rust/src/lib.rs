@@ -50,6 +50,37 @@
 //! let report = Htae::new(&cluster, &est).simulate(&exec).unwrap();
 //! println!("throughput: {:.1} samples/s", report.throughput);
 //! ```
+//!
+//! ## Scenario sweeps
+//!
+//! [`runtime::SweepRunner`] simulates batches of `(model, cluster,
+//! strategy)` scenarios in parallel and ranks them by predicted
+//! throughput — the engine behind `proteus sweep` and
+//! `examples/strategy_search.rs`:
+//!
+//! ```no_run
+//! use proteus::runtime::{candidate_grid, Scenario, SweepRunner};
+//! use proteus::cluster::Preset;
+//! use proteus::models::ModelKind;
+//!
+//! let specs = candidate_grid(16, 64);
+//! let scenarios: Vec<Scenario> = specs
+//!     .into_iter()
+//!     .map(|spec| Scenario {
+//!         model: ModelKind::Gpt2,
+//!         batch: 64,
+//!         preset: Preset::HC2,
+//!         nodes: 2,
+//!         spec,
+//!     })
+//!     .collect();
+//! let outcomes = SweepRunner::new().run(&scenarios);
+//! for o in SweepRunner::rank(&outcomes).iter().take(5) {
+//!     println!("{}", o.describe());
+//! }
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod cli;
@@ -77,6 +108,7 @@ pub mod prelude {
     pub use crate::executor::{Htae, HtaeConfig, SimReport};
     pub use crate::graph::{Graph, OpKind};
     pub use crate::models::ModelKind;
+    pub use crate::runtime::{candidate_grid, Scenario, SweepOutcome, SweepRunner};
     pub use crate::strategy::{
         build_strategy, ParallelConfig, ScheduleConfig, StrategySpec, StrategyTree,
     };
@@ -86,30 +118,55 @@ pub mod prelude {
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Library-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// `Display`/`Error` are implemented by hand: the crate is std-only so
+/// it builds in fully offline environments (no `thiserror`).
+#[derive(Debug)]
 pub enum Error {
     /// Strategy is structurally invalid (bad partition degrees, device
     /// mapping mismatch, unknown node path, ...).
-    #[error("invalid strategy: {0}")]
     InvalidStrategy(String),
     /// Execution graph compilation failed.
-    #[error("compile error: {0}")]
     Compile(String),
     /// Simulation failed (deadlock, inconsistent graph, ...).
-    #[error("simulation error: {0}")]
     Simulation(String),
     /// Cluster topology is invalid.
-    #[error("invalid cluster: {0}")]
     InvalidCluster(String),
     /// Configuration file / JSON error.
-    #[error("config error: {0}")]
     Config(String),
     /// PJRT runtime error (artifact loading / execution).
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidStrategy(m) => write!(f, "invalid strategy: {m}"),
+            Error::Compile(m) => write!(f, "compile error: {m}"),
+            Error::Simulation(m) => write!(f, "simulation error: {m}"),
+            Error::InvalidCluster(m) => write!(f, "invalid cluster: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

@@ -1,87 +1,155 @@
-//! PJRT runtime: loads the AOT-compiled cost kernel and executes it from
-//! the Rust hot path.
+//! Runtime services: the AOT cost-kernel executor and the parallel
+//! scenario [`SweepRunner`].
 //!
-//! The artifact is **HLO text** (not a serialized `HloModuleProto`):
-//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the pinned
-//! `xla_extension` 0.5.1 rejects; the text parser reassigns ids and
-//! round-trips cleanly (see `/opt/xla-example/README.md` and
-//! `python/compile/aot.py`).
+//! ## PJRT cost kernel (`pjrt` feature)
 //!
-//! Python never runs at simulation time: `make artifacts` lowers the
-//! JAX/Pallas cost model once; this module compiles the text with the
-//! PJRT CPU client at startup and then executes batches of feature rows
-//! with no Python involvement.
+//! The production cost path loads an AOT-compiled JAX/Pallas kernel
+//! (**HLO text**, not a serialized `HloModuleProto`: jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that the pinned `xla_extension`
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+//! — see `python/compile/aot.py`) and executes it through the PJRT CPU
+//! client. Python never runs at simulation time: `make artifacts` lowers
+//! the JAX/Pallas cost model once; this module compiles the text at
+//! startup and then executes batches of feature rows with no Python
+//! involvement.
+//!
+//! The PJRT path needs the vendored `xla` bindings, which the offline
+//! build environment does not ship. It is therefore gated behind the
+//! `pjrt` cargo feature; the default build substitutes a stub
+//! [`CostKernel`] whose `load` fails cleanly, so
+//! `OpEstimator::best_available` falls back to the bit-faithful
+//! analytical mirror and every other subsystem works unchanged.
+//!
+//! ## Scenario sweeps
+//!
+//! [`SweepRunner`] simulates batches of `(model, cluster, strategy)`
+//! scenarios on a fixed thread pool, deduplicating the shared model
+//! graph construction, and ranks the survivors by predicted throughput.
+//! This is what makes large-scale strategy search (paper §I, Table 6)
+//! practical: hundreds of candidates per invocation, each costing
+//! milliseconds.
 
-use crate::estimator::features::{Row, FEATURES};
-use crate::{Error, Result};
+pub mod sweep;
+
+pub use sweep::{candidate_grid, Scenario, SweepOutcome, SweepRunner};
+
+#[cfg(not(feature = "pjrt"))]
+use crate::estimator::features::Row;
+#[cfg(not(feature = "pjrt"))]
+use crate::Result;
 
 /// Fixed batch size the kernel was lowered with (rows are padded to a
 /// multiple of this). Keep in sync with `python/compile/aot.py`.
 pub const KERNEL_BATCH: usize = 4096;
 
-/// A compiled cost-model executable on the PJRT CPU client.
-pub struct CostKernel {
-    exe: xla::PjRtLoadedExecutable,
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use super::KERNEL_BATCH;
+    use crate::estimator::features::{Row, FEATURES};
+    use crate::{Error, Result};
 
-impl CostKernel {
-    /// Load and compile `artifacts/costmodel.hlo.txt`.
-    pub fn load(path: &str) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| Error::Runtime(format!("parse {path}: {e}")))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {path}: {e}")))?;
-        Ok(CostKernel { exe, client })
+    /// A compiled cost-model executable on the PJRT CPU client.
+    pub struct CostKernel {
+        exe: xla::PjRtLoadedExecutable,
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
     }
 
-    /// Evaluate cost rows; returns one cost (ns) per input row.
-    pub fn eval(&self, rows: &[Row]) -> Result<Vec<f32>> {
-        let mut out = Vec::with_capacity(rows.len());
-        for chunk in rows.chunks(KERNEL_BATCH) {
-            let mut flat = vec![0f32; KERNEL_BATCH * FEATURES];
-            for (i, row) in chunk.iter().enumerate() {
-                flat[i * FEATURES..(i + 1) * FEATURES].copy_from_slice(row);
-            }
-            // Padding rows are all-zero: is_comm=0, flops=0, bytes=0,
-            // eff=0 → cost = launch 0 + max(0,0) = 0; harmless.
-            let lit = xla::Literal::vec1(&flat)
-                .reshape(&[KERNEL_BATCH as i64, FEATURES as i64])
-                .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
-            let result = self
-                .exe
-                .execute::<xla::Literal>(&[lit])
-                .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
-            let lit = result[0][0]
-                .to_literal_sync()
-                .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
-            // aot.py lowers with return_tuple=True → 1-tuple.
-            let tup = lit
-                .to_tuple1()
-                .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
-            let vals = tup
-                .to_vec::<f32>()
-                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
-            out.extend_from_slice(&vals[..chunk.len()]);
+    impl CostKernel {
+        /// Load and compile `artifacts/costmodel.hlo.txt`.
+        pub fn load(path: &str) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| Error::Runtime(format!("parse {path}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {path}: {e}")))?;
+            Ok(CostKernel { exe, client })
         }
-        Ok(out)
+
+        /// Evaluate cost rows; returns one cost (ns) per input row.
+        pub fn eval(&self, rows: &[Row]) -> Result<Vec<f32>> {
+            let mut out = Vec::with_capacity(rows.len());
+            for chunk in rows.chunks(KERNEL_BATCH) {
+                let mut flat = vec![0f32; KERNEL_BATCH * FEATURES];
+                for (i, row) in chunk.iter().enumerate() {
+                    flat[i * FEATURES..(i + 1) * FEATURES].copy_from_slice(row);
+                }
+                // Padding rows are all-zero: is_comm=0, flops=0, bytes=0,
+                // eff=0 → cost = launch 0 + max(0,0) = 0; harmless.
+                let lit = xla::Literal::vec1(&flat)
+                    .reshape(&[KERNEL_BATCH as i64, FEATURES as i64])
+                    .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
+                let result = self
+                    .exe
+                    .execute::<xla::Literal>(&[lit])
+                    .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+                let lit = result[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+                // aot.py lowers with return_tuple=True → 1-tuple.
+                let tup = lit
+                    .to_tuple1()
+                    .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+                let vals = tup
+                    .to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+                out.extend_from_slice(&vals[..chunk.len()]);
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::CostKernel;
+
+/// Stub cost kernel used when the crate is built without the `pjrt`
+/// feature (the default, offline-friendly configuration).
+///
+/// `load` always fails with a descriptive [`crate::Error::Runtime`], so
+/// `OpEstimator::best_available` falls back to the analytical mirror.
+#[cfg(not(feature = "pjrt"))]
+pub struct CostKernel {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl CostKernel {
+    /// Always fails: the PJRT backend is compiled out.
+    pub fn load(path: &str) -> Result<Self> {
+        Err(crate::Error::Runtime(format!(
+            "cannot load {path}: built without the 'pjrt' feature"
+        )))
+    }
+
+    /// Unreachable in practice ([`CostKernel::load`] never succeeds
+    /// without the `pjrt` feature).
+    pub fn eval(&self, _rows: &[Row]) -> Result<Vec<f32>> {
+        Err(crate::Error::Runtime(
+            "built without the 'pjrt' feature".into(),
+        ))
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_kernel_fails_cleanly() {
+        let err = super::CostKernel::load("artifacts/costmodel.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+    }
 
     /// Full PJRT round-trip — requires `make artifacts` to have run.
     /// Validates the kernel against the Rust analytical mirror on real
     /// feature rows; this is the cross-layer correctness gate.
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_kernel_matches_analytical_mirror() {
+        use super::*;
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/costmodel.hlo.txt");
         if !std::path::Path::new(path).exists() {
             eprintln!("skipping: {path} missing (run `make artifacts`)");

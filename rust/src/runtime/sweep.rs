@@ -1,0 +1,413 @@
+//! Parallel scenario sweeps: simulate many `(model, cluster, strategy)`
+//! candidates in one invocation and rank them by predicted throughput.
+//!
+//! This is the paper's motivating use case (§I): a simulator that costs
+//! milliseconds per strategy turns parallelization planning into a
+//! search problem. The [`SweepRunner`] exploits that:
+//!
+//! - **deduplicated compilation work** — scenarios sharing a `(model,
+//!   batch)` pair reuse one computation-graph build, and scenarios
+//!   sharing a `(preset, nodes)` pair reuse one cluster topology;
+//! - **thread-pool parallelism** — scenarios are drained from an atomic
+//!   work index by `std::thread::scope` workers (the crate is std-only
+//!   so it builds offline; the design is drop-in replaceable by a rayon
+//!   `par_iter` if the dependency is ever vendored);
+//! - **fault isolation** — a scenario whose strategy fails to build or
+//!   compile is recorded as an error outcome instead of aborting the
+//!   sweep, so exhaustive grids can include aggressive candidates.
+//!
+//! The per-scenario simulation itself uses the analytical cost backend:
+//! it is `Sync`, allocation-light, and bit-identical to the PJRT kernel
+//! arithmetic (see [`crate::estimator`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::cluster::{Cluster, Preset};
+use crate::executor::{calibrate, Htae, HtaeConfig, SimReport};
+use crate::graph::Graph;
+use crate::models::ModelKind;
+use crate::strategy::{build_strategy, StrategySpec};
+
+/// One sweep candidate: a model at a batch size, a cluster, a strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scenario {
+    /// Model under test.
+    pub model: ModelKind,
+    /// Global batch size.
+    pub batch: usize,
+    /// Hardware preset.
+    pub preset: Preset,
+    /// Nodes of the preset to instantiate.
+    pub nodes: usize,
+    /// Parallelization strategy.
+    pub spec: StrategySpec,
+}
+
+impl Scenario {
+    /// Human-readable scenario label.
+    pub fn label(&self) -> String {
+        format!(
+            "{} b={} {}x{} {}",
+            self.model.name(),
+            self.batch,
+            self.preset.name(),
+            self.nodes,
+            self.spec.label()
+        )
+    }
+}
+
+/// Result of simulating one [`Scenario`].
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// The scenario simulated.
+    pub scenario: Scenario,
+    /// The HTAE report, or a description of why the scenario failed
+    /// (invalid strategy, compile error, simulation error).
+    pub report: Result<SimReport, String>,
+    /// Wall-clock seconds spent compiling the execution graph.
+    pub compile_s: f64,
+    /// Wall-clock seconds spent estimating + simulating.
+    pub sim_s: f64,
+}
+
+impl SweepOutcome {
+    /// Predicted throughput, if the scenario simulated without error or
+    /// OOM.
+    pub fn throughput(&self) -> Option<f64> {
+        match &self.report {
+            Ok(r) if !r.oom => Some(r.throughput),
+            _ => None,
+        }
+    }
+
+    /// One-line summary for logs and examples.
+    pub fn describe(&self) -> String {
+        match &self.report {
+            Ok(r) if r.oom => format!("{}: OOM", self.scenario.label()),
+            Ok(r) => format!(
+                "{}: {:.1} samples/s ({:.2} ms/step)",
+                self.scenario.label(),
+                r.throughput,
+                r.step_ms
+            ),
+            Err(e) => format!("{}: failed ({e})", self.scenario.label()),
+        }
+    }
+}
+
+/// Parallel sweep executor. See the module docs for the design.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    threads: usize,
+    plain: bool,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        SweepRunner::new()
+    }
+}
+
+impl SweepRunner {
+    /// Runner sized to the machine (`available_parallelism`).
+    pub fn new() -> Self {
+        SweepRunner {
+            threads: 0,
+            plain: false,
+        }
+    }
+
+    /// Override the worker-thread count (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Disable runtime-behavior modeling (HTAE "Plain" ablation) for
+    /// every scenario.
+    pub fn plain(mut self, on: bool) -> Self {
+        self.plain = on;
+        self
+    }
+
+    /// Effective worker count for a sweep of `n_scenarios`.
+    pub fn effective_threads(&self, n_scenarios: usize) -> usize {
+        let auto = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let t = if self.threads > 0 { self.threads } else { auto };
+        t.clamp(1, n_scenarios.max(1))
+    }
+
+    /// Simulate every scenario, in parallel, returning outcomes in input
+    /// order. Shared model graphs and cluster topologies are built once.
+    pub fn run(&self, scenarios: &[Scenario]) -> Vec<SweepOutcome> {
+        if scenarios.is_empty() {
+            return Vec::new();
+        }
+
+        // Dedupe the shared compilation work up front: one graph build
+        // per (model, batch), one topology per (preset, nodes).
+        let mut graph_keys: Vec<(ModelKind, usize)> = Vec::new();
+        let mut graphs: Vec<Graph> = Vec::new();
+        let mut cluster_keys: Vec<(Preset, usize)> = Vec::new();
+        let mut clusters: Vec<Cluster> = Vec::new();
+        let mut graph_of = Vec::with_capacity(scenarios.len());
+        let mut cluster_of = Vec::with_capacity(scenarios.len());
+        for sc in scenarios {
+            let gk = (sc.model, sc.batch);
+            let gi = match graph_keys.iter().position(|&k| k == gk) {
+                Some(i) => i,
+                None => {
+                    graph_keys.push(gk);
+                    graphs.push(sc.model.build(sc.batch));
+                    graphs.len() - 1
+                }
+            };
+            graph_of.push(gi);
+            let ck = (sc.preset, sc.nodes);
+            let ci = match cluster_keys.iter().position(|&k| k == ck) {
+                Some(i) => i,
+                None => {
+                    cluster_keys.push(ck);
+                    clusters.push(Cluster::preset(sc.preset, sc.nodes));
+                    clusters.len() - 1
+                }
+            };
+            cluster_of.push(ci);
+        }
+        // γ is per-cluster; compute it once, outside the workers.
+        let gammas: Vec<f64> = clusters.iter().map(calibrate::default_gamma).collect();
+
+        let threads = self.effective_threads(scenarios.len());
+        let next = AtomicUsize::new(0);
+        let results: Vec<Mutex<Option<SweepOutcome>>> =
+            scenarios.iter().map(|_| Mutex::new(None)).collect();
+        let plain = self.plain;
+
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= scenarios.len() {
+                        break;
+                    }
+                    let sc = &scenarios[i];
+                    let out = run_one(
+                        sc,
+                        &graphs[graph_of[i]],
+                        &clusters[cluster_of[i]],
+                        gammas[cluster_of[i]],
+                        plain,
+                    );
+                    *results[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+            .collect()
+    }
+
+    /// Viable outcomes (no error, no OOM), best predicted throughput
+    /// first.
+    pub fn rank(outcomes: &[SweepOutcome]) -> Vec<&SweepOutcome> {
+        let mut viable: Vec<&SweepOutcome> = outcomes
+            .iter()
+            .filter(|o| o.throughput().is_some())
+            .collect();
+        viable.sort_by(|a, b| {
+            b.throughput()
+                .unwrap()
+                .total_cmp(&a.throughput().unwrap())
+        });
+        viable
+    }
+}
+
+fn run_one(
+    sc: &Scenario,
+    graph: &Graph,
+    cluster: &Cluster,
+    gamma: f64,
+    plain: bool,
+) -> SweepOutcome {
+    let fail = |e: String, compile_s: f64| SweepOutcome {
+        scenario: *sc,
+        report: Err(e),
+        compile_s,
+        sim_s: 0.0,
+    };
+    let tree = match build_strategy(graph, sc.spec) {
+        Ok(t) => t,
+        Err(e) => return fail(e.to_string(), 0.0),
+    };
+    let t0 = Instant::now();
+    let eg = match crate::compiler::compile(graph, &tree, cluster) {
+        Ok(eg) => eg,
+        Err(e) => return fail(e.to_string(), t0.elapsed().as_secs_f64()),
+    };
+    let compile_s = t0.elapsed().as_secs_f64();
+    let est = crate::estimator::OpEstimator::analytical(cluster);
+    let config = if plain {
+        HtaeConfig::plain()
+    } else {
+        HtaeConfig {
+            gamma,
+            ..HtaeConfig::default()
+        }
+    };
+    let t1 = Instant::now();
+    let report = Htae::with_config(cluster, &est, config)
+        .simulate(&eg)
+        .map_err(|e| e.to_string());
+    SweepOutcome {
+        scenario: *sc,
+        report,
+        compile_s,
+        sim_s: t1.elapsed().as_secs_f64(),
+    }
+}
+
+/// Exhaustive strategy grid for `n_devices` GPUs at global batch
+/// `batch`: every `dp × mp × pp` factorization (pp ∈ {1, 2, 4, 8}),
+/// micro-batch counts compatible with the batch, and the ZeRO /
+/// recomputation toggles (recompute only without pipelining, matching
+/// the compiler's supported space).
+///
+/// The grid deliberately includes aggressive candidates (e.g. high `mp`
+/// on models whose head counts don't divide) — [`SweepRunner`] records
+/// those as error outcomes rather than failing the sweep.
+pub fn candidate_grid(n_devices: usize, batch: usize) -> Vec<StrategySpec> {
+    let mut out = Vec::new();
+    for pp in [1usize, 2, 4, 8] {
+        if n_devices % pp != 0 {
+            continue;
+        }
+        let rest = n_devices / pp;
+        for dp in 1..=rest {
+            if rest % dp != 0 || batch % dp != 0 {
+                continue;
+            }
+            let mp = rest / dp;
+            if !mp.is_power_of_two() {
+                continue;
+            }
+            let micros: &[usize] = if pp > 1 { &[2, 4, 8] } else { &[1, 2, 4, 8] };
+            for &micro in micros {
+                if batch % (dp * micro) != 0 {
+                    continue;
+                }
+                let base = StrategySpec::hybrid(dp, mp, pp, micro);
+                out.push(base);
+                out.push(base.with_zero());
+                if pp == 1 {
+                    out.push(base.with_recompute());
+                    out.push(base.with_zero().with_recompute());
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_large_and_valid() {
+        let specs = candidate_grid(16, 64);
+        assert!(specs.len() >= 100, "grid too small: {}", specs.len());
+        for s in &specs {
+            assert_eq!(s.dp * s.mp * s.pp, 16, "{}", s.label());
+            assert_eq!(64 % (s.dp * s.n_micro_batch), 0, "{}", s.label());
+            assert!(!(s.recompute && s.pp > 1), "{}", s.label());
+        }
+    }
+
+    #[test]
+    fn grid_has_no_duplicates() {
+        let specs = candidate_grid(8, 32);
+        for (i, a) in specs.iter().enumerate() {
+            for b in &specs[i + 1..] {
+                assert_ne!(a, b, "duplicate spec {}", a.label());
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_runs_ranks_and_dedupes() {
+        // Small but real sweep: 2 devices, a handful of strategies.
+        let scenarios: Vec<Scenario> = candidate_grid(2, 16)
+            .into_iter()
+            .map(|spec| Scenario {
+                model: ModelKind::Vgg19,
+                batch: 16,
+                preset: Preset::HC1,
+                nodes: 1,
+                spec,
+            })
+            .collect();
+        assert!(scenarios.len() >= 4);
+        let outcomes = SweepRunner::new().with_threads(2).run(&scenarios);
+        assert_eq!(outcomes.len(), scenarios.len());
+        // Outcomes come back in input order.
+        for (o, sc) in outcomes.iter().zip(&scenarios) {
+            assert_eq!(o.scenario, *sc);
+        }
+        let ranked = SweepRunner::rank(&outcomes);
+        assert!(!ranked.is_empty(), "at least plain DP must simulate");
+        for w in ranked.windows(2) {
+            assert!(w[0].throughput().unwrap() >= w[1].throughput().unwrap());
+        }
+    }
+
+    #[test]
+    fn sweep_matches_sequential_simulation() {
+        // The parallel sweep must be a pure reordering of sequential
+        // simulation: same reports, bit-identical step times.
+        let scenarios: Vec<Scenario> = [
+            StrategySpec::data_parallel(2),
+            StrategySpec::data_parallel(4),
+            StrategySpec::hybrid(2, 2, 1, 1),
+        ]
+        .into_iter()
+        .map(|spec| Scenario {
+            model: ModelKind::Vgg19,
+            batch: 16,
+            preset: Preset::HC1,
+            nodes: 1,
+            spec,
+        })
+        .collect();
+        let par = SweepRunner::new().with_threads(3).run(&scenarios);
+        let seq = SweepRunner::new().with_threads(1).run(&scenarios);
+        for (a, b) in par.iter().zip(&seq) {
+            let (ra, rb) = (a.report.as_ref().unwrap(), b.report.as_ref().unwrap());
+            assert_eq!(ra.step_ms, rb.step_ms, "{}", a.scenario.label());
+            assert_eq!(ra.peak_mem, rb.peak_mem);
+        }
+    }
+
+    #[test]
+    fn invalid_strategies_are_isolated() {
+        let scenarios = [Scenario {
+            model: ModelKind::Vgg19,
+            batch: 16,
+            preset: Preset::HC1,
+            nodes: 1,
+            // dp=3 does not divide the batch evenly into device count 8.
+            spec: StrategySpec::hybrid(3, 1, 1, 1),
+        }];
+        let outcomes = SweepRunner::new().run(&scenarios);
+        assert_eq!(outcomes.len(), 1);
+        // Either an error or a report — but never a panic/abort.
+        let _ = outcomes[0].describe();
+    }
+}

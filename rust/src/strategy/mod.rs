@@ -1,6 +1,29 @@
 //! Strategy trees: the paper's unified representation of parallelization
 //! strategies (§IV), plus propagation/resolution (§VII) and high-level
 //! `DP × MP × PP` strategy builders.
+//!
+//! Build a strategy tree from a spec and simulate one step:
+//!
+//! ```
+//! use proteus::prelude::*;
+//!
+//! // A 2-layer MLP at batch 8 on one HC1 (8×Titan Xp, PCIe) node.
+//! let mut b = proteus::graph::GraphBuilder::new("mlp", 8);
+//! let x = b.input("x", &[8, 256], proteus::graph::DType::F32);
+//! let h = b.linear("fc1", x, 256, 512);
+//! let h = b.relu("act", h);
+//! let h = b.linear("fc2", h, 512, 256);
+//! let _ = b.loss("loss", h);
+//! let model = b.finish();
+//!
+//! // 4-way data parallelism as a strategy tree, compiled + simulated.
+//! let cluster = Cluster::preset(Preset::HC1, 1);
+//! let tree = build_strategy(&model, StrategySpec::data_parallel(4)).unwrap();
+//! let exec = compile(&model, &tree, &cluster).unwrap();
+//! let est = OpEstimator::analytical(&cluster);
+//! let report = Htae::new(&cluster, &est).simulate(&exec).unwrap();
+//! assert!(report.throughput > 0.0);
+//! ```
 
 pub mod builders;
 pub mod config;
