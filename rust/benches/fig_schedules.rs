@@ -1,0 +1,95 @@
+//! Pipeline-schedule comparison: makespan and peak activation memory of
+//! GPipe fill-drain vs 1F1B vs interleaved-1F1B on GPT-2 at pp ∈ {2, 4,
+//! 8} with 8 micro-batches.
+//!
+//! The three schedules execute identical work (same tasks, same FLOPs,
+//! same communication volume — pinned by `rust/tests/properties.rs`);
+//! what differs is the per-device execution order the compiler's
+//! schedule lowering emits (`compiler/schedule.rs`). Expected shape:
+//!
+//!   - 1F1B strictly undercuts GPipe's peak activation watermark
+//!     whenever `micro > pp` (the early backwards free each
+//!     micro-batch's activations instead of holding all of them to the
+//!     flush); at the degenerate `micro == pp` boundary the first
+//!     stage's 1F1B bound equals the micro-batch count, so only `≤` is
+//!     guaranteed there;
+//!   - interleaved (modeled as virtual-chunk scheduling on the same
+//!     contiguous placement — see `compiler/schedule.rs`) sits between
+//!     the two on memory;
+//!   - step times stay in the same band — the schedule moves memory far
+//!     more than it moves the bubble at these depths.
+//!
+//! Run: `cargo bench --bench fig_schedules`
+
+use proteus::cluster::{Cluster, Preset};
+use proteus::estimator::OpEstimator;
+use proteus::executor::Htae;
+use proteus::models::ModelKind;
+use proteus::strategy::{build_strategy, PipelineSchedule, StrategySpec};
+use proteus::util::fmt_bytes;
+use proteus::util::table::Table;
+
+fn main() {
+    let schedules = PipelineSchedule::all();
+    let batch = 32;
+    let micro = 8;
+    println!(
+        "\n=== fig_schedules: pipeline execution orders on GPT-2 (batch={batch}, micro={micro}) ===\n"
+    );
+    let mut table = Table::new(&[
+        "pp",
+        "schedule",
+        "step_ms",
+        "samples/s",
+        "peak_act",
+        "peak_mem",
+    ]);
+    let g = ModelKind::Gpt2.build(batch);
+    let c = Cluster::preset(Preset::HC2, 1);
+    let est = OpEstimator::analytical(&c);
+    for pp in [2usize, 4, 8] {
+        let mut peaks: Vec<(PipelineSchedule, u64)> = Vec::new();
+        for &s in &schedules {
+            let spec = StrategySpec::hybrid(1, 1, pp, micro).with_schedule(s);
+            let tree = build_strategy(&g, spec).expect("strategy builds");
+            let eg = proteus::compiler::compile(&g, &tree, &c).expect("compiles");
+            let r = Htae::new(&c, &est).simulate(&eg).expect("simulates");
+            let peak_act = r.peak_act.iter().copied().max().unwrap();
+            let peak = r.peak_mem.iter().copied().max().unwrap();
+            peaks.push((s, peak_act));
+            table.row(vec![
+                pp.to_string(),
+                s.name(),
+                format!("{:.2}", r.step_ms),
+                format!("{:.1}", r.throughput),
+                fmt_bytes(peak_act),
+                fmt_bytes(peak),
+            ]);
+        }
+        let of = |want: PipelineSchedule| peaks.iter().find(|(s, _)| *s == want).unwrap().1;
+        let gpipe = of(PipelineSchedule::GpipeFillDrain);
+        let f1b = of(PipelineSchedule::OneFOneB);
+        let inter = of(PipelineSchedule::Interleaved { v: 2 });
+        if micro > pp {
+            assert!(
+                f1b < gpipe,
+                "pp={pp}: 1F1B peak activation {f1b} must undercut GPipe {gpipe}"
+            );
+        } else {
+            // micro == pp: the first stage's 1F1B in-flight bound equals
+            // the micro-batch count, so the watermarks may coincide.
+            assert!(
+                f1b <= gpipe,
+                "pp={pp}: 1F1B peak activation {f1b} must not exceed GPipe {gpipe}"
+            );
+        }
+        assert!(
+            inter <= gpipe,
+            "pp={pp}: interleaved peak activation {inter} must not exceed GPipe {gpipe}"
+        );
+    }
+    print!("{}", table.render());
+    println!(
+        "\n1F1B bounds in-flight micro-batches at pp - stage; GPipe holds all {micro};\ninterleaved schedules each stage's virtual chunks with per-chunk 1F1B bounds."
+    );
+}

@@ -2,10 +2,68 @@
 //!
 //! Grammar: `proteus <command> [--key value]... [--flag]...`. Values
 //! never start with `--`; unknown keys are rejected so typos fail loudly.
+//! The [`HELP`] text lives next to the parser so the documented surface
+//! and the grammar stay in one file; `proteus help` and a `--help` flag
+//! on any command print it.
 
 use std::collections::BTreeMap;
 
 use crate::{Error, Result};
+
+/// The `proteus help` / `--help` text. Every option listed here is
+/// consumed by a command in `cli::run` (and vice versa — the
+/// `reject_unknown` pass makes undocumented stragglers fail loudly).
+pub const HELP: &str = "\
+Proteus-RS: simulating the performance of distributed DNN training.
+
+USAGE: proteus <command> [options]
+
+COMMANDS:
+  simulate    Predict throughput/memory of one (model, strategy, cluster)
+  compare     Sweep the strategies of a JSON experiment config
+  sweep       Rank an exhaustive strategy grid in parallel (SweepRunner)
+  calibrate   Measure the overlap factor gamma per hardware preset
+  info        Print a model's structure statistics
+  bench-cost  Benchmark the PJRT vs analytical cost backends
+  help        This message (also: --help on any command)
+
+WORKLOAD OPTIONS (simulate, sweep):
+  --model <resnet50|inception_v3|vgg19|gpt2|gpt-1.5b|dlrm>
+  --batch N         global batch size
+  --preset <HC1|HC2|HC3>  hardware preset
+  --nodes N         nodes of the preset to instantiate
+
+STRATEGY OPTIONS (simulate):
+  --dp N --mp N --pp N --micro N   parallel degrees + micro-batches
+  --schedule <gpipe|1f1b|interleaved[:v]>
+                    pipeline execution order (default 1f1b)
+  --vstages N       virtual stages per device for interleaved (default 2)
+  --zero            ZeRO parameter/optimizer sharding
+  --recompute       activation recomputation
+  --emb-shard       shard embedding tables (DLRM expert strategy)
+
+SWEEP OPTIONS:
+  --schedules <all|gpipe|1f1b|interleaved[:v]|a,b,...>
+                    schedule set to enumerate for pipelined candidates
+                    (default 1f1b)
+  --threads N       worker threads (0 = auto)
+  --top N           ranked rows to print (default 10)
+
+OUTPUT / VALIDATION:
+  --json            machine-readable JSON on stdout (simulate, sweep;
+                    schemas documented in README.md)
+  --plain           disable runtime-behavior modeling (ablation)
+  --truth           also run the flow-level testbed emulator
+  --flexflow        also run the FlexFlow-Sim baseline (simulate)
+  --trace FILE      write a Chrome/Perfetto trace of the HTAE timeline
+  --artifacts PATH  AOT cost-kernel artifact (default artifacts/costmodel.hlo.txt)
+
+OTHER:
+  calibrate --out FILE   write calibrated gammas as JSON
+  compare --config FILE  experiment config (see configs/ examples)
+  info --model M [--batch N]
+  bench-cost [--rows N] [--artifacts PATH]
+";
 
 /// Parsed arguments: a command plus key→value options and boolean flags.
 #[derive(Debug, Default)]

@@ -3,16 +3,22 @@
 //!
 //! ```text
 //! proteus simulate  --model gpt2 --batch 64 --preset HC2 --nodes 2
-//!                   --dp 4 --mp 2 --pp 2 --micro 4 [--zero] [--recompute]
-//!                   [--emb-shard] [--plain] [--truth] [--trace out.json]
+//!                   --dp 4 --mp 2 --pp 2 --micro 4
+//!                   [--schedule gpipe|1f1b|interleaved[:v]] [--vstages N]
+//!                   [--zero] [--recompute] [--emb-shard] [--plain]
+//!                   [--truth] [--json] [--trace out.json]
 //!                   [--artifacts artifacts/costmodel.hlo.txt]
 //! proteus compare   --config configs/gpt2_hc2.json [--truth]
 //! proteus sweep     --model gpt2 --batch 64 --preset HC2 --nodes 2
-//!                   [--threads N] [--top 10] [--plain] [--truth]
+//!                   [--schedules all|gpipe|1f1b|interleaved[:v]]
+//!                   [--threads N] [--top 10] [--plain] [--truth] [--json]
 //! proteus calibrate [--out configs/gamma.json]
 //! proteus info      --model resnet50 [--batch 32]
 //! proteus bench-cost [--rows 65536] [--artifacts ...]
 //! ```
+//!
+//! The full flag reference is [`args::HELP`]; the `--json` output
+//! schemas are documented in the repo README.
 
 pub mod args;
 
@@ -22,19 +28,23 @@ use crate::emulator::Emulator;
 use crate::estimator::OpEstimator;
 use crate::executor::{calibrate, Htae, HtaeConfig};
 use crate::models::ModelKind;
-use crate::strategy::{build_strategy, StrategySpec};
+use crate::strategy::{build_strategy, PipelineSchedule, StrategySpec};
 use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::util::{fmt_bytes, rel_err_pct};
 use crate::{Error, Result};
 
-pub use args::Args;
+pub use args::{Args, HELP};
 
 /// Default artifact path.
 pub const DEFAULT_ARTIFACT: &str = "artifacts/costmodel.hlo.txt";
 
 /// Entry point: dispatch a parsed command line.
 pub fn run(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        print!("{}", HELP);
+        return Ok(());
+    }
     match args.command.as_str() {
         "simulate" => cmd_simulate(args),
         "compare" => cmd_compare(args),
@@ -51,31 +61,6 @@ pub fn run(args: &Args) -> Result<()> {
         ))),
     }
 }
-
-const HELP: &str = "\
-Proteus-RS: simulating the performance of distributed DNN training.
-
-USAGE: proteus <command> [options]
-
-COMMANDS:
-  simulate    Predict throughput/memory of one (model, strategy, cluster)
-  compare     Sweep the strategies of a JSON experiment config
-  sweep       Rank an exhaustive strategy grid in parallel (SweepRunner)
-  calibrate   Measure the overlap factor gamma per hardware preset
-  info        Print a model's structure statistics
-  bench-cost  Benchmark the PJRT vs analytical cost backends
-  help        This message
-
-COMMON OPTIONS:
-  --model <resnet50|inception_v3|vgg19|gpt2|gpt-1.5b|dlrm>
-  --batch N --preset <HC1|HC2|HC3> --nodes N
-  --dp N --mp N --pp N --micro N  [--zero] [--recompute] [--emb-shard]
-  --plain           disable runtime-behavior modeling (ablation)
-  --truth           also run the flow-level testbed emulator
-  --flexflow        also run the FlexFlow-Sim baseline
-  --trace FILE      write a Chrome trace of the HTAE timeline
-  --artifacts PATH  AOT cost-kernel artifact (default artifacts/costmodel.hlo.txt)
-";
 
 /// Build the `(model, cluster, spec)` triple shared by commands.
 fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Cluster, StrategySpec)> {
@@ -97,7 +82,42 @@ fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Cluster, StrategySpe
     spec.zero = args.flag("zero");
     spec.recompute = args.flag("recompute");
     spec.shard_embeddings = args.flag("emb-shard");
+    let sched = args.get_or("schedule", "1f1b");
+    let mut sched = PipelineSchedule::parse(&sched)
+        .ok_or_else(|| Error::Config(format!("unknown schedule '{sched}'")))?;
+    if let Some(vs) = args.get("vstages") {
+        let v: usize = vs
+            .parse()
+            .map_err(|_| Error::Config(format!("--vstages: '{vs}' is not an integer")))?;
+        if v == 0 {
+            return Err(Error::Config("--vstages must be ≥ 1".into()));
+        }
+        match sched {
+            PipelineSchedule::Interleaved { .. } => {
+                sched = PipelineSchedule::Interleaved { v };
+            }
+            _ => {
+                return Err(Error::Config(
+                    "--vstages requires --schedule interleaved".into(),
+                ))
+            }
+        }
+    }
+    spec.schedule = sched;
     Ok((model, batch, cluster, spec))
+}
+
+/// Parse the sweep's `--schedules` set.
+fn parse_schedules(s: &str) -> Result<Vec<PipelineSchedule>> {
+    if s == "all" {
+        return Ok(PipelineSchedule::all());
+    }
+    s.split(',')
+        .map(|tok| {
+            PipelineSchedule::parse(tok.trim())
+                .ok_or_else(|| Error::Config(format!("unknown schedule '{tok}'")))
+        })
+        .collect()
 }
 
 fn estimator<'c>(args: &Args, cluster: &'c Cluster) -> OpEstimator<'c> {
@@ -110,6 +130,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let plain = args.flag("plain");
     let truth = args.flag("truth");
     let flexflow = args.flag("flexflow");
+    let json = args.flag("json");
     let trace_path = args.get("trace").map(|s| s.to_string());
     args.reject_unknown()?;
 
@@ -131,50 +152,124 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let t1 = std::time::Instant::now();
     let report = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
     let exe_s = t1.elapsed().as_secs_f64();
+    let backend = if est.is_pjrt() { "pjrt" } else { "analytical" };
+    // Run the optional validators once, up front, so the JSON and text
+    // paths cannot drift.
+    let truth_report = if truth {
+        Some(Emulator::new(&cluster, &est).simulate(&eg)?)
+    } else {
+        None
+    };
+    let flexflow_report = if flexflow {
+        Some(FlexFlowSim::new(&cluster).simulate(&graph, &tree, &eg))
+    } else {
+        None
+    };
 
-    println!(
-        "model={} strategy={} cluster={}({} GPUs) backend={}",
-        model.name(),
-        spec.label(),
-        cluster.name,
-        cluster.num_devices(),
-        if est.is_pjrt() { "pjrt" } else { "analytical" },
-    );
-    println!(
-        "tasks={} compile={:.3}s simulate={:.3}s",
-        eg.tasks.len(),
-        compile_s,
-        exe_s
-    );
-    println!(
-        "step={:.2} ms  throughput={:.1} samples/s  oom={}  peak_mem={}",
-        report.step_ms,
-        report.throughput,
-        report.oom,
-        fmt_bytes(report.peak_mem.iter().copied().max().unwrap_or(0)),
-    );
-    println!(
-        "behaviors: {} overlapped comps, {} bandwidth-shared comms",
-        report.overlapped_ops, report.shared_ops
-    );
-    if truth {
-        let t = Emulator::new(&cluster, &est).simulate(&eg)?;
+    if json {
+        // Schema documented in README.md ("JSON output").
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("model", Json::Str(model.name().into())),
+            ("strategy", Json::Str(spec.label())),
+            ("schedule", Json::Str(spec.schedule.name())),
+            ("cluster", Json::Str(cluster.name.clone())),
+            ("gpus", Json::Num(cluster.num_devices() as f64)),
+            ("backend", Json::Str(backend.into())),
+            ("tasks", Json::Num(eg.tasks.len() as f64)),
+            ("compile_s", Json::Num(compile_s)),
+            ("simulate_s", Json::Num(exe_s)),
+            ("step_ms", Json::Num(report.step_ms)),
+            ("throughput_samples_per_s", Json::Num(report.throughput)),
+            ("oom", Json::Bool(report.oom)),
+            (
+                "peak_mem_bytes",
+                Json::Arr(
+                    report
+                        .peak_mem
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "peak_act_bytes",
+                Json::Arr(
+                    report
+                        .peak_act
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+            ("overlapped_ops", Json::Num(report.overlapped_ops as f64)),
+            ("shared_ops", Json::Num(report.shared_ops as f64)),
+        ];
+        if let Some(t) = &truth_report {
+            fields.push((
+                "truth",
+                Json::obj(vec![
+                    ("step_ms", Json::Num(t.step_ms)),
+                    ("throughput_samples_per_s", Json::Num(t.throughput)),
+                    ("err_pct", Json::Num(rel_err_pct(report.step_ms, t.step_ms))),
+                ]),
+            ));
+        }
+        if let Some(ff) = &flexflow_report {
+            fields.push((
+                "flexflow",
+                match ff {
+                    Ok(f) => Json::obj(vec![("step_ms", Json::Num(f.step_ms))]),
+                    Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
+                },
+            ));
+        }
+        println!("{}", Json::obj(fields).to_string_pretty());
+    } else {
         println!(
-            "emulator(truth): step={:.2} ms throughput={:.1}  HTAE error={:.2}%",
-            t.step_ms,
-            t.throughput,
-            rel_err_pct(report.step_ms, t.step_ms)
+            "model={} strategy={} cluster={}({} GPUs) backend={}",
+            model.name(),
+            spec.label(),
+            cluster.name,
+            cluster.num_devices(),
+            backend,
         );
-    }
-    if flexflow {
-        match FlexFlowSim::new(&cluster).simulate(&graph, &tree, &eg) {
-            Ok(f) => println!("flexflow-sim: step={:.2} ms", f.step_ms),
-            Err(e) => println!("flexflow-sim: unsupported ({e})"),
+        println!(
+            "tasks={} compile={:.3}s simulate={:.3}s",
+            eg.tasks.len(),
+            compile_s,
+            exe_s
+        );
+        println!(
+            "step={:.2} ms  throughput={:.1} samples/s  oom={}  peak_mem={}",
+            report.step_ms,
+            report.throughput,
+            report.oom,
+            fmt_bytes(report.peak_mem.iter().copied().max().unwrap_or(0)),
+        );
+        println!(
+            "behaviors: {} overlapped comps, {} bandwidth-shared comms",
+            report.overlapped_ops, report.shared_ops
+        );
+        if let Some(t) = &truth_report {
+            println!(
+                "emulator(truth): step={:.2} ms throughput={:.1}  HTAE error={:.2}%",
+                t.step_ms,
+                t.throughput,
+                rel_err_pct(report.step_ms, t.step_ms)
+            );
+        }
+        if let Some(ff) = &flexflow_report {
+            match ff {
+                Ok(f) => println!("flexflow-sim: step={:.2} ms", f.step_ms),
+                Err(e) => println!("flexflow-sim: unsupported ({e})"),
+            }
         }
     }
     if let Some(path) = trace_path {
         crate::trace::write_chrome_trace(&path, &graph, &eg, &report.timeline)?;
-        println!("trace written to {path}");
+        if !json {
+            println!("trace written to {path}");
+        }
     }
     Ok(())
 }
@@ -191,6 +286,10 @@ fn spec_from_json(j: &Json) -> Result<StrategySpec> {
         .get("emb_shard")
         .and_then(|v| v.as_bool())
         .unwrap_or(false);
+    if let Some(s) = j.get("schedule").and_then(|v| v.as_str()) {
+        spec.schedule = PipelineSchedule::parse(s)
+            .ok_or_else(|| Error::Config(format!("config: unknown schedule '{s}'")))?;
+    }
     Ok(spec)
 }
 
@@ -269,7 +368,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
 
 /// Rank an exhaustive strategy grid with the parallel [`SweepRunner`].
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use crate::runtime::{candidate_grid, Scenario, SweepRunner};
+    use crate::runtime::{candidate_grid_with_schedules, Scenario, SweepRunner};
 
     let model = args.get_or("model", "gpt2");
     let model = ModelKind::parse(&model)
@@ -283,12 +382,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let top = args.get_usize("top", 10)?;
     let plain = args.flag("plain");
     let truth = args.flag("truth");
+    let json = args.flag("json");
+    let schedules = parse_schedules(&args.get_or("schedules", "1f1b"))?;
     let artifact = args.get_or("artifacts", DEFAULT_ARTIFACT);
     args.reject_unknown()?;
 
     let cluster = Cluster::preset(preset, nodes);
     let n = cluster.num_devices();
-    let specs = candidate_grid(n, batch);
+    let specs = candidate_grid_with_schedules(n, batch, &schedules);
     let scenarios: Vec<Scenario> = specs
         .into_iter()
         .map(|spec| Scenario {
@@ -310,6 +411,87 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .filter(|o| matches!(&o.report, Ok(r) if r.oom))
         .count();
     let failed = outcomes.iter().filter(|o| o.report.is_err()).count();
+    // Emulator validation of the top candidates, shared by both output
+    // modes: (label, truth step_ms, truth samples/s, HTAE err %).
+    let truth_rows: Vec<(String, f64, f64, f64)> = if truth {
+        let graph = model.build(batch);
+        let est = OpEstimator::best_available(&cluster, &artifact);
+        let mut rows = Vec::new();
+        for o in ranked.iter().take(3) {
+            let tree = build_strategy(&graph, o.scenario.spec)?;
+            let eg = crate::compiler::compile(&graph, &tree, &cluster)?;
+            let t = Emulator::new(&cluster, &est).simulate(&eg)?;
+            let pred = o.report.as_ref().unwrap();
+            rows.push((
+                o.scenario.spec.label(),
+                t.step_ms,
+                t.throughput,
+                rel_err_pct(pred.step_ms, t.step_ms),
+            ));
+        }
+        rows
+    } else {
+        Vec::new()
+    };
+    if json {
+        // Schema documented in README.md ("JSON output").
+        let results: Vec<Json> = ranked
+            .iter()
+            .take(top)
+            .enumerate()
+            .map(|(i, o)| {
+                let r = o.report.as_ref().unwrap();
+                Json::obj(vec![
+                    ("rank", Json::Num((i + 1) as f64)),
+                    ("strategy", Json::Str(o.scenario.spec.label())),
+                    ("schedule", Json::Str(o.scenario.spec.schedule.name())),
+                    ("step_ms", Json::Num(r.step_ms)),
+                    ("throughput_samples_per_s", Json::Num(r.throughput)),
+                    (
+                        "peak_mem_bytes",
+                        Json::Num(r.peak_mem.iter().copied().max().unwrap_or(0) as f64),
+                    ),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("model", Json::Str(model.name().into())),
+            ("batch", Json::Num(batch as f64)),
+            ("cluster", Json::Str(cluster.name.clone())),
+            ("gpus", Json::Num(n as f64)),
+            (
+                "schedules",
+                Json::Arr(schedules.iter().map(|s| Json::Str(s.name())).collect()),
+            ),
+            ("swept", Json::Num(outcomes.len() as f64)),
+            ("viable", Json::Num(ranked.len() as f64)),
+            ("oom", Json::Num(oom as f64)),
+            ("invalid", Json::Num(failed as f64)),
+            ("wall_s", Json::Num(wall.as_secs_f64())),
+            ("threads", Json::Num(n_threads as f64)),
+            ("results", Json::Arr(results)),
+        ];
+        if truth {
+            fields.push((
+                "truth",
+                Json::Arr(
+                    truth_rows
+                        .iter()
+                        .map(|(label, step_ms, tput, err)| {
+                            Json::obj(vec![
+                                ("strategy", Json::Str(label.clone())),
+                                ("step_ms", Json::Num(*step_ms)),
+                                ("throughput_samples_per_s", Json::Num(*tput)),
+                                ("err_pct", Json::Num(*err)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        println!("{}", Json::obj(fields).to_string_pretty());
+        return Ok(());
+    }
     println!(
         "swept {} strategies for {} b={} on {}({} GPUs): {} viable, {} OOM, {} invalid — {:.2?} on {} threads",
         outcomes.len(),
@@ -334,23 +516,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", table.render());
-    if truth {
-        // Validate the top candidates against the flow-level emulator.
-        let graph = model.build(batch);
-        let est = OpEstimator::best_available(&cluster, &artifact);
-        for o in ranked.iter().take(3) {
-            let tree = build_strategy(&graph, o.scenario.spec)?;
-            let eg = crate::compiler::compile(&graph, &tree, &cluster)?;
-            let t = Emulator::new(&cluster, &est).simulate(&eg)?;
-            let pred = o.report.as_ref().unwrap();
-            println!(
-                "truth {}: {:.2} ms ({:.1} samples/s), HTAE error {:.2}%",
-                o.scenario.spec.label(),
-                t.step_ms,
-                t.throughput,
-                rel_err_pct(pred.step_ms, t.step_ms)
-            );
-        }
+    for (label, step_ms, tput, err) in &truth_rows {
+        println!("truth {label}: {step_ms:.2} ms ({tput:.1} samples/s), HTAE error {err:.2}%");
     }
     Ok(())
 }
@@ -477,6 +644,40 @@ mod tests {
     }
 
     #[test]
+    fn schedule_flags_parse() {
+        let a = parse("simulate --pp 2 --micro 4 --schedule gpipe");
+        let (_, _, _, s) = parse_workload(&a).unwrap();
+        assert_eq!(s.schedule, PipelineSchedule::GpipeFillDrain);
+        let a = parse("simulate --pp 2 --micro 4 --schedule interleaved --vstages 3");
+        let (_, _, _, s) = parse_workload(&a).unwrap();
+        assert_eq!(s.schedule, PipelineSchedule::Interleaved { v: 3 });
+        let a = parse("simulate --schedule 2f2b");
+        assert!(parse_workload(&a).is_err());
+        // --vstages is inert without interleaved; that must fail loudly.
+        let a = parse("simulate --pp 2 --vstages 4");
+        assert!(parse_workload(&a).is_err());
+        // Explicit 0 is rejected like interleaved:0, not silently kept.
+        let a = parse("simulate --pp 2 --schedule interleaved --vstages 0");
+        assert!(parse_workload(&a).is_err());
+    }
+
+    #[test]
+    fn schedules_set_parses() {
+        assert_eq!(parse_schedules("all").unwrap(), PipelineSchedule::all());
+        assert_eq!(
+            parse_schedules("gpipe,1f1b").unwrap(),
+            vec![PipelineSchedule::GpipeFillDrain, PipelineSchedule::OneFOneB]
+        );
+        assert!(parse_schedules("bogus").is_err());
+    }
+
+    #[test]
+    fn help_flag_short_circuits() {
+        let a = parse("simulate --help");
+        run(&a).unwrap();
+    }
+
+    #[test]
     fn unknown_command_fails() {
         let a = parse("frobnicate");
         assert!(run(&a).is_err());
@@ -491,6 +692,24 @@ mod tests {
     #[test]
     fn sweep_command_runs() {
         let a = parse("sweep --model vgg19 --batch 16 --preset HC1 --nodes 1 --top 3 --threads 2");
+        run(&a).unwrap();
+    }
+
+    #[test]
+    fn sweep_command_enumerates_all_schedules_in_one_invocation() {
+        let a = parse(
+            "sweep --model vgg19 --batch 16 --preset HC1 --nodes 1 --top 3 --threads 2 \
+             --schedules all --json",
+        );
+        run(&a).unwrap();
+    }
+
+    #[test]
+    fn simulate_json_with_explicit_schedule_runs() {
+        let a = parse(
+            "simulate --model gpt2 --batch 8 --preset HC1 --nodes 1 --pp 2 --micro 2 \
+             --schedule gpipe --json",
+        );
         run(&a).unwrap();
     }
 }

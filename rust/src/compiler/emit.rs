@@ -12,6 +12,7 @@ use crate::graph::{Graph, Layer, LayerId, OpKind, TensorId, TensorKind};
 use crate::strategy::{operand_layout, ResolvedStrategy, TensorLayout};
 use crate::{Error, Result};
 
+use super::schedule::{self, SchedulePlan, SlotPhase, StageSegments};
 use super::transform::{transform, CollectiveKind, CommOp};
 use super::{CommClass, CommTask, CompTask, ExecGraph, Phase, Task, TaskId, TaskKind};
 
@@ -66,6 +67,16 @@ pub(super) struct Emitter<'a> {
     stage_bwd_done: HashMap<(usize, u32), Vec<TaskId>>,
     /// Recompute segments: contiguous layer ranges (stage-local).
     segments: Vec<Segment>,
+    /// Lowered pipeline schedule (`None` = single-stage legacy order).
+    plan: Option<SchedulePlan>,
+    /// Segment indices of each virtual stage (chunk), model order.
+    chunk_segs: Vec<Vec<usize>>,
+    /// Last comp task per device of the previously emitted slot —
+    /// consecutive slots chain through these, turning the schedule's
+    /// per-device total order into control edges. Keyed by device alone
+    /// (not per chunk) so that interleaved chunks sharing a device are
+    /// serialized in the lowered global order too.
+    slot_chain: HashMap<DeviceId, TaskId>,
     /// Per-layer layout/feature cache: layouts are micro-independent, so
     /// computing them once instead of per micro-batch cuts compile time
     /// by ~n_micro on pipelined graphs.
@@ -141,6 +152,43 @@ impl<'a> Emitter<'a> {
             }
         }
         let segments = make_segments(graph, r);
+        // Lower the pipeline schedule into chunk slot sequences plus the
+        // global emission order (None for single-stage strategies). The
+        // lowering sees segments in stage-major order; `flat_to_seg`
+        // maps its flat indices back to `segments`.
+        let mut inputs: Vec<StageSegments> = r
+            .stages
+            .iter()
+            .map(|s| StageSegments {
+                schedule: s.schedule,
+                seg_weights: Vec::new(),
+            })
+            .collect();
+        let mut flat_to_seg: Vec<usize> = Vec::with_capacity(segments.len());
+        for st in 0..r.stages.len() {
+            for (si, seg) in segments.iter().enumerate() {
+                if seg.stage == st {
+                    let w: f64 = seg
+                        .layers
+                        .iter()
+                        .map(|&l| graph.layers[l].fwd_flops() as f64)
+                        .sum();
+                    inputs[st].seg_weights.push(w.max(1.0));
+                    flat_to_seg.push(si);
+                }
+            }
+        }
+        let plan = schedule::lower(&inputs, n_micro)?;
+        let chunk_segs = match &plan {
+            Some(p) => {
+                let mut cs = vec![Vec::new(); p.n_chunks];
+                for (flat, &c) in p.chunk_of_seg.iter().enumerate() {
+                    cs[c].push(flat_to_seg[flat]);
+                }
+                cs
+            }
+            None => Vec::new(),
+        };
         Ok(Emitter {
             graph,
             r,
@@ -157,6 +205,9 @@ impl<'a> Emitter<'a> {
             chain: HashMap::new(),
             stage_bwd_done: HashMap::new(),
             segments,
+            plan,
+            chunk_segs,
+            slot_chain: HashMap::new(),
             layer_cache: (0..graph.layers.len()).map(|_| None).collect(),
         })
     }
@@ -212,9 +263,27 @@ impl<'a> Emitter<'a> {
     }
 
     pub(super) fn emit(mut self) -> Result<ExecGraph> {
-        for m in 0..self.n_micro as u32 {
-            self.emit_forward(m)?;
-            self.emit_backward(m)?;
+        match self.plan.as_ref().map(|p| p.order.clone()) {
+            // Single stage: the classic per-micro order (forward then
+            // backward, micro by micro). There is no pipeline to
+            // schedule; `max_ongoing_micro_batch` alone bounds memory.
+            None => {
+                for m in 0..self.n_micro as u32 {
+                    self.emit_forward(m)?;
+                    self.emit_backward(m)?;
+                }
+            }
+            // Pipelined: walk the lowered schedule's global order. Task
+            // ids then form a topological order of the schedule, and
+            // consecutive slots of a chunk are chained per device.
+            Some(order) => {
+                for step in order {
+                    match step.phase {
+                        SlotPhase::Forward => self.emit_chunk_fwd(step.chunk, step.micro)?,
+                        SlotPhase::Backward => self.emit_chunk_bwd(step.chunk, step.micro)?,
+                    }
+                }
+            }
         }
         self.emit_param_sync_and_optimizer()?;
         self.finalize_buffers();
@@ -413,6 +482,66 @@ impl<'a> Emitter<'a> {
         Ok(versions.len() - 1)
     }
 
+    // ------------------------------------------------- scheduled emission
+
+    /// Emit one chunk's forward slot for micro `m`.
+    fn emit_chunk_fwd(&mut self, chunk: usize, m: u32) -> Result<()> {
+        let start = self.tasks.len();
+        let segs = self.chunk_segs[chunk].clone();
+        for si in segs {
+            let layers = self.segments[si].layers.clone();
+            for l in layers {
+                self.emit_layer_fwd(l, m, Phase::Fwd)?;
+            }
+        }
+        self.chain_slot(start);
+        Ok(())
+    }
+
+    /// Emit one chunk's backward slot (recompute + backward) for micro
+    /// `m`.
+    fn emit_chunk_bwd(&mut self, chunk: usize, m: u32) -> Result<()> {
+        let start = self.tasks.len();
+        let segs = self.chunk_segs[chunk].clone();
+        for &si in segs.iter().rev() {
+            let seg = self.segments[si].clone();
+            if seg.recompute {
+                self.emit_recompute(&seg, m)?;
+            }
+            for &lid in seg.layers.iter().rev() {
+                self.emit_layer_bwd(lid, m)?;
+            }
+        }
+        self.chain_slot(start);
+        Ok(())
+    }
+
+    /// Order the comp tasks emitted since `start` after the device's
+    /// previously emitted slot. This is how the pipeline schedule
+    /// becomes observable: without it the executor would run any ready
+    /// forward eagerly, collapsing every schedule into the same eager
+    /// order (and the same activation watermark). The chain is per
+    /// device — not per chunk — so a device hosting several interleaved
+    /// chunks executes their slots in the lowered global order rather
+    /// than racing them.
+    fn chain_slot(&mut self, start: TaskId) {
+        let end = self.tasks.len();
+        let mut last: BTreeMap<DeviceId, TaskId> = BTreeMap::new();
+        for id in start..end {
+            let d = match &self.tasks[id].kind {
+                TaskKind::Comp(c) => c.device,
+                TaskKind::Comm(_) => continue,
+            };
+            if let Some(&prev) = self.slot_chain.get(&d) {
+                self.add_dep(prev, id);
+            }
+            last.insert(d, id);
+        }
+        for (d, id) in last {
+            self.slot_chain.insert(d, id);
+        }
+    }
+
     // ------------------------------------------------------------- forward
 
     fn emit_forward(&mut self, m: u32) -> Result<()> {
@@ -538,9 +667,14 @@ impl<'a> Emitter<'a> {
                     deps.push(prev);
                 }
                 // max_ongoing: first layer of stage waits for the
-                // backward of micro m - k.
+                // backward of micro m - k. Only on the legacy
+                // single-stage path — pipelined graphs fold the bound
+                // into the schedule's slot order instead (a raw edge
+                // here would deadlock fill-drain, whose slot order puts
+                // every backward after every forward).
                 let sched = self.r.stages[stage].schedule;
-                if phase == Phase::Fwd
+                if self.plan.is_none()
+                    && phase == Phase::Fwd
                     && self.r.stages[stage].layers.first() == Some(&lid)
                     && sched.max_ongoing_micro_batch != usize::MAX
                 {
@@ -1000,15 +1134,17 @@ fn phase_key(p: Phase) -> u8 {
     }
 }
 
-/// Compute recompute segments: within each stage, if the stage schedule
-/// enables recomputation, segments are the contiguous top-level-module
-/// runs (Megatron-style per-block checkpointing); otherwise the whole
-/// stage is one non-recomputed segment.
+/// Compute segments: within each stage, the contiguous top-level-module
+/// runs. Under recomputation the runs are the Megatron-style per-block
+/// checkpointing units; they double as the units interleaved schedules
+/// group into virtual-stage chunks. (For non-recompute, non-interleaved
+/// strategies the finer granularity is emission-order-neutral: forward
+/// walks segments in order, backward in reverse.)
 fn make_segments(graph: &Graph, r: &ResolvedStrategy) -> Vec<Segment> {
     let consumers = graph.consumers();
     let mut segments = Vec::new();
     for stage in &r.stages {
-        let runs: Vec<Vec<LayerId>> = if stage.schedule.recompute {
+        let runs: Vec<Vec<LayerId>> = {
             let mut runs: Vec<Vec<LayerId>> = Vec::new();
             let mut last_key: Option<&str> = None;
             for &l in &stage.layers {
@@ -1026,8 +1162,6 @@ fn make_segments(graph: &Graph, r: &ResolvedStrategy) -> Vec<Segment> {
                 last_key = key;
             }
             runs
-        } else {
-            vec![stage.layers.clone()]
         };
         for layers in runs {
             let in_seg = |l: LayerId| layers.contains(&l);

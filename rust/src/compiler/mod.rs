@@ -13,14 +13,17 @@
 //!   applied to gradient layouts;
 //! - data dependencies preserve computational equivalence and control
 //!   dependencies encode the subgraph schedule (micro-batch ordering,
-//!   `max_ongoing_micro_batch` memory bounding, recompute-just-before-
-//!   backward);
+//!   the pipeline execution order lowered by [`schedule`] — GPipe
+//!   fill-drain / 1F1B / interleaved-1F1B — `max_ongoing_micro_batch`
+//!   memory bounding, recompute-just-before-backward);
 //! - every task carries the byte/FLOP features the op estimator consumes
 //!   and the alloc/free events the memory tracker replays.
 
 pub mod emit;
+pub mod schedule;
 pub mod transform;
 
+pub use schedule::{SchedulePlan, Slot, SlotPhase, Step};
 pub use transform::{transform, CollectiveKind, CommOp};
 
 use crate::cluster::{Cluster, DeviceId};

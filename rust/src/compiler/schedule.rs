@@ -1,0 +1,502 @@
+//! Pipeline-schedule lowering: from a [`PipelineSchedule`] to per-device
+//! micro-batch task orderings.
+//!
+//! A staged execution graph leaves one degree of freedom the data
+//! dependencies do not fix: the order in which each stage's device group
+//! runs its forward and backward micro-batches. That order is exactly
+//! what distinguishes GPipe fill-drain from 1F1B from interleaved-1F1B —
+//! same tasks, same communication, different activation watermark and
+//! bubble structure (DistIR and DistSim both show the choice reorders
+//! strategy candidates).
+//!
+//! This module lowers the chosen schedule into:
+//!
+//! 1. **virtual stages (chunks)** — each resolved stage's segments are
+//!    split into `v` contiguous, FLOP-balanced chunks (`v = 1` for the
+//!    non-interleaved schedules), giving a virtual pipeline of depth
+//!    `vp = Σ chunks`;
+//! 2. **per-chunk slot sequences** — the canonical warm-up/steady/drain
+//!    pattern of the schedule: with in-flight bound `k`, the sequence is
+//!    `F₀ … F_{k-2}, (F_i, B_{i-k+1})*, B_{n-k+1} … B_{n-1}`;
+//! 3. a **global emission order** — a topological merge of the slot
+//!    sequences against the cross-chunk dataflow (forward left-to-right,
+//!    backward right-to-left), which the emitter walks so task ids are a
+//!    topological order by construction (every dependency edge points
+//!    from a lower to a higher id, so the emitted graph is a DAG).
+//!
+//! The emitter turns consecutive slots of a chunk into per-device
+//! control edges (`compiler/emit.rs`), which is what makes 1F1B's lower
+//! activation peak *observable*: the memory tracker frees a micro-batch's
+//! activations at its backward, and the schedule decides when that
+//! backward runs.
+//!
+//! In-flight bounds per chunk `vs` (clamped to `[1, n_micro + 1]` and by
+//! the stage's explicit `max_ongoing_micro_batch`):
+//!
+//! - `GpipeFillDrain`: unbounded (`n_micro + 1` ⇒ all forwards first);
+//! - `OneFOneB`: `vp - vs` (the classic per-stage pipeline-depth bound);
+//! - `Interleaved{v}`: `(S - s) + (v_s - 1 - c)` for chunk `c` of stage
+//!   `s` — a device's earlier chunks keep extra micro-batches in flight,
+//!   Megatron-style — then clamped non-increasing along the pipeline,
+//!   which is the feasibility condition for this slot family (a chunk may
+//!   never demand more warm-up than its upstream neighbour provides).
+//!
+//! **Interleaved modeling choice.** Chunks stay on their stage's
+//! contiguous placement — device `d` hosts chunks `d·v .. d·v + v`, not
+//! Megatron's round-robin `d, d + pp, …` assignment. This deliberately
+//! keeps the schedule a pure *execution order*: every schedule runs
+//! identical tasks with identical communication volume (pinned by the
+//! schedule-equivalence property test), so `--schedules all` sweeps
+//! compare orders, not placements. What is captured is the virtual
+//! pipeline's chunk-granular slot ordering and its in-flight/memory
+//! profile; what is *not* captured is the bubble shrink Megatron's
+//! round-robin placement buys, which would require per-chunk device
+//! groups (and extra cross-chunk P2P) at the strategy level.
+
+use crate::strategy::{PipelineSchedule, ScheduleConfig};
+use crate::{Error, Result};
+
+/// Whether a slot runs the forward or the backward of its micro-batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotPhase {
+    /// Forward pass of one micro-batch through one chunk.
+    Forward,
+    /// Backward pass (plus recomputation, if enabled) of one micro-batch.
+    Backward,
+}
+
+/// One entry of a chunk's per-device execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slot {
+    /// Micro-batch index.
+    pub micro: u32,
+    /// Forward or backward.
+    pub phase: SlotPhase,
+}
+
+/// One entry of the global emission order: a [`Slot`] of one chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Step {
+    /// Virtual-stage (chunk) index in model order.
+    pub chunk: usize,
+    /// Micro-batch index.
+    pub micro: u32,
+    /// Forward or backward.
+    pub phase: SlotPhase,
+}
+
+/// Per-stage input to the lowering: the stage's schedule config plus the
+/// forward-FLOP weight of each of its contiguous segments (model order).
+#[derive(Debug, Clone)]
+pub struct StageSegments {
+    /// Effective schedule of the stage.
+    pub schedule: ScheduleConfig,
+    /// One weight per segment, used to balance interleaved chunk splits.
+    pub seg_weights: Vec<f64>,
+}
+
+/// The lowered schedule the emitter executes.
+#[derive(Debug, Clone)]
+pub struct SchedulePlan {
+    /// Chunk index of every segment, in the same (stage-major = model)
+    /// order as the flattened `StageSegments` input.
+    pub chunk_of_seg: Vec<usize>,
+    /// Virtual pipeline depth (total chunks).
+    pub n_chunks: usize,
+    /// Per-chunk slot sequences (the per-device execution orders).
+    pub slots: Vec<Vec<Slot>>,
+    /// Global emission order: a topological merge of `slots` against the
+    /// cross-chunk dataflow.
+    pub order: Vec<Step>,
+}
+
+/// Lower a pipeline schedule. Returns `None` for single-stage strategies
+/// (plain data/model parallelism and gradient accumulation keep the
+/// legacy per-micro emission order — there is no pipeline to schedule).
+pub fn lower(stages: &[StageSegments], n_micro: usize) -> Result<Option<SchedulePlan>> {
+    if stages.len() <= 1 || n_micro == 0 {
+        return Ok(None);
+    }
+    let pipe = stages[0].schedule.pipeline;
+    for s in stages {
+        if s.schedule.pipeline != pipe {
+            return Err(Error::compile(
+                "stages with differing pipeline schedules are unsupported",
+            ));
+        }
+    }
+
+    // 1. Chunking: split each stage's segments into `v` contiguous,
+    //    weight-balanced groups (capped at the stage's segment count).
+    let v = pipe.virtual_per_stage();
+    let mut chunk_of_seg = Vec::new();
+    // Per chunk: (stage index, chunk index within stage, chunks in stage).
+    let mut meta: Vec<(usize, usize, usize)> = Vec::new();
+    for (si, st) in stages.iter().enumerate() {
+        if st.seg_weights.is_empty() {
+            continue;
+        }
+        let k = v.clamp(1, st.seg_weights.len());
+        let groups = split_weighted(&st.seg_weights, k);
+        let base = meta.len();
+        let k_eff = groups.iter().copied().max().unwrap_or(0) + 1;
+        for &g in &groups {
+            chunk_of_seg.push(base + g);
+        }
+        for c in 0..k_eff {
+            meta.push((si, c, k_eff));
+        }
+    }
+    let n_chunks = meta.len();
+    if n_chunks <= 1 {
+        return Ok(None);
+    }
+
+    // 2. In-flight bounds per chunk (see module docs).
+    let n = n_micro;
+    let n_stages = stages.len();
+    let mut inflight = vec![0usize; n_chunks];
+    for (vs, &(s, c, v_s)) in meta.iter().enumerate() {
+        let raw = match pipe {
+            PipelineSchedule::GpipeFillDrain => n + 1,
+            PipelineSchedule::OneFOneB => n_chunks - vs,
+            PipelineSchedule::Interleaved { .. } => (n_stages - s) + (v_s - 1 - c),
+        };
+        // `max_ongoing_micro_batch` bounds a *stage's devices*, so split
+        // it across the stage's chunks (which share those devices);
+        // every chunk keeps at least one in-flight slot to make
+        // progress, so a bound below the chunk count is exceeded by
+        // construction rather than deadlocking.
+        let mo = stages[s].schedule.max_ongoing_micro_batch;
+        let mut f = raw.max(1);
+        if mo != usize::MAX {
+            let mo_chunk = (mo / v_s + usize::from(c < mo % v_s)).max(1);
+            f = f.min(mo_chunk);
+        }
+        inflight[vs] = f.min(n + 1);
+    }
+    // Feasibility: a chunk may not keep more micro-batches in flight
+    // than every chunk upstream of it (non-increasing along the
+    // pipeline), or its warm-up forwards would wait on backwards that
+    // its own slot order schedules later.
+    for vs in 1..n_chunks {
+        if inflight[vs] > inflight[vs - 1] {
+            inflight[vs] = inflight[vs - 1];
+        }
+    }
+
+    // 3. Per-chunk slot sequences: warm-up / steady 1F1B / drain.
+    let mut slots: Vec<Vec<Slot>> = Vec::with_capacity(n_chunks);
+    for &k in &inflight {
+        let w = k.saturating_sub(1).min(n); // warm-up forwards
+        let mut sl = Vec::with_capacity(2 * n);
+        for i in 0..w {
+            sl.push(Slot {
+                micro: i as u32,
+                phase: SlotPhase::Forward,
+            });
+        }
+        for i in w..n {
+            sl.push(Slot {
+                micro: i as u32,
+                phase: SlotPhase::Forward,
+            });
+            sl.push(Slot {
+                micro: (i - w) as u32,
+                phase: SlotPhase::Backward,
+            });
+        }
+        for i in (n - w)..n {
+            sl.push(Slot {
+                micro: i as u32,
+                phase: SlotPhase::Backward,
+            });
+        }
+        debug_assert_eq!(sl.len(), 2 * n);
+        slots.push(sl);
+    }
+
+    // 4. Global order: Kahn's algorithm over the union of the per-chunk
+    //    total orders and the cross-chunk dataflow (F(m, vs) needs
+    //    F(m, vs-1); B(m, vs) needs B(m, vs+1) and F(m, vs)).
+    let mut ptr = vec![0usize; n_chunks];
+    let mut fwd_done = vec![vec![false; n]; n_chunks];
+    let mut bwd_done = vec![vec![false; n]; n_chunks];
+    let total = 2 * n * n_chunks;
+    let mut order = Vec::with_capacity(total);
+    loop {
+        let mut progressed = false;
+        for vs in 0..n_chunks {
+            while ptr[vs] < slots[vs].len() {
+                let s = slots[vs][ptr[vs]];
+                let m = s.micro as usize;
+                let ready = match s.phase {
+                    SlotPhase::Forward => vs == 0 || fwd_done[vs - 1][m],
+                    SlotPhase::Backward => {
+                        fwd_done[vs][m] && (vs + 1 == n_chunks || bwd_done[vs + 1][m])
+                    }
+                };
+                if !ready {
+                    break;
+                }
+                match s.phase {
+                    SlotPhase::Forward => fwd_done[vs][m] = true,
+                    SlotPhase::Backward => bwd_done[vs][m] = true,
+                }
+                order.push(Step {
+                    chunk: vs,
+                    micro: s.micro,
+                    phase: s.phase,
+                });
+                ptr[vs] += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    if order.len() != total {
+        return Err(Error::compile(format!(
+            "pipeline schedule {} is infeasible: merged {} of {total} slots",
+            pipe.name(),
+            order.len()
+        )));
+    }
+    Ok(Some(SchedulePlan {
+        chunk_of_seg,
+        n_chunks,
+        slots,
+        order,
+    }))
+}
+
+/// Contiguously partition weighted items into `k` non-empty groups of
+/// roughly equal total weight; returns the group of each item. Requires
+/// `1 ≤ k ≤ items.len()`.
+fn split_weighted(w: &[f64], k: usize) -> Vec<usize> {
+    let n = w.len();
+    let k = k.clamp(1, n.max(1));
+    let total: f64 = w.iter().sum();
+    let target = (total / k as f64).max(f64::MIN_POSITIVE);
+    let mut out = vec![0usize; n];
+    let mut g = 0usize;
+    let mut acc = 0.0;
+    for i in 0..n {
+        let items_left = n - i; // items i..n still unassigned
+        let groups_after = k - g - 1; // groups beyond the current one
+        let must_cut = items_left <= groups_after; // one item per group left
+        let may_cut = acc >= 0.95 * target;
+        if g + 1 < k && acc > 0.0 && (must_cut || may_cut) {
+            g += 1;
+            acc = 0.0;
+        }
+        out[i] = g;
+        acc += w[i];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(pipe: PipelineSchedule, mo: usize, n_micro: usize, segs: usize) -> StageSegments {
+        StageSegments {
+            schedule: ScheduleConfig {
+                n_micro_batch: n_micro,
+                max_ongoing_micro_batch: mo,
+                recompute: false,
+                pipeline: pipe,
+            },
+            seg_weights: vec![1.0; segs],
+        }
+    }
+
+    fn plan(pipe: PipelineSchedule, mo: usize, pp: usize, n: usize, segs: usize) -> SchedulePlan {
+        let stages: Vec<StageSegments> = (0..pp).map(|_| stage(pipe, mo, n, segs)).collect();
+        lower(&stages, n).unwrap().expect("multi-stage plan")
+    }
+
+    /// Per-chunk slot counts and micro coverage.
+    fn check_slots(p: &SchedulePlan, n: usize) {
+        for sl in &p.slots {
+            assert_eq!(sl.len(), 2 * n);
+            for m in 0..n as u32 {
+                let fi = sl
+                    .iter()
+                    .position(|s| s.micro == m && s.phase == SlotPhase::Forward)
+                    .unwrap();
+                let bi = sl
+                    .iter()
+                    .position(|s| s.micro == m && s.phase == SlotPhase::Backward)
+                    .unwrap();
+                assert!(fi < bi, "F{m} must precede B{m}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_stage_is_legacy() {
+        let s = stage(PipelineSchedule::OneFOneB, usize::MAX, 4, 3);
+        assert!(lower(&[s], 4).unwrap().is_none());
+    }
+
+    #[test]
+    fn gpipe_fills_then_drains() {
+        let p = plan(PipelineSchedule::GpipeFillDrain, usize::MAX, 4, 8, 1);
+        assert_eq!(p.n_chunks, 4);
+        check_slots(&p, 8);
+        for sl in &p.slots {
+            // All forwards strictly before all backwards.
+            let first_b = sl.iter().position(|s| s.phase == SlotPhase::Backward).unwrap();
+            assert_eq!(first_b, 8);
+        }
+        assert_eq!(p.order.len(), 2 * 8 * 4);
+    }
+
+    #[test]
+    fn one_f_one_b_bounds_in_flight_per_stage() {
+        let p = plan(PipelineSchedule::OneFOneB, usize::MAX, 4, 8, 1);
+        check_slots(&p, 8);
+        for (vs, sl) in p.slots.iter().enumerate() {
+            // Max in-flight = forwards emitted minus backwards emitted.
+            let mut live = 0i64;
+            let mut peak = 0i64;
+            for s in sl {
+                match s.phase {
+                    SlotPhase::Forward => live += 1,
+                    SlotPhase::Backward => live -= 1,
+                }
+                peak = peak.max(live);
+            }
+            assert_eq!(peak as usize, 4 - vs, "stage {vs}");
+        }
+    }
+
+    #[test]
+    fn explicit_max_ongoing_tightens_the_bound() {
+        let p = plan(PipelineSchedule::OneFOneB, 1, 4, 8, 1);
+        for sl in &p.slots {
+            // Strict alternation F0 B0 F1 B1 ...
+            for (i, s) in sl.iter().enumerate() {
+                let want = if i % 2 == 0 {
+                    SlotPhase::Forward
+                } else {
+                    SlotPhase::Backward
+                };
+                assert_eq!(s.phase, want);
+            }
+        }
+    }
+
+    /// Max concurrently in-flight micro-batches a slot sequence admits.
+    fn peak_inflight(sl: &[Slot]) -> i64 {
+        let mut live = 0i64;
+        let mut peak = 0i64;
+        for s in sl {
+            match s.phase {
+                SlotPhase::Forward => live += 1,
+                SlotPhase::Backward => live -= 1,
+            }
+            peak = peak.max(live);
+        }
+        peak
+    }
+
+    #[test]
+    fn explicit_max_ongoing_is_a_device_bound_under_interleaving() {
+        // mo = 2 with v = 2 chunks per stage: the two chunks of a stage
+        // share its devices, so together they may hold at most 2
+        // micro-batches in flight (1 each), not 2 each.
+        let p = plan(PipelineSchedule::Interleaved { v: 2 }, 2, 4, 8, 4);
+        assert_eq!(p.n_chunks, 8);
+        for st in 0..4usize {
+            let total: i64 =
+                peak_inflight(&p.slots[2 * st]) + peak_inflight(&p.slots[2 * st + 1]);
+            assert!(total <= 2, "stage {st} admits {total} in flight");
+        }
+    }
+
+    #[test]
+    fn interleaved_splits_chunks_and_stays_feasible() {
+        let p = plan(PipelineSchedule::Interleaved { v: 2 }, usize::MAX, 4, 8, 4);
+        assert_eq!(p.n_chunks, 8);
+        assert_eq!(p.chunk_of_seg.len(), 16);
+        // Chunk assignment is contiguous and non-decreasing.
+        for w in p.chunk_of_seg.windows(2) {
+            assert!(w[1] == w[0] || w[1] == w[0] + 1);
+        }
+        check_slots(&p, 8);
+        assert_eq!(p.order.len(), 2 * 8 * 8);
+    }
+
+    #[test]
+    fn interleaved_with_one_chunk_degenerates_to_1f1b() {
+        let a = plan(PipelineSchedule::Interleaved { v: 1 }, usize::MAX, 4, 6, 1);
+        let b = plan(PipelineSchedule::OneFOneB, usize::MAX, 4, 6, 1);
+        assert_eq!(a.slots, b.slots);
+        assert_eq!(a.order, b.order);
+    }
+
+    #[test]
+    fn all_schedules_merge_completely_across_shapes() {
+        for pipe in PipelineSchedule::all() {
+            for pp in [2usize, 3, 4, 8] {
+                for n in [1usize, 2, 5, 8, 16] {
+                    for mo in [usize::MAX, 1, 2, pp] {
+                        for segs in [1usize, 2, 5] {
+                            let p = plan(pipe, mo, pp, n, segs);
+                            assert_eq!(
+                                p.order.len(),
+                                2 * n * p.n_chunks,
+                                "{} pp={pp} n={n} mo={mo} segs={segs}",
+                                pipe.name()
+                            );
+                            check_slots(&p, n);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn order_respects_dataflow_and_slot_sequences() {
+        let p = plan(PipelineSchedule::OneFOneB, usize::MAX, 4, 8, 2);
+        let vp = p.n_chunks;
+        let n = 8usize;
+        let mut fwd = vec![vec![false; n]; vp];
+        let mut bwd = vec![vec![false; n]; vp];
+        let mut ptr = vec![0usize; vp];
+        for st in &p.order {
+            let m = st.micro as usize;
+            // Matches the chunk's own slot sequence position.
+            let slot = p.slots[st.chunk][ptr[st.chunk]];
+            assert_eq!((slot.micro, slot.phase), (st.micro, st.phase));
+            ptr[st.chunk] += 1;
+            match st.phase {
+                SlotPhase::Forward => {
+                    assert!(st.chunk == 0 || fwd[st.chunk - 1][m]);
+                    fwd[st.chunk][m] = true;
+                }
+                SlotPhase::Backward => {
+                    assert!(fwd[st.chunk][m]);
+                    assert!(st.chunk + 1 == vp || bwd[st.chunk + 1][m]);
+                    bwd[st.chunk][m] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_weighted_balances_and_covers() {
+        assert_eq!(split_weighted(&[1.0; 4], 2), vec![0, 0, 1, 1]);
+        assert_eq!(split_weighted(&[1.0; 3], 3), vec![0, 1, 2]);
+        // Heavy head still leaves one item per group.
+        let g = split_weighted(&[100.0, 1.0, 1.0], 3);
+        assert_eq!(g, vec![0, 1, 2]);
+        // k = 1 puts everything in group 0.
+        assert_eq!(split_weighted(&[2.0, 3.0], 1), vec![0, 0]);
+    }
+}

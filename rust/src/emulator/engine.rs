@@ -519,6 +519,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             0.0
         },
         peak_mem: mem.peaks().to_vec(),
+        peak_act: mem.dynamic_peaks(),
         oom: mem.oom(),
         overlapped_ops: 0,
         shared_ops: 0,

@@ -12,6 +12,10 @@
 //! - *comp-comm overlap*: is a gradient communication in flight on this
 //!   computation's device (or a computation in flight on this
 //!   communication's devices)? If so the cost inflates by γ.
+//!
+//! All timestamps the detector records or is queried with are
+//! picoseconds ([`Ps`]) on the simulator's global clock; queries must be
+//! non-decreasing in time, which the event-driven executor guarantees.
 
 use std::collections::HashMap;
 
@@ -111,11 +115,18 @@ impl<'a> BehaviorDetector<'a> {
         links
     }
 
-    /// Fair-sharing factor for a communication op starting at `t`: the
-    /// maximum number of concurrent communication ops (including this
-    /// one) on any physical link it uses, walking the hierarchy from the
-    /// NIC down (the maximum over links IS the hierarchy walk: the most
-    /// contended shared ancestor link dominates).
+    /// Fair-sharing factor for a communication op starting at `t` (in
+    /// [`Ps`]): the maximum number of concurrent communication ops
+    /// (including this one) on any physical link it uses, walking the
+    /// hierarchy from the NIC down (the maximum over links IS the
+    /// hierarchy walk: the most contended shared ancestor link
+    /// dominates). The returned factor `k ≥ 1` scales the op's
+    /// bandwidth (β) term only — concurrent ops are assumed to split a
+    /// link's bandwidth fairly (§VI-C), so `k = 2` doubles the β time
+    /// while the latency (α) term is unaffected (see
+    /// [`Self::split_alpha_beta`]). Queries must be in non-decreasing
+    /// `t` order (guaranteed by the monotone DES), which is what lets
+    /// the active-span counters prune finished intervals lazily.
     pub fn sharing_factor(&mut self, c: &CommTask, t: Ps) -> f64 {
         let links = self.links_of(c);
         let mut worst = 0usize;
@@ -155,9 +166,12 @@ impl<'a> BehaviorDetector<'a> {
         group.iter().any(|&d| self.dev_comp[d].active_at(t) > 0)
     }
 
-    /// Split a communication op's total cost into `(α, β)` — the latency
-    /// term (unaffected by sharing) and the bandwidth term (scaled by the
-    /// sharing factor).
+    /// Split a communication op's total cost (`total`, in [`Ps`]) into
+    /// `(α, β)` — the latency term (per-step link latencies × the
+    /// collective's step count, unaffected by sharing) and the bandwidth
+    /// term (everything else, scaled by the sharing factor). The two
+    /// always sum back to `total`; α is clamped to `total` so degenerate
+    /// short ops never yield a negative β.
     pub fn split_alpha_beta(&self, c: &CommTask, total: Ps) -> (Ps, Ps) {
         let n = c.group.len();
         let (steps, _) = collective_profile(c.kind, n);

@@ -7,6 +7,20 @@
 //! (parameters + gradients + optimizer state), and reports peaks and
 //! OOM.
 //!
+//! **Peak accounting.** A task's allocations land at its simulated
+//! *start* and its frees fire at the *end* of the last task reading each
+//! buffer, so the per-device watermark is the true high-water mark of
+//! concurrently-live buffers, not a sum over the step. An activation
+//! buffer is freed when that micro-batch's backward (its last reader)
+//! completes — which is why the pipeline schedule is directly visible
+//! here: under GPipe fill-drain every micro-batch's forward activations
+//! are still live when the first backward starts, while 1F1B's early
+//! backwards release them after at most `pp - stage` micro-batches
+//! (see [`crate::compiler::schedule`]).
+//!
+//! **Units.** All timestamps are picoseconds ([`Ps`], the simulator-wide
+//! integer time base); all sizes are bytes.
+//!
 //! Because the DES commits tasks in readiness order rather than global
 //! time order, events are buffered and replayed sorted by timestamp at
 //! the end — peak detection needs the true temporal order.
@@ -25,7 +39,9 @@ pub struct MemoryTracker {
 }
 
 impl MemoryTracker {
-    /// New tracker over the per-device static footprint.
+    /// New tracker over the per-device static footprint (parameters,
+    /// gradients, and optimizer state, in bytes) with a uniform
+    /// per-device `capacity` in bytes.
     pub fn new(static_mem: &[u64], capacity: u64) -> Self {
         MemoryTracker {
             events: Vec::new(),
@@ -36,7 +52,9 @@ impl MemoryTracker {
         }
     }
 
-    /// Record a task's alloc/free events at its simulated span.
+    /// Record a task's alloc/free events at its simulated span
+    /// (`start`/`end` in [`Ps`]): allocations apply at `start`, frees at
+    /// `end`. May be called in any order; replay sorts by timestamp.
     pub fn exec(&mut self, task: &Task, start: Ps, end: Ps) {
         for &(d, b) in &task.allocs {
             self.events.push((start, d, b as i64));
@@ -75,6 +93,20 @@ impl MemoryTracker {
     pub fn peaks(&mut self) -> &[u64] {
         self.finalize();
         &self.peaks
+    }
+
+    /// Peak *dynamic* memory per device (bytes): the activation /
+    /// workspace watermark above the static footprint. This is the
+    /// quantity the pipeline schedule moves — e.g. 1F1B's early
+    /// backwards cut it versus GPipe's fill-drain at identical static
+    /// memory (compare via `cargo bench --bench fig_schedules`).
+    pub fn dynamic_peaks(&mut self) -> Vec<u64> {
+        self.finalize();
+        self.peaks
+            .iter()
+            .zip(&self.static_mem)
+            .map(|(&p, &s)| p.saturating_sub(s))
+            .collect()
     }
 
     /// True if any device peak exceeds capacity.
@@ -142,6 +174,14 @@ mod tests {
         m.exec(&task(vec![(0, 50)], vec![(0, 50)]), 0, 90);
         assert_eq!(m.peaks(), &[50]);
         assert!(!m.oom());
+    }
+
+    #[test]
+    fn dynamic_peaks_subtract_static() {
+        let mut m = MemoryTracker::new(&[1000, 2000], 10_000);
+        m.exec(&task(vec![(0, 500)], vec![(0, 500)]), 0, 10);
+        assert_eq!(m.dynamic_peaks(), vec![500, 0]);
+        assert_eq!(m.peaks(), &[1500, 2000]);
     }
 
     #[test]

@@ -5,8 +5,10 @@
 //! memory, and OOM.
 //!
 //! Structure mirrors the paper's two-level design: the *scheduler* level
-//! is encoded in the execution graph's control dependencies (micro-batch
-//! interleaving, `max_ongoing` bounding, recompute-before-backward); the
+//! is encoded in the execution graph's control dependencies (the
+//! pipeline execution order lowered by [`crate::compiler::schedule`] —
+//! GPipe fill-drain / 1F1B / interleaved — micro-batch interleaving,
+//! `max_ongoing` bounding, recompute-before-backward); the
 //! *executor* level is this module's discrete-event engine, which gives
 //! every device three streams — computation, feature communication, and
 //! gradient communication — that execute concurrently, exactly the
@@ -98,6 +100,11 @@ pub struct SimReport {
     pub throughput: f64,
     /// Peak memory per device (static + dynamic), bytes.
     pub peak_mem: Vec<u64>,
+    /// Peak *dynamic* (activation/workspace) memory per device, bytes:
+    /// `peak_mem` minus the static footprint. This is the watermark the
+    /// pipeline schedule moves (1F1B < GPipe at identical static
+    /// memory).
+    pub peak_act: Vec<u64>,
     /// Whether any device exceeded its capacity.
     pub oom: bool,
     /// Number of computation ops the detector flagged as overlapped.
@@ -330,6 +337,7 @@ impl<'a> Htae<'a> {
                 0.0
             },
             peak_mem: mem.peaks().to_vec(),
+            peak_act: mem.dynamic_peaks(),
             oom: mem.oom(),
             overlapped_ops: detector.overlapped_count(),
             shared_ops: detector.shared_count(),

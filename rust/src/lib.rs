@@ -108,9 +108,12 @@ pub mod prelude {
     pub use crate::executor::{Htae, HtaeConfig, SimReport};
     pub use crate::graph::{Graph, OpKind};
     pub use crate::models::ModelKind;
-    pub use crate::runtime::{candidate_grid, Scenario, SweepOutcome, SweepRunner};
+    pub use crate::runtime::{
+        candidate_grid, candidate_grid_with_schedules, Scenario, SweepOutcome, SweepRunner,
+    };
     pub use crate::strategy::{
-        build_strategy, ParallelConfig, ScheduleConfig, StrategySpec, StrategyTree,
+        build_strategy, ParallelConfig, PipelineSchedule, ScheduleConfig, StrategySpec,
+        StrategyTree,
     };
 }
 

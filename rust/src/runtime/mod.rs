@@ -31,7 +31,9 @@
 
 pub mod sweep;
 
-pub use sweep::{candidate_grid, Scenario, SweepOutcome, SweepRunner};
+pub use sweep::{
+    candidate_grid, candidate_grid_with_schedules, Scenario, SweepOutcome, SweepRunner,
+};
 
 #[cfg(not(feature = "pjrt"))]
 use crate::estimator::features::Row;

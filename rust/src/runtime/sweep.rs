@@ -28,7 +28,7 @@ use crate::cluster::{Cluster, Preset};
 use crate::executor::{calibrate, Htae, HtaeConfig, SimReport};
 use crate::graph::Graph;
 use crate::models::ModelKind;
-use crate::strategy::{build_strategy, StrategySpec};
+use crate::strategy::{build_strategy, PipelineSchedule, StrategySpec};
 
 /// One sweep candidate: a model at a batch size, a cluster, a strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -283,6 +283,10 @@ fn run_one(
 /// The grid deliberately includes aggressive candidates (e.g. high `mp`
 /// on models whose head counts don't divide) — [`SweepRunner`] records
 /// those as error outcomes rather than failing the sweep.
+///
+/// Every pipelined candidate uses the default 1F1B schedule; use
+/// [`candidate_grid_with_schedules`] to also rank GPipe fill-drain and
+/// interleaved-1F1B variants.
 pub fn candidate_grid(n_devices: usize, batch: usize) -> Vec<StrategySpec> {
     let mut out = Vec::new();
     for pp in [1usize, 2, 4, 8] {
@@ -316,6 +320,35 @@ pub fn candidate_grid(n_devices: usize, batch: usize) -> Vec<StrategySpec> {
     out
 }
 
+/// [`candidate_grid`] expanded across pipeline schedules: every
+/// pipelined (`pp > 1`) candidate is repeated once per schedule in
+/// `schedules`; single-stage candidates are schedule-independent and
+/// appear once. Duplicate specs (e.g. a schedule listed twice) are
+/// dropped, so `proteus sweep --schedules all` ranks GPipe / 1F1B /
+/// interleaved head-to-head in one invocation.
+pub fn candidate_grid_with_schedules(
+    n_devices: usize,
+    batch: usize,
+    schedules: &[PipelineSchedule],
+) -> Vec<StrategySpec> {
+    let mut out: Vec<StrategySpec> = Vec::new();
+    for base in candidate_grid(n_devices, batch) {
+        if base.pp == 1 {
+            if !out.contains(&base) {
+                out.push(base);
+            }
+            continue;
+        }
+        for &s in schedules {
+            let sp = base.with_schedule(s);
+            if !out.contains(&sp) {
+                out.push(sp);
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -329,6 +362,32 @@ mod tests {
             assert_eq!(64 % (s.dp * s.n_micro_batch), 0, "{}", s.label());
             assert!(!(s.recompute && s.pp > 1), "{}", s.label());
         }
+    }
+
+    #[test]
+    fn grid_with_schedules_expands_pipelined_candidates_only() {
+        let base = candidate_grid(8, 32);
+        let all = candidate_grid_with_schedules(8, 32, &PipelineSchedule::all());
+        let pipelined = base.iter().filter(|s| s.pp > 1).count();
+        assert!(pipelined > 0, "grid must contain pipelined candidates");
+        // Each pipelined candidate appears once per schedule; the rest
+        // are unchanged.
+        assert_eq!(all.len(), base.len() + 2 * pipelined);
+        for s in &all {
+            if s.pp == 1 {
+                assert_eq!(s.schedule, PipelineSchedule::OneFOneB, "{}", s.label());
+            }
+        }
+        // A single-schedule expansion is the plain grid.
+        let one = candidate_grid_with_schedules(8, 32, &[PipelineSchedule::OneFOneB]);
+        assert_eq!(one, base);
+        // No duplicates even with a repeated schedule list.
+        let dup = candidate_grid_with_schedules(
+            8,
+            32,
+            &[PipelineSchedule::OneFOneB, PipelineSchedule::OneFOneB],
+        );
+        assert_eq!(dup, base);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use crate::cluster::DeviceId;
 use crate::graph::{Graph, MpHint, OpKind, TensorKind};
 use crate::strategy::config::{
-    operand_layout, LayoutPart, ParallelConfig, ScheduleConfig, TensorLayout,
+    operand_layout, LayoutPart, ParallelConfig, PipelineSchedule, ScheduleConfig, TensorLayout,
 };
 use crate::strategy::tree::StrategyTree;
 use crate::{Error, Result};
@@ -40,6 +40,8 @@ pub struct StrategySpec {
     /// Shard embedding tables over all devices instead of replicating
     /// (DLRM expert strategy).
     pub shard_embeddings: bool,
+    /// Pipeline execution order (meaningful when `pp > 1`).
+    pub schedule: PipelineSchedule,
 }
 
 impl StrategySpec {
@@ -54,6 +56,7 @@ impl StrategySpec {
             zero: false,
             recompute: false,
             shard_embeddings: false,
+            schedule: PipelineSchedule::OneFOneB,
         }
     }
 
@@ -68,6 +71,7 @@ impl StrategySpec {
             zero: false,
             recompute: false,
             shard_embeddings: false,
+            schedule: PipelineSchedule::OneFOneB,
         }
     }
 
@@ -89,14 +93,24 @@ impl StrategySpec {
         self
     }
 
+    /// Select the pipeline execution order (GPipe / 1F1B / interleaved).
+    pub fn with_schedule(mut self, s: PipelineSchedule) -> Self {
+        self.schedule = s;
+        self
+    }
+
     /// Total devices used.
     pub fn n_devices(self) -> usize {
         self.dp * self.mp * self.pp
     }
 
-    /// Short display form, e.g. `"4x2x2(8)"`.
+    /// Short display form, e.g. `"4x2x2(8)+1f1b"`.
     pub fn label(self) -> String {
         let mut s = format!("{}x{}x{}({})", self.dp, self.mp, self.pp, self.n_micro_batch);
+        if self.pp > 1 {
+            s.push('+');
+            s.push_str(&self.schedule.name());
+        }
         if self.zero {
             s.push_str("+zero");
         }
@@ -114,6 +128,11 @@ impl StrategySpec {
 pub fn build_strategy(graph: &Graph, spec: StrategySpec) -> Result<StrategyTree> {
     if spec.dp == 0 || spec.mp == 0 || spec.pp == 0 || spec.n_micro_batch == 0 {
         return Err(Error::InvalidStrategy("degrees must be ≥ 1".into()));
+    }
+    if let PipelineSchedule::Interleaved { v: 0 } = spec.schedule {
+        return Err(Error::InvalidStrategy(
+            "interleaved schedule needs v ≥ 1 virtual stages".into(),
+        ));
     }
     let micro = spec.dp * spec.n_micro_batch;
     if graph.batch_size % micro != 0 {
@@ -182,11 +201,15 @@ pub fn build_strategy(graph: &Graph, spec: StrategySpec) -> Result<StrategyTree>
     }
 
     // --- Schedule. ------------------------------------------------------
+    // The explicit `max_ongoing` caps the schedule's own in-flight
+    // bound; the default leaves 1F1B's per-stage `pp - stage` bound in
+    // charge (capped at `pp` for compatibility with the legacy
+    // single-number knob) and lets fill-drain / interleaved derive
+    // their bounds entirely from the schedule lowering.
     let max_ongoing = if spec.max_ongoing == 0 {
-        if spec.pp > 1 {
-            spec.pp
-        } else {
-            usize::MAX
+        match spec.schedule {
+            PipelineSchedule::OneFOneB if spec.pp > 1 => spec.pp,
+            _ => usize::MAX,
         }
     } else {
         spec.max_ongoing
@@ -197,6 +220,7 @@ pub fn build_strategy(graph: &Graph, spec: StrategySpec) -> Result<StrategyTree>
             n_micro_batch: spec.n_micro_batch,
             max_ongoing_micro_batch: max_ongoing,
             recompute: spec.recompute,
+            pipeline: spec.schedule,
         },
     )?;
 
@@ -456,5 +480,31 @@ mod tests {
             StrategySpec::data_parallel(8).with_zero().with_recompute().label(),
             "8x1x1(1)+zero+rc"
         );
+        assert_eq!(StrategySpec::hybrid(1, 1, 2, 4).label(), "1x1x2(4)+1f1b");
+        assert_eq!(
+            StrategySpec::hybrid(1, 1, 2, 4)
+                .with_schedule(PipelineSchedule::Interleaved { v: 2 })
+                .label(),
+            "1x1x2(4)+interleaved:2"
+        );
+    }
+
+    #[test]
+    fn schedule_threads_through_to_the_tree() {
+        let g = mlp(16, 4);
+        let spec =
+            StrategySpec::hybrid(1, 1, 2, 4).with_schedule(PipelineSchedule::GpipeFillDrain);
+        let tree = build_strategy(&g, spec).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        for st in &r.stages {
+            assert_eq!(st.schedule.pipeline, PipelineSchedule::GpipeFillDrain);
+            // Fill-drain has no in-flight bound unless explicitly capped.
+            assert_eq!(st.schedule.max_ongoing_micro_batch, usize::MAX);
+        }
+        // 1F1B keeps the legacy `pp` cap as its default explicit bound.
+        let spec = StrategySpec::hybrid(1, 1, 2, 4);
+        let tree = build_strategy(&g, spec).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        assert_eq!(r.stages[0].schedule.max_ongoing_micro_batch, 2);
     }
 }

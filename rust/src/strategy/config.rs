@@ -142,17 +142,100 @@ impl ParallelConfig {
     }
 }
 
+/// Pipeline execution order for a micro-batched subgraph.
+///
+/// The schedule decides, per pipeline stage, the order in which forward
+/// and backward micro-batch slots execute — which in turn decides the
+/// activation-memory watermark and the bubble structure the executor
+/// simulates. Lowering into per-device task orderings lives in
+/// [`crate::compiler::schedule`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PipelineSchedule {
+    /// GPipe fill-drain: run every forward micro-batch, then drain all
+    /// backwards. Maximal in-flight activations (all `n_micro` at the
+    /// first stage), simplest control.
+    GpipeFillDrain,
+    /// 1F1B (PipeDream-flush): after a per-stage warm-up of
+    /// `pp - stage - 1` forwards, alternate one forward with one
+    /// backward, so at most `pp - stage` micro-batches are in flight
+    /// per stage. Same bubble as fill-drain, far lower activation peak.
+    OneFOneB,
+    /// Megatron-style interleaved 1F1B: each stage is split into `v`
+    /// virtual chunks and the deeper `pp × v` virtual pipeline is
+    /// scheduled with per-chunk 1F1B (plus the extra in-flight chunks
+    /// interleaving requires, clamped monotone along the pipeline for
+    /// feasibility).
+    Interleaved {
+        /// Virtual chunks per pipeline stage (≥ 1; `1` degenerates to
+        /// plain 1F1B).
+        v: usize,
+    },
+}
+
+impl PipelineSchedule {
+    /// Schedules the sweep enumerates under `--schedules all`.
+    pub fn all() -> Vec<PipelineSchedule> {
+        vec![
+            PipelineSchedule::GpipeFillDrain,
+            PipelineSchedule::OneFOneB,
+            PipelineSchedule::Interleaved { v: 2 },
+        ]
+    }
+
+    /// Short display name: `gpipe`, `1f1b`, `interleaved:<v>`.
+    pub fn name(self) -> String {
+        match self {
+            PipelineSchedule::GpipeFillDrain => "gpipe".into(),
+            PipelineSchedule::OneFOneB => "1f1b".into(),
+            PipelineSchedule::Interleaved { v } => format!("interleaved:{v}"),
+        }
+    }
+
+    /// Parse a schedule name as accepted by the CLI: `gpipe` (alias
+    /// `fill-drain`), `1f1b`, `interleaved` (v = 2) or `interleaved:<v>`.
+    pub fn parse(s: &str) -> Option<PipelineSchedule> {
+        match s {
+            "gpipe" | "fill-drain" => Some(PipelineSchedule::GpipeFillDrain),
+            "1f1b" => Some(PipelineSchedule::OneFOneB),
+            "interleaved" => Some(PipelineSchedule::Interleaved { v: 2 }),
+            _ => {
+                let v = s.strip_prefix("interleaved:")?.parse().ok()?;
+                if v == 0 {
+                    return None;
+                }
+                Some(PipelineSchedule::Interleaved { v })
+            }
+        }
+    }
+
+    /// Virtual chunks per stage this schedule asks for (1 for the
+    /// non-interleaved schedules).
+    pub fn virtual_per_stage(self) -> usize {
+        match self {
+            PipelineSchedule::Interleaved { v } => v.max(1),
+            _ => 1,
+        }
+    }
+}
+
 /// Schedule config on a non-leaf strategy-tree node (§IV-B).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ScheduleConfig {
     /// Number of micro-batches the subgraph's batch is split into.
     pub n_micro_batch: usize,
     /// Maximum forward micro-batches in flight before their backward
-    /// completes (bounds activation memory).
+    /// completes (bounds activation memory). Under an explicit
+    /// [`PipelineSchedule`] this acts as an additional cap on the
+    /// schedule's own in-flight bound (`usize::MAX` = schedule decides).
+    /// The bound applies to a stage's *devices*: interleaved stages
+    /// split it across their virtual chunks (each chunk keeps ≥ 1).
     pub max_ongoing_micro_batch: usize,
     /// Whether to recompute forward activations in the backward pass
     /// (activation checkpointing).
     pub recompute: bool,
+    /// Pipeline execution order (meaningful when the resolved strategy
+    /// has more than one stage).
+    pub pipeline: PipelineSchedule,
 }
 
 impl Default for ScheduleConfig {
@@ -161,6 +244,7 @@ impl Default for ScheduleConfig {
             n_micro_batch: 1,
             max_ongoing_micro_batch: usize::MAX,
             recompute: false,
+            pipeline: PipelineSchedule::OneFOneB,
         }
     }
 }
@@ -177,12 +261,19 @@ impl ScheduleConfig {
             n_micro_batch: n,
             max_ongoing_micro_batch: max_ongoing,
             recompute: false,
+            pipeline: PipelineSchedule::OneFOneB,
         }
     }
 
     /// Enable recomputation.
     pub fn with_recompute(mut self, on: bool) -> Self {
         self.recompute = on;
+        self
+    }
+
+    /// Select the pipeline execution order.
+    pub fn with_pipeline(mut self, p: PipelineSchedule) -> Self {
+        self.pipeline = p;
         self
     }
 }
@@ -555,8 +646,33 @@ mod tests {
         let s = ScheduleConfig::default();
         assert_eq!(s.n_micro_batch, 1);
         assert!(!s.recompute);
+        assert_eq!(s.pipeline, PipelineSchedule::OneFOneB);
         let p = ScheduleConfig::pipeline(8, 2).with_recompute(true);
         assert_eq!(p.n_micro_batch, 8);
         assert!(p.recompute);
+        let g = ScheduleConfig::pipeline(8, 2)
+            .with_pipeline(PipelineSchedule::GpipeFillDrain);
+        assert_eq!(g.pipeline, PipelineSchedule::GpipeFillDrain);
+    }
+
+    #[test]
+    fn pipeline_schedule_names_roundtrip() {
+        for s in PipelineSchedule::all() {
+            assert_eq!(PipelineSchedule::parse(&s.name()), Some(s));
+        }
+        assert_eq!(
+            PipelineSchedule::parse("fill-drain"),
+            Some(PipelineSchedule::GpipeFillDrain)
+        );
+        assert_eq!(
+            PipelineSchedule::parse("interleaved"),
+            Some(PipelineSchedule::Interleaved { v: 2 })
+        );
+        assert_eq!(
+            PipelineSchedule::parse("interleaved:4"),
+            Some(PipelineSchedule::Interleaved { v: 4 })
+        );
+        assert_eq!(PipelineSchedule::parse("interleaved:0"), None);
+        assert_eq!(PipelineSchedule::parse("2f2b"), None);
     }
 }

@@ -33,7 +33,8 @@ pub mod tree;
 
 pub use builders::{build_strategy, StrategySpec};
 pub use config::{
-    memory_layout, operand_layout, LayoutPart, ParallelConfig, ScheduleConfig, TensorLayout,
+    memory_layout, operand_layout, LayoutPart, ParallelConfig, PipelineSchedule, ScheduleConfig,
+    TensorLayout,
 };
 pub use propagate::{resolve, ResolvedStrategy, Stage};
 pub use tree::{NodeId, NodeKind, StrategyTree, TreeNode};

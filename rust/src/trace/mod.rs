@@ -4,9 +4,12 @@
 //! (computation, feature communication, gradient communication), so the
 //! exported trace visually reproduces the paper's Fig. 5a execution
 //! timeline — comp-comm overlap and bandwidth sharing are directly
-//! visible.
+//! visible. Every duration event carries the task's pipeline `stage`,
+//! `micro`-batch index, and `phase` in its `args`, so GPipe / 1F1B /
+//! interleaved schedules are visually distinguishable in Perfetto
+//! (select an event, or color by `args.micro`).
 
-use crate::compiler::{CommClass, ExecGraph, TaskKind};
+use crate::compiler::{CommClass, ExecGraph, Task, TaskKind};
 use crate::executor::Span;
 use crate::graph::Graph;
 use crate::util::json::Json;
@@ -45,7 +48,7 @@ pub fn chrome_trace(graph: &Graph, eg: &ExecGraph, timeline: &[Span]) -> Json {
         let name = task.label(graph);
         match &task.kind {
             TaskKind::Comp(c) => {
-                events.push(duration_event(&name, c.device, TID_COMP, ts, dur));
+                events.push(duration_event(&name, c.device, TID_COMP, ts, dur, task));
             }
             TaskKind::Comm(c) => {
                 let tid = match c.class {
@@ -53,7 +56,7 @@ pub fn chrome_trace(graph: &Graph, eg: &ExecGraph, timeline: &[Span]) -> Json {
                     CommClass::Gradient => TID_GRAD,
                 };
                 for &d in &c.group {
-                    events.push(duration_event(&name, d, tid, ts, dur));
+                    events.push(duration_event(&name, d, tid, ts, dur, task));
                 }
             }
         }
@@ -64,7 +67,7 @@ pub fn chrome_trace(graph: &Graph, eg: &ExecGraph, timeline: &[Span]) -> Json {
     ])
 }
 
-fn duration_event(name: &str, pid: usize, tid: f64, ts: f64, dur: f64) -> Json {
+fn duration_event(name: &str, pid: usize, tid: f64, ts: f64, dur: f64, task: &Task) -> Json {
     Json::obj(vec![
         ("ph", Json::Str("X".into())),
         ("name", Json::Str(name.into())),
@@ -72,6 +75,14 @@ fn duration_event(name: &str, pid: usize, tid: f64, ts: f64, dur: f64) -> Json {
         ("tid", Json::Num(tid)),
         ("ts", Json::Num(ts)),
         ("dur", Json::Num(dur)),
+        (
+            "args",
+            Json::obj(vec![
+                ("stage", Json::Num(task.stage as f64)),
+                ("micro", Json::Num(task.micro as f64)),
+                ("phase", Json::Str(format!("{:?}", task.phase))),
+            ]),
+        ),
     ])
 }
 
@@ -123,10 +134,16 @@ mod tests {
         let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
         // Metadata + one event per comp task + per comm participant.
         assert!(events.len() > r.timeline.len());
-        // Every duration event has non-negative dur.
+        // Every duration event has non-negative dur and carries the
+        // pipeline stage + micro-batch index in args (Perfetto needs
+        // them to tell schedules apart).
         for e in events {
             if e.get("ph").and_then(|p| p.as_str()) == Some("X") {
                 assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+                let args = e.get("args").expect("duration events carry args");
+                assert!(args.get("stage").and_then(|v| v.as_f64()).is_some());
+                assert!(args.get("micro").and_then(|v| v.as_f64()).is_some());
+                assert!(args.get("phase").and_then(|v| v.as_str()).is_some());
             }
         }
     }

@@ -151,6 +151,40 @@ fn max_ongoing_bounds_activation_memory() {
     );
 }
 
+/// Pipeline schedules are memory-distinguishable: on GPT-2 at pp=4 with
+/// 8 micro-batches, 1F1B's early backwards must yield a strictly lower
+/// peak activation watermark than GPipe's fill-drain (the whole point of
+/// the schedule), with interleaved in between, while all three predict a
+/// positive throughput.
+#[test]
+fn one_f_one_b_beats_gpipe_on_peak_activation_memory() {
+    let g = ModelKind::Gpt2.build(32);
+    let c = Cluster::preset(Preset::HC2, 1);
+    let est = OpEstimator::analytical(&c);
+    let peak_act = |sched: PipelineSchedule| {
+        let spec = StrategySpec::hybrid(1, 1, 4, 8).with_schedule(sched);
+        let tree = build_strategy(&g, spec).unwrap();
+        let eg = compile(&g, &tree, &c).unwrap();
+        assert!(eg.is_dag(), "{} must compile to a DAG", spec.label());
+        let r = Htae::new(&c, &est).simulate(&eg).unwrap();
+        assert!(r.throughput > 0.0, "{}", spec.label());
+        // Dynamic watermark (peak minus the schedule-independent static
+        // footprint), max over devices.
+        r.peak_act.iter().copied().max().unwrap()
+    };
+    let gpipe = peak_act(PipelineSchedule::GpipeFillDrain);
+    let f1b = peak_act(PipelineSchedule::OneFOneB);
+    let inter = peak_act(PipelineSchedule::Interleaved { v: 2 });
+    assert!(
+        f1b < gpipe,
+        "1F1B peak activation {f1b} must undercut GPipe {gpipe}"
+    );
+    assert!(
+        inter <= gpipe,
+        "interleaved peak activation {inter} must not exceed GPipe {gpipe}"
+    );
+}
+
 /// γ only ever slows the simulation down, proportionally to its value.
 #[test]
 fn gamma_is_monotone() {
