@@ -33,6 +33,7 @@ fn main() {
                 no_sharing: true,
                 no_overlap: true,
                 skip_flexflow: true,
+                ..Default::default()
             },
         )
         .expect("case runs");

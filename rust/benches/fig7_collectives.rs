@@ -1,0 +1,82 @@
+//! Collective-algorithm comparison over the Fig. 7 link hierarchy:
+//! closed-form plan costs (ring / binomial tree / 2-level hierarchical
+//! / auto) and the legacy monolithic α–β cost, across message sizes,
+//! for an intra-node and a cross-node all-reduce group.
+//!
+//! Expected shape: tree wins tiny (latency-bound) messages, ring wins
+//! large intra-node messages, the hierarchical plan dominates large
+//! cross-node messages (the flat ring serializes the whole volume
+//! through the NIC bottleneck), and `auto` tracks the per-cell winner.
+//!
+//! Run: `cargo bench --bench fig7_collectives`
+
+use proteus::cluster::{Cluster, Preset};
+use proteus::collective::{lower, monolithic_cost_ps, CollAlgo};
+use proteus::compiler::{CollectiveKind, CommClass, CommTask};
+use proteus::util::table::Table;
+
+fn ms(ps: u64) -> String {
+    format!("{:.3}", ps as f64 / 1e9)
+}
+
+fn main() {
+    let cluster = Cluster::preset(Preset::HC2, 2);
+    let groups: &[(&str, Vec<usize>)] = &[
+        ("intra 8xV100", (0..8).collect()),
+        ("cross 2x8xV100", (0..16).collect()),
+    ];
+    println!("\n=== Collective plans over the link hierarchy (all-reduce, ms) ===\n");
+    for (label, group) in groups {
+        println!("group: {label}");
+        let mut table = Table::new(&["bytes", "mono", "ring", "tree", "hier", "auto", "winner"]);
+        for exp in [10u32, 14, 18, 22, 26] {
+            let bytes = 1u64 << exp;
+            let task = CommTask {
+                kind: CollectiveKind::AllReduce,
+                group: group.clone(),
+                bytes,
+                class: CommClass::Gradient,
+            };
+            let cost = |algo: CollAlgo| lower(&cluster, algo, &task).cost_ps(&cluster);
+            let (ring, tree, hier, auto) = (
+                cost(CollAlgo::Ring),
+                cost(CollAlgo::Tree),
+                cost(CollAlgo::Hierarchical),
+                cost(CollAlgo::Auto),
+            );
+            let winner = lower(&cluster, CollAlgo::Auto, &task).algo;
+            assert_eq!(
+                auto,
+                ring.min(tree).min(hier),
+                "auto must pick the cheapest applicable plan"
+            );
+            table.row(vec![
+                format!("{bytes}"),
+                ms(monolithic_cost_ps(&cluster, &task)),
+                ms(ring),
+                ms(tree),
+                ms(hier),
+                ms(auto),
+                winner.into(),
+            ]);
+        }
+        print!("{}", table.render());
+        println!();
+    }
+    // The tentpole claim, asserted on the largest cross-node message.
+    let task = CommTask {
+        kind: CollectiveKind::AllReduce,
+        group: (0..16).collect(),
+        bytes: 1 << 26,
+        class: CommClass::Gradient,
+    };
+    let ring = lower(&cluster, CollAlgo::Ring, &task).cost_ps(&cluster);
+    let hier = lower(&cluster, CollAlgo::Hierarchical, &task).cost_ps(&cluster);
+    println!(
+        "cross-node 64 MiB: hierarchical {:.3} ms vs flat ring {:.3} ms ({:.2}x)",
+        hier as f64 / 1e9,
+        ring as f64 / 1e9,
+        ring as f64 / hier as f64
+    );
+    assert!(hier < ring, "hierarchical must beat the flat ring cross-node");
+}

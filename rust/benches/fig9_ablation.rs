@@ -59,6 +59,7 @@ fn main() {
                 no_sharing: true,
                 no_overlap: true,
                 skip_flexflow: true,
+                ..HtaeCustom::default()
             },
         ),
         (
@@ -67,6 +68,7 @@ fn main() {
                 no_sharing: true,
                 no_overlap: false,
                 skip_flexflow: true,
+                ..HtaeCustom::default()
             },
         ),
         (
@@ -75,20 +77,39 @@ fn main() {
                 no_sharing: false,
                 no_overlap: true,
                 skip_flexflow: true,
+                ..HtaeCustom::default()
+            },
+        ),
+        // The collective-layer ablation: full behaviors, but collectives
+        // costed monolithically (flat alpha-beta) instead of lowered to
+        // phased plans. The emulated truth keeps planned physics, so
+        // this column isolates what the lowering buys.
+        (
+            "mono-coll",
+            HtaeCustom {
+                skip_flexflow: true,
+                monolithic: true,
+                ..HtaeCustom::default()
             },
         ),
         (
             "Proteus",
             HtaeCustom {
-                no_sharing: false,
-                no_overlap: false,
                 skip_flexflow: true,
+                ..HtaeCustom::default()
             },
         ),
     ];
     println!("\n=== Fig. 9: runtime-behavior ablation (prediction error %) ===\n");
-    let mut table = Table::new(&["workload", "Plain", "+overlap", "+bw-sharing", "Proteus"]);
-    let mut sums = [0.0f64; 4];
+    let mut table = Table::new(&[
+        "workload",
+        "Plain",
+        "+overlap",
+        "+bw-sharing",
+        "mono-coll",
+        "Proteus",
+    ]);
+    let mut sums = [0.0f64; 5];
     for &(model, batch, preset, nodes, spec) in workloads {
         let case = Case {
             model,
@@ -113,15 +134,16 @@ fn main() {
     print!("{}", table.render());
     let n = workloads.len() as f64;
     println!(
-        "\naverages: Plain {:.2}%  +overlap {:.2}%  +bw-sharing {:.2}%  Proteus {:.2}%",
+        "\naverages: Plain {:.2}%  +overlap {:.2}%  +bw-sharing {:.2}%  mono-coll {:.2}%  Proteus {:.2}%",
         sums[0] / n,
         sums[1] / n,
         sums[2] / n,
-        sums[3] / n
+        sums[3] / n,
+        sums[4] / n
     );
     println!("paper: Plain 14.4% → Proteus 2.4%");
     assert!(
-        sums[3] <= sums[0],
+        sums[4] <= sums[0],
         "full behavior modeling must not be worse than Plain"
     );
 }

@@ -74,9 +74,15 @@ impl<'a> FlexFlowSim<'a> {
     pub fn simulate(&self, graph: &Graph, tree: &StrategyTree, eg: &ExecGraph) -> Result<SimReport> {
         self.check_supported(graph, tree)?;
         let costs = self.flat_costs(eg)?;
-        // Fixed-cost DES without behavior modeling = HTAE "plain".
+        // Fixed-cost DES without behavior modeling = HTAE "plain", and
+        // explicitly *monolithic*: FlexFlow-Sim's flat per-op costs must
+        // be consumed as-is, not replaced by collective plans.
         let est = OpEstimator::analytical(self.cluster);
-        let htae = Htae::with_config(self.cluster, &est, HtaeConfig::plain());
+        let config = HtaeConfig {
+            coll_algo: crate::collective::CollAlgo::Monolithic,
+            ..HtaeConfig::plain()
+        };
+        let htae = Htae::with_config(self.cluster, &est, config);
         htae.simulate_with_costs(eg, &costs)
     }
 

@@ -49,6 +49,14 @@ SWEEP OPTIONS:
   --threads N       worker threads (0 = auto)
   --top N           ranked rows to print (default 10)
 
+COLLECTIVES (simulate, sweep):
+  --coll-algo <ring|tree|hier|auto|mono>
+                    collective-algorithm lowering (default auto):
+                    flat ring, binomial tree, NCCL-style 2-level
+                    hierarchy, automatic per-collective selection by
+                    message size and group span, or the monolithic
+                    alpha-beta ablation path (fig9)
+
 OUTPUT / VALIDATION:
   --json            machine-readable JSON on stdout (simulate, sweep;
                     schemas documented in README.md)

@@ -24,7 +24,8 @@ pub mod args;
 
 use crate::baselines::FlexFlowSim;
 use crate::cluster::{Cluster, Preset};
-use crate::emulator::Emulator;
+use crate::collective::CollAlgo;
+use crate::emulator::{Emulator, EmulatorConfig};
 use crate::estimator::OpEstimator;
 use crate::executor::{calibrate, Htae, HtaeConfig};
 use crate::models::ModelKind;
@@ -107,6 +108,18 @@ fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Cluster, StrategySpe
     Ok((model, batch, cluster, spec))
 }
 
+/// Parse `--coll-algo` (collective lowering override; `auto` selects
+/// ring/tree/hierarchical per collective, `mono` is the monolithic
+/// ablation path).
+fn parse_coll_algo(args: &Args) -> Result<CollAlgo> {
+    let s = args.get_or("coll-algo", "auto");
+    CollAlgo::parse(&s).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown collective algorithm '{s}' (ring|tree|hier|auto|mono)"
+        ))
+    })
+}
+
 /// Parse the sweep's `--schedules` set.
 fn parse_schedules(s: &str) -> Result<Vec<PipelineSchedule>> {
     if s == "all" {
@@ -131,6 +144,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let truth = args.flag("truth");
     let flexflow = args.flag("flexflow");
     let json = args.flag("json");
+    let coll_algo = parse_coll_algo(args)?;
     let trace_path = args.get("trace").map(|s| s.to_string());
     args.reject_unknown()?;
 
@@ -148,15 +162,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             ..HtaeConfig::default()
         }
     };
+    config.coll_algo = coll_algo;
     config.record_timeline = trace_path.is_some();
     let t1 = std::time::Instant::now();
     let report = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
     let exe_s = t1.elapsed().as_secs_f64();
     let backend = if est.is_pjrt() { "pjrt" } else { "analytical" };
     // Run the optional validators once, up front, so the JSON and text
-    // paths cannot drift.
+    // paths cannot drift. The emulated truth uses the same collective
+    // lowering as the prediction.
     let truth_report = if truth {
-        Some(Emulator::new(&cluster, &est).simulate(&eg)?)
+        let emu_config = EmulatorConfig {
+            coll_algo,
+            ..EmulatorConfig::default()
+        };
+        Some(Emulator::with_config(&cluster, &est, emu_config).simulate(&eg)?)
     } else {
         None
     };
@@ -172,6 +192,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             ("model", Json::Str(model.name().into())),
             ("strategy", Json::Str(spec.label())),
             ("schedule", Json::Str(spec.schedule.name())),
+            ("coll_algo", Json::Str(coll_algo.name().into())),
             ("cluster", Json::Str(cluster.name.clone())),
             ("gpus", Json::Num(cluster.num_devices() as f64)),
             ("backend", Json::Str(backend.into())),
@@ -226,12 +247,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("{}", Json::obj(fields).to_string_pretty());
     } else {
         println!(
-            "model={} strategy={} cluster={}({} GPUs) backend={}",
+            "model={} strategy={} cluster={}({} GPUs) backend={} coll={}",
             model.name(),
             spec.label(),
             cluster.name,
             cluster.num_devices(),
             backend,
+            coll_algo.name(),
         );
         println!(
             "tasks={} compile={:.3}s simulate={:.3}s",
@@ -266,7 +288,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
     }
     if let Some(path) = trace_path {
-        crate::trace::write_chrome_trace(&path, &graph, &eg, &report.timeline)?;
+        crate::trace::write_chrome_trace(
+            &path,
+            &graph,
+            &eg,
+            &report.timeline,
+            &report.comm_phases,
+        )?;
         if !json {
             println!("trace written to {path}");
         }
@@ -383,6 +411,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let plain = args.flag("plain");
     let truth = args.flag("truth");
     let json = args.flag("json");
+    let coll_algo = parse_coll_algo(args)?;
     let schedules = parse_schedules(&args.get_or("schedules", "1f1b"))?;
     let artifact = args.get_or("artifacts", DEFAULT_ARTIFACT);
     args.reject_unknown()?;
@@ -400,7 +429,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             spec,
         })
         .collect();
-    let runner = SweepRunner::new().with_threads(threads).plain(plain);
+    let runner = SweepRunner::new()
+        .with_threads(threads)
+        .plain(plain)
+        .coll_algo(coll_algo);
     let n_threads = runner.effective_threads(scenarios.len());
     let t0 = std::time::Instant::now();
     let outcomes = runner.run(&scenarios);
@@ -420,7 +452,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         for o in ranked.iter().take(3) {
             let tree = build_strategy(&graph, o.scenario.spec)?;
             let eg = crate::compiler::compile(&graph, &tree, &cluster)?;
-            let t = Emulator::new(&cluster, &est).simulate(&eg)?;
+            let emu_config = EmulatorConfig {
+                coll_algo,
+                ..EmulatorConfig::default()
+            };
+            let t = Emulator::with_config(&cluster, &est, emu_config).simulate(&eg)?;
             let pred = o.report.as_ref().unwrap();
             rows.push((
                 o.scenario.spec.label(),
@@ -463,6 +499,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 "schedules",
                 Json::Arr(schedules.iter().map(|s| Json::Str(s.name())).collect()),
             ),
+            ("coll_algo", Json::Str(coll_algo.name().into())),
             ("swept", Json::Num(outcomes.len() as f64)),
             ("viable", Json::Num(ranked.len() as f64)),
             ("oom", Json::Num(oom as f64)),
@@ -687,6 +724,19 @@ mod tests {
     fn info_command_runs() {
         let a = parse("info --model resnet50 --batch 8");
         run(&a).unwrap();
+    }
+
+    #[test]
+    fn coll_algo_flag_parses_and_runs() {
+        for algo in ["ring", "tree", "hier", "auto", "mono"] {
+            let a = parse(&format!(
+                "simulate --model vgg19 --batch 16 --preset HC2 --nodes 2 --dp 16 \
+                 --coll-algo {algo} --json"
+            ));
+            run(&a).unwrap();
+        }
+        let a = parse("simulate --model vgg19 --batch 8 --coll-algo bogus");
+        assert!(run(&a).is_err());
     }
 
     #[test]

@@ -308,13 +308,19 @@ impl Cluster {
     /// that crosses QPI twice only gets half the QPI bandwidth per
     /// segment — exactly the fine-grained topology effect flat models
     /// (FlexFlow-Sim) miss.
+    ///
+    /// A 2-rank "ring" degenerates to a single full-duplex exchange:
+    /// its two wrap-around segments are the same duplex links in
+    /// opposite directions, so the wrap is counted once (counting both
+    /// would halve the reported bandwidth for every 2-GPU group).
     pub fn ring_bus_bandwidth(&self, group: &[DeviceId]) -> f64 {
         if group.len() < 2 {
             return f64::INFINITY;
         }
         let ring = self.ring_order(group);
+        let segments = if ring.len() == 2 { 1 } else { ring.len() };
         let mut uses: std::collections::HashMap<LinkId, u32> = Default::default();
-        for i in 0..ring.len() {
+        for i in 0..segments {
             let a = ring[i];
             let b = ring[(i + 1) % ring.len()];
             for l in self.path(a, b) {
@@ -434,6 +440,23 @@ mod tests {
         let intra: Vec<usize> = (0..8).collect();
         let cross: Vec<usize> = vec![0, 8, 16, 24];
         assert!(c.ring_bus_bandwidth(&intra) > c.ring_bus_bandwidth(&cross));
+    }
+
+    /// Regression: the 2-rank ring used to walk both wrap-around
+    /// segments of the degenerate "ring", double-counting every duplex
+    /// link and halving the reported bus bandwidth for 2-GPU groups.
+    #[test]
+    fn two_rank_ring_gets_full_duplex_bandwidth() {
+        let c = hc2();
+        // Same-node V100 pair: path is two 150 GB/s NVLink ports, each
+        // traversed once by the single duplex exchange.
+        assert_eq!(c.ring_bus_bandwidth(&[0, 1]), 150e9);
+        // Cross-node pair: the 12 GB/s NIC is the bottleneck, again
+        // counted once.
+        assert_eq!(c.ring_bus_bandwidth(&[0, 8]), 12e9);
+        // 3-rank rings still pay the real multiplicity (each port
+        // carries that device's in- and out-segment).
+        assert_eq!(c.ring_bus_bandwidth(&[0, 1, 2]), 150e9 / 2.0);
     }
 
     #[test]

@@ -1,0 +1,814 @@
+//! Collective-algorithm layer: lowering a [`CollectiveKind`] over a
+//! device group into a **phased, topology-aware execution plan**.
+//!
+//! The paper's HTAE owes its accuracy to modeling *how* collectives
+//! traverse the Fig. 7 link hierarchy, not just how many bytes they
+//! move. This module is that lowering: every collective becomes a
+//! [`CollectivePlan`] — an ordered sequence of [`PlanPhase`]s, each a
+//! set of concurrent point-to-point [`FlowSpec`]s plus an α
+//! latency-step count. Three algorithm families are modeled:
+//!
+//! - **flat ring** — the NCCL ring schedule over the topology-aware
+//!   [`Cluster::ring_order`]; one phase whose segments each carry the
+//!   algorithm's bus-traffic volume;
+//! - **binomial tree** — log₂-depth reduce + broadcast rounds; fewer α
+//!   steps, more bus traffic, so it wins on small (latency-bound)
+//!   messages exactly as in NCCL;
+//! - **2-level hierarchical** — the NCCL cross-node schedule: per-node
+//!   ring reduce-scatter, then per-shard cross-node rings over the
+//!   NICs, then per-node ring all-gather. Intra-node phases run at
+//!   NVLink/PCIe speed and only `2·bytes·(m-1)/m` per node crosses a
+//!   NIC, instead of the flat ring's full serialized volume.
+//!
+//! [`CollAlgo::Auto`] picks per collective by comparing the plans'
+//! closed-form isolated costs (α steps + exact max-min fluid phase
+//! times), which makes the size/span cutover emergent rather than a
+//! tuned threshold. Both simulators consume the *same* plan: the
+//! emulator drives each phase's flows through its fair-share solver
+//! (bandwidth sharing then emerges over the op's lifetime), while HTAE
+//! uses the closed-form per-phase α–β costs — so on an uncontended
+//! group the two agree to float rounding (pinned in
+//! `emulator::tests::planned_collectives_agree_between_htae_and_engine`).
+
+use crate::cluster::{Cluster, DeviceId, LinkId};
+use crate::compiler::{CollectiveKind, CommTask};
+use crate::emulator::fairshare;
+use crate::estimator::features::collective_profile;
+use crate::util::time::{secs_to_ps, Ps, SEC};
+
+/// Collective lowering algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollAlgo {
+    /// The pre-plan ablation path: one monolithic α–β cost from
+    /// [`collective_profile`] / `ring_bus_bandwidth`, flows decomposed
+    /// flat (kept for the Fig. 9 style ablation comparisons).
+    Monolithic,
+    /// Flat ring schedule for everything.
+    Ring,
+    /// Binomial tree for all-reduce (ring for the sharded collectives).
+    Tree,
+    /// NCCL-style 2-level hierarchy for cross-node all-reduce (falls
+    /// back to ring when the group fits one node or is irregular).
+    Hierarchical,
+    /// Per-collective argmin over the applicable plans' closed-form
+    /// costs (message size and group span decide, as in NCCL's tuner).
+    Auto,
+}
+
+impl CollAlgo {
+    /// CLI / display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CollAlgo::Monolithic => "mono",
+            CollAlgo::Ring => "ring",
+            CollAlgo::Tree => "tree",
+            CollAlgo::Hierarchical => "hier",
+            CollAlgo::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI name: `ring | tree | hier | auto`, plus `mono` (the
+    /// ablation switch preserving the monolithic path).
+    pub fn parse(s: &str) -> Option<CollAlgo> {
+        match s {
+            "mono" | "monolithic" => Some(CollAlgo::Monolithic),
+            "ring" => Some(CollAlgo::Ring),
+            "tree" => Some(CollAlgo::Tree),
+            "hier" | "hierarchical" => Some(CollAlgo::Hierarchical),
+            "auto" => Some(CollAlgo::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Plan-dedup key shared by HTAE and the emulator engines: identical
+/// `(kind, group, bytes)` collectives (micro-batch repeats) lower
+/// identically; only per-task noise (ripple) differs at launch.
+pub type PlanKey = (CollectiveKind, Vec<DeviceId>, u64);
+
+/// Build the [`PlanKey`] of a communication task.
+pub fn plan_key(c: &CommTask) -> PlanKey {
+    (c.kind, c.group.clone(), c.bytes)
+}
+
+/// One point-to-point transfer of a phase (concurrent with its phase
+/// siblings).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlowSpec {
+    /// Sending device.
+    pub src: DeviceId,
+    /// Receiving device.
+    pub dst: DeviceId,
+    /// Bytes this flow moves over the phase.
+    pub bytes: f64,
+}
+
+/// One sequential phase of a collective plan.
+#[derive(Debug, Clone)]
+pub struct PlanPhase {
+    /// Phase label (trace export, debugging): `"ar-ring"`,
+    /// `"intra-rs"`, `"reduce-tree"`, ...
+    pub label: &'static str,
+    /// Latency steps of this phase (α multiplier).
+    pub steps: f64,
+    /// Per-step latency in [`Ps`] (worst pairwise α among the phase's
+    /// transfers).
+    pub alpha_ps: Ps,
+    /// Concurrent flows of the phase.
+    pub flows: Vec<FlowSpec>,
+}
+
+impl PlanPhase {
+    /// Total α of the phase, ps.
+    pub fn alpha_total_ps(&self) -> Ps {
+        (self.steps * self.alpha_ps as f64) as Ps
+    }
+
+    /// Exact completion time of the phase's flows in isolation under
+    /// max-min fair sharing (fluid model), seconds. This is precisely
+    /// what the emulator's fair-share engine computes when nothing else
+    /// contends, so HTAE's closed-form β and the event engine agree.
+    ///
+    /// Flow byte counts are clamped to ≥ 1 byte and empty-path flows
+    /// complete instantly, mirroring the engines' conventions.
+    pub fn fluid_secs(&self, cluster: &Cluster) -> f64 {
+        let paths: Vec<Vec<LinkId>> = self
+            .flows
+            .iter()
+            .map(|f| cluster.path(f.src, f.dst))
+            .collect();
+        let mut rem: Vec<f64> = self.flows.iter().map(|f| f.bytes.max(1.0)).collect();
+        let mut live: Vec<usize> = (0..self.flows.len())
+            .filter(|&i| !paths[i].is_empty())
+            .collect();
+        let mut t = 0.0f64;
+        while !live.is_empty() {
+            let live_paths: Vec<&[LinkId]> = live.iter().map(|&i| paths[i].as_slice()).collect();
+            let mut scratch = fairshare::Scratch::new(cluster.links.len());
+            let mut rates = Vec::new();
+            fairshare::maxmin_rates_into(
+                &live_paths,
+                cluster.links.len(),
+                &|l| cluster.links[l].bandwidth,
+                &mut scratch,
+                &mut rates,
+            );
+            let mut dt = f64::INFINITY;
+            for (k, &i) in live.iter().enumerate() {
+                if rates[k] > 0.0 && rates[k].is_finite() {
+                    dt = dt.min(rem[i] / rates[k]);
+                }
+            }
+            if !dt.is_finite() {
+                break; // no capacity at all: plan degenerates, stop
+            }
+            t += dt;
+            let mut next_live = Vec::with_capacity(live.len());
+            for (k, &i) in live.iter().enumerate() {
+                rem[i] -= dt * rates[k];
+                // The flows that set dt finish now; keep the rest.
+                if rem[i] > dt * rates[k].max(1.0) * 1e-12 && rem[i] > 1e-9 {
+                    next_live.push(i);
+                }
+            }
+            if next_live.len() == live.len() {
+                break; // numeric stall guard (cannot happen with finite dt)
+            }
+            live = next_live;
+        }
+        t
+    }
+}
+
+/// A lowered collective: sequential phases of concurrent flows.
+#[derive(Debug, Clone)]
+pub struct CollectivePlan {
+    /// The concrete algorithm the plan uses (`"ring"`, `"tree"`,
+    /// `"hier"`, never `"auto"`).
+    pub algo: &'static str,
+    /// Sequential phases. Always non-empty; degenerate groups get one
+    /// flow-less phase.
+    pub phases: Vec<PlanPhase>,
+}
+
+impl CollectivePlan {
+    /// Total latency term: Σ steps × per-step α, ps.
+    pub fn alpha_ps(&self) -> Ps {
+        self.phases.iter().map(|p| p.alpha_total_ps()).sum()
+    }
+
+    /// Total bandwidth term: Σ per-phase isolated fluid times, ps.
+    pub fn beta_ps(&self, cluster: &Cluster) -> Ps {
+        secs_to_ps(self.phases.iter().map(|p| p.fluid_secs(cluster)).sum())
+    }
+
+    /// Closed-form isolated cost (α + β), ps.
+    pub fn cost_ps(&self, cluster: &Cluster) -> Ps {
+        self.alpha_ps() + self.beta_ps(cluster)
+    }
+
+    /// Per-phase `(label, α, β)` breakdown, ps (trace sub-spans).
+    pub fn phase_costs(&self, cluster: &Cluster) -> Vec<(&'static str, Ps, Ps)> {
+        self.phases
+            .iter()
+            .map(|p| {
+                (
+                    p.label,
+                    p.alpha_total_ps(),
+                    secs_to_ps(p.fluid_secs(cluster)),
+                )
+            })
+            .collect()
+    }
+}
+
+/// Lower a communication task to its plan under `algo`.
+/// `CollAlgo::Monolithic` is not a plan — callers keep the legacy α–β
+/// path for it; passing it here falls back to the ring plan.
+pub fn lower(cluster: &Cluster, algo: CollAlgo, c: &CommTask) -> CollectivePlan {
+    let bytes = c.bytes as f64;
+    match c.kind {
+        CollectiveKind::P2p => p2p_plan(cluster, &c.group, bytes),
+        CollectiveKind::Broadcast => broadcast_plan(cluster, &c.group, bytes),
+        CollectiveKind::AllToAll => all_to_all_plan(cluster, &c.group, bytes),
+        CollectiveKind::AllGather => ring_plan(cluster, &c.group, bytes, "ag-ring", 1.0),
+        CollectiveKind::ReduceScatter => ring_plan(cluster, &c.group, bytes, "rs-ring", 1.0),
+        CollectiveKind::AllReduce => match algo {
+            CollAlgo::Ring | CollAlgo::Monolithic => allreduce_ring(cluster, &c.group, bytes),
+            CollAlgo::Tree => allreduce_tree(cluster, &c.group, bytes),
+            CollAlgo::Hierarchical => allreduce_hier(cluster, &c.group, bytes)
+                .unwrap_or_else(|| allreduce_ring(cluster, &c.group, bytes)),
+            CollAlgo::Auto => {
+                let mut best = allreduce_ring(cluster, &c.group, bytes);
+                let mut best_cost = best.cost_ps(cluster);
+                for cand in [
+                    Some(allreduce_tree(cluster, &c.group, bytes)),
+                    allreduce_hier(cluster, &c.group, bytes),
+                ]
+                .into_iter()
+                .flatten()
+                {
+                    let cost = cand.cost_ps(cluster);
+                    if cost < best_cost {
+                        best = cand;
+                        best_cost = cost;
+                    }
+                }
+                best
+            }
+        },
+    }
+}
+
+/// Worst pairwise α over a flow set, ps.
+fn max_flow_alpha(cluster: &Cluster, flows: &[FlowSpec]) -> Ps {
+    flows
+        .iter()
+        .map(|f| cluster.pair_latency(f.src, f.dst))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Ring neighbor segments over `ring`, each carrying `vol` bytes. A
+/// 2-rank "ring" is a single full-duplex exchange: its two wrap-around
+/// segments traverse the same duplex links, so only one flow is
+/// emitted (see `Cluster::ring_bus_bandwidth`).
+fn ring_segments(ring: &[DeviceId], vol: f64) -> Vec<FlowSpec> {
+    if ring.len() < 2 {
+        return Vec::new();
+    }
+    let n = if ring.len() == 2 { 1 } else { ring.len() };
+    (0..n)
+        .map(|i| FlowSpec {
+            src: ring[i],
+            dst: ring[(i + 1) % ring.len()],
+            bytes: vol,
+        })
+        .collect()
+}
+
+/// Single ring phase moving `traffic_scale × bytes × (n-1)/n` per
+/// segment with `scale_steps × (n-1)` latency steps (all-gather /
+/// reduce-scatter use 1, all-reduce uses 2).
+fn ring_plan(
+    cluster: &Cluster,
+    group: &[DeviceId],
+    bytes: f64,
+    label: &'static str,
+    scale_steps: f64,
+) -> CollectivePlan {
+    let n = group.len();
+    if n < 2 {
+        return degenerate_plan("ring");
+    }
+    let ring = cluster.ring_order(group);
+    let vol = bytes * scale_steps * (n as f64 - 1.0) / n as f64;
+    let flows = ring_segments(&ring, vol);
+    CollectivePlan {
+        algo: "ring",
+        phases: vec![PlanPhase {
+            label,
+            steps: scale_steps * (n as f64 - 1.0),
+            alpha_ps: cluster.ring_latency(group),
+            flows,
+        }],
+    }
+}
+
+/// Flow-less plan for 1-rank groups and empty payloads.
+fn degenerate_plan(algo: &'static str) -> CollectivePlan {
+    CollectivePlan {
+        algo,
+        phases: vec![PlanPhase {
+            label: "noop",
+            steps: 0.0,
+            alpha_ps: 0,
+            flows: Vec::new(),
+        }],
+    }
+}
+
+fn p2p_plan(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> CollectivePlan {
+    if group.len() < 2 || group[0] == group[1] {
+        return degenerate_plan("ring");
+    }
+    CollectivePlan {
+        algo: "ring",
+        phases: vec![PlanPhase {
+            label: "p2p",
+            steps: 1.0,
+            alpha_ps: cluster.pair_latency(group[0], group[1]),
+            flows: vec![FlowSpec {
+                src: group[0],
+                dst: group[1],
+                bytes,
+            }],
+        }],
+    }
+}
+
+/// Broadcast always lowers to binomial-tree rounds from the root
+/// (`group[0]`): each round doubles the holder set.
+fn broadcast_plan(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> CollectivePlan {
+    let n = group.len();
+    if n < 2 {
+        return degenerate_plan("tree");
+    }
+    let mut phases = Vec::new();
+    let mut holders = 1usize;
+    while holders < n {
+        let flows: Vec<FlowSpec> = (holders..(2 * holders).min(n))
+            .map(|i| FlowSpec {
+                src: group[i - holders],
+                dst: group[i],
+                bytes,
+            })
+            .collect();
+        phases.push(PlanPhase {
+            label: "bcast-tree",
+            steps: 1.0,
+            alpha_ps: max_flow_alpha(cluster, &flows),
+            flows,
+        });
+        holders *= 2;
+    }
+    CollectivePlan {
+        algo: "tree",
+        phases,
+    }
+}
+
+/// All-to-all: a single phase of the full pair mesh, `bytes/n` per
+/// pair, `n-1` latency steps.
+fn all_to_all_plan(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> CollectivePlan {
+    let n = group.len();
+    if n < 2 {
+        return degenerate_plan("ring");
+    }
+    let per = bytes / n as f64;
+    let mut flows = Vec::with_capacity(n * (n - 1));
+    for &a in group {
+        for &b in group {
+            if a != b {
+                flows.push(FlowSpec {
+                    src: a,
+                    dst: b,
+                    bytes: per,
+                });
+            }
+        }
+    }
+    CollectivePlan {
+        algo: "ring",
+        phases: vec![PlanPhase {
+            label: "a2a-mesh",
+            steps: n as f64 - 1.0,
+            alpha_ps: cluster.ring_latency(group),
+            flows,
+        }],
+    }
+}
+
+fn allreduce_ring(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> CollectivePlan {
+    ring_plan(cluster, group, bytes, "ar-ring", 2.0)
+}
+
+/// Binomial-tree all-reduce: log₂-depth reduce rounds toward
+/// `ring_order(group)[0]`, then the mirrored broadcast rounds. Full
+/// payload every round — latency-optimal, bandwidth-heavy.
+fn allreduce_tree(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> CollectivePlan {
+    let n = group.len();
+    if n < 2 {
+        return degenerate_plan("tree");
+    }
+    let g = cluster.ring_order(group);
+    let mut reduce: Vec<PlanPhase> = Vec::new();
+    let mut stride = 1usize;
+    while stride < n {
+        let mut flows = Vec::new();
+        let mut i = 0;
+        while i + stride < n {
+            flows.push(FlowSpec {
+                src: g[i + stride],
+                dst: g[i],
+                bytes,
+            });
+            i += 2 * stride;
+        }
+        reduce.push(PlanPhase {
+            label: "reduce-tree",
+            steps: 1.0,
+            alpha_ps: max_flow_alpha(cluster, &flows),
+            flows,
+        });
+        stride *= 2;
+    }
+    let mut phases = reduce.clone();
+    for p in reduce.iter().rev() {
+        phases.push(PlanPhase {
+            label: "bcast-tree",
+            steps: 1.0,
+            alpha_ps: p.alpha_ps,
+            flows: p
+                .flows
+                .iter()
+                .map(|f| FlowSpec {
+                    src: f.dst,
+                    dst: f.src,
+                    bytes,
+                })
+                .collect(),
+        });
+    }
+    CollectivePlan {
+        algo: "tree",
+        phases,
+    }
+}
+
+/// NCCL-style 2-level hierarchical all-reduce. Applicable when the
+/// group spans ≥ 2 nodes with the same member count `k ≥ 1` per node:
+///
+/// 1. `intra-rs` — per-node ring reduce-scatter (k ≥ 2 only), leaving
+///    each local rank with a `bytes/k` shard of partial sums;
+/// 2. `inter-ar` — `k` concurrent cross-node rings (one per local
+///    shard index) all-reducing `bytes/k` over the NICs;
+/// 3. `intra-ag` — per-node ring all-gather mirroring phase 1.
+///
+/// Irregular groups return `None` (callers fall back to the flat
+/// ring).
+fn allreduce_hier(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> Option<CollectivePlan> {
+    let n = group.len();
+    if n < 2 {
+        return None;
+    }
+    // Node-major ordering; per-node member lists.
+    let ring = cluster.ring_order(group);
+    let mut nodes: Vec<(usize, Vec<DeviceId>)> = Vec::new();
+    for &d in &ring {
+        let nd = cluster.node_of(d);
+        match nodes.last_mut() {
+            Some((last, members)) if *last == nd => members.push(d),
+            _ => nodes.push((nd, vec![d])),
+        }
+    }
+    let m = nodes.len();
+    if m < 2 {
+        return None;
+    }
+    let k = nodes[0].1.len();
+    if nodes.iter().any(|(_, mem)| mem.len() != k) {
+        return None;
+    }
+    let mut phases = Vec::new();
+    if k >= 2 {
+        // Phase 1: concurrent per-node reduce-scatters.
+        let vol = bytes * (k as f64 - 1.0) / k as f64;
+        let mut flows = Vec::new();
+        for (_, mem) in &nodes {
+            flows.extend(ring_segments(mem, vol));
+        }
+        phases.push(PlanPhase {
+            label: "intra-rs",
+            steps: k as f64 - 1.0,
+            alpha_ps: max_flow_alpha(cluster, &flows),
+            flows,
+        });
+    }
+    // Phase 2: k concurrent cross-node rings over shard j.
+    let shard = bytes / k as f64;
+    let vol = shard * 2.0 * (m as f64 - 1.0) / m as f64;
+    let mut flows = Vec::new();
+    for j in 0..k {
+        let cross: Vec<DeviceId> = nodes.iter().map(|(_, mem)| mem[j]).collect();
+        flows.extend(ring_segments(&cross, vol));
+    }
+    phases.push(PlanPhase {
+        label: "inter-ar",
+        steps: 2.0 * (m as f64 - 1.0),
+        alpha_ps: max_flow_alpha(cluster, &flows),
+        flows,
+    });
+    if k >= 2 {
+        // Phase 3: concurrent per-node all-gathers (mirror of phase 1).
+        let vol = bytes * (k as f64 - 1.0) / k as f64;
+        let mut flows = Vec::new();
+        for (_, mem) in &nodes {
+            flows.extend(ring_segments(mem, vol));
+        }
+        phases.push(PlanPhase {
+            label: "intra-ag",
+            steps: k as f64 - 1.0,
+            alpha_ps: max_flow_alpha(cluster, &flows),
+            flows,
+        });
+    }
+    Some(CollectivePlan {
+        algo: "hier",
+        phases,
+    })
+}
+
+/// The monolithic (pre-plan) closed-form cost of a collective, ps —
+/// the ablation path: `steps × α + factor × bytes / ring_bus_bw`. This
+/// mirrors `estimator::features::comm_row` + `cost_ns` in f64 and is
+/// used by tests comparing plans against the flat model.
+pub fn monolithic_cost_ps(cluster: &Cluster, c: &CommTask) -> Ps {
+    let n = c.group.len();
+    if n < 2 {
+        return 0; // degenerate group: nothing traverses a link
+    }
+    let (steps, factor) = collective_profile(c.kind, n);
+    let (bus_bw, alpha_ps) = match c.kind {
+        CollectiveKind::P2p => (
+            cluster.pair_bandwidth(c.group[0], c.group[1]),
+            cluster.pair_latency(c.group[0], c.group[1]),
+        ),
+        _ => (
+            cluster.ring_bus_bandwidth(&c.group),
+            cluster.ring_latency(&c.group),
+        ),
+    };
+    let beta = if bus_bw.is_finite() && bus_bw > 0.0 {
+        (c.bytes as f64 * factor / bus_bw * SEC as f64) as Ps
+    } else {
+        0
+    };
+    (steps * alpha_ps as f64) as Ps + beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Preset;
+    use crate::compiler::CommClass;
+
+    fn ar(group: Vec<DeviceId>, bytes: u64) -> CommTask {
+        CommTask {
+            kind: CollectiveKind::AllReduce,
+            group,
+            bytes,
+            class: CommClass::Gradient,
+        }
+    }
+
+    #[test]
+    fn ring_plan_matches_monolithic_closed_form() {
+        // The flat ring plan's fluid β equals traffic / ring_bus_bw, so
+        // planned ring and the legacy monolithic cost agree.
+        let c = Cluster::preset(Preset::HC2, 1);
+        for group in [vec![0usize, 1, 2, 3], (0..8).collect::<Vec<_>>()] {
+            let t = ar(group, 1 << 24);
+            let plan = lower(&c, CollAlgo::Ring, &t);
+            let planned = plan.cost_ps(&c) as f64;
+            let mono = monolithic_cost_ps(&c, &t) as f64;
+            let rel = (planned - mono).abs() / mono;
+            assert!(rel < 1e-6, "ring plan {planned} vs monolithic {mono}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_across_nodes() {
+        // The tentpole acceptance: on a cross-node group the 2-level
+        // plan undercuts the flat ring, which serializes the whole
+        // volume through the NIC bottleneck.
+        let c = Cluster::preset(Preset::HC2, 2);
+        let t = ar((0..16).collect(), 64 << 20);
+        let ring = allreduce_ring(&c, &t.group, t.bytes as f64);
+        let hier = allreduce_hier(&c, &t.group, t.bytes as f64).expect("regular group");
+        let rc = ring.cost_ps(&c);
+        let hc = hier.cost_ps(&c);
+        assert!(
+            hc < rc,
+            "hierarchical {hc} ps must beat flat ring {rc} ps cross-node"
+        );
+        // And auto must therefore not pick ring here.
+        let auto = lower(&c, CollAlgo::Auto, &t);
+        assert_eq!(auto.algo, "hier");
+        assert_eq!(auto.cost_ps(&c), hc);
+    }
+
+    #[test]
+    fn tree_wins_small_messages_ring_wins_large() {
+        let c = Cluster::preset(Preset::HC2, 1);
+        let small = lower(&c, CollAlgo::Auto, &ar((0..8).collect(), 1 << 10));
+        assert_eq!(small.algo, "tree", "1 KiB all-reduce is latency-bound");
+        let large = lower(&c, CollAlgo::Auto, &ar((0..8).collect(), 64 << 20));
+        assert_eq!(large.algo, "ring", "64 MiB all-reduce is bandwidth-bound");
+    }
+
+    #[test]
+    fn hier_not_applicable_single_node_or_irregular() {
+        let c = Cluster::preset(Preset::HC2, 2);
+        assert!(allreduce_hier(&c, &[0, 1, 2, 3], 1e6).is_none(), "one node");
+        assert!(
+            allreduce_hier(&c, &[0, 1, 8], 1e6).is_none(),
+            "irregular per-node counts"
+        );
+        // Forcing hier on an inapplicable group falls back to ring.
+        let t = ar(vec![0, 1, 2, 3], 1 << 20);
+        let plan = lower(&c, CollAlgo::Hierarchical, &t);
+        assert_eq!(plan.algo, "ring");
+    }
+
+    #[test]
+    fn hier_phase_structure_and_volume() {
+        let c = Cluster::preset(Preset::HC2, 2);
+        let bytes = 16.0 * 1024.0 * 1024.0;
+        let plan = allreduce_hier(&c, &(0..16).collect::<Vec<_>>(), bytes).unwrap();
+        let labels: Vec<&str> = plan.phases.iter().map(|p| p.label).collect();
+        assert_eq!(labels, ["intra-rs", "inter-ar", "intra-ag"]);
+        // Phase 2: k=8 cross rings of 2 nodes → 8 single-flow duplex
+        // exchanges of bytes/8 each (2(m-1)/m = 1 at m=2).
+        let inter = &plan.phases[1];
+        assert_eq!(inter.flows.len(), 8);
+        for f in &inter.flows {
+            assert!((f.bytes - bytes / 8.0).abs() < 1e-6);
+            assert_ne!(c.node_of(f.src), c.node_of(f.dst));
+        }
+        // Intra phases stay on-node.
+        for p in [&plan.phases[0], &plan.phases[2]] {
+            for f in &p.flows {
+                assert_eq!(c.node_of(f.src), c.node_of(f.dst));
+            }
+        }
+    }
+
+    #[test]
+    fn one_rank_per_node_skips_intra_phases() {
+        let c = Cluster::preset(Preset::HC2, 4);
+        let plan = allreduce_hier(&c, &[0, 8, 16, 24], 1e6).unwrap();
+        assert_eq!(plan.phases.len(), 1);
+        assert_eq!(plan.phases[0].label, "inter-ar");
+    }
+
+    #[test]
+    fn two_rank_ring_is_a_single_duplex_exchange() {
+        let c = Cluster::preset(Preset::HC2, 1);
+        let plan = lower(&c, CollAlgo::Ring, &ar(vec![0, 1], 1 << 20));
+        assert_eq!(plan.phases.len(), 1);
+        assert_eq!(plan.phases[0].flows.len(), 1, "no double-counted wrap");
+        // factor 2(n-1)/n = 1 at n=2: the exchange carries `bytes`.
+        assert!((plan.phases[0].flows[0].bytes - (1u64 << 20) as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_groups_lower_to_noop_plans() {
+        let c = Cluster::preset(Preset::HC2, 1);
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllToAll,
+            CollectiveKind::Broadcast,
+        ] {
+            let t = CommTask {
+                kind,
+                group: vec![3],
+                bytes: 1 << 20,
+                class: CommClass::Gradient,
+            };
+            let plan = lower(&c, CollAlgo::Auto, &t);
+            assert_eq!(plan.phases.len(), 1, "{kind:?}");
+            assert!(plan.phases[0].flows.is_empty());
+            assert_eq!(plan.cost_ps(&c), 0);
+            assert_eq!(monolithic_cost_ps(&c, &t), 0, "{kind:?}");
+        }
+        // P2p with a single rank must not panic in either cost path.
+        let p2p = CommTask {
+            kind: CollectiveKind::P2p,
+            group: vec![3],
+            bytes: 1 << 20,
+            class: CommClass::Feature,
+        };
+        assert_eq!(lower(&c, CollAlgo::Auto, &p2p).cost_ps(&c), 0);
+        assert_eq!(monolithic_cost_ps(&c, &p2p), 0);
+    }
+
+    #[test]
+    fn broadcast_tree_rounds_double_holders() {
+        let c = Cluster::preset(Preset::HC2, 1);
+        let t = CommTask {
+            kind: CollectiveKind::Broadcast,
+            group: (0..8).collect(),
+            bytes: 1 << 20,
+            class: CommClass::Feature,
+        };
+        let plan = lower(&c, CollAlgo::Auto, &t);
+        assert_eq!(plan.phases.len(), 3); // log2(8)
+        assert_eq!(
+            plan.phases.iter().map(|p| p.flows.len()).collect::<Vec<_>>(),
+            vec![1, 2, 4]
+        );
+        // Total α steps match the monolithic profile.
+        let (steps, _) = collective_profile(CollectiveKind::Broadcast, 8);
+        let total: f64 = plan.phases.iter().map(|p| p.steps).sum();
+        assert_eq!(total, steps);
+    }
+
+    #[test]
+    fn fluid_time_matches_hand_solve_on_shared_bottleneck() {
+        // Two same-node pairs share nothing (NVSwitch): phase time =
+        // bytes / port_bw, not 2×.
+        let c = Cluster::preset(Preset::HC2, 1);
+        let phase = PlanPhase {
+            label: "x",
+            steps: 0.0,
+            alpha_ps: 0,
+            flows: vec![
+                FlowSpec { src: 0, dst: 1, bytes: 150e9 },
+                FlowSpec { src: 2, dst: 3, bytes: 150e9 },
+            ],
+        };
+        let t = phase.fluid_secs(&c);
+        assert!((t - 1.0).abs() < 1e-9, "disjoint pairs run at port speed: {t}");
+        // Same pair twice → halved shares, doubled time.
+        let phase2 = PlanPhase {
+            label: "x",
+            steps: 0.0,
+            alpha_ps: 0,
+            flows: vec![
+                FlowSpec { src: 0, dst: 1, bytes: 150e9 },
+                FlowSpec { src: 0, dst: 1, bytes: 150e9 },
+            ],
+        };
+        let t2 = phase2.fluid_secs(&c);
+        assert!((t2 - 2.0).abs() < 1e-9, "shared duplex link halves rates: {t2}");
+    }
+
+    #[test]
+    fn fluid_time_handles_staggered_completions() {
+        // Unequal flows on one link: 100 and 300 bytes at cap 100 B/s.
+        // Phase: both at 50 B/s for 2 s (100 done), then 300-flow alone
+        // at 100 B/s for 2 s → 4 s total.
+        let c = Cluster::preset(Preset::HC2, 1);
+        let port = 150e9;
+        let phase = PlanPhase {
+            label: "x",
+            steps: 0.0,
+            alpha_ps: 0,
+            flows: vec![
+                FlowSpec { src: 0, dst: 1, bytes: port },
+                FlowSpec { src: 0, dst: 1, bytes: 3.0 * port },
+            ],
+        };
+        let t = phase.fluid_secs(&c);
+        assert!((t - 4.0).abs() < 1e-9, "staggered fluid completion: {t}");
+    }
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        for algo in [
+            CollAlgo::Monolithic,
+            CollAlgo::Ring,
+            CollAlgo::Tree,
+            CollAlgo::Hierarchical,
+            CollAlgo::Auto,
+        ] {
+            assert_eq!(CollAlgo::parse(algo.name()), Some(algo));
+        }
+        assert_eq!(CollAlgo::parse("hierarchical"), Some(CollAlgo::Hierarchical));
+        assert_eq!(CollAlgo::parse("monolithic"), Some(CollAlgo::Monolithic));
+        assert_eq!(CollAlgo::parse("bogus"), None);
+    }
+}

@@ -28,18 +28,23 @@
 //! marks the affected devices/flows dirty at each event and re-rates
 //! exactly those.
 
+// Index-based loops are deliberate in this hot path: they split borrows
+// across arenas (`flows`, `jobs`, dirty sets) that iterator adapters
+// would hold conflicting references into.
+#![allow(clippy::needless_range_loop)]
+
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::cluster::DeviceId;
 use crate::compiler::{ExecGraph, TaskId, TaskKind};
 use crate::emulator::fairshare::IncrementalMaxMin;
 use crate::executor::memory::MemoryTracker;
-use crate::executor::{SimReport, Span};
+use crate::executor::{PhaseSpan, SimReport, Span};
 use crate::util::time::{secs_to_ps, Ps};
 use crate::Result;
 
-use super::{mem_alloc, mem_free, CommClass, Emulator};
+use super::{mem_alloc, mem_free, CommClass, CommPhase, Emulator, PlanKey};
 
 /// Event identity. The derived `Ord` (variant order, then index) is the
 /// tie-break for simultaneous events, chosen to match the reference
@@ -88,7 +93,7 @@ struct EvComp {
     started: Ps,
 }
 
-/// A running communication job (one collective).
+/// A running communication job (one collective, possibly multi-phase).
 struct EvJob {
     task: TaskId,
     flows_left: usize,
@@ -97,6 +102,11 @@ struct EvJob {
     group: Vec<DeviceId>,
     alpha_done: bool,
     finished: bool,
+    /// Remaining plan phases, reversed (pop from the back).
+    phases: Vec<CommPhase>,
+    /// Current-phase bookkeeping for per-phase trace spans.
+    phase_label: &'static str,
+    phase_started: Ps,
 }
 
 /// One flow of a collective: lazily settled byte count.
@@ -145,6 +155,8 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
 
     let mut mem = MemoryTracker::new(&eg.static_mem, emu.cluster.device.memory_bytes);
     let mut timeline = Vec::new();
+    let mut comm_phases: Vec<PhaseSpan> = Vec::new();
+    let mut plan_cache: HashMap<PlanKey, Vec<CommPhase>> = HashMap::new();
     let mut heap: BinaryHeap<Reverse<HeapItem>> = BinaryHeap::new();
     let mut t = 0.0f64; // seconds
     let mut done = 0usize;
@@ -224,10 +236,12 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                 for &d in &c.group {
                     busy[d] = true;
                 }
-                let (alpha, decomposed) = emu.comm_launch(c, id);
+                let mut phases = emu.comm_launch(c, id, &mut plan_cache);
+                phases.reverse(); // pop() walks them in order
+                let cur = phases.pop().expect("plans lower to >= 1 phase");
                 let ji = jobs.len();
-                let mut fl = Vec::with_capacity(decomposed.len());
-                for (src, dst, bytes) in decomposed {
+                let mut fl = Vec::with_capacity(cur.flows.len());
+                for &(src, dst, bytes) in &cur.flows {
                     let fi = flows.len();
                     flows.push(EvFlow {
                         job: ji,
@@ -252,11 +266,14 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                     group: c.group.clone(),
                     alpha_done: false,
                     finished: false,
+                    phases,
+                    phase_label: cur.label,
+                    phase_started: secs_to_ps(t),
                 });
                 job_flows.push(fl);
                 mem_alloc(&mut mem, eg, id, secs_to_ps(t));
                 heap.push(Reverse(HeapItem {
-                    t: t + alpha.max(1e-12),
+                    t: t + cur.alpha.max(1e-12),
                     ev: Ev::Alpha(ji),
                     epoch: 0,
                 }));
@@ -478,6 +495,47 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             if jobs[ji].finished {
                 continue;
             }
+            // A "completed" job finished its *current phase*; start the
+            // next plan phase at this instant if there is one.
+            if let Some(next) = jobs[ji].phases.pop() {
+                if emu.config.record_timeline {
+                    comm_phases.push(PhaseSpan {
+                        task: jobs[ji].task,
+                        label: jobs[ji].phase_label,
+                        start: jobs[ji].phase_started,
+                        end,
+                    });
+                }
+                jobs[ji].phase_label = next.label;
+                jobs[ji].phase_started = end;
+                jobs[ji].alpha_done = false;
+                jobs[ji].flows_left = next.flows.len();
+                let mut fl = Vec::with_capacity(next.flows.len());
+                for &(src, dst, bytes) in &next.flows {
+                    let fi = flows.len();
+                    flows.push(EvFlow {
+                        job: ji,
+                        src,
+                        dst,
+                        links: emu.cluster.path(src, dst),
+                        remaining: bytes.max(1.0),
+                        rate: 0.0,
+                        last_t: t,
+                        active: false,
+                        done: false,
+                    });
+                    flow_epoch.push(0);
+                    dirty_flow_mark.push(false);
+                    fl.push(fi);
+                }
+                job_flows[ji] = fl;
+                heap.push(Reverse(HeapItem {
+                    t: t + next.alpha.max(1e-12),
+                    ev: Ev::Alpha(ji),
+                    epoch: 0,
+                }));
+                continue;
+            }
             jobs[ji].finished = true;
             let task = jobs[ji].task;
             let busy = match jobs[ji].class {
@@ -489,6 +547,12 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             }
             mem_free(&mut mem, eg, task, end);
             if emu.config.record_timeline {
+                comm_phases.push(PhaseSpan {
+                    task,
+                    label: jobs[ji].phase_label,
+                    start: jobs[ji].phase_started,
+                    end,
+                });
                 timeline.push(Span {
                     task,
                     start: jobs[ji].started,
@@ -525,5 +589,6 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         shared_ops: 0,
         n_tasks: n,
         timeline,
+        comm_phases,
     })
 }

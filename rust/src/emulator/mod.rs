@@ -43,7 +43,10 @@ pub mod fairshare;
 mod engine;
 mod reference;
 
+use std::collections::HashMap;
+
 use crate::cluster::{Cluster, DeviceId, LinkId};
+use crate::collective::{self, CollAlgo};
 use crate::compiler::{CollectiveKind, CommClass, CommTask, ExecGraph, TaskId};
 use crate::estimator::features::collective_profile;
 use crate::estimator::OpEstimator;
@@ -64,6 +67,12 @@ pub struct EmulatorConfig {
     pub interference: bool,
     /// Record the task timeline.
     pub record_timeline: bool,
+    /// Collective lowering: phased topology-aware plans (see
+    /// [`crate::collective`]) or the legacy monolithic flat
+    /// decomposition ([`CollAlgo::Monolithic`]). Keep this equal to the
+    /// HTAE config's choice when comparing predictions against the
+    /// emulated "truth".
+    pub coll_algo: CollAlgo,
 }
 
 impl Default for EmulatorConfig {
@@ -73,6 +82,7 @@ impl Default for EmulatorConfig {
             ripple: 0.03,
             interference: true,
             record_timeline: false,
+            coll_algo: CollAlgo::Auto,
         }
     }
 }
@@ -94,6 +104,19 @@ struct Flow {
     remaining: f64, // bytes
 }
 
+pub(crate) use crate::collective::PlanKey;
+
+/// One lowered phase of a communication job: the α latency (seconds,
+/// ripple applied at launch) and the phase's concurrent
+/// `(src, dst, bytes)` flows. Plans always lower to ≥ 1 phase; the
+/// monolithic path is a single phase.
+#[derive(Debug, Clone)]
+pub(crate) struct CommPhase {
+    pub(crate) label: &'static str,
+    pub(crate) alpha: f64, // seconds
+    pub(crate) flows: Vec<(DeviceId, DeviceId, f64)>,
+}
+
 /// Reference-engine communication job.
 #[derive(Debug)]
 struct CommJob {
@@ -103,6 +126,11 @@ struct CommJob {
     started: Ps,
     class: CommClass,
     group: Vec<DeviceId>,
+    /// Remaining phases, reversed (pop from the back).
+    phases: Vec<CommPhase>,
+    /// Current-phase bookkeeping for per-phase trace spans.
+    phase_label: &'static str,
+    phase_started: Ps,
 }
 
 /// Reference-engine computation job.
@@ -139,17 +167,63 @@ impl<'a> Emulator<'a> {
         1.0 + self.config.ripple * (rng.next_f64() - 0.5)
     }
 
-    /// Launch bookkeeping shared by both engines: the α (latency) phase
-    /// duration in seconds and the `(src, dst, bytes)` flow decomposition
-    /// of communication task `id`.
-    fn comm_launch(&self, c: &CommTask, id: TaskId) -> (f64, Vec<(DeviceId, DeviceId, f64)>) {
-        let (steps, factor) = collective_profile(c.kind, c.group.len());
-        let alpha_ps = match c.kind {
-            CollectiveKind::P2p => self.cluster.pair_latency(c.group[0], c.group[1]),
-            _ => self.cluster.ring_latency(&c.group),
-        };
-        let alpha = steps * alpha_ps as f64 / 1e12 * self.ripple(id);
-        (alpha, self.decompose(c, factor))
+    /// Launch bookkeeping shared by both engines: lower communication
+    /// task `id` into its ordered phases — each an α duration (seconds,
+    /// ripple applied) plus concurrent `(src, dst, bytes)` flows. Under
+    /// [`CollAlgo::Monolithic`] this is the legacy single phase (flat
+    /// decomposition); otherwise the collective-algorithm plan.
+    ///
+    /// Lowering (including `Auto`'s candidate-cost comparison) is
+    /// deduped through `cache` — micro-batched graphs repeat the same
+    /// collective hundreds of times — while the per-task ripple is
+    /// applied to the cached α at every launch.
+    fn comm_launch(
+        &self,
+        c: &CommTask,
+        id: TaskId,
+        cache: &mut HashMap<PlanKey, Vec<CommPhase>>,
+    ) -> Vec<CommPhase> {
+        let phases = cache
+            .entry(collective::plan_key(c))
+            .or_insert_with(|| self.lower_phases(c));
+        let rip = self.ripple(id);
+        phases
+            .iter()
+            .map(|p| CommPhase {
+                label: p.label,
+                alpha: p.alpha * rip,
+                flows: p.flows.clone(),
+            })
+            .collect()
+    }
+
+    /// Ripple-free phase lowering behind [`Self::comm_launch`]'s cache.
+    fn lower_phases(&self, c: &CommTask) -> Vec<CommPhase> {
+        if self.config.coll_algo == CollAlgo::Monolithic {
+            let (steps, factor) = collective_profile(c.kind, c.group.len());
+            let alpha_ps = if c.group.len() < 2 {
+                0
+            } else {
+                match c.kind {
+                    CollectiveKind::P2p => self.cluster.pair_latency(c.group[0], c.group[1]),
+                    _ => self.cluster.ring_latency(&c.group),
+                }
+            };
+            return vec![CommPhase {
+                label: "mono",
+                alpha: steps * alpha_ps as f64 / 1e12,
+                flows: self.decompose(c, factor),
+            }];
+        }
+        let plan = collective::lower(self.cluster, self.config.coll_algo, c);
+        plan.phases
+            .into_iter()
+            .map(|p| CommPhase {
+                label: p.label,
+                alpha: p.steps * p.alpha_ps as f64 / 1e12,
+                flows: p.flows.iter().map(|f| (f.src, f.dst, f.bytes)).collect(),
+            })
+            .collect()
     }
 
     /// Emulate one training step ("run it on the testbed") with the
@@ -210,10 +284,15 @@ impl<'a> Emulator<'a> {
                 out
             }
             // Ring algorithms: each neighbor link carries factor×bytes.
+            // A 2-rank "ring" is a single full-duplex exchange — its
+            // two wrap segments traverse the same duplex links, and
+            // emitting both would halve the pair's effective bandwidth
+            // (mirrors `Cluster::ring_bus_bandwidth`).
             _ => {
                 let ring = self.cluster.ring_order(&c.group);
                 let vol = bytes * traffic_factor;
-                (0..ring.len())
+                let segments = if ring.len() == 2 { 1 } else { ring.len() };
+                (0..segments)
                     .map(|i| (ring[i], ring[(i + 1) % ring.len()], vol))
                     .collect()
             }
@@ -354,6 +433,165 @@ mod tests {
             let rf = emu.simulate_with_costs_reference(&eg, &base).unwrap();
             let rel = (ev.step_ms - rf.step_ms).abs() / rf.step_ms;
             assert!(rel < 1e-6, "config {config:?}: rel {rel:.2e}");
+        }
+    }
+
+    /// Tentpole acceptance: on single-group scenarios (one collective,
+    /// nothing contending) the event engine's fair-share execution of
+    /// the lowered plan and HTAE's closed-form per-phase α–β costs
+    /// agree within 1e-6 relative — executor and emulator consume the
+    /// *same* plans, so their physics coincide when sharing is absent.
+    #[test]
+    fn planned_collectives_agree_between_htae_and_engine() {
+        use crate::collective::CollAlgo;
+        use crate::compiler::{CommTask, TaskKind};
+        use crate::testing::{adhoc_exec_graph, adhoc_task};
+
+        let cases: Vec<(Preset, usize, CollectiveKind, Vec<usize>, u64)> = vec![
+            (Preset::HC2, 2, CollectiveKind::AllReduce, (0..16).collect(), 64 << 20),
+            (Preset::HC2, 1, CollectiveKind::AllReduce, (0..8).collect(), 1 << 10),
+            (Preset::HC2, 1, CollectiveKind::AllReduce, (0..8).collect(), 64 << 20),
+            (Preset::HC1, 1, CollectiveKind::AllReduce, (0..8).collect(), 1 << 22),
+            (Preset::HC2, 2, CollectiveKind::AllGather, vec![0, 1, 8, 9], 1 << 22),
+            (Preset::HC2, 1, CollectiveKind::ReduceScatter, (0..4).collect(), 1 << 20),
+            (Preset::HC2, 2, CollectiveKind::Broadcast, (0..12).collect(), 1 << 20),
+            (Preset::HC2, 1, CollectiveKind::AllToAll, (0..8).collect(), 1 << 20),
+            (Preset::HC2, 2, CollectiveKind::P2p, vec![0, 9], 1 << 24),
+            (Preset::HC2, 1, CollectiveKind::AllReduce, vec![0, 1], 1 << 20),
+        ];
+        for (preset, nodes, kind, group, bytes) in cases {
+            let c = Cluster::preset(preset, nodes);
+            let est = OpEstimator::analytical(&c);
+            let task = CommTask {
+                kind,
+                group,
+                bytes,
+                class: crate::compiler::CommClass::Gradient,
+            };
+            let eg = adhoc_exec_graph(
+                vec![adhoc_task(TaskKind::Comm(task.clone()))],
+                c.num_devices(),
+            );
+            let base = est.estimate_all(&eg).unwrap();
+            for algo in [
+                CollAlgo::Auto,
+                CollAlgo::Ring,
+                CollAlgo::Tree,
+                CollAlgo::Hierarchical,
+            ] {
+                let emu = Emulator::with_config(
+                    &c,
+                    &est,
+                    EmulatorConfig {
+                        ripple: 0.0,
+                        coll_algo: algo,
+                        ..EmulatorConfig::default()
+                    },
+                );
+                let truth = emu.simulate_with_costs(&eg, &base).unwrap();
+                let htae = Htae::with_config(
+                    &c,
+                    &est,
+                    HtaeConfig {
+                        coll_algo: algo,
+                        ..HtaeConfig::plain()
+                    },
+                )
+                .simulate_with_costs(&eg, &base)
+                .unwrap();
+                let rel = (htae.step_ms - truth.step_ms).abs() / truth.step_ms.max(1e-12);
+                assert!(
+                    rel < 1e-6,
+                    "{kind:?} {:?} {algo:?}: htae {} vs engine {} (rel {rel:.2e})",
+                    task.group,
+                    htae.step_ms,
+                    truth.step_ms
+                );
+            }
+        }
+    }
+
+    /// Tentpole acceptance at the emulator level: the hierarchical plan
+    /// finishes a cross-node all-reduce faster than the flat ring under
+    /// the same fluid physics, and `Auto` picks it.
+    #[test]
+    fn hierarchical_allreduce_beats_flat_ring_in_the_engine() {
+        use crate::collective::CollAlgo;
+        use crate::compiler::{CommTask, TaskKind};
+        use crate::testing::{adhoc_exec_graph, adhoc_task};
+
+        let c = Cluster::preset(Preset::HC2, 2);
+        let est = OpEstimator::analytical(&c);
+        let eg = adhoc_exec_graph(
+            vec![adhoc_task(TaskKind::Comm(CommTask {
+                kind: CollectiveKind::AllReduce,
+                group: (0..16).collect(),
+                bytes: 64 << 20,
+                class: crate::compiler::CommClass::Gradient,
+            }))],
+            16,
+        );
+        let base = est.estimate_all(&eg).unwrap();
+        let run = |algo: CollAlgo| {
+            Emulator::with_config(
+                &c,
+                &est,
+                EmulatorConfig {
+                    ripple: 0.0,
+                    record_timeline: true,
+                    coll_algo: algo,
+                    ..EmulatorConfig::default()
+                },
+            )
+            .simulate_with_costs(&eg, &base)
+            .unwrap()
+        };
+        let ring = run(CollAlgo::Ring);
+        let hier = run(CollAlgo::Hierarchical);
+        let auto = run(CollAlgo::Auto);
+        assert!(
+            hier.step_ms < ring.step_ms,
+            "hier {} must beat ring {}",
+            hier.step_ms,
+            ring.step_ms
+        );
+        assert_eq!(auto.step_ms, hier.step_ms, "auto must pick the winner");
+        // The engine records the plan's phases in order.
+        let labels: Vec<&str> = hier.comm_phases.iter().map(|p| p.label).collect();
+        assert_eq!(labels, ["intra-rs", "inter-ar", "intra-ag"]);
+        for w in hier.comm_phases.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "phases tile the span");
+        }
+    }
+
+    /// The phased path keeps the engine and the reference loop in
+    /// lockstep on explicit plan variants (the default-config parity is
+    /// covered by `event_engine_matches_reference_loop`).
+    #[test]
+    fn event_engine_matches_reference_on_planned_variants() {
+        use crate::collective::CollAlgo;
+        let (_g, c, eg) = setup(16, Preset::HC2, 2);
+        let est = OpEstimator::analytical(&c);
+        let base = est.estimate_all(&eg).unwrap();
+        for algo in [
+            CollAlgo::Monolithic,
+            CollAlgo::Ring,
+            CollAlgo::Tree,
+            CollAlgo::Hierarchical,
+        ] {
+            let emu = Emulator::with_config(
+                &c,
+                &est,
+                EmulatorConfig {
+                    coll_algo: algo,
+                    ..EmulatorConfig::default()
+                },
+            );
+            let ev = emu.simulate_with_costs(&eg, &base).unwrap();
+            let rf = emu.simulate_with_costs_reference(&eg, &base).unwrap();
+            let rel = (ev.step_ms - rf.step_ms).abs() / rf.step_ms;
+            assert!(rel < 1e-6, "{algo:?}: event {} vs reference {} (rel {rel:.2e})",
+                ev.step_ms, rf.step_ms);
         }
     }
 

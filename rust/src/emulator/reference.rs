@@ -11,7 +11,7 @@
 //! runs it, and the `event_engine_matches_reference_loop` tests plus
 //! `benches/perf_hotpath.rs` compare the two on identical inputs.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::compiler::{ExecGraph, TaskId, TaskKind};
 use crate::emulator::fairshare;
@@ -20,7 +20,8 @@ use crate::executor::{SimReport, Span};
 use crate::util::time::{secs_to_ps, Ps};
 use crate::Result;
 
-use super::{mem_alloc, mem_free, CommClass, CommJob, CompJob, Emulator, Flow};
+use super::{mem_alloc, mem_free, CommClass, CommJob, CommPhase, CompJob, Emulator, Flow, PlanKey};
+use crate::executor::PhaseSpan;
 
 /// Emulate one step with the reference loop (see module docs).
 pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Result<SimReport> {
@@ -48,6 +49,8 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
 
     let mut mem = MemoryTracker::new(&eg.static_mem, emu.cluster.device.memory_bytes);
     let mut timeline = Vec::new();
+    let mut comm_phases: Vec<PhaseSpan> = Vec::new();
+    let mut plan_cache: HashMap<PlanKey, Vec<CommPhase>> = HashMap::new();
     let mut t = 0.0f64; // seconds
     let mut done = 0usize;
     let mut makespan: Ps = 0;
@@ -122,10 +125,12 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                 for &d in &c.group {
                     busy[d] = true;
                 }
-                let (alpha, job_flows) = emu.comm_launch(c, id);
+                let mut phases = emu.comm_launch(c, id, &mut plan_cache);
+                phases.reverse(); // pop() walks them in order
+                let cur = phases.pop().expect("plans lower to >= 1 phase");
                 let job_idx = comm_jobs.len();
-                let flows_left = job_flows.len();
-                for (src, dst, bytes) in job_flows {
+                let flows_left = cur.flows.len();
+                for (src, dst, bytes) in cur.flows {
                     active_flows.push(flows.len());
                     flows.push(Flow {
                         job: job_idx,
@@ -139,11 +144,14 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                 running_jobs += 1;
                 comm_jobs.push(CommJob {
                     task: id,
-                    alpha_remaining: alpha.max(1e-12),
+                    alpha_remaining: cur.alpha.max(1e-12),
                     flows_left,
                     started: secs_to_ps(t),
                     class: c.class,
                     group: c.group.clone(),
+                    phases,
+                    phase_label: cur.label,
+                    phase_started: secs_to_ps(t),
                 });
                 mem_alloc(&mut mem, eg, id, secs_to_ps(t));
                 started_any = true;
@@ -309,6 +317,35 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             if comm_jobs[ji].group.is_empty() {
                 continue; // already finalized
             }
+            // A "completed" job finished its *current phase*; start the
+            // next phase at this instant if the plan has one.
+            if let Some(next) = comm_jobs[ji].phases.pop() {
+                let end = secs_to_ps(t);
+                if emu.config.record_timeline {
+                    comm_phases.push(PhaseSpan {
+                        task: comm_jobs[ji].task,
+                        label: comm_jobs[ji].phase_label,
+                        start: comm_jobs[ji].phase_started,
+                        end,
+                    });
+                }
+                comm_jobs[ji].phase_label = next.label;
+                comm_jobs[ji].phase_started = end;
+                comm_jobs[ji].alpha_remaining = next.alpha.max(1e-12);
+                comm_jobs[ji].flows_left = next.flows.len();
+                for (src, dst, bytes) in next.flows {
+                    active_flows.push(flows.len());
+                    flows.push(Flow {
+                        job: ji,
+                        src,
+                        dst,
+                        links: emu.cluster.path(src, dst),
+                        remaining: bytes.max(1.0),
+                    });
+                }
+                alpha_active.push(ji);
+                continue;
+            }
             running_jobs -= 1;
             let end = secs_to_ps(t);
             makespan = makespan.max(end);
@@ -324,6 +361,12 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             }
             mem_free(&mut mem, eg, task, end);
             if emu.config.record_timeline {
+                comm_phases.push(PhaseSpan {
+                    task,
+                    label: comm_jobs[ji].phase_label,
+                    start: comm_jobs[ji].phase_started,
+                    end,
+                });
                 timeline.push(Span {
                     task,
                     start: comm_jobs[ji].started,
@@ -360,5 +403,6 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         shared_ops: 0,
         n_tasks: n,
         timeline,
+        comm_phases,
     })
 }

@@ -164,6 +164,55 @@ mod tests {
         assert!((ns - expect as f32).abs() / (expect as f32) < 1e-3);
     }
 
+    /// Satellite coverage: step counts and traffic factors across every
+    /// `CollectiveKind`, including degenerate 1-rank groups.
+    #[test]
+    fn collective_profile_steps_across_all_kinds() {
+        for n in [2usize, 4, 8, 16] {
+            let nf = n as f64;
+            let (s, f) = collective_profile(CollectiveKind::AllReduce, n);
+            assert_eq!(s, 2.0 * (nf - 1.0));
+            assert!((f - 2.0 * (nf - 1.0) / nf).abs() < 1e-12);
+            for kind in [CollectiveKind::AllGather, CollectiveKind::ReduceScatter] {
+                let (s, f) = collective_profile(kind, n);
+                assert_eq!(s, nf - 1.0, "{kind:?}");
+                assert!((f - (nf - 1.0) / nf).abs() < 1e-12, "{kind:?}");
+            }
+            let (s, f) = collective_profile(CollectiveKind::AllToAll, n);
+            assert_eq!(s, nf - 1.0);
+            assert!((f - (nf - 1.0) / nf).abs() < 1e-12);
+            let (s, f) = collective_profile(CollectiveKind::Broadcast, n);
+            assert_eq!(s, nf.log2().ceil().max(1.0));
+            assert_eq!(f, 1.0);
+            let (s, f) = collective_profile(CollectiveKind::P2p, n);
+            assert_eq!((s, f), (1.0, 1.0));
+        }
+    }
+
+    /// Degenerate 1-rank groups: the reduction collectives are free
+    /// (zero steps, zero traffic); broadcast/p2p keep one launch step
+    /// but move nothing beyond their own buffer.
+    #[test]
+    fn collective_profile_one_rank_groups() {
+        let (s, f) = collective_profile(CollectiveKind::AllReduce, 1);
+        assert_eq!((s, f), (0.0, 0.0));
+        for kind in [
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllToAll,
+        ] {
+            let (s, f) = collective_profile(kind, 1);
+            assert_eq!((s, f), (0.0, 0.0), "{kind:?}");
+        }
+        let (s, f) = collective_profile(CollectiveKind::Broadcast, 1);
+        assert_eq!((s, f), (1.0, 1.0));
+        let (s, f) = collective_profile(CollectiveKind::P2p, 1);
+        assert_eq!((s, f), (1.0, 1.0));
+        // n = 0 clamps to 1 rather than producing NaNs.
+        let (s, f) = collective_profile(CollectiveKind::AllReduce, 0);
+        assert_eq!((s, f), (0.0, 0.0));
+    }
+
     #[test]
     fn allreduce_traffic_factor() {
         let (steps, f) = collective_profile(CollectiveKind::AllReduce, 4);

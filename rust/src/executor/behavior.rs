@@ -24,23 +24,43 @@ use crate::compiler::{CollectiveKind, CommTask};
 use crate::estimator::features::{collective_profile, slot};
 use crate::util::time::{Ps, US};
 
-/// Active-span counter exploiting the DES's monotone time: spans are
-/// recorded at their start time and queries never go backwards, so a
-/// min-heap of end times pruned on each query gives O(log n) amortized
-/// counting instead of a linear scan.
+/// Active-span counter exploiting the DES's monotone time: queries
+/// never go backwards, so two min-heaps — spans not yet started (keyed
+/// by start) and started spans (keyed by end) — pruned on each query
+/// give O(log n) amortized counting instead of a linear scan.
+///
+/// A span `[s, e)` counts as active for `s ≤ t < e`. Respecting `s`
+/// matters: spans may be recorded with a start in the querier's future
+/// (an op scheduled at a later instant), and counting those as already
+/// active would overcount `sharing_factor` and overlap queries.
 #[derive(Debug, Default)]
 struct Intervals {
+    /// Spans whose start is still in the future: `(start, end)`.
+    pending: std::collections::BinaryHeap<std::cmp::Reverse<(Ps, Ps)>>,
+    /// End times of spans that have started.
     ends: std::collections::BinaryHeap<std::cmp::Reverse<Ps>>,
 }
 
 impl Intervals {
-    fn push(&mut self, _s: Ps, e: Ps) {
-        self.ends.push(std::cmp::Reverse(e));
+    fn push(&mut self, s: Ps, e: Ps) {
+        if e <= s {
+            return; // empty half-open span: never active
+        }
+        self.pending.push(std::cmp::Reverse((s, e)));
     }
 
     /// Number of spans active at time `t` (t must be non-decreasing
     /// across queries — guaranteed by the event-driven executor).
     fn active_at(&mut self, t: Ps) -> usize {
+        while let Some(&std::cmp::Reverse((s, e))) = self.pending.peek() {
+            if s > t {
+                break;
+            }
+            self.pending.pop();
+            if e > t {
+                self.ends.push(std::cmp::Reverse(e));
+            }
+        }
         while let Some(&std::cmp::Reverse(e)) = self.ends.peek() {
             if e <= t {
                 self.ends.pop();
@@ -175,9 +195,13 @@ impl<'a> BehaviorDetector<'a> {
     pub fn split_alpha_beta(&self, c: &CommTask, total: Ps) -> (Ps, Ps) {
         let n = c.group.len();
         let (steps, _) = collective_profile(c.kind, n);
-        let alpha_ps = match c.kind {
-            CollectiveKind::P2p => self.cluster.pair_latency(c.group[0], c.group[1]),
-            _ => self.cluster.ring_latency(&c.group),
+        let alpha_ps = if n < 2 {
+            0 // degenerate 1-rank group: nothing traverses a link
+        } else {
+            match c.kind {
+                CollectiveKind::P2p => self.cluster.pair_latency(c.group[0], c.group[1]),
+                _ => self.cluster.ring_latency(&c.group),
+            }
         };
         let alpha = (steps * alpha_ps as f64) as Ps;
         let alpha = alpha.min(total);
@@ -304,6 +328,96 @@ mod tests {
         let f = comm(CollectiveKind::AllGather, vec![0, 1], CommClass::Feature);
         det.record_comm(&f, 0, 1000);
         assert!(!det.comp_overlaps_grad_comm(0, 500));
+    }
+
+    /// Regression: `Intervals::push` used to drop the start time, so a
+    /// span recorded with a future start counted as active immediately
+    /// and `sharing_factor` overcounted. A comm scheduled at t=1000
+    /// must not share bandwidth with one starting at t=500.
+    #[test]
+    fn future_spans_do_not_count_as_active() {
+        let c = Cluster::preset(Preset::HC1, 1);
+        let mut det = BehaviorDetector::new(&c, 8);
+        let a = comm(CollectiveKind::AllReduce, vec![0, 4], CommClass::Gradient);
+        det.record_comm(&a, 1_000, 2_000);
+        let b = comm(CollectiveKind::AllReduce, vec![1, 5], CommClass::Gradient);
+        assert_eq!(
+            det.sharing_factor(&b, 500),
+            1.0,
+            "a has not started yet at t=500"
+        );
+        assert_eq!(det.sharing_factor(&b, 1_500), 2.0, "a active at t=1500");
+        assert_eq!(det.sharing_factor(&b, 2_500), 1.0, "a finished at t=2500");
+    }
+
+    /// Same overcount through the overlap queries: a gradient comm
+    /// recorded for the future must not flag overlap now.
+    #[test]
+    fn future_grad_comm_does_not_overlap_now() {
+        let c = Cluster::preset(Preset::HC2, 1);
+        let mut det = BehaviorDetector::new(&c, 8);
+        let g = comm(CollectiveKind::AllReduce, vec![0, 1], CommClass::Gradient);
+        det.record_comm(&g, 1_000, 2_000);
+        assert!(!det.comp_overlaps_grad_comm(0, 500));
+        assert!(det.comp_overlaps_grad_comm(0, 1_500));
+    }
+
+    /// Satellite coverage: `split_alpha_beta` across every
+    /// `CollectiveKind`, including degenerate 1-rank groups and P2p.
+    #[test]
+    fn alpha_beta_split_covers_every_kind() {
+        let c = Cluster::preset(Preset::HC2, 2);
+        let det = BehaviorDetector::new(&c, 16);
+        let total = 10_000_000_000; // 10 ms
+        let kinds = [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllToAll,
+            CollectiveKind::Broadcast,
+            CollectiveKind::P2p,
+        ];
+        for kind in kinds {
+            // Cross-node pair: every kind has ≥ 1 latency step, so the
+            // α share must be positive and the split must sum back.
+            let t = comm(kind, vec![0, 8], CommClass::Gradient);
+            let (a, b) = det.split_alpha_beta(&t, total);
+            assert_eq!(a + b, total, "{kind:?}");
+            assert!(a > 0, "{kind:?} must pay link latency");
+            // Expected α: steps × worst pairwise latency.
+            let (steps, _) = collective_profile(kind, 2);
+            let lat = match kind {
+                CollectiveKind::P2p => c.pair_latency(0, 8),
+                _ => c.ring_latency(&[0, 8]),
+            };
+            assert_eq!(a, (steps * lat as f64) as Ps, "{kind:?}");
+            // α clamps to total on degenerate short ops.
+            let (a2, b2) = det.split_alpha_beta(&t, 1);
+            assert_eq!(a2 + b2, 1, "{kind:?}");
+        }
+    }
+
+    /// Degenerate 1-rank groups: no links traversed, so the entire cost
+    /// is β — and P2p with a single rank must not panic.
+    #[test]
+    fn alpha_beta_split_one_rank_groups() {
+        let c = Cluster::preset(Preset::HC2, 1);
+        let det = BehaviorDetector::new(&c, 8);
+        let total = 1_000_000;
+        let kinds = [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllToAll,
+            CollectiveKind::Broadcast,
+            CollectiveKind::P2p,
+        ];
+        for kind in kinds {
+            let t = comm(kind, vec![3], CommClass::Gradient);
+            let (a, b) = det.split_alpha_beta(&t, total);
+            assert_eq!(a, 0, "{kind:?}: 1-rank group pays no link latency");
+            assert_eq!(b, total, "{kind:?}");
+        }
     }
 
     #[test]

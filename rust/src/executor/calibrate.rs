@@ -13,9 +13,7 @@
 //! (γ is machine-typed, as in the paper).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
-
-use once_cell::sync::Lazy;
+use std::sync::{Mutex, OnceLock};
 
 use crate::cluster::Cluster;
 use crate::compiler::TaskKind;
@@ -24,17 +22,20 @@ use crate::estimator::OpEstimator;
 use crate::graph::{DType, GraphBuilder};
 use crate::strategy::{build_strategy, StrategySpec};
 
-static GAMMA_CACHE: Lazy<Mutex<HashMap<String, f64>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+// `std::sync::OnceLock` rather than `once_cell::Lazy`: the crate is
+// std-only so it builds fully offline (same triage as thiserror/log).
+static GAMMA_CACHE: OnceLock<Mutex<HashMap<String, f64>>> = OnceLock::new();
 
 /// The calibrated γ for a cluster's device type (computed once per
 /// process, cached).
 pub fn default_gamma(cluster: &Cluster) -> f64 {
+    let cache = GAMMA_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     let key = format!("{}x{}", cluster.device.name, cluster.gpus_per_node);
-    if let Some(&g) = GAMMA_CACHE.lock().unwrap().get(&key) {
+    if let Some(&g) = cache.lock().unwrap().get(&key) {
         return g;
     }
     let g = calibrate_gamma(cluster).unwrap_or(cluster.device.overlap_interference);
-    GAMMA_CACHE.lock().unwrap().insert(key, g);
+    cache.lock().unwrap().insert(key, g);
     g
 }
 

@@ -32,10 +32,11 @@ pub mod calibrate;
 pub mod memory;
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::cluster::Cluster;
-use crate::compiler::{CommClass, ExecGraph, TaskId, TaskKind};
+use crate::collective::{self, CollAlgo};
+use crate::compiler::{CommClass, CommTask, ExecGraph, TaskId, TaskKind};
 use crate::estimator::OpEstimator;
 use crate::util::time::{ps_to_ms, ps_to_secs, scale, Ps};
 use crate::Result;
@@ -47,7 +48,11 @@ use memory::MemoryTracker;
 /// (Fig. 9 disables each behavior independently).
 #[derive(Debug, Clone, Copy)]
 pub struct HtaeConfig {
-    /// Overlap penalty factor γ (cost × (1+γ) when overlapped).
+    /// Overlap penalty factor γ. When a gradient communication
+    /// overlaps computation, its **β (bandwidth) term** scales by
+    /// `1 + γ`; the α latency term is exempt, exactly as under
+    /// bandwidth sharing. Overlapped computation scales wholesale (it
+    /// has no latency split).
     pub gamma: f64,
     /// Model bandwidth sharing (ablation switch).
     pub bandwidth_sharing: bool,
@@ -55,6 +60,11 @@ pub struct HtaeConfig {
     pub overlap: bool,
     /// Record the full task timeline (needed for trace export).
     pub record_timeline: bool,
+    /// Collective lowering: phased topology-aware plans
+    /// ([`CollAlgo::Auto`] selects ring/tree/hierarchical per
+    /// collective) or the legacy monolithic α–β path
+    /// ([`CollAlgo::Monolithic`] — the fig9-style ablation switch).
+    pub coll_algo: CollAlgo,
 }
 
 impl Default for HtaeConfig {
@@ -64,18 +74,22 @@ impl Default for HtaeConfig {
             bandwidth_sharing: true,
             overlap: true,
             record_timeline: false,
+            coll_algo: CollAlgo::Auto,
         }
     }
 }
 
 impl HtaeConfig {
-    /// The "Plain" ablation: no runtime behaviors at all.
+    /// The "Plain" ablation: no *runtime behaviors* at all. Collective
+    /// lowering is orthogonal and stays on the planned path; use
+    /// [`CollAlgo::Monolithic`] to ablate that too.
     pub fn plain() -> Self {
         HtaeConfig {
             gamma: 0.0,
             bandwidth_sharing: false,
             overlap: false,
             record_timeline: false,
+            coll_algo: CollAlgo::Auto,
         }
     }
 }
@@ -88,6 +102,21 @@ pub struct Span {
     /// Start time, ps.
     pub start: Ps,
     /// End time, ps.
+    pub end: Ps,
+}
+
+/// One executed *phase* of a planned collective (for traces): the
+/// sub-span of a communication task spent in one plan phase
+/// (`intra-rs`, `inter-ar`, `reduce-tree`, ...).
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseSpan {
+    /// Owning communication task.
+    pub task: TaskId,
+    /// Plan-phase label.
+    pub label: &'static str,
+    /// Phase start, ps.
+    pub start: Ps,
+    /// Phase end, ps.
     pub end: Ps,
 }
 
@@ -115,6 +144,9 @@ pub struct SimReport {
     pub n_tasks: usize,
     /// Timeline (present when `record_timeline`).
     pub timeline: Vec<Span>,
+    /// Per-phase sub-spans of planned collectives (present when
+    /// `record_timeline` and the collective layer is active).
+    pub comm_phases: Vec<PhaseSpan>,
 }
 
 /// The HTAE simulator.
@@ -176,6 +208,29 @@ impl<'a> Htae<'a> {
         debug_assert_eq!(base_costs.len(), n);
         let n_dev = eg.n_devices;
 
+        // Collective layer: lower every communication task to its
+        // phased plan once (deduped by signature — micro-batching
+        // repeats identical collectives) and keep the closed-form
+        // per-phase (α, β) costs. Under `Monolithic` the base cost is
+        // split by the legacy profile instead.
+        let planned: Vec<Option<PlannedComm>> = if self.config.coll_algo != CollAlgo::Monolithic {
+            let mut cache: HashMap<collective::PlanKey, PlannedComm> = HashMap::new();
+            eg.tasks
+                .iter()
+                .map(|t| match &t.kind {
+                    TaskKind::Comm(c) => Some(
+                        cache
+                            .entry(collective::plan_key(c))
+                            .or_insert_with(|| self.plan_comm(c))
+                            .clone(),
+                    ),
+                    _ => None,
+                })
+                .collect()
+        } else {
+            vec![None; n]
+        };
+
         let mut preds = eg.preds.clone();
         // Per-device computation queues (min-heap by task id) and global
         // communication ready list (kept sorted by id).
@@ -191,6 +246,7 @@ impl<'a> Htae<'a> {
         let mut detector = BehaviorDetector::new(self.cluster, n_dev);
         let mut mem = MemoryTracker::new(&eg.static_mem, self.cluster.device.memory_bytes);
         let mut timeline = Vec::new();
+        let mut comm_phases = Vec::new();
         let mut makespan: Ps = 0;
         let mut done = 0usize;
 
@@ -262,12 +318,20 @@ impl<'a> Htae<'a> {
                     for &d in &c.group {
                         busy[d] = true;
                     }
-                    let mut cost = base_costs[id];
-                    let (alpha, beta) = detector.split_alpha_beta(&c, cost);
+                    // Contention-free (α, β): from the collective plan
+                    // when lowered, else split out of the monolithic
+                    // base cost. Sharing and the γ overlap penalty both
+                    // scale β only — the per-step link latencies are
+                    // paid once regardless of contention.
+                    let (alpha, beta0) = match &planned[id] {
+                        Some(p) => (p.alpha, p.beta),
+                        None => detector.split_alpha_beta(&c, base_costs[id]),
+                    };
+                    let mut beta = beta0;
                     if self.config.bandwidth_sharing && c.group.len() > 1 {
                         let share = detector.sharing_factor(&c, t);
                         if share > 1.0 {
-                            cost = alpha + scale(beta, share);
+                            beta = scale(beta, share);
                             detector.note_shared();
                         }
                     }
@@ -275,7 +339,33 @@ impl<'a> Htae<'a> {
                         && c.class == CommClass::Gradient
                         && detector.comm_overlaps_comp(&c.group, t)
                     {
-                        cost = scale(cost, 1.0 + self.config.gamma);
+                        beta = scale(beta, 1.0 + self.config.gamma);
+                    }
+                    let cost = alpha + beta;
+                    if self.config.record_timeline {
+                        if let Some(p) = &planned[id] {
+                            // Spread the contended cost over the plan's
+                            // phases: β stretches uniformly, α doesn't.
+                            let ratio = if beta0 > 0 {
+                                beta as f64 / beta0 as f64
+                            } else {
+                                1.0
+                            };
+                            let mut at = t;
+                            for (pi, &(label, pa, pb)) in p.phases.iter().enumerate() {
+                                let mut end = at + pa + scale(pb, ratio);
+                                if pi + 1 == p.phases.len() {
+                                    end = t + cost; // absorb rounding
+                                }
+                                comm_phases.push(PhaseSpan {
+                                    task: id,
+                                    label,
+                                    start: at,
+                                    end,
+                                });
+                                at = end;
+                            }
+                        }
                     }
                     detector.record_comm(&c, t, t + cost);
                     mem.exec(&eg.tasks[id], t, t + cost);
@@ -343,8 +433,30 @@ impl<'a> Htae<'a> {
             shared_ops: detector.shared_count(),
             n_tasks: n,
             timeline,
+            comm_phases,
         })
     }
+
+    /// Lower one communication task and evaluate its closed-form
+    /// per-phase costs (see [`collective`]).
+    fn plan_comm(&self, c: &CommTask) -> PlannedComm {
+        let plan = collective::lower(self.cluster, self.config.coll_algo, c);
+        let phases = plan.phase_costs(self.cluster);
+        PlannedComm {
+            alpha: phases.iter().map(|&(_, a, _)| a).sum(),
+            beta: phases.iter().map(|&(_, _, b)| b).sum(),
+            phases,
+        }
+    }
+}
+
+/// Closed-form cost of a lowered collective: total α, total β, and the
+/// per-phase breakdown (for trace sub-spans).
+#[derive(Debug, Clone)]
+struct PlannedComm {
+    alpha: Ps,
+    beta: Ps,
+    phases: Vec<(&'static str, Ps, Ps)>,
 }
 
 #[cfg(test)]
@@ -431,9 +543,7 @@ mod tests {
             StrategySpec::data_parallel(8),
             HtaeConfig {
                 gamma: 0.2,
-                bandwidth_sharing: true,
-                overlap: true,
-                record_timeline: false,
+                ..HtaeConfig::default()
             },
         );
         assert!(full.step_ms >= plain.step_ms);
@@ -460,6 +570,106 @@ mod tests {
         let b = simulate(StrategySpec::hybrid(2, 2, 1, 1), HtaeConfig::default());
         assert_eq!(a.step_ms, b.step_ms);
         assert_eq!(a.peak_mem, b.peak_mem);
+    }
+
+    /// Regression (γ on β only): the comp-comm overlap penalty used to
+    /// scale the *entire* shared cost by `1 + γ`, taxing the α latency
+    /// term that sharing explicitly exempts. With an α-dominated comm
+    /// (tiny β) overlapping a long computation, the corrected makespan
+    /// is pinned exactly: `α + β·(1+γ)`, not `(α+β)·(1+γ)`.
+    #[test]
+    fn gamma_taxes_beta_not_alpha() {
+        use crate::compiler::{CollectiveKind, CompTask};
+        use crate::graph::OpKind;
+        use crate::testing::{adhoc_exec_graph, adhoc_task};
+
+        let c = Cluster::preset(Preset::HC2, 1);
+        let est = OpEstimator::analytical(&c);
+        let comm = crate::compiler::CommTask {
+            kind: CollectiveKind::AllReduce,
+            group: vec![0, 1],
+            bytes: 1 << 10,
+            class: CommClass::Gradient,
+        };
+        let eg = adhoc_exec_graph(
+            vec![
+                adhoc_task(TaskKind::Comp(CompTask {
+                    device: 0,
+                    op: OpKind::Linear,
+                    flops: 1e9,
+                    bytes_read: 1e6,
+                    bytes_written: 1e6,
+                })),
+                adhoc_task(TaskKind::Comm(comm.clone())),
+            ],
+            2,
+        );
+        // α = 2·(n-1) steps × 6 µs ring latency = 12 µs; β = 100 ns.
+        let alpha: Ps = 12_000_000;
+        let beta: Ps = 100_000;
+        let comp_cost: Ps = crate::util::time::SEC; // long: overlap guaranteed
+        let cfg = HtaeConfig {
+            gamma: 1.0,
+            bandwidth_sharing: false,
+            overlap: true,
+            record_timeline: true,
+            coll_algo: CollAlgo::Monolithic,
+        };
+        let r = Htae::with_config(&c, &est, cfg)
+            .simulate_with_costs(&eg, &[comp_cost, alpha + beta])
+            .unwrap();
+        let span = r.timeline.iter().find(|s| s.task == 1).unwrap();
+        let dur = span.end - span.start;
+        assert_eq!(
+            dur,
+            alpha + 2 * beta,
+            "γ must double β only; pre-fix duration was (α+β)·2 = {}",
+            2 * (alpha + beta)
+        );
+    }
+
+    /// Planned collectives flow through HTAE: cross-node all-reduce
+    /// under `Auto` lowers hierarchically, records per-phase sub-spans,
+    /// and costs strictly less than the forced flat ring.
+    #[test]
+    fn planned_hierarchical_beats_forced_ring_in_htae() {
+        use crate::compiler::CollectiveKind;
+        use crate::testing::{adhoc_exec_graph, adhoc_task};
+
+        let c = Cluster::preset(Preset::HC2, 2);
+        let est = OpEstimator::analytical(&c);
+        let comm = crate::compiler::CommTask {
+            kind: CollectiveKind::AllReduce,
+            group: (0..16).collect(),
+            bytes: 64 << 20,
+            class: CommClass::Gradient,
+        };
+        let eg = adhoc_exec_graph(vec![adhoc_task(TaskKind::Comm(comm))], 16);
+        let base = est.estimate_all(&eg).unwrap();
+        let run = |algo: CollAlgo| {
+            let cfg = HtaeConfig {
+                record_timeline: true,
+                coll_algo: algo,
+                ..HtaeConfig::plain()
+            };
+            Htae::with_config(&c, &est, cfg)
+                .simulate_with_costs(&eg, &base)
+                .unwrap()
+        };
+        let ring = run(CollAlgo::Ring);
+        let auto = run(CollAlgo::Auto);
+        assert!(
+            auto.step_ms < ring.step_ms,
+            "auto (hier) {} must beat flat ring {}",
+            auto.step_ms,
+            ring.step_ms
+        );
+        let labels: Vec<&str> = auto.comm_phases.iter().map(|p| p.label).collect();
+        assert_eq!(labels, ["intra-rs", "inter-ar", "intra-ag"]);
+        // Phases tile the comm span exactly.
+        let span = auto.timeline.iter().find(|s| s.task == 0).unwrap();
+        assert_eq!(auto.comm_phases.first().unwrap().start, span.start);
+        assert_eq!(auto.comm_phases.last().unwrap().end, span.end);
     }
 
     #[test]

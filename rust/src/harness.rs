@@ -67,6 +67,10 @@ pub struct HtaeCustom {
     pub no_sharing: bool,
     /// Disable comp-comm overlap modeling.
     pub no_overlap: bool,
+    /// Replace the collective-algorithm plans with the monolithic α–β
+    /// path in HTAE (the emulated truth keeps the planned physics, so
+    /// this measures what the plan lowering buys).
+    pub monolithic: bool,
     /// Skip the FlexFlow-Sim baseline (faster benches).
     pub skip_flexflow: bool,
 }
@@ -90,6 +94,11 @@ pub fn run_case_with(case: &Case, custom: &HtaeCustom) -> Result<CaseResult> {
         bandwidth_sharing: !custom.no_sharing,
         overlap: !custom.no_overlap,
         record_timeline: false,
+        coll_algo: if custom.monolithic {
+            crate::collective::CollAlgo::Monolithic
+        } else {
+            crate::collective::CollAlgo::Auto
+        },
     };
     let pred = Htae::with_config(&cluster, &est, config).simulate_with_costs(&eg, &base)?;
     let err_pct = (pred.throughput - truth.throughput).abs() / truth.throughput * 100.0;

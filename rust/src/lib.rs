@@ -26,7 +26,11 @@
 //! 4. [`estimator`]: per-operator costs come from a roofline compute
 //!    model and an α-β collective model. The batched hot path is an AOT
 //!    Pallas/XLA artifact executed through [`runtime`] (PJRT); a
-//!    bit-faithful pure-Rust mirror backs unit tests.
+//!    bit-faithful pure-Rust mirror backs unit tests. The [`collective`]
+//!    layer refines communication costs further: each collective lowers
+//!    to a phased, topology-aware plan (ring / binomial tree /
+//!    NCCL-style 2-level hierarchy, auto-selected by message size and
+//!    group span) that both simulators consume.
 //! 5. [`executor`]: **HTAE** (Hierarchical Topo-Aware Executor) simulates
 //!    the schedule, detects *comp-comm overlap* and *bandwidth sharing*
 //!    at runtime, adapts operator costs, tracks memory, and reports
@@ -84,6 +88,7 @@
 
 pub mod baselines;
 pub mod cli;
+pub mod collective;
 pub mod harness;
 pub mod cluster;
 pub mod compiler;
@@ -102,6 +107,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::baselines::FlexFlowSim;
     pub use crate::cluster::{Cluster, Preset};
+    pub use crate::collective::{CollAlgo, CollectivePlan};
     pub use crate::compiler::{compile, ExecGraph};
     pub use crate::emulator::{Emulator, EmulatorConfig};
     pub use crate::estimator::OpEstimator;

@@ -25,6 +25,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cluster::{Cluster, Preset};
+use crate::collective::CollAlgo;
 use crate::executor::{calibrate, Htae, HtaeConfig, SimReport};
 use crate::graph::Graph;
 use crate::models::ModelKind;
@@ -103,6 +104,7 @@ impl SweepOutcome {
 pub struct SweepRunner {
     threads: usize,
     plain: bool,
+    coll_algo: CollAlgo,
 }
 
 impl Default for SweepRunner {
@@ -117,6 +119,7 @@ impl SweepRunner {
         SweepRunner {
             threads: 0,
             plain: false,
+            coll_algo: CollAlgo::Auto,
         }
     }
 
@@ -130,6 +133,13 @@ impl SweepRunner {
     /// every scenario.
     pub fn plain(mut self, on: bool) -> Self {
         self.plain = on;
+        self
+    }
+
+    /// Collective lowering algorithm for every scenario (default
+    /// [`CollAlgo::Auto`]; [`CollAlgo::Monolithic`] is the ablation).
+    pub fn coll_algo(mut self, algo: CollAlgo) -> Self {
+        self.coll_algo = algo;
         self
     }
 
@@ -202,6 +212,7 @@ impl SweepRunner {
                         &clusters[cluster_of[i]],
                         gammas[cluster_of[i]],
                         plain,
+                        self.coll_algo,
                     );
                     *results[i].lock().unwrap() = Some(out);
                 });
@@ -236,6 +247,7 @@ fn run_one(
     cluster: &Cluster,
     gamma: f64,
     plain: bool,
+    coll_algo: CollAlgo,
 ) -> SweepOutcome {
     let fail = |e: String, compile_s: f64| SweepOutcome {
         scenario: *sc,
@@ -254,7 +266,7 @@ fn run_one(
     };
     let compile_s = t0.elapsed().as_secs_f64();
     let est = crate::estimator::OpEstimator::analytical(cluster);
-    let config = if plain {
+    let mut config = if plain {
         HtaeConfig::plain()
     } else {
         HtaeConfig {
@@ -262,6 +274,7 @@ fn run_one(
             ..HtaeConfig::default()
         }
     };
+    config.coll_algo = coll_algo;
     let t1 = Instant::now();
     let report = Htae::with_config(cluster, &est, config)
         .simulate(&eg)

@@ -114,6 +114,39 @@ pub fn check_seeded(name: &str, seed: u64, mut prop: impl FnMut(&mut Gen) -> Pro
     }
 }
 
+/// Build a minimal execution graph of independent tasks (no dependency
+/// edges, no memory events) for simulator unit tests that need exact
+/// control over task payloads — e.g. a single collective in isolation.
+pub fn adhoc_exec_graph(
+    tasks: Vec<crate::compiler::Task>,
+    n_devices: usize,
+) -> crate::compiler::ExecGraph {
+    let n = tasks.len();
+    crate::compiler::ExecGraph {
+        tasks,
+        succs: vec![Vec::new(); n],
+        preds: vec![0; n],
+        n_stages: 1,
+        n_devices,
+        static_mem: vec![0; n_devices],
+        batch: 1,
+        stage_schedule: Vec::new(),
+    }
+}
+
+/// Wrap a task payload with neutral metadata for [`adhoc_exec_graph`].
+pub fn adhoc_task(kind: crate::compiler::TaskKind) -> crate::compiler::Task {
+    crate::compiler::Task {
+        kind,
+        layer: None,
+        stage: 0,
+        micro: 0,
+        phase: crate::compiler::Phase::Bwd,
+        allocs: Vec::new(),
+        frees: Vec::new(),
+    }
+}
+
 /// Assert two floats are within relative tolerance.
 pub fn assert_close(a: f64, b: f64, rel: f64) -> PropResult {
     let denom = b.abs().max(1e-30);

@@ -10,7 +10,7 @@
 //! (select an event, or color by `args.micro`).
 
 use crate::compiler::{CommClass, ExecGraph, Task, TaskKind};
-use crate::executor::Span;
+use crate::executor::{PhaseSpan, Span};
 use crate::graph::Graph;
 use crate::util::json::Json;
 
@@ -18,16 +18,34 @@ use crate::util::json::Json;
 const TID_COMP: f64 = 0.0;
 const TID_FEAT: f64 = 1.0;
 const TID_GRAD: f64 = 2.0;
+/// Collective plan phases render on their own track below the streams.
+const TID_PHASE: f64 = 3.0;
 
 /// Render a simulated timeline as a Chrome trace JSON document.
 pub fn chrome_trace(graph: &Graph, eg: &ExecGraph, timeline: &[Span]) -> Json {
-    let mut events: Vec<Json> = Vec::with_capacity(timeline.len() + eg.n_devices * 3);
+    chrome_trace_with_phases(graph, eg, timeline, &[])
+}
+
+/// Render a timeline plus the per-phase sub-spans of planned
+/// collectives: each phase (`intra-rs`, `inter-ar`, `bcast-tree`, ...)
+/// becomes a duration event on a dedicated "coll phases" track of every
+/// participating device, so the Fig. 7 hierarchy traversal is directly
+/// visible under the owning collective in Perfetto.
+pub fn chrome_trace_with_phases(
+    graph: &Graph,
+    eg: &ExecGraph,
+    timeline: &[Span],
+    phases: &[PhaseSpan],
+) -> Json {
+    let mut events: Vec<Json> =
+        Vec::with_capacity(timeline.len() + phases.len() + eg.n_devices * 4);
     // Track name metadata.
     for d in 0..eg.n_devices {
         for (tid, name) in [
             (TID_COMP, "compute"),
             (TID_FEAT, "feature comm"),
             (TID_GRAD, "gradient comm"),
+            (TID_PHASE, "coll phases"),
         ] {
             events.push(Json::obj(vec![
                 ("ph", Json::Str("M".into())),
@@ -61,6 +79,17 @@ pub fn chrome_trace(graph: &Graph, eg: &ExecGraph, timeline: &[Span]) -> Json {
             }
         }
     }
+    for ph in phases {
+        let task = &eg.tasks[ph.task];
+        let ts = ph.start as f64 / 1e6; // ps → µs
+        let dur = (ph.end - ph.start) as f64 / 1e6;
+        if let TaskKind::Comm(c) = &task.kind {
+            let name = format!("{}·{}", c.kind.name(), ph.label);
+            for &d in &c.group {
+                events.push(duration_event(&name, d, TID_PHASE, ts, dur, task));
+            }
+        }
+    }
     Json::obj(vec![
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", Json::Str("ms".into())),
@@ -86,14 +115,16 @@ fn duration_event(name: &str, pid: usize, tid: f64, ts: f64, dur: f64, task: &Ta
     ])
 }
 
-/// Write a Chrome trace to a file.
+/// Write a Chrome trace (timeline + collective phase sub-spans) to a
+/// file.
 pub fn write_chrome_trace(
     path: &str,
     graph: &Graph,
     eg: &ExecGraph,
     timeline: &[Span],
+    phases: &[PhaseSpan],
 ) -> crate::Result<()> {
-    let json = chrome_trace(graph, eg, timeline);
+    let json = chrome_trace_with_phases(graph, eg, timeline, phases);
     std::fs::write(path, json.to_string_compact())?;
     Ok(())
 }
@@ -128,7 +159,7 @@ mod tests {
         )
         .simulate(&eg)
         .unwrap();
-        let doc = chrome_trace(&g, &eg, &r.timeline);
+        let doc = chrome_trace_with_phases(&g, &eg, &r.timeline, &r.comm_phases);
         let text = doc.to_string_compact();
         let parsed = Json::parse(&text).unwrap();
         let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
@@ -146,5 +177,46 @@ mod tests {
                 assert!(args.get("phase").and_then(|v| v.as_str()).is_some());
             }
         }
+    }
+
+    /// Planned collectives export their phase sub-spans: a cross-node
+    /// all-reduce contributes `all_reduce·intra-rs` / `·inter-ar` /
+    /// `·intra-ag` duration events on the phase track.
+    #[test]
+    fn trace_carries_collective_phase_events() {
+        use crate::compiler::{CollectiveKind, CommTask, TaskKind};
+        use crate::testing::{adhoc_exec_graph, adhoc_task};
+
+        let mut b = GraphBuilder::new("m", 8);
+        let x = b.input("x", &[8, 64], DType::F32);
+        let h = b.linear("fc", x, 64, 64);
+        let _ = b.loss("loss", h);
+        let g = b.finish();
+        let c = Cluster::preset(Preset::HC2, 2);
+        let eg = adhoc_exec_graph(
+            vec![adhoc_task(TaskKind::Comm(CommTask {
+                kind: CollectiveKind::AllReduce,
+                group: (0..16).collect(),
+                bytes: 64 << 20,
+                class: crate::compiler::CommClass::Gradient,
+            }))],
+            16,
+        );
+        let est = OpEstimator::analytical(&c);
+        let r = Htae::with_config(
+            &c,
+            &est,
+            HtaeConfig {
+                record_timeline: true,
+                ..HtaeConfig::plain()
+            },
+        )
+        .simulate(&eg)
+        .unwrap();
+        assert!(!r.comm_phases.is_empty());
+        let doc = chrome_trace_with_phases(&g, &eg, &r.timeline, &r.comm_phases);
+        let text = doc.to_string_compact();
+        assert!(text.contains("inter-ar"), "phase events must be exported");
+        assert!(text.contains("coll phases"), "phase track must be named");
     }
 }

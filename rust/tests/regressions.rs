@@ -198,7 +198,7 @@ fn gamma_is_monotone() {
             gamma,
             bandwidth_sharing: false,
             overlap: true,
-            record_timeline: false,
+            ..HtaeConfig::default()
         };
         Htae::with_config(&c, &est, cfg).simulate(&eg).unwrap().step_ms
     };
