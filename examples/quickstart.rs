@@ -30,7 +30,7 @@ fn main() -> proteus::Result<()> {
     let exec = compile(&model, &tree, &cluster)?;
     println!(
         "execution graph: {} tasks ({} communication), {:.1} MB gradient traffic",
-        exec.tasks.len(),
+        exec.n_tasks(),
         exec.count(|t| t.is_comm()),
         exec.total_comm_bytes() as f64 / 1e6
     );

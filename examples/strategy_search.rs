@@ -48,24 +48,29 @@ fn main() -> proteus::Result<()> {
     let outcomes = runner.run(&scenarios);
     let search_time = t0.elapsed();
     let ranked = SweepRunner::rank(&outcomes);
-    let skipped_oom = outcomes
-        .iter()
-        .filter(|o| matches!(&o.report, Ok(r) if r.oom))
-        .count();
+    let skipped_oom = outcomes.iter().filter(|o| o.oom).count();
+    let viable = ranked.iter().filter(|o| !o.oom).count();
 
     println!(
         "searched {} candidates ({} OOM, {} viable) in {:.2?} on {threads} threads — top 5:",
         outcomes.len(),
         skipped_oom,
-        ranked.len(),
+        viable,
         search_time
     );
     let mut table = Table::new(&["rank", "strategy", "pred samples/s", "pred step ms"]);
     for (i, o) in ranked.iter().take(5).enumerate() {
         let r = o.report.as_ref().unwrap();
+        // Infeasible candidates rank below all feasible ones but can
+        // still pad the tail — mark them so the table never silently
+        // recommends a strategy that cannot fit.
+        let mut label = o.scenario.spec.label();
+        if o.oom {
+            label.push_str(" (OOM)");
+        }
         table.row(vec![
             (i + 1).to_string(),
-            o.scenario.spec.label(),
+            label,
             format!("{:.1}", r.throughput),
             format!("{:.2}", r.step_ms),
         ]);
@@ -75,7 +80,12 @@ fn main() -> proteus::Result<()> {
     // Validate the winner on the testbed emulator.
     let graph = model.build(batch);
     let est = OpEstimator::best_available(&cluster, "artifacts/costmodel.hlo.txt");
-    let best = ranked.first().expect("at least one viable strategy");
+    // The winner is the best *feasible* candidate; an OOM candidate
+    // cannot run, so there is nothing to validate if none fits.
+    let Some(best) = ranked.iter().find(|o| !o.oom) else {
+        println!("no feasible strategy fits this cluster's memory — nothing to validate");
+        return Ok(());
+    };
     let best_pred = best.report.as_ref().unwrap();
     let tree = build_strategy(&graph, best.scenario.spec)?;
     let eg = compile(&graph, &tree, &cluster)?;

@@ -47,9 +47,37 @@ fn main() {
     println!(
         "{:<44} {:>10.0} tasks/s ({} tasks)",
         "  → compiler throughput",
-        eg.tasks.len() as f64 / t_compile,
-        eg.tasks.len()
+        eg.n_tasks() as f64 / t_compile,
+        eg.n_tasks()
     );
+
+    // 1b. Compile speed vs micro-batch count: the pass pipeline emits
+    //     the template once and stamps it per micro, so tasks/s should
+    //     *grow* with micro while the retained monolithic oracle
+    //     (compile_legacy) re-walks the model per micro. Counters are
+    //     the same ones `proteus simulate --compile-stats` prints.
+    println!("\ncompile speed, GPT-2 pp=4 (template/instantiate split vs monolithic oracle):");
+    let pp_model = ModelKind::Gpt2.build(32 * 32);
+    for micro in [1usize, 8, 32] {
+        let spec = StrategySpec::hybrid(1, 1, 4, micro);
+        let pp_tree = build_strategy(&pp_model, spec).unwrap();
+        let t_new = timed(&format!("  compile pp=4 micro={micro} (pipeline)"), 5, || {
+            proteus::compiler::compile(&pp_model, &pp_tree, &cluster).unwrap()
+        });
+        let t_old = timed(&format!("  compile pp=4 micro={micro} (monolith)"), 5, || {
+            proteus::compiler::compile_legacy(&pp_model, &pp_tree, &cluster).unwrap()
+        });
+        let (eg, stats) =
+            proteus::compiler::compile_with(&pp_model, &pp_tree, &cluster, None).unwrap();
+        println!(
+            "{:<44} {:>10.0} tasks/s ({} tasks, {} layer emissions, {:.1}× vs monolith)",
+            format!("  → micro={micro} pipeline throughput"),
+            eg.n_tasks() as f64 / t_new,
+            eg.n_tasks(),
+            stats.template_layer_emissions,
+            t_old / t_new,
+        );
+    }
 
     // 2. Estimator backends.
     let analytical = OpEstimator::analytical(&cluster);
@@ -94,7 +122,7 @@ fn main() {
     println!(
         "{:<44} {:>10.0} tasks/s",
         "  → HTAE throughput",
-        eg.tasks.len() as f64 / t_htae
+        eg.n_tasks() as f64 / t_htae
     );
 
     // 4. Emulator: event-driven core vs the reference loop. This is the
@@ -109,7 +137,7 @@ fn main() {
     println!(
         "{:<44} {:>10.0} tasks/s",
         "  → emulator throughput",
-        eg.tasks.len() as f64 / t_emu
+        eg.n_tasks() as f64 / t_emu
     );
     let t_ref = timed("emulator (reference loop) GPT-2 dp=32", 3, || {
         rf_ms = emu.simulate_with_costs_reference(&eg, &base).unwrap().step_ms;

@@ -49,7 +49,7 @@ fn main() {
             cells.push(format!("{exe_s:.4}"));
             cells.push(format!("{:.4}", compile_s + exe_s));
             if model == ModelKind::Gpt2 {
-                gpt_tasks = eg.tasks.len();
+                gpt_tasks = eg.n_tasks();
             }
         }
         cells.push(gpt_tasks.to_string());

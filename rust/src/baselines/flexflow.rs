@@ -18,7 +18,7 @@
 //!    pipeline parallelism — are rejected (`✗` entries in Table IV).
 
 use crate::cluster::Cluster;
-use crate::compiler::{CollectiveKind, ExecGraph, Phase, TaskKind};
+use crate::compiler::{CollectiveKind, ExecGraph, Phase, TaskRef};
 use crate::estimator::features::collective_profile;
 use crate::estimator::OpEstimator;
 use crate::executor::{Htae, HtaeConfig, SimReport};
@@ -100,8 +100,8 @@ impl<'a> FlexFlowSim<'a> {
             intra_bw
         };
         const FLAT_ALPHA: Ps = 10 * US;
-        for (i, t) in eg.tasks.iter().enumerate() {
-            if let TaskKind::Comm(c) = &t.kind {
+        for i in 0..eg.n_tasks() {
+            if let TaskRef::Comm(c) = eg.kind(i) {
                 let n = c.group.len();
                 if n < 2 {
                     costs[i] = FLAT_ALPHA;
@@ -120,7 +120,7 @@ impl<'a> FlexFlowSim<'a> {
                 if c.kind == CollectiveKind::Broadcast {
                     costs[i] = FLAT_ALPHA + crate::util::time::secs_to_ps(c.bytes as f64 / bw);
                 }
-            } else if t.phase == Phase::Recomp {
+            } else if eg.meta(i).phase == Phase::Recomp {
                 return Err(Error::sim("FlexFlow-Sim: recompute tasks unsupported"));
             }
         }
@@ -197,10 +197,8 @@ mod tests {
         // Find a gradient all-reduce over all 8 GPUs: the real model
         // routes it over QPI (19.2 GB/s shared), the flat model prices
         // the whole ring at PCIe pair bandwidth.
-        let idx = eg
-            .tasks
-            .iter()
-            .position(|t| matches!(&t.kind, TaskKind::Comm(c) if c.group.len() == 8))
+        let idx = (0..eg.n_tasks())
+            .find(|&i| matches!(eg.kind(i), TaskRef::Comm(c) if c.group.len() == 8))
             .expect("8-wide all-reduce exists");
         assert_ne!(flat[idx], real[idx]);
     }

@@ -4,7 +4,7 @@
 //! ("prior works predict training performance by summing up the
 //! computation and communication time of each layer").
 
-use crate::compiler::{ExecGraph, TaskKind};
+use crate::compiler::{ExecGraph, TaskRef};
 use crate::estimator::OpEstimator;
 use crate::util::time::ps_to_ms;
 use crate::Result;
@@ -15,10 +15,10 @@ use crate::Result;
 pub fn paleo_step_ms(eg: &ExecGraph, est: &OpEstimator) -> Result<f64> {
     let costs = est.estimate_all(eg)?;
     let mut per_dev = vec![0u64; eg.n_devices];
-    for (t, &c) in eg.tasks.iter().zip(&costs) {
-        match &t.kind {
-            TaskKind::Comp(ct) => per_dev[ct.device] += c,
-            TaskKind::Comm(cm) => {
+    for (i, &c) in costs.iter().enumerate() {
+        match eg.kind(i) {
+            TaskRef::Comp(ct) => per_dev[ct.device] += c,
+            TaskRef::Comm(cm) => {
                 for &d in &cm.group {
                     per_dev[d] += c;
                 }

@@ -60,6 +60,8 @@ COLLECTIVES (simulate, sweep):
 OUTPUT / VALIDATION:
   --json            machine-readable JSON on stdout (simulate, sweep;
                     schemas documented in README.md)
+  --compile-stats   print per-pass compiler timings and counters
+                    (template/weave/instantiate/finalize; simulate)
   --plain           disable runtime-behavior modeling (ablation)
   --truth           also run the flow-level testbed emulator
   --flexflow        also run the FlexFlow-Sim baseline (simulate)

@@ -138,12 +138,67 @@ fn estimator<'c>(args: &Args, cluster: &'c Cluster) -> OpEstimator<'c> {
     OpEstimator::best_available(cluster, &path)
 }
 
+/// Text rendering of `--compile-stats`: per-pass timings and task/dep
+/// counts (the same counters `benches/perf_hotpath.rs` reads).
+fn print_compile_stats(s: &crate::compiler::CompileStats) {
+    println!(
+        "compile passes: template={:.2}ms{} weave={:.2}ms instantiate={:.2}ms finalize={:.2}ms",
+        s.template_s * 1e3,
+        if s.cache_hit { " (cache hit)" } else { "" },
+        s.weave_s * 1e3,
+        s.instantiate_s * 1e3,
+        s.finalize_s * 1e3,
+    );
+    println!(
+        "  template: {} segments → {} slots, {} tasks + {} preamble, \
+         {} layer emissions, {} transform inferences",
+        s.n_segments,
+        s.template_slots,
+        s.template_tasks,
+        s.preamble_tasks,
+        s.template_layer_emissions,
+        s.template_transforms,
+    );
+    println!(
+        "  instantiated: {} micro-batches × {} chunks → {} tasks, {} deps",
+        s.n_micro, s.n_chunks, s.n_tasks, s.n_deps,
+    );
+}
+
+/// JSON rendering of `--compile-stats` (schema in README).
+fn compile_stats_json(s: &crate::compiler::CompileStats) -> Json {
+    Json::obj(vec![
+        ("template_s", Json::Num(s.template_s)),
+        ("weave_s", Json::Num(s.weave_s)),
+        ("instantiate_s", Json::Num(s.instantiate_s)),
+        ("finalize_s", Json::Num(s.finalize_s)),
+        ("cache_hit", Json::Bool(s.cache_hit)),
+        ("segments", Json::Num(s.n_segments as f64)),
+        ("template_slots", Json::Num(s.template_slots as f64)),
+        ("template_tasks", Json::Num(s.template_tasks as f64)),
+        ("preamble_tasks", Json::Num(s.preamble_tasks as f64)),
+        (
+            "template_layer_emissions",
+            Json::Num(s.template_layer_emissions as f64),
+        ),
+        (
+            "template_transforms",
+            Json::Num(s.template_transforms as f64),
+        ),
+        ("n_micro", Json::Num(s.n_micro as f64)),
+        ("n_chunks", Json::Num(s.n_chunks as f64)),
+        ("tasks", Json::Num(s.n_tasks as f64)),
+        ("deps", Json::Num(s.n_deps as f64)),
+    ])
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let (model, batch, cluster, spec) = parse_workload(args)?;
     let plain = args.flag("plain");
     let truth = args.flag("truth");
     let flexflow = args.flag("flexflow");
     let json = args.flag("json");
+    let compile_stats = args.flag("compile-stats");
     let coll_algo = parse_coll_algo(args)?;
     let trace_path = args.get("trace").map(|s| s.to_string());
     args.reject_unknown()?;
@@ -151,7 +206,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let graph = model.build(batch);
     let tree = build_strategy(&graph, spec)?;
     let t0 = std::time::Instant::now();
-    let eg = crate::compiler::compile(&graph, &tree, &cluster)?;
+    let (eg, cstats) = crate::compiler::compile_with(&graph, &tree, &cluster, None)?;
     let compile_s = t0.elapsed().as_secs_f64();
     let est = estimator(args, &cluster);
     let mut config = if plain {
@@ -196,7 +251,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             ("cluster", Json::Str(cluster.name.clone())),
             ("gpus", Json::Num(cluster.num_devices() as f64)),
             ("backend", Json::Str(backend.into())),
-            ("tasks", Json::Num(eg.tasks.len() as f64)),
+            ("tasks", Json::Num(eg.n_tasks() as f64)),
             ("compile_s", Json::Num(compile_s)),
             ("simulate_s", Json::Num(exe_s)),
             ("step_ms", Json::Num(report.step_ms)),
@@ -225,6 +280,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             ("overlapped_ops", Json::Num(report.overlapped_ops as f64)),
             ("shared_ops", Json::Num(report.shared_ops as f64)),
         ];
+        if compile_stats {
+            fields.push(("compile_stats", compile_stats_json(&cstats)));
+        }
         if let Some(t) = &truth_report {
             fields.push((
                 "truth",
@@ -257,7 +315,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
         println!(
             "tasks={} compile={:.3}s simulate={:.3}s",
-            eg.tasks.len(),
+            eg.n_tasks(),
             compile_s,
             exe_s
         );
@@ -272,6 +330,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "behaviors: {} overlapped comps, {} bandwidth-shared comms",
             report.overlapped_ops, report.shared_ops
         );
+        if compile_stats {
+            print_compile_stats(&cstats);
+        }
         if let Some(t) = &truth_report {
             println!(
                 "emulator(truth): step={:.2} ms throughput={:.1}  HTAE error={:.2}%",
@@ -438,18 +499,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let outcomes = runner.run(&scenarios);
     let wall = t0.elapsed();
     let ranked = SweepRunner::rank(&outcomes);
-    let oom = outcomes
-        .iter()
-        .filter(|o| matches!(&o.report, Ok(r) if r.oom))
-        .count();
+    let oom = outcomes.iter().filter(|o| o.oom).count();
+    let feasible = ranked.iter().filter(|o| !o.oom).count();
     let failed = outcomes.iter().filter(|o| o.report.is_err()).count();
     // Emulator validation of the top candidates, shared by both output
     // modes: (label, truth step_ms, truth samples/s, HTAE err %).
+    // Only feasible candidates are validated — an OOM candidate cannot
+    // run, so emulating it would report an error for a configuration
+    // the ranking already marks unusable.
     let truth_rows: Vec<(String, f64, f64, f64)> = if truth {
         let graph = model.build(batch);
         let est = OpEstimator::best_available(&cluster, &artifact);
         let mut rows = Vec::new();
-        for o in ranked.iter().take(3) {
+        for o in ranked.iter().filter(|o| !o.oom).take(3) {
             let tree = build_strategy(&graph, o.scenario.spec)?;
             let eg = crate::compiler::compile(&graph, &tree, &cluster)?;
             let emu_config = EmulatorConfig {
@@ -487,6 +549,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                         "peak_mem_bytes",
                         Json::Num(r.peak_mem.iter().copied().max().unwrap_or(0) as f64),
                     ),
+                    // Infeasible candidates rank below every feasible
+                    // one but stay visible (with their would-be speed).
+                    ("oom", Json::Bool(o.oom)),
                 ])
             })
             .collect();
@@ -501,7 +566,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             ),
             ("coll_algo", Json::Str(coll_algo.name().into())),
             ("swept", Json::Num(outcomes.len() as f64)),
-            ("viable", Json::Num(ranked.len() as f64)),
+            ("viable", Json::Num(feasible as f64)),
             ("oom", Json::Num(oom as f64)),
             ("invalid", Json::Num(failed as f64)),
             ("wall_s", Json::Num(wall.as_secs_f64())),
@@ -536,13 +601,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         batch,
         cluster.name,
         n,
-        ranked.len(),
+        feasible,
         oom,
         failed,
         wall,
         n_threads,
     );
-    let mut table = Table::new(&["rank", "strategy", "step_ms", "samples/s"]);
+    let mut table = Table::new(&["rank", "strategy", "step_ms", "samples/s", "oom"]);
     for (i, o) in ranked.iter().take(top).enumerate() {
         let r = o.report.as_ref().unwrap();
         table.row(vec![
@@ -550,6 +615,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             o.scenario.spec.label(),
             format!("{:.2}", r.step_ms),
             format!("{:.1}", r.throughput),
+            if o.oom { "OOM".into() } else { "-".to_string() },
         ]);
     }
     print!("{}", table.render());
@@ -737,6 +803,20 @@ mod tests {
         }
         let a = parse("simulate --model vgg19 --batch 8 --coll-algo bogus");
         assert!(run(&a).is_err());
+    }
+
+    #[test]
+    fn compile_stats_flag_runs_in_both_output_modes() {
+        let a = parse(
+            "simulate --model gpt2 --batch 8 --preset HC1 --nodes 1 --pp 2 --micro 4 \
+             --compile-stats",
+        );
+        run(&a).unwrap();
+        let a = parse(
+            "simulate --model gpt2 --batch 8 --preset HC1 --nodes 1 --pp 2 --micro 4 \
+             --compile-stats --json",
+        );
+        run(&a).unwrap();
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Shared lowering helpers used by both the pass-based compiler
+//! ([`super::emit`] + [`super::instantiate`]) and the retained monolithic
+//! oracle ([`super::legacy`]): segment construction, per-layer layout
+//! caches, and the computation-task feature math.
+//!
+//! Keeping these in one place pins the two compilers to identical task
+//! payloads — the golden equivalence suite compares their outputs
+//! task-for-task.
+
+use crate::graph::{Graph, Layer, LayerId, TensorId};
+use crate::strategy::{operand_layout, ParallelConfig, ResolvedStrategy, TensorLayout};
+
+use super::Phase;
+
+/// A recompute/virtual-stage segment: a contiguous top-level-module run
+/// within one pipeline stage.
+#[derive(Debug, Clone)]
+pub(super) struct Segment {
+    pub(super) stage: usize,
+    pub(super) layers: Vec<LayerId>,
+    pub(super) recompute: bool,
+    /// Tensors produced in this segment but consumed outside it (kept
+    /// across recomputation).
+    pub(super) boundary: Vec<TensorId>,
+}
+
+/// Cached per-layer derived data: layouts are micro-independent, so
+/// computing them once per layer (instead of per micro-batch) is what
+/// makes template emission O(tasks-per-micro).
+pub(super) struct LayerCache {
+    /// Required layout of each activation input.
+    pub(super) in_required: Vec<TensorLayout>,
+    /// Required layout of each parameter.
+    pub(super) param_required: Vec<TensorLayout>,
+    /// Implicit output layout (with partials).
+    pub(super) out_layout: TensorLayout,
+    /// Complete-copy layout backward requires for the output gradient.
+    pub(super) grad_required: TensorLayout,
+    /// Gradient-contribution layout per activation input.
+    pub(super) in_grad: Vec<TensorLayout>,
+    /// Gradient-contribution layout per parameter.
+    pub(super) param_grad: Vec<TensorLayout>,
+    /// `(flops, bytes_read, bytes_written)` of one forward shard.
+    pub(super) features: (f64, f64, f64),
+}
+
+/// Build the layout/feature cache of one layer.
+pub(super) fn build_layer_cache(
+    graph: &Graph,
+    r: &ResolvedStrategy,
+    n_micro: usize,
+    lid: LayerId,
+) -> LayerCache {
+    let layer = &graph.layers[lid];
+    let cfg = &r.comp[lid];
+    let all_dims: Vec<String> = cfg.partition.iter().map(|(d, _)| d.clone()).collect();
+    let t_of = |op: &crate::graph::Operand| &graph.tensors[op.tensor];
+    LayerCache {
+        in_required: layer
+            .inputs
+            .iter()
+            .map(|op| operand_layout(cfg, op, t_of(op), &[], false))
+            .collect(),
+        param_required: layer
+            .params
+            .iter()
+            .map(|op| operand_layout(cfg, op, t_of(op), &[], false))
+            .collect(),
+        out_layout: operand_layout(
+            cfg,
+            &layer.outputs[0],
+            t_of(&layer.outputs[0]),
+            &layer.reduce_dims,
+            true,
+        ),
+        grad_required: operand_layout(
+            cfg,
+            &layer.outputs[0],
+            t_of(&layer.outputs[0]),
+            &[],
+            false,
+        ),
+        in_grad: layer
+            .inputs
+            .iter()
+            .map(|op| operand_layout(cfg, op, t_of(op), &all_dims, true))
+            .collect(),
+        param_grad: layer
+            .params
+            .iter()
+            .map(|op| operand_layout(cfg, op, t_of(op), &all_dims, true))
+            .collect(),
+        features: comp_features(graph, layer, cfg, n_micro),
+    }
+}
+
+/// `(flops, bytes_read, bytes_written)` of one forward shard.
+pub(super) fn comp_features(
+    graph: &Graph,
+    layer: &Layer,
+    cfg: &ParallelConfig,
+    n_micro: usize,
+) -> (f64, f64, f64) {
+    let n_parts = cfg.n_parts() as f64;
+    let micro = n_micro as f64;
+    let flops = layer.fwd_flops() as f64 / n_parts / micro;
+    let mut read = 0.0;
+    for op in &layer.inputs {
+        let t = &graph.tensors[op.tensor];
+        let l = operand_layout(cfg, op, t, &layer.reduce_dims, false);
+        read += t.bytes() as f64 / l.n_parts() as f64 / micro;
+    }
+    for op in &layer.params {
+        let t = &graph.tensors[op.tensor];
+        let l = operand_layout(cfg, op, t, &layer.reduce_dims, false);
+        let part = t.bytes() as f64 / l.n_parts() as f64;
+        read += if layer.param_read_factor < 1.0 {
+            part * layer.param_read_factor / micro
+        } else {
+            part
+        };
+    }
+    let out = &graph.tensors[layer.outputs[0].tensor];
+    let lo = operand_layout(cfg, &layer.outputs[0], out, &layer.reduce_dims, true);
+    let written = out.bytes() as f64 / lo.n_parts() as f64 / micro;
+    (flops, read, written)
+}
+
+/// Per-micro activation bytes of one tensor.
+pub(super) fn act_bytes(graph: &Graph, n_micro: usize, t: TensorId) -> u64 {
+    let total = graph.tensors[t].bytes();
+    (total / n_micro as u64).max(1)
+}
+
+/// Dense key for the per-(layer, device, phase) micro-chaining maps.
+pub(super) fn phase_key(p: Phase) -> u8 {
+    match p {
+        Phase::Fwd => 0,
+        Phase::Bwd => 1,
+        Phase::Recomp => 2,
+        Phase::Optim => 3,
+    }
+}
+
+/// Compute segments: within each stage, the contiguous top-level-module
+/// runs. Under recomputation the runs are the Megatron-style per-block
+/// checkpointing units; they double as the units interleaved schedules
+/// group into virtual-stage chunks. (For non-recompute, non-interleaved
+/// strategies the finer granularity is emission-order-neutral: forward
+/// walks segments in order, backward in reverse.)
+pub(super) fn make_segments(graph: &Graph, r: &ResolvedStrategy) -> Vec<Segment> {
+    let consumers = graph.consumers();
+    let mut segments = Vec::new();
+    for stage in &r.stages {
+        let runs: Vec<Vec<LayerId>> = {
+            let mut runs: Vec<Vec<LayerId>> = Vec::new();
+            let mut last_key: Option<&str> = None;
+            for &l in &stage.layers {
+                let layer = &graph.layers[l];
+                let key = if layer.path.len() > 1 {
+                    Some(layer.path[0].as_str())
+                } else {
+                    None
+                };
+                if key.is_some() && key == last_key {
+                    runs.last_mut().unwrap().push(l);
+                } else {
+                    runs.push(vec![l]);
+                }
+                last_key = key;
+            }
+            runs
+        };
+        for layers in runs {
+            let in_seg = |l: LayerId| layers.contains(&l);
+            let mut boundary = Vec::new();
+            for &l in &layers {
+                for out in &graph.layers[l].outputs {
+                    let outside = consumers[out.tensor]
+                        .iter()
+                        .any(|&c| !in_seg(c))
+                        || consumers[out.tensor].is_empty();
+                    if outside {
+                        boundary.push(out.tensor);
+                    }
+                }
+            }
+            segments.push(Segment {
+                stage: stage.id,
+                layers,
+                recompute: stage.schedule.recompute,
+                boundary,
+            });
+        }
+    }
+    // Ensure global layer order across segments.
+    segments.sort_by_key(|s| s.layers[0]);
+    segments
+}

@@ -1,332 +1,358 @@
-//! Task-emission engine behind [`super::compile`].
+//! Pass 1 — **template emission**.
 //!
-//! Walks the resolved strategy per micro-batch, materializing per-device
-//! computation tasks and inferred communication tasks, wiring data and
-//! control dependencies, and assigning alloc/free events for the memory
-//! tracker. See `compiler/mod.rs` docs for the overall contract.
+//! Lowers the resolved strategy into an [`ExecTemplate`]: for **one**
+//! symbolic micro-batch, every recompute/virtual-stage segment gets a
+//! forward and a backward *slot template* of tasks. All strategy-
+//! transformation inference (layout math, collective/group inference,
+//! buffer lifetimes) happens here — exactly once per segment, never per
+//! micro-batch. The instantiation pass ([`super::instantiate`]) then
+//! stamps each slot template `n_micro` times with id-offset relabeling.
+//!
+//! A template task's dependencies are **symbolic** ([`TRef`]):
+//!
+//! - `Slot { slot, idx }` — task `idx` of another slot template *at the
+//!   same micro-batch* (all data dependencies are micro-local: a
+//!   forward consumes its own micro's activations, a backward its own
+//!   micro's gradients);
+//! - `Once(i)` — a per-step *preamble* task (parameter gathers, which
+//!   the monolithic emitter emitted on the first micro-batch and reused
+//!   afterwards; the pipeline captures them once, each carrying the
+//!   anchor position instantiation stamps it at inside the micro-0
+//!   instance — see [`PreTask`]).
+//!
+//! Cross-micro edges are deliberately **not** captured: micro-chaining,
+//! the backward-after-own-forward workspace edge, slot chaining, and
+//! `max_ongoing` bounding are *replay rules* (flags on the template
+//! task) that instantiation applies with the same stateful maps the
+//! monolithic emitter used — which is what keeps the stamped graph
+//! task-for-task equivalent to the legacy output (pinned by the golden
+//! suite).
 
 use std::collections::{BTreeMap, HashMap};
 
 use crate::cluster::{Cluster, DeviceId};
-use crate::graph::{Graph, Layer, LayerId, OpKind, TensorId, TensorKind};
-use crate::strategy::{operand_layout, ResolvedStrategy, TensorLayout};
+use crate::graph::{Graph, LayerId, TensorId, TensorKind};
+use crate::strategy::{ResolvedStrategy, TensorLayout};
 use crate::{Error, Result};
 
-use super::schedule::{self, SchedulePlan, SlotPhase, StageSegments};
+use super::common::{self, Segment};
 use super::transform::{transform, CollectiveKind, CommOp};
-use super::{CommClass, CommTask, CompTask, ExecGraph, Phase, Task, TaskId, TaskKind};
+use super::{CommClass, CommTask, CompTask, Phase, Task, TaskKind};
 
-/// A materialized version of a tensor (original production or the result
-/// of a strategy transformation).
+/// Symbolic reference to a task in the template universe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(super) enum TRef {
+    /// Preamble (once-per-step) task index.
+    Once(u32),
+    /// Task `idx` of slot template `slot`, at the referring instance's
+    /// own micro-batch.
+    Slot {
+        /// Slot template id (`2 × segment + phase`).
+        slot: u32,
+        /// Task index within the slot template.
+        idx: u32,
+    },
+}
+
+/// Reference to a tracked buffer.
+#[derive(Debug, Clone, Copy)]
+enum BufRef {
+    /// Once-per-step buffer (parameter gather materialization).
+    Once(u32),
+    /// Per-micro template buffer.
+    Tmpl(u32),
+}
+
+/// A materialized tensor version during capture.
 #[derive(Debug, Clone)]
-struct Instance {
+struct TInstance {
     layout: TensorLayout,
-    /// Producing tasks and the devices whose copies they cover.
-    tasks: Vec<(TaskId, Vec<DeviceId>)>,
-    /// Buffers backing this instance (for memory tracking).
-    bufs: Vec<usize>,
+    tasks: Vec<(TRef, Vec<DeviceId>)>,
+    bufs: Vec<BufRef>,
 }
 
-/// A tracked activation buffer.
+/// A gradient contribution (template form).
 #[derive(Debug, Clone)]
-struct Buffer {
-    device: DeviceId,
-    bytes: u64,
-    alloc_task: TaskId,
-    last_use: TaskId,
+pub(super) struct TGrad {
+    pub(super) layout: TensorLayout,
+    pub(super) tasks: Vec<(TRef, Vec<DeviceId>)>,
 }
 
-/// A gradient contribution for a tensor from one consumer's backward.
+/// One templated task: payload + same-micro data deps + replay rules.
 #[derive(Debug, Clone)]
-struct GradContrib {
-    layout: TensorLayout,
-    tasks: Vec<(TaskId, Vec<DeviceId>)>,
+pub(super) struct TTask {
+    /// Payload and metadata (micro is a placeholder overwritten at
+    /// stamp time; allocs/frees are attached in finalization).
+    pub(super) task: Task,
+    /// Pure data dependencies (symbolic, same micro or preamble).
+    pub(super) deps: Vec<TRef>,
+    /// Micro-chaining key: instantiation links this task after the
+    /// previous holder of `(layer, device, phase)` and takes over.
+    pub(super) chain_key: Option<(LayerId, DeviceId, u8)>,
+    /// Backward-after-own-forward workspace edge: look up the latest
+    /// recompute (else forward) task of `(layer, device)` at stamp time.
+    pub(super) own_fwd: Option<(LayerId, DeviceId)>,
+    /// Stage-first forward: subject to the legacy `max_ongoing` gate on
+    /// the single-stage path.
+    pub(super) stage_first_fwd: bool,
+    /// Stage-first backward: registers into the `max_ongoing`
+    /// bookkeeping at stamp time.
+    pub(super) stage_first_bwd: bool,
+    /// Once-buffers whose lifetime this task extends (parameter-gather
+    /// materializations are read by every micro-batch's instance).
+    pub(super) touch_once: Vec<u32>,
 }
 
-pub(super) struct Emitter<'a> {
+/// Per-micro tracked buffer in template form: stamped once per
+/// micro-batch, alloc at `alloc`'s instance, free after `last_use`'s.
+#[derive(Debug, Clone)]
+pub(super) struct TBuf {
+    pub(super) device: DeviceId,
+    pub(super) bytes: u64,
+    pub(super) alloc: TRef,
+    pub(super) last_use: TRef,
+}
+
+/// Once-per-step buffer: allocated by a preamble task, freed after the
+/// last stamped task that reads it (tracked during instantiation).
+#[derive(Debug, Clone)]
+pub(super) struct OnceBuf {
+    pub(super) device: DeviceId,
+    pub(super) bytes: u64,
+    /// Index of the allocating task in the preamble list.
+    pub(super) alloc: u32,
+}
+
+/// A once-per-step task (parameter gather) plus its **anchor**: the
+/// `(slot, template idx)` it was captured in front of. Instantiation
+/// stamps it at exactly that position inside the slot's **micro-0**
+/// instance — the same id position the monolithic emitter gave it —
+/// so the executor's id-ordered comm arbitration between gathers and
+/// per-micro feature comms is preserved task-for-task.
+#[derive(Debug, Clone)]
+pub(super) struct PreTask {
+    pub(super) task: Task,
+    pub(super) anchor: (u32, u32),
+}
+
+/// Pass-1 output: the compiled per-micro-batch template. Cacheable
+/// across sweep candidates (see [`super::TemplateCache`]) — it depends
+/// on the model graph and the schedule-independent part of the resolved
+/// strategy (layouts, stages, recompute, micro count), but not on the
+/// pipeline schedule, the `max_ongoing` bound, or the cluster topology.
+pub struct ExecTemplate {
+    pub(super) n_micro: usize,
+    pub(super) n_devices: usize,
+    /// Once-per-step tasks (parameter gathers), each with the anchor
+    /// position it is stamped at in the micro-0 instance.
+    /// Dependency-free.
+    pub(super) preamble: Vec<PreTask>,
+    pub(super) once_bufs: Vec<OnceBuf>,
+    /// Slot templates: `slots[2 * seg + 0]` = forward, `+ 1` = backward
+    /// (recompute + backward walk).
+    pub(super) slots: Vec<Vec<TTask>>,
+    pub(super) seg_stage: Vec<usize>,
+    pub(super) seg_weight: Vec<f64>,
+    pub(super) bufs: Vec<TBuf>,
+    /// Parameter-gradient contribution patterns (per tensor, capture
+    /// order = per-micro emission order of the monolithic emitter).
+    ///
+    /// Note the template deliberately carries **no schedule configs**:
+    /// the pipeline schedule and `max_ongoing` bound are per-candidate
+    /// (excluded from the cache key) and are read from the candidate's
+    /// resolved strategy at weave/instantiation time.
+    pub(super) param_grads: BTreeMap<TensorId, Vec<TGrad>>,
+    /// Pass counter: layer-level emissions during capture
+    /// (micro-independent by construction).
+    pub(super) layer_emissions: usize,
+    /// Pass counter: strategy-transformation inferences during capture.
+    pub(super) transforms: usize,
+}
+
+/// Slot id of a segment's forward template.
+pub(super) fn fwd_slot(seg: usize) -> usize {
+    2 * seg
+}
+
+/// Slot id of a segment's backward template.
+pub(super) fn bwd_slot(seg: usize) -> usize {
+    2 * seg + 1
+}
+
+/// Run pass 1: capture the template (see the module docs).
+pub(super) fn emit_template(
+    graph: &Graph,
+    r: &ResolvedStrategy,
+    cluster: &Cluster,
+) -> Result<ExecTemplate> {
+    // All stages must agree on micro-batch count (the root schedule
+    // propagates; differing counts are not supported).
+    let n_micro = r.stages[0].schedule.n_micro_batch;
+    for s in &r.stages {
+        if s.schedule.n_micro_batch != n_micro {
+            return Err(Error::compile(
+                "stages with differing n_micro_batch are unsupported",
+            ));
+        }
+    }
+    let n_devices = r
+        .comp
+        .iter()
+        .flat_map(|c| c.devices.iter().copied())
+        .max()
+        .map(|d| d + 1)
+        .unwrap_or(1);
+    if n_devices > cluster.num_devices() {
+        return Err(Error::compile(format!(
+            "strategy uses device {} but cluster has {}",
+            n_devices - 1,
+            cluster.num_devices()
+        )));
+    }
+    // Batch divisibility.
+    for l in &graph.layers {
+        let dp = r.comp[l.id].degree("b");
+        if dp * n_micro > graph.batch_size {
+            return Err(Error::compile(format!(
+                "layer '{}': b split {dp} × {n_micro} micro-batches exceeds batch {}",
+                l.name, graph.batch_size
+            )));
+        }
+    }
+    let segments = common::make_segments(graph, r);
+    let seg_stage: Vec<usize> = segments.iter().map(|s| s.stage).collect();
+    let seg_weight: Vec<f64> = segments
+        .iter()
+        .map(|s| {
+            let w: f64 = s
+                .layers
+                .iter()
+                .map(|&l| graph.layers[l].fwd_flops() as f64)
+                .sum();
+            w.max(1.0)
+        })
+        .collect();
+    let n_segs = segments.len();
+    let mut e = TemplateEmitter {
+        graph,
+        r,
+        n_micro,
+        slots: (0..2 * n_segs).map(|_| Vec::new()).collect(),
+        cur: 0,
+        preamble: Vec::new(),
+        once_bufs: Vec::new(),
+        bufs: Vec::new(),
+        avail: HashMap::new(),
+        grads: HashMap::new(),
+        param_grads: BTreeMap::new(),
+        param_ready: HashMap::new(),
+        segments,
+        layer_cache: (0..graph.layers.len()).map(|_| None).collect(),
+        layer_emissions: 0,
+        transforms: 0,
+    };
+    // Forward: segments in model order.
+    for si in 0..n_segs {
+        e.cur = fwd_slot(si);
+        let layers = e.segments[si].layers.clone();
+        for l in layers {
+            e.capture_layer_fwd(l, Phase::Fwd)?;
+        }
+    }
+    // Backward: segments in reverse, recompute before each segment's
+    // backward walk (mirrors the monolithic per-micro order).
+    for si in (0..n_segs).rev() {
+        e.cur = bwd_slot(si);
+        let seg = e.segments[si].clone();
+        if seg.recompute {
+            e.capture_recompute(&seg)?;
+        }
+        for &lid in seg.layers.iter().rev() {
+            e.capture_layer_bwd(lid)?;
+        }
+    }
+    Ok(ExecTemplate {
+        n_micro,
+        n_devices,
+        preamble: e.preamble,
+        once_bufs: e.once_bufs,
+        slots: e.slots,
+        seg_stage,
+        seg_weight,
+        bufs: e.bufs,
+        param_grads: e.param_grads,
+        layer_emissions: e.layer_emissions,
+        transforms: e.transforms,
+    })
+}
+
+struct TemplateEmitter<'a> {
     graph: &'a Graph,
     r: &'a ResolvedStrategy,
     n_micro: usize,
-    n_devices: usize,
-    tasks: Vec<Task>,
-    succs: Vec<Vec<TaskId>>,
-    preds: Vec<u32>,
-    bufs: Vec<Buffer>,
-    /// Materialized versions per (tensor, micro).
-    avail: HashMap<(TensorId, u32), Vec<Instance>>,
-    /// Activation-gradient contributions per (tensor, micro).
-    grads: HashMap<(TensorId, u32), Vec<GradContrib>>,
-    /// Parameter gradient contributions (accumulated over micros).
-    param_grads: BTreeMap<TensorId, Vec<GradContrib>>,
+    slots: Vec<Vec<TTask>>,
+    /// Slot currently being captured.
+    cur: usize,
+    preamble: Vec<PreTask>,
+    once_bufs: Vec<OnceBuf>,
+    bufs: Vec<TBuf>,
+    /// Materialized versions per tensor (one symbolic micro).
+    avail: HashMap<TensorId, Vec<TInstance>>,
+    /// Activation-gradient contributions per tensor.
+    grads: HashMap<TensorId, Vec<TGrad>>,
+    /// Parameter gradient contribution patterns.
+    param_grads: BTreeMap<TensorId, Vec<TGrad>>,
     /// Cached parameter gathers per (tensor, consumer layer).
-    param_ready: HashMap<(TensorId, LayerId), Instance>,
-    /// Last comp task per (layer, device, phase) for micro-chaining.
-    chain: HashMap<(LayerId, DeviceId, u8), TaskId>,
-    /// Last bwd task of each stage's first layer per micro (for
-    /// max_ongoing control deps).
-    stage_bwd_done: HashMap<(usize, u32), Vec<TaskId>>,
-    /// Recompute segments: contiguous layer ranges (stage-local).
+    param_ready: HashMap<(TensorId, LayerId), TInstance>,
     segments: Vec<Segment>,
-    /// Lowered pipeline schedule (`None` = single-stage legacy order).
-    plan: Option<SchedulePlan>,
-    /// Segment indices of each virtual stage (chunk), model order.
-    chunk_segs: Vec<Vec<usize>>,
-    /// Last comp task per device of the previously emitted slot —
-    /// consecutive slots chain through these, turning the schedule's
-    /// per-device total order into control edges. Keyed by device alone
-    /// (not per chunk) so that interleaved chunks sharing a device are
-    /// serialized in the lowered global order too.
-    slot_chain: HashMap<DeviceId, TaskId>,
-    /// Per-layer layout/feature cache: layouts are micro-independent, so
-    /// computing them once instead of per micro-batch cuts compile time
-    /// by ~n_micro on pipelined graphs.
-    layer_cache: Vec<Option<LayerCache>>,
+    layer_cache: Vec<Option<common::LayerCache>>,
+    layer_emissions: usize,
+    transforms: usize,
 }
 
-/// Cached per-layer derived data (see `Emitter::layer_cache`).
-struct LayerCache {
-    /// Required layout of each activation input.
-    in_required: Vec<TensorLayout>,
-    /// Required layout of each parameter.
-    param_required: Vec<TensorLayout>,
-    /// Implicit output layout (with partials).
-    out_layout: TensorLayout,
-    /// Complete-copy layout backward requires for the output gradient.
-    grad_required: TensorLayout,
-    /// Gradient-contribution layout per activation input.
-    in_grad: Vec<TensorLayout>,
-    /// Gradient-contribution layout per parameter.
-    param_grad: Vec<TensorLayout>,
-    /// `(flops, bytes_read, bytes_written)` of one forward shard.
-    features: (f64, f64, f64),
-}
-
-#[derive(Debug, Clone)]
-struct Segment {
-    stage: usize,
-    layers: Vec<LayerId>,
-    recompute: bool,
-    /// Tensors produced in this segment but consumed outside it (kept
-    /// across recomputation).
-    boundary: Vec<TensorId>,
-}
-
-impl<'a> Emitter<'a> {
-    pub(super) fn new(
-        graph: &'a Graph,
-        r: &'a ResolvedStrategy,
-        cluster: &'a Cluster,
-    ) -> Result<Self> {
-        // All stages must agree on micro-batch count (the root schedule
-        // propagates; differing counts are not supported).
-        let n_micro = r.stages[0].schedule.n_micro_batch;
-        for s in &r.stages {
-            if s.schedule.n_micro_batch != n_micro {
-                return Err(Error::compile(
-                    "stages with differing n_micro_batch are unsupported",
-                ));
-            }
-        }
-        let n_devices = r
-            .comp
-            .iter()
-            .flat_map(|c| c.devices.iter().copied())
-            .max()
-            .map(|d| d + 1)
-            .unwrap_or(1);
-        if n_devices > cluster.num_devices() {
-            return Err(Error::compile(format!(
-                "strategy uses device {} but cluster has {}",
-                n_devices - 1,
-                cluster.num_devices()
-            )));
-        }
-        // Batch divisibility.
-        for l in &graph.layers {
-            let dp = r.comp[l.id].degree("b");
-            if dp * n_micro > graph.batch_size {
-                return Err(Error::compile(format!(
-                    "layer '{}': b split {dp} × {n_micro} micro-batches exceeds batch {}",
-                    l.name, graph.batch_size
-                )));
-            }
-        }
-        let segments = make_segments(graph, r);
-        // Lower the pipeline schedule into chunk slot sequences plus the
-        // global emission order (None for single-stage strategies). The
-        // lowering sees segments in stage-major order; `flat_to_seg`
-        // maps its flat indices back to `segments`.
-        let mut inputs: Vec<StageSegments> = r
-            .stages
-            .iter()
-            .map(|s| StageSegments {
-                schedule: s.schedule,
-                seg_weights: Vec::new(),
-            })
-            .collect();
-        let mut flat_to_seg: Vec<usize> = Vec::with_capacity(segments.len());
-        for st in 0..r.stages.len() {
-            for (si, seg) in segments.iter().enumerate() {
-                if seg.stage == st {
-                    let w: f64 = seg
-                        .layers
-                        .iter()
-                        .map(|&l| graph.layers[l].fwd_flops() as f64)
-                        .sum();
-                    inputs[st].seg_weights.push(w.max(1.0));
-                    flat_to_seg.push(si);
-                }
-            }
-        }
-        let plan = schedule::lower(&inputs, n_micro)?;
-        let chunk_segs = match &plan {
-            Some(p) => {
-                let mut cs = vec![Vec::new(); p.n_chunks];
-                for (flat, &c) in p.chunk_of_seg.iter().enumerate() {
-                    cs[c].push(flat_to_seg[flat]);
-                }
-                cs
-            }
-            None => Vec::new(),
-        };
-        Ok(Emitter {
-            graph,
-            r,
-            n_micro,
-            n_devices,
-            tasks: Vec::new(),
-            succs: Vec::new(),
-            preds: Vec::new(),
-            bufs: Vec::new(),
-            avail: HashMap::new(),
-            grads: HashMap::new(),
-            param_grads: BTreeMap::new(),
-            param_ready: HashMap::new(),
-            chain: HashMap::new(),
-            stage_bwd_done: HashMap::new(),
-            segments,
-            plan,
-            chunk_segs,
-            slot_chain: HashMap::new(),
-            layer_cache: (0..graph.layers.len()).map(|_| None).collect(),
-        })
-    }
-
-    /// Build (once) and return the layout cache of a layer.
-    fn cache_for(&mut self, lid: LayerId) -> &LayerCache {
+impl<'a> TemplateEmitter<'a> {
+    fn cache_for(&mut self, lid: LayerId) -> &common::LayerCache {
         if self.layer_cache[lid].is_none() {
-            let layer = &self.graph.layers[lid];
-            let cfg = &self.r.comp[lid];
-            let all_dims: Vec<String> =
-                cfg.partition.iter().map(|(d, _)| d.clone()).collect();
-            let t_of = |op: &crate::graph::Operand| &self.graph.tensors[op.tensor];
-            let cache = LayerCache {
-                in_required: layer
-                    .inputs
-                    .iter()
-                    .map(|op| operand_layout(cfg, op, t_of(op), &[], false))
-                    .collect(),
-                param_required: layer
-                    .params
-                    .iter()
-                    .map(|op| operand_layout(cfg, op, t_of(op), &[], false))
-                    .collect(),
-                out_layout: operand_layout(
-                    cfg,
-                    &layer.outputs[0],
-                    t_of(&layer.outputs[0]),
-                    &layer.reduce_dims,
-                    true,
-                ),
-                grad_required: operand_layout(
-                    cfg,
-                    &layer.outputs[0],
-                    t_of(&layer.outputs[0]),
-                    &[],
-                    false,
-                ),
-                in_grad: layer
-                    .inputs
-                    .iter()
-                    .map(|op| operand_layout(cfg, op, t_of(op), &all_dims, true))
-                    .collect(),
-                param_grad: layer
-                    .params
-                    .iter()
-                    .map(|op| operand_layout(cfg, op, t_of(op), &all_dims, true))
-                    .collect(),
-                features: self.comp_features(layer, cfg),
-            };
-            self.layer_cache[lid] = Some(cache);
+            self.layer_cache[lid] =
+                Some(common::build_layer_cache(self.graph, self.r, self.n_micro, lid));
         }
         self.layer_cache[lid].as_ref().unwrap()
     }
 
-    pub(super) fn emit(mut self) -> Result<ExecGraph> {
-        match self.plan.as_ref().map(|p| p.order.clone()) {
-            // Single stage: the classic per-micro order (forward then
-            // backward, micro by micro). There is no pipeline to
-            // schedule; `max_ongoing_micro_batch` alone bounds memory.
-            None => {
-                for m in 0..self.n_micro as u32 {
-                    self.emit_forward(m)?;
-                    self.emit_backward(m)?;
-                }
-            }
-            // Pipelined: walk the lowered schedule's global order. Task
-            // ids then form a topological order of the schedule, and
-            // consecutive slots of a chunk are chained per device.
-            Some(order) => {
-                for step in order {
-                    match step.phase {
-                        SlotPhase::Forward => self.emit_chunk_fwd(step.chunk, step.micro)?,
-                        SlotPhase::Backward => self.emit_chunk_bwd(step.chunk, step.micro)?,
-                    }
-                }
-            }
-        }
-        self.emit_param_sync_and_optimizer()?;
-        self.finalize_buffers();
-        let stage_schedule = self.r.stages.iter().map(|s| s.schedule).collect();
-        Ok(ExecGraph {
-            n_stages: self.r.stages.len(),
-            n_devices: self.n_devices,
-            static_mem: self.static_memory(),
-            batch: self.graph.batch_size,
-            tasks: self.tasks,
-            succs: self.succs,
-            preds: self.preds,
-            stage_schedule,
-        })
+    fn act_bytes(&self, t: TensorId) -> u64 {
+        common::act_bytes(self.graph, self.n_micro, t)
     }
 
-    // ---------------------------------------------------------------- core
-
-    fn add_task(&mut self, task: Task, deps: &[TaskId]) -> TaskId {
-        let id = self.tasks.len();
-        self.tasks.push(task);
-        self.succs.push(Vec::new());
-        self.preds.push(0);
-        for &d in deps {
-            debug_assert!(d < id);
-            self.succs[d].push(id);
-            self.preds[id] += 1;
-        }
-        id
+    fn infer(&mut self, src: &TensorLayout, dst: &TensorLayout, bytes: u64) -> Vec<CommOp> {
+        self.transforms += 1;
+        transform(src, dst, bytes)
     }
 
-    fn add_dep(&mut self, from: TaskId, to: TaskId) {
-        if from == to {
-            return;
+    /// Append a template task to the current slot.
+    fn add(&mut self, mut t: TTask) -> TRef {
+        t.deps.sort_unstable();
+        t.deps.dedup();
+        let slot = self.cur;
+        let idx = self.slots[slot].len();
+        self.slots[slot].push(t);
+        TRef::Slot {
+            slot: slot as u32,
+            idx: idx as u32,
         }
-        debug_assert!(from < to);
-        self.succs[from].push(to);
-        self.preds[to] += 1;
+    }
+
+    /// Append a once-per-step preamble task (dependency-free), anchored
+    /// at the current capture position so instantiation can reproduce
+    /// the monolithic emitter's exact id placement.
+    fn add_once(&mut self, task: Task) -> TRef {
+        let anchor = (self.cur as u32, self.slots[self.cur].len() as u32);
+        self.preamble.push(PreTask { task, anchor });
+        TRef::Once((self.preamble.len() - 1) as u32)
     }
 
     /// Tasks within an instance that device `d` must wait on.
-    fn deps_for_device(inst: &Instance, d: DeviceId) -> Vec<TaskId> {
-        let covering: Vec<TaskId> = inst
+    fn deps_for_device(inst: &TInstance, d: DeviceId) -> Vec<TRef> {
+        let covering: Vec<TRef> = inst
             .tasks
             .iter()
             .filter(|(_, devs)| devs.contains(&d))
@@ -339,43 +365,45 @@ impl<'a> Emitter<'a> {
         }
     }
 
-    /// Extend buffer lifetimes to a reading task — but only for buffers
-    /// on devices the reader actually occupies: the reader is only
-    /// guaranteed downstream of the *covering* producers, so extending a
-    /// buffer on an unrelated device would let its free fire before its
-    /// alloc in simulated time.
-    fn touch_bufs_on(&mut self, inst_bufs: &[usize], devices: &[DeviceId], user: TaskId) {
+    /// Extend buffer lifetimes to a reading task on the devices it
+    /// occupies. Per-micro buffers update their captured `last_use`
+    /// (capture order equals per-micro stamp order, so "latest in
+    /// capture" is "latest stamped id"); once-buffers instead record the
+    /// toucher on the task, because every micro's instance extends them.
+    fn touch_bufs_on(&mut self, inst_bufs: &[BufRef], devices: &[DeviceId], user: TRef) {
         for &b in inst_bufs {
-            if devices.contains(&self.bufs[b].device) && self.bufs[b].last_use < user {
-                self.bufs[b].last_use = user;
+            match b {
+                BufRef::Tmpl(i) => {
+                    if devices.contains(&self.bufs[i as usize].device) {
+                        self.bufs[i as usize].last_use = user;
+                    }
+                }
+                BufRef::Once(i) => {
+                    if devices.contains(&self.once_bufs[i as usize].device) {
+                        if let TRef::Slot { slot, idx } = user {
+                            self.slots[slot as usize][idx as usize].touch_once.push(i);
+                        }
+                    }
+                }
             }
         }
     }
 
-    /// Per-device activation bytes of a tensor instance part.
-    fn act_bytes(&self, t: TensorId) -> u64 {
-        let total = self.graph.tensors[t].bytes();
-        (total / self.n_micro as u64).max(1)
-    }
-
-    /// Emit communication tasks for a list of transform ops; returns the
-    /// created task ids (with their device coverage).
-    #[allow(clippy::too_many_arguments)]
+    /// Emit communication tasks for a list of transform ops.
     fn emit_comms(
         &mut self,
         ops: &[CommOp],
-        deps_of: &dyn Fn(&CommOp) -> Vec<TaskId>,
+        deps_of: &dyn Fn(&CommOp) -> Vec<TRef>,
         class: CommClass,
         phase: Phase,
         stage: usize,
-        micro: u32,
         layer: Option<LayerId>,
-    ) -> Vec<(TaskId, Vec<DeviceId>)> {
+    ) -> Vec<(TRef, Vec<DeviceId>)> {
         let mut out = Vec::with_capacity(ops.len());
         for op in ops {
             let deps = deps_of(op);
-            let id = self.add_task(
-                Task {
+            let tref = self.add(TTask {
+                task: Task {
                     kind: TaskKind::Comm(CommTask {
                         kind: op.kind,
                         group: op.group.clone(),
@@ -384,36 +412,38 @@ impl<'a> Emitter<'a> {
                     }),
                     layer,
                     stage,
-                    micro,
+                    micro: 0,
                     phase,
                     allocs: Vec::new(),
                     frees: Vec::new(),
                 },
-                &deps,
-            );
-            out.push((id, op.group.clone()));
+                deps,
+                chain_key: None,
+                own_fwd: None,
+                stage_first_fwd: false,
+                stage_first_bwd: false,
+                touch_once: Vec::new(),
+            });
+            out.push((tref, op.group.clone()));
         }
         out
     }
 
-    /// Materialize tensor `t` (micro `m`) in a layout satisfying
-    /// `required`, inserting transformation comms if needed. Returns the
-    /// instance index in `avail`.
-    #[allow(clippy::too_many_arguments)]
+    /// Materialize a tensor in a layout satisfying `required`, inserting
+    /// transformation comms if needed. Returns the version index.
     fn materialize(
         &mut self,
         t: TensorId,
-        m: u32,
         required: &TensorLayout,
         class: CommClass,
         phase: Phase,
         stage: usize,
         layer: Option<LayerId>,
     ) -> Result<usize> {
-        let versions = self.avail.entry((t, m)).or_insert_with(|| {
+        let versions = self.avail.entry(t).or_insert_with(|| {
             // Graph inputs (no producer): assume resident in the
             // required layout.
-            vec![Instance {
+            vec![TInstance {
                 layout: required.clone(),
                 tasks: Vec::new(),
                 bufs: Vec::new(),
@@ -430,150 +460,71 @@ impl<'a> Emitter<'a> {
         } else {
             self.act_bytes(t)
         };
-        let ops = transform(&src.layout, required, bytes);
+        let ops = self.infer(&src.layout, required, bytes);
         if ops.is_empty() {
             // transform says satisfied (e.g. replicated superset).
             return Ok(0);
         }
         let src_for_deps = src.clone();
         let comm_tasks = {
-            let deps_of = |op: &CommOp| -> Vec<TaskId> {
+            let deps_of = |op: &CommOp| -> Vec<TRef> {
                 let mut deps = Vec::new();
                 for &d in &op.group {
                     deps.extend(Self::deps_for_device(&src_for_deps, d));
                 }
-                deps.sort_unstable();
-                deps.dedup();
                 deps
             };
-            self.emit_comms(&ops, &deps_of, class, phase, stage, m, layer)
+            self.emit_comms(&ops, &deps_of, class, phase, stage, layer)
         };
         // Touch source buffers on the devices each comm actually reads.
-        for (tid, group) in &comm_tasks {
-            let bufs = src.bufs.clone();
-            self.touch_bufs_on(&bufs, group, *tid);
+        for (tref, group) in &comm_tasks {
+            self.touch_bufs_on(&src.bufs, group, *tref);
         }
         // Memory: all-gather materializes the full destination part set.
         let mut new_bufs = Vec::new();
-        for (tid, group) in &comm_tasks {
-            if let TaskKind::Comm(c) = &self.tasks[*tid].kind {
-                if c.kind == CollectiveKind::AllGather {
-                    let gathered = c.bytes * c.group.len() as u64;
-                    for &d in group {
-                        let b = self.bufs.len();
-                        self.bufs.push(Buffer {
-                            device: d,
-                            bytes: gathered,
-                            alloc_task: *tid,
-                            last_use: *tid,
-                        });
-                        new_bufs.push(b);
-                    }
+        for ((tref, group), op) in comm_tasks.iter().zip(&ops) {
+            if op.kind == CollectiveKind::AllGather {
+                let gathered = op.bytes * op.group.len() as u64;
+                for &d in group {
+                    let b = self.bufs.len() as u32;
+                    self.bufs.push(TBuf {
+                        device: d,
+                        bytes: gathered,
+                        alloc: *tref,
+                        last_use: *tref,
+                    });
+                    new_bufs.push(BufRef::Tmpl(b));
                 }
             }
         }
-        let inst = Instance {
+        let inst = TInstance {
             layout: required.clone(),
             tasks: comm_tasks,
             bufs: new_bufs,
         };
-        let versions = self.avail.get_mut(&(t, m)).unwrap();
+        let versions = self.avail.get_mut(&t).unwrap();
         versions.push(inst);
         Ok(versions.len() - 1)
     }
 
-    // ------------------------------------------------- scheduled emission
-
-    /// Emit one chunk's forward slot for micro `m`.
-    fn emit_chunk_fwd(&mut self, chunk: usize, m: u32) -> Result<()> {
-        let start = self.tasks.len();
-        let segs = self.chunk_segs[chunk].clone();
-        for si in segs {
-            let layers = self.segments[si].layers.clone();
-            for l in layers {
-                self.emit_layer_fwd(l, m, Phase::Fwd)?;
-            }
-        }
-        self.chain_slot(start);
-        Ok(())
-    }
-
-    /// Emit one chunk's backward slot (recompute + backward) for micro
-    /// `m`.
-    fn emit_chunk_bwd(&mut self, chunk: usize, m: u32) -> Result<()> {
-        let start = self.tasks.len();
-        let segs = self.chunk_segs[chunk].clone();
-        for &si in segs.iter().rev() {
-            let seg = self.segments[si].clone();
-            if seg.recompute {
-                self.emit_recompute(&seg, m)?;
-            }
-            for &lid in seg.layers.iter().rev() {
-                self.emit_layer_bwd(lid, m)?;
-            }
-        }
-        self.chain_slot(start);
-        Ok(())
-    }
-
-    /// Order the comp tasks emitted since `start` after the device's
-    /// previously emitted slot. This is how the pipeline schedule
-    /// becomes observable: without it the executor would run any ready
-    /// forward eagerly, collapsing every schedule into the same eager
-    /// order (and the same activation watermark). The chain is per
-    /// device — not per chunk — so a device hosting several interleaved
-    /// chunks executes their slots in the lowered global order rather
-    /// than racing them.
-    fn chain_slot(&mut self, start: TaskId) {
-        let end = self.tasks.len();
-        let mut last: BTreeMap<DeviceId, TaskId> = BTreeMap::new();
-        for id in start..end {
-            let d = match &self.tasks[id].kind {
-                TaskKind::Comp(c) => c.device,
-                TaskKind::Comm(_) => continue,
-            };
-            if let Some(&prev) = self.slot_chain.get(&d) {
-                self.add_dep(prev, id);
-            }
-            last.insert(d, id);
-        }
-        for (d, id) in last {
-            self.slot_chain.insert(d, id);
-        }
-    }
-
-    // ------------------------------------------------------------- forward
-
-    fn emit_forward(&mut self, m: u32) -> Result<()> {
-        let seg_count = self.segments.len();
-        for si in 0..seg_count {
-            let layers = self.segments[si].layers.clone();
-            for l in layers {
-                self.emit_layer_fwd(l, m, Phase::Fwd)?;
-            }
-        }
-        Ok(())
-    }
-
-    /// Emit the forward (or recompute) tasks of one layer for micro `m`.
-    fn emit_layer_fwd(&mut self, lid: LayerId, m: u32, phase: Phase) -> Result<()> {
-        // Pull cached micro-independent layouts (cheap clones vs
-        // recomputing the combinatorial layout math per micro-batch).
+    /// Capture the forward (or recompute) tasks of one layer.
+    fn capture_layer_fwd(&mut self, lid: LayerId, phase: Phase) -> Result<()> {
+        self.layer_emissions += 1;
         let cache = self.cache_for(lid);
         let in_required = cache.in_required.clone();
         let param_required = cache.param_required.clone();
-        let out_layout_c = cache.out_layout.clone();
+        let out_layout = cache.out_layout.clone();
         let features = cache.features;
         let layer = &self.graph.layers[lid];
         let cfg = &self.r.comp[lid];
         let stage = self.r.stage_of_layer[lid];
+        let stage_first = self.r.stages[stage].layers.first() == Some(&lid);
 
         // 1. Inputs: materialize in the required layouts.
-        let mut input_deps: Vec<(usize, usize)> = Vec::new(); // (tensor, version)
+        let mut input_deps: Vec<(TensorId, usize)> = Vec::new();
         for (op, required) in layer.inputs.iter().zip(&in_required) {
             let v = self.materialize(
                 op.tensor,
-                m,
                 required,
                 CommClass::Feature,
                 phase,
@@ -582,9 +533,12 @@ impl<'a> Emitter<'a> {
             )?;
             input_deps.push((op.tensor, v));
         }
-        // 2. Parameters: gather if stored layout mismatches (once per
-        //    step, cached).
-        let mut param_dep_tasks: Vec<TaskId> = Vec::new();
+        // 2. Parameters: gather if stored layout mismatches — once per
+        //    step, hoisted into the preamble (the monolithic emitter
+        //    emitted these inside the first micro's slot; they are
+        //    dependency-free either way, so root position is
+        //    schedule-neutral).
+        let mut param_dep_tasks: Vec<TRef> = Vec::new();
         for (p, required) in layer.params.iter().zip(&param_required) {
             let t = p.tensor;
             if let Some(inst) = self.param_ready.get(&(t, lid)) {
@@ -592,40 +546,54 @@ impl<'a> Emitter<'a> {
                 continue;
             }
             let stored = &self.r.mem[t];
-            let ops = transform(stored, required, self.graph.tensors[t].bytes());
+            let stored = stored.clone();
+            let ops = self.infer(&stored, required, self.graph.tensors[t].bytes());
             let inst = if ops.is_empty() {
-                Instance {
-                    layout: stored.clone(),
+                TInstance {
+                    layout: stored,
                     tasks: Vec::new(),
                     bufs: Vec::new(),
                 }
             } else {
-                let comm_tasks = {
-                    let deps_of = |_: &CommOp| Vec::new();
-                    self.emit_comms(&ops, &deps_of, CommClass::Feature, Phase::Fwd, stage, m, Some(lid))
-                };
+                let mut tasks = Vec::with_capacity(ops.len());
                 let mut new_bufs = Vec::new();
-                for (tid, group) in &comm_tasks {
-                    if let TaskKind::Comm(c) = &self.tasks[*tid].kind {
-                        if c.kind == CollectiveKind::AllGather {
-                            let gathered = c.bytes * c.group.len() as u64;
-                            for &d in group {
-                                let b = self.bufs.len();
-                                self.bufs.push(Buffer {
-                                    device: d,
-                                    bytes: gathered,
-                                    alloc_task: *tid,
-                                    last_use: *tid,
-                                });
-                                new_bufs.push(b);
-                            }
+                for op in &ops {
+                    let tref = self.add_once(Task {
+                        kind: TaskKind::Comm(CommTask {
+                            kind: op.kind,
+                            group: op.group.clone(),
+                            bytes: op.bytes,
+                            class: CommClass::Feature,
+                        }),
+                        layer: Some(lid),
+                        stage,
+                        micro: 0,
+                        phase: Phase::Fwd,
+                        allocs: Vec::new(),
+                        frees: Vec::new(),
+                    });
+                    if op.kind == CollectiveKind::AllGather {
+                        let gathered = op.bytes * op.group.len() as u64;
+                        let alloc = match tref {
+                            TRef::Once(i) => i,
+                            TRef::Slot { .. } => unreachable!("preamble refs are Once"),
+                        };
+                        for &d in &op.group {
+                            let b = self.once_bufs.len() as u32;
+                            self.once_bufs.push(OnceBuf {
+                                device: d,
+                                bytes: gathered,
+                                alloc,
+                            });
+                            new_bufs.push(BufRef::Once(b));
                         }
                     }
+                    tasks.push((tref, op.group.clone()));
                 }
-                param_dep_tasks.extend(comm_tasks.iter().map(|(id, _)| *id));
-                Instance {
+                param_dep_tasks.extend(tasks.iter().map(|(id, _)| *id));
+                TInstance {
                     layout: required.clone(),
-                    tasks: comm_tasks,
+                    tasks,
                     bufs: new_bufs,
                 }
             };
@@ -633,17 +601,13 @@ impl<'a> Emitter<'a> {
         }
 
         // 3. Per-device compute tasks.
-        let out_op = &layer.outputs[0];
-        let out_t = out_op.tensor;
-        let out_layout = out_layout_c;
+        let out_t = layer.outputs[0].tensor;
         let replicas = cfg.replicas();
-        let mut comp_tasks: Vec<(TaskId, Vec<DeviceId>)> = Vec::new();
-        let chain_key_phase = phase_key(phase);
-        // Buffer lists read by every shard (hoisted out of the device
-        // loop: one clone per operand, not one per operand per device).
-        let mut read_bufs: Vec<Vec<usize>> = input_deps
+        let mut comp_tasks: Vec<(TRef, Vec<DeviceId>)> = Vec::new();
+        let chain_key_phase = common::phase_key(phase);
+        let mut read_bufs: Vec<Vec<BufRef>> = input_deps
             .iter()
-            .map(|(t, v)| self.avail[&(*t, m)][*v].bufs.clone())
+            .map(|(t, v)| self.avail[t][*v].bufs.clone())
             .collect();
         for p in &layer.params {
             if let Some(inst) = self.param_ready.get(&(p.tensor, lid)) {
@@ -653,83 +617,60 @@ impl<'a> Emitter<'a> {
         let per_dev_out_bytes = self.act_bytes(out_t) / out_layout.n_parts().max(1) as u64;
         let mut out_bufs = Vec::new();
         let n_parts = cfg.n_parts();
+        let devices = cfg.devices.clone();
+        let op_kind = layer.kind;
         for part in 0..n_parts {
             for rep in 0..replicas {
-                let d = cfg.devices[part * replicas + rep];
-                let mut deps: Vec<TaskId> = Vec::new();
+                let d = devices[part * replicas + rep];
+                let mut deps: Vec<TRef> = Vec::new();
                 for (t, v) in &input_deps {
-                    let inst = &self.avail[&(*t, m)][*v];
+                    let inst = &self.avail[t][*v];
                     deps.extend(Self::deps_for_device(inst, d));
                 }
                 deps.extend(param_dep_tasks.iter().copied());
-                // Micro-chaining control dep.
-                if let Some(&prev) = self.chain.get(&(lid, d, chain_key_phase)) {
-                    deps.push(prev);
-                }
-                // max_ongoing: first layer of stage waits for the
-                // backward of micro m - k. Only on the legacy
-                // single-stage path — pipelined graphs fold the bound
-                // into the schedule's slot order instead (a raw edge
-                // here would deadlock fill-drain, whose slot order puts
-                // every backward after every forward).
-                let sched = self.r.stages[stage].schedule;
-                if self.plan.is_none()
-                    && phase == Phase::Fwd
-                    && self.r.stages[stage].layers.first() == Some(&lid)
-                    && sched.max_ongoing_micro_batch != usize::MAX
-                {
-                    let k = sched.max_ongoing_micro_batch as u32;
-                    if m >= k {
-                        if let Some(ts) = self.stage_bwd_done.get(&(stage, m - k)) {
-                            deps.extend(ts.iter().copied());
-                        }
-                    }
-                }
-                deps.sort_unstable();
-                deps.dedup();
-                let id = self.add_task(
-                    Task {
+                let tref = self.add(TTask {
+                    task: Task {
                         kind: TaskKind::Comp(CompTask {
                             device: d,
-                            op: layer.kind,
+                            op: op_kind,
                             flops: features.0,
                             bytes_read: features.1,
                             bytes_written: features.2,
                         }),
                         layer: Some(lid),
                         stage,
-                        micro: m,
+                        micro: 0,
                         phase,
                         allocs: Vec::new(),
                         frees: Vec::new(),
                     },
-                    &deps,
-                );
-                self.chain.insert((lid, d, chain_key_phase), id);
-                comp_tasks.push((id, vec![d]));
+                    deps,
+                    chain_key: Some((lid, d, chain_key_phase)),
+                    own_fwd: None,
+                    stage_first_fwd: stage_first && phase == Phase::Fwd,
+                    stage_first_bwd: false,
+                    touch_once: Vec::new(),
+                });
+                comp_tasks.push((tref, vec![d]));
                 // Buffer for this device's output copy.
-                let b = self.bufs.len();
-                self.bufs.push(Buffer {
+                let b = self.bufs.len() as u32;
+                self.bufs.push(TBuf {
                     device: d,
                     bytes: per_dev_out_bytes.max(1),
-                    alloc_task: id,
-                    last_use: id,
+                    alloc: tref,
+                    last_use: tref,
                 });
-                out_bufs.push(b);
+                out_bufs.push(BufRef::Tmpl(b));
                 // Touch the input buffers we read (this device only).
                 for bufs in &read_bufs {
-                    for &b in bufs {
-                        if self.bufs[b].device == d && self.bufs[b].last_use < id {
-                            self.bufs[b].last_use = id;
-                        }
-                    }
+                    self.touch_bufs_on(bufs, &[d], tref);
                 }
             }
         }
         // Register (or overwrite, for recompute) the output instance.
         self.avail.insert(
-            (out_t, m),
-            vec![Instance {
+            out_t,
+            vec![TInstance {
                 layout: out_layout,
                 tasks: comp_tasks,
                 bufs: out_bufs,
@@ -738,142 +679,94 @@ impl<'a> Emitter<'a> {
         Ok(())
     }
 
-    /// `(flops, bytes_read, bytes_written)` of one forward shard.
-    fn comp_features(&self, layer: &Layer, cfg: &crate::strategy::ParallelConfig) -> (f64, f64, f64) {
-        let n_parts = cfg.n_parts() as f64;
-        let micro = self.n_micro as f64;
-        let flops = layer.fwd_flops() as f64 / n_parts / micro;
-        let mut read = 0.0;
-        for op in &layer.inputs {
-            let t = &self.graph.tensors[op.tensor];
-            let l = operand_layout(cfg, op, t, &layer.reduce_dims, false);
-            read += t.bytes() as f64 / l.n_parts() as f64 / micro;
-        }
-        for op in &layer.params {
-            let t = &self.graph.tensors[op.tensor];
-            let l = operand_layout(cfg, op, t, &layer.reduce_dims, false);
-            let part = t.bytes() as f64 / l.n_parts() as f64;
-            read += if layer.param_read_factor < 1.0 {
-                part * layer.param_read_factor / micro
-            } else {
-                part
-            };
-        }
-        let out = &self.graph.tensors[layer.outputs[0].tensor];
-        let lo = operand_layout(cfg, &layer.outputs[0], out, &layer.reduce_dims, true);
-        let written = out.bytes() as f64 / lo.n_parts() as f64 / micro;
-        (flops, read, written)
-    }
-
-    // ------------------------------------------------------------ backward
-
-    fn emit_backward(&mut self, m: u32) -> Result<()> {
-        for si in (0..self.segments.len()).rev() {
-            let seg = self.segments[si].clone();
-            if seg.recompute {
-                self.emit_recompute(&seg, m)?;
-            }
-            for &lid in seg.layers.iter().rev() {
-                self.emit_layer_bwd(lid, m)?;
-            }
-        }
-        Ok(())
-    }
-
-    /// Re-emit a segment's forward as recompute tasks, gated on the
-    /// gradient of the segment boundary having been produced (paper:
-    /// "executed immediately before the backward subgraphs").
-    fn emit_recompute(&mut self, seg: &Segment, m: u32) -> Result<()> {
-        // Gate: collect grad contribution tasks of boundary tensors.
-        let mut gate: Vec<TaskId> = Vec::new();
+    /// Capture a segment's recompute: re-emit its non-boundary layers as
+    /// `Phase::Recomp`, gated on the boundary gradients.
+    fn capture_recompute(&mut self, seg: &Segment) -> Result<()> {
+        let mut gate: Vec<TRef> = Vec::new();
         for &t in &seg.boundary {
-            if let Some(contribs) = self.grads.get(&(t, m)) {
+            if let Some(contribs) = self.grads.get(&t) {
                 for c in contribs {
                     gate.extend(c.tasks.iter().map(|(id, _)| *id));
                 }
             }
         }
-        let first_task = self.tasks.len();
+        let slot = self.cur;
+        let first = self.slots[slot].len();
         for &lid in &seg.layers {
-            // Boundary outputs were kept; recomputing their producers is
-            // unnecessary, but inner activations must be rebuilt. We
-            // re-emit every layer whose output is NOT a boundary tensor.
             let out_t = self.graph.layers[lid].outputs[0].tensor;
             if seg.boundary.contains(&out_t) {
                 continue;
             }
-            self.emit_layer_fwd(lid, m, Phase::Recomp)?;
+            self.capture_layer_fwd(lid, Phase::Recomp)?;
         }
         // Gate the recompute *chain heads* on the boundary gradients:
-        // every emitted recompute task with no predecessor inside the
-        // emitted range starts a per-device chain and must wait for the
-        // backward to reach this segment. (Gating only one task would
-        // let the other devices' chains recompute eagerly during the
-        // forward pass.)
-        let end_task = self.tasks.len();
-        if first_task < end_task && !gate.is_empty() {
-            let mut has_range_pred = vec![false; end_task - first_task];
-            for t in first_task..end_task {
-                for &s in &self.succs[t] {
-                    if s >= first_task && s < end_task {
-                        has_range_pred[s - first_task] = true;
+        // every captured recompute task with no data predecessor inside
+        // the captured range starts a per-device chain and must wait for
+        // the backward to reach this segment.
+        let end = self.slots[slot].len();
+        if first < end && !gate.is_empty() {
+            let mut has_range_pred = vec![false; end - first];
+            for i in first..end {
+                for &d in &self.slots[slot][i].deps {
+                    if let TRef::Slot { slot: s, idx } = d {
+                        let idx = idx as usize;
+                        if s as usize == slot && idx >= first && idx < end {
+                            has_range_pred[idx - first] = true;
+                        }
                     }
                 }
             }
-            for t in first_task..end_task {
-                if !has_range_pred[t - first_task] {
-                    for &g in &gate {
-                        if g < first_task {
-                            self.add_dep(g, t);
-                        }
-                    }
+            for i in first..end {
+                if !has_range_pred[i - first] {
+                    let t = &mut self.slots[slot][i];
+                    t.deps.extend(gate.iter().copied());
+                    t.deps.sort_unstable();
+                    t.deps.dedup();
                 }
             }
         }
         Ok(())
     }
 
-    fn emit_layer_bwd(&mut self, lid: LayerId, m: u32) -> Result<()> {
+    /// Capture the backward tasks of one layer.
+    fn capture_layer_bwd(&mut self, lid: LayerId) -> Result<()> {
+        self.layer_emissions += 1;
         let cache = self.cache_for(lid);
         let required_grad = cache.grad_required.clone();
         let in_grad = cache.in_grad.clone();
         let param_grad = cache.param_grad.clone();
-        let (f_flops_c, f_read, f_written) = cache.features;
+        let (_f_flops, f_read, f_written) = cache.features;
         let layer = &self.graph.layers[lid];
         let cfg = self.r.comp[lid].clone();
         let stage = self.r.stage_of_layer[lid];
+        let stage_first = self.r.stages[stage].layers.first() == Some(&lid);
 
         // 1. Output gradient: transform contributions to the layout this
-        //    layer's backward requires (complete copies of its own output
-        //    parts).
-        let out_op = &layer.outputs[0];
-        let out_t = out_op.tensor;
-        let _grad_deps: Vec<TaskId> = Vec::new();
-        let mut grad_dep_insts: Vec<Instance> = Vec::new();
-        if let Some(contribs) = self.grads.remove(&(out_t, m)) {
+        //    layer's backward requires.
+        let out_t = layer.outputs[0].tensor;
+        let mut grad_dep_insts: Vec<TInstance> = Vec::new();
+        if let Some(contribs) = self.grads.remove(&out_t) {
             for c in contribs {
                 let bytes = self.act_bytes(out_t);
-                let ops = transform(&c.layout, &required_grad, bytes);
+                let ops = self.infer(&c.layout, &required_grad, bytes);
                 if ops.is_empty() {
-                    grad_dep_insts.push(Instance {
+                    grad_dep_insts.push(TInstance {
                         layout: c.layout,
                         tasks: c.tasks,
                         bufs: Vec::new(),
                     });
                 } else {
-                    let src = Instance {
+                    let src = TInstance {
                         layout: c.layout.clone(),
                         tasks: c.tasks.clone(),
                         bufs: Vec::new(),
                     };
                     let comm_tasks = {
-                        let deps_of = |op: &CommOp| -> Vec<TaskId> {
+                        let deps_of = |op: &CommOp| -> Vec<TRef> {
                             let mut deps = Vec::new();
                             for &d in &op.group {
                                 deps.extend(Self::deps_for_device(&src, d));
                             }
-                            deps.sort_unstable();
-                            deps.dedup();
                             deps
                         };
                         self.emit_comms(
@@ -882,11 +775,10 @@ impl<'a> Emitter<'a> {
                             CommClass::Feature,
                             Phase::Bwd,
                             stage,
-                            m,
                             Some(lid),
                         )
                     };
-                    grad_dep_insts.push(Instance {
+                    grad_dep_insts.push(TInstance {
                         layout: required_grad.clone(),
                         tasks: comm_tasks,
                         bufs: Vec::new(),
@@ -899,73 +791,57 @@ impl<'a> Emitter<'a> {
         // 2. Saved activations (forward or recompute instances).
         let mut saved: Vec<(TensorId, usize)> = Vec::new();
         for op in &layer.inputs {
-            // The instance registered last (recompute overwrites) is the
-            // one backward consumes; version 0 is the canonical one.
-            if self.avail.contains_key(&(op.tensor, m)) {
+            if self.avail.contains_key(&op.tensor) {
                 saved.push((op.tensor, 0));
             }
         }
-        let saved_bufs: Vec<Vec<usize>> = saved
+        let saved_bufs: Vec<Vec<BufRef>> = saved
             .iter()
-            .map(|(t, v)| self.avail[&(*t, m)][*v].bufs.clone())
+            .map(|(t, v)| self.avail[t][*v].bufs.clone())
             .collect();
 
         // 3. Per-device backward tasks.
         let bwd_flops = layer.bwd_flops() as f64 / cfg.n_parts() as f64 / self.n_micro as f64;
-        let _ = f_flops_c;
         let replicas = cfg.replicas();
-        let mut bwd_tasks: Vec<(TaskId, Vec<DeviceId>)> = Vec::new();
+        let op_kind = layer.kind;
+        let mut bwd_tasks: Vec<(TRef, Vec<DeviceId>)> = Vec::new();
         for part in 0..cfg.n_parts() {
             for rep in 0..replicas {
                 let d = cfg.devices[part * replicas + rep];
-                let mut deps: Vec<TaskId> = Vec::new();
+                let mut deps: Vec<TRef> = Vec::new();
                 for inst in &grad_dep_insts {
                     deps.extend(Self::deps_for_device(inst, d));
                 }
                 for (t, v) in &saved {
-                    let inst = &self.avail[&(*t, m)][*v];
+                    let inst = &self.avail[t][*v];
                     deps.extend(Self::deps_for_device(inst, d));
                 }
-                // Must run after our own forward (reads its workspace).
-                if let Some(&fwd) = self
-                    .chain
-                    .get(&(lid, d, phase_key(Phase::Recomp)))
-                    .or_else(|| self.chain.get(&(lid, d, phase_key(Phase::Fwd))))
-                {
-                    deps.push(fwd);
-                }
-                // Micro-chaining for backward.
-                if let Some(&prev) = self.chain.get(&(lid, d, phase_key(Phase::Bwd))) {
-                    deps.push(prev);
-                }
-                deps.sort_unstable();
-                deps.dedup();
-                let id = self.add_task(
-                    Task {
+                let tref = self.add(TTask {
+                    task: Task {
                         kind: TaskKind::Comp(CompTask {
                             device: d,
-                            op: layer.kind,
+                            op: op_kind,
                             flops: bwd_flops,
                             bytes_read: f_read + f_written, // inputs + dy
                             bytes_written: f_read,          // dx + dw
                         }),
                         layer: Some(lid),
                         stage,
-                        micro: m,
+                        micro: 0,
                         phase: Phase::Bwd,
                         allocs: Vec::new(),
                         frees: Vec::new(),
                     },
-                    &deps,
-                );
-                self.chain.insert((lid, d, phase_key(Phase::Bwd)), id);
-                bwd_tasks.push((id, vec![d]));
+                    deps,
+                    chain_key: Some((lid, d, common::phase_key(Phase::Bwd))),
+                    own_fwd: Some((lid, d)),
+                    stage_first_fwd: false,
+                    stage_first_bwd: stage_first,
+                    touch_once: Vec::new(),
+                });
+                bwd_tasks.push((tref, vec![d]));
                 for bufs in &saved_bufs {
-                    for &b in bufs {
-                        if self.bufs[b].device == d && self.bufs[b].last_use < id {
-                            self.bufs[b].last_use = id;
-                        }
-                    }
+                    self.touch_bufs_on(bufs, &[d], tref);
                 }
             }
         }
@@ -976,216 +852,18 @@ impl<'a> Emitter<'a> {
             if self.graph.tensors[t].producer.is_none() {
                 continue; // graph inputs need no gradient
             }
-            self.grads.entry((t, m)).or_default().push(GradContrib {
+            self.grads.entry(t).or_default().push(TGrad {
                 layout: gl.clone(),
                 tasks: bwd_tasks.clone(),
             });
         }
         for (p, gl) in layer.params.iter().zip(&param_grad) {
             let t = p.tensor;
-            self.param_grads.entry(t).or_default().push(GradContrib {
+            self.param_grads.entry(t).or_default().push(TGrad {
                 layout: gl.clone(),
                 tasks: bwd_tasks.clone(),
             });
         }
-
-        // 5. Stage-completion bookkeeping for max_ongoing control.
-        if self.r.stages[stage].layers.first() == Some(&lid) {
-            self.stage_bwd_done
-                .entry((stage, m))
-                .or_default()
-                .extend(bwd_tasks.iter().map(|(id, _)| *id));
-        }
         Ok(())
     }
-
-    // ------------------------------------------- gradient sync + optimizer
-
-    fn emit_param_sync_and_optimizer(&mut self) -> Result<()> {
-        // Per-device optimizer dependencies.
-        let mut opt_deps: HashMap<DeviceId, Vec<TaskId>> = HashMap::new();
-        let param_grads = std::mem::take(&mut self.param_grads);
-        for (t, contribs) in param_grads {
-            let stored = self.r.mem[t].clone();
-            let bytes = self.graph.tensors[t].bytes();
-            for c in contribs {
-                let ops = transform(&c.layout, &stored, bytes);
-                if ops.is_empty() {
-                    for (id, devs) in &c.tasks {
-                        for &d in devs {
-                            opt_deps.entry(d).or_default().push(*id);
-                        }
-                    }
-                    continue;
-                }
-                let src = Instance {
-                    layout: c.layout.clone(),
-                    tasks: c.tasks.clone(),
-                    bufs: Vec::new(),
-                };
-                let stage = 0;
-                let comm_tasks = {
-                    let deps_of = |op: &CommOp| -> Vec<TaskId> {
-                        // Gradient sync waits for every micro-batch's
-                        // local accumulation on the group devices.
-                        let mut deps = Vec::new();
-                        for &d in &op.group {
-                            deps.extend(Self::deps_for_device(&src, d));
-                        }
-                        deps.sort_unstable();
-                        deps.dedup();
-                        deps
-                    };
-                    self.emit_comms(
-                        &ops,
-                        &deps_of,
-                        CommClass::Gradient,
-                        Phase::Bwd,
-                        stage,
-                        (self.n_micro - 1) as u32,
-                        self.graph.tensors[t].producer,
-                    )
-                };
-                for (id, group) in &comm_tasks {
-                    for &d in group {
-                        opt_deps.entry(d).or_default().push(*id);
-                    }
-                }
-            }
-        }
-        // Parameter elements stored per device (drives optimizer flops).
-        let mut local_params: HashMap<DeviceId, f64> = HashMap::new();
-        for t in &self.graph.tensors {
-            if t.kind != TensorKind::Param {
-                continue;
-            }
-            let layout = &self.r.mem[t.id];
-            let per_part = t.numel() as f64 / layout.n_parts() as f64;
-            for p in &layout.parts {
-                for d in p.device_set() {
-                    *local_params.entry(d).or_default() += per_part;
-                }
-            }
-        }
-        let mut devices: Vec<DeviceId> = local_params.keys().copied().collect();
-        devices.sort_unstable();
-        for d in devices {
-            let elems = local_params[&d];
-            let mut deps = opt_deps.remove(&d).unwrap_or_default();
-            deps.sort_unstable();
-            deps.dedup();
-            self.add_task(
-                Task {
-                    kind: TaskKind::Comp(CompTask {
-                        device: d,
-                        op: OpKind::Elementwise,
-                        flops: 10.0 * elems,
-                        bytes_read: 16.0 * elems,
-                        bytes_written: 12.0 * elems,
-                    }),
-                    layer: None,
-                    stage: 0,
-                    micro: 0,
-                    phase: Phase::Optim,
-                    allocs: Vec::new(),
-                    frees: Vec::new(),
-                },
-                &deps,
-            );
-        }
-        Ok(())
-    }
-
-    // ------------------------------------------------------------- memory
-
-    fn finalize_buffers(&mut self) {
-        let bufs = std::mem::take(&mut self.bufs);
-        for b in bufs {
-            self.tasks[b.alloc_task].allocs.push((b.device, b.bytes));
-            self.tasks[b.last_use].frees.push((b.device, b.bytes));
-        }
-    }
-
-    fn static_memory(&self) -> Vec<u64> {
-        let mut mem = vec![0u64; self.n_devices];
-        for t in &self.graph.tensors {
-            if t.kind != TensorKind::Param {
-                continue;
-            }
-            let layout = &self.r.mem[t.id];
-            let part_bytes = layout.part_bytes(t.bytes());
-            for p in &layout.parts {
-                for d in p.device_set() {
-                    // param + gradient + 2 Adam moments.
-                    mem[d] += part_bytes * 4;
-                }
-            }
-        }
-        mem
-    }
-}
-
-fn phase_key(p: Phase) -> u8 {
-    match p {
-        Phase::Fwd => 0,
-        Phase::Bwd => 1,
-        Phase::Recomp => 2,
-        Phase::Optim => 3,
-    }
-}
-
-/// Compute segments: within each stage, the contiguous top-level-module
-/// runs. Under recomputation the runs are the Megatron-style per-block
-/// checkpointing units; they double as the units interleaved schedules
-/// group into virtual-stage chunks. (For non-recompute, non-interleaved
-/// strategies the finer granularity is emission-order-neutral: forward
-/// walks segments in order, backward in reverse.)
-fn make_segments(graph: &Graph, r: &ResolvedStrategy) -> Vec<Segment> {
-    let consumers = graph.consumers();
-    let mut segments = Vec::new();
-    for stage in &r.stages {
-        let runs: Vec<Vec<LayerId>> = {
-            let mut runs: Vec<Vec<LayerId>> = Vec::new();
-            let mut last_key: Option<&str> = None;
-            for &l in &stage.layers {
-                let layer = &graph.layers[l];
-                let key = if layer.path.len() > 1 {
-                    Some(layer.path[0].as_str())
-                } else {
-                    None
-                };
-                if key.is_some() && key == last_key {
-                    runs.last_mut().unwrap().push(l);
-                } else {
-                    runs.push(vec![l]);
-                }
-                last_key = key;
-            }
-            runs
-        };
-        for layers in runs {
-            let in_seg = |l: LayerId| layers.contains(&l);
-            let mut boundary = Vec::new();
-            for &l in &layers {
-                for out in &graph.layers[l].outputs {
-                    let outside = consumers[out.tensor]
-                        .iter()
-                        .any(|&c| !in_seg(c))
-                        || consumers[out.tensor].is_empty();
-                    if outside {
-                        boundary.push(out.tensor);
-                    }
-                }
-            }
-            segments.push(Segment {
-                stage: stage.id,
-                layers,
-                recompute: stage.schedule.recompute,
-                boundary,
-            });
-        }
-    }
-    // Ensure global layer order across segments.
-    segments.sort_by_key(|s| s.layers[0]);
-    segments
 }

@@ -1,0 +1,555 @@
+//! Passes 2–4 — **weave**, **instantiate**, **finalize**.
+//!
+//! - **Weave** lowers the candidate's pipeline schedule
+//!   ([`super::schedule::lower`]) into the global slot order and groups
+//!   the template's segments into virtual-stage chunks.
+//! - **Instantiate** stamps each slot template once per `(chunk, micro,
+//!   phase)` step of the woven order. Stamping is pure id-offset
+//!   relabeling: a symbolic dep `Slot { slot, idx }` resolves to
+//!   `slot_base[slot][micro] + idx`. The cross-micro control structure
+//!   (micro-chaining, backward-after-own-forward, per-device slot
+//!   chaining, `max_ongoing` bounding) is *replayed* with the same
+//!   stateful maps the monolithic emitter used, so the stamped graph is
+//!   task-for-task equivalent to the legacy output.
+//! - **Finalize** expands parameter-gradient contributions across
+//!   micro-batches into gradient-synchronization communication, emits
+//!   optimizer tasks, attaches buffer alloc/free events, computes static
+//!   memory, and packs everything into the structure-of-arrays
+//!   [`ExecGraph`].
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::cluster::DeviceId;
+use crate::graph::{Graph, LayerId, OpKind, TensorId, TensorKind};
+use crate::strategy::ResolvedStrategy;
+use crate::Result;
+
+use super::common;
+use super::emit::{bwd_slot, fwd_slot, ExecTemplate, TGrad, TRef};
+use super::schedule::{self, SlotPhase, StageSegments};
+use super::transform::{transform, CommOp};
+use super::{
+    CommClass, CommTask, CompTask, CompileStats, ExecGraph, ExecMeta, InstanceSpan, Phase, Task,
+    TaskId, TaskKind,
+};
+
+/// Run passes 2–4 (see module docs). `stats` arrives with pass-1 fields
+/// filled; the remaining fields are filled here.
+pub(super) fn instantiate(
+    graph: &Graph,
+    r: &ResolvedStrategy,
+    tmpl: &ExecTemplate,
+    stats: &mut CompileStats,
+) -> Result<ExecGraph> {
+    // ---- Pass 2: weave. ------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let n_segs = tmpl.seg_stage.len();
+    let mut inputs: Vec<StageSegments> = r
+        .stages
+        .iter()
+        .map(|s| StageSegments {
+            schedule: s.schedule,
+            seg_weights: Vec::new(),
+        })
+        .collect();
+    let mut flat_to_seg: Vec<usize> = Vec::with_capacity(n_segs);
+    for st in 0..r.stages.len() {
+        for si in 0..n_segs {
+            if tmpl.seg_stage[si] == st {
+                inputs[st].seg_weights.push(tmpl.seg_weight[si]);
+                flat_to_seg.push(si);
+            }
+        }
+    }
+    let plan = schedule::lower(&inputs, tmpl.n_micro)?;
+    let chunk_segs: Vec<Vec<usize>> = match &plan {
+        Some(p) => {
+            let mut cs = vec![Vec::new(); p.n_chunks];
+            for (flat, &c) in p.chunk_of_seg.iter().enumerate() {
+                cs[c].push(flat_to_seg[flat]);
+            }
+            cs
+        }
+        None => Vec::new(),
+    };
+    stats.n_chunks = plan.as_ref().map(|p| p.n_chunks).unwrap_or(0);
+    stats.weave_s = t0.elapsed().as_secs_f64();
+
+    // ---- Pass 3: instantiate. ------------------------------------------
+    let t1 = std::time::Instant::now();
+    let n_micro = tmpl.n_micro;
+    // Anchored preamble tasks: which preamble indices to stamp in front
+    // of template task `idx` of slot `slot` in the micro-0 instance
+    // (reproducing the monolithic emitter's exact id positions, so the
+    // executor's id-ordered comm arbitration is preserved).
+    let mut anchored: HashMap<(u32, u32), Vec<u32>> = HashMap::new();
+    for (pi, p) in tmpl.preamble.iter().enumerate() {
+        anchored.entry(p.anchor).or_default().push(pi as u32);
+    }
+    // Once-buffers allocated by each preamble task.
+    let mut bufs_of_pre: Vec<Vec<usize>> = vec![Vec::new(); tmpl.preamble.len()];
+    for (bi, ob) in tmpl.once_bufs.iter().enumerate() {
+        bufs_of_pre[ob.alloc as usize].push(bi);
+    }
+    let mut s = Stamper {
+        tmpl,
+        r,
+        pipelined: plan.is_some(),
+        tasks: Vec::new(),
+        succs: Vec::new(),
+        preds: Vec::new(),
+        slot_base: vec![vec![0u32; n_micro]; tmpl.slots.len()],
+        slot_ids0: tmpl.slots.iter().map(|sl| vec![0u32; sl.len()]).collect(),
+        once_ids: vec![usize::MAX; tmpl.preamble.len()],
+        anchored,
+        bufs_of_pre,
+        chain: HashMap::new(),
+        slot_chain: HashMap::new(),
+        stage_bwd_done: HashMap::new(),
+        once_last_use: vec![usize::MAX; tmpl.once_bufs.len()],
+        spans: Vec::with_capacity(tmpl.slots.len() * n_micro),
+        n_deps: 0,
+    };
+    match &plan {
+        // Single stage: the classic per-micro order (forward then
+        // backward, micro by micro); no slot chaining, `max_ongoing`
+        // alone bounds memory.
+        None => {
+            for m in 0..n_micro as u32 {
+                for si in 0..n_segs {
+                    s.stamp_slot(fwd_slot(si), m);
+                }
+                for si in (0..n_segs).rev() {
+                    s.stamp_slot(bwd_slot(si), m);
+                }
+            }
+        }
+        // Pipelined: walk the woven order; each step stamps its chunk's
+        // segment slots and chains them after the device's previous
+        // slot.
+        Some(p) => {
+            for step in &p.order {
+                let start = s.tasks.len();
+                match step.phase {
+                    SlotPhase::Forward => {
+                        for &si in &chunk_segs[step.chunk] {
+                            s.stamp_slot(fwd_slot(si), step.micro);
+                        }
+                    }
+                    SlotPhase::Backward => {
+                        for &si in chunk_segs[step.chunk].iter().rev() {
+                            s.stamp_slot(bwd_slot(si), step.micro);
+                        }
+                    }
+                }
+                s.chain_step(start);
+            }
+        }
+    }
+    stats.instantiate_s = t1.elapsed().as_secs_f64();
+
+    // ---- Pass 4: finalize. ---------------------------------------------
+    let t2 = std::time::Instant::now();
+    s.emit_param_sync_and_optimizer(graph);
+    // Buffer alloc/free placement.
+    for (bi, ob) in tmpl.once_bufs.iter().enumerate() {
+        let alloc = s.once_ids[ob.alloc as usize];
+        let last = s.once_last_use[bi];
+        debug_assert!(alloc != usize::MAX && last != usize::MAX);
+        s.tasks[alloc].allocs.push((ob.device, ob.bytes));
+        s.tasks[last].frees.push((ob.device, ob.bytes));
+    }
+    for b in &tmpl.bufs {
+        for m in 0..n_micro as u32 {
+            let a = s.resolve(b.alloc, m);
+            let l = s.resolve(b.last_use, m);
+            s.tasks[a].allocs.push((b.device, b.bytes));
+            s.tasks[l].frees.push((b.device, b.bytes));
+        }
+    }
+    let meta = ExecMeta {
+        n_stages: r.stages.len(),
+        n_devices: tmpl.n_devices,
+        static_mem: static_memory(graph, r, tmpl.n_devices),
+        batch: graph.batch_size,
+        stage_schedule: r.stages.iter().map(|st| st.schedule).collect(),
+    };
+    stats.n_tasks = s.tasks.len();
+    stats.n_deps = s.n_deps;
+    stats.instance_spans = std::mem::take(&mut s.spans);
+    let eg = ExecGraph::from_tasks(s.tasks, s.succs, s.preds, meta);
+    stats.finalize_s = t2.elapsed().as_secs_f64();
+    Ok(eg)
+}
+
+struct Stamper<'a> {
+    tmpl: &'a ExecTemplate,
+    r: &'a ResolvedStrategy,
+    pipelined: bool,
+    tasks: Vec<Task>,
+    succs: Vec<Vec<TaskId>>,
+    preds: Vec<u32>,
+    /// First task id of each stamped `(slot, micro)` instance.
+    slot_base: Vec<Vec<u32>>,
+    /// Exact id of every template task in the **micro-0** instance —
+    /// micro 0 interleaves anchored preamble tasks, so it is not pure
+    /// base + offset like the other instances.
+    slot_ids0: Vec<Vec<u32>>,
+    /// Stamped id of each preamble task (filled during micro 0).
+    once_ids: Vec<TaskId>,
+    /// Preamble indices anchored in front of `(slot, idx)` (micro 0).
+    anchored: HashMap<(u32, u32), Vec<u32>>,
+    /// Once-buffers allocated by each preamble task.
+    bufs_of_pre: Vec<Vec<usize>>,
+    /// Last comp task per (layer, device, phase) — micro-chaining.
+    chain: HashMap<(LayerId, DeviceId, u8), TaskId>,
+    /// Last comp task per device of the previously stamped step.
+    slot_chain: HashMap<DeviceId, TaskId>,
+    /// Last bwd task of each stage's first layer per micro.
+    stage_bwd_done: HashMap<(usize, u32), Vec<TaskId>>,
+    /// Latest stamped reader of each once-buffer.
+    once_last_use: Vec<TaskId>,
+    spans: Vec<InstanceSpan>,
+    n_deps: usize,
+}
+
+impl<'a> Stamper<'a> {
+    fn resolve(&self, r: TRef, micro: u32) -> TaskId {
+        match r {
+            TRef::Once(i) => {
+                let id = self.once_ids[i as usize];
+                debug_assert!(id != usize::MAX, "preamble task referenced before stamp");
+                id
+            }
+            TRef::Slot { slot, idx } if micro == 0 => {
+                self.slot_ids0[slot as usize][idx as usize] as TaskId
+            }
+            TRef::Slot { slot, idx } => {
+                self.slot_base[slot as usize][micro as usize] as TaskId + idx as TaskId
+            }
+        }
+    }
+
+    /// Stamp one anchored preamble task (micro-0 instances only).
+    fn stamp_preamble(&mut self, pi: u32) {
+        let id = self.tasks.len();
+        self.tasks.push(self.tmpl.preamble[pi as usize].task.clone());
+        self.succs.push(Vec::new());
+        self.preds.push(0);
+        self.once_ids[pi as usize] = id;
+        for &b in &self.bufs_of_pre[pi as usize] {
+            self.once_last_use[b] = id;
+        }
+    }
+
+    fn add_dep(&mut self, from: TaskId, to: TaskId) {
+        if from == to {
+            return;
+        }
+        debug_assert!(from < to);
+        self.succs[from].push(to);
+        self.preds[to] += 1;
+        self.n_deps += 1;
+    }
+
+    /// Stamp one slot template instance for micro `m`.
+    fn stamp_slot(&mut self, slot: usize, m: u32) {
+        // Copy the template reference out of `self` so borrows of
+        // template data don't conflict with `&mut self` below.
+        let tmpl = self.tmpl;
+        let base = self.tasks.len();
+        // Micro 0 is NOT base + offset (anchored preamble tasks
+        // interleave): resolve() routes it through `slot_ids0`, so no
+        // base is recorded for it — reading one would be a bug.
+        if m > 0 {
+            self.slot_base[slot][m as usize] = base as u32;
+        }
+        self.spans.push(InstanceSpan {
+            slot: slot as u32,
+            micro: m,
+            start: base as u32,
+            len: tmpl.slots[slot].len() as u32,
+        });
+        let mut deps: Vec<TaskId> = Vec::new();
+        for ti in 0..tmpl.slots[slot].len() {
+            // Micro 0 interleaves the anchored preamble tasks at their
+            // original (monolithic) positions.
+            if m == 0 {
+                if let Some(pis) = self.anchored.get(&(slot as u32, ti as u32)) {
+                    let pis = pis.clone();
+                    for pi in pis {
+                        self.stamp_preamble(pi);
+                    }
+                }
+            }
+            let tt = &tmpl.slots[slot][ti];
+            deps.clear();
+            for &d in &tt.deps {
+                deps.push(self.resolve(d, m));
+            }
+            if let Some(key) = tt.chain_key {
+                if let Some(&prev) = self.chain.get(&key) {
+                    deps.push(prev);
+                }
+            }
+            if let Some((lid, dev)) = tt.own_fwd {
+                // Must run after our own (re)computed forward.
+                if let Some(&fwd) = self
+                    .chain
+                    .get(&(lid, dev, common::phase_key(Phase::Recomp)))
+                    .or_else(|| self.chain.get(&(lid, dev, common::phase_key(Phase::Fwd))))
+                {
+                    deps.push(fwd);
+                }
+            }
+            // max_ongoing: only on the single-stage legacy path —
+            // pipelined graphs fold the bound into the woven slot order.
+            if tt.stage_first_fwd && !self.pipelined {
+                let mo = self.r.stages[tt.task.stage].schedule.max_ongoing_micro_batch;
+                if mo != usize::MAX {
+                    let k = mo as u32;
+                    if m >= k {
+                        if let Some(ts) = self.stage_bwd_done.get(&(tt.task.stage, m - k)) {
+                            deps.extend(ts.iter().copied());
+                        }
+                    }
+                }
+            }
+            deps.sort_unstable();
+            deps.dedup();
+            let id = self.tasks.len();
+            if m == 0 {
+                self.slot_ids0[slot][ti] = id as u32;
+            }
+            let mut task = tt.task.clone();
+            task.micro = m;
+            self.tasks.push(task);
+            self.succs.push(Vec::new());
+            self.preds.push(0);
+            for &d in &deps {
+                debug_assert!(d < id);
+                self.succs[d].push(id);
+                self.preds[id] += 1;
+            }
+            self.n_deps += deps.len();
+            if let Some(key) = tt.chain_key {
+                self.chain.insert(key, id);
+            }
+            if tt.stage_first_bwd {
+                self.stage_bwd_done
+                    .entry((tt.task.stage, m))
+                    .or_default()
+                    .push(id);
+            }
+            for &ob in &tt.touch_once {
+                self.once_last_use[ob as usize] = id;
+            }
+        }
+        // Defensive: a preamble task anchored at the slot's end (cannot
+        // happen today — gathers always precede their consumer's comp
+        // tasks — but must never be silently dropped).
+        if m == 0 {
+            let end = tmpl.slots[slot].len() as u32;
+            if let Some(pis) = self.anchored.get(&(slot as u32, end)) {
+                let pis = pis.clone();
+                for pi in pis {
+                    self.stamp_preamble(pi);
+                }
+            }
+        }
+    }
+
+    /// Chain the comp tasks stamped since `start` after the device's
+    /// previously stamped step (per device, not per chunk — interleaved
+    /// chunks sharing a device serialize in the woven global order).
+    fn chain_step(&mut self, start: TaskId) {
+        let end = self.tasks.len();
+        let mut last: BTreeMap<DeviceId, TaskId> = BTreeMap::new();
+        for id in start..end {
+            let d = match &self.tasks[id].kind {
+                TaskKind::Comp(c) => c.device,
+                TaskKind::Comm(_) => continue,
+            };
+            if let Some(&prev) = self.slot_chain.get(&d) {
+                self.add_dep(prev, id);
+            }
+            last.insert(d, id);
+        }
+        for (d, id) in last {
+            self.slot_chain.insert(d, id);
+        }
+    }
+
+    /// Expand the template's parameter-gradient contribution patterns
+    /// across micro-batches, emit gradient-sync communication, then the
+    /// per-device optimizer tasks.
+    fn emit_param_sync_and_optimizer(&mut self, graph: &Graph) {
+        let tmpl = self.tmpl;
+        let r = self.r;
+        let mut opt_deps: HashMap<DeviceId, Vec<TaskId>> = HashMap::new();
+        let n_micro = tmpl.n_micro as u32;
+        for (&t, patterns) in &tmpl.param_grads {
+            let stored = &r.mem[t];
+            let bytes = graph.tensors[t].bytes();
+            // One contribution instance per (pattern, micro), ordered by
+            // the id of its first backward task — the order the
+            // monolithic emitter pushed them in.
+            let mut instances: Vec<(TaskId, &TGrad, u32)> = Vec::new();
+            for pat in patterns {
+                for m in 0..n_micro {
+                    let first = pat
+                        .tasks
+                        .first()
+                        .map(|(tr, _)| self.resolve(*tr, m))
+                        .unwrap_or(0);
+                    instances.push((first, pat, m));
+                }
+            }
+            instances.sort_by_key(|&(first, _, _)| first);
+            for (_, pat, m) in instances {
+                let ops = transform(&pat.layout, stored, bytes);
+                let inst_tasks: Vec<(TaskId, &[DeviceId])> = pat
+                    .tasks
+                    .iter()
+                    .map(|(tr, devs)| (self.resolve(*tr, m), devs.as_slice()))
+                    .collect();
+                if ops.is_empty() {
+                    for (id, devs) in &inst_tasks {
+                        for &d in *devs {
+                            opt_deps.entry(d).or_default().push(*id);
+                        }
+                    }
+                    continue;
+                }
+                for op in &ops {
+                    // Gradient sync waits for every micro-batch's local
+                    // accumulation on the group devices.
+                    let deps = Self::deps_for_group(&inst_tasks, op);
+                    let id = self.add_sync_comm(graph, t, op, &deps, n_micro);
+                    for &d in &op.group {
+                        opt_deps.entry(d).or_default().push(id);
+                    }
+                }
+            }
+        }
+        // Parameter elements stored per device (drives optimizer flops).
+        let mut local_params: HashMap<DeviceId, f64> = HashMap::new();
+        for t in &graph.tensors {
+            if t.kind != TensorKind::Param {
+                continue;
+            }
+            let layout = &r.mem[t.id];
+            let per_part = t.numel() as f64 / layout.n_parts() as f64;
+            for p in &layout.parts {
+                for d in p.device_set() {
+                    *local_params.entry(d).or_default() += per_part;
+                }
+            }
+        }
+        let mut devices: Vec<DeviceId> = local_params.keys().copied().collect();
+        devices.sort_unstable();
+        for d in devices {
+            let elems = local_params[&d];
+            let mut deps = opt_deps.remove(&d).unwrap_or_default();
+            deps.sort_unstable();
+            deps.dedup();
+            let id = self.tasks.len();
+            self.tasks.push(Task {
+                kind: TaskKind::Comp(CompTask {
+                    device: d,
+                    op: OpKind::Elementwise,
+                    flops: 10.0 * elems,
+                    bytes_read: 16.0 * elems,
+                    bytes_written: 12.0 * elems,
+                }),
+                layer: None,
+                stage: 0,
+                micro: 0,
+                phase: Phase::Optim,
+                allocs: Vec::new(),
+                frees: Vec::new(),
+            });
+            self.succs.push(Vec::new());
+            self.preds.push(0);
+            for &from in &deps {
+                self.succs[from].push(id);
+                self.preds[id] += 1;
+            }
+            self.n_deps += deps.len();
+        }
+    }
+
+    /// Dependencies of one sync collective: the covering producer tasks
+    /// of every group device, sorted + deduped.
+    fn deps_for_group(inst_tasks: &[(TaskId, &[DeviceId])], op: &CommOp) -> Vec<TaskId> {
+        let mut deps = Vec::new();
+        for &d in &op.group {
+            let covering: Vec<TaskId> = inst_tasks
+                .iter()
+                .filter(|(_, devs)| devs.contains(&d))
+                .map(|(t, _)| *t)
+                .collect();
+            if covering.is_empty() {
+                deps.extend(inst_tasks.iter().map(|(t, _)| *t));
+            } else {
+                deps.extend(covering);
+            }
+        }
+        deps.sort_unstable();
+        deps.dedup();
+        deps
+    }
+
+    fn add_sync_comm(
+        &mut self,
+        graph: &Graph,
+        tensor: TensorId,
+        op: &CommOp,
+        deps: &[TaskId],
+        n_micro: u32,
+    ) -> TaskId {
+        let id = self.tasks.len();
+        self.tasks.push(Task {
+            kind: TaskKind::Comm(CommTask {
+                kind: op.kind,
+                group: op.group.clone(),
+                bytes: op.bytes,
+                class: CommClass::Gradient,
+            }),
+            layer: graph.tensors[tensor].producer,
+            stage: 0,
+            micro: n_micro - 1,
+            phase: Phase::Bwd,
+            allocs: Vec::new(),
+            frees: Vec::new(),
+        });
+        self.succs.push(Vec::new());
+        self.preds.push(0);
+        for &from in deps {
+            debug_assert!(from < id);
+            self.succs[from].push(id);
+            self.preds[id] += 1;
+        }
+        self.n_deps += deps.len();
+        id
+    }
+}
+
+/// Per-device static memory: parameters + gradients + optimizer state.
+fn static_memory(graph: &Graph, r: &ResolvedStrategy, n_devices: usize) -> Vec<u64> {
+    let mut mem = vec![0u64; n_devices];
+    for t in &graph.tensors {
+        if t.kind != TensorKind::Param {
+            continue;
+        }
+        let layout = &r.mem[t.id];
+        let part_bytes = layout.part_bytes(t.bytes());
+        for p in &layout.parts {
+            for d in p.device_set() {
+                // param + gradient + 2 Adam moments.
+                mem[d] += part_bytes * 4;
+            }
+        }
+    }
+    mem
+}

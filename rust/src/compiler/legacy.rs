@@ -1,0 +1,1044 @@
+//! The **pre-refactor monolithic emitter**, retained as the semantic
+//! oracle for the pass pipeline (exactly as `emulator/reference.rs` is
+//! retained for the event-driven engine).
+//!
+//! It walks the resolved strategy **once per micro-batch**, re-running
+//! strategy-transformation inference and dependency assembly every time
+//! — the O(micro × model) compile cost the template/instantiate split
+//! eliminates. [`super::compile_legacy`] runs it; the golden equivalence
+//! suite (`rust/tests/golden_compiler.rs`) pins the pipeline's output
+//! against it: identical task multiset, identical makespan, identical
+//! memory events.
+//!
+//! Scope of the oracle: the *emission structure* (per-micro walks,
+//! dependency assembly, buffer lifetimes, schedule chaining) is kept
+//! unchanged and fully independent of the pass pipeline. The pure
+//! per-layer layout/feature math and segmentation were moved verbatim
+//! into `common.rs` and are shared with the pipeline — so the golden
+//! suite pins emission equivalence, while that shared math stays pinned
+//! by the pre-existing compiler/strategy unit tests (layout counts,
+//! FLOP conservation, static memory, Megatron/DLRM comm patterns).
+//!
+//! Do not extend this module — new compiler features belong in the pass
+//! pipeline ([`super::emit`] / [`super::instantiate`]); this file only
+//! changes when a divergence bug is fixed on both sides.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::graph::{Graph, LayerId, OpKind, TensorId, TensorKind};
+use crate::strategy::{ResolvedStrategy, TensorLayout};
+use crate::{Error, Result};
+
+use super::common::{self, Segment};
+use super::schedule::{self, SchedulePlan, SlotPhase, StageSegments};
+use super::transform::{transform, CollectiveKind, CommOp};
+use super::{
+    CommClass, CommTask, CompTask, ExecGraph, ExecMeta, Phase, Task, TaskId, TaskKind,
+};
+
+/// A materialized version of a tensor (original production or the result
+/// of a strategy transformation).
+#[derive(Debug, Clone)]
+struct Instance {
+    layout: TensorLayout,
+    /// Producing tasks and the devices whose copies they cover.
+    tasks: Vec<(TaskId, Vec<DeviceId>)>,
+    /// Buffers backing this instance (for memory tracking).
+    bufs: Vec<usize>,
+}
+
+/// A tracked activation buffer.
+#[derive(Debug, Clone)]
+struct Buffer {
+    device: DeviceId,
+    bytes: u64,
+    alloc_task: TaskId,
+    last_use: TaskId,
+}
+
+/// A gradient contribution for a tensor from one consumer's backward.
+#[derive(Debug, Clone)]
+struct GradContrib {
+    layout: TensorLayout,
+    tasks: Vec<(TaskId, Vec<DeviceId>)>,
+}
+
+pub(super) struct Emitter<'a> {
+    graph: &'a Graph,
+    r: &'a ResolvedStrategy,
+    n_micro: usize,
+    n_devices: usize,
+    tasks: Vec<Task>,
+    succs: Vec<Vec<TaskId>>,
+    preds: Vec<u32>,
+    bufs: Vec<Buffer>,
+    /// Materialized versions per (tensor, micro).
+    avail: HashMap<(TensorId, u32), Vec<Instance>>,
+    /// Activation-gradient contributions per (tensor, micro).
+    grads: HashMap<(TensorId, u32), Vec<GradContrib>>,
+    /// Parameter gradient contributions (accumulated over micros).
+    param_grads: BTreeMap<TensorId, Vec<GradContrib>>,
+    /// Cached parameter gathers per (tensor, consumer layer).
+    param_ready: HashMap<(TensorId, LayerId), Instance>,
+    /// Last comp task per (layer, device, phase) for micro-chaining.
+    chain: HashMap<(LayerId, DeviceId, u8), TaskId>,
+    /// Last bwd task of each stage's first layer per micro (for
+    /// max_ongoing control deps).
+    stage_bwd_done: HashMap<(usize, u32), Vec<TaskId>>,
+    /// Recompute segments: contiguous layer ranges (stage-local).
+    segments: Vec<Segment>,
+    /// Lowered pipeline schedule (`None` = single-stage legacy order).
+    plan: Option<SchedulePlan>,
+    /// Segment indices of each virtual stage (chunk), model order.
+    chunk_segs: Vec<Vec<usize>>,
+    /// Last comp task per device of the previously emitted slot —
+    /// consecutive slots chain through these, turning the schedule's
+    /// per-device total order into control edges. Keyed by device alone
+    /// (not per chunk) so that interleaved chunks sharing a device are
+    /// serialized in the lowered global order too.
+    slot_chain: HashMap<DeviceId, TaskId>,
+    /// Per-layer layout/feature cache (micro-independent).
+    layer_cache: Vec<Option<common::LayerCache>>,
+}
+
+impl<'a> Emitter<'a> {
+    pub(super) fn new(
+        graph: &'a Graph,
+        r: &'a ResolvedStrategy,
+        cluster: &'a Cluster,
+    ) -> Result<Self> {
+        // All stages must agree on micro-batch count (the root schedule
+        // propagates; differing counts are not supported).
+        let n_micro = r.stages[0].schedule.n_micro_batch;
+        for s in &r.stages {
+            if s.schedule.n_micro_batch != n_micro {
+                return Err(Error::compile(
+                    "stages with differing n_micro_batch are unsupported",
+                ));
+            }
+        }
+        let n_devices = r
+            .comp
+            .iter()
+            .flat_map(|c| c.devices.iter().copied())
+            .max()
+            .map(|d| d + 1)
+            .unwrap_or(1);
+        if n_devices > cluster.num_devices() {
+            return Err(Error::compile(format!(
+                "strategy uses device {} but cluster has {}",
+                n_devices - 1,
+                cluster.num_devices()
+            )));
+        }
+        // Batch divisibility.
+        for l in &graph.layers {
+            let dp = r.comp[l.id].degree("b");
+            if dp * n_micro > graph.batch_size {
+                return Err(Error::compile(format!(
+                    "layer '{}': b split {dp} × {n_micro} micro-batches exceeds batch {}",
+                    l.name, graph.batch_size
+                )));
+            }
+        }
+        let segments = common::make_segments(graph, r);
+        // Lower the pipeline schedule into chunk slot sequences plus the
+        // global emission order (None for single-stage strategies). The
+        // lowering sees segments in stage-major order; `flat_to_seg`
+        // maps its flat indices back to `segments`.
+        let mut inputs: Vec<StageSegments> = r
+            .stages
+            .iter()
+            .map(|s| StageSegments {
+                schedule: s.schedule,
+                seg_weights: Vec::new(),
+            })
+            .collect();
+        let mut flat_to_seg: Vec<usize> = Vec::with_capacity(segments.len());
+        for st in 0..r.stages.len() {
+            for (si, seg) in segments.iter().enumerate() {
+                if seg.stage == st {
+                    let w: f64 = seg
+                        .layers
+                        .iter()
+                        .map(|&l| graph.layers[l].fwd_flops() as f64)
+                        .sum();
+                    inputs[st].seg_weights.push(w.max(1.0));
+                    flat_to_seg.push(si);
+                }
+            }
+        }
+        let plan = schedule::lower(&inputs, n_micro)?;
+        let chunk_segs = match &plan {
+            Some(p) => {
+                let mut cs = vec![Vec::new(); p.n_chunks];
+                for (flat, &c) in p.chunk_of_seg.iter().enumerate() {
+                    cs[c].push(flat_to_seg[flat]);
+                }
+                cs
+            }
+            None => Vec::new(),
+        };
+        Ok(Emitter {
+            graph,
+            r,
+            n_micro,
+            n_devices,
+            tasks: Vec::new(),
+            succs: Vec::new(),
+            preds: Vec::new(),
+            bufs: Vec::new(),
+            avail: HashMap::new(),
+            grads: HashMap::new(),
+            param_grads: BTreeMap::new(),
+            param_ready: HashMap::new(),
+            chain: HashMap::new(),
+            stage_bwd_done: HashMap::new(),
+            segments,
+            plan,
+            chunk_segs,
+            slot_chain: HashMap::new(),
+            layer_cache: (0..graph.layers.len()).map(|_| None).collect(),
+        })
+    }
+
+    /// Build (once) and return the layout cache of a layer.
+    fn cache_for(&mut self, lid: LayerId) -> &common::LayerCache {
+        if self.layer_cache[lid].is_none() {
+            self.layer_cache[lid] =
+                Some(common::build_layer_cache(self.graph, self.r, self.n_micro, lid));
+        }
+        self.layer_cache[lid].as_ref().unwrap()
+    }
+
+    pub(super) fn emit(mut self) -> Result<ExecGraph> {
+        match self.plan.as_ref().map(|p| p.order.clone()) {
+            // Single stage: the classic per-micro order (forward then
+            // backward, micro by micro). There is no pipeline to
+            // schedule; `max_ongoing_micro_batch` alone bounds memory.
+            None => {
+                for m in 0..self.n_micro as u32 {
+                    self.emit_forward(m)?;
+                    self.emit_backward(m)?;
+                }
+            }
+            // Pipelined: walk the lowered schedule's global order. Task
+            // ids then form a topological order of the schedule, and
+            // consecutive slots of a chunk are chained per device.
+            Some(order) => {
+                for step in order {
+                    match step.phase {
+                        SlotPhase::Forward => self.emit_chunk_fwd(step.chunk, step.micro)?,
+                        SlotPhase::Backward => self.emit_chunk_bwd(step.chunk, step.micro)?,
+                    }
+                }
+            }
+        }
+        self.emit_param_sync_and_optimizer()?;
+        self.finalize_buffers();
+        let stage_schedule = self.r.stages.iter().map(|s| s.schedule).collect();
+        let meta = ExecMeta {
+            n_stages: self.r.stages.len(),
+            n_devices: self.n_devices,
+            static_mem: self.static_memory(),
+            batch: self.graph.batch_size,
+            stage_schedule,
+        };
+        Ok(ExecGraph::from_tasks(self.tasks, self.succs, self.preds, meta))
+    }
+
+    // ---------------------------------------------------------------- core
+
+    fn add_task(&mut self, task: Task, deps: &[TaskId]) -> TaskId {
+        let id = self.tasks.len();
+        self.tasks.push(task);
+        self.succs.push(Vec::new());
+        self.preds.push(0);
+        for &d in deps {
+            debug_assert!(d < id);
+            self.succs[d].push(id);
+            self.preds[id] += 1;
+        }
+        id
+    }
+
+    fn add_dep(&mut self, from: TaskId, to: TaskId) {
+        if from == to {
+            return;
+        }
+        debug_assert!(from < to);
+        self.succs[from].push(to);
+        self.preds[to] += 1;
+    }
+
+    /// Tasks within an instance that device `d` must wait on.
+    fn deps_for_device(inst: &Instance, d: DeviceId) -> Vec<TaskId> {
+        let covering: Vec<TaskId> = inst
+            .tasks
+            .iter()
+            .filter(|(_, devs)| devs.contains(&d))
+            .map(|(t, _)| *t)
+            .collect();
+        if covering.is_empty() {
+            inst.tasks.iter().map(|(t, _)| *t).collect()
+        } else {
+            covering
+        }
+    }
+
+    /// Extend buffer lifetimes to a reading task — but only for buffers
+    /// on devices the reader actually occupies: the reader is only
+    /// guaranteed downstream of the *covering* producers, so extending a
+    /// buffer on an unrelated device would let its free fire before its
+    /// alloc in simulated time.
+    fn touch_bufs_on(&mut self, inst_bufs: &[usize], devices: &[DeviceId], user: TaskId) {
+        for &b in inst_bufs {
+            if devices.contains(&self.bufs[b].device) && self.bufs[b].last_use < user {
+                self.bufs[b].last_use = user;
+            }
+        }
+    }
+
+    /// Per-device activation bytes of a tensor instance part.
+    fn act_bytes(&self, t: TensorId) -> u64 {
+        common::act_bytes(self.graph, self.n_micro, t)
+    }
+
+    /// Emit communication tasks for a list of transform ops; returns the
+    /// created task ids (with their device coverage).
+    #[allow(clippy::too_many_arguments)]
+    fn emit_comms(
+        &mut self,
+        ops: &[CommOp],
+        deps_of: &dyn Fn(&CommOp) -> Vec<TaskId>,
+        class: CommClass,
+        phase: Phase,
+        stage: usize,
+        micro: u32,
+        layer: Option<LayerId>,
+    ) -> Vec<(TaskId, Vec<DeviceId>)> {
+        let mut out = Vec::with_capacity(ops.len());
+        for op in ops {
+            let deps = deps_of(op);
+            let id = self.add_task(
+                Task {
+                    kind: TaskKind::Comm(CommTask {
+                        kind: op.kind,
+                        group: op.group.clone(),
+                        bytes: op.bytes,
+                        class,
+                    }),
+                    layer,
+                    stage,
+                    micro,
+                    phase,
+                    allocs: Vec::new(),
+                    frees: Vec::new(),
+                },
+                &deps,
+            );
+            out.push((id, op.group.clone()));
+        }
+        out
+    }
+
+    /// Materialize tensor `t` (micro `m`) in a layout satisfying
+    /// `required`, inserting transformation comms if needed. Returns the
+    /// instance index in `avail`.
+    #[allow(clippy::too_many_arguments)]
+    fn materialize(
+        &mut self,
+        t: TensorId,
+        m: u32,
+        required: &TensorLayout,
+        class: CommClass,
+        phase: Phase,
+        stage: usize,
+        layer: Option<LayerId>,
+    ) -> Result<usize> {
+        let versions = self.avail.entry((t, m)).or_insert_with(|| {
+            // Graph inputs (no producer): assume resident in the
+            // required layout.
+            vec![Instance {
+                layout: required.clone(),
+                tasks: Vec::new(),
+                bufs: Vec::new(),
+            }]
+        });
+        for (i, v) in versions.iter().enumerate() {
+            if super::transform::layout_satisfies(&v.layout, required) {
+                return Ok(i);
+            }
+        }
+        let src = versions[0].clone();
+        let bytes = if self.graph.tensors[t].kind == TensorKind::Param {
+            self.graph.tensors[t].bytes()
+        } else {
+            self.act_bytes(t)
+        };
+        let ops = transform(&src.layout, required, bytes);
+        if ops.is_empty() {
+            // transform says satisfied (e.g. replicated superset).
+            return Ok(0);
+        }
+        let src_for_deps = src.clone();
+        let comm_tasks = {
+            let deps_of = |op: &CommOp| -> Vec<TaskId> {
+                let mut deps = Vec::new();
+                for &d in &op.group {
+                    deps.extend(Self::deps_for_device(&src_for_deps, d));
+                }
+                deps.sort_unstable();
+                deps.dedup();
+                deps
+            };
+            self.emit_comms(&ops, &deps_of, class, phase, stage, m, layer)
+        };
+        // Touch source buffers on the devices each comm actually reads.
+        for (tid, group) in &comm_tasks {
+            let bufs = src.bufs.clone();
+            self.touch_bufs_on(&bufs, group, *tid);
+        }
+        // Memory: all-gather materializes the full destination part set.
+        let mut new_bufs = Vec::new();
+        for (tid, group) in &comm_tasks {
+            if let TaskKind::Comm(c) = &self.tasks[*tid].kind {
+                if c.kind == CollectiveKind::AllGather {
+                    let gathered = c.bytes * c.group.len() as u64;
+                    for &d in group {
+                        let b = self.bufs.len();
+                        self.bufs.push(Buffer {
+                            device: d,
+                            bytes: gathered,
+                            alloc_task: *tid,
+                            last_use: *tid,
+                        });
+                        new_bufs.push(b);
+                    }
+                }
+            }
+        }
+        let inst = Instance {
+            layout: required.clone(),
+            tasks: comm_tasks,
+            bufs: new_bufs,
+        };
+        let versions = self.avail.get_mut(&(t, m)).unwrap();
+        versions.push(inst);
+        Ok(versions.len() - 1)
+    }
+
+    // ------------------------------------------------- scheduled emission
+
+    /// Emit one chunk's forward slot for micro `m`.
+    fn emit_chunk_fwd(&mut self, chunk: usize, m: u32) -> Result<()> {
+        let start = self.tasks.len();
+        let segs = self.chunk_segs[chunk].clone();
+        for si in segs {
+            let layers = self.segments[si].layers.clone();
+            for l in layers {
+                self.emit_layer_fwd(l, m, Phase::Fwd)?;
+            }
+        }
+        self.chain_slot(start);
+        Ok(())
+    }
+
+    /// Emit one chunk's backward slot (recompute + backward) for micro
+    /// `m`.
+    fn emit_chunk_bwd(&mut self, chunk: usize, m: u32) -> Result<()> {
+        let start = self.tasks.len();
+        let segs = self.chunk_segs[chunk].clone();
+        for &si in segs.iter().rev() {
+            let seg = self.segments[si].clone();
+            if seg.recompute {
+                self.emit_recompute(&seg, m)?;
+            }
+            for &lid in seg.layers.iter().rev() {
+                self.emit_layer_bwd(lid, m)?;
+            }
+        }
+        self.chain_slot(start);
+        Ok(())
+    }
+
+    /// Order the comp tasks emitted since `start` after the device's
+    /// previously emitted slot. This is how the pipeline schedule
+    /// becomes observable: without it the executor would run any ready
+    /// forward eagerly, collapsing every schedule into the same eager
+    /// order (and the same activation watermark). The chain is per
+    /// device — not per chunk — so a device hosting several interleaved
+    /// chunks executes their slots in the lowered global order rather
+    /// than racing them.
+    fn chain_slot(&mut self, start: TaskId) {
+        let end = self.tasks.len();
+        let mut last: BTreeMap<DeviceId, TaskId> = BTreeMap::new();
+        for id in start..end {
+            let d = match &self.tasks[id].kind {
+                TaskKind::Comp(c) => c.device,
+                TaskKind::Comm(_) => continue,
+            };
+            if let Some(&prev) = self.slot_chain.get(&d) {
+                self.add_dep(prev, id);
+            }
+            last.insert(d, id);
+        }
+        for (d, id) in last {
+            self.slot_chain.insert(d, id);
+        }
+    }
+
+    // ------------------------------------------------------------- forward
+
+    fn emit_forward(&mut self, m: u32) -> Result<()> {
+        let seg_count = self.segments.len();
+        for si in 0..seg_count {
+            let layers = self.segments[si].layers.clone();
+            for l in layers {
+                self.emit_layer_fwd(l, m, Phase::Fwd)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Emit the forward (or recompute) tasks of one layer for micro `m`.
+    fn emit_layer_fwd(&mut self, lid: LayerId, m: u32, phase: Phase) -> Result<()> {
+        // Pull cached micro-independent layouts (cheap clones vs
+        // recomputing the combinatorial layout math per micro-batch).
+        let cache = self.cache_for(lid);
+        let in_required = cache.in_required.clone();
+        let param_required = cache.param_required.clone();
+        let out_layout_c = cache.out_layout.clone();
+        let features = cache.features;
+        let layer = &self.graph.layers[lid];
+        let cfg = &self.r.comp[lid];
+        let stage = self.r.stage_of_layer[lid];
+
+        // 1. Inputs: materialize in the required layouts.
+        let mut input_deps: Vec<(usize, usize)> = Vec::new(); // (tensor, version)
+        for (op, required) in layer.inputs.iter().zip(&in_required) {
+            let v = self.materialize(
+                op.tensor,
+                m,
+                required,
+                CommClass::Feature,
+                phase,
+                stage,
+                Some(lid),
+            )?;
+            input_deps.push((op.tensor, v));
+        }
+        // 2. Parameters: gather if stored layout mismatches (once per
+        //    step, cached).
+        let mut param_dep_tasks: Vec<TaskId> = Vec::new();
+        for (p, required) in layer.params.iter().zip(&param_required) {
+            let t = p.tensor;
+            if let Some(inst) = self.param_ready.get(&(t, lid)) {
+                param_dep_tasks.extend(inst.tasks.iter().map(|(id, _)| *id));
+                continue;
+            }
+            let stored = &self.r.mem[t];
+            let ops = transform(stored, required, self.graph.tensors[t].bytes());
+            let inst = if ops.is_empty() {
+                Instance {
+                    layout: stored.clone(),
+                    tasks: Vec::new(),
+                    bufs: Vec::new(),
+                }
+            } else {
+                let comm_tasks = {
+                    let deps_of = |_: &CommOp| Vec::new();
+                    self.emit_comms(&ops, &deps_of, CommClass::Feature, Phase::Fwd, stage, m, Some(lid))
+                };
+                let mut new_bufs = Vec::new();
+                for (tid, group) in &comm_tasks {
+                    if let TaskKind::Comm(c) = &self.tasks[*tid].kind {
+                        if c.kind == CollectiveKind::AllGather {
+                            let gathered = c.bytes * c.group.len() as u64;
+                            for &d in group {
+                                let b = self.bufs.len();
+                                self.bufs.push(Buffer {
+                                    device: d,
+                                    bytes: gathered,
+                                    alloc_task: *tid,
+                                    last_use: *tid,
+                                });
+                                new_bufs.push(b);
+                            }
+                        }
+                    }
+                }
+                param_dep_tasks.extend(comm_tasks.iter().map(|(id, _)| *id));
+                Instance {
+                    layout: required.clone(),
+                    tasks: comm_tasks,
+                    bufs: new_bufs,
+                }
+            };
+            self.param_ready.insert((t, lid), inst);
+        }
+
+        // 3. Per-device compute tasks.
+        let out_op = &layer.outputs[0];
+        let out_t = out_op.tensor;
+        let out_layout = out_layout_c;
+        let replicas = cfg.replicas();
+        let mut comp_tasks: Vec<(TaskId, Vec<DeviceId>)> = Vec::new();
+        let chain_key_phase = common::phase_key(phase);
+        // Buffer lists read by every shard (hoisted out of the device
+        // loop: one clone per operand, not one per operand per device).
+        let mut read_bufs: Vec<Vec<usize>> = input_deps
+            .iter()
+            .map(|(t, v)| self.avail[&(*t, m)][*v].bufs.clone())
+            .collect();
+        for p in &layer.params {
+            if let Some(inst) = self.param_ready.get(&(p.tensor, lid)) {
+                read_bufs.push(inst.bufs.clone());
+            }
+        }
+        let per_dev_out_bytes = self.act_bytes(out_t) / out_layout.n_parts().max(1) as u64;
+        let mut out_bufs = Vec::new();
+        let n_parts = cfg.n_parts();
+        for part in 0..n_parts {
+            for rep in 0..replicas {
+                let d = cfg.devices[part * replicas + rep];
+                let mut deps: Vec<TaskId> = Vec::new();
+                for (t, v) in &input_deps {
+                    let inst = &self.avail[&(*t, m)][*v];
+                    deps.extend(Self::deps_for_device(inst, d));
+                }
+                deps.extend(param_dep_tasks.iter().copied());
+                // Micro-chaining control dep.
+                if let Some(&prev) = self.chain.get(&(lid, d, chain_key_phase)) {
+                    deps.push(prev);
+                }
+                // max_ongoing: first layer of stage waits for the
+                // backward of micro m - k. Only on the legacy
+                // single-stage path — pipelined graphs fold the bound
+                // into the schedule's slot order instead (a raw edge
+                // here would deadlock fill-drain, whose slot order puts
+                // every backward after every forward).
+                let sched = self.r.stages[stage].schedule;
+                if self.plan.is_none()
+                    && phase == Phase::Fwd
+                    && self.r.stages[stage].layers.first() == Some(&lid)
+                    && sched.max_ongoing_micro_batch != usize::MAX
+                {
+                    let k = sched.max_ongoing_micro_batch as u32;
+                    if m >= k {
+                        if let Some(ts) = self.stage_bwd_done.get(&(stage, m - k)) {
+                            deps.extend(ts.iter().copied());
+                        }
+                    }
+                }
+                deps.sort_unstable();
+                deps.dedup();
+                let id = self.add_task(
+                    Task {
+                        kind: TaskKind::Comp(CompTask {
+                            device: d,
+                            op: layer.kind,
+                            flops: features.0,
+                            bytes_read: features.1,
+                            bytes_written: features.2,
+                        }),
+                        layer: Some(lid),
+                        stage,
+                        micro: m,
+                        phase,
+                        allocs: Vec::new(),
+                        frees: Vec::new(),
+                    },
+                    &deps,
+                );
+                self.chain.insert((lid, d, chain_key_phase), id);
+                comp_tasks.push((id, vec![d]));
+                // Buffer for this device's output copy.
+                let b = self.bufs.len();
+                self.bufs.push(Buffer {
+                    device: d,
+                    bytes: per_dev_out_bytes.max(1),
+                    alloc_task: id,
+                    last_use: id,
+                });
+                out_bufs.push(b);
+                // Touch the input buffers we read (this device only).
+                for bufs in &read_bufs {
+                    for &b in bufs {
+                        if self.bufs[b].device == d && self.bufs[b].last_use < id {
+                            self.bufs[b].last_use = id;
+                        }
+                    }
+                }
+            }
+        }
+        // Register (or overwrite, for recompute) the output instance.
+        self.avail.insert(
+            (out_t, m),
+            vec![Instance {
+                layout: out_layout,
+                tasks: comp_tasks,
+                bufs: out_bufs,
+            }],
+        );
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ backward
+
+    fn emit_backward(&mut self, m: u32) -> Result<()> {
+        for si in (0..self.segments.len()).rev() {
+            let seg = self.segments[si].clone();
+            if seg.recompute {
+                self.emit_recompute(&seg, m)?;
+            }
+            for &lid in seg.layers.iter().rev() {
+                self.emit_layer_bwd(lid, m)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-emit a segment's forward as recompute tasks, gated on the
+    /// gradient of the segment boundary having been produced (paper:
+    /// "executed immediately before the backward subgraphs").
+    fn emit_recompute(&mut self, seg: &Segment, m: u32) -> Result<()> {
+        // Gate: collect grad contribution tasks of boundary tensors.
+        let mut gate: Vec<TaskId> = Vec::new();
+        for &t in &seg.boundary {
+            if let Some(contribs) = self.grads.get(&(t, m)) {
+                for c in contribs {
+                    gate.extend(c.tasks.iter().map(|(id, _)| *id));
+                }
+            }
+        }
+        let first_task = self.tasks.len();
+        for &lid in &seg.layers {
+            // Boundary outputs were kept; recomputing their producers is
+            // unnecessary, but inner activations must be rebuilt. We
+            // re-emit every layer whose output is NOT a boundary tensor.
+            let out_t = self.graph.layers[lid].outputs[0].tensor;
+            if seg.boundary.contains(&out_t) {
+                continue;
+            }
+            self.emit_layer_fwd(lid, m, Phase::Recomp)?;
+        }
+        // Gate the recompute *chain heads* on the boundary gradients:
+        // every emitted recompute task with no predecessor inside the
+        // emitted range starts a per-device chain and must wait for the
+        // backward to reach this segment. (Gating only one task would
+        // let the other devices' chains recompute eagerly during the
+        // forward pass.)
+        let end_task = self.tasks.len();
+        if first_task < end_task && !gate.is_empty() {
+            let mut has_range_pred = vec![false; end_task - first_task];
+            for t in first_task..end_task {
+                for &s in &self.succs[t] {
+                    if s >= first_task && s < end_task {
+                        has_range_pred[s - first_task] = true;
+                    }
+                }
+            }
+            for t in first_task..end_task {
+                if !has_range_pred[t - first_task] {
+                    for &g in &gate {
+                        if g < first_task {
+                            self.add_dep(g, t);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn emit_layer_bwd(&mut self, lid: LayerId, m: u32) -> Result<()> {
+        let cache = self.cache_for(lid);
+        let required_grad = cache.grad_required.clone();
+        let in_grad = cache.in_grad.clone();
+        let param_grad = cache.param_grad.clone();
+        let (_f_flops, f_read, f_written) = cache.features;
+        let layer = &self.graph.layers[lid];
+        let cfg = self.r.comp[lid].clone();
+        let stage = self.r.stage_of_layer[lid];
+
+        // 1. Output gradient: transform contributions to the layout this
+        //    layer's backward requires (complete copies of its own output
+        //    parts).
+        let out_op = &layer.outputs[0];
+        let out_t = out_op.tensor;
+        let mut grad_dep_insts: Vec<Instance> = Vec::new();
+        if let Some(contribs) = self.grads.remove(&(out_t, m)) {
+            for c in contribs {
+                let bytes = self.act_bytes(out_t);
+                let ops = transform(&c.layout, &required_grad, bytes);
+                if ops.is_empty() {
+                    grad_dep_insts.push(Instance {
+                        layout: c.layout,
+                        tasks: c.tasks,
+                        bufs: Vec::new(),
+                    });
+                } else {
+                    let src = Instance {
+                        layout: c.layout.clone(),
+                        tasks: c.tasks.clone(),
+                        bufs: Vec::new(),
+                    };
+                    let comm_tasks = {
+                        let deps_of = |op: &CommOp| -> Vec<TaskId> {
+                            let mut deps = Vec::new();
+                            for &d in &op.group {
+                                deps.extend(Self::deps_for_device(&src, d));
+                            }
+                            deps.sort_unstable();
+                            deps.dedup();
+                            deps
+                        };
+                        self.emit_comms(
+                            &ops,
+                            &deps_of,
+                            CommClass::Feature,
+                            Phase::Bwd,
+                            stage,
+                            m,
+                            Some(lid),
+                        )
+                    };
+                    grad_dep_insts.push(Instance {
+                        layout: required_grad.clone(),
+                        tasks: comm_tasks,
+                        bufs: Vec::new(),
+                    });
+                }
+            }
+        }
+        // Loss layers have no incoming gradient (dL/dL = 1).
+
+        // 2. Saved activations (forward or recompute instances).
+        let mut saved: Vec<(TensorId, usize)> = Vec::new();
+        for op in &layer.inputs {
+            // The instance registered last (recompute overwrites) is the
+            // one backward consumes; version 0 is the canonical one.
+            if self.avail.contains_key(&(op.tensor, m)) {
+                saved.push((op.tensor, 0));
+            }
+        }
+        let saved_bufs: Vec<Vec<usize>> = saved
+            .iter()
+            .map(|(t, v)| self.avail[&(*t, m)][*v].bufs.clone())
+            .collect();
+
+        // 3. Per-device backward tasks.
+        let bwd_flops = layer.bwd_flops() as f64 / cfg.n_parts() as f64 / self.n_micro as f64;
+        let replicas = cfg.replicas();
+        let mut bwd_tasks: Vec<(TaskId, Vec<DeviceId>)> = Vec::new();
+        for part in 0..cfg.n_parts() {
+            for rep in 0..replicas {
+                let d = cfg.devices[part * replicas + rep];
+                let mut deps: Vec<TaskId> = Vec::new();
+                for inst in &grad_dep_insts {
+                    deps.extend(Self::deps_for_device(inst, d));
+                }
+                for (t, v) in &saved {
+                    let inst = &self.avail[&(*t, m)][*v];
+                    deps.extend(Self::deps_for_device(inst, d));
+                }
+                // Must run after our own forward (reads its workspace).
+                if let Some(&fwd) = self
+                    .chain
+                    .get(&(lid, d, common::phase_key(Phase::Recomp)))
+                    .or_else(|| self.chain.get(&(lid, d, common::phase_key(Phase::Fwd))))
+                {
+                    deps.push(fwd);
+                }
+                // Micro-chaining for backward.
+                if let Some(&prev) = self.chain.get(&(lid, d, common::phase_key(Phase::Bwd))) {
+                    deps.push(prev);
+                }
+                deps.sort_unstable();
+                deps.dedup();
+                let id = self.add_task(
+                    Task {
+                        kind: TaskKind::Comp(CompTask {
+                            device: d,
+                            op: layer.kind,
+                            flops: bwd_flops,
+                            bytes_read: f_read + f_written, // inputs + dy
+                            bytes_written: f_read,          // dx + dw
+                        }),
+                        layer: Some(lid),
+                        stage,
+                        micro: m,
+                        phase: Phase::Bwd,
+                        allocs: Vec::new(),
+                        frees: Vec::new(),
+                    },
+                    &deps,
+                );
+                self.chain.insert((lid, d, common::phase_key(Phase::Bwd)), id);
+                bwd_tasks.push((id, vec![d]));
+                for bufs in &saved_bufs {
+                    for &b in bufs {
+                        if self.bufs[b].device == d && self.bufs[b].last_use < id {
+                            self.bufs[b].last_use = id;
+                        }
+                    }
+                }
+            }
+        }
+
+        // 4. Record gradient contributions (layouts from the cache).
+        for (op, gl) in layer.inputs.iter().zip(&in_grad) {
+            let t = op.tensor;
+            if self.graph.tensors[t].producer.is_none() {
+                continue; // graph inputs need no gradient
+            }
+            self.grads.entry((t, m)).or_default().push(GradContrib {
+                layout: gl.clone(),
+                tasks: bwd_tasks.clone(),
+            });
+        }
+        for (p, gl) in layer.params.iter().zip(&param_grad) {
+            let t = p.tensor;
+            self.param_grads.entry(t).or_default().push(GradContrib {
+                layout: gl.clone(),
+                tasks: bwd_tasks.clone(),
+            });
+        }
+
+        // 5. Stage-completion bookkeeping for max_ongoing control.
+        if self.r.stages[stage].layers.first() == Some(&lid) {
+            self.stage_bwd_done
+                .entry((stage, m))
+                .or_default()
+                .extend(bwd_tasks.iter().map(|(id, _)| *id));
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------- gradient sync + optimizer
+
+    fn emit_param_sync_and_optimizer(&mut self) -> Result<()> {
+        // Per-device optimizer dependencies.
+        let mut opt_deps: HashMap<DeviceId, Vec<TaskId>> = HashMap::new();
+        let param_grads = std::mem::take(&mut self.param_grads);
+        for (t, contribs) in param_grads {
+            let stored = self.r.mem[t].clone();
+            let bytes = self.graph.tensors[t].bytes();
+            for c in contribs {
+                let ops = transform(&c.layout, &stored, bytes);
+                if ops.is_empty() {
+                    for (id, devs) in &c.tasks {
+                        for &d in devs {
+                            opt_deps.entry(d).or_default().push(*id);
+                        }
+                    }
+                    continue;
+                }
+                let src = Instance {
+                    layout: c.layout.clone(),
+                    tasks: c.tasks.clone(),
+                    bufs: Vec::new(),
+                };
+                let stage = 0;
+                let comm_tasks = {
+                    let deps_of = |op: &CommOp| -> Vec<TaskId> {
+                        // Gradient sync waits for every micro-batch's
+                        // local accumulation on the group devices.
+                        let mut deps = Vec::new();
+                        for &d in &op.group {
+                            deps.extend(Self::deps_for_device(&src, d));
+                        }
+                        deps.sort_unstable();
+                        deps.dedup();
+                        deps
+                    };
+                    self.emit_comms(
+                        &ops,
+                        &deps_of,
+                        CommClass::Gradient,
+                        Phase::Bwd,
+                        stage,
+                        (self.n_micro - 1) as u32,
+                        self.graph.tensors[t].producer,
+                    )
+                };
+                for (id, group) in &comm_tasks {
+                    for &d in group {
+                        opt_deps.entry(d).or_default().push(*id);
+                    }
+                }
+            }
+        }
+        // Parameter elements stored per device (drives optimizer flops).
+        let mut local_params: HashMap<DeviceId, f64> = HashMap::new();
+        for t in &self.graph.tensors {
+            if t.kind != TensorKind::Param {
+                continue;
+            }
+            let layout = &self.r.mem[t.id];
+            let per_part = t.numel() as f64 / layout.n_parts() as f64;
+            for p in &layout.parts {
+                for d in p.device_set() {
+                    *local_params.entry(d).or_default() += per_part;
+                }
+            }
+        }
+        let mut devices: Vec<DeviceId> = local_params.keys().copied().collect();
+        devices.sort_unstable();
+        for d in devices {
+            let elems = local_params[&d];
+            let mut deps = opt_deps.remove(&d).unwrap_or_default();
+            deps.sort_unstable();
+            deps.dedup();
+            self.add_task(
+                Task {
+                    kind: TaskKind::Comp(CompTask {
+                        device: d,
+                        op: OpKind::Elementwise,
+                        flops: 10.0 * elems,
+                        bytes_read: 16.0 * elems,
+                        bytes_written: 12.0 * elems,
+                    }),
+                    layer: None,
+                    stage: 0,
+                    micro: 0,
+                    phase: Phase::Optim,
+                    allocs: Vec::new(),
+                    frees: Vec::new(),
+                },
+                &deps,
+            );
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- memory
+
+    fn finalize_buffers(&mut self) {
+        let bufs = std::mem::take(&mut self.bufs);
+        for b in bufs {
+            self.tasks[b.alloc_task].allocs.push((b.device, b.bytes));
+            self.tasks[b.last_use].frees.push((b.device, b.bytes));
+        }
+    }
+
+    fn static_memory(&self) -> Vec<u64> {
+        let mut mem = vec![0u64; self.n_devices];
+        for t in &self.graph.tensors {
+            if t.kind != TensorKind::Param {
+                continue;
+            }
+            let layout = &self.r.mem[t.id];
+            let part_bytes = layout.part_bytes(t.bytes());
+            for p in &layout.parts {
+                for d in p.device_set() {
+                    // param + gradient + 2 Adam moments.
+                    mem[d] += part_bytes * 4;
+                }
+            }
+        }
+        mem
+    }
+}

@@ -37,7 +37,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
 use crate::cluster::DeviceId;
-use crate::compiler::{ExecGraph, TaskId, TaskKind};
+use crate::compiler::{ExecGraph, TaskId, TaskRef};
 use crate::emulator::fairshare::IncrementalMaxMin;
 use crate::executor::memory::MemoryTracker;
 use crate::executor::{PhaseSpan, SimReport, Span};
@@ -124,7 +124,7 @@ struct EvFlow {
 
 /// Emulate one step with the event-driven engine (see module docs).
 pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Result<SimReport> {
-    let n = eg.tasks.len();
+    let n = eg.n_tasks();
     let n_dev = eg.n_devices;
     let delta = if emu.config.interference {
         emu.cluster.device.overlap_interference
@@ -132,7 +132,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         0.0
     };
 
-    let mut preds = eg.preds.clone();
+    let mut preds = eg.preds().to_vec();
     let mut comp_ready: Vec<BinaryHeap<Reverse<TaskId>>> =
         (0..n_dev).map(|_| BinaryHeap::new()).collect();
     let mut comm_ready: Vec<TaskId> = Vec::new();
@@ -173,9 +173,9 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
     let enqueue = |id: TaskId,
                    comp_ready: &mut Vec<BinaryHeap<Reverse<TaskId>>>,
                    comm_ready: &mut Vec<TaskId>| {
-        match &eg.tasks[id].kind {
-            TaskKind::Comp(c) => comp_ready[c.device].push(Reverse(id)),
-            TaskKind::Comm(_) => comm_ready.push(id),
+        match eg.kind(id) {
+            TaskRef::Comp(c) => comp_ready[c.device].push(Reverse(id)),
+            TaskRef::Comm(_) => comm_ready.push(id),
         }
     };
     for (i, &p) in preds.iter().enumerate() {
@@ -216,8 +216,8 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             let mut i = 0;
             while i < comm_ready.len() {
                 let id = comm_ready[i];
-                let c = match &eg.tasks[id].kind {
-                    TaskKind::Comm(c) => c,
+                let c = match eg.kind(id) {
+                    TaskRef::Comm(c) => c,
                     _ => unreachable!(),
                 };
                 let busy = match c.class {
@@ -414,7 +414,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                         });
                     }
                     done += 1;
-                    for &s in &eg.succs[j.task] {
+                    for &s in eg.succs(j.task) {
                         preds[s] -= 1;
                         if preds[s] == 0 {
                             enqueue(s, &mut comp_ready, &mut comm_ready);
@@ -560,7 +560,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                 });
             }
             done += 1;
-            for &s in &eg.succs[task] {
+            for &s in eg.succs(task) {
                 preds[s] -= 1;
                 if preds[s] == 0 {
                     enqueue(s, &mut comp_ready, &mut comm_ready);

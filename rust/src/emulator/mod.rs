@@ -300,34 +300,16 @@ impl<'a> Emulator<'a> {
     }
 }
 
+/// Record a task's allocations at its launch instant (frees are
+/// recorded separately at completion by [`mem_free`]). Reads the event
+/// slices straight out of the SoA graph — no task clone.
 fn mem_alloc(mem: &mut MemoryTracker, eg: &ExecGraph, id: TaskId, at: Ps) {
-    // Allocs apply at start; frees are recorded at completion by
-    // `mem_free`. MemoryTracker::exec handles both, so split it.
-    for &(d, b) in &eg.tasks[id].allocs {
-        mem.exec(
-            &crate::compiler::Task {
-                allocs: vec![(d, b)],
-                frees: vec![],
-                ..eg.tasks[id].clone()
-            },
-            at,
-            at,
-        );
-    }
+    mem.record(eg.allocs(id), &[], at, at);
 }
 
+/// Record a task's frees at its completion instant.
 fn mem_free(mem: &mut MemoryTracker, eg: &ExecGraph, id: TaskId, at: Ps) {
-    for &(d, b) in &eg.tasks[id].frees {
-        mem.exec(
-            &crate::compiler::Task {
-                allocs: vec![],
-                frees: vec![(d, b)],
-                ..eg.tasks[id].clone()
-            },
-            at,
-            at,
-        );
-    }
+    mem.record(&[], eg.frees(id), at, at);
 }
 
 #[cfg(test)]
@@ -365,7 +347,7 @@ mod tests {
         let b = Emulator::new(&c, &est).simulate(&eg).unwrap();
         assert!(a.step_ms > 0.0);
         assert_eq!(a.step_ms, b.step_ms);
-        assert_eq!(a.n_tasks, eg.tasks.len());
+        assert_eq!(a.n_tasks, eg.n_tasks());
     }
 
     /// The tentpole invariant: the event-driven engine reproduces the

@@ -13,7 +13,7 @@
 
 use std::collections::{BinaryHeap, HashMap};
 
-use crate::compiler::{ExecGraph, TaskId, TaskKind};
+use crate::compiler::{ExecGraph, TaskId, TaskRef};
 use crate::emulator::fairshare;
 use crate::executor::memory::MemoryTracker;
 use crate::executor::{SimReport, Span};
@@ -25,7 +25,7 @@ use crate::executor::PhaseSpan;
 
 /// Emulate one step with the reference loop (see module docs).
 pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Result<SimReport> {
-    let n = eg.tasks.len();
+    let n = eg.n_tasks();
     let n_dev = eg.n_devices;
     let delta = if emu.config.interference {
         emu.cluster.device.overlap_interference
@@ -33,7 +33,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         0.0
     };
 
-    let mut preds = eg.preds.clone();
+    let mut preds = eg.preds().to_vec();
     // Ready queues.
     let mut comp_ready: Vec<BinaryHeap<std::cmp::Reverse<TaskId>>> =
         (0..n_dev).map(|_| BinaryHeap::new()).collect();
@@ -66,9 +66,9 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
     let enqueue = |id: TaskId,
                    comp_ready: &mut Vec<BinaryHeap<std::cmp::Reverse<TaskId>>>,
                    comm_ready: &mut Vec<TaskId>| {
-        match &eg.tasks[id].kind {
-            TaskKind::Comp(c) => comp_ready[c.device].push(std::cmp::Reverse(id)),
-            TaskKind::Comm(_) => comm_ready.push(id),
+        match eg.kind(id) {
+            TaskRef::Comp(c) => comp_ready[c.device].push(std::cmp::Reverse(id)),
+            TaskRef::Comm(_) => comm_ready.push(id),
         }
     };
     for (i, &p) in preds.iter().enumerate() {
@@ -104,8 +104,8 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             let mut i = 0;
             while i < comm_ready.len() {
                 let id = comm_ready[i];
-                let c = match &eg.tasks[id].kind {
-                    TaskKind::Comm(c) => c,
+                let c = match eg.kind(id) {
+                    TaskRef::Comm(c) => c,
                     _ => unreachable!(),
                 };
                 let busy = match c.class {
@@ -267,7 +267,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                     });
                 }
                 done += 1;
-                for &s in &eg.succs[j.task] {
+                for &s in eg.succs(j.task) {
                     preds[s] -= 1;
                     if preds[s] == 0 {
                         enqueue(s, &mut comp_ready, &mut comm_ready);
@@ -374,7 +374,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                 });
             }
             done += 1;
-            for &s in &eg.succs[task] {
+            for &s in eg.succs(task) {
                 preds[s] -= 1;
                 if preds[s] == 0 {
                     enqueue(s, &mut comp_ready, &mut comm_ready);

@@ -25,7 +25,7 @@ pub mod features;
 pub use features::{comm_row, comp_row, cost_ns, Row, FEATURES};
 
 use crate::cluster::Cluster;
-use crate::compiler::{ExecGraph, TaskKind};
+use crate::compiler::{ExecGraph, TaskRef};
 use crate::runtime::CostKernel;
 use crate::util::time::Ps;
 use crate::Result;
@@ -87,11 +87,10 @@ impl<'c> OpEstimator<'c> {
 
     /// Build the feature matrix for a whole execution graph.
     pub fn feature_matrix(&self, eg: &ExecGraph) -> Vec<Row> {
-        eg.tasks
-            .iter()
-            .map(|t| match &t.kind {
-                TaskKind::Comp(c) => comp_row(c, self.cluster),
-                TaskKind::Comm(c) => comm_row(c, self.cluster),
+        (0..eg.n_tasks())
+            .map(|i| match eg.kind(i) {
+                TaskRef::Comp(c) => comp_row(c, self.cluster),
+                TaskRef::Comm(c) => comm_row(c, self.cluster),
             })
             .collect()
     }
@@ -143,9 +142,9 @@ mod tests {
         let eg = crate::compiler::compile(&g, &tree, &c).unwrap();
         let est = OpEstimator::analytical(&c);
         let costs = est.estimate_all(&eg).unwrap();
-        assert_eq!(costs.len(), eg.tasks.len());
+        assert_eq!(costs.len(), eg.n_tasks());
         for (i, &ps) in costs.iter().enumerate() {
-            assert!(ps > 0, "task {i} has zero cost: {:?}", eg.tasks[i].kind);
+            assert!(ps > 0, "task {i} has zero cost: {:?}", eg.kind(i));
             assert!(ps < crate::util::time::SEC, "task {i} absurdly slow");
         }
     }
@@ -160,8 +159,7 @@ mod tests {
         let est = OpEstimator::analytical(&c);
         // Compare the fc1 fwd task cost: dp=2 shard is 4× the dp=8 shard.
         let cost_of_fc1 = |eg: &ExecGraph, costs: &[Ps]| -> Ps {
-            eg.tasks
-                .iter()
+            eg.iter()
                 .zip(costs)
                 .find(|(t, _)| {
                     t.layer == Some(0) && t.phase == crate::compiler::Phase::Fwd && !t.is_comm()

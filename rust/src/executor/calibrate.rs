@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
 
 use crate::cluster::Cluster;
-use crate::compiler::TaskKind;
+use crate::compiler::TaskRef;
 use crate::emulator::{Emulator, EmulatorConfig};
 use crate::estimator::OpEstimator;
 use crate::graph::{DType, GraphBuilder};
@@ -77,7 +77,7 @@ pub fn calibrate_gamma(cluster: &Cluster) -> crate::Result<f64> {
     // Gradient-communication spans per device.
     let mut grad_spans: Vec<(usize, u64, u64)> = Vec::new(); // (device, start, end)
     for s in &report.timeline {
-        if let TaskKind::Comm(c) = &eg.tasks[s.task].kind {
+        if let TaskRef::Comm(c) = eg.kind(s.task) {
             if c.class == crate::compiler::CommClass::Gradient {
                 for &d in &c.group {
                     grad_spans.push((d, s.start, s.end));
@@ -88,7 +88,7 @@ pub fn calibrate_gamma(cluster: &Cluster) -> crate::Result<f64> {
     // Stretch of overlapped computation ops.
     let mut ratios = Vec::new();
     for s in &report.timeline {
-        if let TaskKind::Comp(c) = &eg.tasks[s.task].kind {
+        if let TaskRef::Comp(c) = eg.kind(s.task) {
             let overlapped = grad_spans
                 .iter()
                 .any(|&(d, gs, ge)| d == c.device && gs < s.end && s.start < ge);

@@ -25,7 +25,6 @@
 //! time order, events are buffered and replayed sorted by timestamp at
 //! the end — peak detection needs the true temporal order.
 
-use crate::compiler::Task;
 use crate::util::time::Ps;
 
 /// Replay-based per-device memory tracker.
@@ -54,12 +53,20 @@ impl MemoryTracker {
 
     /// Record a task's alloc/free events at its simulated span
     /// (`start`/`end` in [`Ps`]): allocations apply at `start`, frees at
-    /// `end`. May be called in any order; replay sorts by timestamp.
-    pub fn exec(&mut self, task: &Task, start: Ps, end: Ps) {
-        for &(d, b) in &task.allocs {
+    /// `end`. Takes the event slices straight out of the execution
+    /// graph's SoA arrays (`ExecGraph::allocs`/`frees`) — no task clone.
+    /// May be called in any order; replay sorts by timestamp.
+    pub fn record(
+        &mut self,
+        allocs: &[(usize, u64)],
+        frees: &[(usize, u64)],
+        start: Ps,
+        end: Ps,
+    ) {
+        for &(d, b) in allocs {
             self.events.push((start, d, b as i64));
         }
-        for &(d, b) in &task.frees {
+        for &(d, b) in frees {
             self.events.push((end, d, -(b as i64)));
         }
     }
@@ -119,26 +126,6 @@ impl MemoryTracker {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::{CompTask, Phase, Task, TaskKind};
-    use crate::graph::OpKind;
-
-    fn task(allocs: Vec<(usize, u64)>, frees: Vec<(usize, u64)>) -> Task {
-        Task {
-            kind: TaskKind::Comp(CompTask {
-                device: 0,
-                op: OpKind::Elementwise,
-                flops: 0.0,
-                bytes_read: 0.0,
-                bytes_written: 0.0,
-            }),
-            layer: None,
-            stage: 0,
-            micro: 0,
-            phase: Phase::Fwd,
-            allocs,
-            frees,
-        }
-    }
 
     #[test]
     fn peak_includes_static() {
@@ -151,8 +138,8 @@ mod tests {
     fn peak_tracks_watermark_not_final() {
         let mut m = MemoryTracker::new(&[0], 10_000);
         // Alloc 6000 at t=0, free at t=10; alloc 5000 at t=20.
-        m.exec(&task(vec![(0, 6000)], vec![(0, 6000)]), 0, 10);
-        m.exec(&task(vec![(0, 5000)], vec![]), 20, 30);
+        m.record(&[(0, 6000)], &[(0, 6000)], 0, 10);
+        m.record(&[(0, 5000)], &[], 20, 30);
         assert_eq!(m.peaks(), &[6000]);
         assert!(!m.oom());
     }
@@ -160,8 +147,8 @@ mod tests {
     #[test]
     fn concurrent_allocs_stack() {
         let mut m = MemoryTracker::new(&[0], 10_000);
-        m.exec(&task(vec![(0, 6000)], vec![(0, 6000)]), 0, 100);
-        m.exec(&task(vec![(0, 6000)], vec![(0, 6000)]), 50, 150);
+        m.record(&[(0, 6000)], &[(0, 6000)], 0, 100);
+        m.record(&[(0, 6000)], &[(0, 6000)], 50, 150);
         assert_eq!(m.peaks(), &[12_000]);
         assert!(m.oom());
     }
@@ -170,8 +157,8 @@ mod tests {
     fn out_of_order_replay_is_sorted() {
         let mut m = MemoryTracker::new(&[0], 100);
         // Recorded late but happens early.
-        m.exec(&task(vec![(0, 50)], vec![(0, 50)]), 100, 200);
-        m.exec(&task(vec![(0, 50)], vec![(0, 50)]), 0, 90);
+        m.record(&[(0, 50)], &[(0, 50)], 100, 200);
+        m.record(&[(0, 50)], &[(0, 50)], 0, 90);
         assert_eq!(m.peaks(), &[50]);
         assert!(!m.oom());
     }
@@ -179,7 +166,7 @@ mod tests {
     #[test]
     fn dynamic_peaks_subtract_static() {
         let mut m = MemoryTracker::new(&[1000, 2000], 10_000);
-        m.exec(&task(vec![(0, 500)], vec![(0, 500)]), 0, 10);
+        m.record(&[(0, 500)], &[(0, 500)], 0, 10);
         assert_eq!(m.dynamic_peaks(), vec![500, 0]);
         assert_eq!(m.peaks(), &[1500, 2000]);
     }
@@ -188,8 +175,8 @@ mod tests {
     fn free_before_alloc_at_same_instant() {
         let mut m = MemoryTracker::new(&[0], 100);
         // Task A: alloc 80 [0, 10); Task B allocs 80 at exactly 10.
-        m.exec(&task(vec![(0, 80)], vec![(0, 80)]), 0, 10);
-        m.exec(&task(vec![(0, 80)], vec![]), 10, 20);
+        m.record(&[(0, 80)], &[(0, 80)], 0, 10);
+        m.record(&[(0, 80)], &[], 10, 20);
         assert_eq!(m.peaks(), &[80], "free applies before alloc at t=10");
     }
 }

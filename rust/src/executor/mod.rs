@@ -36,7 +36,7 @@ use std::collections::{BinaryHeap, HashMap};
 
 use crate::cluster::Cluster;
 use crate::collective::{self, CollAlgo};
-use crate::compiler::{CommClass, CommTask, ExecGraph, TaskId, TaskKind};
+use crate::compiler::{CommClass, CommTask, ExecGraph, TaskId, TaskRef};
 use crate::estimator::OpEstimator;
 use crate::util::time::{ps_to_ms, ps_to_secs, scale, Ps};
 use crate::Result;
@@ -204,7 +204,7 @@ impl<'a> Htae<'a> {
     /// testbed schedules them, and only the *physics* (fixed cost + γ +
     /// fair-share counting vs fluid max-min) differs.
     pub fn simulate_with_costs(&self, eg: &ExecGraph, base_costs: &[Ps]) -> Result<SimReport> {
-        let n = eg.tasks.len();
+        let n = eg.n_tasks();
         debug_assert_eq!(base_costs.len(), n);
         let n_dev = eg.n_devices;
 
@@ -215,10 +215,9 @@ impl<'a> Htae<'a> {
         // split by the legacy profile instead.
         let planned: Vec<Option<PlannedComm>> = if self.config.coll_algo != CollAlgo::Monolithic {
             let mut cache: HashMap<collective::PlanKey, PlannedComm> = HashMap::new();
-            eg.tasks
-                .iter()
-                .map(|t| match &t.kind {
-                    TaskKind::Comm(c) => Some(
+            (0..n)
+                .map(|i| match eg.kind(i) {
+                    TaskRef::Comm(c) => Some(
                         cache
                             .entry(collective::plan_key(c))
                             .or_insert_with(|| self.plan_comm(c))
@@ -231,7 +230,7 @@ impl<'a> Htae<'a> {
             vec![None; n]
         };
 
-        let mut preds = eg.preds.clone();
+        let mut preds = eg.preds().to_vec();
         // Per-device computation queues (min-heap by task id) and global
         // communication ready list (kept sorted by id).
         let mut comp_ready: Vec<BinaryHeap<Reverse<TaskId>>> =
@@ -253,9 +252,9 @@ impl<'a> Htae<'a> {
         let enqueue = |id: TaskId,
                        comp_ready: &mut Vec<BinaryHeap<Reverse<TaskId>>>,
                        comm_ready: &mut Vec<TaskId>,
-                       eg: &ExecGraph| match &eg.tasks[id].kind {
-            TaskKind::Comp(c) => comp_ready[c.device].push(Reverse(id)),
-            TaskKind::Comm(_) => comm_ready.push(id),
+                       eg: &ExecGraph| match eg.kind(id) {
+            TaskRef::Comp(c) => comp_ready[c.device].push(Reverse(id)),
+            TaskRef::Comm(_) => comm_ready.push(id),
         };
         for (i, &p) in preds.iter().enumerate() {
             if p == 0 {
@@ -274,19 +273,15 @@ impl<'a> Htae<'a> {
                         continue;
                     }
                     if let Some(Reverse(id)) = comp_ready[d].pop() {
-                        let c = match &eg.tasks[id].kind {
-                            TaskKind::Comp(c) => c,
-                            _ => unreachable!(),
-                        };
+                        debug_assert!(!eg.is_comm(id));
                         let mut cost = base_costs[id];
                         if self.config.overlap && detector.comp_overlaps_grad_comm(d, t) {
                             cost = scale(cost, 1.0 + self.config.gamma);
                             detector.note_overlapped_comp();
                         }
-                        let _ = c;
                         comp_busy[d] = true;
                         detector.record_comp(d, t, t + cost);
-                        mem.exec(&eg.tasks[id], t, t + cost);
+                        mem.record(eg.allocs(id), eg.frees(id), t, t + cost);
                         if self.config.record_timeline {
                             timeline.push(Span {
                                 task: id,
@@ -302,8 +297,8 @@ impl<'a> Htae<'a> {
                 let mut i = 0;
                 while i < comm_ready.len() {
                     let id = comm_ready[i];
-                    let c = match &eg.tasks[id].kind {
-                        TaskKind::Comm(c) => c.clone(),
+                    let c = match eg.kind(id) {
+                        TaskRef::Comm(c) => c,
                         _ => unreachable!(),
                     };
                     let busy = match c.class {
@@ -325,11 +320,11 @@ impl<'a> Htae<'a> {
                     // paid once regardless of contention.
                     let (alpha, beta0) = match &planned[id] {
                         Some(p) => (p.alpha, p.beta),
-                        None => detector.split_alpha_beta(&c, base_costs[id]),
+                        None => detector.split_alpha_beta(c, base_costs[id]),
                     };
                     let mut beta = beta0;
                     if self.config.bandwidth_sharing && c.group.len() > 1 {
-                        let share = detector.sharing_factor(&c, t);
+                        let share = detector.sharing_factor(c, t);
                         if share > 1.0 {
                             beta = scale(beta, share);
                             detector.note_shared();
@@ -367,8 +362,8 @@ impl<'a> Htae<'a> {
                             }
                         }
                     }
-                    detector.record_comm(&c, t, t + cost);
-                    mem.exec(&eg.tasks[id], t, t + cost);
+                    detector.record_comm(c, t, t + cost);
+                    mem.record(eg.allocs(id), eg.frees(id), t, t + cost);
                     if self.config.record_timeline {
                         timeline.push(Span {
                             task: id,
@@ -391,9 +386,9 @@ impl<'a> Htae<'a> {
                     break;
                 }
                 events.pop();
-                match &eg.tasks[id].kind {
-                    TaskKind::Comp(c) => comp_busy[c.device] = false,
-                    TaskKind::Comm(c) => {
+                match eg.kind(id) {
+                    TaskRef::Comp(c) => comp_busy[c.device] = false,
+                    TaskRef::Comm(c) => {
                         let busy = match c.class {
                             CommClass::Feature => &mut feat_busy,
                             CommClass::Gradient => &mut grad_busy,
@@ -405,7 +400,7 @@ impl<'a> Htae<'a> {
                 }
                 makespan = makespan.max(e);
                 done += 1;
-                for &s in &eg.succs[id] {
+                for &s in eg.succs(id) {
                     preds[s] -= 1;
                     if preds[s] == 0 {
                         enqueue(s, &mut comp_ready, &mut comm_ready, eg);
@@ -507,7 +502,7 @@ mod tests {
         assert!(r.step_ms > 0.0);
         assert!(r.throughput > 0.0);
         assert!(!r.oom);
-        assert_eq!(r.n_tasks, eg.tasks.len());
+        assert_eq!(r.n_tasks, eg.n_tasks());
     }
 
     #[test]

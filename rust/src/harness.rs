@@ -123,7 +123,7 @@ pub fn run_case_with(case: &Case, custom: &HtaeCustom) -> Result<CaseResult> {
         ff_sps,
         ff_err_pct,
         oom: truth.oom,
-        n_tasks: eg.tasks.len(),
+        n_tasks: eg.n_tasks(),
     })
 }
 

@@ -26,6 +26,7 @@ use std::time::Instant;
 
 use crate::cluster::{Cluster, Preset};
 use crate::collective::CollAlgo;
+use crate::compiler::TemplateCache;
 use crate::executor::{calibrate, Htae, HtaeConfig, SimReport};
 use crate::graph::Graph;
 use crate::models::ModelKind;
@@ -68,6 +69,11 @@ pub struct SweepOutcome {
     /// The HTAE report, or a description of why the scenario failed
     /// (invalid strategy, compile error, simulation error).
     pub report: Result<SimReport, String>,
+    /// Infeasible: the simulated peak memory exceeded the preset's
+    /// device capacity. The candidate still carries its full report
+    /// (step time, throughput, peaks) but [`SweepRunner::rank`] sorts it
+    /// below every feasible candidate.
+    pub oom: bool,
     /// Wall-clock seconds spent compiling the execution graph.
     pub compile_s: f64,
     /// Wall-clock seconds spent estimating + simulating.
@@ -87,7 +93,7 @@ impl SweepOutcome {
     /// One-line summary for logs and examples.
     pub fn describe(&self) -> String {
         match &self.report {
-            Ok(r) if r.oom => format!("{}: OOM", self.scenario.label()),
+            Ok(r) if r.oom => format!("{}: OOM (infeasible)", self.scenario.label()),
             Ok(r) => format!(
                 "{}: {:.1} samples/s ({:.2} ms/step)",
                 self.scenario.label(),
@@ -105,6 +111,7 @@ pub struct SweepRunner {
     threads: usize,
     plain: bool,
     coll_algo: CollAlgo,
+    compile_cache: bool,
 }
 
 impl Default for SweepRunner {
@@ -120,6 +127,7 @@ impl SweepRunner {
             threads: 0,
             plain: false,
             coll_algo: CollAlgo::Auto,
+            compile_cache: true,
         }
     }
 
@@ -140,6 +148,19 @@ impl SweepRunner {
     /// [`CollAlgo::Auto`]; [`CollAlgo::Monolithic`] is the ablation).
     pub fn coll_algo(mut self, algo: CollAlgo) -> Self {
         self.coll_algo = algo;
+        self
+    }
+
+    /// Toggle the cross-candidate compile cache (default on):
+    /// candidates that share a model graph and a structurally identical
+    /// resolved strategy — e.g. the same `dp×mp×pp(micro)` point swept
+    /// under several pipeline schedules — compile the execution-graph
+    /// template once and reuse it (see
+    /// [`crate::compiler::TemplateCache`]). Sweep results are
+    /// bit-identical with the cache off; this knob exists for A/B
+    /// benchmarking and the pinning tests.
+    pub fn compile_cache(mut self, on: bool) -> Self {
+        self.compile_cache = on;
         self
     }
 
@@ -191,6 +212,11 @@ impl SweepRunner {
         }
         // γ is per-cluster; compute it once, outside the workers.
         let gammas: Vec<f64> = clusters.iter().map(calibrate::default_gamma).collect();
+        // Cross-candidate compile cache: candidates differing only in
+        // pipeline schedule (or in simulation knobs) share one compiled
+        // template, keyed by the deduplicated graph index + the resolved
+        // strategy's structural hash.
+        let cache = self.compile_cache.then(TemplateCache::new);
 
         let threads = self.effective_threads(scenarios.len());
         let next = AtomicUsize::new(0);
@@ -213,6 +239,7 @@ impl SweepRunner {
                         gammas[cluster_of[i]],
                         plain,
                         self.coll_algo,
+                        cache.as_ref().map(|c| (c, graph_of[i] as u64)),
                     );
                     *results[i].lock().unwrap() = Some(out);
                 });
@@ -225,8 +252,11 @@ impl SweepRunner {
             .collect()
     }
 
-    /// Viable outcomes (no error, no OOM), best predicted throughput
-    /// first.
+    /// Rank outcomes: feasible candidates (no error, no OOM) first, best
+    /// predicted throughput to worst; **infeasible (OOM) candidates sort
+    /// below every feasible one**, themselves by throughput, so callers
+    /// printing the top-k never recommend a strategy that cannot fit.
+    /// Errored scenarios are excluded.
     pub fn rank(outcomes: &[SweepOutcome]) -> Vec<&SweepOutcome> {
         let mut viable: Vec<&SweepOutcome> = outcomes
             .iter()
@@ -237,10 +267,23 @@ impl SweepRunner {
                 .unwrap()
                 .total_cmp(&a.throughput().unwrap())
         });
+        // `oom && report.is_ok()`: run_one keeps the flag consistent
+        // with the report, but the fields are pub — never panic on a
+        // hand-built outcome.
+        let mut infeasible: Vec<&SweepOutcome> = outcomes
+            .iter()
+            .filter(|o| o.oom && o.report.is_ok())
+            .collect();
+        infeasible.sort_by(|a, b| {
+            let (ra, rb) = (a.report.as_ref().unwrap(), b.report.as_ref().unwrap());
+            rb.throughput.total_cmp(&ra.throughput)
+        });
+        viable.extend(infeasible);
         viable
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_one(
     sc: &Scenario,
     graph: &Graph,
@@ -248,10 +291,12 @@ fn run_one(
     gamma: f64,
     plain: bool,
     coll_algo: CollAlgo,
+    cache: Option<(&TemplateCache, u64)>,
 ) -> SweepOutcome {
     let fail = |e: String, compile_s: f64| SweepOutcome {
         scenario: *sc,
         report: Err(e),
+        oom: false,
         compile_s,
         sim_s: 0.0,
     };
@@ -260,8 +305,8 @@ fn run_one(
         Err(e) => return fail(e.to_string(), 0.0),
     };
     let t0 = Instant::now();
-    let eg = match crate::compiler::compile(graph, &tree, cluster) {
-        Ok(eg) => eg,
+    let eg = match crate::compiler::compile_with(graph, &tree, cluster, cache) {
+        Ok((eg, _stats)) => eg,
         Err(e) => return fail(e.to_string(), t0.elapsed().as_secs_f64()),
     };
     let compile_s = t0.elapsed().as_secs_f64();
@@ -279,9 +324,11 @@ fn run_one(
     let report = Htae::with_config(cluster, &est, config)
         .simulate(&eg)
         .map_err(|e| e.to_string());
+    let oom = report.as_ref().map(|r| r.oom).unwrap_or(false);
     SweepOutcome {
         scenario: *sc,
         report,
+        oom,
         compile_s,
         sim_s: t1.elapsed().as_secs_f64(),
     }
@@ -435,8 +482,89 @@ mod tests {
         }
         let ranked = SweepRunner::rank(&outcomes);
         assert!(!ranked.is_empty(), "at least plain DP must simulate");
-        for w in ranked.windows(2) {
+        // Feasible candidates first (throughput-sorted), then any OOM
+        // ones (never interleaved).
+        let n_feasible = ranked.iter().take_while(|o| !o.oom).count();
+        for w in ranked[..n_feasible].windows(2) {
             assert!(w[0].throughput().unwrap() >= w[1].throughput().unwrap());
+        }
+        assert!(
+            ranked[n_feasible..].iter().all(|o| o.oom),
+            "infeasible candidates must all sort below feasible ones"
+        );
+    }
+
+    /// Satellite pin: an OOM candidate is marked infeasible and ranked
+    /// below every feasible candidate even when its raw throughput would
+    /// place it first.
+    #[test]
+    fn oom_candidates_rank_below_feasible() {
+        let mk = |oom: bool, throughput: f64| SweepOutcome {
+            scenario: Scenario {
+                model: ModelKind::Vgg19,
+                batch: 16,
+                preset: Preset::HC1,
+                nodes: 1,
+                spec: StrategySpec::data_parallel(2),
+            },
+            report: Ok(SimReport {
+                step_ms: 1.0,
+                throughput,
+                peak_mem: vec![0],
+                peak_act: vec![0],
+                oom,
+                overlapped_ops: 0,
+                shared_ops: 0,
+                n_tasks: 1,
+                timeline: Vec::new(),
+                comm_phases: Vec::new(),
+            }),
+            oom,
+            compile_s: 0.0,
+            sim_s: 0.0,
+        };
+        let outcomes = vec![mk(true, 1000.0), mk(false, 10.0), mk(false, 50.0)];
+        let ranked = SweepRunner::rank(&outcomes);
+        assert_eq!(ranked.len(), 3);
+        assert!(!ranked[0].oom && !ranked[1].oom);
+        assert_eq!(ranked[0].report.as_ref().unwrap().throughput, 50.0);
+        assert!(ranked[2].oom, "the fastest-but-OOM candidate sorts last");
+        assert!(ranked[2].describe().contains("OOM"));
+    }
+
+    /// Tentpole pin at the sweep level: candidates differing only in
+    /// pipeline schedule share one compiled template, and the ranked
+    /// results are bit-identical with the cache disabled.
+    #[test]
+    fn sweep_results_identical_with_and_without_compile_cache() {
+        let specs = candidate_grid_with_schedules(2, 16, &PipelineSchedule::all());
+        let scenarios: Vec<Scenario> = specs
+            .into_iter()
+            .map(|spec| Scenario {
+                model: ModelKind::Vgg19,
+                batch: 16,
+                preset: Preset::HC1,
+                nodes: 1,
+                spec,
+            })
+            .collect();
+        let cached = SweepRunner::new().with_threads(2).run(&scenarios);
+        let uncached = SweepRunner::new()
+            .with_threads(2)
+            .compile_cache(false)
+            .run(&scenarios);
+        for (a, b) in cached.iter().zip(&uncached) {
+            assert_eq!(a.scenario, b.scenario);
+            match (&a.report, &b.report) {
+                (Ok(ra), Ok(rb)) => {
+                    assert_eq!(ra.step_ms, rb.step_ms, "{}", a.scenario.label());
+                    assert_eq!(ra.peak_mem, rb.peak_mem, "{}", a.scenario.label());
+                    assert_eq!(ra.n_tasks, rb.n_tasks, "{}", a.scenario.label());
+                }
+                (Err(ea), Err(eb)) => assert_eq!(ea, eb),
+                _ => panic!("cache changed outcome kind for {}", a.scenario.label()),
+            }
+            assert_eq!(a.oom, b.oom);
         }
     }
 

@@ -70,6 +70,43 @@ impl ResolvedStrategy {
         d.dedup();
         d
     }
+
+    /// Structural hash of everything the compiler's **template emission**
+    /// pass depends on: per-layer computation configs, per-tensor stored
+    /// layouts, the stage partition, the micro-batch count, and the
+    /// recompute flags.
+    ///
+    /// The pipeline schedule (`ScheduleConfig::pipeline`) and the
+    /// `max_ongoing_micro_batch` bound are **deliberately excluded** —
+    /// they only affect schedule weaving and instantiation — so sweep
+    /// candidates differing only in those share one compiled template
+    /// through [`crate::compiler::TemplateCache`].
+    ///
+    /// `seed` lets callers derive several independent hashes of the same
+    /// structure (the cache keys on two to make collisions negligible).
+    pub fn structural_hash(&self, seed: u64) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        seed.hash(&mut h);
+        for c in &self.comp {
+            c.partition.hash(&mut h);
+            c.devices.hash(&mut h);
+        }
+        for l in &self.mem {
+            l.axis_degrees.hash(&mut h);
+            for p in &l.parts {
+                p.groups.hash(&mut h);
+            }
+        }
+        for s in &self.stages {
+            s.layers.hash(&mut h);
+            s.devices.hash(&mut h);
+            s.schedule.n_micro_batch.hash(&mut h);
+            s.schedule.recompute.hash(&mut h);
+        }
+        self.stage_of_layer.hash(&mut h);
+        h.finish()
+    }
 }
 
 /// Resolve a strategy tree against its model.

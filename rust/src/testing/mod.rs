@@ -122,16 +122,18 @@ pub fn adhoc_exec_graph(
     n_devices: usize,
 ) -> crate::compiler::ExecGraph {
     let n = tasks.len();
-    crate::compiler::ExecGraph {
+    crate::compiler::ExecGraph::from_tasks(
         tasks,
-        succs: vec![Vec::new(); n],
-        preds: vec![0; n],
-        n_stages: 1,
-        n_devices,
-        static_mem: vec![0; n_devices],
-        batch: 1,
-        stage_schedule: Vec::new(),
-    }
+        vec![Vec::new(); n],
+        vec![0; n],
+        crate::compiler::ExecMeta {
+            n_stages: 1,
+            n_devices,
+            static_mem: vec![0; n_devices],
+            batch: 1,
+            stage_schedule: Vec::new(),
+        },
+    )
 }
 
 /// Wrap a task payload with neutral metadata for [`adhoc_exec_graph`].

@@ -9,7 +9,7 @@
 //! interleaved schedules are visually distinguishable in Perfetto
 //! (select an event, or color by `args.micro`).
 
-use crate::compiler::{CommClass, ExecGraph, Task, TaskKind};
+use crate::compiler::{CommClass, ExecGraph, TaskRef, TaskView};
 use crate::executor::{PhaseSpan, Span};
 use crate::graph::Graph;
 use crate::util::json::Json;
@@ -60,33 +60,33 @@ pub fn chrome_trace_with_phases(
         }
     }
     for span in timeline {
-        let task = &eg.tasks[span.task];
+        let task = eg.view(span.task);
         let ts = span.start as f64 / 1e6; // ps → µs
         let dur = (span.end - span.start) as f64 / 1e6;
         let name = task.label(graph);
-        match &task.kind {
-            TaskKind::Comp(c) => {
-                events.push(duration_event(&name, c.device, TID_COMP, ts, dur, task));
+        match task.kind {
+            TaskRef::Comp(c) => {
+                events.push(duration_event(&name, c.device, TID_COMP, ts, dur, &task));
             }
-            TaskKind::Comm(c) => {
+            TaskRef::Comm(c) => {
                 let tid = match c.class {
                     CommClass::Feature => TID_FEAT,
                     CommClass::Gradient => TID_GRAD,
                 };
                 for &d in &c.group {
-                    events.push(duration_event(&name, d, tid, ts, dur, task));
+                    events.push(duration_event(&name, d, tid, ts, dur, &task));
                 }
             }
         }
     }
     for ph in phases {
-        let task = &eg.tasks[ph.task];
+        let task = eg.view(ph.task);
         let ts = ph.start as f64 / 1e6; // ps → µs
         let dur = (ph.end - ph.start) as f64 / 1e6;
-        if let TaskKind::Comm(c) = &task.kind {
+        if let TaskRef::Comm(c) = task.kind {
             let name = format!("{}·{}", c.kind.name(), ph.label);
             for &d in &c.group {
-                events.push(duration_event(&name, d, TID_PHASE, ts, dur, task));
+                events.push(duration_event(&name, d, TID_PHASE, ts, dur, &task));
             }
         }
     }
@@ -96,7 +96,14 @@ pub fn chrome_trace_with_phases(
     ])
 }
 
-fn duration_event(name: &str, pid: usize, tid: f64, ts: f64, dur: f64, task: &Task) -> Json {
+fn duration_event(
+    name: &str,
+    pid: usize,
+    tid: f64,
+    ts: f64,
+    dur: f64,
+    task: &TaskView<'_>,
+) -> Json {
     Json::obj(vec![
         ("ph", Json::Str("X".into())),
         ("name", Json::Str(name.into())),

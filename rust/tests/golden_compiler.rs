@@ -1,0 +1,309 @@
+//! Golden equivalence suite: the pass-based compiler (template →
+//! weave → instantiate → finalize) against the retained monolithic
+//! oracle (`compile_legacy`).
+//!
+//! Pins, per the refactor's acceptance criteria:
+//!
+//! - **identical task multiset** — (kind, device/group, flops, bytes,
+//!   stage, micro, phase, layer, alloc/free events) — on GPT-2, ResNet-50
+//!   and DLRM across DP / TP / PP / ZeRO / recompute and all three
+//!   pipeline schedules;
+//! - **identical makespan** (≤ 1e-9 relative) and **bit-identical peak
+//!   memory** under HTAE;
+//! - **template emission runs once per segment** — the pass counter is
+//!   independent of the micro-batch count (micro=32 does exactly the
+//!   layer-emission and transform-inference work of micro=1);
+//! - **instantiation is id-offset-pure** — template instance `i+1` is
+//!   instance `i` shifted: same task content with `micro + 1`, and (for
+//!   `i ≥ 1`) the same dependency pattern shifted one micro down.
+
+use proteus::compiler::{
+    compile, compile_legacy, compile_with, ExecGraph, TaskRef,
+};
+use proteus::prelude::*;
+
+/// Canonical, order-independent signature of one task. Floats are
+/// compared exactly via their bit patterns.
+fn task_sig(eg: &ExecGraph, i: usize) -> String {
+    let payload = match eg.kind(i) {
+        TaskRef::Comp(c) => format!(
+            "comp d={} op={:?} f={:016x} r={:016x} w={:016x}",
+            c.device,
+            c.op,
+            c.flops.to_bits(),
+            c.bytes_read.to_bits(),
+            c.bytes_written.to_bits()
+        ),
+        TaskRef::Comm(c) => format!(
+            "comm {:?} g={:?} b={} class={:?}",
+            c.kind, c.group, c.bytes, c.class
+        ),
+    };
+    let m = eg.meta(i);
+    let mut allocs: Vec<(usize, u64)> = eg.allocs(i).to_vec();
+    let mut frees: Vec<(usize, u64)> = eg.frees(i).to_vec();
+    allocs.sort_unstable();
+    frees.sort_unstable();
+    format!(
+        "{payload} | layer={:?} stage={} micro={} phase={:?} | A{allocs:?} F{frees:?}",
+        m.layer, m.stage, m.micro, m.phase
+    )
+}
+
+fn multiset(eg: &ExecGraph) -> Vec<String> {
+    let mut v: Vec<String> = (0..eg.n_tasks()).map(|i| task_sig(eg, i)).collect();
+    v.sort();
+    v
+}
+
+/// Assert pipeline and oracle agree on one `(model, spec)` case:
+/// identical task multiset, identical makespan (1e-9 relative),
+/// bit-identical peak memory.
+fn assert_equivalent(model: ModelKind, batch: usize, preset: Preset, spec: StrategySpec) {
+    let g = model.build(batch);
+    let c = Cluster::preset(preset, 1);
+    let tree = build_strategy(&g, spec).unwrap();
+    let new = compile(&g, &tree, &c).unwrap();
+    let old = compile_legacy(&g, &tree, &c).unwrap();
+    let label = format!("{} b={batch} {}", model.name(), spec.label());
+    assert!(new.is_dag(), "{label}: pipeline output must be a DAG");
+    assert!(old.is_dag(), "{label}: oracle output must be a DAG");
+    assert_eq!(
+        new.n_tasks(),
+        old.n_tasks(),
+        "{label}: task counts differ"
+    );
+    assert_eq!(new.static_mem, old.static_mem, "{label}: static memory");
+    let (ms_new, ms_old) = (multiset(&new), multiset(&old));
+    if ms_new != ms_old {
+        // Report the first differing signature, not 10k lines.
+        for (a, b) in ms_new.iter().zip(&ms_old) {
+            assert_eq!(a, b, "{label}: first multiset divergence");
+        }
+        panic!("{label}: multisets differ in length tail");
+    }
+    // Identical makespan + memory under HTAE (deterministic config).
+    let est = OpEstimator::analytical(&c);
+    let htae = Htae::new(&c, &est);
+    let rn = htae.simulate(&new).unwrap();
+    let ro = htae.simulate(&old).unwrap();
+    let rel = (rn.step_ms - ro.step_ms).abs() / ro.step_ms.max(1e-12);
+    assert!(
+        rel < 1e-9,
+        "{label}: makespan diverges — pipeline {} vs oracle {} (rel {rel:.2e})",
+        rn.step_ms,
+        ro.step_ms
+    );
+    assert_eq!(rn.peak_mem, ro.peak_mem, "{label}: peak memory");
+    assert_eq!(rn.peak_act, ro.peak_act, "{label}: activation watermark");
+    assert_eq!(rn.oom, ro.oom, "{label}: oom");
+}
+
+#[test]
+fn golden_gpt2_dp_tp_zero_recompute() {
+    for spec in [
+        StrategySpec::data_parallel(4),
+        StrategySpec::hybrid(1, 2, 1, 1),
+        StrategySpec::hybrid(2, 2, 1, 1),
+        StrategySpec::data_parallel(4).with_zero(),
+        StrategySpec::data_parallel(4).with_recompute(),
+        StrategySpec::data_parallel(2).with_zero().with_recompute(),
+        // Gradient accumulation without pipelining (legacy micro path).
+        StrategySpec::hybrid(2, 1, 1, 4),
+        // ZeRO gathers coexisting with OTHER feature comms — the case
+        // where the preamble's anchored micro-0 placement matters: the
+        // executor arbitrates same-stream ready comms by task id, so
+        // gathers must keep the monolith's id positions relative to TP
+        // all-reduces / pipeline p2ps.
+        StrategySpec::hybrid(2, 2, 1, 1).with_zero(),
+        StrategySpec::hybrid(2, 1, 1, 4).with_zero(),
+    ] {
+        assert_equivalent(ModelKind::Gpt2, 16, Preset::HC2, spec);
+    }
+}
+
+/// ZeRO under pipelining: parameter gathers + boundary p2ps share the
+/// feature stream, so this pins the anchored-preamble id placement on
+/// the pipelined path too.
+#[test]
+fn golden_zero_with_pipeline() {
+    for sched in [PipelineSchedule::GpipeFillDrain, PipelineSchedule::OneFOneB] {
+        // dp × pp so ZeRO has replica groups to shard: every stage then
+        // emits parameter all-gathers alongside its boundary p2ps.
+        assert_equivalent(
+            ModelKind::Gpt2,
+            16,
+            Preset::HC2,
+            StrategySpec::hybrid(2, 1, 2, 4).with_zero().with_schedule(sched),
+        );
+    }
+}
+
+#[test]
+fn golden_gpt2_pipeline_all_schedules() {
+    for sched in [
+        PipelineSchedule::GpipeFillDrain,
+        PipelineSchedule::OneFOneB,
+        PipelineSchedule::Interleaved { v: 2 },
+    ] {
+        assert_equivalent(
+            ModelKind::Gpt2,
+            16,
+            Preset::HC2,
+            StrategySpec::hybrid(1, 1, 4, 8).with_schedule(sched),
+        );
+        // Hybrid dp × pp.
+        assert_equivalent(
+            ModelKind::Gpt2,
+            16,
+            Preset::HC2,
+            StrategySpec::hybrid(2, 1, 2, 4).with_schedule(sched),
+        );
+    }
+}
+
+#[test]
+fn golden_resnet_and_dlrm() {
+    for spec in [
+        StrategySpec::data_parallel(2),
+        StrategySpec::data_parallel(4).with_zero(),
+        StrategySpec::data_parallel(2).with_recompute(),
+        StrategySpec::hybrid(1, 1, 2, 4),
+    ] {
+        assert_equivalent(ModelKind::ResNet50, 32, Preset::HC2, spec);
+    }
+    // DLRM: plain DP plus the paper's S2 expert strategy (sharded
+    // embedding tables → feature reduce-scatters).
+    use proteus::strategy::paper::{batch_for, s2};
+    let m = ModelKind::Dlrm;
+    assert_equivalent(m, batch_for(m, 8), Preset::HC2, StrategySpec::data_parallel(8));
+    assert_equivalent(m, batch_for(m, 8), Preset::HC2, s2(m, 8));
+}
+
+/// Acceptance pin: GPT-2 pp=4 at micro=32 matches the oracle task-for-
+/// task while template emission runs **exactly once per segment** — the
+/// pass counters at micro=32 equal those at micro=1 (compile work is
+/// O(tasks-per-micro), not O(micro × model)).
+#[test]
+fn golden_gpt2_pp4_micro32_with_constant_template_work() {
+    let g = ModelKind::Gpt2.build(32);
+    let c = Cluster::preset(Preset::HC2, 1);
+    let stats_at = |micro: usize| {
+        let spec = StrategySpec::hybrid(1, 1, 4, micro);
+        let tree = build_strategy(&g, spec).unwrap();
+        compile_with(&g, &tree, &c, None).unwrap()
+    };
+    let (_eg1, s1) = stats_at(1);
+    let (eg32, s32) = stats_at(32);
+    // Pass-counter assertion: template emission ran once per segment —
+    // identical layer-emission and inference counts regardless of the
+    // micro-batch count (ratio 1, "well below linear" = 32×).
+    assert_eq!(
+        s32.template_layer_emissions, s1.template_layer_emissions,
+        "template emission must not scale with micro count"
+    );
+    assert_eq!(
+        s32.template_transforms, s1.template_transforms,
+        "strategy-transform inference must not scale with micro count"
+    );
+    assert_eq!(s32.template_slots, 2 * s32.n_segments);
+    // Every (fwd, bwd) layer walk happened exactly once (no recompute).
+    assert_eq!(s32.template_layer_emissions, 2 * g.layers.len());
+    assert_eq!(s32.n_micro, 32);
+    // And the stamped graph still matches the oracle task-for-task.
+    let spec = StrategySpec::hybrid(1, 1, 4, 32);
+    let tree = build_strategy(&g, spec).unwrap();
+    let old = compile_legacy(&g, &tree, &c).unwrap();
+    assert_eq!(multiset(&eg32), multiset(&old), "pp4 micro=32 multiset");
+}
+
+/// Property: instantiation is id-offset-pure. For every slot template,
+/// instance `i+1` equals instance `i` shifted — identical task content
+/// at `micro + 1` — and for **forward** slots past the first instance
+/// the dependency pattern is a pure one-micro shift too. (Backward
+/// slots' workspace edge deliberately points at the device's *latest*
+/// forward — a schedule-dependent target inherited from the monolithic
+/// emitter and pinned by the golden multiset + makespan tests instead.)
+#[test]
+fn instantiation_is_id_offset_pure() {
+    let g = ModelKind::Gpt2.build(16);
+    let c = Cluster::preset(Preset::HC2, 1);
+    let n_micro = 4u32;
+    // GPipe keeps `max_ongoing` unbounded, so the shift property is
+    // exact from instance 1 on.
+    let spec = StrategySpec::hybrid(1, 1, 4, n_micro as usize)
+        .with_schedule(PipelineSchedule::GpipeFillDrain);
+    let tree = build_strategy(&g, spec).unwrap();
+    let (eg, stats) = compile_with(&g, &tree, &c, None).unwrap();
+    // Span offsets are exact only without anchored preamble tasks
+    // (micro-0 instances interleave them); this strategy has none.
+    assert_eq!(stats.preamble_tasks, 0, "test assumes no param gathers");
+    let spans = &stats.instance_spans;
+    assert!(!spans.is_empty());
+    // Locate every task's (slot, micro, offset) and every instance's
+    // base id.
+    let n = eg.n_tasks();
+    let mut place: Vec<Option<(u32, u32, u32)>> = vec![None; n];
+    let mut base = std::collections::HashMap::new();
+    for sp in spans {
+        base.insert((sp.slot, sp.micro), sp.start);
+        for off in 0..sp.len {
+            place[(sp.start + off) as usize] = Some((sp.slot, sp.micro, off));
+        }
+    }
+    // Dep lists (invert succs).
+    let mut deps: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for u in 0..n {
+        for &v in eg.succs(u) {
+            deps[v].push(u);
+        }
+    }
+    // Mask the micro token out of a signature (tokens are
+    // space-delimited, so this replaces exactly the micro field).
+    let masked = |id: usize, m: u32| -> String {
+        task_sig(&eg, id).replace(&format!(" micro={m} "), " micro=* ")
+    };
+    // Map an id one micro down: preamble ids are micro-independent.
+    let down = |id: usize| -> usize {
+        match place[id] {
+            Some((s, m, off)) if m >= 1 => (base[&(s, m - 1)] + off) as usize,
+            Some(_) => panic!("forward dep into micro 0 from an instance ≥ 2"),
+            None => id,
+        }
+    };
+    let mut checked = 0;
+    for sp in spans {
+        if sp.micro + 1 >= n_micro {
+            continue;
+        }
+        let upper_base = base[&(sp.slot, sp.micro + 1)];
+        for off in 0..sp.len {
+            let lo = (sp.start + off) as usize;
+            let hi = (upper_base + off) as usize;
+            // Content: identical payload/stage/layer/phase, micro + 1.
+            assert_eq!(
+                masked(lo, sp.micro),
+                masked(hi, sp.micro + 1),
+                "slot {} offset {off}: instance content must shift cleanly",
+                sp.slot
+            );
+            // Dependency pattern: forward slots, instances ≥ 1 only.
+            let is_fwd_slot = sp.slot % 2 == 0;
+            if is_fwd_slot && sp.micro >= 1 {
+                let mut shifted: Vec<usize> = deps[hi].iter().map(|&d| down(d)).collect();
+                shifted.sort_unstable();
+                let mut lower: Vec<usize> = deps[lo].clone();
+                lower.sort_unstable();
+                assert_eq!(
+                    shifted, lower,
+                    "slot {} offset {off} micro {}→{}: dep pattern must be a pure shift",
+                    sp.slot,
+                    sp.micro,
+                    sp.micro + 1
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 100, "property must cover real instances: {checked}");
+}

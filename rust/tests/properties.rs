@@ -73,11 +73,11 @@ fn random_strategies_compile_to_balanced_dags() {
         }
         // Alloc/free balance per device.
         let mut bal = vec![0i64; eg.n_devices];
-        for t in &eg.tasks {
-            for &(d, b) in &t.allocs {
+        for id in 0..eg.n_tasks() {
+            for &(d, b) in eg.allocs(id) {
                 bal[d] += b as i64;
             }
-            for &(d, b) in &t.frees {
+            for &(d, b) in eg.frees(id) {
                 bal[d] -= b as i64;
             }
         }
@@ -99,12 +99,11 @@ fn flops_are_conserved_across_shardings() {
         let tree = build_strategy(&model, spec).map_err(|e| e.to_string())?;
         let sharded = compile(&model, &tree, &cluster).map_err(|e| e.to_string())?;
         let non_opt = |eg: &ExecGraph| -> f64 {
-            eg.tasks
-                .iter()
+            eg.iter()
                 .filter(|t| t.phase != proteus::compiler::Phase::Optim)
                 .filter(|t| t.phase != proteus::compiler::Phase::Recomp)
-                .filter_map(|t| match &t.kind {
-                    proteus::compiler::TaskKind::Comp(c) => Some(c.flops),
+                .filter_map(|t| match t.kind {
+                    proteus::compiler::TaskRef::Comp(c) => Some(c.flops),
                     _ => None,
                 })
                 .sum()
@@ -298,8 +297,8 @@ fn sharded_costs_shrink_with_more_devices() {
             let costs = est.estimate_all(&eg).map_err(|e| e.to_string())?;
             // Max per-device compute sum (communication excluded).
             let mut per = vec![0u64; eg.n_devices];
-            for (t, &c) in eg.tasks.iter().zip(&costs) {
-                if let proteus::compiler::TaskKind::Comp(ct) = &t.kind {
+            for (t, &c) in eg.iter().zip(&costs) {
+                if let proteus::compiler::TaskRef::Comp(ct) = t.kind {
                     per[ct.device] += c;
                 }
             }

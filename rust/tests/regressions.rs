@@ -2,7 +2,7 @@
 //! reproduction (DESIGN.md §10) plus end-to-end pattern checks on the
 //! paper's expert strategies.
 
-use proteus::compiler::{CollectiveKind, CommClass, Phase, TaskKind};
+use proteus::compiler::{CollectiveKind, CommClass, Phase, TaskRef};
 use proteus::executor::calibrate;
 use proteus::prelude::*;
 use proteus::strategy::paper::{batch_for, s2};
@@ -19,7 +19,7 @@ fn megatron_block_emits_one_allreduce_per_sublock() {
     let n_blocks = 12;
     let fwd_ars = eg.count(|t| {
         t.phase == Phase::Fwd
-            && matches!(&t.kind, TaskKind::Comm(c)
+            && matches!(t.kind, TaskRef::Comm(c)
                 if c.kind == CollectiveKind::AllReduce && c.class == CommClass::Feature)
     });
     // 2 per transformer block (attention out-proj + MLP fc2) + 1 for the
@@ -32,7 +32,7 @@ fn megatron_block_emits_one_allreduce_per_sublock() {
     // gather is the LM-head logits one.
     let fwd_ags = eg.count(|t| {
         t.phase == Phase::Fwd
-            && matches!(&t.kind, TaskKind::Comm(c) if c.kind == CollectiveKind::AllGather)
+            && matches!(t.kind, TaskRef::Comm(c) if c.kind == CollectiveKind::AllGather)
     });
     assert!(fwd_ags <= 1, "unexpected gathers on the residual stream: {fwd_ags}");
 }
@@ -48,7 +48,7 @@ fn dlrm_sharded_embeddings_reduce_scatter() {
     let c = Cluster::preset(Preset::HC2, 1);
     let eg = compile(&g, &tree, &c).unwrap();
     let rs = eg.count(|t| {
-        matches!(&t.kind, TaskKind::Comm(c)
+        matches!(t.kind, TaskRef::Comm(c)
             if c.kind == CollectiveKind::ReduceScatter && c.class == CommClass::Feature)
     });
     assert!(rs >= 26, "one reduce-scatter per sharded table, got {rs}");
@@ -100,8 +100,9 @@ fn recompute_waits_for_backward() {
     // block starts (excluding the final segment whose gate is the loss).
     let mut fwd_end = vec![0u64; eg.n_devices];
     for s in &r.timeline {
-        if eg.tasks[s.task].phase == Phase::Fwd && !eg.tasks[s.task].is_comm() {
-            if let TaskKind::Comp(ct) = &eg.tasks[s.task].kind {
+        let v = eg.view(s.task);
+        if v.phase == Phase::Fwd && !v.is_comm() {
+            if let TaskRef::Comp(ct) = v.kind {
                 fwd_end[ct.device] = fwd_end[ct.device].max(s.end);
             }
         }
@@ -109,8 +110,8 @@ fn recompute_waits_for_backward() {
     let mut early_recomp = 0;
     let mut total_recomp = 0;
     for s in &r.timeline {
-        if eg.tasks[s.task].phase == Phase::Recomp {
-            if let TaskKind::Comp(ct) = &eg.tasks[s.task].kind {
+        if eg.meta(s.task).phase == Phase::Recomp {
+            if let TaskRef::Comp(ct) = eg.kind(s.task) {
                 total_recomp += 1;
                 // Recompute of non-final blocks must start at/after the
                 // device's forward frontier minus the last segment.
