@@ -1,0 +1,117 @@
+//! Automated strategy **optimization** over non-uniform strategy trees
+//! — one step past `strategy_search.rs`'s uniform grid ranking.
+//!
+//! The uniform `DP × MP × PP` sweep scores a few hundred expert-shaped
+//! candidates; the paper's strategy tree can express far more (per-stage
+//! degrees, moved stage boundaries, per-stage ZeRO). This example:
+//!
+//! 1. ranks the deduplicated uniform grid for GPT-2 on two HC2 nodes
+//!    (16 GPUs) with the parallel `SweepRunner`;
+//! 2. seeds a simulated-annealing `Searcher` from the grid's best
+//!    candidate plus the heuristic expert points;
+//! 3. anneals over the non-uniform space — re-splitting stage degrees,
+//!    moving boundaries, toggling per-stage ZeRO, switching schedules
+//!    and collective algorithms — under a fixed simulation budget.
+//!
+//! Because one chain starts at the grid optimum and the searcher's
+//! scoring path is shared with the sweep, the search result can only
+//! match or beat the grid — the interesting output is *how much* the
+//! non-uniform moves buy on top.
+//!
+//! ```bash
+//! cargo run --release --example auto_search
+//! # equivalently: cargo run --release -- search --model gpt2 --batch 64 \
+//! #               --preset HC2 --nodes 2 --budget 300 --chains 4 --seed 42
+//! ```
+
+use proteus::prelude::*;
+use proteus::runtime::default_inits;
+use proteus::util::table::Table;
+
+fn main() -> proteus::Result<()> {
+    let model = ModelKind::Gpt2;
+    let batch = 64;
+    let preset = Preset::HC2;
+    let nodes = 2;
+    let cluster = Cluster::preset(preset, nodes);
+    let n = cluster.num_devices();
+    let graph = model.build(batch);
+
+    // --- 1. Baseline: the deduplicated uniform grid. -------------------
+    let specs = dedupe_specs(&graph, candidate_grid(n, batch));
+    let scenarios: Vec<Scenario> = specs
+        .into_iter()
+        .map(|spec| Scenario {
+            model,
+            batch,
+            preset,
+            nodes,
+            spec,
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let outcomes = SweepRunner::new().run(&scenarios);
+    let ranked = SweepRunner::rank(&outcomes);
+    let Some(grid_best) = ranked.iter().find(|o| !o.oom) else {
+        println!("no feasible uniform strategy — nothing to improve on");
+        return Ok(());
+    };
+    let grid_tput = grid_best.throughput().unwrap();
+    println!(
+        "uniform grid: {} candidates in {:.2?}; best {} at {:.1} samples/s",
+        outcomes.len(),
+        t0.elapsed(),
+        grid_best.scenario.spec.label(),
+        grid_tput,
+    );
+
+    // --- 2. Anneal from the grid optimum + expert seeds. ----------------
+    let mut inits = vec![SearchPoint::from_uniform(&graph, grid_best.scenario.spec)?];
+    inits.extend(default_inits(&graph, n, CollAlgo::Auto));
+    let config = SearchConfig {
+        seed: 42,
+        budget: 300,
+        chains: 4,
+        ..SearchConfig::default()
+    };
+    let t1 = std::time::Instant::now();
+    let result = Searcher::new(config).run(&graph, &cluster, &inits)?;
+    println!(
+        "\nannealed {} candidates in {:.2?} ({} template-cache hits):",
+        result.evals,
+        t1.elapsed(),
+        result.cache_hits,
+    );
+    let mut table = Table::new(&["chain", "evals", "accepted", "best samples/s", "best strategy"]);
+    for c in &result.chains {
+        table.row(vec![
+            c.chain.to_string(),
+            c.evals.to_string(),
+            c.accepted.to_string(),
+            c.best
+                .as_ref()
+                .map(|e| format!("{:.1}", e.throughput))
+                .unwrap_or_else(|| "-".into()),
+            c.best
+                .as_ref()
+                .map(|e| e.label.clone())
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // --- 3. The verdict. ------------------------------------------------
+    let best = result.best.expect("seeded from a feasible point");
+    let gain = (best.throughput / grid_tput - 1.0) * 100.0;
+    println!(
+        "\nsearch best: {} at {:.1} samples/s ({:+.2}% vs uniform grid best)",
+        best.label, best.throughput, gain,
+    );
+    assert!(
+        best.throughput >= grid_tput,
+        "search is seeded at the grid optimum and can only improve"
+    );
+    println!("spec JSON (feed back via `proteus search --resume`):");
+    println!("{}", best.point.spec.to_json().to_string_pretty());
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! Strategy-search quality gate: simulated annealing over non-uniform
+//! strategy trees vs the exhaustive uniform grid (the paper's §I
+//! automated-parallelization use case, FlexFlow-style).
+//!
+//! For GPT-2 at 16 devices and DLRM at 32 devices, rank the
+//! deduplicated `DP × MP × PP` grid with the `SweepRunner`, then anneal
+//! a seeded `Searcher` whose chain 0 starts at the grid optimum (the
+//! other chains start from heuristic expert points). Because the
+//! searcher shares the sweep's scoring path, its result is pinned to
+//! **never fall below the grid best** — the printed delta is the value
+//! of the non-uniform moves (per-stage re-splits, boundary shifts,
+//! per-stage ZeRO, schedule / collective swaps).
+//!
+//! A reduced-budget version of the same invariant runs as a cargo test
+//! (`rust/tests/regressions.rs::search_beats_or_matches_uniform_grid`).
+//!
+//! Run: `cargo bench --bench fig_search`
+
+use proteus::prelude::*;
+use proteus::runtime::default_inits;
+use proteus::util::table::Table;
+
+struct Case {
+    model: ModelKind,
+    batch: usize,
+    preset: Preset,
+    nodes: usize,
+}
+
+fn main() {
+    let cases = [
+        Case {
+            model: ModelKind::Gpt2,
+            batch: 64,
+            preset: Preset::HC2,
+            nodes: 2, // 16 GPUs
+        },
+        Case {
+            model: ModelKind::Dlrm,
+            batch: 128,
+            preset: Preset::HC2,
+            nodes: 4, // 32 GPUs
+        },
+    ];
+    println!("\n=== fig_search: annealed non-uniform search vs uniform grid ===\n");
+    let mut table = Table::new(&[
+        "model",
+        "gpus",
+        "grid best",
+        "grid samples/s",
+        "search best",
+        "search samples/s",
+        "gain %",
+    ]);
+    for case in &cases {
+        let cluster = Cluster::preset(case.preset, case.nodes);
+        let n = cluster.num_devices();
+        let graph = case.model.build(case.batch);
+
+        let specs = dedupe_specs(&graph, candidate_grid(n, case.batch));
+        let scenarios: Vec<Scenario> = specs
+            .into_iter()
+            .map(|spec| Scenario {
+                model: case.model,
+                batch: case.batch,
+                preset: case.preset,
+                nodes: case.nodes,
+                spec,
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let outcomes = SweepRunner::new().run(&scenarios);
+        let grid_s = t0.elapsed();
+        let ranked = SweepRunner::rank(&outcomes);
+        let grid_best = ranked
+            .iter()
+            .find(|o| !o.oom)
+            .expect("a feasible uniform candidate exists");
+        let grid_tput = grid_best.throughput().unwrap();
+
+        let mut inits =
+            vec![SearchPoint::from_uniform(&graph, grid_best.scenario.spec).expect("seedable")];
+        inits.extend(default_inits(&graph, n, CollAlgo::Auto));
+        let config = SearchConfig {
+            seed: 42,
+            budget: 240,
+            chains: 4,
+            ..SearchConfig::default()
+        };
+        let t1 = std::time::Instant::now();
+        let result = Searcher::new(config)
+            .run(&graph, &cluster, &inits)
+            .expect("search runs");
+        let search_s = t1.elapsed();
+        let best = result.best.expect("seeded from a feasible point");
+        assert!(
+            best.throughput >= grid_tput,
+            "{}: search {} ({:.2}) fell below grid best {} ({:.2})",
+            case.model.name(),
+            best.label,
+            best.throughput,
+            grid_best.scenario.spec.label(),
+            grid_tput,
+        );
+        let gain = (best.throughput / grid_tput - 1.0) * 100.0;
+        table.row(vec![
+            case.model.name().into(),
+            n.to_string(),
+            grid_best.scenario.spec.label(),
+            format!("{grid_tput:.1}"),
+            best.label.clone(),
+            format!("{:.1}", best.throughput),
+            format!("{gain:+.2}"),
+        ]);
+        println!(
+            "{}: grid {} candidates in {:.2?}; search {} sims in {:.2?} \
+             ({} cache hits / {} misses)",
+            case.model.name(),
+            outcomes.len(),
+            grid_s,
+            result.evals,
+            search_s,
+            result.cache_hits,
+            result.cache_misses,
+        );
+    }
+    println!();
+    print!("{}", table.render());
+    println!("\nsearch-found throughput ≥ best uniform candidate: PASS");
+}

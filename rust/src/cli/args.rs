@@ -22,12 +22,13 @@ COMMANDS:
   simulate    Predict throughput/memory of one (model, strategy, cluster)
   compare     Sweep the strategies of a JSON experiment config
   sweep       Rank an exhaustive strategy grid in parallel (SweepRunner)
+  search      Simulated-annealing search over non-uniform strategy trees
   calibrate   Measure the overlap factor gamma per hardware preset
   info        Print a model's structure statistics
   bench-cost  Benchmark the PJRT vs analytical cost backends
   help        This message (also: --help on any command)
 
-WORKLOAD OPTIONS (simulate, sweep):
+WORKLOAD OPTIONS (simulate, sweep, search):
   --model <resnet50|inception_v3|vgg19|gpt2|gpt-1.5b|dlrm>
   --batch N         global batch size
   --preset <HC1|HC2|HC3>  hardware preset
@@ -46,10 +47,21 @@ SWEEP OPTIONS:
   --schedules <all|gpipe|1f1b|interleaved[:v]|a,b,...>
                     schedule set to enumerate for pipelined candidates
                     (default 1f1b)
-  --threads N       worker threads (0 = auto)
+  --threads N       worker threads (0 = auto; search: capped at chains)
   --top N           ranked rows to print (default 10)
 
-COLLECTIVES (simulate, sweep):
+SEARCH OPTIONS:
+  --seed N          base RNG seed (default 42); a fixed seed makes the
+                    whole search bit-reproducible
+  --budget N        total simulation budget across chains (default 200)
+  --chains K        independent annealing chains (default 4)
+  --init LABEL      seed every chain from a uniform spec label, e.g.
+                    4x2x2(8)+1f1b+zero (default: heuristic expert set)
+  --resume FILE     seed from the 'best' of a previous --json output
+  --fixed-coll      do not mutate the collective algorithm
+  --wall-secs S     optional wall-clock cap (breaks reproducibility)
+
+COLLECTIVES (simulate, sweep, search):
   --coll-algo <ring|tree|hier|auto|mono>
                     collective-algorithm lowering (default auto):
                     flat ring, binomial tree, NCCL-style 2-level
@@ -58,8 +70,8 @@ COLLECTIVES (simulate, sweep):
                     alpha-beta ablation path (fig9)
 
 OUTPUT / VALIDATION:
-  --json            machine-readable JSON on stdout (simulate, sweep;
-                    schemas documented in README.md)
+  --json            machine-readable JSON on stdout (simulate, sweep,
+                    search; schemas documented in README.md)
   --compile-stats   print per-pass compiler timings and counters
                     (template/weave/instantiate/finalize; simulate)
   --plain           disable runtime-behavior modeling (ablation)

@@ -12,6 +12,10 @@
 //! proteus sweep     --model gpt2 --batch 64 --preset HC2 --nodes 2
 //!                   [--schedules all|gpipe|1f1b|interleaved[:v]]
 //!                   [--threads N] [--top 10] [--plain] [--truth] [--json]
+//! proteus search    --model gpt2 --batch 64 --preset HC2 --nodes 2
+//!                   [--seed 42] [--budget 200] [--chains 4] [--threads N]
+//!                   [--init LABEL | --resume FILE] [--fixed-coll]
+//!                   [--wall-secs S] [--plain] [--json]
 //! proteus calibrate [--out configs/gamma.json]
 //! proteus info      --model resnet50 [--batch 32]
 //! proteus bench-cost [--rows 65536] [--artifacts ...]
@@ -50,6 +54,7 @@ pub fn run(args: &Args) -> Result<()> {
         "simulate" => cmd_simulate(args),
         "compare" => cmd_compare(args),
         "sweep" => cmd_sweep(args),
+        "search" => cmd_search(args),
         "calibrate" => cmd_calibrate(args),
         "info" => cmd_info(args),
         "bench-cost" => cmd_bench_cost(args),
@@ -455,9 +460,207 @@ fn cmd_compare(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Simulated-annealing search over non-uniform strategy trees
+/// (`runtime::search`): the simulator as an optimizer, not just a
+/// scorer.
+fn cmd_search(args: &Args) -> Result<()> {
+    use crate::runtime::{default_inits, SearchConfig, SearchPoint, Searcher};
+    use crate::strategy::NonUniformSpec;
+
+    let model = args.get_or("model", "gpt2");
+    let model = ModelKind::parse(&model)
+        .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
+    let batch = args.get_usize("batch", 64)?;
+    let preset = args.get_or("preset", "HC2");
+    let preset = Preset::parse(&preset)
+        .ok_or_else(|| Error::Config(format!("unknown preset '{preset}'")))?;
+    let nodes = args.get_usize("nodes", 2)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let budget = args.get_usize("budget", 200)?;
+    let chains = args.get_usize("chains", 4)?;
+    let threads = args.get_usize("threads", 0)?;
+    let plain = args.flag("plain");
+    let json = args.flag("json");
+    let coll_algo = parse_coll_algo(args)?;
+    let fixed_coll = args.flag("fixed-coll");
+    let init = args.get("init").map(str::to_string);
+    let resume = args.get("resume").map(str::to_string);
+    let wall_s = args
+        .get("wall-secs")
+        .map(|v| {
+            v.parse::<f64>()
+                .map_err(|_| Error::Config(format!("--wall-secs: '{v}' is not a number")))
+        })
+        .transpose()?;
+    args.reject_unknown()?;
+
+    let cluster = Cluster::preset(preset, nodes);
+    let n = cluster.num_devices();
+    let graph = model.build(batch);
+
+    // Seed points: a resumed best spec, an explicit uniform label, or
+    // the heuristic expert set.
+    let inits: Vec<SearchPoint> = if let Some(path) = resume {
+        let text = std::fs::read_to_string(&path)?;
+        let doc = Json::parse(&text).map_err(|e| Error::Config(e.to_string()))?;
+        let best = doc
+            .get("best")
+            .filter(|b| **b != Json::Null)
+            .ok_or_else(|| Error::Config(format!("{path}: no 'best' result to resume from")))?;
+        let spec = best
+            .get("spec")
+            .ok_or_else(|| Error::Config(format!("{path}: 'best' has no 'spec'")))
+            .and_then(NonUniformSpec::from_json)?;
+        let coll = best
+            .get("coll_algo")
+            .and_then(|v| v.as_str())
+            .and_then(CollAlgo::parse)
+            .unwrap_or(coll_algo);
+        vec![SearchPoint {
+            spec,
+            coll_algo: coll,
+        }]
+    } else if let Some(label) = init {
+        let uspec = StrategySpec::parse_label(&label)
+            .ok_or_else(|| Error::Config(format!("--init: cannot parse spec label '{label}'")))?;
+        vec![SearchPoint {
+            spec: NonUniformSpec::from_uniform(&graph, uspec)?,
+            coll_algo,
+        }]
+    } else {
+        default_inits(&graph, n, coll_algo)
+    };
+
+    let config = SearchConfig {
+        seed,
+        budget,
+        chains,
+        threads,
+        plain,
+        mutate_coll: !fixed_coll,
+        wall_s,
+        ..SearchConfig::default()
+    };
+    let result = Searcher::new(config).run(&graph, &cluster, &inits)?;
+
+    if json {
+        // Schema documented in README.md ("JSON output"). Deliberately
+        // free of wall-clock times and cache counters so a seeded run
+        // is byte-reproducible — the CI determinism gate diffs two runs.
+        let best_json = match &result.best {
+            None => Json::Null,
+            Some(b) => Json::obj(vec![
+                ("label", Json::Str(b.label.clone())),
+                ("step_ms", Json::Num(b.step_ms)),
+                ("throughput_samples_per_s", Json::Num(b.throughput)),
+                ("peak_mem_bytes", Json::Num(b.peak_mem as f64)),
+                ("oom", Json::Bool(b.oom)),
+                ("coll_algo", Json::Str(b.point.coll_algo.name().into())),
+                ("spec", b.point.spec.to_json()),
+            ]),
+        };
+        let chains_json: Vec<Json> = result
+            .chains
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("chain", Json::Num(c.chain as f64)),
+                    ("seed", Json::Num(c.seed as f64)),
+                    ("evals", Json::Num(c.evals as f64)),
+                    ("accepted", Json::Num(c.accepted as f64)),
+                    ("infeasible", Json::Num(c.infeasible as f64)),
+                    (
+                        "best_label",
+                        c.best
+                            .as_ref()
+                            .map(|e| Json::Str(e.label.clone()))
+                            .unwrap_or(Json::Null),
+                    ),
+                    (
+                        "best_throughput_samples_per_s",
+                        c.best
+                            .as_ref()
+                            .map(|e| Json::Num(e.throughput))
+                            .unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        let fields = vec![
+            ("model", Json::Str(model.name().into())),
+            ("batch", Json::Num(batch as f64)),
+            ("cluster", Json::Str(cluster.name.clone())),
+            ("gpus", Json::Num(n as f64)),
+            ("seed", Json::Num(seed as f64)),
+            ("budget", Json::Num(budget as f64)),
+            ("n_chains", Json::Num(chains as f64)),
+            ("coll_algo", Json::Str(coll_algo.name().into())),
+            ("evals", Json::Num(result.evals as f64)),
+            ("best", best_json),
+            ("chains", Json::Arr(chains_json)),
+        ];
+        println!("{}", Json::obj(fields).to_string_pretty());
+        return Ok(());
+    }
+
+    println!(
+        "searched {} candidates for {} b={} on {}({} GPUs): {} chains, seed {} — {:.2}s \
+         (template cache: {} misses, {} hits)",
+        result.evals,
+        model.name(),
+        batch,
+        cluster.name,
+        n,
+        chains,
+        seed,
+        result.wall_s,
+        result.cache_misses,
+        result.cache_hits,
+    );
+    let mut table = Table::new(&[
+        "chain",
+        "evals",
+        "accepted",
+        "infeasible",
+        "best samples/s",
+        "best strategy",
+    ]);
+    for c in &result.chains {
+        table.row(vec![
+            c.chain.to_string(),
+            c.evals.to_string(),
+            c.accepted.to_string(),
+            c.infeasible.to_string(),
+            c.best
+                .as_ref()
+                .map(|e| format!("{:.1}", e.throughput))
+                .unwrap_or_else(|| "-".into()),
+            c.best
+                .as_ref()
+                .map(|e| e.label.clone())
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{}", table.render());
+    match &result.best {
+        Some(b) => {
+            println!(
+                "best: {}  {:.1} samples/s ({:.2} ms/step), peak mem {}",
+                b.label,
+                b.throughput,
+                b.step_ms,
+                fmt_bytes(b.peak_mem),
+            );
+            println!("spec: {}", b.point.spec.to_json());
+        }
+        None => println!("no feasible strategy found within budget"),
+    }
+    Ok(())
+}
+
 /// Rank an exhaustive strategy grid with the parallel [`SweepRunner`].
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use crate::runtime::{candidate_grid_with_schedules, Scenario, SweepRunner};
+    use crate::runtime::{candidate_grid_with_schedules, dedupe_specs, Scenario, SweepRunner};
 
     let model = args.get_or("model", "gpt2");
     let model = ModelKind::parse(&model)
@@ -479,7 +682,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let cluster = Cluster::preset(preset, nodes);
     let n = cluster.num_devices();
-    let specs = candidate_grid_with_schedules(n, batch, &schedules);
+    let graph = model.build(batch);
+    let grid = candidate_grid_with_schedules(n, batch, &schedules);
+    let n_grid = grid.len();
+    // Commuting factorizations (e.g. a no-op ZeRO toggle) resolve to
+    // identical strategies; simulate each resolved strategy once.
+    let specs = dedupe_specs(&graph, grid);
+    let n_dupes = n_grid - specs.len();
     let scenarios: Vec<Scenario> = specs
         .into_iter()
         .map(|spec| Scenario {
@@ -508,7 +717,6 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // run, so emulating it would report an error for a configuration
     // the ranking already marks unusable.
     let truth_rows: Vec<(String, f64, f64, f64)> = if truth {
-        let graph = model.build(batch);
         let est = OpEstimator::best_available(&cluster, &artifact);
         let mut rows = Vec::new();
         for o in ranked.iter().filter(|o| !o.oom).take(3) {
@@ -565,6 +773,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 Json::Arr(schedules.iter().map(|s| Json::Str(s.name())).collect()),
             ),
             ("coll_algo", Json::Str(coll_algo.name().into())),
+            ("grid", Json::Num(n_grid as f64)),
+            ("deduped", Json::Num(n_dupes as f64)),
             ("swept", Json::Num(outcomes.len() as f64)),
             ("viable", Json::Num(feasible as f64)),
             ("oom", Json::Num(oom as f64)),
@@ -595,7 +805,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!(
-        "swept {} strategies for {} b={} on {}({} GPUs): {} viable, {} OOM, {} invalid — {:.2?} on {} threads",
+        "swept {} strategies for {} b={} on {}({} GPUs): {} viable, {} OOM, {} invalid, \
+         {} duplicates dropped — {:.2?} on {} threads",
         outcomes.len(),
         model.name(),
         batch,
@@ -604,6 +815,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         feasible,
         oom,
         failed,
+        n_dupes,
         wall,
         n_threads,
     );
@@ -832,6 +1044,33 @@ mod tests {
              --schedules all --json",
         );
         run(&a).unwrap();
+    }
+
+    #[test]
+    fn search_command_runs_in_both_output_modes() {
+        let a = parse(
+            "search --model vgg19 --batch 16 --preset HC1 --nodes 1 --budget 8 --chains 2 \
+             --seed 3",
+        );
+        run(&a).unwrap();
+        let a = parse(
+            "search --model vgg19 --batch 16 --preset HC1 --nodes 1 --budget 8 --chains 2 \
+             --seed 3 --json",
+        );
+        run(&a).unwrap();
+    }
+
+    #[test]
+    fn search_accepts_init_label_and_rejects_garbage() {
+        let a = parse(
+            "search --model vgg19 --batch 16 --preset HC1 --nodes 1 --budget 6 --chains 1 \
+             --init 8x1x1(1)",
+        );
+        run(&a).unwrap();
+        let a = parse("search --model vgg19 --batch 16 --init not-a-spec --budget 4");
+        assert!(run(&a).is_err());
+        let a = parse("search --model vgg19 --batch 16 --resume /nonexistent/search.json");
+        assert!(run(&a).is_err());
     }
 
     #[test]

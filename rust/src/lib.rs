@@ -115,11 +115,12 @@ pub mod prelude {
     pub use crate::graph::{Graph, OpKind};
     pub use crate::models::ModelKind;
     pub use crate::runtime::{
-        candidate_grid, candidate_grid_with_schedules, Scenario, SweepOutcome, SweepRunner,
+        candidate_grid, candidate_grid_with_schedules, dedupe_specs, Scenario, SearchConfig,
+        SearchPoint, Searcher, SweepOutcome, SweepRunner,
     };
     pub use crate::strategy::{
-        build_strategy, ParallelConfig, PipelineSchedule, ScheduleConfig, StrategySpec,
-        StrategyTree,
+        build_strategy, NonUniformSpec, ParallelConfig, PipelineSchedule, ScheduleConfig,
+        StageSpec, StrategySpec, StrategyTree,
     };
 }
 

@@ -28,11 +28,23 @@
 //! This is what makes large-scale strategy search (paper §I, Table 6)
 //! practical: hundreds of candidates per invocation, each costing
 //! milliseconds.
+//!
+//! ## Strategy search
+//!
+//! [`Searcher`] goes beyond the uniform grid: seeded simulated
+//! annealing over **non-uniform strategy trees**
+//! ([`crate::strategy::NonUniformSpec`]), sharing the sweep's scoring
+//! path and compile cache. See [`search`].
 
+pub mod search;
 pub mod sweep;
 
+pub use search::{
+    default_inits, ChainReport, Evaluation, SearchConfig, SearchPoint, SearchResult, Searcher,
+};
 pub use sweep::{
-    candidate_grid, candidate_grid_with_schedules, Scenario, SweepOutcome, SweepRunner,
+    candidate_grid, candidate_grid_with_schedules, dedupe_specs, score_tree, Scenario,
+    SweepOutcome, SweepRunner, TreeScore,
 };
 
 #[cfg(not(feature = "pjrt"))]

@@ -1,0 +1,662 @@
+//! Simulated-annealing / MCMC search over **non-uniform strategy
+//! trees** (FlexFlow-style, paper §I's automated-parallelization use
+//! case).
+//!
+//! The uniform `DP × MP × PP` grid ([`super::candidate_grid`]) scores a
+//! few hundred expert-shaped points; the strategy tree can express far
+//! more — per-stage degrees, moved stage boundaries, per-stage ZeRO.
+//! [`Searcher`] walks that space with `K` independent Metropolis chains:
+//!
+//! - each chain starts from a seed point ([`SearchPoint`]), draws
+//!   neighbors from the mutation-op library
+//!   ([`crate::strategy::nonuniform`]), and accepts moves by the
+//!   Metropolis rule under a geometrically cooling temperature;
+//! - every candidate goes through the **same scoring path as the
+//!   sweep** ([`super::score_tree`]): build → resolve/propagate →
+//!   compile → HTAE-simulate, so chain energies and grid throughputs
+//!   are bit-comparable;
+//! - infeasible candidates (OOM per [`super::SweepOutcome`] semantics,
+//!   or compile errors) are rejected moves, not crashes;
+//! - chains share one [`TemplateCache`] keyed by the resolved
+//!   strategy's structural hash, so schedule-only mutations recompile
+//!   near-free;
+//! - the budget is counted in **simulations**, split evenly across
+//!   chains, which makes a seeded search bit-reproducible regardless of
+//!   thread scheduling (each chain's walk depends only on its own seed;
+//!   an optional wall-clock limit exists for interactive use and is the
+//!   one knob that trades reproducibility for latency).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::cluster::Cluster;
+use crate::collective::CollAlgo;
+use crate::compiler::TemplateCache;
+use crate::executor::calibrate;
+use crate::graph::Graph;
+use crate::runtime::sweep::score_tree;
+use crate::strategy::nonuniform::{propose, NonUniformSpec};
+use crate::strategy::StrategySpec;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// One point of the search space: a non-uniform strategy spec plus the
+/// collective-algorithm knob (which the paper's simulator exposes and a
+/// strategy planner legitimately co-optimizes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchPoint {
+    /// The strategy.
+    pub spec: NonUniformSpec,
+    /// Collective lowering used when scoring this point.
+    pub coll_algo: CollAlgo,
+}
+
+impl SearchPoint {
+    /// Point with the default [`CollAlgo::Auto`] lowering.
+    pub fn new(spec: NonUniformSpec) -> SearchPoint {
+        SearchPoint {
+            spec,
+            coll_algo: CollAlgo::Auto,
+        }
+    }
+
+    /// Seed point from a uniform grid candidate (see
+    /// [`NonUniformSpec::from_uniform`]); scoring it reproduces the
+    /// sweep's prediction for the same spec bit-for-bit.
+    pub fn from_uniform(graph: &Graph, spec: StrategySpec) -> Result<SearchPoint> {
+        Ok(SearchPoint::new(NonUniformSpec::from_uniform(graph, spec)?))
+    }
+
+    /// Display label: the spec label, plus the collective algorithm
+    /// when it differs from the default.
+    pub fn label(&self) -> String {
+        let mut s = self.spec.label();
+        if self.coll_algo != CollAlgo::Auto {
+            s.push_str("+coll=");
+            s.push_str(self.coll_algo.name());
+        }
+        s
+    }
+}
+
+/// The scored outcome of one candidate evaluation.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// The point evaluated.
+    pub point: SearchPoint,
+    /// Cached [`SearchPoint::label`] of the point.
+    pub label: String,
+    /// Predicted step time (ms); `f64::INFINITY` on error.
+    pub step_ms: f64,
+    /// Predicted throughput (samples/s); 0 on error.
+    pub throughput: f64,
+    /// Max per-device predicted peak memory (bytes).
+    pub peak_mem: u64,
+    /// Peak memory exceeded device capacity.
+    pub oom: bool,
+    /// Build/compile/simulation failure, if any.
+    pub error: Option<String>,
+}
+
+impl Evaluation {
+    /// True when the candidate simulated cleanly and fits in memory.
+    pub fn feasible(&self) -> bool {
+        self.error.is_none() && !self.oom
+    }
+}
+
+/// Per-chain statistics of one search run.
+#[derive(Debug, Clone)]
+pub struct ChainReport {
+    /// Chain index.
+    pub chain: usize,
+    /// The chain's derived RNG seed.
+    pub seed: u64,
+    /// Simulations this chain spent.
+    pub evals: usize,
+    /// Moves accepted by the Metropolis rule.
+    pub accepted: usize,
+    /// Candidates rejected for infeasibility (OOM or error).
+    pub infeasible: usize,
+    /// Best feasible evaluation the chain found.
+    pub best: Option<Evaluation>,
+}
+
+/// Aggregate result of a [`Searcher::run`].
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Best feasible evaluation across all chains (`None` when nothing
+    /// feasible was found within budget).
+    pub best: Option<Evaluation>,
+    /// Per-chain reports, in chain order.
+    pub chains: Vec<ChainReport>,
+    /// Total simulations spent.
+    pub evals: usize,
+    /// Wall-clock seconds (informational; deliberately **not** part of
+    /// the `--json` schema so seeded runs diff byte-identical).
+    pub wall_s: f64,
+    /// Template-cache hits across the run (thread-interleaving
+    /// dependent; also excluded from `--json`).
+    pub cache_hits: usize,
+    /// Template-cache misses across the run.
+    pub cache_misses: usize,
+}
+
+/// Search hyper-parameters. The defaults suit a few hundred simulations
+/// on a 16–32 GPU scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchConfig {
+    /// Base RNG seed; chain `i` runs on `seed + i`.
+    pub seed: u64,
+    /// Total simulation budget across all chains.
+    pub budget: usize,
+    /// Independent annealing chains.
+    pub chains: usize,
+    /// Worker threads (0 = auto; capped at the chain count).
+    pub threads: usize,
+    /// Initial temperature, as a relative step-time fraction: a move
+    /// that worsens step time by `t0` is accepted with probability
+    /// `1/e` at the start of the schedule.
+    pub t0: f64,
+    /// Final temperature of the geometric cooling schedule.
+    pub t1: f64,
+    /// Score with runtime-behavior modeling disabled (ablation).
+    pub plain: bool,
+    /// Allow the collective-algorithm mutation (disable to pin
+    /// `coll_algo` to the seed points' value).
+    pub mutate_coll: bool,
+    /// Share one [`TemplateCache`] across chains (bit-identical results
+    /// either way; off only for A/B benchmarking).
+    pub compile_cache: bool,
+    /// Optional wall-clock budget in seconds: chains stop proposing
+    /// once it is exhausted. **Nondeterministic** — leave `None` for
+    /// reproducible runs.
+    pub wall_s: Option<f64>,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            seed: 42,
+            budget: 200,
+            chains: 4,
+            threads: 0,
+            t0: 0.08,
+            t1: 0.005,
+            plain: false,
+            mutate_coll: true,
+            compile_cache: true,
+            wall_s: None,
+        }
+    }
+}
+
+/// The simulated-annealing strategy searcher. See the module docs for
+/// the algorithm; construct with a [`SearchConfig`] and call
+/// [`Searcher::run`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Searcher {
+    config: SearchConfig,
+}
+
+impl Searcher {
+    /// Searcher with the given hyper-parameters.
+    pub fn new(config: SearchConfig) -> Searcher {
+        Searcher { config }
+    }
+
+    /// The configuration this searcher runs with.
+    pub fn config(&self) -> &SearchConfig {
+        &self.config
+    }
+
+    /// Run the search: chain `i` anneals from `inits[i % inits.len()]`
+    /// with its share of the simulation budget. Chains run in parallel
+    /// on a thread pool but are individually deterministic, so the
+    /// result depends only on `(graph, cluster, config, inits)`.
+    pub fn run(
+        &self,
+        graph: &Graph,
+        cluster: &Cluster,
+        inits: &[SearchPoint],
+    ) -> Result<SearchResult> {
+        if inits.is_empty() {
+            return Err(Error::InvalidStrategy(
+                "search needs at least one seed point".into(),
+            ));
+        }
+        let cfg = self.config;
+        if cfg.chains == 0 {
+            return Err(Error::InvalidStrategy("search needs ≥ 1 chain".into()));
+        }
+        let t0 = Instant::now();
+        let deadline = cfg.wall_s.map(|s| t0 + std::time::Duration::from_secs_f64(s));
+        let gamma = calibrate::default_gamma(cluster);
+        let cache = cfg.compile_cache.then(TemplateCache::new);
+
+        // Even budget split: chain i gets ⌈budget/chains⌉ or ⌊…⌋.
+        let budgets: Vec<usize> = (0..cfg.chains)
+            .map(|i| cfg.budget / cfg.chains + usize::from(i < cfg.budget % cfg.chains))
+            .collect();
+
+        let auto = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let requested = if cfg.threads > 0 { cfg.threads } else { auto };
+        let threads = requested.clamp(1, cfg.chains);
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<ChainReport>>> =
+            (0..cfg.chains).map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cfg.chains {
+                        break;
+                    }
+                    let report = run_chain(
+                        graph,
+                        cluster,
+                        gamma,
+                        &cfg,
+                        i,
+                        budgets[i],
+                        &inits[i % inits.len()],
+                        cache.as_ref(),
+                        deadline,
+                    );
+                    *slots[i].lock().unwrap() = Some(report);
+                });
+            }
+        });
+
+        let chains: Vec<ChainReport> = slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker filled every chain"))
+            .collect();
+        // Deterministic cross-chain winner: best throughput, ties on
+        // label, then chain order (stable iteration).
+        let mut best: Option<Evaluation> = None;
+        for c in &chains {
+            if let Some(e) = &c.best {
+                let better = match &best {
+                    None => true,
+                    Some(b) => match e.throughput.total_cmp(&b.throughput) {
+                        std::cmp::Ordering::Greater => true,
+                        std::cmp::Ordering::Less => false,
+                        std::cmp::Ordering::Equal => e.label < b.label,
+                    },
+                };
+                if better {
+                    best = Some(e.clone());
+                }
+            }
+        }
+        Ok(SearchResult {
+            best,
+            evals: chains.iter().map(|c| c.evals).sum(),
+            chains,
+            wall_s: t0.elapsed().as_secs_f64(),
+            cache_hits: cache.as_ref().map(|c| c.hits()).unwrap_or(0),
+            cache_misses: cache.as_ref().map(|c| c.misses()).unwrap_or(0),
+        })
+    }
+}
+
+/// Score one point through the sweep-shared path.
+fn evaluate(
+    graph: &Graph,
+    cluster: &Cluster,
+    gamma: f64,
+    plain: bool,
+    cache: Option<&TemplateCache>,
+    point: &SearchPoint,
+) -> Evaluation {
+    let label = point.label();
+    fn fail(point: &SearchPoint, label: &str, e: String) -> Evaluation {
+        Evaluation {
+            point: point.clone(),
+            label: label.to_string(),
+            step_ms: f64::INFINITY,
+            throughput: 0.0,
+            peak_mem: 0,
+            oom: false,
+            error: Some(e),
+        }
+    }
+    let tree = match point.spec.build(graph) {
+        Ok(t) => t,
+        Err(e) => return fail(point, &label, e.to_string()),
+    };
+    let s = score_tree(
+        graph,
+        cluster,
+        gamma,
+        &tree,
+        plain,
+        point.coll_algo,
+        cache.map(|c| (c, 0)),
+    );
+    match s.report {
+        Ok(r) => Evaluation {
+            point: point.clone(),
+            label,
+            step_ms: r.step_ms,
+            throughput: r.throughput,
+            peak_mem: r.peak_mem.iter().copied().max().unwrap_or(0),
+            oom: r.oom,
+            error: None,
+        },
+        Err(e) => fail(point, &label, e),
+    }
+}
+
+/// Draw a neighbor of `point`: usually a tree mutation, occasionally
+/// (1 in 8, when enabled) a collective-algorithm swap.
+fn propose_point(
+    graph: &Graph,
+    point: &SearchPoint,
+    rng: &mut Rng,
+    mutate_coll: bool,
+) -> Option<SearchPoint> {
+    if mutate_coll && rng.chance(0.125) {
+        let algos = [
+            CollAlgo::Ring,
+            CollAlgo::Tree,
+            CollAlgo::Hierarchical,
+            CollAlgo::Auto,
+        ];
+        let pick = *rng.pick(&algos);
+        if pick != point.coll_algo {
+            return Some(SearchPoint {
+                spec: point.spec.clone(),
+                coll_algo: pick,
+            });
+        }
+        // No-op draw: fall through to a tree mutation.
+    }
+    propose(graph, &point.spec, rng, 64).map(|(_, spec)| SearchPoint {
+        spec,
+        coll_algo: point.coll_algo,
+    })
+}
+
+/// One annealing chain: deterministic given its seed and budget.
+#[allow(clippy::too_many_arguments)]
+fn run_chain(
+    graph: &Graph,
+    cluster: &Cluster,
+    gamma: f64,
+    cfg: &SearchConfig,
+    chain: usize,
+    budget: usize,
+    init: &SearchPoint,
+    cache: Option<&TemplateCache>,
+    deadline: Option<Instant>,
+) -> ChainReport {
+    let seed = cfg.seed.wrapping_add(chain as u64);
+    let mut report = ChainReport {
+        chain,
+        seed,
+        evals: 0,
+        accepted: 0,
+        infeasible: 0,
+        best: None,
+    };
+    if budget == 0 {
+        return report;
+    }
+    let mut rng = Rng::new(seed);
+    let mut cur = evaluate(graph, cluster, gamma, cfg.plain, cache, init);
+    report.evals = 1;
+    if cur.feasible() {
+        report.best = Some(cur.clone());
+    } else {
+        report.infeasible = 1;
+    }
+    while report.evals < budget {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                break;
+            }
+        }
+        let Some(next) = propose_point(graph, &cur.point, &mut rng, cfg.mutate_coll) else {
+            break; // neighborhood exhausted
+        };
+        let cand = evaluate(graph, cluster, gamma, cfg.plain, cache, &next);
+        report.evals += 1;
+        // Geometric cooling over the chain's budget.
+        let progress = report.evals as f64 / budget.max(2) as f64;
+        let temp = cfg.t0 * (cfg.t1 / cfg.t0).powf(progress);
+        if cand.feasible() {
+            let accept = if !cur.feasible() || cand.step_ms <= cur.step_ms {
+                true
+            } else {
+                let delta = (cand.step_ms - cur.step_ms) / cur.step_ms;
+                rng.next_f64() < (-delta / temp.max(1e-12)).exp()
+            };
+            let better_than_best = report
+                .best
+                .as_ref()
+                .map(|b| cand.throughput > b.throughput)
+                .unwrap_or(true);
+            if better_than_best {
+                report.best = Some(cand.clone());
+            }
+            if accept {
+                cur = cand;
+                report.accepted += 1;
+            }
+        } else {
+            report.infeasible += 1;
+            // Both infeasible: drift toward lower peak memory so a
+            // chain seeded out-of-memory can walk back into range.
+            if !cur.feasible()
+                && cand.error.is_none()
+                && (cur.error.is_some() || cand.peak_mem < cur.peak_mem)
+            {
+                cur = cand;
+                report.accepted += 1;
+            }
+        }
+    }
+    report
+}
+
+/// Heuristic seed points for a search over `n_devices` GPUs at the
+/// model's batch size: pure data parallelism, the classic `dp × mp`
+/// and pipelined hybrids, filtered to the ones the model/batch admits.
+/// Always non-empty (full replication is the last resort), and every
+/// point uses the whole device budget — mutations conserve it.
+pub fn default_inits(graph: &Graph, n_devices: usize, coll_algo: CollAlgo) -> Vec<SearchPoint> {
+    fn push(graph: &Graph, out: &mut Vec<SearchPoint>, coll: CollAlgo, spec: StrategySpec) {
+        if let Ok(nu) = NonUniformSpec::from_uniform(graph, spec) {
+            out.push(SearchPoint {
+                spec: nu,
+                coll_algo: coll,
+            });
+        }
+    }
+    let n = n_devices.max(1);
+    let mut out = Vec::new();
+    push(graph, &mut out, coll_algo, StrategySpec::data_parallel(n));
+    if n % 2 == 0 {
+        push(
+            graph,
+            &mut out,
+            coll_algo,
+            StrategySpec::hybrid(n / 2, 2, 1, 1),
+        );
+        push(
+            graph,
+            &mut out,
+            coll_algo,
+            StrategySpec::hybrid(n / 2, 1, 2, 4),
+        );
+    }
+    if n % 4 == 0 {
+        push(
+            graph,
+            &mut out,
+            coll_algo,
+            StrategySpec::hybrid(n / 4, 1, 4, 8),
+        );
+    }
+    if n % 8 == 0 {
+        push(
+            graph,
+            &mut out,
+            coll_algo,
+            StrategySpec::hybrid(n / 8, 8, 1, 1),
+        );
+    }
+    if out.is_empty() {
+        // Full replication: valid for any model/batch, uses the budget.
+        out.push(SearchPoint {
+            spec: NonUniformSpec::single_stage(graph, 1, n),
+            coll_algo,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Preset;
+    use crate::graph::{DType, GraphBuilder};
+
+    fn mlp(batch: usize, blocks: usize) -> Graph {
+        let mut b = GraphBuilder::new("mlp", batch);
+        let mut h = b.input("x", &[batch, 64], DType::F32);
+        for i in 0..blocks {
+            h = b.scoped(&format!("blk{i}"), |b| {
+                let h = b.linear("fc1", h, 64, 256);
+                let h = b.relu("act", h);
+                let h = b.linear("fc2", h, 256, 64);
+                b.hint_last(crate::graph::MpHint::RowSplit);
+                h
+            });
+        }
+        let _ = b.loss("loss", h);
+        b.finish()
+    }
+
+    fn small_setup() -> (Graph, Cluster, Vec<SearchPoint>) {
+        let g = mlp(16, 4);
+        let c = Cluster::preset(Preset::HC1, 1);
+        let inits = default_inits(&g, 4, CollAlgo::Auto);
+        (g, c, inits)
+    }
+
+    #[test]
+    fn default_inits_are_valid_and_nonempty() {
+        let g = mlp(16, 4);
+        for n in [1usize, 2, 4, 8] {
+            let inits = default_inits(&g, n, CollAlgo::Auto);
+            assert!(!inits.is_empty(), "n={n}");
+            for p in &inits {
+                assert_eq!(p.spec.n_devices(), n, "{}", p.label());
+                p.spec.build(&g).expect("init builds");
+            }
+        }
+        // Odd device counts fall back to replication.
+        let inits = default_inits(&g, 3, CollAlgo::Ring);
+        assert_eq!(inits.len(), 1);
+        assert_eq!(inits[0].spec.n_devices(), 3);
+        assert_eq!(inits[0].coll_algo, CollAlgo::Ring);
+    }
+
+    #[test]
+    fn seeded_search_is_bit_reproducible() {
+        let (g, c, inits) = small_setup();
+        let cfg = SearchConfig {
+            budget: 24,
+            chains: 2,
+            seed: 7,
+            ..SearchConfig::default()
+        };
+        let a = Searcher::new(cfg).run(&g, &c, &inits).unwrap();
+        let b = Searcher::new(cfg).run(&g, &c, &inits).unwrap();
+        let ba = a.best.clone().unwrap();
+        let bb = b.best.clone().unwrap();
+        assert_eq!(ba.label, bb.label);
+        assert_eq!(ba.step_ms.to_bits(), bb.step_ms.to_bits());
+        assert_eq!(ba.throughput.to_bits(), bb.throughput.to_bits());
+        assert_eq!(a.evals, b.evals);
+        for (ca, cb) in a.chains.iter().zip(&b.chains) {
+            assert_eq!(ca.accepted, cb.accepted);
+            assert_eq!(ca.infeasible, cb.infeasible);
+            assert_eq!(
+                ca.best.as_ref().map(|e| e.label.clone()),
+                cb.best.as_ref().map(|e| e.label.clone())
+            );
+        }
+        // And thread count must not matter.
+        let serial = Searcher::new(SearchConfig { threads: 1, ..cfg })
+            .run(&g, &c, &inits)
+            .unwrap();
+        assert_eq!(serial.best.unwrap().label, ba.label);
+    }
+
+    #[test]
+    fn search_respects_budget_and_finds_feasible_points() {
+        let (g, c, inits) = small_setup();
+        let cfg = SearchConfig {
+            budget: 30,
+            chains: 3,
+            seed: 1,
+            ..SearchConfig::default()
+        };
+        let r = Searcher::new(cfg).run(&g, &c, &inits).unwrap();
+        assert!(r.evals <= 30);
+        assert!(r.evals >= 3, "each chain evaluates at least its init");
+        let best = r.best.expect("a 4-GPU MLP has feasible strategies");
+        assert!(best.feasible());
+        assert!(best.throughput > 0.0);
+        // The winner must never regress below the evaluated seed point.
+        let gamma = calibrate::default_gamma(&c);
+        let seed_eval = evaluate(&g, &c, gamma, false, None, &inits[0]);
+        assert!(best.throughput >= seed_eval.throughput - 1e-9);
+    }
+
+    #[test]
+    fn search_rejects_empty_inits_and_zero_chains() {
+        let (g, c, inits) = small_setup();
+        assert!(Searcher::new(SearchConfig::default())
+            .run(&g, &c, &[])
+            .is_err());
+        let cfg = SearchConfig {
+            chains: 0,
+            ..SearchConfig::default()
+        };
+        assert!(Searcher::new(cfg).run(&g, &c, &inits).is_err());
+    }
+
+    #[test]
+    fn uniform_seed_point_scores_identically_to_sweep_path() {
+        use crate::models::ModelKind;
+        use crate::runtime::sweep::{Scenario, SweepRunner};
+        let model = ModelKind::Vgg19;
+        let (batch, preset, nodes) = (16, Preset::HC1, 1);
+        let spec = StrategySpec::data_parallel(2);
+        let sc = Scenario {
+            model,
+            batch,
+            preset,
+            nodes,
+            spec,
+        };
+        let outcomes = SweepRunner::new().with_threads(1).run(&[sc]);
+        let sweep_tput = outcomes[0].throughput().unwrap();
+        let g = model.build(batch);
+        let c = Cluster::preset(preset, nodes);
+        let gamma = calibrate::default_gamma(&c);
+        let point = SearchPoint::from_uniform(&g, spec).unwrap();
+        let e = evaluate(&g, &c, gamma, false, None, &point);
+        assert!(e.feasible(), "{:?}", e.error);
+        assert_eq!(e.throughput.to_bits(), sweep_tput.to_bits());
+    }
+}

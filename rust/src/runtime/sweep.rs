@@ -30,7 +30,7 @@ use crate::compiler::TemplateCache;
 use crate::executor::{calibrate, Htae, HtaeConfig, SimReport};
 use crate::graph::Graph;
 use crate::models::ModelKind;
-use crate::strategy::{build_strategy, PipelineSchedule, StrategySpec};
+use crate::strategy::{build_strategy, PipelineSchedule, StrategySpec, StrategyTree};
 
 /// One sweep candidate: a model at a batch size, a cluster, a strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -257,57 +257,100 @@ impl SweepRunner {
     /// below every feasible one**, themselves by throughput, so callers
     /// printing the top-k never recommend a strategy that cannot fit.
     /// Errored scenarios are excluded.
+    ///
+    /// Ties break on the scenario label (ascending), so ranked tables
+    /// and `--json` artifacts are byte-stable across runs — equal
+    /// throughputs are common (e.g. schedule variants of a
+    /// compute-bound candidate) and an input-order tie-break would leak
+    /// grid-enumeration changes into CI diffs.
     pub fn rank(outcomes: &[SweepOutcome]) -> Vec<&SweepOutcome> {
-        let mut viable: Vec<&SweepOutcome> = outcomes
-            .iter()
-            .filter(|o| o.throughput().is_some())
-            .collect();
-        viable.sort_by(|a, b| {
-            b.throughput()
-                .unwrap()
-                .total_cmp(&a.throughput().unwrap())
-        });
+        // Sort keys (throughput, label) are precomputed once — labels
+        // only break ties, and allocating them per comparison inside
+        // sort_by would cost O(N log N) formatted Strings.
+        fn sorted(mut keyed: Vec<(f64, String, &SweepOutcome)>) -> Vec<&SweepOutcome> {
+            keyed.sort_by(|a, b| b.0.total_cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+            keyed.into_iter().map(|(_, _, o)| o).collect()
+        }
+        let viable = sorted(
+            outcomes
+                .iter()
+                .filter_map(|o| o.throughput().map(|t| (t, o.scenario.label(), o)))
+                .collect(),
+        );
         // `oom && report.is_ok()`: run_one keeps the flag consistent
         // with the report, but the fields are pub — never panic on a
         // hand-built outcome.
-        let mut infeasible: Vec<&SweepOutcome> = outcomes
-            .iter()
-            .filter(|o| o.oom && o.report.is_ok())
-            .collect();
-        infeasible.sort_by(|a, b| {
-            let (ra, rb) = (a.report.as_ref().unwrap(), b.report.as_ref().unwrap());
-            rb.throughput.total_cmp(&ra.throughput)
-        });
-        viable.extend(infeasible);
-        viable
+        let infeasible = sorted(
+            outcomes
+                .iter()
+                .filter(|o| o.oom && o.report.is_ok())
+                .map(|o| {
+                    (
+                        o.report.as_ref().unwrap().throughput,
+                        o.scenario.label(),
+                        o,
+                    )
+                })
+                .collect(),
+        );
+        let mut out = viable;
+        out.extend(infeasible);
+        out
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_one(
-    sc: &Scenario,
+/// Result of scoring one built strategy tree — the shared inner loop of
+/// the grid sweep and the simulated-annealing searcher
+/// ([`crate::runtime::search`]).
+#[derive(Debug, Clone)]
+pub struct TreeScore {
+    /// The HTAE report, or why compilation/simulation failed.
+    pub report: Result<SimReport, String>,
+    /// Simulated peak memory exceeded device capacity.
+    pub oom: bool,
+    /// Wall-clock seconds compiling (0 when the template cache hit and
+    /// instantiation dominated).
+    pub compile_s: f64,
+    /// Wall-clock seconds estimating + simulating.
+    pub sim_s: f64,
+}
+
+impl TreeScore {
+    /// Predicted throughput if the tree simulated without error or OOM.
+    pub fn throughput(&self) -> Option<f64> {
+        match &self.report {
+            Ok(r) if !r.oom => Some(r.throughput),
+            _ => None,
+        }
+    }
+}
+
+/// Compile a built strategy tree and simulate one training step: the
+/// scoring path every search/sweep candidate goes through, so the
+/// sweep's ranked throughputs and the searcher's chain energies are
+/// bit-comparable. `cache` is the cross-candidate [`TemplateCache`]
+/// (keyed by the caller's graph id) — candidates that differ only in
+/// pipeline schedule or simulation knobs recompile near-free.
+pub fn score_tree(
     graph: &Graph,
     cluster: &Cluster,
     gamma: f64,
+    tree: &StrategyTree,
     plain: bool,
     coll_algo: CollAlgo,
     cache: Option<(&TemplateCache, u64)>,
-) -> SweepOutcome {
-    let fail = |e: String, compile_s: f64| SweepOutcome {
-        scenario: *sc,
-        report: Err(e),
-        oom: false,
-        compile_s,
-        sim_s: 0.0,
-    };
-    let tree = match build_strategy(graph, sc.spec) {
-        Ok(t) => t,
-        Err(e) => return fail(e.to_string(), 0.0),
-    };
+) -> TreeScore {
     let t0 = Instant::now();
-    let eg = match crate::compiler::compile_with(graph, &tree, cluster, cache) {
+    let eg = match crate::compiler::compile_with(graph, tree, cluster, cache) {
         Ok((eg, _stats)) => eg,
-        Err(e) => return fail(e.to_string(), t0.elapsed().as_secs_f64()),
+        Err(e) => {
+            return TreeScore {
+                report: Err(e.to_string()),
+                oom: false,
+                compile_s: t0.elapsed().as_secs_f64(),
+                sim_s: 0.0,
+            }
+        }
     };
     let compile_s = t0.elapsed().as_secs_f64();
     let est = crate::estimator::OpEstimator::analytical(cluster);
@@ -325,12 +368,43 @@ fn run_one(
         .simulate(&eg)
         .map_err(|e| e.to_string());
     let oom = report.as_ref().map(|r| r.oom).unwrap_or(false);
-    SweepOutcome {
-        scenario: *sc,
+    TreeScore {
         report,
         oom,
         compile_s,
         sim_s: t1.elapsed().as_secs_f64(),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    sc: &Scenario,
+    graph: &Graph,
+    cluster: &Cluster,
+    gamma: f64,
+    plain: bool,
+    coll_algo: CollAlgo,
+    cache: Option<(&TemplateCache, u64)>,
+) -> SweepOutcome {
+    let tree = match build_strategy(graph, sc.spec) {
+        Ok(t) => t,
+        Err(e) => {
+            return SweepOutcome {
+                scenario: *sc,
+                report: Err(e.to_string()),
+                oom: false,
+                compile_s: 0.0,
+                sim_s: 0.0,
+            }
+        }
+    };
+    let s = score_tree(graph, cluster, gamma, &tree, plain, coll_algo, cache);
+    SweepOutcome {
+        scenario: *sc,
+        report: s.report,
+        oom: s.oom,
+        compile_s: s.compile_s,
+        sim_s: s.sim_s,
     }
 }
 
@@ -404,6 +478,46 @@ pub fn candidate_grid_with_schedules(
             if !out.contains(&sp) {
                 out.push(sp);
             }
+        }
+    }
+    out
+}
+
+/// Drop grid candidates that resolve to the **same strategy** as an
+/// earlier one. Distinct `StrategySpec` tuples can commute into
+/// identical resolved strategies — e.g. a ZeRO toggle on a spec whose
+/// parameters are already fully sharded (nothing left to refine), or an
+/// `mp` degree no layer dimension can absorb — and simulating both
+/// wastes sweep budget and pads ranked tables with tied duplicates.
+///
+/// Equivalence is decided on the resolved strategy's structural hash
+/// pair plus the schedule knobs the hash deliberately excludes
+/// (pipeline schedule, `max_ongoing`). Specs that fail to build or
+/// resolve are kept verbatim — the sweep's error isolation reports
+/// them.
+pub fn dedupe_specs(graph: &Graph, specs: Vec<StrategySpec>) -> Vec<StrategySpec> {
+    let mut seen: std::collections::HashSet<(u64, u64, PipelineSchedule, usize)> =
+        std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let key = build_strategy(graph, spec)
+            .ok()
+            .and_then(|tree| crate::strategy::resolve(graph, &tree).ok())
+            .map(|r| {
+                (
+                    r.structural_hash(0x5EED_CAFE),
+                    r.structural_hash(0x0DDB_A11),
+                    spec.schedule,
+                    spec.max_ongoing,
+                )
+            });
+        match key {
+            Some(k) => {
+                if seen.insert(k) {
+                    out.push(spec);
+                }
+            }
+            None => out.push(spec),
         }
     }
     out
@@ -530,6 +644,98 @@ mod tests {
         assert_eq!(ranked[0].report.as_ref().unwrap().throughput, 50.0);
         assert!(ranked[2].oom, "the fastest-but-OOM candidate sorts last");
         assert!(ranked[2].describe().contains("OOM"));
+    }
+
+    /// Satellite pin: equal throughputs rank by scenario label, so the
+    /// ranked order is independent of input order and byte-stable
+    /// across runs.
+    #[test]
+    fn rank_breaks_throughput_ties_by_label() {
+        let mk = |spec: StrategySpec, throughput: f64| SweepOutcome {
+            scenario: Scenario {
+                model: ModelKind::Vgg19,
+                batch: 16,
+                preset: Preset::HC1,
+                nodes: 1,
+                spec,
+            },
+            report: Ok(SimReport {
+                step_ms: 1.0,
+                throughput,
+                peak_mem: vec![0],
+                peak_act: vec![0],
+                oom: false,
+                overlapped_ops: 0,
+                shared_ops: 0,
+                n_tasks: 1,
+                timeline: Vec::new(),
+                comm_phases: Vec::new(),
+            }),
+            oom: false,
+            compile_s: 0.0,
+            sim_s: 0.0,
+        };
+        let a = mk(StrategySpec::hybrid(4, 2, 1, 1), 100.0);
+        let b = mk(StrategySpec::hybrid(2, 4, 1, 1), 100.0);
+        let c = mk(StrategySpec::hybrid(8, 1, 1, 1), 100.0);
+        let fwd = vec![a.clone(), b.clone(), c.clone()];
+        let rev = vec![c, b, a];
+        let order = |os: &[SweepOutcome]| -> Vec<String> {
+            SweepRunner::rank(os)
+                .iter()
+                .map(|o| o.scenario.label())
+                .collect()
+        };
+        let (of, or) = (order(&fwd), order(&rev));
+        assert_eq!(of, or, "tie order must not depend on input order");
+        let mut sorted = of.clone();
+        sorted.sort();
+        assert_eq!(of, sorted, "ties break on ascending label");
+    }
+
+    /// Satellite pin: commuting factorizations that resolve to the same
+    /// strategy (here: a ZeRO toggle with nothing left to shard) are
+    /// simulated once; genuinely different candidates — including
+    /// schedule-only variants, which the structural hash ignores — all
+    /// survive.
+    #[test]
+    fn dedupe_drops_commuting_duplicates_only() {
+        use crate::graph::{DType, GraphBuilder};
+        let mut b = GraphBuilder::new("tiny", 16);
+        let x = b.input("x", &[16, 64], DType::F32);
+        let h = b.scoped("s0", |b| b.linear("fc", x, 64, 64));
+        let h = b.scoped("s1", |b| b.linear("fc", h, 64, 64));
+        let _ = b.loss("loss", h);
+        let g = b.finish();
+
+        // mp=2 fully shards both linears' params (ColSplit hint splits
+        // weight and bias alike) → ZeRO has nothing to refine and the
+        // toggle commutes away. Under dp=2 the params replicate, so the
+        // ZeRO variant is a genuinely different strategy.
+        let specs = vec![
+            StrategySpec::hybrid(1, 2, 1, 1),
+            StrategySpec::hybrid(1, 2, 1, 1).with_zero(),
+            StrategySpec::data_parallel(2),
+            StrategySpec::data_parallel(2).with_zero(),
+            StrategySpec::hybrid(1, 1, 2, 4),
+            StrategySpec::hybrid(1, 1, 2, 4).with_schedule(PipelineSchedule::GpipeFillDrain),
+            // Invalid (batch 16 % 3 ≠ 0): kept for error isolation.
+            StrategySpec::hybrid(3, 1, 1, 1),
+        ];
+        let deduped = dedupe_specs(&g, specs.clone());
+        assert_eq!(deduped.len(), specs.len() - 1);
+        assert!(deduped.contains(&StrategySpec::hybrid(1, 2, 1, 1)));
+        assert!(!deduped.contains(&StrategySpec::hybrid(1, 2, 1, 1).with_zero()));
+        assert!(deduped.contains(&StrategySpec::data_parallel(2).with_zero()));
+        assert!(
+            deduped.contains(&StrategySpec::hybrid(1, 1, 2, 4).with_schedule(
+                PipelineSchedule::GpipeFillDrain
+            )),
+            "schedule-only variants must survive dedup"
+        );
+        assert!(deduped.contains(&StrategySpec::hybrid(3, 1, 1, 1)));
+        // Idempotent.
+        assert_eq!(dedupe_specs(&g, deduped.clone()), deduped);
     }
 
     /// Tentpole pin at the sweep level: candidates differing only in

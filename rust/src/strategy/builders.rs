@@ -9,7 +9,7 @@
 //! replicated parameters).
 
 use crate::cluster::DeviceId;
-use crate::graph::{Graph, MpHint, OpKind, TensorKind};
+use crate::graph::{Graph, Layer, MpHint, OpKind, TensorKind};
 use crate::strategy::config::{
     operand_layout, LayoutPart, ParallelConfig, PipelineSchedule, ScheduleConfig, TensorLayout,
 };
@@ -122,6 +122,34 @@ impl StrategySpec {
         }
         s
     }
+
+    /// Parse a spec from its [`StrategySpec::label`] form, e.g.
+    /// `"4x2x2(8)+gpipe+zero"`. The inverse of `label()` for every spec
+    /// the grid enumerates (`max_ongoing` is not part of the label and
+    /// parses as the default 0). Used by `proteus search --init`.
+    pub fn parse_label(s: &str) -> Option<StrategySpec> {
+        let mut parts = s.split('+');
+        let head = parts.next()?;
+        let (dims, micro) = head.strip_suffix(')')?.split_once('(')?;
+        let mut it = dims.split('x');
+        let dp: usize = it.next()?.parse().ok()?;
+        let mp: usize = it.next()?.parse().ok()?;
+        let pp: usize = it.next()?.parse().ok()?;
+        if it.next().is_some() {
+            return None;
+        }
+        let micro: usize = micro.parse().ok()?;
+        let mut spec = StrategySpec::hybrid(dp, mp, pp, micro);
+        for tok in parts {
+            match tok {
+                "zero" => spec.zero = true,
+                "rc" => spec.recompute = true,
+                "emb" => spec.shard_embeddings = true,
+                other => spec.schedule = PipelineSchedule::parse(other)?,
+            }
+        }
+        Some(spec)
+    }
 }
 
 /// Build a strategy tree implementing `spec` for `graph`.
@@ -156,64 +184,19 @@ pub fn build_strategy(graph: &Graph, spec: StrategySpec) -> Result<StrategyTree>
 
     for (stage_idx, layer_range) in stages.iter().enumerate() {
         let base = stage_idx * spec.dp * spec.mp;
-        for &layer_id in layer_range {
-            let layer = &graph.layers[layer_id];
-            let mut partition: Vec<(&str, usize)> = Vec::new();
-            if spec.dp > 1 {
-                partition.push(("b", spec.dp));
-            }
-            let mp_dim = match layer.mp_hint {
-                MpHint::ColSplit => Some("o"),
-                MpHint::RowSplit => Some("h"),
-                MpHint::Heads => Some("a"),
-                MpHint::Vocab => Some("v"),
-                // Last generic dim (e.g. the 4h axis of a Megatron GeLU).
-                MpHint::LastDim => layer
-                    .dims
-                    .iter()
-                    .rev()
-                    .find(|(n, _)| n.starts_with('d'))
-                    .map(|(n, _)| n.as_str()),
-                MpHint::Replicate => None,
-            };
-            let mut emb_override = false;
-            if spec.shard_embeddings && layer.kind == OpKind::Embedding {
-                // Shard the table over the whole stage group; do not split
-                // the batch (classic DLRM model-parallel embeddings).
-                let n = spec.dp * spec.mp;
-                if layer.dim_size("v").map(|v| v >= n).unwrap_or(false) {
-                    partition = vec![("v", n)];
-                    emb_override = true;
-                }
-            }
-            if !emb_override && spec.mp > 1 {
-                if let Some(d) = mp_dim {
-                    if layer.dim_size(d).map(|sz| sz >= spec.mp).unwrap_or(false) {
-                        partition.push((d, spec.mp));
-                    }
-                    // Otherwise: replicate over the mp group.
-                }
-            }
-            let devices: Vec<DeviceId> = (base..base + spec.dp * spec.mp).collect();
-            let cfg = ParallelConfig::sharded(&partition, devices);
-            tree.assign_layer(graph, layer_id, cfg)?;
-        }
+        assign_stage_layers(
+            graph,
+            &mut tree,
+            layer_range,
+            spec.dp,
+            spec.mp,
+            spec.shard_embeddings,
+            base,
+        )?;
     }
 
     // --- Schedule. ------------------------------------------------------
-    // The explicit `max_ongoing` caps the schedule's own in-flight
-    // bound; the default leaves 1F1B's per-stage `pp - stage` bound in
-    // charge (capped at `pp` for compatibility with the legacy
-    // single-number knob) and lets fill-drain / interleaved derive
-    // their bounds entirely from the schedule lowering.
-    let max_ongoing = if spec.max_ongoing == 0 {
-        match spec.schedule {
-            PipelineSchedule::OneFOneB if spec.pp > 1 => spec.pp,
-            _ => usize::MAX,
-        }
-    } else {
-        spec.max_ongoing
-    };
+    let max_ongoing = default_max_ongoing(spec.max_ongoing, spec.schedule, stages.len());
     tree.set_schedule(
         "",
         ScheduleConfig {
@@ -231,19 +214,13 @@ pub fn build_strategy(graph: &Graph, spec: StrategySpec) -> Result<StrategyTree>
     Ok(tree)
 }
 
-/// Split layers into `pp` contiguous groups with roughly equal forward
-/// FLOPs. Cuts are made at *top-level module boundaries* (the root's
-/// children in the strategy tree) so that subgraph division finds
-/// disjoint device groups — mirroring how expert pipelines cut at block
-/// boundaries.
-pub fn balance_stages(graph: &Graph, pp: usize) -> Vec<Vec<usize>> {
-    let n = graph.layers.len();
-    if pp <= 1 {
-        return vec![(0..n).collect()];
-    }
-    // Contiguous units: runs of layers sharing the same first path
-    // component (a top-level module); scope-less layers are their own
-    // unit.
+/// The model's contiguous *pipeline units*: runs of layers sharing the
+/// same first path component (a top-level module); scope-less layers are
+/// their own unit. Pipeline-stage boundaries — uniform
+/// ([`balance_stages`]) and non-uniform
+/// ([`crate::strategy::NonUniformSpec`]) alike — are always cut between
+/// units, so subgraph division finds disjoint device groups.
+pub fn stage_units(graph: &Graph) -> Vec<Vec<usize>> {
     let mut units: Vec<Vec<usize>> = Vec::new();
     let mut last_key: Option<&str> = None;
     for l in &graph.layers {
@@ -259,20 +236,49 @@ pub fn balance_stages(graph: &Graph, pp: usize) -> Vec<Vec<usize>> {
         }
         last_key = key;
     }
+    units
+}
+
+/// Split layers into `pp` contiguous groups with roughly equal forward
+/// FLOPs. Cuts are made at *top-level module boundaries* (the root's
+/// children in the strategy tree) so that subgraph division finds
+/// disjoint device groups — mirroring how expert pipelines cut at block
+/// boundaries.
+pub fn balance_stages(graph: &Graph, pp: usize) -> Vec<Vec<usize>> {
+    let n = graph.layers.len();
+    if pp <= 1 {
+        return vec![(0..n).collect()];
+    }
+    let units = stage_units(graph);
     let unit_flops: Vec<f64> = units
         .iter()
         .map(|u| u.iter().map(|&l| graph.layers[l].fwd_flops() as f64).sum())
         .collect();
+    let counts = balance_unit_counts(&unit_flops, pp);
+    let mut out: Vec<Vec<usize>> = Vec::with_capacity(counts.len());
+    let mut i = 0;
+    for c in counts {
+        out.push(units[i..i + c].iter().flatten().copied().collect());
+        i += c;
+    }
+    out
+}
+
+/// FLOP-balanced partition of a unit sequence into at most `pp`
+/// contiguous groups: returns the unit count of each group (summing to
+/// `unit_flops.len()`). Fewer than `pp` groups come back when there are
+/// not enough units — callers decide whether that is an error.
+pub fn balance_unit_counts(unit_flops: &[f64], pp: usize) -> Vec<usize> {
     let total: f64 = unit_flops.iter().sum();
     let target = total / pp as f64;
-    let mut out: Vec<Vec<usize>> = Vec::with_capacity(pp);
-    let mut cur: Vec<usize> = Vec::new();
+    let mut out: Vec<usize> = Vec::with_capacity(pp);
+    let mut cur = 0usize;
     let mut acc = 0.0;
     let mut remaining_stages = pp;
-    for (i, u) in units.iter().enumerate() {
-        cur.extend(u.iter().copied());
-        acc += unit_flops[i];
-        let remaining_units = units.len() - i - 1;
+    for (i, f) in unit_flops.iter().enumerate() {
+        cur += 1;
+        acc += f;
+        let remaining_units = unit_flops.len() - i - 1;
         if remaining_stages > 1 && acc >= target * 0.95 && remaining_units >= remaining_stages - 1
         {
             out.push(std::mem::take(&mut cur));
@@ -280,17 +286,115 @@ pub fn balance_stages(graph: &Graph, pp: usize) -> Vec<Vec<usize>> {
             remaining_stages -= 1;
         }
     }
-    if !cur.is_empty() {
+    if cur > 0 {
         out.push(cur);
     }
     out
+}
+
+/// The dimension model parallelism splits on `layer`, per its
+/// [`MpHint`] (`None` = replicate over the model-parallel group).
+pub(crate) fn mp_split_dim(layer: &Layer) -> Option<&str> {
+    match layer.mp_hint {
+        MpHint::ColSplit => Some("o"),
+        MpHint::RowSplit => Some("h"),
+        MpHint::Heads => Some("a"),
+        MpHint::Vocab => Some("v"),
+        // Last generic dim (e.g. the 4h axis of a Megatron GeLU).
+        MpHint::LastDim => layer
+            .dims
+            .iter()
+            .rev()
+            .find(|(n, _)| n.starts_with('d'))
+            .map(|(n, _)| n.as_str()),
+        MpHint::Replicate => None,
+    }
+}
+
+/// Assign the `dp × mp` computation configs of one pipeline stage: every
+/// layer in `layers` is sharded `b × hint-dim` over the contiguous
+/// device block `[base, base + dp*mp)`. This is the per-stage kernel
+/// shared by [`build_strategy`] (uniform degrees) and
+/// [`crate::strategy::NonUniformSpec::build`] (per-stage degrees), so a
+/// non-uniform spec with uniform per-stage configs resolves to exactly
+/// the uniform builder's tree.
+pub(crate) fn assign_stage_layers(
+    graph: &Graph,
+    tree: &mut StrategyTree,
+    layers: &[usize],
+    dp: usize,
+    mp: usize,
+    shard_embeddings: bool,
+    base: usize,
+) -> Result<()> {
+    for &layer_id in layers {
+        let layer = &graph.layers[layer_id];
+        let mut partition: Vec<(&str, usize)> = Vec::new();
+        if dp > 1 {
+            partition.push(("b", dp));
+        }
+        let mut emb_override = false;
+        if shard_embeddings && layer.kind == OpKind::Embedding {
+            // Shard the table over the whole stage group; do not split
+            // the batch (classic DLRM model-parallel embeddings).
+            let n = dp * mp;
+            if layer.dim_size("v").map(|v| v >= n).unwrap_or(false) {
+                partition = vec![("v", n)];
+                emb_override = true;
+            }
+        }
+        if !emb_override && mp > 1 {
+            if let Some(d) = mp_split_dim(layer) {
+                if layer.dim_size(d).map(|sz| sz >= mp).unwrap_or(false) {
+                    partition.push((d, mp));
+                }
+                // Otherwise: replicate over the mp group.
+            }
+        }
+        let devices: Vec<DeviceId> = (base..base + dp * mp).collect();
+        let cfg = ParallelConfig::sharded(&partition, devices);
+        tree.assign_layer(graph, layer_id, cfg)?;
+    }
+    Ok(())
+}
+
+/// Resolve the effective `max_ongoing_micro_batch` bound from the
+/// spec-level knob: an explicit value caps the schedule's own in-flight
+/// bound; the default (0) leaves 1F1B's per-stage `pp - stage` bound in
+/// charge (capped at `pp` for compatibility with the legacy
+/// single-number knob) and lets fill-drain / interleaved derive their
+/// bounds entirely from the schedule lowering.
+pub(crate) fn default_max_ongoing(
+    explicit: usize,
+    schedule: PipelineSchedule,
+    n_stages: usize,
+) -> usize {
+    if explicit != 0 {
+        return explicit;
+    }
+    match schedule {
+        PipelineSchedule::OneFOneB if n_stages > 1 => n_stages,
+        _ => usize::MAX,
+    }
 }
 
 /// Apply ZeRO sharding: every parameter whose implicit layout replicates
 /// parts across a group of ≥ 2 devices gets its stored layout re-sharded
 /// along axis 0 within each replica group.
 fn apply_zero(graph: &Graph, tree: &mut StrategyTree) -> Result<()> {
-    for layer in &graph.layers {
+    let all: Vec<usize> = (0..graph.layers.len()).collect();
+    apply_zero_to_layers(graph, tree, &all)
+}
+
+/// [`apply_zero`] restricted to a layer subset — the per-stage ZeRO
+/// toggle of non-uniform strategies.
+pub(crate) fn apply_zero_to_layers(
+    graph: &Graph,
+    tree: &mut StrategyTree,
+    layers: &[usize],
+) -> Result<()> {
+    for &lid in layers {
+        let layer = &graph.layers[lid];
         let cfg = match tree.comp_of(layer.id) {
             Some(c) => c.clone(),
             None => continue,
@@ -487,6 +591,34 @@ mod tests {
                 .label(),
             "1x1x2(4)+interleaved:2"
         );
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for spec in [
+            StrategySpec::hybrid(4, 2, 1, 1),
+            StrategySpec::data_parallel(8).with_zero().with_recompute(),
+            StrategySpec::hybrid(1, 1, 2, 4),
+            StrategySpec::hybrid(2, 2, 4, 8)
+                .with_schedule(PipelineSchedule::Interleaved { v: 2 })
+                .with_zero(),
+            StrategySpec::hybrid(1, 8, 1, 2).with_sharded_embeddings(),
+        ] {
+            assert_eq!(StrategySpec::parse_label(&spec.label()), Some(spec));
+        }
+        assert_eq!(StrategySpec::parse_label("4x2(8)"), None);
+        assert_eq!(StrategySpec::parse_label("4x2x1(8)+bogus"), None);
+        assert_eq!(StrategySpec::parse_label("garbage"), None);
+    }
+
+    #[test]
+    fn stage_units_cover_layers_contiguously() {
+        let g = mlp(16, 4);
+        let units = stage_units(&g);
+        let flat: Vec<usize> = units.iter().flatten().copied().collect();
+        assert_eq!(flat, (0..g.layers.len()).collect::<Vec<_>>());
+        // 4 blocks + input-less loss layer (scope-less → own unit).
+        assert!(units.len() >= 4);
     }
 
     #[test]

@@ -27,11 +27,13 @@
 
 pub mod builders;
 pub mod config;
+pub mod nonuniform;
 pub mod paper;
 pub mod propagate;
 pub mod tree;
 
-pub use builders::{build_strategy, StrategySpec};
+pub use builders::{balance_stages, build_strategy, stage_units, StrategySpec};
+pub use nonuniform::{propose, Mutation, NonUniformSpec, StageSpec};
 pub use config::{
     memory_layout, operand_layout, LayoutPart, ParallelConfig, PipelineSchedule, ScheduleConfig,
     TensorLayout,

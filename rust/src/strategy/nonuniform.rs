@@ -1,0 +1,880 @@
+//! Non-uniform strategy specs and the mutation-op library the
+//! simulated-annealing searcher ([`crate::runtime::search`]) walks.
+//!
+//! The paper's strategy tree supports *per-subtree* configs — different
+//! pipeline stages may use different `dp × mp` splits, different device
+//! counts, and different memory optimizations — but the uniform
+//! [`StrategySpec`] grid never explores that space. A [`NonUniformSpec`]
+//! is the searchable middle ground: it keeps the tree's expressiveness
+//! for the dimensions that matter (stage boundaries, per-stage degrees,
+//! per-stage ZeRO) while staying a small, hashable, JSON-serializable
+//! value a search chain can mutate in microseconds.
+//!
+//! Stage boundaries are expressed in **units** — the model's contiguous
+//! top-level-module runs ([`stage_units`]) — so every spec cuts the
+//! model where the uniform builder would, and subgraph division
+//! (`strategy/propagate`) always finds disjoint device groups.
+//!
+//! [`Mutation`] enumerates the neighborhood ops; [`propose`] draws a
+//! random valid neighbor from a seeded [`Rng`]. Every neighbor is
+//! re-validated structurally before it is returned, so the searcher
+//! only spends simulation budget on specs that build.
+
+use crate::graph::Graph;
+use crate::strategy::builders::{
+    apply_zero_to_layers, assign_stage_layers, balance_unit_counts, default_max_ongoing,
+    stage_units, StrategySpec,
+};
+use crate::strategy::config::{PipelineSchedule, ScheduleConfig};
+use crate::strategy::tree::StrategyTree;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// Configuration of one pipeline stage of a [`NonUniformSpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StageSpec {
+    /// Contiguous model units ([`stage_units`]) this stage spans (≥ 1).
+    pub units: usize,
+    /// Data-parallel degree within the stage.
+    pub dp: usize,
+    /// Model-parallel degree within the stage.
+    pub mp: usize,
+    /// ZeRO-shard this stage's replicated parameters.
+    pub zero: bool,
+}
+
+impl StageSpec {
+    /// Devices this stage occupies.
+    pub fn devices(self) -> usize {
+        self.dp * self.mp
+    }
+
+    /// Compact display form, e.g. `"3u4x2z"`.
+    pub fn label(self) -> String {
+        format!(
+            "{}u{}x{}{}",
+            self.units,
+            self.dp,
+            self.mp,
+            if self.zero { "z" } else { "" }
+        )
+    }
+}
+
+/// A non-uniform parallelization strategy: per-stage `dp × mp` degrees
+/// and ZeRO toggles over explicit stage boundaries, plus the global
+/// schedule knobs. Materialized into a [`StrategyTree`] by
+/// [`NonUniformSpec::build`].
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct NonUniformSpec {
+    /// Pipeline stages in model order (devices are assigned as
+    /// consecutive blocks in this order).
+    pub stages: Vec<StageSpec>,
+    /// Micro-batches per step.
+    pub n_micro: usize,
+    /// In-flight bound (0 = schedule default, as in [`StrategySpec`]).
+    pub max_ongoing: usize,
+    /// Recompute forward activations in the backward pass. Only valid
+    /// on single-stage specs — mirroring the compiler-supported space
+    /// the uniform grid enumerates (recompute without pipelining).
+    pub recompute: bool,
+    /// Shard embedding tables over each stage's device block.
+    pub shard_embeddings: bool,
+    /// Pipeline execution order.
+    pub schedule: PipelineSchedule,
+}
+
+impl NonUniformSpec {
+    /// Single-stage spec covering the whole model: `dp × mp` over
+    /// `dp*mp` devices. The searcher's simplest seed point.
+    pub fn single_stage(graph: &Graph, dp: usize, mp: usize) -> NonUniformSpec {
+        NonUniformSpec {
+            stages: vec![StageSpec {
+                units: stage_units(graph).len(),
+                dp,
+                mp,
+                zero: false,
+            }],
+            n_micro: 1,
+            max_ongoing: 0,
+            recompute: false,
+            shard_embeddings: false,
+            schedule: PipelineSchedule::OneFOneB,
+        }
+    }
+
+    /// Convert a uniform [`StrategySpec`] into the equivalent
+    /// non-uniform form: same FLOP-balanced stage boundaries
+    /// ([`crate::strategy::balance_stages`]), the spec's `dp × mp` and
+    /// ZeRO flag on every stage. Building the result yields a tree that resolves
+    /// identically to [`crate::strategy::build_strategy`]'s (pinned by
+    /// the module tests), so search chains can be seeded from — and
+    /// compared against — uniform grid candidates exactly.
+    pub fn from_uniform(graph: &Graph, spec: StrategySpec) -> Result<NonUniformSpec> {
+        if spec.dp == 0 || spec.mp == 0 || spec.pp == 0 || spec.n_micro_batch == 0 {
+            return Err(Error::InvalidStrategy("degrees must be ≥ 1".into()));
+        }
+        // Same unit partition as `balance_stages`, expressed directly in
+        // unit counts.
+        let units = stage_units(graph);
+        let counts: Vec<usize> = if spec.pp <= 1 {
+            vec![units.len()]
+        } else {
+            let unit_flops: Vec<f64> = units
+                .iter()
+                .map(|u| u.iter().map(|&l| graph.layers[l].fwd_flops() as f64).sum())
+                .collect();
+            balance_unit_counts(&unit_flops, spec.pp)
+        };
+        if counts.len() < spec.pp {
+            return Err(Error::InvalidStrategy(format!(
+                "model '{}' has too few top-level modules for pp={} (got {} stages)",
+                graph.name,
+                spec.pp,
+                counts.len()
+            )));
+        }
+        let spec = NonUniformSpec {
+            stages: counts
+                .into_iter()
+                .map(|units| StageSpec {
+                    units,
+                    dp: spec.dp,
+                    mp: spec.mp,
+                    zero: spec.zero,
+                })
+                .collect(),
+            n_micro: spec.n_micro_batch,
+            max_ongoing: spec.max_ongoing,
+            recompute: spec.recompute,
+            shard_embeddings: spec.shard_embeddings,
+            schedule: spec.schedule,
+        };
+        spec.validate(graph)?;
+        Ok(spec)
+    }
+
+    /// Number of pipeline stages.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total devices used (stages occupy consecutive device blocks).
+    pub fn n_devices(&self) -> usize {
+        self.stages.iter().map(|s| s.devices()).sum()
+    }
+
+    /// Compact display form: per-stage labels joined by `|`, then the
+    /// micro-batch count and global toggles — e.g.
+    /// `"3u4x2z|2u2x4(8)+1f1b"`.
+    pub fn label(&self) -> String {
+        let mut s = self
+            .stages
+            .iter()
+            .map(|st| st.label())
+            .collect::<Vec<_>>()
+            .join("|");
+        s.push_str(&format!("({})", self.n_micro));
+        if self.stages.len() > 1 {
+            s.push('+');
+            s.push_str(&self.schedule.name());
+        }
+        if self.max_ongoing > 0 {
+            s.push_str(&format!("+mo{}", self.max_ongoing));
+        }
+        if self.recompute {
+            s.push_str("+rc");
+        }
+        if self.shard_embeddings {
+            s.push_str("+emb");
+        }
+        s
+    }
+
+    /// Structural validation against the model (everything checkable
+    /// without resolving the tree). [`NonUniformSpec::build`] calls this
+    /// first; the mutation proposer uses it to reject invalid neighbors
+    /// before any simulation budget is spent.
+    pub fn validate(&self, graph: &Graph) -> Result<()> {
+        if self.stages.is_empty() {
+            return Err(Error::InvalidStrategy("spec has no stages".into()));
+        }
+        if self.n_micro == 0 {
+            return Err(Error::InvalidStrategy("n_micro must be ≥ 1".into()));
+        }
+        if let PipelineSchedule::Interleaved { v: 0 } = self.schedule {
+            return Err(Error::InvalidStrategy(
+                "interleaved schedule needs v ≥ 1 virtual stages".into(),
+            ));
+        }
+        if self.recompute && self.stages.len() > 1 {
+            return Err(Error::InvalidStrategy(
+                "recompute is only supported without pipelining".into(),
+            ));
+        }
+        let total_units: usize = self.stages.iter().map(|s| s.units).sum();
+        let n_units = stage_units(graph).len();
+        if total_units != n_units {
+            return Err(Error::InvalidStrategy(format!(
+                "stages cover {total_units} units, model has {n_units}"
+            )));
+        }
+        for (i, st) in self.stages.iter().enumerate() {
+            if st.units == 0 || st.dp == 0 || st.mp == 0 {
+                return Err(Error::InvalidStrategy(format!(
+                    "stage {i}: units/dp/mp must be ≥ 1"
+                )));
+            }
+            if graph.batch_size % (st.dp * self.n_micro) != 0 {
+                return Err(Error::InvalidStrategy(format!(
+                    "stage {i}: batch {} not divisible by dp*n_micro = {}",
+                    graph.batch_size,
+                    st.dp * self.n_micro
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the strategy tree implementing this spec: each stage's
+    /// layers are sharded `b × hint-dim` over the stage's consecutive
+    /// device block, the root carries the schedule config, and ZeRO
+    /// refinement is applied to the stages that ask for it.
+    pub fn build(&self, graph: &Graph) -> Result<StrategyTree> {
+        self.validate(graph)?;
+        let units = stage_units(graph);
+        let mut tree = StrategyTree::from_model(graph);
+        let mut base = 0usize;
+        let mut unit_idx = 0usize;
+        let mut zero_layers: Vec<usize> = Vec::new();
+        for st in &self.stages {
+            let layers: Vec<usize> = units[unit_idx..unit_idx + st.units]
+                .iter()
+                .flatten()
+                .copied()
+                .collect();
+            unit_idx += st.units;
+            assign_stage_layers(
+                graph,
+                &mut tree,
+                &layers,
+                st.dp,
+                st.mp,
+                self.shard_embeddings,
+                base,
+            )?;
+            if st.zero {
+                zero_layers.extend(&layers);
+            }
+            base += st.devices();
+        }
+        let max_ongoing = default_max_ongoing(self.max_ongoing, self.schedule, self.stages.len());
+        tree.set_schedule(
+            "",
+            ScheduleConfig {
+                n_micro_batch: self.n_micro,
+                max_ongoing_micro_batch: max_ongoing,
+                recompute: self.recompute,
+                pipeline: self.schedule,
+            },
+        )?;
+        apply_zero_to_layers(graph, &mut tree, &zero_layers)?;
+        Ok(tree)
+    }
+
+    /// JSON form (the `spec` object of `proteus search --json`; schema
+    /// in the README). Round-trips through
+    /// [`NonUniformSpec::from_json`].
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_micro", Json::Num(self.n_micro as f64)),
+            ("max_ongoing", Json::Num(self.max_ongoing as f64)),
+            ("recompute", Json::Bool(self.recompute)),
+            ("emb_shard", Json::Bool(self.shard_embeddings)),
+            ("schedule", Json::Str(self.schedule.name())),
+            (
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|st| {
+                            Json::obj(vec![
+                                ("units", Json::Num(st.units as f64)),
+                                ("dp", Json::Num(st.dp as f64)),
+                                ("mp", Json::Num(st.mp as f64)),
+                                ("zero", Json::Bool(st.zero)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse the [`NonUniformSpec::to_json`] form (used by
+    /// `proteus search --resume`).
+    pub fn from_json(j: &Json) -> Result<NonUniformSpec> {
+        let bad = |what: &str| Error::Config(format!("spec JSON: bad or missing '{what}'"));
+        let stages = j
+            .get("stages")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("stages"))?
+            .iter()
+            .map(|sj| {
+                Ok(StageSpec {
+                    units: sj
+                        .get("units")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| bad("stages[].units"))?,
+                    dp: sj
+                        .get("dp")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| bad("stages[].dp"))?,
+                    mp: sj
+                        .get("mp")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| bad("stages[].mp"))?,
+                    zero: sj.get("zero").and_then(|v| v.as_bool()).unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let schedule = j
+            .get("schedule")
+            .and_then(|v| v.as_str())
+            .and_then(PipelineSchedule::parse)
+            .ok_or_else(|| bad("schedule"))?;
+        Ok(NonUniformSpec {
+            stages,
+            n_micro: j
+                .get("n_micro")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| bad("n_micro"))?,
+            max_ongoing: j.get("max_ongoing").and_then(|v| v.as_usize()).unwrap_or(0),
+            recompute: j
+                .get("recompute")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            shard_embeddings: j
+                .get("emb_shard")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            schedule,
+        })
+    }
+}
+
+/// One neighborhood operation of the strategy-search space. Applying a
+/// mutation is pure and deterministic ([`Mutation::apply`]); randomness
+/// lives only in the proposer ([`propose`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    /// Re-factorize one stage's device block into a different
+    /// `dp × mp` split (device count unchanged).
+    Resplit {
+        /// Stage index.
+        stage: usize,
+        /// New data-parallel degree (must divide the stage's devices).
+        dp: usize,
+    },
+    /// Move one unit across the boundary between stages `boundary` and
+    /// `boundary + 1`.
+    MoveBoundary {
+        /// Boundary index (between stage `boundary` and `boundary+1`).
+        boundary: usize,
+        /// `true`: the right stage's first unit moves left; `false`:
+        /// the left stage's last unit moves right.
+        to_left: bool,
+    },
+    /// Split one stage into two: units divided at `at_units`, the
+    /// device block divided in half (odd counts round the left half
+    /// down), each half re-factorized (keeping `mp` when it still
+    /// divides, else falling back to full replication).
+    SplitStage {
+        /// Stage index.
+        stage: usize,
+        /// Units kept by the left half (1 ≤ `at_units` < `units`).
+        at_units: usize,
+    },
+    /// Merge stages `boundary` and `boundary + 1` into one (units and
+    /// device blocks concatenated, degrees re-factorized).
+    MergeStages {
+        /// Boundary index.
+        boundary: usize,
+    },
+    /// Toggle ZeRO sharding on one stage's parameters.
+    ToggleZero {
+        /// Stage index.
+        stage: usize,
+    },
+    /// Toggle activation recomputation (single-stage specs only).
+    ToggleRecompute,
+    /// Switch the pipeline execution order.
+    SetSchedule {
+        /// New schedule.
+        schedule: PipelineSchedule,
+    },
+    /// Change the in-flight micro-batch bound.
+    SetMaxOngoing {
+        /// New bound (0 = schedule default).
+        value: usize,
+    },
+    /// Change the micro-batch count.
+    SetMicro {
+        /// New micro-batch count.
+        n_micro: usize,
+    },
+}
+
+impl Mutation {
+    /// Short op name for logs and the README's mutation table.
+    pub fn name(self) -> &'static str {
+        match self {
+            Mutation::Resplit { .. } => "resplit",
+            Mutation::MoveBoundary { .. } => "move-boundary",
+            Mutation::SplitStage { .. } => "split-stage",
+            Mutation::MergeStages { .. } => "merge-stages",
+            Mutation::ToggleZero { .. } => "toggle-zero",
+            Mutation::ToggleRecompute => "toggle-recompute",
+            Mutation::SetSchedule { .. } => "set-schedule",
+            Mutation::SetMaxOngoing { .. } => "set-max-ongoing",
+            Mutation::SetMicro { .. } => "set-micro",
+        }
+    }
+
+    /// Apply this mutation to `spec`, returning the neighbor. Pure and
+    /// total: out-of-range parameters are clamped or yield an unchanged
+    /// clone (which the proposer rejects as a non-move); structural
+    /// invalidity is caught by [`NonUniformSpec::validate`].
+    pub fn apply(self, graph: &Graph, spec: &NonUniformSpec) -> NonUniformSpec {
+        let mut out = spec.clone();
+        match self {
+            Mutation::Resplit { stage, dp } => {
+                if let Some(st) = out.stages.get_mut(stage) {
+                    let devs = st.devices();
+                    if dp >= 1 && devs % dp == 0 {
+                        st.dp = dp;
+                        st.mp = devs / dp;
+                    }
+                }
+            }
+            Mutation::MoveBoundary { boundary, to_left } => {
+                if boundary + 1 < out.stages.len() {
+                    let (from, to) = if to_left {
+                        (boundary + 1, boundary)
+                    } else {
+                        (boundary, boundary + 1)
+                    };
+                    if out.stages[from].units >= 2 {
+                        out.stages[from].units -= 1;
+                        out.stages[to].units += 1;
+                    }
+                }
+            }
+            Mutation::SplitStage { stage, at_units } => {
+                if let Some(st) = out.stages.get(stage).copied() {
+                    let devs = st.devices();
+                    if at_units >= 1 && at_units < st.units && devs >= 2 {
+                        let (devs_l, devs_r) = (devs / 2, devs - devs / 2);
+                        let (dp_l, mp_l) = refactor(graph, spec.n_micro, devs_l, st.mp);
+                        let (dp_r, mp_r) = refactor(graph, spec.n_micro, devs_r, st.mp);
+                        let left = StageSpec {
+                            units: at_units,
+                            dp: dp_l,
+                            mp: mp_l,
+                            zero: st.zero,
+                        };
+                        let right = StageSpec {
+                            units: st.units - at_units,
+                            dp: dp_r,
+                            mp: mp_r,
+                            zero: st.zero,
+                        };
+                        out.stages.splice(stage..=stage, [left, right]);
+                        out.recompute = false;
+                    }
+                }
+            }
+            Mutation::MergeStages { boundary } => {
+                if boundary + 1 < out.stages.len() {
+                    let (a, b) = (out.stages[boundary], out.stages[boundary + 1]);
+                    let devs = a.devices() + b.devices();
+                    let (dp, mp) = refactor(graph, spec.n_micro, devs, a.mp);
+                    let merged = StageSpec {
+                        units: a.units + b.units,
+                        dp,
+                        mp,
+                        zero: a.zero && b.zero,
+                    };
+                    out.stages.splice(boundary..=boundary + 1, [merged]);
+                }
+            }
+            Mutation::ToggleZero { stage } => {
+                if let Some(st) = out.stages.get_mut(stage) {
+                    st.zero = !st.zero;
+                }
+            }
+            Mutation::ToggleRecompute => {
+                if out.stages.len() == 1 {
+                    out.recompute = !out.recompute;
+                }
+            }
+            Mutation::SetSchedule { schedule } => out.schedule = schedule,
+            Mutation::SetMaxOngoing { value } => out.max_ongoing = value,
+            Mutation::SetMicro { n_micro } => {
+                if n_micro >= 1 {
+                    out.n_micro = n_micro;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Pick a `dp × mp` factorization of `devs` for a freshly split/merged
+/// stage: keep the inherited `mp` when it still divides the block and
+/// the data-parallel remainder divides the batch; otherwise fall back
+/// to full replication over the block (`dp = 1`), which is always
+/// batch-valid.
+fn refactor(graph: &Graph, n_micro: usize, devs: usize, prefer_mp: usize) -> (usize, usize) {
+    if prefer_mp >= 1 && devs % prefer_mp == 0 {
+        let dp = devs / prefer_mp;
+        if graph.batch_size % (dp * n_micro) == 0 {
+            return (dp, prefer_mp);
+        }
+    }
+    if graph.batch_size % (devs * n_micro) == 0 {
+        return (devs, 1);
+    }
+    (1, devs)
+}
+
+/// All divisors of `n`, ascending.
+fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// Draw one random mutation applicable to `spec`, or `None` when the
+/// drawn op kind has no applicable instance (the caller retries).
+fn random_mutation(graph: &Graph, spec: &NonUniformSpec, rng: &mut Rng) -> Option<Mutation> {
+    let n_stages = spec.stages.len();
+    match rng.range(0, 8) {
+        0 => {
+            let stage = rng.range(0, n_stages - 1);
+            let devs = spec.stages[stage].devices();
+            let dp = *rng.pick(&divisors(devs));
+            Some(Mutation::Resplit { stage, dp })
+        }
+        1 if n_stages >= 2 => Some(Mutation::MoveBoundary {
+            boundary: rng.range(0, n_stages - 2),
+            to_left: rng.chance(0.5),
+        }),
+        2 => {
+            let stage = rng.range(0, n_stages - 1);
+            let st = spec.stages[stage];
+            if st.units < 2 || st.devices() < 2 {
+                return None;
+            }
+            Some(Mutation::SplitStage {
+                stage,
+                at_units: rng.range(1, st.units - 1),
+            })
+        }
+        3 if n_stages >= 2 => Some(Mutation::MergeStages {
+            boundary: rng.range(0, n_stages - 2),
+        }),
+        4 => Some(Mutation::ToggleZero {
+            stage: rng.range(0, n_stages - 1),
+        }),
+        5 if n_stages == 1 => Some(Mutation::ToggleRecompute),
+        6 if n_stages >= 2 => Some(Mutation::SetSchedule {
+            schedule: *rng.pick(&PipelineSchedule::all()),
+        }),
+        7 if n_stages >= 2 => Some(Mutation::SetMaxOngoing {
+            value: *rng.pick(&[0usize, 1, 2, 4]),
+        }),
+        8 => {
+            let candidates: Vec<usize> = [1usize, 2, 4, 8, 16]
+                .into_iter()
+                .filter(|&m| graph.batch_size % m == 0)
+                .collect();
+            if candidates.is_empty() {
+                return None;
+            }
+            Some(Mutation::SetMicro {
+                n_micro: *rng.pick(&candidates),
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Propose a random **valid** neighbor of `spec`: draw mutations from
+/// `rng` until one yields a spec that differs from the input and passes
+/// [`NonUniformSpec::validate`], giving up after `tries` draws (a
+/// `None` return means the chain should stop — the neighborhood is
+/// exhausted or pathologically constrained).
+///
+/// The proposer guarantees structural validity only; the searcher still
+/// runs the full `strategy/propagate` resolution at compile time and
+/// treats compile/OOM failures as rejected moves.
+pub fn propose(
+    graph: &Graph,
+    spec: &NonUniformSpec,
+    rng: &mut Rng,
+    tries: usize,
+) -> Option<(Mutation, NonUniformSpec)> {
+    if spec.stages.is_empty() {
+        return None;
+    }
+    for _ in 0..tries {
+        let Some(m) = random_mutation(graph, spec, rng) else {
+            continue;
+        };
+        let neighbor = m.apply(graph, spec);
+        if neighbor != *spec && neighbor.validate(graph).is_ok() {
+            return Some((m, neighbor));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, Preset};
+    use crate::graph::{DType, GraphBuilder};
+    use crate::strategy::{build_strategy, resolve};
+
+    fn mlp(batch: usize, blocks: usize) -> Graph {
+        let mut b = GraphBuilder::new("mlp", batch);
+        let mut h = b.input("x", &[batch, 64], DType::F32);
+        for i in 0..blocks {
+            h = b.scoped(&format!("blk{i}"), |b| {
+                let h = b.linear("fc1", h, 64, 256);
+                let h = b.relu("act", h);
+                let h = b.linear("fc2", h, 256, 64);
+                b.hint_last(crate::graph::MpHint::RowSplit);
+                h
+            });
+        }
+        let _ = b.loss("loss", h);
+        b.finish()
+    }
+
+    #[test]
+    fn from_uniform_matches_uniform_builder_exactly() {
+        let g = mlp(16, 4);
+        let c = Cluster::preset(Preset::HC1, 1);
+        for spec in [
+            StrategySpec::data_parallel(4),
+            StrategySpec::hybrid(2, 2, 1, 1),
+            StrategySpec::hybrid(1, 2, 2, 4),
+            StrategySpec::data_parallel(4).with_zero(),
+            StrategySpec::hybrid(1, 1, 2, 4).with_schedule(PipelineSchedule::GpipeFillDrain),
+        ] {
+            let uniform = build_strategy(&g, spec).unwrap();
+            let nu = NonUniformSpec::from_uniform(&g, spec).unwrap();
+            let built = nu.build(&g).unwrap();
+            let ru = resolve(&g, &uniform).unwrap();
+            let rn = resolve(&g, &built).unwrap();
+            assert_eq!(
+                ru.structural_hash(1),
+                rn.structural_hash(1),
+                "{}",
+                spec.label()
+            );
+            assert_eq!(ru.structural_hash(2), rn.structural_hash(2));
+            // Same execution graph, down to the dependency structure.
+            let ea = crate::compiler::compile(&g, &uniform, &c).unwrap();
+            let eb = crate::compiler::compile(&g, &built, &c).unwrap();
+            assert_eq!(ea.n_tasks(), eb.n_tasks(), "{}", spec.label());
+            for i in 0..ea.n_tasks() {
+                assert_eq!(ea.succs(i), eb.succs(i));
+            }
+        }
+    }
+
+    #[test]
+    fn nonuniform_stages_can_differ_in_width() {
+        let g = mlp(16, 4);
+        // Stage 0: 2 units at 4-way DP; stage 1: rest at 2x2.
+        let spec = NonUniformSpec {
+            stages: vec![
+                StageSpec {
+                    units: 2,
+                    dp: 4,
+                    mp: 1,
+                    zero: false,
+                },
+                StageSpec {
+                    units: 3,
+                    dp: 2,
+                    mp: 2,
+                    zero: true,
+                },
+            ],
+            n_micro: 4,
+            max_ongoing: 0,
+            recompute: false,
+            shard_embeddings: false,
+            schedule: PipelineSchedule::OneFOneB,
+        };
+        let tree = spec.build(&g).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        assert_eq!(r.stages.len(), 2);
+        assert_eq!(r.stages[0].devices, vec![0, 1, 2, 3]);
+        assert_eq!(r.stages[1].devices, vec![4, 5, 6, 7]);
+        // First stage layers split b=4; second stage b=2.
+        assert_eq!(r.comp[r.stages[0].layers[0]].degree("b"), 4);
+        assert_eq!(r.comp[r.stages[1].layers[0]].degree("b"), 2);
+        // And it compiles + simulates end to end.
+        let c = Cluster::preset(Preset::HC1, 1);
+        let eg = crate::compiler::compile(&g, &tree, &c).unwrap();
+        assert!(eg.is_dag());
+        let est = crate::estimator::OpEstimator::analytical(&c);
+        let rep = crate::executor::Htae::new(&c, &est).simulate(&eg).unwrap();
+        assert!(rep.throughput > 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let g = mlp(16, 2);
+        let mut spec = NonUniformSpec::single_stage(&g, 4, 1);
+        spec.build(&g).unwrap();
+        // Unit count mismatch.
+        let mut bad = spec.clone();
+        bad.stages[0].units += 1;
+        assert!(bad.validate(&g).is_err());
+        // Batch not divisible by dp * micro.
+        let mut bad = spec.clone();
+        bad.stages[0].dp = 3;
+        assert!(bad.validate(&g).is_err());
+        // Recompute with pipelining.
+        let mut bad = spec.clone();
+        bad.stages[0].units -= 1;
+        bad.stages.push(StageSpec {
+            units: 1,
+            dp: 2,
+            mp: 1,
+            zero: false,
+        });
+        bad.recompute = true;
+        assert!(bad.validate(&g).is_err());
+        // Zero micro.
+        spec.n_micro = 0;
+        assert!(spec.validate(&g).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = mlp(16, 3);
+        let spec = NonUniformSpec {
+            stages: vec![
+                StageSpec {
+                    units: 1,
+                    dp: 2,
+                    mp: 2,
+                    zero: true,
+                },
+                StageSpec {
+                    units: 3,
+                    dp: 4,
+                    mp: 1,
+                    zero: false,
+                },
+            ],
+            n_micro: 8,
+            max_ongoing: 2,
+            recompute: false,
+            shard_embeddings: true,
+            schedule: PipelineSchedule::Interleaved { v: 2 },
+        };
+        let j = spec.to_json();
+        let back = NonUniformSpec::from_json(&j).unwrap();
+        assert_eq!(back, spec);
+        // And through actual serialization.
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(NonUniformSpec::from_json(&parsed).unwrap(), spec);
+        let _ = g; // spec is model-independent until validated
+        assert!(NonUniformSpec::from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn labels_are_compact_and_distinct() {
+        let g = mlp(16, 2);
+        let a = NonUniformSpec::single_stage(&g, 4, 1);
+        let mut b = a.clone();
+        b.stages[0].zero = true;
+        assert_ne!(a.label(), b.label());
+        assert!(a.label().contains("4x1"));
+        let nu = NonUniformSpec {
+            stages: vec![
+                StageSpec {
+                    units: 2,
+                    dp: 4,
+                    mp: 2,
+                    zero: true,
+                },
+                StageSpec {
+                    units: 1,
+                    dp: 2,
+                    mp: 1,
+                    zero: false,
+                },
+            ],
+            n_micro: 4,
+            max_ongoing: 0,
+            recompute: false,
+            shard_embeddings: false,
+            schedule: PipelineSchedule::GpipeFillDrain,
+        };
+        assert_eq!(nu.label(), "2u4x2z|1u2x1(4)+gpipe");
+    }
+
+    #[test]
+    fn mutations_preserve_device_budget_and_validity() {
+        let g = mlp(32, 4);
+        let mut rng = Rng::new(1234);
+        let mut spec = NonUniformSpec::from_uniform(&g, StrategySpec::hybrid(2, 2, 2, 4)).unwrap();
+        let budget = spec.n_devices();
+        let mut applied = 0;
+        for _ in 0..200 {
+            let Some((m, next)) = propose(&g, &spec, &mut rng, 32) else {
+                break;
+            };
+            assert!(next.validate(&g).is_ok(), "{:?} produced invalid spec", m);
+            assert_eq!(
+                next.n_devices(),
+                budget,
+                "{:?} changed the device budget",
+                m
+            );
+            assert!(next.build(&g).is_ok(), "{:?} failed to build", m);
+            spec = next;
+            applied += 1;
+        }
+        assert!(applied >= 50, "proposer stalled after {applied} moves");
+    }
+
+    #[test]
+    fn proposer_is_deterministic() {
+        let g = mlp(32, 3);
+        let init = NonUniformSpec::from_uniform(&g, StrategySpec::hybrid(2, 2, 1, 2)).unwrap();
+        let walk = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut spec = init.clone();
+            let mut labels = Vec::new();
+            for _ in 0..30 {
+                if let Some((_, next)) = propose(&g, &spec, &mut rng, 32) {
+                    labels.push(next.label());
+                    spec = next;
+                }
+            }
+            labels
+        };
+        assert_eq!(walk(7), walk(7));
+        assert_ne!(walk(7), walk(8));
+    }
+}

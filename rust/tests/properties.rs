@@ -312,3 +312,79 @@ fn sharded_costs_shrink_with_more_devices() {
         Ok(())
     });
 }
+
+/// Compute FLOPs of the forward + backward phases only (optimizer work
+/// scales with replication, recompute legitimately re-runs forwards).
+fn fwd_bwd_flops(eg: &proteus::compiler::ExecGraph) -> f64 {
+    use proteus::compiler::{Phase, TaskRef};
+    eg.iter()
+        .filter(|t| matches!(t.phase, Phase::Fwd | Phase::Bwd))
+        .filter_map(|t| match t.kind {
+            TaskRef::Comp(c) => Some(c.flops),
+            _ => None,
+        })
+        .sum()
+}
+
+/// Tentpole property: every neighbor the mutation proposer emits
+/// validates, builds into a tree `strategy/propagate` accepts, and
+/// compiles to a DAG whose forward+backward FLOPs match the seed
+/// strategy — mutations move work around, they never create or destroy
+/// it. (Infeasible drafts are the proposer's problem: it must reject
+/// them before they reach the caller, so a failure here means a
+/// mutation op leaked an invalid spec.)
+#[test]
+fn mutation_ops_preserve_validity_and_flops() {
+    use proteus::strategy::nonuniform::propose;
+    use proteus::testing::check_with_seed;
+    let cluster = Cluster::preset(Preset::HC1, 1);
+    check_with_seed("mutation-ops", 0xBEEF_CAFE, 40, |g| {
+        let model = gen_model(g);
+        let batch = model.batch_size;
+        let pp = *g.pick(&[1usize, 2]);
+        let dp_opts: Vec<usize> = [1usize, 2, 4]
+            .into_iter()
+            .filter(|&d| batch % d == 0 && d * pp <= 8)
+            .collect();
+        let dp = *g.pick(&dp_opts);
+        let micro = if pp > 1 { 2 } else { 1 };
+        if batch % (dp * micro) != 0 {
+            return Ok(());
+        }
+        let seed_spec = StrategySpec::hybrid(dp, 1, pp, micro);
+        let Ok(init) = NonUniformSpec::from_uniform(&model, seed_spec) else {
+            // Too few units for pp: nothing to walk.
+            return Ok(());
+        };
+        let base_tree = init.build(&model).map_err(|e| e.to_string())?;
+        let base = compile(&model, &base_tree, &cluster).map_err(|e| e.to_string())?;
+        let base_flops = fwd_bwd_flops(&base);
+        let mut spec = init;
+        for _ in 0..8 {
+            let Some((m, next)) = propose(&model, &spec, g.rng(), 32) else {
+                break;
+            };
+            next.validate(&model)
+                .map_err(|e| format!("{m:?}: validate rejected proposal: {e}"))?;
+            let tree = next
+                .build(&model)
+                .map_err(|e| format!("{m:?}: build failed: {e}"))?;
+            proteus::strategy::resolve(&model, &tree)
+                .map_err(|e| format!("{m:?}: propagate rejected tree: {e}"))?;
+            let eg = compile(&model, &tree, &cluster)
+                .map_err(|e| format!("{m:?}: compile failed on validated spec: {e}"))?;
+            if !eg.is_dag() {
+                return Err(format!("{m:?}: produced a cyclic graph"));
+            }
+            let flops = fwd_bwd_flops(&eg);
+            let rel = (flops - base_flops).abs() / base_flops.max(1.0);
+            if rel > 0.01 {
+                return Err(format!(
+                    "{m:?}: fwd+bwd FLOPs not conserved: {flops} vs {base_flops}"
+                ));
+            }
+            spec = next;
+        }
+        Ok(())
+    });
+}

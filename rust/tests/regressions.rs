@@ -268,3 +268,62 @@ fn emulator_seed_band() {
         assert!(rel < 0.05, "seed {seed}: {rel}");
     }
 }
+
+/// Tentpole acceptance (reduced budget; `benches/fig_search.rs` runs the
+/// full version): annealed non-uniform search never falls below the best
+/// uniform `candidate_grid` candidate on GPT-2 at 16 devices — chain 0
+/// is seeded at the grid optimum and the searcher shares the sweep's
+/// scoring path bit-for-bit — and a fixed seed reproduces the best spec
+/// exactly.
+#[test]
+fn search_beats_or_matches_uniform_grid() {
+    use proteus::runtime::{dedupe_specs, default_inits};
+    let model = ModelKind::Gpt2;
+    let (batch, preset, nodes) = (16usize, Preset::HC2, 2);
+    let cluster = Cluster::preset(preset, nodes);
+    let n = cluster.num_devices();
+    assert_eq!(n, 16);
+    let graph = model.build(batch);
+    let scenarios: Vec<Scenario> = dedupe_specs(&graph, candidate_grid(n, batch))
+        .into_iter()
+        .map(|spec| Scenario {
+            model,
+            batch,
+            preset,
+            nodes,
+            spec,
+        })
+        .collect();
+    let outcomes = SweepRunner::new().run(&scenarios);
+    let ranked = SweepRunner::rank(&outcomes);
+    let grid_best = ranked
+        .iter()
+        .find(|o| !o.oom)
+        .expect("a feasible uniform candidate exists");
+    let grid_tput = grid_best.throughput().unwrap();
+
+    let mut inits = vec![SearchPoint::from_uniform(&graph, grid_best.scenario.spec).unwrap()];
+    inits.extend(default_inits(&graph, n, CollAlgo::Auto));
+    let cfg = SearchConfig {
+        seed: 42,
+        budget: 24,
+        chains: 2,
+        ..SearchConfig::default()
+    };
+    let a = Searcher::new(cfg).run(&graph, &cluster, &inits).unwrap();
+    let best_a = a.best.expect("chain 0 starts from a feasible point");
+    assert!(
+        best_a.throughput >= grid_tput,
+        "search {} ({:.2}) fell below the uniform grid best {} ({:.2})",
+        best_a.label,
+        best_a.throughput,
+        grid_best.scenario.spec.label(),
+        grid_tput,
+    );
+    // Same seed ⇒ identical best spec, bit-for-bit.
+    let b = Searcher::new(cfg).run(&graph, &cluster, &inits).unwrap();
+    let best_b = b.best.unwrap();
+    assert_eq!(best_a.label, best_b.label);
+    assert_eq!(best_a.point.spec, best_b.point.spec);
+    assert_eq!(best_a.throughput.to_bits(), best_b.throughput.to_bits());
+}
