@@ -123,6 +123,26 @@ fn main() {
             result.cache_hits,
             result.cache_misses,
         );
+        // Delta + pruning effectiveness: how many strategy evaluations
+        // each from-scratch template emission bought. Delta hits splice
+        // the untouched stage prefix from a parent checkpoint; pruned
+        // proposals are settled by the closed-form HTAE lower bound
+        // without simulating at all.
+        let effective = (result.evals + result.bound_prunes) as f64
+            / result.full_compiles.max(1) as f64;
+        println!(
+            "{}: delta hits {} / full compiles {} / bound-pruned {} \
+             => {effective:.1}x effective evaluations per full compile",
+            case.model.name(),
+            result.delta_hits,
+            result.full_compiles,
+            result.bound_prunes,
+        );
+        assert!(
+            effective >= 1.0,
+            "{}: effective ratio {effective:.2} < 1.0",
+            case.model.name(),
+        );
     }
     println!();
     print!("{}", table.render());

@@ -59,6 +59,10 @@ SEARCH OPTIONS:
                     4x2x2(8)+1f1b+zero (default: heuristic expert set)
   --resume FILE     seed from the 'best' of a previous --json output
   --fixed-coll      do not mutate the collective algorithm
+  --no-delta        disable delta re-compilation (A/B knob; results are
+                    bit-identical with or without it)
+  --no-prune        disable bound-based proposal pruning (changes the
+                    walk: pruned proposals are never simulated)
   --wall-secs S     optional wall-clock cap (breaks reproducibility)
 
 COLLECTIVES (simulate, sweep, search):

@@ -15,6 +15,7 @@
 //! proteus search    --model gpt2 --batch 64 --preset HC2 --nodes 2
 //!                   [--seed 42] [--budget 200] [--chains 4] [--threads N]
 //!                   [--init LABEL | --resume FILE] [--fixed-coll]
+//!                   [--no-delta] [--no-prune]
 //!                   [--wall-secs S] [--plain] [--json]
 //! proteus calibrate [--out configs/gamma.json]
 //! proteus info      --model resnet50 [--batch 32]
@@ -485,6 +486,8 @@ fn cmd_search(args: &Args) -> Result<()> {
     let fixed_coll = args.flag("fixed-coll");
     let init = args.get("init").map(str::to_string);
     let resume = args.get("resume").map(str::to_string);
+    let no_delta = args.flag("no-delta");
+    let no_prune = args.flag("no-prune");
     let wall_s = args
         .get("wall-secs")
         .map(|v| {
@@ -511,6 +514,25 @@ fn cmd_search(args: &Args) -> Result<()> {
             .get("spec")
             .ok_or_else(|| Error::Config(format!("{path}: 'best' has no 'spec'")))
             .and_then(NonUniformSpec::from_json)?;
+        // The file records the spec, not the workload it was found on: a
+        // resumed spec must be re-validated against *this* invocation's
+        // device budget and model, and must fail cleanly here rather
+        // than deep inside the first chain evaluation.
+        if spec.n_devices() > n {
+            return Err(Error::Config(format!(
+                "{path}: resumed spec {} uses {} devices but {}x{nodes} provides {n}",
+                spec.label(),
+                spec.n_devices(),
+                preset.name()
+            )));
+        }
+        spec.validate(&graph).map_err(|e| {
+            Error::Config(format!(
+                "{path}: resumed spec {} is invalid for {} at batch {batch}: {e}",
+                spec.label(),
+                model.name()
+            ))
+        })?;
         let coll = best
             .get("coll_algo")
             .and_then(|v| v.as_str())
@@ -538,74 +560,33 @@ fn cmd_search(args: &Args) -> Result<()> {
         threads,
         plain,
         mutate_coll: !fixed_coll,
+        delta: !no_delta,
+        prune: !no_prune,
         wall_s,
         ..SearchConfig::default()
     };
     let result = Searcher::new(config).run(&graph, &cluster, &inits)?;
 
     if json {
-        // Schema documented in README.md ("JSON output"). Deliberately
-        // free of wall-clock times and cache counters so a seeded run
-        // is byte-reproducible — the CI determinism gate diffs two runs.
-        let best_json = match &result.best {
-            None => Json::Null,
-            Some(b) => Json::obj(vec![
-                ("label", Json::Str(b.label.clone())),
-                ("step_ms", Json::Num(b.step_ms)),
-                ("throughput_samples_per_s", Json::Num(b.throughput)),
-                ("peak_mem_bytes", Json::Num(b.peak_mem as f64)),
-                ("oom", Json::Bool(b.oom)),
-                ("coll_algo", Json::Str(b.point.coll_algo.name().into())),
-                ("spec", b.point.spec.to_json()),
-            ]),
-        };
-        let chains_json: Vec<Json> = result
-            .chains
-            .iter()
-            .map(|c| {
-                Json::obj(vec![
-                    ("chain", Json::Num(c.chain as f64)),
-                    ("seed", Json::Num(c.seed as f64)),
-                    ("evals", Json::Num(c.evals as f64)),
-                    ("accepted", Json::Num(c.accepted as f64)),
-                    ("infeasible", Json::Num(c.infeasible as f64)),
-                    (
-                        "best_label",
-                        c.best
-                            .as_ref()
-                            .map(|e| Json::Str(e.label.clone()))
-                            .unwrap_or(Json::Null),
-                    ),
-                    (
-                        "best_throughput_samples_per_s",
-                        c.best
-                            .as_ref()
-                            .map(|e| Json::Num(e.throughput))
-                            .unwrap_or(Json::Null),
-                    ),
-                ])
-            })
-            .collect();
-        let fields = vec![
-            ("model", Json::Str(model.name().into())),
-            ("batch", Json::Num(batch as f64)),
-            ("cluster", Json::Str(cluster.name.clone())),
-            ("gpus", Json::Num(n as f64)),
-            ("seed", Json::Num(seed as f64)),
-            ("budget", Json::Num(budget as f64)),
-            ("n_chains", Json::Num(chains as f64)),
-            ("coll_algo", Json::Str(coll_algo.name().into())),
-            ("evals", Json::Num(result.evals as f64)),
-            ("best", best_json),
-            ("chains", Json::Arr(chains_json)),
-        ];
-        println!("{}", Json::obj(fields).to_string_pretty());
+        let doc = search_json(
+            model.name(),
+            batch,
+            &cluster.name,
+            n,
+            seed,
+            budget,
+            chains,
+            coll_algo,
+            &result,
+        );
+        println!("{}", doc.to_string_pretty());
         return Ok(());
     }
 
     println!(
         "searched {} candidates for {} b={} on {}({} GPUs): {} chains, seed {} — {:.2}s \
-         (template cache: {} misses, {} hits)",
+         (template cache: {} misses, {} hits; delta hits {}, full compiles {}, \
+         bound-pruned {})",
         result.evals,
         model.name(),
         batch,
@@ -616,12 +597,18 @@ fn cmd_search(args: &Args) -> Result<()> {
         result.wall_s,
         result.cache_misses,
         result.cache_hits,
+        result.delta_hits,
+        result.full_compiles,
+        result.bound_prunes,
     );
     let mut table = Table::new(&[
         "chain",
         "evals",
         "accepted",
         "infeasible",
+        "delta",
+        "full",
+        "pruned",
         "best samples/s",
         "best strategy",
     ]);
@@ -631,6 +618,9 @@ fn cmd_search(args: &Args) -> Result<()> {
             c.evals.to_string(),
             c.accepted.to_string(),
             c.infeasible.to_string(),
+            c.delta_hits.to_string(),
+            c.full_compiles.to_string(),
+            c.bound_prunes.to_string(),
             c.best
                 .as_ref()
                 .map(|e| format!("{:.1}", e.throughput))
@@ -656,6 +646,87 @@ fn cmd_search(args: &Args) -> Result<()> {
         None => println!("no feasible strategy found within budget"),
     }
     Ok(())
+}
+
+/// Build the `proteus search --json` document from a finished
+/// [`crate::runtime::SearchResult`]. Schema documented in README.md
+/// ("JSON output"); deliberately free of wall-clock times and
+/// template-cache counters so a seeded run is byte-reproducible — the
+/// CI determinism gate diffs two runs, and the delta differential
+/// harness (`tests/differential_search.rs`) diffs a delta run against a
+/// `--no-delta` run through this exact function. The delta/full/prune
+/// counters it does include are classification-based and equally
+/// deterministic.
+#[allow(clippy::too_many_arguments)]
+pub fn search_json(
+    model: &str,
+    batch: usize,
+    cluster_name: &str,
+    gpus: usize,
+    seed: u64,
+    budget: usize,
+    n_chains: usize,
+    coll_algo: CollAlgo,
+    result: &crate::runtime::SearchResult,
+) -> Json {
+    let best_json = match &result.best {
+        None => Json::Null,
+        Some(b) => Json::obj(vec![
+            ("label", Json::Str(b.label.clone())),
+            ("step_ms", Json::Num(b.step_ms)),
+            ("throughput_samples_per_s", Json::Num(b.throughput)),
+            ("peak_mem_bytes", Json::Num(b.peak_mem as f64)),
+            ("oom", Json::Bool(b.oom)),
+            ("coll_algo", Json::Str(b.point.coll_algo.name().into())),
+            ("spec", b.point.spec.to_json()),
+        ]),
+    };
+    let chains_json: Vec<Json> = result
+        .chains
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("chain", Json::Num(c.chain as f64)),
+                ("seed", Json::Num(c.seed as f64)),
+                ("evals", Json::Num(c.evals as f64)),
+                ("accepted", Json::Num(c.accepted as f64)),
+                ("infeasible", Json::Num(c.infeasible as f64)),
+                ("delta_hits", Json::Num(c.delta_hits as f64)),
+                ("full_compiles", Json::Num(c.full_compiles as f64)),
+                ("bound_prunes", Json::Num(c.bound_prunes as f64)),
+                (
+                    "best_label",
+                    c.best
+                        .as_ref()
+                        .map(|e| Json::Str(e.label.clone()))
+                        .unwrap_or(Json::Null),
+                ),
+                (
+                    "best_throughput_samples_per_s",
+                    c.best
+                        .as_ref()
+                        .map(|e| Json::Num(e.throughput))
+                        .unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("model", Json::Str(model.into())),
+        ("batch", Json::Num(batch as f64)),
+        ("cluster", Json::Str(cluster_name.into())),
+        ("gpus", Json::Num(gpus as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("budget", Json::Num(budget as f64)),
+        ("n_chains", Json::Num(n_chains as f64)),
+        ("coll_algo", Json::Str(coll_algo.name().into())),
+        ("evals", Json::Num(result.evals as f64)),
+        ("delta_hits", Json::Num(result.delta_hits as f64)),
+        ("full_compiles", Json::Num(result.full_compiles as f64)),
+        ("bound_prunes", Json::Num(result.bound_prunes as f64)),
+        ("best", best_json),
+        ("chains", Json::Arr(chains_json)),
+    ])
 }
 
 /// Rank an exhaustive strategy grid with the parallel [`SweepRunner`].
@@ -1056,6 +1127,52 @@ mod tests {
         let a = parse(
             "search --model vgg19 --batch 16 --preset HC1 --nodes 1 --budget 8 --chains 2 \
              --seed 3 --json",
+        );
+        run(&a).unwrap();
+    }
+
+    /// `--resume` must validate the loaded spec against the *current*
+    /// `--preset/--nodes` device budget. Before the fix the mismatch
+    /// only surfaced as a per-chain compile error deep inside the
+    /// search (every chain silently infeasible); this pins the clean
+    /// up-front `Config` error.
+    #[test]
+    fn search_resume_validates_device_budget() {
+        use crate::strategy::NonUniformSpec;
+        let g = ModelKind::Vgg19.build(16);
+        // A best spec from a 32-GPU run: dp=4 × mp=8.
+        let spec = NonUniformSpec::single_stage(&g, 4, 8);
+        assert_eq!(spec.n_devices(), 32);
+        let doc = Json::obj(vec![(
+            "best",
+            Json::obj(vec![
+                ("label", Json::Str(spec.label())),
+                ("coll_algo", Json::Str("auto".into())),
+                ("spec", spec.to_json()),
+            ]),
+        )]);
+        let path = std::env::temp_dir().join(format!(
+            "proteus_resume_budget_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&path, doc.to_string_pretty()).unwrap();
+        // Resumed onto a single HC1 node — far fewer than 32 devices.
+        let a = parse(&format!(
+            "search --model vgg19 --batch 16 --preset HC1 --nodes 1 --budget 4 --chains 1 \
+             --resume {}",
+            path.display()
+        ));
+        let err = run(&a).unwrap_err().to_string();
+        std::fs::remove_file(&path).unwrap();
+        assert!(err.contains("devices"), "unexpected error: {err}");
+        assert!(err.contains("32"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn search_no_delta_and_no_prune_flags_run() {
+        let a = parse(
+            "search --model vgg19 --batch 16 --preset HC1 --nodes 1 --budget 6 --chains 1 \
+             --seed 3 --no-delta --no-prune --json",
         );
         run(&a).unwrap();
     }

@@ -1,0 +1,266 @@
+//! Closed-form **HTAE lower bound** for branch-and-bound pruning in the
+//! strategy search (`runtime::search`).
+//!
+//! For a resolved strategy the bound is the max of three admissible
+//! under-estimates of the simulated makespan, each justified directly by
+//! the executor's queue semantics ([`crate::executor`]):
+//!
+//! 1. **Per-device computation busy time** — computation tasks on one
+//!    device serialize (one comp stream per device), so the sum of their
+//!    isolated base costs is a floor on that device's busy span. The
+//!    γ overlap penalty only scales computation costs *up*, never down,
+//!    so isolated costs under-estimate the simulated durations.
+//! 2. **Per-device gradient-communication busy time** — gradient
+//!    collectives occupy the gradient stream of every group device for
+//!    their full duration, and bandwidth sharing / γ scale the β term up
+//!    only. The isolated plan cost (`α + β` summed over
+//!    [`crate::collective::CollectivePlan::phase_costs`], exactly what
+//!    the executor's `plan_comm` charges before contention) summed per
+//!    device is a floor on the gradient stream's busy span.
+//! 3. **Single-micro critical path** — one micro-batch's
+//!    forward-then-backward chain along any producer→consumer path is a
+//!    real dependency chain in the exec graph; the longest such chain of
+//!    isolated compute costs is a floor regardless of pipelining.
+//!
+//! The bound deliberately **omits** recompute, feature communication,
+//! parameter gathers, and pipeline bubbles — omitting work only lowers
+//! the bound, preserving admissibility (pinned by a sweep-grid
+//! regression test). It needs no compilation: everything is derived
+//! from the resolved strategy, mirroring the template emitter's and
+//! finalizer's task-feature formulas.
+
+use std::collections::HashMap;
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::collective::{self, CollAlgo};
+use crate::estimator::{comm_row, comp_row, cost_ns};
+use crate::graph::{Graph, OpKind, TensorKind};
+use crate::strategy::ResolvedStrategy;
+use crate::util::time::{ps_to_ms, Ps};
+
+use super::common;
+use super::transform::transform;
+use super::{CommClass, CommTask, CompTask};
+
+/// Mirror of the estimator's private ns→ps conversion: non-finite and
+/// non-positive costs clamp to zero, everything else rounds.
+fn ns_to_ps(ns: f32) -> Ps {
+    if !ns.is_finite() || ns <= 0.0 {
+        return 0;
+    }
+    (ns as f64 * 1e3).round() as Ps
+}
+
+/// Isolated base cost of one computation shard, exactly as the
+/// analytical estimator charges it.
+fn comp_ps(t: &CompTask, cluster: &Cluster) -> Ps {
+    ns_to_ps(cost_ns(&comp_row(t, cluster)))
+}
+
+/// Isolated contention-free cost of one gradient collective: the
+/// lowered plan's `α + β` (the executor's `plan_comm` charge), or the
+/// legacy monolithic estimator cost when lowering is disabled.
+fn grad_comm_ps(t: &CommTask, cluster: &Cluster, coll_algo: CollAlgo) -> Ps {
+    if coll_algo == CollAlgo::Monolithic {
+        return ns_to_ps(cost_ns(&comm_row(t, cluster)));
+    }
+    let plan = collective::lower(cluster, coll_algo, t);
+    plan.phase_costs(cluster)
+        .iter()
+        .map(|&(_, a, b)| a + b)
+        .sum()
+}
+
+/// Closed-form lower bound (ms) on the HTAE-simulated step time of a
+/// resolved strategy. Admissible for both the plain and the
+/// full-behavior simulator configuration — runtime behaviors only scale
+/// costs up. Returns 0.0 for degenerate strategies rather than erroring
+/// (a zero bound never prunes).
+pub fn htae_lower_bound_ms(
+    graph: &Graph,
+    cluster: &Cluster,
+    r: &ResolvedStrategy,
+    coll_algo: CollAlgo,
+) -> f64 {
+    let n_micro = r.stages.first().map(|s| s.schedule.n_micro_batch).unwrap_or(1);
+    let nm = n_micro as u64;
+
+    let mut comp_busy: HashMap<DeviceId, Ps> = HashMap::new();
+    let mut grad_busy: HashMap<DeviceId, Ps> = HashMap::new();
+    // Single-micro fwd+bwd cost per layer, for the critical-path DP.
+    let mut layer_ps: Vec<Ps> = vec![0; graph.layers.len()];
+
+    for layer in &graph.layers {
+        let cfg = &r.comp[layer.id];
+        let features = common::comp_features(graph, layer, cfg, n_micro);
+        let fwd = CompTask {
+            device: 0,
+            op: layer.kind,
+            flops: features.0,
+            bytes_read: features.1,
+            bytes_written: features.2,
+        };
+        // Mirror of the backward task features in the template emitter.
+        let bwd = CompTask {
+            device: 0,
+            op: layer.kind,
+            flops: layer.bwd_flops() as f64 / cfg.n_parts() as f64 / n_micro as f64,
+            bytes_read: features.1 + features.2,
+            bytes_written: features.1,
+        };
+        let per_micro = comp_ps(&fwd, cluster) + comp_ps(&bwd, cluster);
+        layer_ps[layer.id] = per_micro;
+        for &d in &cfg.devices {
+            *comp_busy.entry(d).or_default() += nm * per_micro;
+        }
+    }
+
+    // Optimizer busy time: mirror of the finalizer's per-device
+    // elementwise update task.
+    let mut local_params: HashMap<DeviceId, f64> = HashMap::new();
+    for t in &graph.tensors {
+        if t.kind != TensorKind::Param {
+            continue;
+        }
+        let layout = &r.mem[t.id];
+        let per_part = t.numel() as f64 / layout.n_parts() as f64;
+        for p in &layout.parts {
+            for d in p.device_set() {
+                *local_params.entry(d).or_default() += per_part;
+            }
+        }
+    }
+    for (&d, &elems) in &local_params {
+        let opt = CompTask {
+            device: d,
+            op: OpKind::Elementwise,
+            flops: 10.0 * elems,
+            bytes_read: 16.0 * elems,
+            bytes_written: 12.0 * elems,
+        };
+        *comp_busy.entry(d).or_default() += comp_ps(&opt, cluster);
+    }
+
+    // Gradient synchronization busy time: mirror of the finalizer's
+    // per-pattern `transform(contribution → stored)` comms, stamped once
+    // per micro-batch.
+    for layer in &graph.layers {
+        let cache = common::build_layer_cache(graph, r, n_micro, layer.id);
+        for (p, pg) in layer.params.iter().zip(&cache.param_grad) {
+            let stored = &r.mem[p.tensor];
+            let bytes = graph.tensors[p.tensor].bytes();
+            for op in transform(pg, stored, bytes) {
+                let ct = CommTask {
+                    kind: op.kind,
+                    group: op.group.clone(),
+                    bytes: op.bytes,
+                    class: CommClass::Gradient,
+                };
+                let cost = grad_comm_ps(&ct, cluster, coll_algo);
+                for &d in &op.group {
+                    *grad_busy.entry(d).or_default() += nm * cost;
+                }
+            }
+        }
+    }
+
+    // Critical path: longest single-micro fwd+bwd chain over the layer
+    // DAG (layer ids are topologically ordered by construction).
+    let mut longest: Vec<Ps> = vec![0; graph.layers.len()];
+    for layer in &graph.layers {
+        let mut best: Ps = 0;
+        for op in &layer.inputs {
+            if let Some(p) = graph.tensors[op.tensor].producer {
+                best = best.max(longest[p]);
+            }
+        }
+        longest[layer.id] = best + layer_ps[layer.id];
+    }
+
+    let b1 = comp_busy.values().copied().max().unwrap_or(0);
+    let b2 = grad_busy.values().copied().max().unwrap_or(0);
+    let b3 = longest.iter().copied().max().unwrap_or(0);
+    ps_to_ms(b1.max(b2).max(b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Preset;
+    use crate::estimator::OpEstimator;
+    use crate::executor::{calibrate, Htae, HtaeConfig};
+    use crate::graph::{DType, GraphBuilder};
+    use crate::strategy::{build_strategy, resolve, StrategySpec};
+
+    fn mlp(batch: usize) -> Graph {
+        let mut b = GraphBuilder::new("mlp", batch);
+        let x = b.input("x", &[batch, 128], DType::F32);
+        let h = b.scoped("blk0", |b| {
+            let h = b.linear("fc1", x, 128, 512);
+            b.relu("act", h)
+        });
+        let h = b.scoped("blk1", |b| b.linear("fc2", h, 512, 128));
+        let _ = b.loss("loss", h);
+        b.finish()
+    }
+
+    #[test]
+    fn bound_is_positive_and_below_simulation() {
+        let g = mlp(32);
+        let c = Cluster::preset(Preset::HC1, 1);
+        let gamma = calibrate::default_gamma(&c);
+        for spec in [
+            StrategySpec::data_parallel(4),
+            StrategySpec::data_parallel(4).with_zero(),
+            StrategySpec::hybrid(2, 1, 2, 4),
+        ] {
+            let tree = build_strategy(&g, spec).unwrap();
+            let r = resolve(&g, &tree).unwrap();
+            let bound = htae_lower_bound_ms(&g, &c, &r, CollAlgo::Auto);
+            assert!(bound > 0.0, "{}", spec.label());
+            let eg = crate::compiler::compile(&g, &tree, &c).unwrap();
+            let est = OpEstimator::analytical(&c);
+            for plain in [true, false] {
+                let mut cfg = if plain {
+                    HtaeConfig::plain()
+                } else {
+                    HtaeConfig {
+                        gamma,
+                        ..HtaeConfig::default()
+                    }
+                };
+                cfg.coll_algo = CollAlgo::Auto;
+                let rep = Htae::with_config(&c, &est, cfg).simulate(&eg).unwrap();
+                assert!(
+                    bound <= rep.step_ms + 1e-9,
+                    "{} plain={plain}: bound {bound} > sim {}",
+                    spec.label(),
+                    rep.step_ms
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bound_admissible_across_coll_algos() {
+        // Monolithic lowering must also stay admissible.
+        let g = mlp(32);
+        let c = Cluster::preset(Preset::HC1, 1);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(4)).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        let eg = crate::compiler::compile(&g, &tree, &c).unwrap();
+        let est = OpEstimator::analytical(&c);
+        for algo in [CollAlgo::Monolithic, CollAlgo::Ring, CollAlgo::Tree] {
+            let bound = htae_lower_bound_ms(&g, &c, &r, algo);
+            let mut cfg = HtaeConfig::plain();
+            cfg.coll_algo = algo;
+            let rep = Htae::with_config(&c, &est, cfg).simulate(&eg).unwrap();
+            assert!(
+                bound <= rep.step_ms + 1e-9,
+                "{:?}: bound {bound} > sim {}",
+                algo,
+                rep.step_ms
+            );
+        }
+    }
+}

@@ -29,6 +29,7 @@
 //! suite).
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 use crate::cluster::{Cluster, DeviceId};
 use crate::graph::{Graph, LayerId, TensorId, TensorKind};
@@ -169,6 +170,53 @@ pub struct ExecTemplate {
     pub(super) transforms: usize,
 }
 
+/// Snapshot of the emitter's complete owned state right after the
+/// forward emission of a stage **prefix** — the resume point of the
+/// delta-compile path.
+///
+/// A checkpoint with `stage = k` captures the emitter after the forward
+/// slots of every segment in stages `0..k` were emitted (backward
+/// emission has not started: gradient state is still empty). Resuming
+/// re-emits the forward of stages `≥ k` and **all** backward slots —
+/// backward templates cross-contaminate across stage boundaries
+/// (gradient transforms in stage `s`'s backward slot depend on stage
+/// `s + 1`'s configs), so only forward prefixes are reusable.
+///
+/// Validity contract: the resuming strategy must agree with the
+/// captured one on every stage `< k` — same layers, same configs, same
+/// operand layouts, same micro count (the per-stage hash vector,
+/// [`crate::strategy::ResolvedStrategy::stage_hashes`], is the caller's
+/// witness). Structural mismatches are additionally guarded here
+/// (prefix layer lists, segment partition, micro count) and fall back
+/// to full emission rather than erroring.
+pub struct EmitCheckpoint {
+    /// Leading pipeline stages whose forward emission is captured.
+    pub(super) stage: usize,
+    /// Micro-batch count at capture time (resume requires equality).
+    n_micro: usize,
+    /// Segments covered by the prefix.
+    n_prefix_segs: usize,
+    /// Layer lists of the prefix segments (resume-time guard).
+    prefix_layers: Vec<Vec<LayerId>>,
+    /// The first `2 × n_prefix_segs` slot templates (odd backward
+    /// entries still empty).
+    slots: Vec<Vec<TTask>>,
+    preamble: Vec<PreTask>,
+    once_bufs: Vec<OnceBuf>,
+    bufs: Vec<TBuf>,
+    avail: HashMap<TensorId, Vec<TInstance>>,
+    param_ready: HashMap<(TensorId, LayerId), TInstance>,
+    layer_emissions: usize,
+    transforms: usize,
+}
+
+impl EmitCheckpoint {
+    /// Number of leading pipeline stages this checkpoint covers.
+    pub fn stage(&self) -> usize {
+        self.stage
+    }
+}
+
 /// Slot id of a segment's forward template.
 pub(super) fn fwd_slot(seg: usize) -> usize {
     2 * seg
@@ -185,6 +233,25 @@ pub(super) fn emit_template(
     r: &ResolvedStrategy,
     cluster: &Cluster,
 ) -> Result<ExecTemplate> {
+    emit_template_ex(graph, r, cluster, false, None).map(|(t, _, _)| t)
+}
+
+/// [`emit_template`] with delta-compile hooks: when `capture` is set,
+/// snapshot an [`EmitCheckpoint`] after each completed stage's forward
+/// emission (except the last — nothing can resume past it); when
+/// `resume` holds a checkpoint whose prefix matches this strategy,
+/// restore it and emit only the remaining forward segments plus all
+/// backward slots. A non-matching checkpoint silently falls back to
+/// full emission — the output is bit-identical either way, only the
+/// work differs. The third return value is the stage emission actually
+/// resumed from (`None` on full emission).
+pub(super) fn emit_template_ex(
+    graph: &Graph,
+    r: &ResolvedStrategy,
+    cluster: &Cluster,
+    capture: bool,
+    resume: Option<&EmitCheckpoint>,
+) -> Result<(ExecTemplate, Vec<Arc<EmitCheckpoint>>, Option<usize>)> {
     // All stages must agree on micro-batch count (the root schedule
     // propagates; differing counts are not supported).
     let n_micro = r.stages[0].schedule.n_micro_batch;
@@ -233,30 +300,65 @@ pub(super) fn emit_template(
         })
         .collect();
     let n_segs = segments.len();
+    // A resume checkpoint applies only when its captured prefix is
+    // structurally identical here: same micro count, same leading
+    // segment partition, same per-segment layer lists, and no segment
+    // of a later stage interleaved into the prefix.
+    let restore = resume.filter(|cp| {
+        cp.n_micro == n_micro
+            && cp.n_prefix_segs <= n_segs
+            && cp.prefix_layers.len() == cp.n_prefix_segs
+            && segments[..cp.n_prefix_segs]
+                .iter()
+                .zip(&cp.prefix_layers)
+                .all(|(s, l)| s.stage < cp.stage && &s.layers == l)
+            && segments[cp.n_prefix_segs..]
+                .iter()
+                .all(|s| s.stage >= cp.stage)
+    });
+    let start_seg = restore.map(|cp| cp.n_prefix_segs).unwrap_or(0);
     let mut e = TemplateEmitter {
         graph,
         r,
         n_micro,
-        slots: (0..2 * n_segs).map(|_| Vec::new()).collect(),
+        slots: match restore {
+            Some(cp) => {
+                let mut slots = cp.slots.clone();
+                slots.resize(2 * n_segs, Vec::new());
+                slots
+            }
+            None => (0..2 * n_segs).map(|_| Vec::new()).collect(),
+        },
         cur: 0,
-        preamble: Vec::new(),
-        once_bufs: Vec::new(),
-        bufs: Vec::new(),
-        avail: HashMap::new(),
+        preamble: restore.map(|cp| cp.preamble.clone()).unwrap_or_default(),
+        once_bufs: restore.map(|cp| cp.once_bufs.clone()).unwrap_or_default(),
+        bufs: restore.map(|cp| cp.bufs.clone()).unwrap_or_default(),
+        avail: restore.map(|cp| cp.avail.clone()).unwrap_or_default(),
         grads: HashMap::new(),
         param_grads: BTreeMap::new(),
-        param_ready: HashMap::new(),
+        param_ready: restore.map(|cp| cp.param_ready.clone()).unwrap_or_default(),
         segments,
         layer_cache: (0..graph.layers.len()).map(|_| None).collect(),
-        layer_emissions: 0,
-        transforms: 0,
+        layer_emissions: restore.map(|cp| cp.layer_emissions).unwrap_or(0),
+        transforms: restore.map(|cp| cp.transforms).unwrap_or(0),
     };
-    // Forward: segments in model order.
-    for si in 0..n_segs {
+    let n_stages = r.stages.len();
+    let mut checkpoints: Vec<Arc<EmitCheckpoint>> = Vec::new();
+    // Forward: segments in model order (resume skips the restored
+    // prefix — its forward slots and emitter state are already here).
+    for si in start_seg..n_segs {
         e.cur = fwd_slot(si);
         let layers = e.segments[si].layers.clone();
         for l in layers {
             e.capture_layer_fwd(l, Phase::Fwd)?;
+        }
+        // Stage boundary: the forward of stage `seg.stage` is complete.
+        let boundary = si + 1 == n_segs || e.segments[si + 1].stage != e.segments[si].stage;
+        if capture && boundary {
+            let stage = e.segments[si].stage + 1;
+            if stage < n_stages && e.prefix_is_clean(stage, si + 1) {
+                checkpoints.push(Arc::new(e.checkpoint(stage, si + 1)));
+            }
         }
     }
     // Backward: segments in reverse, recompute before each segment's
@@ -271,19 +373,88 @@ pub(super) fn emit_template(
             e.capture_layer_bwd(lid)?;
         }
     }
-    Ok(ExecTemplate {
-        n_micro,
-        n_devices,
-        preamble: e.preamble,
-        once_bufs: e.once_bufs,
-        slots: e.slots,
-        seg_stage,
-        seg_weight,
-        bufs: e.bufs,
-        param_grads: e.param_grads,
-        layer_emissions: e.layer_emissions,
-        transforms: e.transforms,
-    })
+    Ok((
+        ExecTemplate {
+            n_micro,
+            n_devices,
+            preamble: e.preamble,
+            once_bufs: e.once_bufs,
+            slots: e.slots,
+            seg_stage,
+            seg_weight,
+            bufs: e.bufs,
+            param_grads: e.param_grads,
+            layer_emissions: e.layer_emissions,
+            transforms: e.transforms,
+        },
+        checkpoints,
+        restore.map(|cp| cp.stage),
+    ))
+}
+
+/// Per-stage fingerprint of a template's **forward** slot contents: one
+/// hash per pipeline stage over the exact task payloads, symbolic
+/// dependencies, and replay flags of that stage's forward segments.
+/// Stages absent from the template hash to the seed alone.
+///
+/// This is the bit-identity witness the delta-compile property test
+/// compares: per-stage-hash-equal strategies must produce equal forward
+/// fingerprints over the agreeing prefix.
+pub(super) fn stage_fwd_fingerprints(t: &ExecTemplate, n_stages: usize) -> Vec<u64> {
+    use std::hash::{Hash, Hasher};
+    let mut hashers: Vec<std::collections::hash_map::DefaultHasher> = (0..n_stages)
+        .map(|_| {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            0x51A6_E5u64.hash(&mut h);
+            h
+        })
+        .collect();
+    for (si, &stage) in t.seg_stage.iter().enumerate() {
+        let Some(h) = hashers.get_mut(stage) else {
+            continue;
+        };
+        for tt in &t.slots[fwd_slot(si)] {
+            hash_ttask(tt, h);
+        }
+    }
+    hashers.into_iter().map(|h| h.finish()).collect()
+}
+
+/// Hash one template task field-by-field (f64 payloads via `to_bits` so
+/// the fingerprint is exact, not approximate).
+fn hash_ttask<H: std::hash::Hasher>(tt: &TTask, h: &mut H) {
+    use std::hash::Hash;
+    match &tt.task.kind {
+        TaskKind::Comp(c) => {
+            0u8.hash(h);
+            c.device.hash(h);
+            c.op.hash(h);
+            c.flops.to_bits().hash(h);
+            c.bytes_read.to_bits().hash(h);
+            c.bytes_written.to_bits().hash(h);
+        }
+        TaskKind::Comm(c) => {
+            1u8.hash(h);
+            c.kind.hash(h);
+            c.group.hash(h);
+            c.bytes.hash(h);
+            c.class.hash(h);
+        }
+    }
+    tt.task.layer.hash(h);
+    tt.task.stage.hash(h);
+    tt.task.phase.hash(h);
+    for d in &tt.deps {
+        match *d {
+            TRef::Once(i) => (0u8, i, 0u32).hash(h),
+            TRef::Slot { slot, idx } => (1u8, slot, idx).hash(h),
+        }
+    }
+    tt.chain_key.hash(h);
+    tt.own_fwd.hash(h);
+    tt.stage_first_fwd.hash(h);
+    tt.stage_first_bwd.hash(h);
+    tt.touch_once.hash(h);
 }
 
 struct TemplateEmitter<'a> {
@@ -311,6 +482,39 @@ struct TemplateEmitter<'a> {
 }
 
 impl<'a> TemplateEmitter<'a> {
+    /// True when segments `0..n_prefix_segs` are exactly the segments of
+    /// stages `< stage` (no interleaving) — the precondition for a
+    /// checkpoint at this boundary to be resumable.
+    fn prefix_is_clean(&self, stage: usize, n_prefix_segs: usize) -> bool {
+        self.segments[..n_prefix_segs].iter().all(|s| s.stage < stage)
+            && self.segments[n_prefix_segs..].iter().all(|s| s.stage >= stage)
+    }
+
+    /// Snapshot the emitter's owned state after the forward emission of
+    /// the first `n_prefix_segs` segments (= stages `< stage`). Gradient
+    /// state is empty at this point by construction (backward has not
+    /// started), so it is not captured.
+    fn checkpoint(&self, stage: usize, n_prefix_segs: usize) -> EmitCheckpoint {
+        debug_assert!(self.grads.is_empty() && self.param_grads.is_empty());
+        EmitCheckpoint {
+            stage,
+            n_micro: self.n_micro,
+            n_prefix_segs,
+            prefix_layers: self.segments[..n_prefix_segs]
+                .iter()
+                .map(|s| s.layers.clone())
+                .collect(),
+            slots: self.slots[..2 * n_prefix_segs].to_vec(),
+            preamble: self.preamble.clone(),
+            once_bufs: self.once_bufs.clone(),
+            bufs: self.bufs.clone(),
+            avail: self.avail.clone(),
+            param_ready: self.param_ready.clone(),
+            layer_emissions: self.layer_emissions,
+            transforms: self.transforms,
+        }
+    }
+
     fn cache_for(&mut self, lid: LayerId) -> &common::LayerCache {
         if self.layer_cache[lid].is_none() {
             self.layer_cache[lid] =

@@ -37,6 +37,7 @@
 //! [`TemplateCache`] keyed by the resolved strategy's structural hash
 //! (see [`crate::strategy::ResolvedStrategy::structural_hash`]).
 
+pub mod bound;
 mod common;
 mod emit;
 mod instantiate;
@@ -44,6 +45,7 @@ mod legacy;
 pub mod schedule;
 pub mod transform;
 
+pub use bound::htae_lower_bound_ms;
 pub use schedule::{SchedulePlan, Slot, SlotPhase, Step};
 pub use transform::{transform, CollectiveKind, CommOp};
 
@@ -566,6 +568,11 @@ pub struct CompileStats {
     pub n_deps: usize,
     /// One span per stamped slot instance.
     pub instance_spans: Vec<InstanceSpan>,
+    /// For [`compile_delta`]: the pipeline stage emission actually
+    /// resumed from (all stages below it were spliced from the parent's
+    /// checkpoint). `None` when the template was emitted from scratch or
+    /// served whole from the cache.
+    pub delta_resume: Option<usize>,
 }
 
 /// Cross-candidate cache of pass-1 outputs, keyed by `(caller-supplied
@@ -651,44 +658,130 @@ pub fn compile_with(
     cluster: &Cluster,
     cache: Option<(&TemplateCache, u64)>,
 ) -> Result<(ExecGraph, CompileStats)> {
+    compile_delta(graph, tree, cluster, cache, None, false).map(|(eg, stats, _)| (eg, stats))
+}
+
+/// Seed for the per-stage strategy hashes [`compile_delta`] diffs a
+/// neighbor against its parent with (distinct from the template-cache
+/// seeds so the hash streams are independent).
+const STAGE_HASH_SEED: u64 = 0x00DE_17A5;
+
+/// Delta-compile provenance of one candidate: the per-stage hash vector
+/// of its resolved strategy plus the forward stage-prefix checkpoints
+/// captured during template emission. The search keeps one per chain
+/// position and threads it into the next neighbor's [`compile_delta`]
+/// call, which diffs the hash vectors stage-by-stage and resumes
+/// emission from the deepest checkpoint inside the agreeing prefix.
+///
+/// Checkpoints are **chain-local** — they live in the record, not in the
+/// shared [`TemplateCache`] — so concurrent chains never contend on
+/// them.
+#[derive(Clone)]
+pub struct EmitRecord {
+    stage_hashes: Vec<u64>,
+    checkpoints: Vec<Arc<emit::EmitCheckpoint>>,
+}
+
+impl EmitRecord {
+    /// Per-stage hash vector of this record's resolved strategy (see
+    /// [`crate::strategy::ResolvedStrategy::stage_hashes`]).
+    pub fn stage_hashes(&self) -> &[u64] {
+        &self.stage_hashes
+    }
+
+    /// Number of forward-prefix checkpoints available for delta resume.
+    pub fn n_checkpoints(&self) -> usize {
+        self.checkpoints.len()
+    }
+}
+
+/// [`compile_with`] extended with **delta re-compilation** against a
+/// parent candidate. When `parent` is given and the resolved strategy
+/// agrees with the parent's on a leading prefix of pipeline stages
+/// (per-stage hash equality), template emission resumes from the
+/// deepest parent checkpoint inside that prefix instead of starting
+/// from scratch; the resumed stage is reported in
+/// [`CompileStats::delta_resume`]. When `want_record` is set, the
+/// returned [`EmitRecord`] carries this candidate's own hashes and
+/// checkpoints for the next hop of the chain.
+///
+/// The output is **bit-identical** to a from-scratch [`compile_with`]
+/// in all cases — a checkpoint that turns out not to apply is silently
+/// ignored (pinned by the differential search harness and the delta
+/// equality tests).
+pub fn compile_delta(
+    graph: &Graph,
+    tree: &StrategyTree,
+    cluster: &Cluster,
+    cache: Option<(&TemplateCache, u64)>,
+    parent: Option<&EmitRecord>,
+    want_record: bool,
+) -> Result<(ExecGraph, CompileStats, Option<EmitRecord>)> {
     let resolved = crate::strategy::resolve(graph, tree)?;
     let mut stats = CompileStats::default();
-    let template: Arc<emit::ExecTemplate> = match cache {
-        Some((c, graph_key)) => {
-            let key = (
-                graph_key,
-                resolved.structural_hash(0x5EED_CAFE),
-                resolved.structural_hash(0x0DDB_A11),
-            );
-            match c.get(key) {
-                Some(t) => {
-                    stats.cache_hit = true;
-                    // Pass-1 validation that depends on the cluster (not
-                    // part of the cache key) must be re-checked.
-                    if t.n_devices > cluster.num_devices() {
-                        return Err(Error::compile(format!(
-                            "strategy uses device {} but cluster has {}",
-                            t.n_devices - 1,
-                            cluster.num_devices()
-                        )));
+    let stage_hashes = if want_record || parent.is_some() {
+        resolved.stage_hashes(graph, STAGE_HASH_SEED)
+    } else {
+        Vec::new()
+    };
+    let (template, checkpoints): (Arc<emit::ExecTemplate>, Vec<Arc<emit::EmitCheckpoint>>) =
+        match cache {
+            Some((c, graph_key)) => {
+                let key = (
+                    graph_key,
+                    resolved.structural_hash(0x5EED_CAFE),
+                    resolved.structural_hash(0x0DDB_A11),
+                );
+                match c.get(key) {
+                    Some(t) => {
+                        stats.cache_hit = true;
+                        // Pass-1 validation that depends on the cluster (not
+                        // part of the cache key) must be re-checked.
+                        if t.n_devices > cluster.num_devices() {
+                            return Err(Error::compile(format!(
+                                "strategy uses device {} but cluster has {}",
+                                t.n_devices - 1,
+                                cluster.num_devices()
+                            )));
+                        }
+                        // A whole-template hit carries no fresh checkpoints;
+                        // inherit the parent's when it is the very same
+                        // structure so the chain keeps its resume points.
+                        let cps = match parent {
+                            Some(p) if want_record && p.stage_hashes == stage_hashes => {
+                                p.checkpoints.clone()
+                            }
+                            _ => Vec::new(),
+                        };
+                        (t, cps)
                     }
-                    t
-                }
-                None => {
-                    let t0 = Instant::now();
-                    let t = Arc::new(emit::emit_template(graph, &resolved, cluster)?);
-                    stats.template_s = t0.elapsed().as_secs_f64();
-                    c.insert(key, t)
+                    None => {
+                        let (t, cps) = emit_delta(
+                            graph,
+                            &resolved,
+                            cluster,
+                            parent,
+                            &stage_hashes,
+                            want_record,
+                            &mut stats,
+                        )?;
+                        (c.insert(key, Arc::new(t)), cps)
+                    }
                 }
             }
-        }
-        None => {
-            let t0 = Instant::now();
-            let t = Arc::new(emit::emit_template(graph, &resolved, cluster)?);
-            stats.template_s = t0.elapsed().as_secs_f64();
-            t
-        }
-    };
+            None => {
+                let (t, cps) = emit_delta(
+                    graph,
+                    &resolved,
+                    cluster,
+                    parent,
+                    &stage_hashes,
+                    want_record,
+                    &mut stats,
+                )?;
+                (Arc::new(t), cps)
+            }
+        };
     stats.template_slots = template.slots.len();
     stats.template_tasks = template.slots.iter().map(|s| s.len()).sum();
     stats.template_layer_emissions = template.layer_emissions;
@@ -697,7 +790,61 @@ pub fn compile_with(
     stats.n_segments = template.seg_stage.len();
     stats.n_micro = template.n_micro;
     let eg = instantiate::instantiate(graph, &resolved, template.as_ref(), &mut stats)?;
-    Ok((eg, stats))
+    let record = want_record.then(|| EmitRecord {
+        stage_hashes,
+        checkpoints,
+    });
+    Ok((eg, stats, record))
+}
+
+/// Emit a template, resuming from the deepest parent checkpoint whose
+/// stage lies within the agreeing per-stage-hash prefix. Returns the
+/// template plus the checkpoint set for this candidate's own record:
+/// the parent's checkpoints at or below the resume stage (their state is
+/// shared, `Arc`-cheap) spliced with the ones captured during the
+/// resumed emission.
+fn emit_delta(
+    graph: &Graph,
+    resolved: &crate::strategy::ResolvedStrategy,
+    cluster: &Cluster,
+    parent: Option<&EmitRecord>,
+    stage_hashes: &[u64],
+    capture: bool,
+    stats: &mut CompileStats,
+) -> Result<(emit::ExecTemplate, Vec<Arc<emit::EmitCheckpoint>>)> {
+    let resume = parent.and_then(|p| {
+        let prefix = p
+            .stage_hashes
+            .iter()
+            .zip(stage_hashes)
+            .take_while(|(a, b)| a == b)
+            .count();
+        p.checkpoints
+            .iter()
+            .filter(|cp| cp.stage() <= prefix)
+            .max_by_key(|cp| cp.stage())
+    });
+    let t0 = Instant::now();
+    let (t, fresh, resumed) =
+        emit::emit_template_ex(graph, resolved, cluster, capture, resume.map(Arc::as_ref))?;
+    stats.template_s = t0.elapsed().as_secs_f64();
+    stats.delta_resume = resumed;
+    let mut cps = Vec::new();
+    if capture {
+        if let (Some(p), Some(stage)) = (parent, resumed) {
+            // Prefix checkpoints below the resume stage stay valid for
+            // this candidate; fresh ones cover the re-emitted suffix
+            // (strictly deeper stages — no duplicates by construction).
+            cps.extend(
+                p.checkpoints
+                    .iter()
+                    .filter(|cp| cp.stage() <= stage)
+                    .cloned(),
+            );
+        }
+        cps.extend(fresh);
+    }
+    Ok((t, cps))
 }
 
 /// Compile with the retained **pre-refactor monolithic emitter** — the
@@ -708,6 +855,22 @@ pub fn compile_with(
 pub fn compile_legacy(graph: &Graph, tree: &StrategyTree, cluster: &Cluster) -> Result<ExecGraph> {
     let resolved = crate::strategy::resolve(graph, tree)?;
     legacy::Emitter::new(graph, &resolved, cluster)?.emit()
+}
+
+/// Emit the pass-1 template of `(graph, tree)` and fingerprint each
+/// pipeline stage's **forward** slot contents (task payloads, symbolic
+/// dependencies, replay flags). Test support for the delta-compile
+/// contract: strategies whose per-stage hashes agree on a leading
+/// prefix must produce bit-identical forward fingerprints over that
+/// prefix — the property suite compares exactly this.
+pub fn template_stage_fingerprints(
+    graph: &Graph,
+    tree: &StrategyTree,
+    cluster: &Cluster,
+) -> Result<Vec<u64>> {
+    let resolved = crate::strategy::resolve(graph, tree)?;
+    let t = emit::emit_template(graph, &resolved, cluster)?;
+    Ok(emit::stage_fwd_fingerprints(&t, resolved.stages.len()))
 }
 
 #[cfg(test)]
@@ -995,5 +1158,102 @@ mod tests {
         }
         assert_eq!(cache.misses(), 5);
         assert_eq!(cache.hits(), 0);
+    }
+
+    fn assert_graphs_equal(a: &ExecGraph, b: &ExecGraph) {
+        assert_eq!(a.n_tasks(), b.n_tasks());
+        for i in 0..a.n_tasks() {
+            assert_eq!(a.succs(i), b.succs(i), "task {i}");
+            assert_eq!(a.allocs(i), b.allocs(i), "task {i}");
+            assert_eq!(a.frees(i), b.frees(i), "task {i}");
+        }
+        assert_eq!(a.total_comm_bytes(), b.total_comm_bytes());
+        assert!((a.total_flops() - b.total_flops()).abs() < 1e-6);
+    }
+
+    /// Delta re-compilation against a parent record is bit-identical to
+    /// a from-scratch compile — and actually resumes (rather than
+    /// silently recompiling) exactly when the mutation leaves a leading
+    /// stage prefix untouched.
+    #[test]
+    fn delta_compile_is_bit_identical_to_full() {
+        use crate::strategy::{Mutation, NonUniformSpec};
+        let g = mlp(16);
+        let c = Cluster::preset(Preset::HC1, 1);
+        let parent_spec =
+            NonUniformSpec::from_uniform(&g, StrategySpec::hybrid(2, 1, 2, 4)).unwrap();
+        let t_parent = parent_spec.build(&g).unwrap();
+        let (peg, _, rec) = compile_delta(&g, &t_parent, &c, None, None, true).unwrap();
+        let rec = rec.unwrap();
+        assert!(rec.n_checkpoints() >= 1, "pipelined parent must checkpoint");
+        assert_eq!(rec.stage_hashes().len(), 2);
+        assert_graphs_equal(&peg, &compile(&g, &t_parent, &c).unwrap());
+        for (m, expect_resume) in [
+            // Stage-1-only change: stage 0 splices from the checkpoint.
+            (Mutation::ToggleZero { stage: 1 }, true),
+            // Stage-0 change: no usable prefix.
+            (Mutation::ToggleZero { stage: 0 }, false),
+            // Micro count enters every stage hash: full re-emission.
+            (Mutation::SetMicro { n_micro: 2 }, false),
+        ] {
+            let child_spec = m.apply(&g, &parent_spec);
+            assert_ne!(child_spec, parent_spec, "{} must be a move", m.name());
+            let t_child = child_spec.build(&g).unwrap();
+            let (deg, stats, crec) =
+                compile_delta(&g, &t_child, &c, None, Some(&rec), true).unwrap();
+            assert_eq!(
+                stats.delta_resume.is_some(),
+                expect_resume,
+                "{}: resume = {:?}",
+                m.name(),
+                stats.delta_resume
+            );
+            assert_graphs_equal(&deg, &compile(&g, &t_child, &c).unwrap());
+            // The child's record is usable for the next hop.
+            assert!(crec.unwrap().n_checkpoints() >= 1);
+        }
+    }
+
+    /// Delta compilation composes with the template cache: a revisited
+    /// strategy is a whole-template hit (no emission, `delta_resume`
+    /// empty) and still instantiates to the exact same graph.
+    #[test]
+    fn delta_compile_with_cache_round_trip() {
+        use crate::strategy::{Mutation, NonUniformSpec};
+        let g = mlp(16);
+        let c = Cluster::preset(Preset::HC1, 1);
+        let cache = TemplateCache::new();
+        let a = NonUniformSpec::from_uniform(&g, StrategySpec::hybrid(2, 1, 2, 4)).unwrap();
+        let b = Mutation::ToggleZero { stage: 1 }.apply(&g, &a);
+        let ta = a.build(&g).unwrap();
+        let tb = b.build(&g).unwrap();
+        let (_, s1, ra) = compile_delta(&g, &ta, &c, Some((&cache, 7)), None, true).unwrap();
+        assert!(!s1.cache_hit);
+        let (_, s2, rb) =
+            compile_delta(&g, &tb, &c, Some((&cache, 7)), ra.as_ref(), true).unwrap();
+        assert!(!s2.cache_hit);
+        assert_eq!(s2.delta_resume, Some(1), "stage-1 mutation resumes at 1");
+        let (eg, s3, _) =
+            compile_delta(&g, &ta, &c, Some((&cache, 7)), rb.as_ref(), true).unwrap();
+        assert!(s3.cache_hit);
+        assert_eq!(s3.delta_resume, None);
+        assert_graphs_equal(&eg, &compile(&g, &ta, &c).unwrap());
+    }
+
+    /// The forward stage fingerprints agree on the untouched prefix and
+    /// differ at the mutated stage (the witness `tests/properties.rs`
+    /// checks over random walks).
+    #[test]
+    fn stage_fingerprints_split_at_touched_stage() {
+        use crate::strategy::{Mutation, NonUniformSpec};
+        let g = mlp(16);
+        let c = Cluster::preset(Preset::HC1, 1);
+        let a = NonUniformSpec::from_uniform(&g, StrategySpec::hybrid(2, 1, 2, 4)).unwrap();
+        let b = Mutation::ToggleZero { stage: 1 }.apply(&g, &a);
+        let fa = template_stage_fingerprints(&g, &a.build(&g).unwrap(), &c).unwrap();
+        let fb = template_stage_fingerprints(&g, &b.build(&g).unwrap(), &c).unwrap();
+        assert_eq!(fa.len(), 2);
+        assert_eq!(fa[0], fb[0], "untouched stage 0 must fingerprint equal");
+        assert_ne!(fa[1], fb[1], "ZeRO toggle must change stage 1's forward");
     }
 }

@@ -43,8 +43,8 @@ pub use search::{
     default_inits, ChainReport, Evaluation, SearchConfig, SearchPoint, SearchResult, Searcher,
 };
 pub use sweep::{
-    candidate_grid, candidate_grid_with_schedules, dedupe_specs, score_tree, Scenario,
-    SweepOutcome, SweepRunner, TreeScore,
+    candidate_grid, candidate_grid_with_schedules, dedupe_specs, score_tree, score_tree_delta,
+    Scenario, SweepOutcome, SweepRunner, TreeScore,
 };
 
 #[cfg(not(feature = "pjrt"))]

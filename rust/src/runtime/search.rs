@@ -24,7 +24,22 @@
 //!   chains, which makes a seeded search bit-reproducible regardless of
 //!   thread scheduling (each chain's walk depends only on its own seed;
 //!   an optional wall-clock limit exists for interactive use and is the
-//!   one knob that trades reproducibility for latency).
+//!   one knob that trades reproducibility for latency);
+//! - **delta re-simulation** ([`SearchConfig::delta`]): each chain
+//!   threads the current point's [`EmitRecord`] into the neighbor's
+//!   compile ([`crate::compiler::compile_delta`]), so a mutation that
+//!   leaves a leading stage prefix untouched re-emits only the touched
+//!   suffix and splices the rest from the parent's checkpoints. This is
+//!   a pure acceleration: accepted moves, chain energies, counters, and
+//!   `--json` output are **bit-identical** with it on or off (pinned by
+//!   `tests/differential_search.rs`);
+//! - **bound-based pruning** ([`SearchConfig::prune`]): neighbors whose
+//!   closed-form admissible lower bound
+//!   ([`crate::compiler::htae_lower_bound_ms`]) already exceeds the
+//!   chain's best feasible step time are rejected without simulating.
+//!   Unlike delta, pruning *does* redirect the walk (pruned neighbors
+//!   are never Metropolis-accepted), so it is a separate knob — the
+//!   differential harness compares delta on/off at fixed prune state.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -32,14 +47,21 @@ use std::time::Instant;
 
 use crate::cluster::Cluster;
 use crate::collective::CollAlgo;
-use crate::compiler::TemplateCache;
+use crate::compiler::{htae_lower_bound_ms, EmitRecord, TemplateCache};
 use crate::executor::calibrate;
 use crate::graph::Graph;
-use crate::runtime::sweep::score_tree;
+use crate::runtime::sweep::score_tree_delta;
 use crate::strategy::nonuniform::{propose, NonUniformSpec};
-use crate::strategy::StrategySpec;
+use crate::strategy::{resolve, StrategySpec, StrategyTree};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
+
+/// Seed for the per-stage hash vectors the chains classify proposals
+/// with (delta-hit vs full-compile). The classification runs on **every**
+/// proposal regardless of [`SearchConfig::delta`], so the reported
+/// counters — and the `--json` document — are identical between delta
+/// and no-delta runs.
+const CLASSIFY_SEED: u64 = 0x00DE_17A5;
 
 /// One point of the search space: a non-uniform strategy spec plus the
 /// collective-algorithm knob (which the paper's simulator exposes and a
@@ -119,6 +141,17 @@ pub struct ChainReport {
     pub accepted: usize,
     /// Candidates rejected for infeasibility (OOM or error).
     pub infeasible: usize,
+    /// Evaluated proposals whose per-stage hashes agreed with the
+    /// current point on ≥ 1 leading stage (the delta path re-emits at
+    /// most a suffix for these). Counted by classification, so the
+    /// value is identical whether or not delta is enabled.
+    pub delta_hits: usize,
+    /// Evaluated proposals with no reusable stage prefix (full template
+    /// emission), including the chain's initial evaluation.
+    pub full_compiles: usize,
+    /// Proposals rejected by the admissible lower bound without
+    /// spending a simulation.
+    pub bound_prunes: usize,
     /// Best feasible evaluation the chain found.
     pub best: Option<Evaluation>,
 }
@@ -133,6 +166,14 @@ pub struct SearchResult {
     pub chains: Vec<ChainReport>,
     /// Total simulations spent.
     pub evals: usize,
+    /// Total delta-classified evaluations (see
+    /// [`ChainReport::delta_hits`]).
+    pub delta_hits: usize,
+    /// Total full-template evaluations (see
+    /// [`ChainReport::full_compiles`]).
+    pub full_compiles: usize,
+    /// Total bound-pruned proposals (see [`ChainReport::bound_prunes`]).
+    pub bound_prunes: usize,
     /// Wall-clock seconds (informational; deliberately **not** part of
     /// the `--json` schema so seeded runs diff byte-identical).
     pub wall_s: f64,
@@ -169,6 +210,16 @@ pub struct SearchConfig {
     /// Share one [`TemplateCache`] across chains (bit-identical results
     /// either way; off only for A/B benchmarking).
     pub compile_cache: bool,
+    /// Delta re-simulation: resume template emission from the current
+    /// point's stage checkpoints. Bit-identical results either way —
+    /// only compile work differs (`--no-delta` for A/B runs).
+    pub delta: bool,
+    /// Branch-and-bound pruning: reject neighbors whose admissible
+    /// lower bound exceeds the chain's best feasible step time without
+    /// simulating them. Redirects the walk (a pruned neighbor cannot be
+    /// Metropolis-accepted), so seeded results are comparable only at
+    /// fixed prune state.
+    pub prune: bool,
     /// Optional wall-clock budget in seconds: chains stop proposing
     /// once it is exhausted. **Nondeterministic** — leave `None` for
     /// reproducible runs.
@@ -187,6 +238,8 @@ impl Default for SearchConfig {
             plain: false,
             mutate_coll: true,
             compile_cache: true,
+            delta: true,
+            prune: true,
             wall_s: None,
         }
     }
@@ -297,6 +350,9 @@ impl Searcher {
         Ok(SearchResult {
             best,
             evals: chains.iter().map(|c| c.evals).sum(),
+            delta_hits: chains.iter().map(|c| c.delta_hits).sum(),
+            full_compiles: chains.iter().map(|c| c.full_compiles).sum(),
+            bound_prunes: chains.iter().map(|c| c.bound_prunes).sum(),
             chains,
             wall_s: t0.elapsed().as_secs_f64(),
             cache_hits: cache.as_ref().map(|c| c.hits()).unwrap_or(0),
@@ -314,6 +370,26 @@ fn evaluate(
     cache: Option<&TemplateCache>,
     point: &SearchPoint,
 ) -> Evaluation {
+    let tree = point.spec.build(graph);
+    evaluate_built(graph, cluster, gamma, plain, cache, point, &tree, None, false).0
+}
+
+/// [`evaluate`] over a pre-built tree, with the delta-compile hooks:
+/// `parent` is the current point's emit record (delta resume source),
+/// `want_record` requests this candidate's own record for the next hop.
+/// Scoring is bit-identical regardless of those two arguments.
+#[allow(clippy::too_many_arguments)]
+fn evaluate_built(
+    graph: &Graph,
+    cluster: &Cluster,
+    gamma: f64,
+    plain: bool,
+    cache: Option<&TemplateCache>,
+    point: &SearchPoint,
+    tree: &Result<StrategyTree>,
+    parent: Option<&EmitRecord>,
+    want_record: bool,
+) -> (Evaluation, Option<EmitRecord>) {
     let label = point.label();
     fn fail(point: &SearchPoint, label: &str, e: String) -> Evaluation {
         Evaluation {
@@ -326,20 +402,22 @@ fn evaluate(
             error: Some(e),
         }
     }
-    let tree = match point.spec.build(graph) {
+    let tree = match tree {
         Ok(t) => t,
-        Err(e) => return fail(point, &label, e.to_string()),
+        Err(e) => return (fail(point, &label, e.to_string()), None),
     };
-    let s = score_tree(
+    let (s, record) = score_tree_delta(
         graph,
         cluster,
         gamma,
-        &tree,
+        tree,
         plain,
         point.coll_algo,
         cache.map(|c| (c, 0)),
+        parent,
+        want_record,
     );
-    match s.report {
+    let eval = match s.report {
         Ok(r) => Evaluation {
             point: point.clone(),
             label,
@@ -350,7 +428,8 @@ fn evaluate(
             error: None,
         },
         Err(e) => fail(point, &label, e),
-    }
+    };
+    (eval, record)
 }
 
 /// Draw a neighbor of `point`: usually a tree mutation, occasionally
@@ -403,20 +482,41 @@ fn run_chain(
         evals: 0,
         accepted: 0,
         infeasible: 0,
+        delta_hits: 0,
+        full_compiles: 0,
+        bound_prunes: 0,
         best: None,
     };
     if budget == 0 {
         return report;
     }
     let mut rng = Rng::new(seed);
-    let mut cur = evaluate(graph, cluster, gamma, cfg.plain, cache, init);
+    let init_tree = init.spec.build(graph);
+    let mut cur_hashes = stage_hashes_of(graph, &init_tree);
+    let (mut cur, mut cur_rec) = evaluate_built(
+        graph,
+        cluster,
+        gamma,
+        cfg.plain,
+        cache,
+        init,
+        &init_tree,
+        None,
+        cfg.delta,
+    );
     report.evals = 1;
+    report.full_compiles = 1;
     if cur.feasible() {
         report.best = Some(cur.clone());
     } else {
         report.infeasible = 1;
     }
-    while report.evals < budget {
+    // Pruned proposals cost no simulation, so the eval budget alone
+    // cannot bound the loop — cap total proposals to keep a chain whose
+    // whole neighborhood prunes from spinning forever.
+    let max_proposals = std::cmp::max(64, budget.saturating_mul(16));
+    let mut proposals = 0usize;
+    while report.evals < budget && proposals < max_proposals {
         if let Some(d) = deadline {
             if Instant::now() >= d {
                 break;
@@ -425,7 +525,50 @@ fn run_chain(
         let Some(next) = propose_point(graph, &cur.point, &mut rng, cfg.mutate_coll) else {
             break; // neighborhood exhausted
         };
-        let cand = evaluate(graph, cluster, gamma, cfg.plain, cache, &next);
+        proposals += 1;
+        let tree = next.spec.build(graph);
+        let resolved = tree.as_ref().ok().and_then(|t| resolve(graph, t).ok());
+        // Branch-and-bound: a neighbor whose admissible lower bound
+        // already exceeds the chain's best feasible energy cannot
+        // improve it — skip the simulation (and the accept draw)
+        // entirely.
+        if cfg.prune {
+            if let (Some(r), Some(best)) = (resolved.as_ref(), report.best.as_ref()) {
+                let bound = htae_lower_bound_ms(graph, cluster, r, next.coll_algo);
+                if bound > best.step_ms {
+                    report.bound_prunes += 1;
+                    continue;
+                }
+            }
+        }
+        // Classify the proposal against the current point by per-stage
+        // hash prefix. This is deliberately independent of `cfg.delta`
+        // (and of what the compiler actually reuses), so counters and
+        // JSON output diff byte-identical between delta and no-delta
+        // runs.
+        let hashes = resolved
+            .as_ref()
+            .map(|r| r.stage_hashes(graph, CLASSIFY_SEED));
+        let prefix = match (&cur_hashes, &hashes) {
+            (Some(a), Some(b)) => a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count(),
+            _ => 0,
+        };
+        if prefix >= 1 {
+            report.delta_hits += 1;
+        } else {
+            report.full_compiles += 1;
+        }
+        let (cand, cand_rec) = evaluate_built(
+            graph,
+            cluster,
+            gamma,
+            cfg.plain,
+            cache,
+            &next,
+            &tree,
+            if cfg.delta { cur_rec.as_ref() } else { None },
+            cfg.delta,
+        );
         report.evals += 1;
         // Geometric cooling over the chain's budget.
         let progress = report.evals as f64 / budget.max(2) as f64;
@@ -447,6 +590,8 @@ fn run_chain(
             }
             if accept {
                 cur = cand;
+                cur_rec = cand_rec;
+                cur_hashes = hashes;
                 report.accepted += 1;
             }
         } else {
@@ -458,11 +603,23 @@ fn run_chain(
                 && (cur.error.is_some() || cand.peak_mem < cur.peak_mem)
             {
                 cur = cand;
+                cur_rec = cand_rec;
+                cur_hashes = hashes;
                 report.accepted += 1;
             }
         }
     }
     report
+}
+
+/// Per-stage classification hashes of a built tree (`None` when the
+/// build or resolve failed — such points classify every neighbor as a
+/// full compile).
+fn stage_hashes_of(graph: &Graph, tree: &Result<StrategyTree>) -> Option<Vec<u64>> {
+    tree.as_ref()
+        .ok()
+        .and_then(|t| resolve(graph, t).ok())
+        .map(|r| r.stage_hashes(graph, CLASSIFY_SEED))
 }
 
 /// Heuristic seed points for a search over `n_devices` GPUs at the

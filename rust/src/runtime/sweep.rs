@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use crate::cluster::{Cluster, Preset};
 use crate::collective::CollAlgo;
-use crate::compiler::TemplateCache;
+use crate::compiler::{EmitRecord, TemplateCache};
 use crate::executor::{calibrate, Htae, HtaeConfig, SimReport};
 use crate::graph::Graph;
 use crate::models::ModelKind;
@@ -340,18 +340,44 @@ pub fn score_tree(
     coll_algo: CollAlgo,
     cache: Option<(&TemplateCache, u64)>,
 ) -> TreeScore {
+    score_tree_delta(graph, cluster, gamma, tree, plain, coll_algo, cache, None, false).0
+}
+
+/// [`score_tree`] extended with the **delta re-compilation** hooks the
+/// annealing searcher threads along each chain: `parent` is the
+/// previously scored candidate's [`EmitRecord`] (template emission
+/// resumes from its deepest valid stage checkpoint), `want_record`
+/// requests a record for this candidate so the *next* neighbor can
+/// resume from it. Scoring output is bit-identical to [`score_tree`];
+/// only compile work differs.
+#[allow(clippy::too_many_arguments)]
+pub fn score_tree_delta(
+    graph: &Graph,
+    cluster: &Cluster,
+    gamma: f64,
+    tree: &StrategyTree,
+    plain: bool,
+    coll_algo: CollAlgo,
+    cache: Option<(&TemplateCache, u64)>,
+    parent: Option<&EmitRecord>,
+    want_record: bool,
+) -> (TreeScore, Option<EmitRecord>) {
     let t0 = Instant::now();
-    let eg = match crate::compiler::compile_with(graph, tree, cluster, cache) {
-        Ok((eg, _stats)) => eg,
-        Err(e) => {
-            return TreeScore {
-                report: Err(e.to_string()),
-                oom: false,
-                compile_s: t0.elapsed().as_secs_f64(),
-                sim_s: 0.0,
+    let (eg, record) =
+        match crate::compiler::compile_delta(graph, tree, cluster, cache, parent, want_record) {
+            Ok((eg, _stats, record)) => (eg, record),
+            Err(e) => {
+                return (
+                    TreeScore {
+                        report: Err(e.to_string()),
+                        oom: false,
+                        compile_s: t0.elapsed().as_secs_f64(),
+                        sim_s: 0.0,
+                    },
+                    None,
+                )
             }
-        }
-    };
+        };
     let compile_s = t0.elapsed().as_secs_f64();
     let est = crate::estimator::OpEstimator::analytical(cluster);
     let mut config = if plain {
@@ -368,12 +394,15 @@ pub fn score_tree(
         .simulate(&eg)
         .map_err(|e| e.to_string());
     let oom = report.as_ref().map(|r| r.oom).unwrap_or(false);
-    TreeScore {
-        report,
-        oom,
-        compile_s,
-        sim_s: t1.elapsed().as_secs_f64(),
-    }
+    (
+        TreeScore {
+            report,
+            oom,
+            compile_s,
+            sim_s: t1.elapsed().as_secs_f64(),
+        },
+        record,
+    )
 }
 
 #[allow(clippy::too_many_arguments)]

@@ -442,6 +442,31 @@ impl Mutation {
         }
     }
 
+    /// The first pipeline stage this mutation can touch, or `None` when
+    /// it changes nothing template emission depends on (pure
+    /// schedule/instantiation knobs). This is the op's **declared
+    /// footprint** the delta-compile path trusts: the per-stage hash
+    /// vector ([`crate::strategy::ResolvedStrategy::stage_hashes`]) of
+    /// the mutated spec is guaranteed to agree with the parent's on
+    /// every stage *before* the returned index — pinned by a property
+    /// test in `tests/properties.rs`.
+    ///
+    /// Stage indices below the boundary are untouched by boundary ops;
+    /// whole-spec knobs (`ToggleRecompute`, `SetMicro`) fold into every
+    /// stage hash, so they declare stage 0.
+    pub fn first_touched_stage(self) -> Option<usize> {
+        match self {
+            Mutation::Resplit { stage, .. } => Some(stage),
+            Mutation::MoveBoundary { boundary, .. } => Some(boundary),
+            Mutation::SplitStage { stage, .. } => Some(stage),
+            Mutation::MergeStages { boundary } => Some(boundary),
+            Mutation::ToggleZero { stage } => Some(stage),
+            Mutation::ToggleRecompute => Some(0),
+            Mutation::SetMicro { .. } => Some(0),
+            Mutation::SetSchedule { .. } | Mutation::SetMaxOngoing { .. } => None,
+        }
+    }
+
     /// Apply this mutation to `spec`, returning the neighbor. Pure and
     /// total: out-of-range parameters are clamped or yield an unchanged
     /// clone (which the proposer rejects as a non-move); structural

@@ -107,6 +107,74 @@ impl ResolvedStrategy {
         self.stage_of_layer.hash(&mut h);
         h.finish()
     }
+
+    /// Per-stage refinement of [`structural_hash`]: one hash per
+    /// pipeline stage, covering everything the **forward template
+    /// emission of that stage** depends on — the stage's layer list,
+    /// device group, micro-batch count and recompute flag, each layer's
+    /// computation config, the stored layouts of every operand tensor
+    /// the stage touches, and (crucially) the *producing* layer's
+    /// computation config for tensors that flow in across a stage
+    /// boundary: the consumer stage's materialization p2p/collective
+    /// pattern depends on how the producer instantiated the tensor.
+    ///
+    /// The delta-compile path keys off this vector: if two resolved
+    /// strategies agree on stages `0..k`, their emitted forward slot
+    /// templates for those stages are bit-identical (pinned by a
+    /// property test), so emission can resume from a checkpoint taken
+    /// after stage `k − 1`. Like [`structural_hash`], the pipeline
+    /// schedule and `max_ongoing_micro_batch` are deliberately
+    /// excluded.
+    ///
+    /// [`structural_hash`]: ResolvedStrategy::structural_hash
+    pub fn stage_hashes(&self, graph: &Graph, seed: u64) -> Vec<u64> {
+        use std::hash::{Hash, Hasher};
+        let hash_cfg = |h: &mut std::collections::hash_map::DefaultHasher, c: &ParallelConfig| {
+            c.partition.hash(h);
+            c.devices.hash(h);
+        };
+        let hash_mem = |h: &mut std::collections::hash_map::DefaultHasher, l: &TensorLayout| {
+            l.axis_degrees.hash(h);
+            for p in &l.parts {
+                p.groups.hash(h);
+            }
+        };
+        self.stages
+            .iter()
+            .map(|s| {
+                let mut h = std::collections::hash_map::DefaultHasher::new();
+                seed.hash(&mut h);
+                s.layers.hash(&mut h);
+                s.devices.hash(&mut h);
+                s.schedule.n_micro_batch.hash(&mut h);
+                s.schedule.recompute.hash(&mut h);
+                for &lid in &s.layers {
+                    hash_cfg(&mut h, &self.comp[lid]);
+                    let layer = &graph.layers[lid];
+                    for op in layer
+                        .inputs
+                        .iter()
+                        .chain(layer.params.iter())
+                        .chain(layer.outputs.iter())
+                    {
+                        hash_mem(&mut h, &self.mem[op.tensor]);
+                    }
+                    // Inbound boundary tensors: fold in the producer's
+                    // comp config — it shapes this stage's materialize
+                    // transforms even though the producer lives
+                    // elsewhere.
+                    for op in &layer.inputs {
+                        if let Some(p) = graph.tensors[op.tensor].producer {
+                            if self.stage_of_layer[p] != s.id {
+                                hash_cfg(&mut h, &self.comp[p]);
+                            }
+                        }
+                    }
+                }
+                h.finish()
+            })
+            .collect()
+    }
 }
 
 /// Resolve a strategy tree against its model.
@@ -535,6 +603,45 @@ mod tests {
         let r = resolve(&g, &t).unwrap();
         assert!(r.mem[w].fully_sharded());
         assert_eq!(r.mem[w].axis_degrees[0], 4);
+    }
+
+    #[test]
+    fn stage_hashes_track_stage_partition_and_local_changes() {
+        let g = model();
+        let mut t = StrategyTree::from_model(&g);
+        t.assign_under(&g, "s1", &[("b", 2)], &[0, 1]).unwrap();
+        t.assign_under(&g, "s2", &[("b", 2)], &[2, 3]).unwrap();
+        t.assign_under(&g, "loss", &[("b", 2)], &[2, 3]).unwrap();
+        let r = resolve(&g, &t).unwrap();
+        let h = r.stage_hashes(&g, 1);
+        assert_eq!(h.len(), r.stages.len());
+        // Deterministic, seed-sensitive.
+        assert_eq!(h, r.stage_hashes(&g, 1));
+        assert_ne!(h, r.stage_hashes(&g, 2));
+
+        // Changing only stage 1's partition must leave stage 0's hash
+        // alone (no inbound boundary into stage 0) and change stage 1's.
+        let mut t2 = StrategyTree::from_model(&g);
+        t2.assign_under(&g, "s1", &[("b", 2)], &[0, 1]).unwrap();
+        t2.assign_under(&g, "s2", &[("o", 2)], &[2, 3]).unwrap();
+        t2.assign_under(&g, "loss", &[("b", 2)], &[2, 3]).unwrap();
+        let r2 = resolve(&g, &t2).unwrap();
+        let h2 = r2.stage_hashes(&g, 1);
+        assert_eq!(h[0], h2[0], "untouched upstream stage keeps its hash");
+        assert_ne!(h[1], h2[1], "mutated stage hash changes");
+
+        // Changing only stage 0's partition (same devices, same stage
+        // split) changes the *downstream* hash too: stage 1's
+        // materialization depends on how the producer laid the boundary
+        // tensor out.
+        let mut t3 = StrategyTree::from_model(&g);
+        t3.assign_under(&g, "s1", &[("o", 2)], &[0, 1]).unwrap();
+        t3.assign_under(&g, "s2", &[("b", 2)], &[2, 3]).unwrap();
+        t3.assign_under(&g, "loss", &[("b", 2)], &[2, 3]).unwrap();
+        let r3 = resolve(&g, &t3).unwrap();
+        let h3 = r3.stage_hashes(&g, 1);
+        assert_ne!(h[0], h3[0]);
+        assert_ne!(h[1], h3[1], "inbound producer config is part of the hash");
     }
 
     #[test]

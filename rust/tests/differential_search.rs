@@ -1,0 +1,146 @@
+//! Differential harness pinning delta re-simulation to the full
+//! re-compilation path, bit for bit.
+//!
+//! `SearchConfig::delta` only changes *how* each proposal's execution
+//! template is produced (splicing the untouched stage prefix from a
+//! parent checkpoint vs emitting from scratch) — never *what* is
+//! simulated. This harness runs the same fixed-seed annealing search
+//! twice, delta ON and delta OFF (same pruning state), on the two
+//! headline scenarios, and asserts:
+//!
+//! - the accepted-move sequence is identical (per-chain evals /
+//!   accepted / infeasible counters match exactly);
+//! - the delta / full-compile / bound-prune counters match exactly
+//!   (they are classification-based, so both modes report the same
+//!   numbers — the OFF run just doesn't *exploit* the delta hits);
+//! - every chain's best energy is bit-identical (`f64::to_bits`);
+//! - the `proteus search --json` document is byte-identical.
+//!
+//! If delta emission ever diverges from full emission — a stale
+//! checkpoint, a splice that drops a task, a hash that misses a config
+//! knob — the walks decouple and this harness fails loudly.
+
+use proteus::cli::search_json;
+use proteus::prelude::*;
+use proteus::runtime::{default_inits, SearchResult};
+
+struct Case {
+    model: ModelKind,
+    batch: usize,
+    preset: Preset,
+    nodes: usize,
+}
+
+fn run_search(case: &Case, delta: bool) -> SearchResult {
+    let cluster = Cluster::preset(case.preset, case.nodes);
+    let graph = case.model.build(case.batch);
+    let inits = default_inits(&graph, cluster.num_devices(), CollAlgo::Auto);
+    let config = SearchConfig {
+        seed: 7,
+        budget: 60,
+        chains: 2,
+        delta,
+        ..SearchConfig::default()
+    };
+    Searcher::new(config)
+        .run(&graph, &cluster, &inits)
+        .expect("search runs")
+}
+
+fn assert_differential(case: &Case) {
+    let name = case.model.name();
+    let on = run_search(case, true);
+    let off = run_search(case, false);
+
+    assert_eq!(on.evals, off.evals, "{name}: total evals diverge");
+    assert_eq!(on.delta_hits, off.delta_hits, "{name}: delta_hits diverge");
+    assert_eq!(
+        on.full_compiles, off.full_compiles,
+        "{name}: full_compiles diverge"
+    );
+    assert_eq!(
+        on.bound_prunes, off.bound_prunes,
+        "{name}: bound_prunes diverge"
+    );
+    assert!(
+        on.delta_hits > 0,
+        "{name}: no delta hits — the harness is not exercising delta paths"
+    );
+
+    assert_eq!(on.chains.len(), off.chains.len());
+    for (a, b) in on.chains.iter().zip(&off.chains) {
+        let c = a.chain;
+        assert_eq!(a.seed, b.seed, "{name} chain {c}: seed");
+        assert_eq!(a.evals, b.evals, "{name} chain {c}: evals");
+        assert_eq!(a.accepted, b.accepted, "{name} chain {c}: accepted");
+        assert_eq!(a.infeasible, b.infeasible, "{name} chain {c}: infeasible");
+        assert_eq!(a.delta_hits, b.delta_hits, "{name} chain {c}: delta_hits");
+        assert_eq!(
+            a.full_compiles, b.full_compiles,
+            "{name} chain {c}: full_compiles"
+        );
+        assert_eq!(
+            a.bound_prunes, b.bound_prunes,
+            "{name} chain {c}: bound_prunes"
+        );
+        match (&a.best, &b.best) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.label, y.label, "{name} chain {c}: best label");
+                assert_eq!(
+                    x.step_ms.to_bits(),
+                    y.step_ms.to_bits(),
+                    "{name} chain {c}: best step_ms bits"
+                );
+                assert_eq!(
+                    x.throughput.to_bits(),
+                    y.throughput.to_bits(),
+                    "{name} chain {c}: best throughput bits"
+                );
+                assert_eq!(x.peak_mem, y.peak_mem, "{name} chain {c}: best peak_mem");
+            }
+            _ => panic!("{name} chain {c}: best presence diverges"),
+        }
+    }
+
+    let cluster = Cluster::preset(case.preset, case.nodes);
+    let render = |r: &SearchResult| {
+        search_json(
+            case.model.name(),
+            case.batch,
+            &cluster.name,
+            cluster.num_devices(),
+            7,
+            60,
+            2,
+            CollAlgo::Auto,
+            r,
+        )
+        .to_string_pretty()
+    };
+    assert_eq!(
+        render(&on),
+        render(&off),
+        "{name}: --json documents are not byte-identical"
+    );
+}
+
+#[test]
+fn delta_search_is_bit_identical_gpt2_16dev() {
+    assert_differential(&Case {
+        model: ModelKind::Gpt2,
+        batch: 64,
+        preset: Preset::HC2,
+        nodes: 2, // 16 GPUs
+    });
+}
+
+#[test]
+fn delta_search_is_bit_identical_dlrm_32dev() {
+    assert_differential(&Case {
+        model: ModelKind::Dlrm,
+        batch: 128,
+        preset: Preset::HC2,
+        nodes: 4, // 32 GPUs
+    });
+}

@@ -388,3 +388,155 @@ fn mutation_ops_preserve_validity_and_flops() {
         Ok(())
     });
 }
+
+/// Delta-compile property #1: the mutation proposer's **declared
+/// footprint** ([`Mutation::first_touched_stage`]) upper-bounds the real
+/// one. Along random mutation walks, the per-stage hash vector
+/// (`ResolvedStrategy::stage_hashes`) of every accepted neighbor agrees
+/// with its parent's on each stage strictly below the declared index,
+/// and mutations that declare no footprint (`None`) leave the whole
+/// vector unchanged. The delta-compile path trusts this when it splices
+/// checkpointed stage prefixes, so a violation here means delta and
+/// full emission could diverge.
+#[test]
+fn mutation_walks_respect_declared_stage_hash_footprint() {
+    use proteus::strategy::nonuniform::propose;
+    use proteus::strategy::resolve;
+    use proteus::testing::check_with_seed;
+    const SEED: u64 = 0x00DE_17A5;
+    let hashes_of = |model: &Graph, spec: &NonUniformSpec| -> Option<Vec<u64>> {
+        let tree = spec.build(model).ok()?;
+        let r = resolve(model, &tree).ok()?;
+        Some(r.stage_hashes(model, SEED))
+    };
+    check_with_seed("mutation-stage-hash-footprint", 0xDE17_A000, 40, |g| {
+        let model = gen_model(g);
+        let batch = model.batch_size;
+        let pp = *g.pick(&[1usize, 2]);
+        let dp_opts: Vec<usize> = [1usize, 2, 4]
+            .into_iter()
+            .filter(|&d| batch % d == 0 && d * pp <= 8)
+            .collect();
+        let dp = *g.pick(&dp_opts);
+        let micro = if pp > 1 { 2 } else { 1 };
+        if batch % (dp * micro) != 0 {
+            return Ok(());
+        }
+        let Ok(init) = NonUniformSpec::from_uniform(&model, StrategySpec::hybrid(dp, 1, pp, micro))
+        else {
+            return Ok(());
+        };
+        let Some(mut hashes) = hashes_of(&model, &init) else {
+            return Ok(());
+        };
+        let mut spec = init;
+        for _ in 0..8 {
+            let Some((m, next)) = propose(&model, &spec, g.rng(), 32) else {
+                break;
+            };
+            let Some(next_hashes) = hashes_of(&model, &next) else {
+                return Err(format!("{m:?}: proposed neighbor does not resolve"));
+            };
+            match m.first_touched_stage() {
+                None => {
+                    if next_hashes != hashes {
+                        return Err(format!(
+                            "{m:?}: declared no template footprint but stage hashes \
+                             changed: {hashes:?} -> {next_hashes:?}"
+                        ));
+                    }
+                }
+                Some(t) => {
+                    if t > hashes.len() || t > next_hashes.len() {
+                        return Err(format!(
+                            "{m:?}: declared stage {t} out of range ({} -> {} stages)",
+                            hashes.len(),
+                            next_hashes.len()
+                        ));
+                    }
+                    if hashes[..t] != next_hashes[..t] {
+                        return Err(format!(
+                            "{m:?}: stage hashes changed below declared stage {t}: \
+                             {hashes:?} -> {next_hashes:?}"
+                        ));
+                    }
+                }
+            }
+            spec = next;
+            hashes = next_hashes;
+        }
+        Ok(())
+    });
+}
+
+/// Delta-compile property #2: stage-hash agreement is **sufficient** for
+/// template identity. Wherever a neighbor's stage-hash vector agrees
+/// with its parent's on a leading prefix, the from-scratch-emitted
+/// execution templates are bit-identical on that prefix (per-stage
+/// forward-emission fingerprints match exactly). Together with property
+/// #1 this pins the two directions the checkpoint-splice optimization
+/// relies on.
+#[test]
+fn equal_stage_hash_prefix_implies_identical_stage_templates() {
+    use proteus::compiler::template_stage_fingerprints;
+    use proteus::strategy::nonuniform::propose;
+    use proteus::strategy::resolve;
+    use proteus::testing::check_with_seed;
+    const SEED: u64 = 0x00DE_17A5;
+    let cluster = Cluster::preset(Preset::HC1, 1);
+    check_with_seed("stage-hash-prefix-templates", 0xF1D0_0001, 30, |g| {
+        let model = gen_model(g);
+        let batch = model.batch_size;
+        let pp = *g.pick(&[1usize, 2]);
+        let dp_opts: Vec<usize> = [1usize, 2, 4]
+            .into_iter()
+            .filter(|&d| batch % d == 0 && d * pp <= 8)
+            .collect();
+        let dp = *g.pick(&dp_opts);
+        let micro = if pp > 1 { 2 } else { 1 };
+        if batch % (dp * micro) != 0 {
+            return Ok(());
+        }
+        let Ok(init) = NonUniformSpec::from_uniform(&model, StrategySpec::hybrid(dp, 1, pp, micro))
+        else {
+            return Ok(());
+        };
+        let inspect = |spec: &NonUniformSpec| -> Option<(Vec<u64>, Vec<u64>)> {
+            let tree = spec.build(&model).ok()?;
+            let r = resolve(&model, &tree).ok()?;
+            let hashes = r.stage_hashes(&model, SEED);
+            let fps = template_stage_fingerprints(&model, &tree, &cluster).ok()?;
+            Some((hashes, fps))
+        };
+        let Some((mut hashes, mut fps)) = inspect(&init) else {
+            return Ok(());
+        };
+        let mut spec = init;
+        for _ in 0..6 {
+            let Some((m, next)) = propose(&model, &spec, g.rng(), 32) else {
+                break;
+            };
+            let Some((next_hashes, next_fps)) = inspect(&next) else {
+                return Err(format!("{m:?}: proposed neighbor does not compile"));
+            };
+            let prefix = hashes
+                .iter()
+                .zip(&next_hashes)
+                .take_while(|(a, b)| a == b)
+                .count();
+            for s in 0..prefix {
+                if fps[s] != next_fps[s] {
+                    return Err(format!(
+                        "{m:?}: stage {s} hash unchanged but forward template \
+                         fingerprint differs ({:#x} vs {:#x})",
+                        fps[s], next_fps[s]
+                    ));
+                }
+            }
+            spec = next;
+            hashes = next_hashes;
+            fps = next_fps;
+        }
+        Ok(())
+    });
+}

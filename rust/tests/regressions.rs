@@ -327,3 +327,59 @@ fn search_beats_or_matches_uniform_grid() {
     assert_eq!(best_a.point.spec, best_b.point.spec);
     assert_eq!(best_a.throughput.to_bits(), best_b.throughput.to_bits());
 }
+
+/// The closed-form HTAE lower bound the searcher prunes with must be
+/// **admissible**: for every candidate the uniform sweep grid produces
+/// (both headline models, all pipeline schedules), the bound never
+/// exceeds the simulated makespan — in the full-behavior configuration
+/// *and* the plain ablation. An inadmissible bound would let
+/// `SearchConfig::prune` discard the true optimum without simulating it.
+#[test]
+fn htae_lower_bound_is_admissible_on_the_uniform_grid() {
+    use proteus::compiler::htae_lower_bound_ms;
+    use proteus::runtime::{candidate_grid_with_schedules, dedupe_specs, score_tree};
+    use proteus::strategy::resolve;
+    let cases = [(ModelKind::Gpt2, 16usize), (ModelKind::Dlrm, 32usize)];
+    let cluster = Cluster::preset(Preset::HC2, 2);
+    let n = cluster.num_devices();
+    let gamma = calibrate::default_gamma(&cluster);
+    let mut checked = 0usize;
+    for (model, batch) in cases {
+        let graph = model.build(batch);
+        let specs = dedupe_specs(
+            &graph,
+            candidate_grid_with_schedules(n, batch, &PipelineSchedule::all()),
+        );
+        for spec in specs {
+            let Ok(tree) = build_strategy(&graph, spec) else {
+                continue;
+            };
+            let Ok(r) = resolve(&graph, &tree) else {
+                continue;
+            };
+            let bound = htae_lower_bound_ms(&graph, &cluster, &r, CollAlgo::Auto);
+            assert!(
+                bound.is_finite() && bound >= 0.0,
+                "{}/{}: bound {bound} is not a finite non-negative number",
+                model.name(),
+                spec.label()
+            );
+            for plain in [false, true] {
+                let score = score_tree(&graph, &cluster, gamma, &tree, plain, CollAlgo::Auto, None);
+                let Ok(report) = &score.report else {
+                    continue;
+                };
+                assert!(
+                    bound <= report.step_ms * (1.0 + 1e-9),
+                    "{}/{} (plain={plain}): bound {bound:.4} ms exceeds simulated \
+                     makespan {:.4} ms — the pruner could discard the optimum",
+                    model.name(),
+                    spec.label(),
+                    report.step_ms,
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 20, "only {checked} grid candidates simulated");
+}
