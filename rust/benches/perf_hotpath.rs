@@ -79,6 +79,58 @@ fn main() {
         );
     }
 
+    // 1c. Symmetry folding at scale: GPT-2 dp×pp=8 on the rail-optimized
+    //     HC4 machine from 256 to 4096 GPUs. Folding compiles the full
+    //     logical graph, verifies replica symmetry, then materializes
+    //     one representative slice — so simulate cost stops scaling
+    //     with the DP width. The 4096-GPU budgets are the tentpole
+    //     acceptance ceilings (release build).
+    println!("\nfold: GPT-2 dp×pp=8 on HC4, compile + folded simulate:");
+    for (nodes, dp) in [(32usize, 32usize), (128, 128), (512, 512)] {
+        let gpus = nodes * 8;
+        let fold_cluster = Cluster::preset(Preset::HC4, nodes);
+        let fold_model = ModelKind::Gpt2.build(dp * 4);
+        let fold_tree =
+            build_strategy(&fold_model, StrategySpec::hybrid(dp, 1, 8, 4)).unwrap();
+        let t_fc = timed(&format!("  fold-compile {gpus} GPUs"), 3, || {
+            proteus::compiler::compile_with_opts(&fold_model, &fold_tree, &fold_cluster, None, true)
+                .unwrap()
+        });
+        let (feg, fstats) =
+            proteus::compiler::compile_with_opts(&fold_model, &fold_tree, &fold_cluster, None, true)
+                .unwrap();
+        assert!(!fstats.fold_fallback, "{gpus} GPUs: fold fell back");
+        let fold_est = OpEstimator::analytical(&fold_cluster);
+        let fold_htae = Htae::with_config(
+            &fold_cluster,
+            &fold_est,
+            HtaeConfig {
+                gamma: calibrate::default_gamma(&fold_cluster),
+                ..HtaeConfig::default()
+            },
+        );
+        let t_fs = timed(&format!("  simulate {gpus} GPUs (folded)"), 3, || {
+            fold_htae.simulate(&feg).unwrap()
+        });
+        println!(
+            "{:<44} {:>10} materialized of {} logical ({} classes)",
+            format!("  → {gpus} GPUs tasks"),
+            feg.n_tasks(),
+            feg.logical_tasks(),
+            fstats.fold_classes,
+        );
+        if gpus == 4096 {
+            assert!(
+                t_fc < 10.0,
+                "fold-compile 4096 GPUs took {t_fc:.2}s (budget 10s)"
+            );
+            assert!(
+                t_fs < 2.0,
+                "folded simulate 4096 GPUs took {t_fs:.2}s (budget 2s)"
+            );
+        }
+    }
+
     // 2. Estimator backends.
     let analytical = OpEstimator::analytical(&cluster);
     let rows = analytical.feature_matrix(&eg);

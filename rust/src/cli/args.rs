@@ -31,8 +31,12 @@ COMMANDS:
 WORKLOAD OPTIONS (simulate, sweep, search):
   --model <resnet50|inception_v3|vgg19|gpt2|gpt-1.5b|dlrm>
   --batch N         global batch size
-  --preset <HC1|HC2|HC3>  hardware preset
+  --preset <HC1|HC2|HC3|HC4>  hardware preset (HC4: rail-optimized
+                    multi-NIC fat tree, up to 512 nodes)
   --nodes N         nodes of the preset to instantiate
+  --nics N          override NICs per node (rail-optimized fabric)
+  --oversub R       fat-tree oversubscription ratio (default 1.0 =
+                    non-blocking; R > 1 thins the trunk by R)
 
 STRATEGY OPTIONS (simulate):
   --dp N --mp N --pp N --micro N   parallel degrees + micro-batches
@@ -64,6 +68,12 @@ SEARCH OPTIONS:
   --no-prune        disable bound-based proposal pruning (changes the
                     walk: pruned proposals are never simulated)
   --wall-secs S     optional wall-clock cap (breaks reproducibility)
+
+SCALE (simulate, sweep, search):
+  --fold            symmetry folding: compile + simulate one
+                    representative replica slice when device-equivalence
+                    verification passes (bit-identical results; falls
+                    back to the unfolded graph when unprovable)
 
 COLLECTIVES (simulate, sweep, search):
   --coll-algo <ring|tree|hier|auto|mono>
@@ -151,6 +161,16 @@ impl Args {
             Some(v) => v
                 .parse()
                 .map_err(|_| Error::Config(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    /// f64 option with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not a number"))),
         }
     }
 

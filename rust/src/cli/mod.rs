@@ -4,6 +4,7 @@
 //! ```text
 //! proteus simulate  --model gpt2 --batch 64 --preset HC2 --nodes 2
 //!                   --dp 4 --mp 2 --pp 2 --micro 4
+//!                   [--nics N] [--oversub R] [--fold]
 //!                   [--schedule gpipe|1f1b|interleaved[:v]] [--vstages N]
 //!                   [--zero] [--recompute] [--emb-shard] [--plain]
 //!                   [--truth] [--json] [--trace out.json]
@@ -11,11 +12,13 @@
 //! proteus compare   --config configs/gpt2_hc2.json [--truth]
 //! proteus sweep     --model gpt2 --batch 64 --preset HC2 --nodes 2
 //!                   [--schedules all|gpipe|1f1b|interleaved[:v]]
+//!                   [--nics N] [--oversub R] [--fold]
 //!                   [--threads N] [--top 10] [--plain] [--truth] [--json]
 //! proteus search    --model gpt2 --batch 64 --preset HC2 --nodes 2
 //!                   [--seed 42] [--budget 200] [--chains 4] [--threads N]
 //!                   [--init LABEL | --resume FILE] [--fixed-coll]
-//!                   [--no-delta] [--no-prune]
+//!                   [--no-delta] [--no-prune] [--fold]
+//!                   [--nics N] [--oversub R]
 //!                   [--wall-secs S] [--plain] [--json]
 //! proteus calibrate [--out configs/gamma.json]
 //! proteus info      --model resnet50 [--batch 32]
@@ -79,7 +82,7 @@ fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Cluster, StrategySpe
     let preset = Preset::parse(&preset)
         .ok_or_else(|| Error::Config(format!("unknown preset '{preset}'")))?;
     let nodes = args.get_usize("nodes", preset.max_nodes())?;
-    let cluster = Cluster::preset(preset, nodes);
+    let cluster = build_cluster(args, preset, nodes)?;
     let mut spec = StrategySpec::hybrid(
         args.get_usize("dp", 1)?,
         args.get_usize("mp", 1)?,
@@ -112,6 +115,38 @@ fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Cluster, StrategySpe
     }
     spec.schedule = sched;
     Ok((model, batch, cluster, spec))
+}
+
+/// Parse the optional `--nics` / `--oversub` fabric overrides.
+fn fabric_overrides(args: &Args) -> Result<(Option<usize>, Option<f64>)> {
+    let nics = match args.get("nics") {
+        None => None,
+        Some(n) => Some(n.parse().map_err(|_| {
+            Error::Config(format!("--nics: '{n}' is not an integer"))
+        })?),
+    };
+    let oversub = match args.get("oversub") {
+        None => None,
+        Some(_) => Some(args.get_f64("oversub", 1.0)?),
+    };
+    Ok((nics, oversub))
+}
+
+/// Build the cluster for `preset` × `nodes`, applying the optional
+/// `--nics` / `--oversub` fabric overrides. The overridden spec goes
+/// back through [`Cluster::from_spec`], so an invalid combination
+/// (more NICs than GPU ports, oversubscription below 1.0) fails with
+/// the same validation errors a hand-written spec would.
+fn build_cluster(args: &Args, preset: Preset, nodes: usize) -> Result<Cluster> {
+    let (nics, oversub) = fabric_overrides(args)?;
+    let mut spec = crate::cluster::presets::spec(preset, nodes);
+    if let Some(k) = nics {
+        spec.nics_per_node = k;
+    }
+    if let Some(r) = oversub {
+        spec.oversubscription = r;
+    }
+    Cluster::from_spec(&spec)
 }
 
 /// Parse `--coll-algo` (collective lowering override; `auto` selects
@@ -169,6 +204,22 @@ fn print_compile_stats(s: &crate::compiler::CompileStats) {
         "  instantiated: {} micro-batches × {} chunks → {} tasks, {} deps",
         s.n_micro, s.n_chunks, s.n_tasks, s.n_deps,
     );
+    if s.fold_classes > 0 {
+        println!(
+            "  fold: {} device classes, {} devices elided — {} logical tasks \
+             materialized as {} ({:.2}ms)",
+            s.fold_classes,
+            s.fold_devices_folded,
+            s.logical_tasks,
+            s.n_tasks,
+            s.fold_s * 1e3,
+        );
+    } else if s.fold_fallback {
+        println!(
+            "  fold: fallback to unfolded graph (symmetry unprovable, {:.2}ms)",
+            s.fold_s * 1e3
+        );
+    }
 }
 
 /// JSON rendering of `--compile-stats` (schema in README).
@@ -195,7 +246,77 @@ fn compile_stats_json(s: &crate::compiler::CompileStats) -> Json {
         ("n_chunks", Json::Num(s.n_chunks as f64)),
         ("tasks", Json::Num(s.n_tasks as f64)),
         ("deps", Json::Num(s.n_deps as f64)),
+        ("logical_tasks", Json::Num(s.logical_tasks as f64)),
+        ("fold_classes", Json::Num(s.fold_classes as f64)),
+        (
+            "fold_devices_folded",
+            Json::Num(s.fold_devices_folded as f64),
+        ),
+        ("fold_fallback", Json::Bool(s.fold_fallback)),
+        ("fold_s", Json::Num(s.fold_s)),
     ])
+}
+
+/// Base field list of the `proteus simulate --json` document (schema in
+/// README.md). `cmd_simulate` appends the optional compile-stats /
+/// truth / flexflow sections before printing. Exported so the fold
+/// differential harness (`tests/differential_fold.rs`) can render the
+/// document with pinned wall-clock fields and byte-compare a folded run
+/// against an unfolded one: every field except the two wall-clock
+/// timings is bit-deterministic, and `tasks` is the *logical* task
+/// count, which folding preserves (the materialized count lives in
+/// compile-stats).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_json(
+    model: &str,
+    strategy: String,
+    schedule: String,
+    coll_algo: CollAlgo,
+    cluster_name: &str,
+    gpus: usize,
+    backend: &str,
+    logical_tasks: usize,
+    compile_s: f64,
+    simulate_s: f64,
+    report: &crate::executor::SimReport,
+) -> Vec<(&'static str, Json)> {
+    vec![
+        ("model", Json::Str(model.into())),
+        ("strategy", Json::Str(strategy)),
+        ("schedule", Json::Str(schedule)),
+        ("coll_algo", Json::Str(coll_algo.name().into())),
+        ("cluster", Json::Str(cluster_name.into())),
+        ("gpus", Json::Num(gpus as f64)),
+        ("backend", Json::Str(backend.into())),
+        ("tasks", Json::Num(logical_tasks as f64)),
+        ("compile_s", Json::Num(compile_s)),
+        ("simulate_s", Json::Num(simulate_s)),
+        ("step_ms", Json::Num(report.step_ms)),
+        ("throughput_samples_per_s", Json::Num(report.throughput)),
+        ("oom", Json::Bool(report.oom)),
+        (
+            "peak_mem_bytes",
+            Json::Arr(
+                report
+                    .peak_mem
+                    .iter()
+                    .map(|&b| Json::Num(b as f64))
+                    .collect(),
+            ),
+        ),
+        (
+            "peak_act_bytes",
+            Json::Arr(
+                report
+                    .peak_act
+                    .iter()
+                    .map(|&b| Json::Num(b as f64))
+                    .collect(),
+            ),
+        ),
+        ("overlapped_ops", Json::Num(report.overlapped_ops as f64)),
+        ("shared_ops", Json::Num(report.shared_ops as f64)),
+    ]
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -205,6 +326,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let flexflow = args.flag("flexflow");
     let json = args.flag("json");
     let compile_stats = args.flag("compile-stats");
+    let fold = args.flag("fold");
     let coll_algo = parse_coll_algo(args)?;
     let trace_path = args.get("trace").map(|s| s.to_string());
     args.reject_unknown()?;
@@ -212,7 +334,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let graph = model.build(batch);
     let tree = build_strategy(&graph, spec)?;
     let t0 = std::time::Instant::now();
-    let (eg, cstats) = crate::compiler::compile_with(&graph, &tree, &cluster, None)?;
+    let (eg, cstats) = crate::compiler::compile_with_opts(&graph, &tree, &cluster, None, fold)?;
     let compile_s = t0.elapsed().as_secs_f64();
     let est = estimator(args, &cluster);
     let mut config = if plain {
@@ -249,43 +371,19 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     if json {
         // Schema documented in README.md ("JSON output").
-        let mut fields: Vec<(&str, Json)> = vec![
-            ("model", Json::Str(model.name().into())),
-            ("strategy", Json::Str(spec.label())),
-            ("schedule", Json::Str(spec.schedule.name())),
-            ("coll_algo", Json::Str(coll_algo.name().into())),
-            ("cluster", Json::Str(cluster.name.clone())),
-            ("gpus", Json::Num(cluster.num_devices() as f64)),
-            ("backend", Json::Str(backend.into())),
-            ("tasks", Json::Num(eg.n_tasks() as f64)),
-            ("compile_s", Json::Num(compile_s)),
-            ("simulate_s", Json::Num(exe_s)),
-            ("step_ms", Json::Num(report.step_ms)),
-            ("throughput_samples_per_s", Json::Num(report.throughput)),
-            ("oom", Json::Bool(report.oom)),
-            (
-                "peak_mem_bytes",
-                Json::Arr(
-                    report
-                        .peak_mem
-                        .iter()
-                        .map(|&b| Json::Num(b as f64))
-                        .collect(),
-                ),
-            ),
-            (
-                "peak_act_bytes",
-                Json::Arr(
-                    report
-                        .peak_act
-                        .iter()
-                        .map(|&b| Json::Num(b as f64))
-                        .collect(),
-                ),
-            ),
-            ("overlapped_ops", Json::Num(report.overlapped_ops as f64)),
-            ("shared_ops", Json::Num(report.shared_ops as f64)),
-        ];
+        let mut fields = simulate_json(
+            model.name(),
+            spec.label(),
+            spec.schedule.name(),
+            coll_algo,
+            &cluster.name,
+            cluster.num_devices(),
+            backend,
+            eg.logical_tasks(),
+            compile_s,
+            exe_s,
+            &report,
+        );
         if compile_stats {
             fields.push(("compile_stats", compile_stats_json(&cstats)));
         }
@@ -321,10 +419,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
         println!(
             "tasks={} compile={:.3}s simulate={:.3}s",
-            eg.n_tasks(),
+            eg.logical_tasks(),
             compile_s,
             exe_s
         );
+        if let Some(f) = eg.fold() {
+            println!(
+                "folded: {} device classes, {} devices elided, {} tasks materialized",
+                f.n_classes,
+                f.devices_folded,
+                eg.n_tasks(),
+            );
+        } else if cstats.fold_fallback {
+            println!("folded: fallback to unfolded graph (symmetry unprovable)");
+        }
         println!(
             "step={:.2} ms  throughput={:.1} samples/s  oom={}  peak_mem={}",
             report.step_ms,
@@ -495,9 +603,10 @@ fn cmd_search(args: &Args) -> Result<()> {
                 .map_err(|_| Error::Config(format!("--wall-secs: '{v}' is not a number")))
         })
         .transpose()?;
+    let fold = args.flag("fold");
+    let cluster = build_cluster(args, preset, nodes)?;
     args.reject_unknown()?;
 
-    let cluster = Cluster::preset(preset, nodes);
     let n = cluster.num_devices();
     let graph = model.build(batch);
 
@@ -562,6 +671,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         mutate_coll: !fixed_coll,
         delta: !no_delta,
         prune: !no_prune,
+        fold,
         wall_s,
         ..SearchConfig::default()
     };
@@ -641,6 +751,12 @@ fn cmd_search(args: &Args) -> Result<()> {
                 b.step_ms,
                 fmt_bytes(b.peak_mem),
             );
+            if b.fold_classes > 0 {
+                println!(
+                    "fold: {} device classes, {} devices elided",
+                    b.fold_classes, b.fold_devices_folded
+                );
+            }
             println!("spec: {}", b.point.spec.to_json());
         }
         None => println!("no feasible strategy found within budget"),
@@ -678,6 +794,12 @@ pub fn search_json(
             ("peak_mem_bytes", Json::Num(b.peak_mem as f64)),
             ("oom", Json::Bool(b.oom)),
             ("coll_algo", Json::Str(b.point.coll_algo.name().into())),
+            ("fold_classes", Json::Num(b.fold_classes as f64)),
+            (
+                "fold_devices_folded",
+                Json::Num(b.fold_devices_folded as f64),
+            ),
+            ("fold_fallback", Json::Bool(b.fold_fallback)),
             ("spec", b.point.spec.to_json()),
         ]),
     };
@@ -746,12 +868,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let plain = args.flag("plain");
     let truth = args.flag("truth");
     let json = args.flag("json");
+    let fold = args.flag("fold");
     let coll_algo = parse_coll_algo(args)?;
     let schedules = parse_schedules(&args.get_or("schedules", "1f1b"))?;
     let artifact = args.get_or("artifacts", DEFAULT_ARTIFACT);
+    // Validates the overrides up front; the runner re-applies them to
+    // each scenario's cluster.
+    let (nics, oversub) = fabric_overrides(args)?;
+    let cluster = build_cluster(args, preset, nodes)?;
     args.reject_unknown()?;
 
-    let cluster = Cluster::preset(preset, nodes);
     let n = cluster.num_devices();
     let graph = model.build(batch);
     let grid = candidate_grid_with_schedules(n, batch, &schedules);
@@ -773,7 +899,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let runner = SweepRunner::new()
         .with_threads(threads)
         .plain(plain)
-        .coll_algo(coll_algo);
+        .coll_algo(coll_algo)
+        .fold(fold)
+        .fabric(nics, oversub);
     let n_threads = runner.effective_threads(scenarios.len());
     let t0 = std::time::Instant::now();
     let outcomes = runner.run(&scenarios);
@@ -831,6 +959,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                     // Infeasible candidates rank below every feasible
                     // one but stay visible (with their would-be speed).
                     ("oom", Json::Bool(o.oom)),
+                    ("fold_classes", Json::Num(o.fold_classes as f64)),
+                    (
+                        "fold_devices_folded",
+                        Json::Num(o.fold_devices_folded as f64),
+                    ),
+                    ("fold_fallback", Json::Bool(o.fold_fallback)),
                 ])
             })
             .collect();
@@ -850,6 +984,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             ("viable", Json::Num(feasible as f64)),
             ("oom", Json::Num(oom as f64)),
             ("invalid", Json::Num(failed as f64)),
+            ("fold", Json::Bool(fold)),
             ("wall_s", Json::Num(wall.as_secs_f64())),
             ("threads", Json::Num(n_threads as f64)),
             ("results", Json::Arr(results)),
@@ -902,6 +1037,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", table.render());
+    if fold {
+        let folded = outcomes.iter().filter(|o| o.fold_classes > 0).count();
+        let fell_back = outcomes.iter().filter(|o| o.fold_fallback).count();
+        println!(
+            "fold: {folded} candidates folded, {fell_back} fell back to the unfolded graph"
+        );
+    }
     for (label, step_ms, tput, err) in &truth_rows {
         println!("truth {label}: {step_ms:.2} ms ({tput:.1} samples/s), HTAE error {err:.2}%");
     }
@@ -1187,6 +1329,51 @@ mod tests {
         let a = parse("search --model vgg19 --batch 16 --init not-a-spec --budget 4");
         assert!(run(&a).is_err());
         let a = parse("search --model vgg19 --batch 16 --resume /nonexistent/search.json");
+        assert!(run(&a).is_err());
+    }
+
+    /// `--fold` is accepted by all three strategy commands and runs end
+    /// to end (the fold/unfold *equivalence* is pinned by
+    /// `tests/differential_fold.rs` and the runtime unit tests; this is
+    /// the CLI surface smoke).
+    #[test]
+    fn fold_flag_runs_across_commands() {
+        let a = parse(
+            "simulate --model vgg19 --batch 16 --preset HC2 --nodes 2 --dp 16 --fold \
+             --compile-stats --json",
+        );
+        run(&a).unwrap();
+        let a = parse(
+            "sweep --model vgg19 --batch 16 --preset HC1 --nodes 1 --top 3 --threads 2 \
+             --fold --json",
+        );
+        run(&a).unwrap();
+        let a = parse(
+            "search --model vgg19 --batch 16 --preset HC1 --nodes 1 --budget 6 --chains 1 \
+             --seed 3 --fold --json",
+        );
+        run(&a).unwrap();
+    }
+
+    /// `--nics`/`--oversub` rebuild the preset fabric through the same
+    /// validation as a hand-written [`crate::cluster::ClusterSpec`].
+    #[test]
+    fn fabric_overrides_parse_and_validate() {
+        let a = parse(
+            "simulate --model vgg19 --batch 16 --preset HC4 --nodes 2 --dp 16 \
+             --nics 4 --oversub 2.0 --json",
+        );
+        run(&a).unwrap();
+        // More NICs than GPU ports on the node.
+        let a = parse("simulate --model vgg19 --batch 16 --preset HC1 --nodes 1 --nics 64");
+        assert!(run(&a).is_err());
+        // Oversubscription below 1.0 would mint bandwidth.
+        let a = parse("simulate --model vgg19 --batch 16 --preset HC1 --nodes 1 --oversub 0.5");
+        assert!(run(&a).is_err());
+        // Non-numeric values fail loudly.
+        let a = parse("simulate --model vgg19 --batch 16 --nics many");
+        assert!(run(&a).is_err());
+        let a = parse("simulate --model vgg19 --batch 16 --oversub wide");
         assert!(run(&a).is_err());
     }
 

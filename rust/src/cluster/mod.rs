@@ -15,9 +15,19 @@
 //! - **NVLink/NVSwitch** (HC2, HC3): each GPU has a high-bandwidth port
 //!   into a non-blocking switch fabric.
 //!
-//! Inter-node traffic goes through per-node NICs into a non-blocking
+//! Inter-node traffic goes through per-node NICs into the cluster
 //! fabric: the NICs are the shared bottleneck, as in the paper's
 //! bandwidth-sharing hierarchy (NIC → QPI → PCIe → NVLink).
+//!
+//! Nodes may carry **several NICs** (`ClusterSpec::nics_per_node`),
+//! wired **rail-optimized**: local GPU `l` of every node attaches to
+//! rail `l % k`, so the `j`-th member of each node's collective shard
+//! always exits through the same rail — the topology that lets 2-level
+//! hierarchical all-reduce drive all `k` NICs concurrently. The spine
+//! is non-blocking by default; an `oversubscription` ratio `> 1`
+//! inserts one shared trunk link per rail with
+//! `n_nodes · nic_bandwidth / ratio` capacity, modeling a tapered
+//! fat-tree core.
 
 pub mod presets;
 
@@ -113,8 +123,12 @@ pub struct Cluster {
     uplink: Vec<Vec<LinkId>>,
     /// Per-node QPI link (PCIe tree only).
     qpi: Vec<Option<LinkId>>,
-    /// Per-node NIC link (absent for single-node clusters).
-    nic: Vec<Option<LinkId>>,
+    /// Per-node rail NIC links (empty for single-node clusters).
+    nics: Vec<Vec<LinkId>>,
+    /// NICs (rails) per node.
+    nics_per_node: usize,
+    /// Per-rail spine trunk links (only when oversubscribed).
+    trunk: Vec<LinkId>,
 }
 
 /// Parameters for building a cluster by hand (presets call this).
@@ -143,6 +157,13 @@ pub struct ClusterSpec {
     pub nic_bandwidth: f64,
     /// NIC latency, ps.
     pub nic_latency: Ps,
+    /// NICs (rails) per node; must divide `gpus_per_node`. GPUs attach
+    /// rail-optimized: local GPU `l` exits through rail `l % k`.
+    pub nics_per_node: usize,
+    /// Fat-tree core oversubscription ratio (`≥ 1.0`); `1.0` keeps the
+    /// spine non-blocking, larger values insert per-rail trunk links
+    /// with `n_nodes · nic_bandwidth / ratio` capacity.
+    pub oversubscription: f64,
 }
 
 impl Cluster {
@@ -152,6 +173,32 @@ impl Cluster {
             return Err(crate::Error::InvalidCluster(
                 "need at least one node and one GPU per node".into(),
             ));
+        }
+        // NIC/port consistency. Before this check, a spec asking for
+        // more rails than ports (or a non-dividing count) would have
+        // silently collapsed every flow onto rail 0.
+        if spec.nics_per_node == 0 {
+            return Err(crate::Error::Config(
+                "nics_per_node must be at least 1".into(),
+            ));
+        }
+        if spec.nics_per_node > spec.gpus_per_node {
+            return Err(crate::Error::Config(format!(
+                "nics_per_node {} exceeds gpus_per_node {}: each rail needs a GPU port",
+                spec.nics_per_node, spec.gpus_per_node
+            )));
+        }
+        if spec.gpus_per_node % spec.nics_per_node != 0 {
+            return Err(crate::Error::Config(format!(
+                "gpus_per_node {} not divisible by nics_per_node {}: rail mapping would be uneven",
+                spec.gpus_per_node, spec.nics_per_node
+            )));
+        }
+        if !(spec.oversubscription >= 1.0) {
+            return Err(crate::Error::Config(format!(
+                "oversubscription must be >= 1.0, got {}",
+                spec.oversubscription
+            )));
         }
         let mut links = Vec::new();
         let mut alloc = |kind: LinkKind, bw: f64, lat: Ps| -> LinkId {
@@ -197,15 +244,25 @@ impl Cluster {
                 }
             }
         }
-        let nic: Vec<Option<LinkId>> = (0..spec.n_nodes)
+        let nics: Vec<Vec<LinkId>> = (0..spec.n_nodes)
             .map(|_| {
                 if spec.n_nodes > 1 {
-                    Some(alloc(LinkKind::Nic, spec.nic_bandwidth, spec.nic_latency))
+                    (0..spec.nics_per_node)
+                        .map(|_| alloc(LinkKind::Nic, spec.nic_bandwidth, spec.nic_latency))
+                        .collect()
                 } else {
-                    None
+                    Vec::new()
                 }
             })
             .collect();
+        let trunk: Vec<LinkId> = if spec.n_nodes > 1 && spec.oversubscription > 1.0 {
+            let bw = spec.n_nodes as f64 * spec.nic_bandwidth / spec.oversubscription;
+            (0..spec.nics_per_node)
+                .map(|_| alloc(LinkKind::Nic, bw, spec.nic_latency))
+                .collect()
+        } else {
+            Vec::new()
+        };
         Ok(Cluster {
             name: spec.name.clone(),
             n_nodes: spec.n_nodes,
@@ -216,7 +273,9 @@ impl Cluster {
             port,
             uplink,
             qpi,
-            nic,
+            nics,
+            nics_per_node: spec.nics_per_node,
+            trunk,
         })
     }
 
@@ -246,6 +305,16 @@ impl Cluster {
         self.port[d]
     }
 
+    /// Rail (NIC index within its node) device `d` exits through.
+    pub fn rail_of(&self, d: DeviceId) -> usize {
+        (d % self.gpus_per_node) % self.nics_per_node
+    }
+
+    /// The rail NIC links of one node (empty for single-node clusters).
+    pub fn node_nics(&self, node: usize) -> &[LinkId] {
+        &self.nics[node]
+    }
+
     /// The ordered link path from device `a` to device `b`. Empty iff
     /// `a == b`. Paths are symmetric.
     pub fn path(&self, a: DeviceId, b: DeviceId) -> Vec<LinkId> {
@@ -269,8 +338,18 @@ impl Cluster {
             if let IntraFabric::PcieTree { .. } = self.fabric {
                 p.push(self.uplink[na][self.switch_of(a)]);
             }
-            p.push(self.nic[na].expect("multi-node cluster has NICs"));
-            p.push(self.nic[nb].expect("multi-node cluster has NICs"));
+            let (ra, rb) = (self.rail_of(a), self.rail_of(b));
+            p.push(self.nics[na][ra]);
+            if !self.trunk.is_empty() {
+                // Oversubscribed core: the flow crosses the source
+                // rail's trunk (and the destination rail's, when
+                // different — same rail means one spine hop).
+                p.push(self.trunk[ra]);
+                if rb != ra {
+                    p.push(self.trunk[rb]);
+                }
+            }
+            p.push(self.nics[nb][rb]);
             if let IntraFabric::PcieTree { .. } = self.fabric {
                 p.push(self.uplink[nb][self.switch_of(b)]);
             }
@@ -471,6 +550,79 @@ mod tests {
         let mut spec = presets::spec(Preset::HC1, 1);
         spec.n_nodes = 0;
         assert!(Cluster::from_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn multi_nic_rails_route_by_local_index() {
+        let c = Cluster::preset(Preset::HC4, 4);
+        // Both endpoints on rail 0: four links, one NIC per side.
+        let p = c.path(0, 8);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p[1], c.node_nics(0)[0]);
+        assert_eq!(p[2], c.node_nics(1)[0]);
+        // Local index 1 exits through rail 1.
+        assert_eq!(c.rail_of(9), 1);
+        assert_eq!(c.path(1, 9)[1], c.node_nics(0)[1]);
+        // Same-node traffic never touches a NIC.
+        assert!(c
+            .path(0, 1)
+            .iter()
+            .all(|&l| c.links[l].kind == LinkKind::NvLink));
+    }
+
+    #[test]
+    fn distinct_rails_use_disjoint_links() {
+        let c = Cluster::preset(Preset::HC4, 2);
+        let a: std::collections::HashSet<LinkId> = c.path(0, 8).into_iter().collect();
+        let b: std::collections::HashSet<LinkId> = c.path(1, 9).into_iter().collect();
+        assert!(a.is_disjoint(&b), "rail 0 and rail 1 flows share a link");
+    }
+
+    #[test]
+    fn two_rank_duplex_on_multi_nic_counts_wrap_once() {
+        // The 2-rank degenerate ring that bit PR 3, now on rails.
+        let c = Cluster::preset(Preset::HC4, 2);
+        assert_eq!(c.ring_bus_bandwidth(&[0, 8]), 12e9);
+        assert_eq!(c.ring_bus_bandwidth(&[0, 1]), 150e9);
+    }
+
+    #[test]
+    fn oversubscribed_trunk_caps_cross_node_bandwidth() {
+        let mut s = presets::spec(Preset::HC4, 4);
+        s.oversubscription = 8.0;
+        let c = Cluster::from_spec(&s).unwrap();
+        // Trunk capacity: 4 nodes × 12 GB/s ÷ 8 = 6 GB/s, the new
+        // bottleneck below the 12 GB/s NICs.
+        assert_eq!(c.pair_bandwidth(0, 8), 6e9);
+        // Same rail: one trunk hop; different rails: two.
+        assert_eq!(c.path(0, 8).len(), 5);
+        assert_eq!(c.path(0, 9).len(), 6);
+        // Intra-node traffic is unaffected.
+        assert_eq!(c.pair_bandwidth(0, 1), 150e9);
+    }
+
+    #[test]
+    fn single_node_multi_nic_degenerates_to_intra_fabric() {
+        let c = Cluster::from_spec(&presets::spec(Preset::HC4, 1)).unwrap();
+        assert!(c.node_nics(0).is_empty());
+        assert_eq!(c.path(0, 5).len(), 2);
+        assert_eq!(c.pair_bandwidth(0, 5), 150e9);
+    }
+
+    #[test]
+    fn spec_rejects_inconsistent_nic_counts() {
+        // Pre-fix, these specs built "successfully" with every flow
+        // silently collapsed onto the node's first NIC.
+        let cases: Vec<(usize, f64)> = vec![(0, 1.0), (3, 1.0), (16, 1.0), (1, 0.5)];
+        for (k, os) in cases {
+            let mut s = presets::spec(Preset::HC2, 2);
+            s.nics_per_node = k;
+            s.oversubscription = os;
+            match Cluster::from_spec(&s) {
+                Err(crate::Error::Config(_)) => {}
+                other => panic!("k={k} os={os}: expected Config error, got {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -1,11 +1,17 @@
 //! The paper's three hardware configurations (Table III) as cluster
 //! presets, plus the device parameter tables behind them.
 //!
-//! | Config | Nodes | GPUs/node | Intra-node | Inter-node |
-//! |--------|-------|-----------|------------|------------|
-//! | HC1    | 1     | 8×TitanXp | PCIe       | N/A        |
-//! | HC2    | ≤4    | 8×V100    | NVLink     | 100 Gbps   |
-//! | HC3    | ≤2    | 8×A100    | NVLink     | 200 Gbps   |
+//! | Config | Nodes | GPUs/node | Intra-node | Inter-node          |
+//! |--------|-------|-----------|------------|---------------------|
+//! | HC1    | 1     | 8×TitanXp | PCIe       | N/A                 |
+//! | HC2    | ≤4    | 8×V100    | NVLink     | 100 Gbps            |
+//! | HC3    | ≤2    | 8×A100    | NVLink     | 200 Gbps            |
+//! | HC4    | ≤512  | 8×V100    | NVLink     | 8×100 Gbps (rails)  |
+//!
+//! HC4 extrapolates HC2 to datacenter scale: the same V100 nodes, but
+//! with one 100 Gbps NIC *per GPU* wired rail-optimized into a
+//! non-blocking fat tree — the symmetry-folding scale target (1k–10k
+//! devices). It is not a paper configuration.
 //!
 //! Absolute numbers are public datasheet values; the reproduction's
 //! claims are about *relative* prediction error against the ground-truth
@@ -23,6 +29,10 @@ pub enum Preset {
     HC2,
     /// Up to 2 nodes × 8 A100 with NVLink and 200 Gbps interconnect.
     HC3,
+    /// Up to 512 nodes × 8 V100 with NVLink and 8 rail-optimized
+    /// 100 Gbps NICs per node (scale-extrapolation config, not from
+    /// the paper).
+    HC4,
 }
 
 impl Preset {
@@ -32,6 +42,7 @@ impl Preset {
             "HC1" => Some(Preset::HC1),
             "HC2" => Some(Preset::HC2),
             "HC3" => Some(Preset::HC3),
+            "HC4" => Some(Preset::HC4),
             _ => None,
         }
     }
@@ -42,21 +53,24 @@ impl Preset {
             Preset::HC1 => "HC1",
             Preset::HC2 => "HC2",
             Preset::HC3 => "HC3",
+            Preset::HC4 => "HC4",
         }
     }
 
-    /// Maximum node count evaluated in the paper.
+    /// Maximum node count evaluated in the paper (HC4: the scale
+    /// target of the symmetry-folding experiments).
     pub fn max_nodes(self) -> usize {
         match self {
             Preset::HC1 => 1,
             Preset::HC2 => 4,
             Preset::HC3 => 2,
+            Preset::HC4 => 512,
         }
     }
 
     /// All presets.
     pub fn all() -> &'static [Preset] {
-        &[Preset::HC1, Preset::HC2, Preset::HC3]
+        &[Preset::HC1, Preset::HC2, Preset::HC3, Preset::HC4]
     }
 }
 
@@ -116,6 +130,8 @@ pub fn spec(p: Preset, n_nodes: usize) -> ClusterSpec {
             qpi_bandwidth: 19.2 * GB,
             nic_bandwidth: 0.0,
             nic_latency: 0,
+            nics_per_node: 1,
+            oversubscription: 1.0,
         },
         Preset::HC2 => ClusterSpec {
             name: "HC2".into(),
@@ -131,6 +147,8 @@ pub fn spec(p: Preset, n_nodes: usize) -> ClusterSpec {
             // 100 Gbps ≈ 12.0 GB/s effective.
             nic_bandwidth: 12.0 * GB,
             nic_latency: 8 * US,
+            nics_per_node: 1,
+            oversubscription: 1.0,
         },
         Preset::HC3 => ClusterSpec {
             name: "HC3".into(),
@@ -146,6 +164,24 @@ pub fn spec(p: Preset, n_nodes: usize) -> ClusterSpec {
             // 200 Gbps ≈ 24.0 GB/s effective.
             nic_bandwidth: 24.0 * GB,
             nic_latency: 8 * US,
+            nics_per_node: 1,
+            oversubscription: 1.0,
+        },
+        Preset::HC4 => ClusterSpec {
+            name: "HC4".into(),
+            n_nodes,
+            gpus_per_node: 8,
+            device: v100(),
+            pcie_tree: None,
+            port_bandwidth: 150.0 * GB,
+            port_latency: 3 * US,
+            uplink_bandwidth: 0.0,
+            qpi_bandwidth: 0.0,
+            // One 100 Gbps NIC per GPU, rail-optimized.
+            nic_bandwidth: 12.0 * GB,
+            nic_latency: 8 * US,
+            nics_per_node: 8,
+            oversubscription: 1.0,
         },
     }
 }

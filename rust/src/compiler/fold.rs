@@ -1,0 +1,708 @@
+//! Symmetry folding — the compiler's optional final pass (ROADMAP
+//! item 2: simulate 1k–10k-device clusters).
+//!
+//! A [`FoldPlan`](crate::strategy::FoldPlan) partitions the device set
+//! into ordered equivalence classes whose replica permutations `σ_j`
+//! *should* map slice 0's task stream onto slice `j`'s. This pass takes
+//! the fully instantiated builder-form graph and **verifies** that
+//! symmetry task by task, edge by edge, link by link — and only then
+//! deletes every non-representative slice, attaching a per-task
+//! multiplicity table so the executor can scale contention counters and
+//! conserved totals back up. Any check that fails returns `None` and
+//! the caller keeps the unfolded graph: folding is a proven rewrite or
+//! it is nothing.
+//!
+//! What must hold for the folded discrete-event simulation to bit-match
+//! the unfolded one (each bullet is one verification stage below):
+//!
+//! 1. **Partition** — every task is either a *slice task* (all devices
+//!    in replica slice `j`) or a *cross task* (device group is a union
+//!    of whole classes, e.g. a gradient all-reduce spanning replicas).
+//!    Computation tasks are always slice tasks (one device).
+//! 2. **Payload symmetry** — pairing the `k`-th slice-`j` task with the
+//!    `k`-th slice-`0` task (both in id order) defines `φ_j`; the
+//!    member's payload must be the exact `σ_j`-image of the
+//!    representative's (bit-equal flops/bytes, mapped devices, mapped
+//!    alloc/free events).
+//! 3. **Dependency symmetry** — `φ_j` must be a graph isomorphism
+//!    between slice 0 ∪ cross and slice `j` ∪ cross (cross tasks map to
+//!    themselves), so deleting slice `j` never removes an edge whose
+//!    `φ`-preimage is absent.
+//! 4. **Arbitration order** — the executor starts ready communications
+//!    in id order, so `φ_j` must preserve id order (automatic: both
+//!    sides are sorted) and no cross communication id may fall strictly
+//!    inside a slice orbit's id span (it would start between two
+//!    symmetric members in one run and outside them in the other).
+//! 5. **Cost symmetry** — a member communication must cost exactly what
+//!    its representative costs under every lowering the executor can
+//!    pick: identical per-phase (α, β) for the planned algorithms and
+//!    identical pair/ring bandwidths + latencies for the monolithic
+//!    estimator path.
+//! 6. **Link-contention symmetry** — fair-sharing counts concurrent
+//!    communications per physical link, so each link may carry slice
+//!    communications of at most **one** slice, and the link-incidence
+//!    profile (which cross comms + which slice comms share each link)
+//!    of a member must mirror its representative's. Under these two
+//!    conditions the sharing factor the folded run computes for a kept
+//!    communication equals the unfolded run's.
+//!
+//! Memory: cross-task alloc/free events must be `σ`-symmetric per
+//! class; the rewrite then drops their non-representative-device events
+//! so member devices carry no timeline at all (their peaks are
+//! reconstructed as the representative's at report time — exact, since
+//! the unfolded timelines are `σ`-symmetric).
+
+use std::collections::HashMap;
+
+use crate::cluster::{Cluster, DeviceId, LinkId};
+use crate::collective::{self, CollAlgo};
+use crate::strategy::FoldPlan;
+
+use super::transform::CollectiveKind;
+use super::{CommTask, Task, TaskId, TaskKind};
+
+/// Folding metadata carried by a folded
+/// [`ExecGraph`](super::ExecGraph): how many logical tasks/devices the
+/// materialized graph stands for, and how to expand per-device results.
+#[derive(Debug, Clone)]
+pub struct FoldInfo {
+    /// Equivalence classes the plan folded.
+    pub n_classes: usize,
+    /// Devices whose task streams were deleted (`(m − 1)` per class).
+    pub devices_folded: usize,
+    /// Task count of the unfolded graph this one stands for.
+    pub logical_tasks: usize,
+    /// Representative (slice-0) device of each device's class — report
+    /// expansion maps every member's peaks to its representative's.
+    pub rep_of: Vec<DeviceId>,
+    /// Multiplicity per materialized task: `m` for slice-0 tasks, 1 for
+    /// cross tasks.
+    pub mult: Vec<u64>,
+}
+
+/// Task classification under a fold plan.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Cls {
+    /// All devices in replica slice `j`.
+    Slice(usize),
+    /// Device group is a union of whole classes.
+    Cross,
+}
+
+/// Verify the instantiated graph is `σ`-symmetric under `plan` and
+/// rewrite it to one representative slice. Returns the folded
+/// `(tasks, succs, preds, info)` or `None` when any symmetry check
+/// fails (the caller keeps the unfolded graph).
+pub(super) fn fold_tasks(
+    tasks: &[Task],
+    succs: &[Vec<TaskId>],
+    plan: &FoldPlan,
+    cluster: &Cluster,
+    static_mem: &[u64],
+) -> Option<(Vec<Task>, Vec<Vec<TaskId>>, Vec<u32>, FoldInfo)> {
+    let n = tasks.len();
+    let m = plan.m;
+
+    // Static memory must be class-symmetric (report expansion copies
+    // the representative's peaks, which include the static footprint).
+    for class in &plan.classes {
+        for &d in &class[1..] {
+            if static_mem.get(d) != static_mem.get(class[0]) {
+                return None;
+            }
+        }
+    }
+
+    // ---- 1. Partition into slice / cross tasks. ------------------------
+    let mut cls: Vec<Cls> = Vec::with_capacity(n);
+    for t in tasks {
+        cls.push(classify(t, plan)?);
+    }
+    let mut slices: Vec<Vec<TaskId>> = vec![Vec::new(); m];
+    let mut cross: Vec<TaskId> = Vec::new();
+    for (id, &c) in cls.iter().enumerate() {
+        match c {
+            Cls::Slice(j) => slices[j].push(id),
+            Cls::Cross => cross.push(id),
+        }
+    }
+    let orbit_len = slices[0].len();
+    if orbit_len == 0 || slices.iter().any(|s| s.len() != orbit_len) {
+        return None;
+    }
+    // Orbit position of every slice task (φ_j maps k-th to k-th).
+    let mut pos = vec![usize::MAX; n];
+    for s in &slices {
+        for (k, &id) in s.iter().enumerate() {
+            pos[id] = k;
+        }
+    }
+
+    // ---- 2. Payload symmetry: member == σ_j(representative). -----------
+    for j in 1..m {
+        for k in 0..orbit_len {
+            check_task_pair(&tasks[slices[0][k]], &tasks[slices[j][k]], plan, j)?;
+        }
+    }
+
+    // ---- 3. Dependency symmetry: φ_j is an isomorphism. ----------------
+    let phi = |j: usize, u: TaskId| slices[j][pos[u]];
+    for j in 1..m {
+        for k in 0..orbit_len {
+            let u = slices[0][k];
+            let mut mapped: Vec<TaskId> = Vec::with_capacity(succs[u].len());
+            for &v in &succs[u] {
+                match cls[v] {
+                    Cls::Slice(0) => mapped.push(phi(j, v)),
+                    Cls::Cross => mapped.push(v),
+                    Cls::Slice(_) => return None, // edge crosses slices
+                }
+            }
+            mapped.sort_unstable();
+            let mut actual = succs[slices[j][k]].clone();
+            actual.sort_unstable();
+            if mapped != actual {
+                return None;
+            }
+        }
+    }
+    // Cross-task successors: the slice-j part must be φ_j of the
+    // slice-0 part (so dropping it never orphans a dependency), and no
+    // successor may sit in a slice without a slice-0 counterpart edge.
+    for &u in &cross {
+        let mut by_slice: Vec<Vec<TaskId>> = vec![Vec::new(); m];
+        for &v in &succs[u] {
+            if let Cls::Slice(j) = cls[v] {
+                by_slice[j].push(v);
+            }
+        }
+        let mapped0: Vec<Vec<TaskId>> = (0..m)
+            .map(|j| {
+                let mut v: Vec<TaskId> = by_slice[0].iter().map(|&w| phi(j, w)).collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        for j in 1..m {
+            let mut actual = by_slice[j].clone();
+            actual.sort_unstable();
+            if actual != mapped0[j] {
+                return None;
+            }
+        }
+    }
+
+    // ---- 4. Arbitration order: cross comms outside orbit id spans. -----
+    // `cross` is ascending by construction; all cross tasks are comms
+    // (classify rejects multi-device comp payloads).
+    for k in 0..orbit_len {
+        if !tasks[slices[0][k]].is_comm() {
+            continue;
+        }
+        let lo = (0..m).map(|j| slices[j][k]).min().unwrap();
+        let hi = (0..m).map(|j| slices[j][k]).max().unwrap();
+        let at = cross.partition_point(|&c| c <= lo);
+        if at < cross.len() && cross[at] < hi {
+            return None;
+        }
+    }
+
+    // ---- 5. Cost symmetry across every lowering path. ------------------
+    let mut cost_checked: std::collections::HashSet<(collective::PlanKey, collective::PlanKey)> =
+        Default::default();
+    for k in 0..orbit_len {
+        let c0 = match &tasks[slices[0][k]].kind {
+            TaskKind::Comm(c) => c,
+            TaskKind::Comp(_) => continue,
+        };
+        for j in 1..m {
+            let cj = match &tasks[slices[j][k]].kind {
+                TaskKind::Comm(c) => c,
+                TaskKind::Comp(_) => return None,
+            };
+            if !cost_checked.insert((collective::plan_key(c0), collective::plan_key(cj))) {
+                continue;
+            }
+            check_comm_costs(cluster, c0, cj)?;
+        }
+    }
+
+    // ---- 6. Link-contention symmetry. ----------------------------------
+    check_link_incidence(tasks, &cls, &slices, &pos, cluster)?;
+
+    // ---- Rewrite: keep slice 0 + cross, compact ids. -------------------
+    let keep: Vec<TaskId> = (0..n)
+        .filter(|&id| matches!(cls[id], Cls::Slice(0) | Cls::Cross))
+        .collect();
+    let mut new_id = vec![usize::MAX; n];
+    for (ni, &id) in keep.iter().enumerate() {
+        new_id[id] = ni;
+    }
+    let mut out_tasks: Vec<Task> = Vec::with_capacity(keep.len());
+    let mut out_succs: Vec<Vec<TaskId>> = Vec::with_capacity(keep.len());
+    let mut mult: Vec<u64> = Vec::with_capacity(keep.len());
+    for &id in &keep {
+        let mut t = tasks[id].clone();
+        if cls[id] == Cls::Cross {
+            // Member devices carry no folded timeline: their peaks are
+            // reconstructed from the representative's at report time.
+            t.allocs.retain(|&(d, _)| plan.member_index[d] == 0);
+            t.frees.retain(|&(d, _)| plan.member_index[d] == 0);
+            mult.push(1);
+        } else {
+            mult.push(m as u64);
+        }
+        out_tasks.push(t);
+        out_succs.push(
+            succs[id]
+                .iter()
+                .filter(|&&v| new_id[v] != usize::MAX)
+                .map(|&v| new_id[v])
+                .collect(),
+        );
+    }
+    let mut preds = vec![0u32; keep.len()];
+    for ss in &out_succs {
+        for &v in ss {
+            preds[v] += 1;
+        }
+    }
+    let info = FoldInfo {
+        n_classes: plan.classes.len(),
+        devices_folded: plan.devices_folded(),
+        logical_tasks: n,
+        rep_of: plan.rep_of.clone(),
+        mult,
+    };
+    Some((out_tasks, out_succs, preds, info))
+}
+
+/// Classify one task as slice or cross (see [`Cls`]).
+fn classify(t: &Task, plan: &FoldPlan) -> Option<Cls> {
+    let devs = t.devices();
+    if devs.is_empty() {
+        return None;
+    }
+    for &d in devs {
+        if d >= plan.member_index.len() {
+            return None;
+        }
+    }
+    let j0 = plan.member_index[devs[0]];
+    if devs.iter().all(|&d| plan.member_index[d] == j0) {
+        return Some(Cls::Slice(j0));
+    }
+    // Cross: a communication whose group is a union of whole classes.
+    if !t.is_comm() {
+        return None;
+    }
+    let mut set: Vec<DeviceId> = devs.to_vec();
+    set.sort_unstable();
+    set.dedup();
+    if set.len() != devs.len() {
+        return None; // duplicate group members: not a permutation image
+    }
+    for &d in devs {
+        if !plan.classes[plan.class_of[d]]
+            .iter()
+            .all(|e| set.binary_search(e).is_ok())
+        {
+            return None;
+        }
+    }
+    Some(Cls::Cross)
+}
+
+/// `σ_j` image of a slice-0 device, or `None` off slice 0.
+fn sig(plan: &FoldPlan, j: usize, d: DeviceId) -> Option<DeviceId> {
+    if plan.member_index[d] != 0 {
+        return None;
+    }
+    Some(plan.classes[plan.class_of[d]][j])
+}
+
+/// Verify member task `v` is the exact `σ_j`-image of representative
+/// `u`: identical metadata, bit-equal payload with mapped devices,
+/// mapped alloc/free multisets.
+fn check_task_pair(u: &Task, v: &Task, plan: &FoldPlan, j: usize) -> Option<()> {
+    if u.layer != v.layer || u.stage != v.stage || u.micro != v.micro || u.phase != v.phase {
+        return None;
+    }
+    match (&u.kind, &v.kind) {
+        (TaskKind::Comp(a), TaskKind::Comp(b)) => {
+            if b.device != sig(plan, j, a.device)?
+                || a.op != b.op
+                || a.flops.to_bits() != b.flops.to_bits()
+                || a.bytes_read.to_bits() != b.bytes_read.to_bits()
+                || a.bytes_written.to_bits() != b.bytes_written.to_bits()
+            {
+                return None;
+            }
+        }
+        (TaskKind::Comm(a), TaskKind::Comm(b)) => {
+            if a.kind != b.kind
+                || a.class != b.class
+                || a.bytes != b.bytes
+                || a.group.len() != b.group.len()
+            {
+                return None;
+            }
+            for (&x, &y) in a.group.iter().zip(&b.group) {
+                if y != sig(plan, j, x)? {
+                    return None;
+                }
+            }
+        }
+        _ => return None,
+    }
+    check_event_map(&u.allocs, &v.allocs, plan, j)?;
+    check_event_map(&u.frees, &v.frees, plan, j)
+}
+
+/// Verify `v_events` is the `σ_j`-mapped multiset of `u_events`.
+fn check_event_map(
+    u_events: &[(DeviceId, u64)],
+    v_events: &[(DeviceId, u64)],
+    plan: &FoldPlan,
+    j: usize,
+) -> Option<()> {
+    if u_events.len() != v_events.len() {
+        return None;
+    }
+    let mut mapped: Vec<(DeviceId, u64)> = Vec::with_capacity(u_events.len());
+    for &(d, b) in u_events {
+        mapped.push((sig(plan, j, d)?, b));
+    }
+    mapped.sort_unstable();
+    let mut actual = v_events.to_vec();
+    actual.sort_unstable();
+    if mapped == actual {
+        Some(())
+    } else {
+        None
+    }
+}
+
+/// Verify a member communication costs exactly what its representative
+/// costs under every lowering path the executor can take: per-phase
+/// (α, β) equality for the planned algorithms, and pair/ring bandwidth
+/// + latency equality for the monolithic estimator split.
+fn check_comm_costs(cluster: &Cluster, c0: &CommTask, cj: &CommTask) -> Option<()> {
+    for algo in [
+        CollAlgo::Ring,
+        CollAlgo::Tree,
+        CollAlgo::Hierarchical,
+        CollAlgo::Auto,
+    ] {
+        let p0 = collective::lower(cluster, algo, c0).phase_costs(cluster);
+        let pj = collective::lower(cluster, algo, cj).phase_costs(cluster);
+        if p0 != pj {
+            return None;
+        }
+    }
+    match c0.kind {
+        CollectiveKind::P2p => {
+            if c0.group.len() != 2 || cj.group.len() != 2 {
+                return None;
+            }
+            let (a0, b0) = (c0.group[0], c0.group[1]);
+            let (aj, bj) = (cj.group[0], cj.group[1]);
+            if cluster.pair_bandwidth(a0, b0).to_bits() != cluster.pair_bandwidth(aj, bj).to_bits()
+                || cluster.pair_latency(a0, b0) != cluster.pair_latency(aj, bj)
+            {
+                return None;
+            }
+        }
+        _ => {
+            if cluster.ring_bus_bandwidth(&c0.group).to_bits()
+                != cluster.ring_bus_bandwidth(&cj.group).to_bits()
+                || cluster.ring_latency(&c0.group) != cluster.ring_latency(&cj.group)
+            {
+                return None;
+            }
+        }
+    }
+    Some(())
+}
+
+/// The physical links a communication stresses — mirrors the behavior
+/// detector's enumeration ([`crate::executor::behavior`]): the pair
+/// path for p2p, root-star paths for broadcast, ring-consecutive pair
+/// paths (wrap included) for collectives.
+fn comm_links(cluster: &Cluster, c: &CommTask) -> Vec<LinkId> {
+    let mut links: Vec<LinkId> = Vec::new();
+    match c.kind {
+        CollectiveKind::P2p => links.extend(cluster.path(c.group[0], c.group[1])),
+        CollectiveKind::Broadcast => {
+            let root = c.group[0];
+            for &d in &c.group[1..] {
+                links.extend(cluster.path(root, d));
+            }
+        }
+        _ => {
+            let ring = cluster.ring_order(&c.group);
+            for i in 0..ring.len() {
+                links.extend(cluster.path(ring[i], ring[(i + 1) % ring.len()]));
+            }
+        }
+    }
+    links.sort_unstable();
+    links.dedup();
+    links
+}
+
+/// Per-link co-user registry used by the contention-symmetry check.
+#[derive(Default, Clone)]
+struct LinkUsers {
+    /// Cross communications using this link (ascending task ids).
+    cross: Vec<TaskId>,
+    /// The single slice whose communications use this link.
+    slice_owner: Option<usize>,
+    /// Slice communications using this link, canonicalized to their
+    /// slice-0 counterpart ids (ascending).
+    canon: Vec<TaskId>,
+}
+
+/// Verify fair-share contention is `σ`-symmetric: every link carries
+/// slice communications of at most one slice, each member
+/// communication's link-incidence profile mirrors its
+/// representative's, and every cross communication sees the same
+/// co-user profile from every slice it touches. Together these
+/// guarantee the sharing factor of every *kept* communication is
+/// identical in the folded and unfolded runs.
+fn check_link_incidence(
+    tasks: &[Task],
+    cls: &[Cls],
+    slices: &[Vec<TaskId>],
+    pos: &[usize],
+    cluster: &Cluster,
+) -> Option<()> {
+    let m = slices.len();
+    // Links per distinct (kind, group) signature — micro-batching
+    // repeats identical communications.
+    let mut links_cache: HashMap<(CollectiveKind, Vec<DeviceId>), Vec<LinkId>> = HashMap::new();
+    let mut links_of = |c: &CommTask| -> Vec<LinkId> {
+        links_cache
+            .entry((c.kind, c.group.clone()))
+            .or_insert_with(|| comm_links(cluster, c))
+            .clone()
+    };
+    let comm_ids: Vec<TaskId> = (0..tasks.len()).filter(|&i| tasks[i].is_comm()).collect();
+    let mut users: HashMap<LinkId, LinkUsers> = HashMap::new();
+    for &id in &comm_ids {
+        let c = match &tasks[id].kind {
+            TaskKind::Comm(c) => c,
+            TaskKind::Comp(_) => unreachable!(),
+        };
+        for l in links_of(c) {
+            let u = users.entry(l).or_default();
+            match cls[id] {
+                Cls::Cross => u.cross.push(id),
+                Cls::Slice(j) => {
+                    match u.slice_owner {
+                        None => u.slice_owner = Some(j),
+                        Some(o) if o != j => return None, // two slices share a link
+                        Some(_) => {}
+                    }
+                    u.canon.push(slices[0][pos[id]]);
+                }
+            }
+        }
+    }
+    // Link-incidence profile of one communication: the sorted multiset
+    // of (cross co-users, canonical slice co-users) over its links.
+    let mut profile = |c: &CommTask| -> Vec<(Vec<TaskId>, Vec<TaskId>)> {
+        let mut p: Vec<(Vec<TaskId>, Vec<TaskId>)> = links_of(c)
+            .iter()
+            .map(|l| {
+                let u = &users[l];
+                (u.cross.clone(), u.canon.clone())
+            })
+            .collect();
+        p.sort_unstable();
+        p
+    };
+    for &id in &comm_ids {
+        let c = match &tasks[id].kind {
+            TaskKind::Comm(c) => c,
+            TaskKind::Comp(_) => unreachable!(),
+        };
+        match cls[id] {
+            Cls::Slice(j) if j > 0 => {
+                let rep = slices[0][pos[id]];
+                let rep_c = match &tasks[rep].kind {
+                    TaskKind::Comm(c) => c,
+                    TaskKind::Comp(_) => return None,
+                };
+                if profile(c) != profile(rep_c) {
+                    return None;
+                }
+            }
+            Cls::Slice(_) => {}
+            Cls::Cross => {
+                // Bucket this comm's links by owning slice; every slice
+                // must present the same co-user profile as slice 0.
+                let mut buckets: Vec<Vec<(Vec<TaskId>, Vec<TaskId>)>> = vec![Vec::new(); m];
+                for l in links_of(c) {
+                    let u = &users[&l];
+                    if let Some(j) = u.slice_owner {
+                        buckets[j].push((u.cross.clone(), u.canon.clone()));
+                    }
+                }
+                for b in &mut buckets {
+                    b.sort_unstable();
+                }
+                for j in 1..m {
+                    if buckets[j] != buckets[0] {
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+    Some(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{compile, compile_with_opts, CollectiveKind, Phase, TaskRef};
+    use crate::cluster::{Cluster, Preset};
+    use crate::graph::{DType, Graph, GraphBuilder};
+    use crate::strategy::{build_strategy, StrategySpec, StrategyTree};
+
+    fn mlp(batch: usize) -> Graph {
+        let mut b = GraphBuilder::new("mlp", batch);
+        let x = b.input("x", &[batch, 64], DType::F32);
+        let h = b.scoped("blk0", |b| {
+            let h = b.linear("fc1", x, 64, 128);
+            b.relu("act", h)
+        });
+        let h = b.scoped("blk1", |b| b.linear("fc2", h, 128, 64));
+        let _ = b.loss("loss", h);
+        b.finish()
+    }
+
+    #[test]
+    fn pure_dp_folds_to_one_replica_plus_sync() {
+        let g = mlp(16);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(8)).unwrap();
+        let c = Cluster::preset(Preset::HC2, 1);
+        let full = compile(&g, &tree, &c).unwrap();
+        let (eg, stats) = compile_with_opts(&g, &tree, &c, None, true).unwrap();
+        assert!(!stats.fold_fallback, "pure DP must fold");
+        assert_eq!(stats.fold_classes, 1);
+        assert_eq!(stats.fold_devices_folded, 7);
+        let info = eg.fold().expect("fold info attached");
+        assert_eq!(info.logical_tasks, full.n_tasks());
+        assert_eq!(eg.logical_tasks(), full.n_tasks());
+        assert!(eg.n_tasks() < full.n_tasks() / 4);
+        assert!(eg.is_dag());
+        // Conserved totals are multiplicity-weighted back to the
+        // unfolded values.
+        assert_eq!(eg.total_comm_bytes(), full.total_comm_bytes());
+        let rel = (eg.total_flops() - full.total_flops()).abs() / full.total_flops();
+        assert!(rel < 1e-12, "{} vs {}", eg.total_flops(), full.total_flops());
+        // Slice tasks carry multiplicity m, the gradient all-reduces
+        // (cross: they span all replicas) multiplicity 1.
+        for i in 0..eg.n_tasks() {
+            match eg.kind(i) {
+                TaskRef::Comm(cm) if cm.group.len() == 8 => assert_eq!(eg.task_mult(i), 1),
+                _ => assert_eq!(eg.task_mult(i), 8),
+            }
+        }
+        // Device space is NOT shrunk: groups still name real devices.
+        assert_eq!(eg.n_devices, full.n_devices);
+    }
+
+    #[test]
+    fn dp_pp_hybrid_folds_each_stage_lane() {
+        let g = mlp(16);
+        let tree = build_strategy(&g, StrategySpec::hybrid(4, 1, 2, 4)).unwrap();
+        let c = Cluster::preset(Preset::HC2, 1);
+        let full = compile(&g, &tree, &c).unwrap();
+        let (eg, stats) = compile_with_opts(&g, &tree, &c, None, true).unwrap();
+        assert!(!stats.fold_fallback, "dp×pp must fold");
+        assert_eq!(stats.fold_classes, 2, "one class per pipeline stage");
+        assert_eq!(stats.fold_devices_folded, 6);
+        assert!(eg.is_dag());
+        assert_eq!(eg.total_comm_bytes(), full.total_comm_bytes());
+        // The boundary p2ps of data-parallel lane 0 survive; the other
+        // 3 lanes' copies fold away.
+        let count_p2ps = |g: &super::super::ExecGraph| {
+            g.count(|t| matches!(t.kind, TaskRef::Comm(c) if c.kind == CollectiveKind::P2p))
+        };
+        assert!(count_p2ps(&full) > 0, "pp=2 must emit boundary p2ps");
+        assert_eq!(count_p2ps(&eg) * 4, count_p2ps(&full));
+    }
+
+    #[test]
+    fn mp_only_falls_back_unfolded() {
+        let g = mlp(16);
+        let tree = build_strategy(&g, StrategySpec::hybrid(1, 4, 1, 1)).unwrap();
+        let c = Cluster::preset(Preset::HC2, 1);
+        let full = compile(&g, &tree, &c).unwrap();
+        let (eg, stats) = compile_with_opts(&g, &tree, &c, None, true).unwrap();
+        assert!(stats.fold_fallback, "no DP degree: nothing to fold");
+        assert!(eg.fold().is_none());
+        assert_eq!(eg.n_tasks(), full.n_tasks());
+        assert_eq!(eg.logical_tasks(), full.n_tasks());
+    }
+
+    #[test]
+    fn fold_off_is_the_default_and_identical() {
+        let g = mlp(16);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(4)).unwrap();
+        let c = Cluster::preset(Preset::HC2, 1);
+        let (eg, stats) = compile_with_opts(&g, &tree, &c, None, false).unwrap();
+        assert!(eg.fold().is_none());
+        assert!(!stats.fold_fallback);
+        assert_eq!(stats.fold_classes, 0);
+        let plain = compile(&g, &tree, &c).unwrap();
+        assert_eq!(eg.n_tasks(), plain.n_tasks());
+        for i in 0..eg.n_tasks() {
+            assert_eq!(eg.succs(i), plain.succs(i));
+            assert_eq!(eg.task_mult(i), 1);
+        }
+    }
+
+    /// The folded graph keeps exactly the slice-0 tasks and the cross
+    /// (replica-spanning) communications; every kept task's devices are
+    /// either representatives or whole-class groups.
+    #[test]
+    fn folded_tasks_live_on_representative_devices() {
+        let g = mlp(16);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(8)).unwrap();
+        let c = Cluster::preset(Preset::HC2, 1);
+        let (eg, _) = compile_with_opts(&g, &tree, &c, None, true).unwrap();
+        let info = eg.fold().unwrap();
+        for i in 0..eg.n_tasks() {
+            if eg.task_mult(i) > 1 {
+                for &d in eg.devices(i) {
+                    assert_eq!(info.rep_of[d], d, "slice task off slice 0");
+                }
+            }
+        }
+        // Gradient sync still spans all 8 devices (it is simulated once,
+        // with real cross-replica contention).
+        let sync = (0..eg.n_tasks())
+            .find(|&i| matches!(eg.kind(i), TaskRef::Comm(c) if c.group.len() == 8))
+            .expect("cross gradient sync kept");
+        assert_eq!(eg.meta(sync).phase, Phase::Bwd);
+    }
+
+    /// Optimizer tasks fold too: one per representative device.
+    #[test]
+    fn optimizer_tasks_fold_per_class() {
+        let g = mlp(16);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(8)).unwrap();
+        let c = Cluster::preset(Preset::HC2, 1);
+        let full = compile(&g, &tree, &c).unwrap();
+        let (eg, _) = compile_with_opts(&g, &tree, &c, None, true).unwrap();
+        assert_eq!(full.count(|t| t.phase == Phase::Optim), 8);
+        assert_eq!(eg.count(|t| t.phase == Phase::Optim), 1);
+        let opt = (0..eg.n_tasks())
+            .find(|&i| eg.meta(i).phase == Phase::Optim)
+            .unwrap();
+        assert_eq!(eg.task_mult(opt), 8);
+    }
+}

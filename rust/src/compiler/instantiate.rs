@@ -33,12 +33,15 @@ use super::{
     TaskId, TaskKind,
 };
 
-/// Run passes 2–4 (see module docs). `stats` arrives with pass-1 fields
-/// filled; the remaining fields are filled here.
+/// Run passes 2–4 (see module docs), plus the optional pass 5 —
+/// symmetry folding — when `fold` is set. `stats` arrives with pass-1
+/// fields filled; the remaining fields are filled here.
 pub(super) fn instantiate(
     graph: &Graph,
     r: &ResolvedStrategy,
     tmpl: &ExecTemplate,
+    cluster: &crate::cluster::Cluster,
+    fold: bool,
     stats: &mut CompileStats,
 ) -> Result<ExecGraph> {
     // ---- Pass 2: weave. ------------------------------------------------
@@ -176,9 +179,40 @@ pub(super) fn instantiate(
     };
     stats.n_tasks = s.tasks.len();
     stats.n_deps = s.n_deps;
+    stats.logical_tasks = s.tasks.len();
     stats.instance_spans = std::mem::take(&mut s.spans);
-    let eg = ExecGraph::from_tasks(s.tasks, s.succs, s.preds, meta);
     stats.finalize_s = t2.elapsed().as_secs_f64();
+
+    // ---- Pass 5 (optional): symmetry folding. --------------------------
+    // Analyze device-equivalence classes over the devices the strategy
+    // actually uses, verify the instantiated graph is symmetric under
+    // the class permutations, and keep one representative slice. Any
+    // failed check keeps the unfolded graph (`fold_fallback`).
+    if fold {
+        let t3 = std::time::Instant::now();
+        let folded = crate::strategy::fold_plan(r, tmpl.n_devices).and_then(|plan| {
+            super::fold::fold_tasks(&s.tasks, &s.succs, &plan, cluster, &meta.static_mem)
+        });
+        match folded {
+            Some((tasks, succs, preds, info)) => {
+                stats.fold_classes = info.n_classes;
+                stats.fold_devices_folded = info.devices_folded;
+                stats.n_tasks = tasks.len();
+                stats.n_deps = succs.iter().map(|ss| ss.len()).sum();
+                // Spans index pre-fold task ids — meaningless now.
+                stats.instance_spans = Vec::new();
+                let mut eg = ExecGraph::from_tasks(tasks, succs, preds, meta);
+                eg.set_fold(info);
+                stats.fold_s = t3.elapsed().as_secs_f64();
+                return Ok(eg);
+            }
+            None => {
+                stats.fold_fallback = true;
+                stats.fold_s = t3.elapsed().as_secs_f64();
+            }
+        }
+    }
+    let eg = ExecGraph::from_tasks(s.tasks, s.succs, s.preds, meta);
     Ok(eg)
 }
 

@@ -40,12 +40,14 @@
 pub mod bound;
 mod common;
 mod emit;
+mod fold;
 mod instantiate;
 mod legacy;
 pub mod schedule;
 pub mod transform;
 
 pub use bound::htae_lower_bound_ms;
+pub use fold::FoldInfo;
 pub use schedule::{SchedulePlan, Slot, SlotPhase, Step};
 pub use transform::{transform, CollectiveKind, CommOp};
 
@@ -271,6 +273,7 @@ pub struct ExecGraph {
     succ_off: Vec<usize>,
     succ_dat: Vec<TaskId>,
     preds: Vec<u32>,
+    fold: Option<FoldInfo>,
     /// Pipeline stage count.
     pub n_stages: usize,
     /// Devices used (max id + 1).
@@ -348,6 +351,7 @@ impl ExecGraph {
             succ_off,
             succ_dat,
             preds,
+            fold: None,
             n_stages: meta.n_stages,
             n_devices: meta.n_devices,
             static_mem: meta.static_mem,
@@ -482,14 +486,62 @@ impl ExecGraph {
     ///   count).
     ///
     /// This is the conserved quantity the schedule-equivalence property
-    /// tests compare across pipeline schedules.
+    /// tests compare across pipeline schedules. On a folded graph each
+    /// task is weighted by its multiplicity, so the result equals the
+    /// unfolded graph's exactly (u64 arithmetic — no rounding).
     pub fn total_comm_bytes(&self) -> u64 {
-        self.comm.iter().map(comm_payload_bytes).sum()
+        match &self.fold {
+            None => self.comm.iter().map(comm_payload_bytes).sum(),
+            Some(f) => (0..self.n_tasks())
+                .filter_map(|i| self.comm(i).map(|c| comm_payload_bytes(c) * f.mult[i]))
+                .sum(),
+        }
     }
 
-    /// Total computation FLOPs.
+    /// Total computation FLOPs, multiplicity-weighted on a folded graph.
+    /// Unlike [`total_comm_bytes`](Self::total_comm_bytes) this is f64:
+    /// `m × flops` and the unfolded `flops + … + flops` sum can differ
+    /// in the last ulp, so folded/unfolded equality here is approximate.
     pub fn total_flops(&self) -> f64 {
-        self.comp.iter().map(|c| c.flops).sum()
+        match &self.fold {
+            None => self.comp.iter().map(|c| c.flops).sum(),
+            Some(f) => (0..self.n_tasks())
+                .map(|i| match self.kind(i) {
+                    TaskRef::Comp(c) => c.flops * f.mult[i] as f64,
+                    TaskRef::Comm(_) => 0.0,
+                })
+                .sum(),
+        }
+    }
+
+    /// Folding metadata, when this graph was compiled with symmetry
+    /// folding and the fold verification succeeded.
+    pub fn fold(&self) -> Option<&FoldInfo> {
+        self.fold.as_ref()
+    }
+
+    pub(crate) fn set_fold(&mut self, f: FoldInfo) {
+        debug_assert_eq!(f.mult.len(), self.n_tasks());
+        self.fold = Some(f);
+    }
+
+    /// Number of **logical** tasks this graph stands for: the unfolded
+    /// task count on a folded graph, [`n_tasks`](Self::n_tasks)
+    /// otherwise.
+    pub fn logical_tasks(&self) -> usize {
+        match &self.fold {
+            Some(f) => f.logical_tasks,
+            None => self.n_tasks(),
+        }
+    }
+
+    /// Multiplicity of task `id`: how many logical tasks it stands for
+    /// (1 on unfolded graphs and for cross tasks on folded ones).
+    pub fn task_mult(&self, id: TaskId) -> u64 {
+        match &self.fold {
+            Some(f) => f.mult[id],
+            None => 1,
+        }
     }
 }
 
@@ -566,8 +618,22 @@ pub struct CompileStats {
     pub n_tasks: usize,
     /// Dependency edges in the finished graph.
     pub n_deps: usize,
-    /// One span per stamped slot instance.
+    /// One span per stamped slot instance. Cleared when the graph was
+    /// folded (spans index pre-fold task ids).
     pub instance_spans: Vec<InstanceSpan>,
+    /// Tasks the graph logically stands for (equals `n_tasks` unless
+    /// folded).
+    pub logical_tasks: usize,
+    /// Device-equivalence classes folded (0 when folding was off or
+    /// fell back).
+    pub fold_classes: usize,
+    /// Devices whose task streams were folded away.
+    pub fold_devices_folded: usize,
+    /// Folding was requested but a symmetry check failed, so the
+    /// unfolded graph was kept.
+    pub fold_fallback: bool,
+    /// Seconds in the fold pass (analysis + verification + rewrite).
+    pub fold_s: f64,
     /// For [`compile_delta`]: the pipeline stage emission actually
     /// resumed from (all stages below it were spliced from the parent's
     /// checkpoint). `None` when the template was emitted from scratch or
@@ -658,7 +724,23 @@ pub fn compile_with(
     cluster: &Cluster,
     cache: Option<(&TemplateCache, u64)>,
 ) -> Result<(ExecGraph, CompileStats)> {
-    compile_delta(graph, tree, cluster, cache, None, false).map(|(eg, stats, _)| (eg, stats))
+    compile_with_opts(graph, tree, cluster, cache, false)
+}
+
+/// [`compile_with`] with symmetry folding selectable. With `fold` set,
+/// the compiler runs the device-equivalence analysis and, when every
+/// symmetry check passes, emits a folded graph carrying a
+/// [`FoldInfo`] multiplicity table; on any failed check it falls back
+/// to the unfolded graph and sets [`CompileStats::fold_fallback`].
+pub fn compile_with_opts(
+    graph: &Graph,
+    tree: &StrategyTree,
+    cluster: &Cluster,
+    cache: Option<(&TemplateCache, u64)>,
+    fold: bool,
+) -> Result<(ExecGraph, CompileStats)> {
+    compile_delta_opts(graph, tree, cluster, cache, None, false, fold)
+        .map(|(eg, stats, _)| (eg, stats))
 }
 
 /// Seed for the per-stage strategy hashes [`compile_delta`] diffs a
@@ -716,6 +798,21 @@ pub fn compile_delta(
     cache: Option<(&TemplateCache, u64)>,
     parent: Option<&EmitRecord>,
     want_record: bool,
+) -> Result<(ExecGraph, CompileStats, Option<EmitRecord>)> {
+    compile_delta_opts(graph, tree, cluster, cache, parent, want_record, false)
+}
+
+/// [`compile_delta`] with symmetry folding selectable (see
+/// [`compile_with_opts`]). Folding happens after instantiation, so it
+/// composes with both the template cache and delta re-compilation.
+pub fn compile_delta_opts(
+    graph: &Graph,
+    tree: &StrategyTree,
+    cluster: &Cluster,
+    cache: Option<(&TemplateCache, u64)>,
+    parent: Option<&EmitRecord>,
+    want_record: bool,
+    fold: bool,
 ) -> Result<(ExecGraph, CompileStats, Option<EmitRecord>)> {
     let resolved = crate::strategy::resolve(graph, tree)?;
     let mut stats = CompileStats::default();
@@ -789,7 +886,7 @@ pub fn compile_delta(
     stats.preamble_tasks = template.preamble.len();
     stats.n_segments = template.seg_stage.len();
     stats.n_micro = template.n_micro;
-    let eg = instantiate::instantiate(graph, &resolved, template.as_ref(), &mut stats)?;
+    let eg = instantiate::instantiate(graph, &resolved, template.as_ref(), cluster, fold, &mut stats)?;
     let record = want_record.then(|| EmitRecord {
         stage_hashes,
         checkpoints,

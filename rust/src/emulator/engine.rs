@@ -575,6 +575,20 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         )));
     }
     let secs = t;
+    // Folded graphs: member devices carried no timeline — expand their
+    // peaks from their representative's (see the executor's identical
+    // step). The emulator's flow-level bandwidth sharing is *not*
+    // fold-symmetric in general (folding drops member flows from the
+    // max-min allocation), so folded emulator timings are approximate;
+    // only the HTAE executor carries the bit-match guarantee.
+    let mut peak_mem = mem.peaks().to_vec();
+    let mut peak_act = mem.dynamic_peaks();
+    if let Some(f) = eg.fold() {
+        for d in 0..peak_mem.len().min(f.rep_of.len()) {
+            peak_mem[d] = peak_mem[f.rep_of[d]];
+            peak_act[d] = peak_act[f.rep_of[d]];
+        }
+    }
     Ok(SimReport {
         step_ms: secs * 1e3,
         throughput: if secs > 0.0 {
@@ -582,8 +596,8 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         } else {
             0.0
         },
-        peak_mem: mem.peaks().to_vec(),
-        peak_act: mem.dynamic_peaks(),
+        peak_mem,
+        peak_act,
         oom: mem.oom(),
         overlapped_ops: 0,
         shared_ops: 0,

@@ -42,12 +42,46 @@ pub fn maxmin_rates(flows: &[Vec<LinkId>], capacity: impl Fn(LinkId) -> f64) -> 
     rate
 }
 
+/// Max-min rates with per-flow **multiplicities**: a flow of weight `w`
+/// occupies its links like `w` identical flows would, and the returned
+/// rate is the share each of those `w` duplicates gets. Weight 1
+/// everywhere reduces to [`maxmin_rates`]; the equivalence is pinned by
+/// `weighted_equals_duplicated_flows`. This is the fluid-model
+/// counterpart of symmetry folding, where one materialized
+/// communication stands for `m` logical replicas.
+pub fn maxmin_rates_weighted(
+    flows: &[Vec<LinkId>],
+    weights: &[u64],
+    capacity: impl Fn(LinkId) -> f64,
+) -> Vec<f64> {
+    debug_assert_eq!(flows.len(), weights.len());
+    let n_links = flows
+        .iter()
+        .flatten()
+        .copied()
+        .max()
+        .map(|l| l + 1)
+        .unwrap_or(0);
+    let mut rate = Vec::new();
+    let mut scratch = Scratch::new(n_links);
+    maxmin_rates_weighted_indexed(
+        flows.len(),
+        |i| flows[i].as_slice(),
+        |i| weights[i],
+        n_links,
+        &capacity,
+        &mut scratch,
+        &mut rate,
+    );
+    rate
+}
+
 /// Reusable per-link scratch buffers (avoids reallocating in the
 /// emulator's per-event hot loop).
 #[derive(Debug, Default)]
 pub struct Scratch {
     cap: Vec<f64>,
-    cnt: Vec<u32>,
+    cnt: Vec<u64>,
 }
 
 impl Scratch {
@@ -84,6 +118,23 @@ pub fn maxmin_rates_indexed<'a>(
     scratch: &mut Scratch,
     out: &mut Vec<f64>,
 ) {
+    maxmin_rates_weighted_indexed(n, links_of, |_| 1, n_links, capacity, scratch, out)
+}
+
+/// Weighted progressive filling (see [`maxmin_rates_weighted`]): flow
+/// `i` counts `weight_of(i)` times toward every link it crosses, is
+/// frozen at the per-duplicate fair share, and drains
+/// `weight × share` capacity from its links. With all weights 1 this is
+/// ordinary progressive filling.
+pub fn maxmin_rates_weighted_indexed<'a>(
+    n: usize,
+    links_of: impl Fn(usize) -> &'a [LinkId],
+    weight_of: impl Fn(usize) -> u64,
+    n_links: usize,
+    capacity: &impl Fn(LinkId) -> f64,
+    scratch: &mut Scratch,
+    out: &mut Vec<f64>,
+) {
     out.clear();
     out.resize(n, f64::INFINITY);
     if n == 0 {
@@ -100,17 +151,18 @@ pub fn maxmin_rates_indexed<'a>(
         if !f.is_empty() {
             remaining += 1;
         }
+        let w = weight_of(i);
         for &l in f {
             if cnt[l] == 0 && !touched.contains(&l) {
                 cap[l] = capacity(l);
                 touched.push(l);
             }
-            cnt[l] += 1;
+            cnt[l] += w;
         }
     }
     let mut frozen = vec![false; n];
     while remaining > 0 {
-        // Most contended link: minimal fair share.
+        // Most contended link: minimal fair share per duplicate.
         let mut best: Option<(LinkId, f64)> = None;
         for &l in &touched {
             let k = cnt[l];
@@ -137,9 +189,10 @@ pub fn maxmin_rates_indexed<'a>(
             out[i] = fair;
             any = true;
             remaining -= 1;
+            let w = weight_of(i);
             for &l in f {
-                cap[l] -= fair;
-                cnt[l] -= 1;
+                cap[l] -= fair * w as f64;
+                cnt[l] -= w;
             }
         }
         cnt[bottleneck] = 0;
@@ -452,6 +505,70 @@ mod tests {
         assert_eq!(inc.rate(1), 100.0);
         inc.remove(0);
         assert_eq!(inc.rate(1), 100.0);
+    }
+
+    #[test]
+    fn weighted_flow_counts_as_many() {
+        // One weight-3 flow vs one weight-1 flow on a shared link: the
+        // link splits 4 ways, each duplicate of the heavy flow gets one
+        // share.
+        let r = maxmin_rates_weighted(&[vec![0], vec![0]], &[3, 1], |_| 100.0);
+        assert_eq!(r, vec![25.0, 25.0]);
+    }
+
+    #[test]
+    fn weight_one_matches_unweighted() {
+        let flows: Vec<Vec<LinkId>> = vec![vec![0, 1], vec![0], vec![1], vec![]];
+        let caps = |l: LinkId| if l == 0 { 90.0 } else { 250.0 };
+        let w = maxmin_rates_weighted(&flows, &[1, 1, 1, 1], caps);
+        let u = maxmin_rates(&flows, caps);
+        assert_eq!(w, u);
+    }
+
+    /// The folding contract: a weight-`w` flow's rate equals the rate
+    /// each of `w` literal duplicates would receive from the unweighted
+    /// solver, on random topologies.
+    #[test]
+    fn weighted_equals_duplicated_flows() {
+        use crate::testing::Gen;
+        let mut g = Gen::new(0xF01D);
+        for _case in 0..60 {
+            let n_links = g.usize_in(1, 8);
+            let caps: Vec<f64> = (0..n_links)
+                .map(|_| 10.0 * g.usize_in(1, 16) as f64)
+                .collect();
+            let n_flows = g.usize_in(1, 6);
+            let mut flows: Vec<Vec<LinkId>> = Vec::new();
+            let mut weights: Vec<u64> = Vec::new();
+            for _ in 0..n_flows {
+                let n = g.usize_in(1, n_links.min(3));
+                let mut links: Vec<LinkId> = (0..n_links).collect();
+                g.shuffle(&mut links);
+                links.truncate(n);
+                flows.push(links);
+                weights.push(g.usize_in(1, 4) as u64);
+            }
+            let got = maxmin_rates_weighted(&flows, &weights, |l| caps[l]);
+            let mut dup: Vec<Vec<LinkId>> = Vec::new();
+            for (f, &w) in flows.iter().zip(&weights) {
+                for _ in 0..w {
+                    dup.push(f.clone());
+                }
+            }
+            let want = maxmin_rates(&dup, |l| caps[l]);
+            let mut di = 0;
+            for (i, &w) in weights.iter().enumerate() {
+                for _ in 0..w {
+                    let e = want[di];
+                    di += 1;
+                    assert!(
+                        (got[i] - e).abs() <= 1e-9 * e.max(1.0),
+                        "flow {i} (weight {w}): weighted {} vs duplicated {e}",
+                        got[i]
+                    );
+                }
+            }
+        }
     }
 
     /// The satellite property: after every arrival/departure in a random

@@ -208,14 +208,18 @@ impl<'a> BehaviorDetector<'a> {
         (alpha, total - alpha)
     }
 
-    /// Bump the overlapped-computation counter.
-    pub fn note_overlapped_comp(&mut self) {
-        self.overlapped += 1;
+    /// Bump the overlapped-computation counter by `weight` — the task's
+    /// fold multiplicity, so counters on folded graphs report logical
+    /// (unfolded) op counts.
+    pub fn note_overlapped_comp(&mut self, weight: usize) {
+        self.overlapped += weight;
     }
 
-    /// Bump the bandwidth-shared counter.
-    pub fn note_shared(&mut self) {
-        self.shared += 1;
+    /// Bump the bandwidth-shared counter by `weight` (fold
+    /// multiplicity; see
+    /// [`note_overlapped_comp`](Self::note_overlapped_comp)).
+    pub fn note_shared(&mut self, weight: usize) {
+        self.shared += weight;
     }
 
     /// Computation ops flagged overlapped so far.

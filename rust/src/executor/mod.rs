@@ -277,7 +277,7 @@ impl<'a> Htae<'a> {
                         let mut cost = base_costs[id];
                         if self.config.overlap && detector.comp_overlaps_grad_comm(d, t) {
                             cost = scale(cost, 1.0 + self.config.gamma);
-                            detector.note_overlapped_comp();
+                            detector.note_overlapped_comp(eg.task_mult(id) as usize);
                         }
                         comp_busy[d] = true;
                         detector.record_comp(d, t, t + cost);
@@ -327,7 +327,7 @@ impl<'a> Htae<'a> {
                         let share = detector.sharing_factor(c, t);
                         if share > 1.0 {
                             beta = scale(beta, share);
-                            detector.note_shared();
+                            detector.note_shared(eg.task_mult(id) as usize);
                         }
                     }
                     if self.config.overlap
@@ -414,6 +414,17 @@ impl<'a> Htae<'a> {
             )));
         }
         let secs = ps_to_secs(makespan);
+        // On a folded graph, member devices carried no timeline (their
+        // tasks were deleted); their true peaks are their
+        // representative's, which the verified symmetry makes exact.
+        let mut peak_mem = mem.peaks().to_vec();
+        let mut peak_act = mem.dynamic_peaks();
+        if let Some(f) = eg.fold() {
+            for d in 0..peak_mem.len().min(f.rep_of.len()) {
+                peak_mem[d] = peak_mem[f.rep_of[d]];
+                peak_act[d] = peak_act[f.rep_of[d]];
+            }
+        }
         Ok(SimReport {
             step_ms: ps_to_ms(makespan),
             throughput: if secs > 0.0 {
@@ -421,8 +432,8 @@ impl<'a> Htae<'a> {
             } else {
                 0.0
             },
-            peak_mem: mem.peaks().to_vec(),
-            peak_act: mem.dynamic_peaks(),
+            peak_mem,
+            peak_act,
             oom: mem.oom(),
             overlapped_ops: detector.overlapped_count(),
             shared_ops: detector.shared_count(),

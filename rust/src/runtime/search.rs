@@ -50,7 +50,7 @@ use crate::collective::CollAlgo;
 use crate::compiler::{htae_lower_bound_ms, EmitRecord, TemplateCache};
 use crate::executor::calibrate;
 use crate::graph::Graph;
-use crate::runtime::sweep::score_tree_delta;
+use crate::runtime::sweep::score_tree_delta_opts;
 use crate::strategy::nonuniform::{propose, NonUniformSpec};
 use crate::strategy::{resolve, StrategySpec, StrategyTree};
 use crate::util::rng::Rng;
@@ -119,6 +119,14 @@ pub struct Evaluation {
     pub oom: bool,
     /// Build/compile/simulation failure, if any.
     pub error: Option<String>,
+    /// Device-equivalence classes the fold pass kept (0 without
+    /// [`SearchConfig::fold`]).
+    pub fold_classes: usize,
+    /// Devices elided by folding (0 without folding).
+    pub fold_devices_folded: usize,
+    /// Folding was requested but a symmetry check failed, so this
+    /// candidate was scored on the unfolded graph.
+    pub fold_fallback: bool,
 }
 
 impl Evaluation {
@@ -224,6 +232,12 @@ pub struct SearchConfig {
     /// once it is exhausted. **Nondeterministic** — leave `None` for
     /// reproducible runs.
     pub wall_s: Option<f64>,
+    /// Symmetry folding: compile every candidate with
+    /// device-equivalence folding (see
+    /// [`crate::compiler::compile_with_opts`]). Bit-identical scoring
+    /// either way — candidates that cannot be proven symmetric fall
+    /// back to the unfolded graph.
+    pub fold: bool,
 }
 
 impl Default for SearchConfig {
@@ -241,6 +255,7 @@ impl Default for SearchConfig {
             delta: true,
             prune: true,
             wall_s: None,
+            fold: false,
         }
     }
 }
@@ -371,7 +386,10 @@ fn evaluate(
     point: &SearchPoint,
 ) -> Evaluation {
     let tree = point.spec.build(graph);
-    evaluate_built(graph, cluster, gamma, plain, cache, point, &tree, None, false).0
+    evaluate_built(
+        graph, cluster, gamma, plain, cache, point, &tree, None, false, false,
+    )
+    .0
 }
 
 /// [`evaluate`] over a pre-built tree, with the delta-compile hooks:
@@ -389,6 +407,7 @@ fn evaluate_built(
     tree: &Result<StrategyTree>,
     parent: Option<&EmitRecord>,
     want_record: bool,
+    fold: bool,
 ) -> (Evaluation, Option<EmitRecord>) {
     let label = point.label();
     fn fail(point: &SearchPoint, label: &str, e: String) -> Evaluation {
@@ -400,13 +419,16 @@ fn evaluate_built(
             peak_mem: 0,
             oom: false,
             error: Some(e),
+            fold_classes: 0,
+            fold_devices_folded: 0,
+            fold_fallback: false,
         }
     }
     let tree = match tree {
         Ok(t) => t,
         Err(e) => return (fail(point, &label, e.to_string()), None),
     };
-    let (s, record) = score_tree_delta(
+    let (s, record) = score_tree_delta_opts(
         graph,
         cluster,
         gamma,
@@ -416,6 +438,7 @@ fn evaluate_built(
         cache.map(|c| (c, 0)),
         parent,
         want_record,
+        fold,
     );
     let eval = match s.report {
         Ok(r) => Evaluation {
@@ -426,6 +449,9 @@ fn evaluate_built(
             peak_mem: r.peak_mem.iter().copied().max().unwrap_or(0),
             oom: r.oom,
             error: None,
+            fold_classes: s.fold_classes,
+            fold_devices_folded: s.fold_devices_folded,
+            fold_fallback: s.fold_fallback,
         },
         Err(e) => fail(point, &label, e),
     };
@@ -503,6 +529,7 @@ fn run_chain(
         &init_tree,
         None,
         cfg.delta,
+        cfg.fold,
     );
     report.evals = 1;
     report.full_compiles = 1;
@@ -568,6 +595,7 @@ fn run_chain(
             &tree,
             if cfg.delta { cur_rec.as_ref() } else { None },
             cfg.delta,
+            cfg.fold,
         );
         report.evals += 1;
         // Geometric cooling over the chain's budget.
@@ -756,6 +784,36 @@ mod tests {
             .run(&g, &c, &inits)
             .unwrap();
         assert_eq!(serial.best.unwrap().label, ba.label);
+    }
+
+    /// Tentpole pin: symmetry folding never changes what a seeded
+    /// search finds — the walk (accept decisions, counters, winner) is
+    /// bit-identical with folding on or off, because folded scoring
+    /// bit-matches unfolded scoring and fallback covers the rest.
+    #[test]
+    fn seeded_search_identical_with_and_without_fold() {
+        let (g, c, inits) = small_setup();
+        let cfg = SearchConfig {
+            budget: 24,
+            chains: 2,
+            seed: 11,
+            ..SearchConfig::default()
+        };
+        let plain = Searcher::new(cfg).run(&g, &c, &inits).unwrap();
+        let folded = Searcher::new(SearchConfig { fold: true, ..cfg })
+            .run(&g, &c, &inits)
+            .unwrap();
+        assert_eq!(plain.evals, folded.evals);
+        assert_eq!(plain.bound_prunes, folded.bound_prunes);
+        let (bp, bf) = (plain.best.unwrap(), folded.best.unwrap());
+        assert_eq!(bp.label, bf.label);
+        assert_eq!(bp.step_ms.to_bits(), bf.step_ms.to_bits());
+        assert_eq!(bp.throughput.to_bits(), bf.throughput.to_bits());
+        assert_eq!(bp.peak_mem, bf.peak_mem);
+        for (ca, cb) in plain.chains.iter().zip(&folded.chains) {
+            assert_eq!(ca.accepted, cb.accepted);
+            assert_eq!(ca.infeasible, cb.infeasible);
+        }
     }
 
     #[test]

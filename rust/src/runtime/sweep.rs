@@ -78,6 +78,13 @@ pub struct SweepOutcome {
     pub compile_s: f64,
     /// Wall-clock seconds spent estimating + simulating.
     pub sim_s: f64,
+    /// Device-equivalence classes folded (0 unless the sweep ran with
+    /// symmetry folding and the candidate folded).
+    pub fold_classes: usize,
+    /// Devices whose task streams were folded away.
+    pub fold_devices_folded: usize,
+    /// Folding was requested but fell back to the unfolded graph.
+    pub fold_fallback: bool,
 }
 
 impl SweepOutcome {
@@ -112,6 +119,9 @@ pub struct SweepRunner {
     plain: bool,
     coll_algo: CollAlgo,
     compile_cache: bool,
+    fold: bool,
+    nics: Option<usize>,
+    oversub: Option<f64>,
 }
 
 impl Default for SweepRunner {
@@ -128,7 +138,33 @@ impl SweepRunner {
             plain: false,
             coll_algo: CollAlgo::Auto,
             compile_cache: true,
+            fold: false,
+            nics: None,
+            oversub: None,
         }
+    }
+
+    /// Override the preset fabric for every scenario's cluster:
+    /// `nics` NICs per node and/or an `oversub` fat-tree
+    /// oversubscription ratio. Values must already be valid for the
+    /// swept presets (the CLI validates them up front through
+    /// [`Cluster::from_spec`]); invalid overrides panic here rather
+    /// than silently reverting to the preset fabric.
+    pub fn fabric(mut self, nics: Option<usize>, oversub: Option<f64>) -> Self {
+        self.nics = nics;
+        self.oversub = oversub;
+        self
+    }
+
+    /// Enable symmetry folding (default off): each candidate compiles
+    /// with device-equivalence folding, simulating one representative
+    /// replica slice when the verification passes. Results are
+    /// bit-identical either way — a candidate that cannot be proven
+    /// symmetric falls back to the unfolded graph
+    /// ([`SweepOutcome::fold_fallback`]).
+    pub fn fold(mut self, on: bool) -> Self {
+        self.fold = on;
+        self
     }
 
     /// Override the worker-thread count (0 = auto).
@@ -204,7 +240,20 @@ impl SweepRunner {
                 Some(i) => i,
                 None => {
                     cluster_keys.push(ck);
-                    clusters.push(Cluster::preset(sc.preset, sc.nodes));
+                    let cluster = if self.nics.is_some() || self.oversub.is_some() {
+                        let mut spec = crate::cluster::presets::spec(sc.preset, sc.nodes);
+                        if let Some(k) = self.nics {
+                            spec.nics_per_node = k;
+                        }
+                        if let Some(r) = self.oversub {
+                            spec.oversubscription = r;
+                        }
+                        Cluster::from_spec(&spec)
+                            .expect("fabric overrides must be valid for the swept preset")
+                    } else {
+                        Cluster::preset(sc.preset, sc.nodes)
+                    };
+                    clusters.push(cluster);
                     clusters.len() - 1
                 }
             };
@@ -240,6 +289,7 @@ impl SweepRunner {
                         plain,
                         self.coll_algo,
                         cache.as_ref().map(|c| (c, graph_of[i] as u64)),
+                        self.fold,
                     );
                     *results[i].lock().unwrap() = Some(out);
                 });
@@ -313,6 +363,15 @@ pub struct TreeScore {
     pub compile_s: f64,
     /// Wall-clock seconds estimating + simulating.
     pub sim_s: f64,
+    /// Device-equivalence classes folded (0 when folding was off, fell
+    /// back, or nothing was foldable).
+    pub fold_classes: usize,
+    /// Devices whose task streams were folded away.
+    pub fold_devices_folded: usize,
+    /// Folding was requested but a symmetry check failed.
+    pub fold_fallback: bool,
+    /// Seconds in the fold pass.
+    pub fold_s: f64,
 }
 
 impl TreeScore {
@@ -343,6 +402,25 @@ pub fn score_tree(
     score_tree_delta(graph, cluster, gamma, tree, plain, coll_algo, cache, None, false).0
 }
 
+/// [`score_tree`] with symmetry folding selectable (see
+/// [`crate::compiler::compile_with_opts`]).
+#[allow(clippy::too_many_arguments)]
+pub fn score_tree_opts(
+    graph: &Graph,
+    cluster: &Cluster,
+    gamma: f64,
+    tree: &StrategyTree,
+    plain: bool,
+    coll_algo: CollAlgo,
+    cache: Option<(&TemplateCache, u64)>,
+    fold: bool,
+) -> TreeScore {
+    score_tree_delta_opts(
+        graph, cluster, gamma, tree, plain, coll_algo, cache, None, false, fold,
+    )
+    .0
+}
+
 /// [`score_tree`] extended with the **delta re-compilation** hooks the
 /// annealing searcher threads along each chain: `parent` is the
 /// previously scored candidate's [`EmitRecord`] (template emission
@@ -362,22 +440,62 @@ pub fn score_tree_delta(
     parent: Option<&EmitRecord>,
     want_record: bool,
 ) -> (TreeScore, Option<EmitRecord>) {
+    score_tree_delta_opts(
+        graph,
+        cluster,
+        gamma,
+        tree,
+        plain,
+        coll_algo,
+        cache,
+        parent,
+        want_record,
+        false,
+    )
+}
+
+/// [`score_tree_delta`] with symmetry folding selectable. The fold
+/// statistics land in the returned [`TreeScore`].
+#[allow(clippy::too_many_arguments)]
+pub fn score_tree_delta_opts(
+    graph: &Graph,
+    cluster: &Cluster,
+    gamma: f64,
+    tree: &StrategyTree,
+    plain: bool,
+    coll_algo: CollAlgo,
+    cache: Option<(&TemplateCache, u64)>,
+    parent: Option<&EmitRecord>,
+    want_record: bool,
+    fold: bool,
+) -> (TreeScore, Option<EmitRecord>) {
     let t0 = Instant::now();
-    let (eg, record) =
-        match crate::compiler::compile_delta(graph, tree, cluster, cache, parent, want_record) {
-            Ok((eg, _stats, record)) => (eg, record),
-            Err(e) => {
-                return (
-                    TreeScore {
-                        report: Err(e.to_string()),
-                        oom: false,
-                        compile_s: t0.elapsed().as_secs_f64(),
-                        sim_s: 0.0,
-                    },
-                    None,
-                )
-            }
-        };
+    let (eg, stats, record) = match crate::compiler::compile_delta_opts(
+        graph,
+        tree,
+        cluster,
+        cache,
+        parent,
+        want_record,
+        fold,
+    ) {
+        Ok(ok) => ok,
+        Err(e) => {
+            return (
+                TreeScore {
+                    report: Err(e.to_string()),
+                    oom: false,
+                    compile_s: t0.elapsed().as_secs_f64(),
+                    sim_s: 0.0,
+                    fold_classes: 0,
+                    fold_devices_folded: 0,
+                    fold_fallback: false,
+                    fold_s: 0.0,
+                },
+                None,
+            )
+        }
+    };
     let compile_s = t0.elapsed().as_secs_f64();
     let est = crate::estimator::OpEstimator::analytical(cluster);
     let mut config = if plain {
@@ -400,6 +518,10 @@ pub fn score_tree_delta(
             oom,
             compile_s,
             sim_s: t1.elapsed().as_secs_f64(),
+            fold_classes: stats.fold_classes,
+            fold_devices_folded: stats.fold_devices_folded,
+            fold_fallback: stats.fold_fallback,
+            fold_s: stats.fold_s,
         },
         record,
     )
@@ -414,6 +536,7 @@ fn run_one(
     plain: bool,
     coll_algo: CollAlgo,
     cache: Option<(&TemplateCache, u64)>,
+    fold: bool,
 ) -> SweepOutcome {
     let tree = match build_strategy(graph, sc.spec) {
         Ok(t) => t,
@@ -424,16 +547,22 @@ fn run_one(
                 oom: false,
                 compile_s: 0.0,
                 sim_s: 0.0,
+                fold_classes: 0,
+                fold_devices_folded: 0,
+                fold_fallback: false,
             }
         }
     };
-    let s = score_tree(graph, cluster, gamma, &tree, plain, coll_algo, cache);
+    let s = score_tree_opts(graph, cluster, gamma, &tree, plain, coll_algo, cache, fold);
     SweepOutcome {
         scenario: *sc,
         report: s.report,
         oom: s.oom,
         compile_s: s.compile_s,
         sim_s: s.sim_s,
+        fold_classes: s.fold_classes,
+        fold_devices_folded: s.fold_devices_folded,
+        fold_fallback: s.fold_fallback,
     }
 }
 
@@ -665,6 +794,9 @@ mod tests {
             oom,
             compile_s: 0.0,
             sim_s: 0.0,
+            fold_classes: 0,
+            fold_devices_folded: 0,
+            fold_fallback: false,
         };
         let outcomes = vec![mk(true, 1000.0), mk(false, 10.0), mk(false, 50.0)];
         let ranked = SweepRunner::rank(&outcomes);
@@ -703,6 +835,9 @@ mod tests {
             oom: false,
             compile_s: 0.0,
             sim_s: 0.0,
+            fold_classes: 0,
+            fold_devices_folded: 0,
+            fold_fallback: false,
         };
         let a = mk(StrategySpec::hybrid(4, 2, 1, 1), 100.0);
         let b = mk(StrategySpec::hybrid(2, 4, 1, 1), 100.0);
@@ -801,6 +936,41 @@ mod tests {
             }
             assert_eq!(a.oom, b.oom);
         }
+    }
+
+    /// Tentpole pin at the sweep level: a folded sweep's reports
+    /// bit-match the unfolded sweep's on every candidate — folding only
+    /// changes how many tasks are materialized.
+    #[test]
+    fn sweep_results_identical_with_and_without_fold() {
+        let scenarios: Vec<Scenario> = candidate_grid(4, 16)
+            .into_iter()
+            .map(|spec| Scenario {
+                model: ModelKind::Vgg19,
+                batch: 16,
+                preset: Preset::HC1,
+                nodes: 1,
+                spec,
+            })
+            .collect();
+        let folded = SweepRunner::new().with_threads(2).fold(true).run(&scenarios);
+        let plain = SweepRunner::new().with_threads(2).run(&scenarios);
+        let mut any_folded = false;
+        for (a, b) in folded.iter().zip(&plain) {
+            assert_eq!(a.scenario, b.scenario);
+            match (&a.report, &b.report) {
+                (Ok(ra), Ok(rb)) => {
+                    assert_eq!(ra.step_ms, rb.step_ms, "{}", a.scenario.label());
+                    assert_eq!(ra.peak_mem, rb.peak_mem, "{}", a.scenario.label());
+                    assert_eq!(ra.oom, rb.oom, "{}", a.scenario.label());
+                }
+                (Err(ea), Err(eb)) => assert_eq!(ea, eb),
+                _ => panic!("fold changed outcome kind for {}", a.scenario.label()),
+            }
+            any_folded |= a.fold_classes > 0;
+            assert_eq!(b.fold_classes, 0, "fold off must report no classes");
+        }
+        assert!(any_folded, "at least the pure-DP candidates must fold");
     }
 
     #[test]

@@ -1,0 +1,386 @@
+//! Device-equivalence-class analysis for **symmetry folding**.
+//!
+//! Pure data parallelism (and the DP factor of a DP × MP × PP hybrid)
+//! replicates the same per-device task stream across every replica: the
+//! devices of one replica slice are indistinguishable from the devices
+//! of another up to a permutation that maps replica `0` onto replica
+//! `j`. This module derives that permutation family from a
+//! [`ResolvedStrategy`] alone — before any task is emitted — as a
+//! partition of the device set into ordered *equivalence classes*.
+//!
+//! A [`FoldPlan`] with fold factor `m` partitions all devices into
+//! classes of exactly `m` devices. Class `c = [d_0, d_1, …, d_{m−1}]`
+//! is *ordered*: the implied replica permutation `σ_j` maps `d_0 ↦ d_j`
+//! for every class simultaneously (slice `0` is the representative
+//! slice). The compiler's fold pass ([`crate::compiler`]) then
+//! *verifies* — task by task, edge by edge — that the emitted graph
+//! really is `σ_j`-symmetric before deleting the non-representative
+//! slices, so a plan produced here is a proposal, never a promise.
+//!
+//! Derivation is intentionally conservative: any ambiguity (mixed DP
+//! degrees, classes that overlap without being identical, devices left
+//! uncovered) yields `None` and the caller compiles unfolded. The plan
+//! depends only on computation configs — not on pipeline schedules or
+//! micro-batch counts — so schedule-only mutations preserve the class
+//! partition by construction (pinned by a property test).
+
+use crate::cluster::DeviceId;
+use crate::graph::Graph;
+use crate::strategy::propagate::ResolvedStrategy;
+
+/// A partition of the device set into ordered replica-equivalence
+/// classes, plus the index structures the compiler and executor need.
+#[derive(Debug, Clone)]
+pub struct FoldPlan {
+    /// Fold factor: every class holds exactly `m` devices, and the
+    /// strategy's unique non-trivial DP degree equals `m`.
+    pub m: usize,
+    /// Ordered device tuples; `classes[c][j]` is class `c`'s member in
+    /// replica slice `j`. Slice `0` is the representative.
+    pub classes: Vec<Vec<DeviceId>>,
+    /// Class index of each device (`class_of[d]`).
+    pub class_of: Vec<usize>,
+    /// Slice index of each device within its class tuple.
+    pub member_index: Vec<usize>,
+    /// Representative (slice-0 member) of each device's class.
+    pub rep_of: Vec<DeviceId>,
+}
+
+impl FoldPlan {
+    /// Image of device `d` under the replica permutation `σ_j`
+    /// (requires `d` to be a slice-0 representative).
+    pub fn sigma(&self, j: usize, d: DeviceId) -> DeviceId {
+        debug_assert_eq!(self.member_index[d], 0, "σ_j is defined on slice 0");
+        self.classes[self.class_of[d]][j]
+    }
+
+    /// Number of devices removed by folding (`(m − 1)` per class).
+    pub fn devices_folded(&self) -> usize {
+        self.classes.len() * (self.m - 1)
+    }
+}
+
+/// Derive a fold plan from a resolved strategy over `n_devices`.
+///
+/// Returns `None` when no non-trivial fold exists or when the class
+/// structure is ambiguous (see module docs); the caller falls back to
+/// the unfolded path.
+pub fn fold_plan(r: &ResolvedStrategy, n_devices: usize) -> Option<FoldPlan> {
+    // 1. The fold factor m is the unique DP degree > 1 across layers.
+    let mut m = 0usize;
+    for c in &r.comp {
+        let db = c.degree("b");
+        if db > 1 {
+            if m != 0 && m != db {
+                return None; // mixed DP degrees: no single σ family
+            }
+            m = db;
+        }
+    }
+    if m < 2 {
+        return None; // nothing to fold
+    }
+
+    let mut class_of: Vec<Option<usize>> = vec![None; n_devices];
+    let mut classes: Vec<Vec<DeviceId>> = Vec::new();
+
+    // 2. Every DP-split layer contributes one ordered m-tuple per
+    // (rest-coordinate, replica-position) pair: the devices holding
+    // batch shards 0..m of the same rest-part at the same replica slot.
+    for cfg in &r.comp {
+        if cfg.degree("b") != m {
+            continue;
+        }
+        let b_pos = cfg.partition.iter().position(|(d, _)| d == "b")?;
+        let n_parts = cfg.n_parts();
+        let reps = cfg.replicas();
+        if n_parts == 0 || reps == 0 {
+            return None;
+        }
+        // Group part indices by their rest-coordinates (all dims but b).
+        let mut by_rest: std::collections::BTreeMap<Vec<usize>, Vec<(usize, usize)>> =
+            Default::default();
+        for i in 0..n_parts {
+            let mut coords = cfg.part_index(i);
+            let b = coords.remove(b_pos);
+            by_rest.entry(coords).or_default().push((b, i));
+        }
+        for (_, parts) in by_rest {
+            if parts.len() != m {
+                return None;
+            }
+            // BTreeMap + ascending flat index ⇒ b ascending within a
+            // rest group; verify anyway.
+            for (want_b, &(b, _)) in parts.iter().enumerate() {
+                if b != want_b {
+                    return None;
+                }
+            }
+            for k in 0..reps {
+                let tuple: Vec<DeviceId> =
+                    parts.iter().map(|&(_, i)| cfg.part_devices(i)[k]).collect();
+                merge_tuple(&tuple, n_devices, &mut class_of, &mut classes)?;
+            }
+        }
+    }
+    if classes.is_empty() {
+        return None;
+    }
+
+    // 3. Full coverage: every device belongs to a class.
+    let class_of: Vec<usize> = class_of.into_iter().collect::<Option<Vec<_>>>()?;
+
+    // 4. Layers *without* the DP split (e.g. a vocabulary-sharded
+    // embedding spanning all replicas) must still be class-closed:
+    // their device set is a union of whole classes, so deleting
+    // non-representative slices never truncates such a layer's group
+    // asymmetrically.
+    for cfg in &r.comp {
+        if cfg.degree("b") != 1 {
+            continue;
+        }
+        let set = cfg.device_set();
+        let in_set = |d: DeviceId| set.binary_search(&d).is_ok();
+        for &d in &set {
+            if d >= n_devices || !classes[class_of[d]].iter().all(|&e| in_set(e)) {
+                return None;
+            }
+        }
+    }
+
+    let mut member_index = vec![0usize; n_devices];
+    let mut rep_of: Vec<DeviceId> = vec![0; n_devices];
+    for (c, tuple) in classes.iter().enumerate() {
+        for (j, &d) in tuple.iter().enumerate() {
+            debug_assert_eq!(class_of[d], c);
+            member_index[d] = j;
+            rep_of[d] = tuple[0];
+        }
+    }
+    Some(FoldPlan {
+        m,
+        classes,
+        class_of,
+        member_index,
+        rep_of,
+    })
+}
+
+/// Fold one ordered tuple into the class partition: all-new devices
+/// open a class; a tuple that overlaps an existing class must *be* that
+/// class, element for element. Anything else is ambiguous.
+fn merge_tuple(
+    tuple: &[DeviceId],
+    n_devices: usize,
+    class_of: &mut [Option<usize>],
+    classes: &mut Vec<Vec<DeviceId>>,
+) -> Option<()> {
+    for &d in tuple {
+        if d >= n_devices {
+            return None;
+        }
+    }
+    match class_of[tuple[0]] {
+        None => {
+            // Every member must be unassigned and distinct.
+            for (i, &d) in tuple.iter().enumerate() {
+                if class_of[d].is_some() || tuple[..i].contains(&d) {
+                    return None;
+                }
+            }
+            let c = classes.len();
+            classes.push(tuple.to_vec());
+            for &d in tuple {
+                class_of[d] = Some(c);
+            }
+            Some(())
+        }
+        Some(c) => {
+            if classes[c] == tuple {
+                Some(())
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Structural fingerprint of one device's *role* in a resolved
+/// strategy, invariant under the replica permutation: covers which
+/// layers the device computes and at which rest-coordinates (the batch
+/// coordinate is deliberately excluded), which pipeline stages it
+/// belongs to, and the byte sizes of every tensor share it stores.
+///
+/// Devices in the same [`FoldPlan`] class fingerprint identically;
+/// property tests pin this.
+pub fn device_fingerprint(r: &ResolvedStrategy, graph: &Graph, d: DeviceId) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    for (lid, cfg) in r.comp.iter().enumerate() {
+        let b_pos = cfg.partition.iter().position(|(dim, _)| dim == "b");
+        let reps = cfg.replicas();
+        if reps == 0 {
+            continue;
+        }
+        for i in 0..cfg.n_parts() {
+            for (k, &dev) in cfg.part_devices(i).iter().enumerate() {
+                if dev != d {
+                    continue;
+                }
+                let mut coords = cfg.part_index(i);
+                if let Some(p) = b_pos {
+                    coords[p] = 0; // replica-permutation invariant
+                }
+                lid.hash(&mut h);
+                cfg.partition.hash(&mut h);
+                coords.hash(&mut h);
+                k.hash(&mut h);
+            }
+        }
+    }
+    for st in &r.stages {
+        if st.devices.contains(&d) {
+            st.id.hash(&mut h);
+            st.layers.hash(&mut h);
+            st.schedule.n_micro_batch.hash(&mut h);
+            st.schedule.recompute.hash(&mut h);
+        }
+    }
+    for (t, layout) in r.mem.iter().enumerate() {
+        let total = graph.tensors[t].bytes();
+        for part in &layout.parts {
+            for g in &part.groups {
+                if g.contains(&d) {
+                    t.hash(&mut h);
+                    layout.axis_degrees.hash(&mut h);
+                    layout.part_bytes(total).hash(&mut h);
+                    g.len().hash(&mut h);
+                }
+            }
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, Graph, GraphBuilder};
+    use crate::strategy::builders::{build_strategy, StrategySpec};
+    use crate::strategy::propagate::resolve;
+    use crate::strategy::tree::StrategyTree;
+
+    fn mlp() -> Graph {
+        let mut b = GraphBuilder::new("m", 16);
+        let x = b.input("x", &[16, 32], DType::F32);
+        let h = b.scoped("s1", |b| b.linear("fc1", x, 32, 64));
+        let h = b.scoped("s2", |b| b.linear("fc2", h, 64, 32));
+        let _ = b.loss("loss", h);
+        b.finish()
+    }
+
+    #[test]
+    fn pure_dp_folds_into_dp_classes_of_all_devices() {
+        let g = mlp();
+        let tree = build_strategy(&g, StrategySpec::data_parallel(8)).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        let p = fold_plan(&r, 8).expect("pure DP folds");
+        assert_eq!(p.m, 8);
+        assert_eq!(p.classes, vec![(0..8).collect::<Vec<_>>()]);
+        assert_eq!(p.rep_of, vec![0; 8]);
+        assert_eq!(p.member_index, (0..8).collect::<Vec<_>>());
+        assert_eq!(p.devices_folded(), 7);
+    }
+
+    #[test]
+    fn dp_pp_hybrid_folds_one_class_per_stage_slot() {
+        let g = mlp();
+        let mut t = StrategyTree::from_model(&g);
+        t.assign_under(&g, "s1", &[("b", 4)], &[0, 1, 2, 3]).unwrap();
+        t.assign_under(&g, "s2", &[("b", 4)], &[4, 5, 6, 7]).unwrap();
+        t.assign_under(&g, "loss", &[("b", 4)], &[4, 5, 6, 7]).unwrap();
+        let r = resolve(&g, &t).unwrap();
+        assert_eq!(r.stages.len(), 2);
+        let p = fold_plan(&r, 8).expect("dp×pp folds");
+        assert_eq!(p.m, 4);
+        assert_eq!(p.classes, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        assert_eq!(p.rep_of, vec![0, 0, 0, 0, 4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn dp_mp_hybrid_folds_one_class_per_model_shard() {
+        let g = mlp();
+        let tree = build_strategy(&g, StrategySpec::hybrid(2, 2, 1, 1)).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        let p = fold_plan(&r, 4).expect("dp×mp folds");
+        assert_eq!(p.m, 2);
+        assert_eq!(p.classes.len(), 2);
+        // Each class pairs one device per replica slice; slices are
+        // disjoint and cover all four devices.
+        let mut all: Vec<_> = p.classes.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn mp_only_has_nothing_to_fold() {
+        let g = mlp();
+        let tree = build_strategy(&g, StrategySpec::hybrid(1, 4, 1, 1)).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        assert!(fold_plan(&r, 4).is_none());
+    }
+
+    #[test]
+    fn single_device_has_nothing_to_fold() {
+        let g = mlp();
+        let t = StrategyTree::from_model(&g);
+        let r = resolve(&g, &t).unwrap();
+        assert!(fold_plan(&r, 1).is_none());
+    }
+
+    #[test]
+    fn mixed_dp_degrees_do_not_fold() {
+        let g = mlp();
+        let mut t = StrategyTree::from_model(&g);
+        t.assign_under(&g, "s1", &[("b", 4)], &[0, 1, 2, 3]).unwrap();
+        t.assign_under(&g, "s2", &[("b", 2)], &[4, 5]).unwrap();
+        t.assign_under(&g, "loss", &[("b", 2)], &[4, 5]).unwrap();
+        let r = resolve(&g, &t).unwrap();
+        assert!(fold_plan(&r, 6).is_none());
+    }
+
+    #[test]
+    fn schedule_only_changes_preserve_the_partition() {
+        use crate::strategy::config::ScheduleConfig;
+        let g = mlp();
+        let mut t = StrategyTree::from_model(&g);
+        t.assign_under(&g, "s1", &[("b", 4)], &[0, 1, 2, 3]).unwrap();
+        t.assign_under(&g, "s2", &[("b", 4)], &[4, 5, 6, 7]).unwrap();
+        t.assign_under(&g, "loss", &[("b", 4)], &[4, 5, 6, 7]).unwrap();
+        let r1 = resolve(&g, &t).unwrap();
+        t.set_schedule("", ScheduleConfig::pipeline(4, 2)).unwrap();
+        let r2 = resolve(&g, &t).unwrap();
+        let (p1, p2) = (fold_plan(&r1, 8).unwrap(), fold_plan(&r2, 8).unwrap());
+        assert_eq!(p1.classes, p2.classes);
+        assert_eq!(p1.m, p2.m);
+    }
+
+    #[test]
+    fn class_members_share_a_fingerprint() {
+        let g = mlp();
+        let tree = build_strategy(&g, StrategySpec::hybrid(4, 2, 1, 1)).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        let p = fold_plan(&r, 8).unwrap();
+        for class in &p.classes {
+            let f0 = device_fingerprint(&r, &g, class[0]);
+            for &d in &class[1..] {
+                assert_eq!(device_fingerprint(&r, &g, d), f0);
+            }
+        }
+        // Devices in different classes (different MP shards) differ.
+        assert_ne!(
+            device_fingerprint(&r, &g, p.classes[0][0]),
+            device_fingerprint(&r, &g, p.classes[1][0]),
+        );
+    }
+}

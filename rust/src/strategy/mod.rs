@@ -27,6 +27,7 @@
 
 pub mod builders;
 pub mod config;
+pub mod fold;
 pub mod nonuniform;
 pub mod paper;
 pub mod propagate;
@@ -38,5 +39,6 @@ pub use config::{
     memory_layout, operand_layout, LayoutPart, ParallelConfig, PipelineSchedule, ScheduleConfig,
     TensorLayout,
 };
+pub use fold::{device_fingerprint, fold_plan, FoldPlan};
 pub use propagate::{resolve, ResolvedStrategy, Stage};
 pub use tree::{NodeId, NodeKind, StrategyTree, TreeNode};

@@ -1,0 +1,197 @@
+//! Differential harness pinning symmetry-folded compilation to the
+//! unfolded path, bit for bit.
+//!
+//! Folding (`compile_with_opts(.., fold = true)`) deletes the task
+//! streams of every non-representative replica slice after verifying —
+//! task by task, edge by edge, link by link — that the graph is
+//! symmetric under the replica permutation, and the HTAE scales
+//! shared-resource contention by class multiplicity instead. That is a
+//! claim about *results*, so this harness pins it the hard way: each
+//! headline scenario compiles and simulates twice, fold ON and fold
+//! OFF, and the two runs must agree on
+//!
+//! - the makespan and throughput (`f64::to_bits` equality, not
+//!   tolerance);
+//! - the per-device peak-memory and peak-activation vectors (the folded
+//!   run expands member devices from their representative — exact
+//!   per-device equality, which subsumes the multiset claim);
+//! - the OOM verdict and the behavior counters (overlap / bandwidth
+//!   sharing, fold-weighted to logical op counts);
+//! - the total communicated bytes of the compiled graph;
+//! - the rendered `proteus simulate --json` document, byte for byte,
+//!   with the two wall-clock fields pinned to zero.
+//!
+//! Each case also asserts that folding actually *engaged* (classes
+//! found, no fallback, strictly fewer materialized tasks) — a fallback
+//! would make every equality above trivially true and the harness
+//! vacuous. `total_flops` is deliberately not compared bit-wise: the
+//! folded graph sums `flops × multiplicity` in a different order than
+//! the unfolded graph sums its tasks, so it is equal only to rounding
+//! (and is not part of the JSON document).
+
+use proteus::cli::simulate_json;
+use proteus::compiler::{compile_with_opts, CompileStats};
+use proteus::executor::calibrate;
+use proteus::prelude::*;
+use proteus::util::json::Json;
+
+struct Case {
+    name: &'static str,
+    model: ModelKind,
+    batch: usize,
+    preset: Preset,
+    nodes: usize,
+    spec: StrategySpec,
+}
+
+fn compile_case(case: &Case, cluster: &Cluster, fold: bool) -> (ExecGraph, CompileStats) {
+    let graph = case.model.build(case.batch);
+    let tree = build_strategy(&graph, case.spec).expect("strategy builds");
+    compile_with_opts(&graph, &tree, cluster, None, fold).expect("compiles")
+}
+
+fn simulate(cluster: &Cluster, eg: &ExecGraph) -> SimReport {
+    let est = OpEstimator::analytical(cluster);
+    let config = HtaeConfig {
+        gamma: calibrate::default_gamma(cluster),
+        ..HtaeConfig::default()
+    };
+    Htae::with_config(cluster, &est, config)
+        .simulate(eg)
+        .expect("simulates")
+}
+
+fn assert_differential(case: &Case) {
+    let name = case.name;
+    let cluster = Cluster::preset(case.preset, case.nodes);
+    let (eg_off, stats_off) = compile_case(case, &cluster, false);
+    let (eg_on, stats_on) = compile_case(case, &cluster, true);
+
+    // The fold must engage, or every equality below is vacuous.
+    assert!(!stats_on.fold_fallback, "{name}: fold fell back");
+    assert!(stats_on.fold_classes > 0, "{name}: no classes folded");
+    assert!(
+        stats_on.fold_devices_folded > 0,
+        "{name}: no devices folded"
+    );
+    assert!(
+        eg_on.n_tasks() < eg_off.n_tasks(),
+        "{name}: folding did not shrink the graph ({} vs {})",
+        eg_on.n_tasks(),
+        eg_off.n_tasks(),
+    );
+    assert_eq!(
+        eg_on.logical_tasks(),
+        eg_off.n_tasks(),
+        "{name}: logical task count diverges from the unfolded graph"
+    );
+    assert_eq!(
+        stats_off.fold_classes, 0,
+        "{name}: fold-off run reported fold activity"
+    );
+    assert_eq!(
+        eg_on.total_comm_bytes(),
+        eg_off.total_comm_bytes(),
+        "{name}: multiplicity-weighted comm bytes diverge"
+    );
+
+    let r_off = simulate(&cluster, &eg_off);
+    let r_on = simulate(&cluster, &eg_on);
+    assert_eq!(
+        r_on.step_ms.to_bits(),
+        r_off.step_ms.to_bits(),
+        "{name}: makespan bits diverge ({} vs {})",
+        r_on.step_ms,
+        r_off.step_ms,
+    );
+    assert_eq!(
+        r_on.throughput.to_bits(),
+        r_off.throughput.to_bits(),
+        "{name}: throughput bits diverge"
+    );
+    assert_eq!(r_on.oom, r_off.oom, "{name}: OOM verdict diverges");
+    assert_eq!(
+        r_on.peak_mem, r_off.peak_mem,
+        "{name}: per-device peak memory diverges"
+    );
+    assert_eq!(
+        r_on.peak_act, r_off.peak_act,
+        "{name}: per-device peak activations diverge"
+    );
+    assert_eq!(
+        r_on.overlapped_ops, r_off.overlapped_ops,
+        "{name}: overlapped-op count diverges"
+    );
+    assert_eq!(
+        r_on.shared_ops, r_off.shared_ops,
+        "{name}: bandwidth-shared-op count diverges"
+    );
+
+    // The full `simulate --json` document, wall-clock fields pinned.
+    let render = |eg: &ExecGraph, r: &SimReport| {
+        Json::obj(simulate_json(
+            case.model.name(),
+            case.spec.label(),
+            case.spec.schedule.name(),
+            CollAlgo::Auto,
+            &cluster.name,
+            cluster.num_devices(),
+            "analytical",
+            eg.logical_tasks(),
+            0.0,
+            0.0,
+            r,
+        ))
+        .to_string_pretty()
+    };
+    assert_eq!(
+        render(&eg_on, &r_on),
+        render(&eg_off, &r_off),
+        "{name}: --json documents are not byte-identical"
+    );
+}
+
+/// GPT-2 under a DP × PP hybrid on the rail-optimized multi-NIC fabric:
+/// one equivalence class per pipeline stage, stage-boundary activation
+/// p2ps stay materialized per slice, gradient all-reduces fold to one
+/// representative with multiplicity.
+#[test]
+fn fold_is_bit_identical_gpt2_dp8_pp4_hc4() {
+    assert_differential(&Case {
+        name: "gpt2 dp8×pp4 HC4×4",
+        model: ModelKind::Gpt2,
+        batch: 64,
+        preset: Preset::HC4,
+        nodes: 4, // 32 GPUs
+        spec: StrategySpec::hybrid(8, 1, 4, 8),
+    });
+}
+
+/// DLRM under pure DP at 32 devices: a single 32-wide class, every
+/// gradient sync a cross collective.
+#[test]
+fn fold_is_bit_identical_dlrm_dp32_hc2() {
+    assert_differential(&Case {
+        name: "dlrm dp32 HC2×4",
+        model: ModelKind::Dlrm,
+        batch: 128,
+        preset: Preset::HC2,
+        nodes: 4, // 32 GPUs
+        spec: StrategySpec::data_parallel(32),
+    });
+}
+
+/// VGG-19 under DP + ZeRO: sharded optimizer states put a
+/// reduce-scatter *and* a parameter all-gather on the fold's cross
+/// paths, and per-shard optimizer tasks on the slice paths.
+#[test]
+fn fold_is_bit_identical_vgg19_dp16_zero_hc2() {
+    assert_differential(&Case {
+        name: "vgg19 dp16+zero HC2×2",
+        model: ModelKind::Vgg19,
+        batch: 32,
+        preset: Preset::HC2,
+        nodes: 2, // 16 GPUs
+        spec: StrategySpec::data_parallel(16).with_zero(),
+    });
+}

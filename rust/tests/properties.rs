@@ -389,6 +389,202 @@ fn mutation_ops_preserve_validity_and_flops() {
     });
 }
 
+/// Shared invariant checks for a [`proteus::strategy::FoldPlan`]
+/// derived from `r` over `n` devices; `Ok(())` when no plan exists (a
+/// conservative bail-out is always allowed).
+fn assert_fold_plan_invariants(
+    r: &proteus::strategy::ResolvedStrategy,
+    model: &Graph,
+    n: usize,
+) -> Result<(), String> {
+    use proteus::strategy::{device_fingerprint, fold_plan};
+    let Some(p) = fold_plan(r, n) else {
+        return Ok(());
+    };
+    if p.m < 2 {
+        return Err(format!("trivial fold factor m={}", p.m));
+    }
+    if p.classes.is_empty() || p.classes.len() > n {
+        return Err(format!("{} classes for {n} devices", p.classes.len()));
+    }
+    let mut seen = vec![false; n];
+    for (ci, tuple) in p.classes.iter().enumerate() {
+        if tuple.len() != p.m {
+            return Err(format!(
+                "class {ci} has {} members, fold factor {}",
+                tuple.len(),
+                p.m
+            ));
+        }
+        let f0 = device_fingerprint(r, model, tuple[0]);
+        for (j, &d) in tuple.iter().enumerate() {
+            if d >= n {
+                return Err(format!("device {d} out of range {n}"));
+            }
+            if seen[d] {
+                return Err(format!("device {d} appears in two classes"));
+            }
+            seen[d] = true;
+            if p.class_of[d] != ci || p.member_index[d] != j || p.rep_of[d] != tuple[0] {
+                return Err(format!("index structures inconsistent for device {d}"));
+            }
+            if device_fingerprint(r, model, d) != f0 {
+                return Err(format!(
+                    "device {d} fingerprint differs from its class representative"
+                ));
+            }
+        }
+    }
+    if seen.iter().any(|&s| !s) {
+        return Err("fold plan left a device uncovered".into());
+    }
+    // A true partition ⇒ the per-class multiplicities (m each) sum to
+    // the device budget.
+    if p.classes.len() * p.m != n {
+        return Err(format!(
+            "{} classes × m={} ≠ {n} devices",
+            p.classes.len(),
+            p.m
+        ));
+    }
+    if p.devices_folded() != n - p.classes.len() {
+        return Err("devices_folded inconsistent with the partition".into());
+    }
+    Ok(())
+}
+
+/// Symmetry-folding property #1: on random uniform specs *and* random
+/// non-uniform mutation walks, every fold plan is a true ordered
+/// partition of the device budget — classes of exactly `m` devices,
+/// each device in exactly one class, index structures consistent, and
+/// every class member carrying the representative's structural
+/// fingerprint. `dp = 1` strategies must never produce a plan.
+#[test]
+fn fold_plans_are_true_partitions_with_identical_fingerprints() {
+    use proteus::strategy::nonuniform::propose;
+    use proteus::strategy::{fold_plan, resolve};
+    check("fold-plan-partition", |g| {
+        let model = gen_model(g);
+        let spec = gen_spec(g, model.batch_size);
+        let n = spec.dp * spec.mp * spec.pp;
+        let tree = build_strategy(&model, spec).map_err(|e| e.to_string())?;
+        let r = resolve(&model, &tree).map_err(|e| e.to_string())?;
+        if spec.dp == 1 && fold_plan(&r, n).is_some() {
+            return Err("dp=1 strategy produced a fold plan".into());
+        }
+        assert_fold_plan_invariants(&r, &model, n)?;
+        // A non-uniform walk from the same seed point: mixed DP degrees
+        // must bail out (covered inside the helper via `None`), single
+        // consistent degrees must still partition cleanly.
+        let Ok(init) = NonUniformSpec::from_uniform(&model, spec) else {
+            return Ok(());
+        };
+        let mut nspec = init;
+        for _ in 0..4 {
+            let Some((_m, next)) = propose(&model, &nspec, g.rng(), 32) else {
+                break;
+            };
+            let Ok(ntree) = next.build(&model) else {
+                break;
+            };
+            let Ok(nr) = resolve(&model, &ntree) else {
+                break;
+            };
+            assert_fold_plan_invariants(&nr, &model, next.n_devices())?;
+            nspec = next;
+        }
+        Ok(())
+    });
+}
+
+/// Symmetry-folding property #2: the class partition depends only on
+/// computation configs — re-deriving it under every pipeline schedule
+/// and micro-batch count yields the identical `(m, classes)` (the
+/// delta-search path relies on schedule-only mutations preserving the
+/// partition).
+#[test]
+fn fold_partition_is_invariant_under_schedule_only_changes() {
+    use proteus::strategy::{fold_plan, resolve};
+    use proteus::testing::check_with_seed;
+    check_with_seed("fold-schedule-invariance", 0xF01D_5EED, 40, |g| {
+        let model = gen_model(g);
+        let batch = model.batch_size;
+        let dp_opts: Vec<usize> = [2usize, 4]
+            .into_iter()
+            .filter(|&d| batch % d == 0 && d * 2 <= 8)
+            .collect();
+        if dp_opts.is_empty() {
+            return Ok(());
+        }
+        let dp = *g.pick(&dp_opts);
+        let schedules = [
+            PipelineSchedule::GpipeFillDrain,
+            PipelineSchedule::OneFOneB,
+            PipelineSchedule::Interleaved { v: 2 },
+        ];
+        let mut plans: Vec<Option<(usize, Vec<Vec<usize>>)>> = Vec::new();
+        for micro in [2usize, 4] {
+            if batch % (dp * micro) != 0 {
+                continue;
+            }
+            for s in schedules {
+                let spec = StrategySpec::hybrid(dp, 1, 2, micro).with_schedule(s);
+                // Too shallow for two stages / v·pp chunks: skip the combo.
+                let Ok(tree) = build_strategy(&model, spec) else {
+                    continue;
+                };
+                let r = resolve(&model, &tree).map_err(|e| e.to_string())?;
+                plans.push(fold_plan(&r, dp * 2).map(|p| (p.m, p.classes)));
+            }
+        }
+        for w in plans.windows(2) {
+            if w[0] != w[1] {
+                return Err(format!(
+                    "fold partition changed under a schedule-only change: \
+                     {:?} vs {:?}",
+                    w[0], w[1]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Symmetry-folding property #3, at the compiled level: in a
+/// fold-compiled graph the per-task multiplicities always sum to the
+/// logical task count (trivially so on fallback, where every
+/// multiplicity is 1), the class count never exceeds the device count,
+/// and the folded graph is still a DAG.
+#[test]
+fn folded_task_multiplicities_sum_to_the_logical_task_count() {
+    let cluster = Cluster::preset(Preset::HC2, 1);
+    check("fold-mult-sum", |g| {
+        let model = gen_model(g);
+        let spec = gen_spec(g, model.batch_size);
+        let tree = build_strategy(&model, spec).map_err(|e| e.to_string())?;
+        let (eg, stats) =
+            proteus::compiler::compile_with_opts(&model, &tree, &cluster, None, true)
+                .map_err(|e| e.to_string())?;
+        let total: u64 = (0..eg.n_tasks()).map(|t| eg.task_mult(t)).sum();
+        if total != eg.logical_tasks() as u64 {
+            return Err(format!(
+                "Σ mult = {total} ≠ {} logical tasks",
+                eg.logical_tasks()
+            ));
+        }
+        if stats.fold_classes > eg.n_devices {
+            return Err(format!(
+                "{} classes > {} devices",
+                stats.fold_classes, eg.n_devices
+            ));
+        }
+        if !eg.is_dag() {
+            return Err("folded graph is not a DAG".into());
+        }
+        Ok(())
+    });
+}
+
 /// Delta-compile property #1: the mutation proposer's **declared
 /// footprint** ([`Mutation::first_touched_stage`]) upper-bounds the real
 /// one. Along random mutation walks, the per-stage hash vector

@@ -82,6 +82,118 @@ fn ring_multiplicity_on_nic() {
     assert!(bw <= 12.0e9 / 2.0 + 1.0, "NIC crossed twice, got {bw:.2e}");
 }
 
+/// HC4's rail-optimized multi-NIC fabric: the hierarchical all-reduce's
+/// inter-node phase must drive all 8 NICs concurrently — one cross-node
+/// exchange per local rank, each routed over its own rail with pairwise
+/// disjoint links — and collapsing the same nodes onto a single NIC
+/// must serialize exactly that phase, ~8× slower.
+#[test]
+fn hier_allreduce_drives_all_eight_rails_on_hc4() {
+    use proteus::collective::lower;
+    use proteus::compiler::CommTask;
+    use std::collections::HashSet;
+
+    let c = Cluster::preset(Preset::HC4, 2);
+    let t = CommTask {
+        kind: CollectiveKind::AllReduce,
+        group: (0..16).collect(),
+        bytes: 64 << 20,
+        class: CommClass::Gradient,
+    };
+    let plan = lower(&c, CollAlgo::Hierarchical, &t);
+    assert_eq!(plan.algo, "hier");
+    let inter = plan
+        .phases
+        .iter()
+        .find(|p| p.label == "inter-ar")
+        .expect("inter-node phase");
+    assert_eq!(inter.flows.len(), 8, "one cross-node exchange per rail");
+    let rails: HashSet<usize> = inter.flows.iter().map(|f| c.rail_of(f.src)).collect();
+    assert_eq!(rails.len(), 8, "flows collapse onto {} rails", rails.len());
+    let paths: Vec<HashSet<_>> = inter
+        .flows
+        .iter()
+        .map(|f| c.path(f.src, f.dst).into_iter().collect())
+        .collect();
+    for (i, pi) in paths.iter().enumerate() {
+        for (j, pj) in paths.iter().enumerate().take(i) {
+            assert!(
+                pi.is_disjoint(pj),
+                "inter-node flows {i} and {j} queue on a shared link"
+            );
+        }
+    }
+    let mut spec = proteus::cluster::presets::spec(Preset::HC4, 2);
+    spec.nics_per_node = 1;
+    let c1 = Cluster::from_spec(&spec).unwrap();
+    let plan1 = lower(&c1, CollAlgo::Hierarchical, &t);
+    let inter1 = plan1
+        .phases
+        .iter()
+        .find(|p| p.label == "inter-ar")
+        .unwrap();
+    let ratio = inter1.fluid_secs(&c1) / inter.fluid_secs(&c);
+    assert!(
+        (7.5..8.5).contains(&ratio),
+        "single-NIC inter phase should run ~8× slower, got {ratio:.2}×"
+    );
+}
+
+/// Tentpole acceptance at scale: GPT-2 under dp=512 × pp=8 on the full
+/// 512-node HC4 machine (4096 GPUs) fold-compiles without fallback into
+/// one representative replica slice — 8 device classes (one per stage),
+/// a ≥100× task reduction, and a materialized task count that is
+/// *independent of the DP width* (bit-equal to the dp=8 fold of the
+/// same per-replica workload). The folded graph still simulates to a
+/// finite makespan with peaks expanded to every physical device.
+#[test]
+fn folded_4096_device_gpt2_materializes_one_replica_slice() {
+    use proteus::compiler::compile_with_opts;
+
+    let g = ModelKind::Gpt2.build(2048);
+    let tree = build_strategy(&g, StrategySpec::hybrid(512, 1, 8, 4)).unwrap();
+    let c = Cluster::preset(Preset::HC4, 512);
+    assert_eq!(c.num_devices(), 4096);
+    let (eg, stats) = compile_with_opts(&g, &tree, &c, None, true).unwrap();
+    assert!(!stats.fold_fallback, "fold fell back at 4096 devices");
+    assert_eq!(stats.fold_classes, 8, "one class per pipeline stage");
+    assert_eq!(stats.fold_devices_folded, 4096 - 8);
+    assert!(
+        eg.n_tasks() * 100 <= eg.logical_tasks(),
+        "{} materialized vs {} logical: less than a 100× reduction",
+        eg.n_tasks(),
+        eg.logical_tasks()
+    );
+
+    // Same per-replica workload at dp=8: identical materialized graph
+    // size — the slice plus the kept cross collectives, nothing that
+    // scales with the replica count.
+    let g8 = ModelKind::Gpt2.build(32);
+    let tree8 = build_strategy(&g8, StrategySpec::hybrid(8, 1, 8, 4)).unwrap();
+    let c8 = Cluster::preset(Preset::HC4, 8);
+    let (eg8, stats8) = compile_with_opts(&g8, &tree8, &c8, None, true).unwrap();
+    assert!(!stats8.fold_fallback);
+    assert_eq!(
+        eg.n_tasks(),
+        eg8.n_tasks(),
+        "materialized task count must not depend on the DP width"
+    );
+
+    let est = OpEstimator::analytical(&c);
+    let cfg = HtaeConfig {
+        gamma: calibrate::default_gamma(&c),
+        ..HtaeConfig::default()
+    };
+    let r = Htae::with_config(&c, &est, cfg).simulate(&eg).unwrap();
+    assert!(r.step_ms.is_finite() && r.step_ms > 0.0);
+    assert!(r.throughput > 0.0);
+    assert_eq!(
+        r.peak_mem.len(),
+        4096,
+        "peaks must expand to every physical device"
+    );
+}
+
 /// Recompute tasks must not start before the backward reaches their
 /// segment (the per-chain gate; DESIGN.md §10).
 #[test]
