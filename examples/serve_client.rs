@@ -1,0 +1,85 @@
+//! Drive a `proteus serve` daemon over stdin/stdout.
+//!
+//! Spawns the `proteus` binary as a child process, sends three NDJSON
+//! requests — a simulate, the *same* simulate again, and a sweep — and
+//! prints each response's cache-hit trajectory: the repeat is answered
+//! from the warm template cache (hits > 0, misses = 0), and its body is
+//! byte-identical to the first answer.
+//!
+//! ```text
+//! cargo build && cargo run --example serve_client
+//! ```
+//!
+//! Set `PROTEUS_BIN` to point at a specific binary; otherwise the
+//! example looks next to its own target directory
+//! (`target/<profile>/proteus`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Command, Stdio};
+
+/// Locate the `proteus` binary: `$PROTEUS_BIN`, or sibling of this
+/// example's target directory.
+fn proteus_bin() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("PROTEUS_BIN") {
+        return Some(p.into());
+    }
+    // target/<profile>/examples/serve_client → target/<profile>/proteus
+    let exe = std::env::current_exe().ok()?;
+    let profile_dir = exe.parent()?.parent()?;
+    let bin = profile_dir.join(format!("proteus{}", std::env::consts::EXE_SUFFIX));
+    bin.exists().then_some(bin)
+}
+
+fn main() {
+    let Some(bin) = proteus_bin() else {
+        // Graceful no-op so `cargo run --example` works before `cargo
+        // build` has produced the binary.
+        println!("serve_client: proteus binary not found (set PROTEUS_BIN or run `cargo build` first)");
+        return;
+    };
+    let mut child = Command::new(&bin)
+        .args(["serve", "--threads", "1"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn proteus serve");
+
+    let simulate = r#"{"id":"sim-cold","cmd":"simulate","model":"vgg19","batch":16,"preset":"HC1","nodes":1,"dp":2}"#;
+    let repeat = simulate.replace("sim-cold", "sim-warm");
+    let sweep = r#"{"id":"sweep","cmd":"sweep","model":"vgg19","batch":16,"preset":"HC1","nodes":1,"top":3,"threads":2}"#;
+
+    // Write all three requests, then close stdin so the daemon drains
+    // the queue and exits.
+    {
+        let mut stdin = child.stdin.take().expect("child stdin");
+        for req in [simulate, &repeat, sweep] {
+            writeln!(stdin, "{req}").expect("write request");
+        }
+    }
+
+    let stdout = child.stdout.take().expect("child stdout");
+    let mut n = 0usize;
+    for line in BufReader::new(stdout).lines() {
+        let line = line.expect("read response");
+        n += 1;
+        // Envelope prefix: {"id":…,"ok":…,"cache_hits":H,"cache_misses":M,…
+        let field = |key: &str| -> String {
+            let pat = format!("\"{key}\":");
+            let rest = &line[line.find(&pat).map(|i| i + pat.len()).unwrap_or(0)..];
+            rest[..rest.find([',', '}']).unwrap_or(rest.len())].to_string()
+        };
+        println!(
+            "response {n}: id={} ok={} cache_hits={} cache_misses={} ({} bytes)",
+            field("id"),
+            field("ok"),
+            field("cache_hits"),
+            field("cache_misses"),
+            line.len(),
+        );
+    }
+    let status = child.wait().expect("wait for daemon");
+    assert!(status.success(), "proteus serve exited with {status}");
+    assert_eq!(n, 3, "expected one response per request");
+    println!("daemon exited cleanly after {n} responses");
+}

@@ -23,6 +23,9 @@ COMMANDS:
   compare     Sweep the strategies of a JSON experiment config
   sweep       Rank an exhaustive strategy grid in parallel (SweepRunner)
   search      Simulated-annealing search over non-uniform strategy trees
+  serve       Daemon: NDJSON requests on stdin, one JSON response per
+              line on stdout, concurrent on a warm session
+              ([--threads N], 0 = one worker per core)
   calibrate   Measure the overlap factor gamma per hardware preset
   info        Print a model's structure statistics
   bench-cost  Benchmark the PJRT vs analytical cost backends
@@ -86,6 +89,11 @@ COLLECTIVES (simulate, sweep, search):
 OUTPUT / VALIDATION:
   --json            machine-readable JSON on stdout (simulate, sweep,
                     search; schemas documented in README.md)
+  --no-timings      omit wall-clock fields from --json (simulate, sweep):
+                    the remaining document is the stable, byte-
+                    reproducible schema subset serve responses use
+  --compact         print --json documents on one line (the serve
+                    response body format)
   --compile-stats   print per-pass compiler timings and counters
                     (template/weave/instantiate/finalize; simulate)
   --plain           disable runtime-behavior modeling (ablation)

@@ -7,7 +7,8 @@
 //!                   [--nics N] [--oversub R] [--fold]
 //!                   [--schedule gpipe|1f1b|interleaved[:v]] [--vstages N]
 //!                   [--zero] [--recompute] [--emb-shard] [--plain]
-//!                   [--truth] [--json] [--trace out.json]
+//!                   [--truth] [--json] [--no-timings] [--compact]
+//!                   [--trace out.json]
 //!                   [--artifacts artifacts/costmodel.hlo.txt]
 //! proteus compare   --config configs/gpt2_hc2.json [--truth]
 //! proteus sweep     --model gpt2 --batch 64 --preset HC2 --nodes 2
@@ -20,48 +21,56 @@
 //!                   [--no-delta] [--no-prune] [--fold]
 //!                   [--nics N] [--oversub R]
 //!                   [--wall-secs S] [--plain] [--json]
+//! proteus serve     [--threads N]
 //! proteus calibrate [--out configs/gamma.json]
 //! proteus info      --model resnet50 [--batch 32]
 //! proteus bench-cost [--rows 65536] [--artifacts ...]
 //! ```
 //!
-//! The full flag reference is [`args::HELP`]; the `--json` output
-//! schemas are documented in the repo README.
+//! This module is a thin shell: it parses flags into the typed request
+//! structs of [`crate::session`], runs them against one
+//! [`Session`], and formats the typed responses — every compile and
+//! simulate happens inside the session layer, which `proteus serve`
+//! shares for long-lived concurrent use. The full flag reference is
+//! [`args::HELP`]; the `--json` output schemas are documented in the
+//! repo README.
 
 pub mod args;
 
-use crate::baselines::FlexFlowSim;
-use crate::cluster::{Cluster, Preset};
+use crate::cluster::Preset;
 use crate::collective::CollAlgo;
-use crate::emulator::{Emulator, EmulatorConfig};
-use crate::estimator::OpEstimator;
-use crate::executor::{calibrate, Htae, HtaeConfig};
 use crate::models::ModelKind;
-use crate::strategy::{build_strategy, PipelineSchedule, StrategySpec};
+use crate::session::{
+    parse_schedules, spec_from_json, SearchInit, SearchRequest, Session, SimulateRequest,
+    SweepRequest,
+};
+use crate::strategy::{PipelineSchedule, StrategySpec};
+use crate::util::fmt_bytes;
 use crate::util::json::Json;
 use crate::util::table::Table;
-use crate::util::{fmt_bytes, rel_err_pct};
 use crate::{Error, Result};
 
+pub use crate::session::DEFAULT_ARTIFACT;
 pub use args::{Args, HELP};
 
-/// Default artifact path.
-pub const DEFAULT_ARTIFACT: &str = "artifacts/costmodel.hlo.txt";
-
-/// Entry point: dispatch a parsed command line.
+/// Entry point: dispatch a parsed command line. Every command runs
+/// against one fresh [`Session`]; `proteus serve` keeps that session
+/// alive across many requests.
 pub fn run(args: &Args) -> Result<()> {
     if args.flag("help") {
         print!("{}", HELP);
         return Ok(());
     }
+    let session = Session::new();
     match args.command.as_str() {
-        "simulate" => cmd_simulate(args),
-        "compare" => cmd_compare(args),
-        "sweep" => cmd_sweep(args),
-        "search" => cmd_search(args),
-        "calibrate" => cmd_calibrate(args),
-        "info" => cmd_info(args),
-        "bench-cost" => cmd_bench_cost(args),
+        "simulate" => cmd_simulate(args, &session),
+        "compare" => cmd_compare(args, &session),
+        "sweep" => cmd_sweep(args, &session),
+        "search" => cmd_search(args, &session),
+        "serve" => cmd_serve(args, &session),
+        "calibrate" => cmd_calibrate(args, &session),
+        "info" => cmd_info(args, &session),
+        "bench-cost" => cmd_bench_cost(args, &session),
         "" | "help" => {
             print!("{}", HELP);
             Ok(())
@@ -72,8 +81,10 @@ pub fn run(args: &Args) -> Result<()> {
     }
 }
 
-/// Build the `(model, cluster, spec)` triple shared by commands.
-fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Cluster, StrategySpec)> {
+/// Parse the `(model, batch, preset, nodes, spec)` workload shared by
+/// commands. Cluster construction happens inside the session (memoized
+/// per `(preset, nodes, fabric)`), so this stays pure flag-parsing.
+fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Preset, usize, StrategySpec)> {
     let model = args.get_or("model", "gpt2");
     let model = ModelKind::parse(&model)
         .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
@@ -82,7 +93,6 @@ fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Cluster, StrategySpe
     let preset = Preset::parse(&preset)
         .ok_or_else(|| Error::Config(format!("unknown preset '{preset}'")))?;
     let nodes = args.get_usize("nodes", preset.max_nodes())?;
-    let cluster = build_cluster(args, preset, nodes)?;
     let mut spec = StrategySpec::hybrid(
         args.get_usize("dp", 1)?,
         args.get_usize("mp", 1)?,
@@ -114,7 +124,7 @@ fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Cluster, StrategySpe
         }
     }
     spec.schedule = sched;
-    Ok((model, batch, cluster, spec))
+    Ok((model, batch, preset, nodes, spec))
 }
 
 /// Parse the optional `--nics` / `--oversub` fabric overrides.
@@ -132,23 +142,6 @@ fn fabric_overrides(args: &Args) -> Result<(Option<usize>, Option<f64>)> {
     Ok((nics, oversub))
 }
 
-/// Build the cluster for `preset` × `nodes`, applying the optional
-/// `--nics` / `--oversub` fabric overrides. The overridden spec goes
-/// back through [`Cluster::from_spec`], so an invalid combination
-/// (more NICs than GPU ports, oversubscription below 1.0) fails with
-/// the same validation errors a hand-written spec would.
-fn build_cluster(args: &Args, preset: Preset, nodes: usize) -> Result<Cluster> {
-    let (nics, oversub) = fabric_overrides(args)?;
-    let mut spec = crate::cluster::presets::spec(preset, nodes);
-    if let Some(k) = nics {
-        spec.nics_per_node = k;
-    }
-    if let Some(r) = oversub {
-        spec.oversubscription = r;
-    }
-    Cluster::from_spec(&spec)
-}
-
 /// Parse `--coll-algo` (collective lowering override; `auto` selects
 /// ring/tree/hierarchical per collective, `mono` is the monolithic
 /// ablation path).
@@ -161,22 +154,13 @@ fn parse_coll_algo(args: &Args) -> Result<CollAlgo> {
     })
 }
 
-/// Parse the sweep's `--schedules` set.
-fn parse_schedules(s: &str) -> Result<Vec<PipelineSchedule>> {
-    if s == "all" {
-        return Ok(PipelineSchedule::all());
+/// Print a `--json` document honoring `--compact`.
+fn print_doc(doc: &Json, compact: bool) {
+    if compact {
+        println!("{}", doc.to_string_compact());
+    } else {
+        println!("{}", doc.to_string_pretty());
     }
-    s.split(',')
-        .map(|tok| {
-            PipelineSchedule::parse(tok.trim())
-                .ok_or_else(|| Error::Config(format!("unknown schedule '{tok}'")))
-        })
-        .collect()
-}
-
-fn estimator<'c>(args: &Args, cluster: &'c Cluster) -> OpEstimator<'c> {
-    let path = args.get_or("artifacts", DEFAULT_ARTIFACT);
-    OpEstimator::best_available(cluster, &path)
 }
 
 /// Text rendering of `--compile-stats`: per-pass timings and task/dep
@@ -222,50 +206,13 @@ fn print_compile_stats(s: &crate::compiler::CompileStats) {
     }
 }
 
-/// JSON rendering of `--compile-stats` (schema in README).
-fn compile_stats_json(s: &crate::compiler::CompileStats) -> Json {
-    Json::obj(vec![
-        ("template_s", Json::Num(s.template_s)),
-        ("weave_s", Json::Num(s.weave_s)),
-        ("instantiate_s", Json::Num(s.instantiate_s)),
-        ("finalize_s", Json::Num(s.finalize_s)),
-        ("cache_hit", Json::Bool(s.cache_hit)),
-        ("segments", Json::Num(s.n_segments as f64)),
-        ("template_slots", Json::Num(s.template_slots as f64)),
-        ("template_tasks", Json::Num(s.template_tasks as f64)),
-        ("preamble_tasks", Json::Num(s.preamble_tasks as f64)),
-        (
-            "template_layer_emissions",
-            Json::Num(s.template_layer_emissions as f64),
-        ),
-        (
-            "template_transforms",
-            Json::Num(s.template_transforms as f64),
-        ),
-        ("n_micro", Json::Num(s.n_micro as f64)),
-        ("n_chunks", Json::Num(s.n_chunks as f64)),
-        ("tasks", Json::Num(s.n_tasks as f64)),
-        ("deps", Json::Num(s.n_deps as f64)),
-        ("logical_tasks", Json::Num(s.logical_tasks as f64)),
-        ("fold_classes", Json::Num(s.fold_classes as f64)),
-        (
-            "fold_devices_folded",
-            Json::Num(s.fold_devices_folded as f64),
-        ),
-        ("fold_fallback", Json::Bool(s.fold_fallback)),
-        ("fold_s", Json::Num(s.fold_s)),
-    ])
-}
-
 /// Base field list of the `proteus simulate --json` document (schema in
-/// README.md). `cmd_simulate` appends the optional compile-stats /
-/// truth / flexflow sections before printing. Exported so the fold
-/// differential harness (`tests/differential_fold.rs`) can render the
-/// document with pinned wall-clock fields and byte-compare a folded run
-/// against an unfolded one: every field except the two wall-clock
-/// timings is bit-deterministic, and `tasks` is the *logical* task
-/// count, which folding preserves (the materialized count lives in
-/// compile-stats).
+/// README.md) with the wall-clock fields included. Kept as a stable
+/// entry point for the fold differential harness
+/// (`tests/differential_fold.rs`), which renders the document with
+/// pinned wall-clock values and byte-compares a folded run against an
+/// unfolded one; the canonical builder is
+/// [`crate::session::simulate_fields`].
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_json(
     model: &str,
@@ -280,196 +227,146 @@ pub fn simulate_json(
     simulate_s: f64,
     report: &crate::executor::SimReport,
 ) -> Vec<(&'static str, Json)> {
-    vec![
-        ("model", Json::Str(model.into())),
-        ("strategy", Json::Str(strategy)),
-        ("schedule", Json::Str(schedule)),
-        ("coll_algo", Json::Str(coll_algo.name().into())),
-        ("cluster", Json::Str(cluster_name.into())),
-        ("gpus", Json::Num(gpus as f64)),
-        ("backend", Json::Str(backend.into())),
-        ("tasks", Json::Num(logical_tasks as f64)),
-        ("compile_s", Json::Num(compile_s)),
-        ("simulate_s", Json::Num(simulate_s)),
-        ("step_ms", Json::Num(report.step_ms)),
-        ("throughput_samples_per_s", Json::Num(report.throughput)),
-        ("oom", Json::Bool(report.oom)),
-        (
-            "peak_mem_bytes",
-            Json::Arr(
-                report
-                    .peak_mem
-                    .iter()
-                    .map(|&b| Json::Num(b as f64))
-                    .collect(),
-            ),
-        ),
-        (
-            "peak_act_bytes",
-            Json::Arr(
-                report
-                    .peak_act
-                    .iter()
-                    .map(|&b| Json::Num(b as f64))
-                    .collect(),
-            ),
-        ),
-        ("overlapped_ops", Json::Num(report.overlapped_ops as f64)),
-        ("shared_ops", Json::Num(report.shared_ops as f64)),
-    ]
+    crate::session::simulate_fields(
+        model,
+        strategy,
+        schedule,
+        coll_algo,
+        cluster_name,
+        gpus,
+        backend,
+        logical_tasks,
+        Some((compile_s, simulate_s)),
+        report,
+    )
 }
 
-fn cmd_simulate(args: &Args) -> Result<()> {
-    let (model, batch, cluster, spec) = parse_workload(args)?;
+/// Build the `proteus search --json` document — a stable entry point
+/// for the delta differential harness (`tests/differential_search.rs`);
+/// the canonical builder is [`crate::session::search_doc`].
+#[allow(clippy::too_many_arguments)]
+pub fn search_json(
+    model: &str,
+    batch: usize,
+    cluster_name: &str,
+    gpus: usize,
+    seed: u64,
+    budget: usize,
+    n_chains: usize,
+    coll_algo: CollAlgo,
+    result: &crate::runtime::SearchResult,
+) -> Json {
+    crate::session::search_doc(
+        model,
+        batch,
+        cluster_name,
+        gpus,
+        seed,
+        budget,
+        n_chains,
+        coll_algo,
+        result,
+    )
+}
+
+fn cmd_simulate(args: &Args, session: &Session) -> Result<()> {
+    let (model, batch, preset, nodes, spec) = parse_workload(args)?;
+    let (nics, oversub) = fabric_overrides(args)?;
     let plain = args.flag("plain");
     let truth = args.flag("truth");
     let flexflow = args.flag("flexflow");
     let json = args.flag("json");
     let compile_stats = args.flag("compile-stats");
+    let no_timings = args.flag("no-timings");
+    let compact = args.flag("compact");
     let fold = args.flag("fold");
     let coll_algo = parse_coll_algo(args)?;
     let trace_path = args.get("trace").map(|s| s.to_string());
+    // Read --artifacts before the unknown-option pass: reading it only
+    // after reject_unknown() made `simulate --artifacts PATH` fail as
+    // an unknown option even though HELP documents it.
+    let artifacts = args.get_or("artifacts", DEFAULT_ARTIFACT);
     args.reject_unknown()?;
 
-    let graph = model.build(batch);
-    let tree = build_strategy(&graph, spec)?;
-    let t0 = std::time::Instant::now();
-    let (eg, cstats) = crate::compiler::compile_with_opts(&graph, &tree, &cluster, None, fold)?;
-    let compile_s = t0.elapsed().as_secs_f64();
-    let est = estimator(args, &cluster);
-    let mut config = if plain {
-        HtaeConfig::plain()
-    } else {
-        HtaeConfig {
-            gamma: calibrate::default_gamma(&cluster),
-            ..HtaeConfig::default()
-        }
+    let req = SimulateRequest {
+        model,
+        batch,
+        preset,
+        nodes,
+        nics,
+        oversub,
+        spec,
+        plain,
+        truth,
+        flexflow,
+        fold,
+        coll_algo,
+        trace: trace_path.is_some(),
+        artifacts,
     };
-    config.coll_algo = coll_algo;
-    config.record_timeline = trace_path.is_some();
-    let t1 = std::time::Instant::now();
-    let report = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
-    let exe_s = t1.elapsed().as_secs_f64();
-    let backend = if est.is_pjrt() { "pjrt" } else { "analytical" };
-    // Run the optional validators once, up front, so the JSON and text
-    // paths cannot drift. The emulated truth uses the same collective
-    // lowering as the prediction.
-    let truth_report = if truth {
-        let emu_config = EmulatorConfig {
-            coll_algo,
-            ..EmulatorConfig::default()
-        };
-        Some(Emulator::with_config(&cluster, &est, emu_config).simulate(&eg)?)
-    } else {
-        None
-    };
-    let flexflow_report = if flexflow {
-        Some(FlexFlowSim::new(&cluster).simulate(&graph, &tree, &eg))
-    } else {
-        None
-    };
+    let resp = session.simulate(&req)?;
 
     if json {
         // Schema documented in README.md ("JSON output").
-        let mut fields = simulate_json(
-            model.name(),
-            spec.label(),
-            spec.schedule.name(),
-            coll_algo,
-            &cluster.name,
-            cluster.num_devices(),
-            backend,
-            eg.logical_tasks(),
-            compile_s,
-            exe_s,
-            &report,
-        );
-        if compile_stats {
-            fields.push(("compile_stats", compile_stats_json(&cstats)));
-        }
-        if let Some(t) = &truth_report {
-            fields.push((
-                "truth",
-                Json::obj(vec![
-                    ("step_ms", Json::Num(t.step_ms)),
-                    ("throughput_samples_per_s", Json::Num(t.throughput)),
-                    ("err_pct", Json::Num(rel_err_pct(report.step_ms, t.step_ms))),
-                ]),
-            ));
-        }
-        if let Some(ff) = &flexflow_report {
-            fields.push((
-                "flexflow",
-                match ff {
-                    Ok(f) => Json::obj(vec![("step_ms", Json::Num(f.step_ms))]),
-                    Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
-                },
-            ));
-        }
-        println!("{}", Json::obj(fields).to_string_pretty());
+        print_doc(&resp.to_json(!no_timings, compile_stats), compact);
     } else {
         println!(
             "model={} strategy={} cluster={}({} GPUs) backend={} coll={}",
-            model.name(),
-            spec.label(),
-            cluster.name,
-            cluster.num_devices(),
-            backend,
-            coll_algo.name(),
+            resp.model,
+            resp.strategy,
+            resp.cluster,
+            resp.gpus,
+            resp.backend,
+            resp.coll_algo.name(),
         );
         println!(
             "tasks={} compile={:.3}s simulate={:.3}s",
-            eg.logical_tasks(),
-            compile_s,
-            exe_s
+            resp.logical_tasks, resp.compile_s, resp.simulate_s
         );
-        if let Some(f) = eg.fold() {
+        if resp.stats.fold_classes > 0 {
             println!(
                 "folded: {} device classes, {} devices elided, {} tasks materialized",
-                f.n_classes,
-                f.devices_folded,
-                eg.n_tasks(),
+                resp.stats.fold_classes,
+                resp.stats.fold_devices_folded,
+                resp.stats.n_tasks,
             );
-        } else if cstats.fold_fallback {
+        } else if resp.stats.fold_fallback {
             println!("folded: fallback to unfolded graph (symmetry unprovable)");
         }
         println!(
             "step={:.2} ms  throughput={:.1} samples/s  oom={}  peak_mem={}",
-            report.step_ms,
-            report.throughput,
-            report.oom,
-            fmt_bytes(report.peak_mem.iter().copied().max().unwrap_or(0)),
+            resp.report.step_ms,
+            resp.report.throughput,
+            resp.report.oom,
+            fmt_bytes(resp.report.peak_mem.iter().copied().max().unwrap_or(0)),
         );
         println!(
             "behaviors: {} overlapped comps, {} bandwidth-shared comms",
-            report.overlapped_ops, report.shared_ops
+            resp.report.overlapped_ops, resp.report.shared_ops
         );
         if compile_stats {
-            print_compile_stats(&cstats);
+            print_compile_stats(&resp.stats);
         }
-        if let Some(t) = &truth_report {
+        if let Some(t) = &resp.truth {
             println!(
                 "emulator(truth): step={:.2} ms throughput={:.1}  HTAE error={:.2}%",
                 t.step_ms,
                 t.throughput,
-                rel_err_pct(report.step_ms, t.step_ms)
+                crate::util::rel_err_pct(resp.report.step_ms, t.step_ms)
             );
         }
-        if let Some(ff) = &flexflow_report {
+        if let Some(ff) = &resp.flexflow {
             match ff {
-                Ok(f) => println!("flexflow-sim: step={:.2} ms", f.step_ms),
+                Ok(step_ms) => println!("flexflow-sim: step={step_ms:.2} ms"),
                 Err(e) => println!("flexflow-sim: unsupported ({e})"),
             }
         }
     }
     if let Some(path) = trace_path {
-        crate::trace::write_chrome_trace(
-            &path,
-            &graph,
-            &eg,
-            &report.timeline,
-            &report.comm_phases,
-        )?;
+        // `req.trace` was set, so the response carries the rendered
+        // trace document; written compact like `write_chrome_trace`.
+        let trace = resp.trace.as_ref().expect("trace requested but not rendered");
+        std::fs::write(&path, trace.to_string_compact())?;
         if !json {
             println!("trace written to {path}");
         }
@@ -477,31 +374,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Strategy entry of an experiment config file.
-fn spec_from_json(j: &Json) -> Result<StrategySpec> {
-    let g = |k: &str, d: usize| -> usize {
-        j.get(k).and_then(|v| v.as_usize()).unwrap_or(d)
-    };
-    let mut spec = StrategySpec::hybrid(g("dp", 1), g("mp", 1), g("pp", 1), g("micro", 1));
-    spec.zero = j.get("zero").and_then(|v| v.as_bool()).unwrap_or(false);
-    spec.recompute = j.get("recompute").and_then(|v| v.as_bool()).unwrap_or(false);
-    spec.shard_embeddings = j
-        .get("emb_shard")
-        .and_then(|v| v.as_bool())
-        .unwrap_or(false);
-    if let Some(s) = j.get("schedule").and_then(|v| v.as_str()) {
-        spec.schedule = PipelineSchedule::parse(s)
-            .ok_or_else(|| Error::Config(format!("config: unknown schedule '{s}'")))?;
-    }
-    Ok(spec)
-}
-
-fn cmd_compare(args: &Args) -> Result<()> {
+fn cmd_compare(args: &Args, session: &Session) -> Result<()> {
     let path = args
         .get("config")
         .ok_or_else(|| Error::Config("compare requires --config FILE".into()))?
         .to_string();
     let truth = args.flag("truth");
+    // Like cmd_simulate: --artifacts must be consumed before the
+    // unknown-option pass.
+    let artifacts = args.get_or("artifacts", DEFAULT_ARTIFACT);
     args.reject_unknown()?;
     let text = std::fs::read_to_string(&path)?;
     let doc = Json::parse(&text).map_err(|e| Error::Config(e.to_string()))?;
@@ -523,47 +404,37 @@ fn cmd_compare(args: &Args) -> Result<()> {
         .get("nodes")
         .and_then(|v| v.as_usize())
         .unwrap_or(preset.max_nodes());
-    let cluster = Cluster::preset(preset, nodes);
     let strategies = doc
         .get("strategies")
         .and_then(|v| v.as_arr())
         .ok_or_else(|| Error::Config("config: 'strategies' must be an array".into()))?;
+    let specs: Vec<StrategySpec> = strategies
+        .iter()
+        .map(spec_from_json)
+        .collect::<Result<_>>()?;
 
-    let graph = model.build(batch);
-    let est = estimator(args, &cluster);
-    let config = HtaeConfig {
-        gamma: calibrate::default_gamma(&cluster),
-        ..HtaeConfig::default()
-    };
+    let resp = session.compare(model, batch, preset, nodes, &specs, truth, &artifacts)?;
     let mut table = Table::new(&if truth {
         vec!["strategy", "step_ms", "samples/s", "oom", "truth_ms", "err%"]
     } else {
         vec!["strategy", "step_ms", "samples/s", "oom"]
     });
-    for sj in strategies {
-        let spec = spec_from_json(sj)?;
-        let tree = build_strategy(&graph, spec)?;
-        let eg = crate::compiler::compile(&graph, &tree, &cluster)?;
-        let r = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
-        let mut row = vec![
-            spec.label(),
-            format!("{:.2}", r.step_ms),
-            format!("{:.1}", r.throughput),
-            r.oom.to_string(),
+    for row in &resp.rows {
+        let mut cells = vec![
+            row.strategy.clone(),
+            format!("{:.2}", row.step_ms),
+            format!("{:.1}", row.throughput),
+            row.oom.to_string(),
         ];
-        if truth {
-            let t = Emulator::new(&cluster, &est).simulate(&eg)?;
-            row.push(format!("{:.2}", t.step_ms));
-            row.push(format!("{:.2}", rel_err_pct(r.step_ms, t.step_ms)));
+        if let Some((truth_ms, err_pct)) = row.truth {
+            cells.push(format!("{truth_ms:.2}"));
+            cells.push(format!("{err_pct:.2}"));
         }
-        table.row(row);
+        table.row(cells);
     }
     println!(
         "{} batch={} on {} ({} GPUs)",
-        model.name(),
-        batch,
-        cluster.name,
-        cluster.num_devices()
+        resp.model, resp.batch, resp.cluster, resp.gpus
     );
     print!("{}", table.render());
     Ok(())
@@ -572,10 +443,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
 /// Simulated-annealing search over non-uniform strategy trees
 /// (`runtime::search`): the simulator as an optimizer, not just a
 /// scorer.
-fn cmd_search(args: &Args) -> Result<()> {
-    use crate::runtime::{default_inits, SearchConfig, SearchPoint, Searcher};
-    use crate::strategy::NonUniformSpec;
-
+fn cmd_search(args: &Args, session: &Session) -> Result<()> {
     let model = args.get_or("model", "gpt2");
     let model = ModelKind::parse(&model)
         .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
@@ -590,6 +458,7 @@ fn cmd_search(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 0)?;
     let plain = args.flag("plain");
     let json = args.flag("json");
+    let compact = args.flag("compact");
     let coll_algo = parse_coll_algo(args)?;
     let fixed_coll = args.flag("fixed-coll");
     let init = args.get("init").map(str::to_string);
@@ -604,106 +473,59 @@ fn cmd_search(args: &Args) -> Result<()> {
         })
         .transpose()?;
     let fold = args.flag("fold");
-    let cluster = build_cluster(args, preset, nodes)?;
+    let (nics, oversub) = fabric_overrides(args)?;
     args.reject_unknown()?;
 
-    let n = cluster.num_devices();
-    let graph = model.build(batch);
-
-    // Seed points: a resumed best spec, an explicit uniform label, or
-    // the heuristic expert set.
-    let inits: Vec<SearchPoint> = if let Some(path) = resume {
+    // The file I/O stays in the CLI; the session validates the resumed
+    // spec against this request's workload.
+    let init = if let Some(path) = resume {
         let text = std::fs::read_to_string(&path)?;
         let doc = Json::parse(&text).map_err(|e| Error::Config(e.to_string()))?;
-        let best = doc
-            .get("best")
-            .filter(|b| **b != Json::Null)
-            .ok_or_else(|| Error::Config(format!("{path}: no 'best' result to resume from")))?;
-        let spec = best
-            .get("spec")
-            .ok_or_else(|| Error::Config(format!("{path}: 'best' has no 'spec'")))
-            .and_then(NonUniformSpec::from_json)?;
-        // The file records the spec, not the workload it was found on: a
-        // resumed spec must be re-validated against *this* invocation's
-        // device budget and model, and must fail cleanly here rather
-        // than deep inside the first chain evaluation.
-        if spec.n_devices() > n {
-            return Err(Error::Config(format!(
-                "{path}: resumed spec {} uses {} devices but {}x{nodes} provides {n}",
-                spec.label(),
-                spec.n_devices(),
-                preset.name()
-            )));
-        }
-        spec.validate(&graph).map_err(|e| {
-            Error::Config(format!(
-                "{path}: resumed spec {} is invalid for {} at batch {batch}: {e}",
-                spec.label(),
-                model.name()
-            ))
-        })?;
-        let coll = best
-            .get("coll_algo")
-            .and_then(|v| v.as_str())
-            .and_then(CollAlgo::parse)
-            .unwrap_or(coll_algo);
-        vec![SearchPoint {
-            spec,
-            coll_algo: coll,
-        }]
+        SearchInit::Resume { doc, origin: path }
     } else if let Some(label) = init {
-        let uspec = StrategySpec::parse_label(&label)
-            .ok_or_else(|| Error::Config(format!("--init: cannot parse spec label '{label}'")))?;
-        vec![SearchPoint {
-            spec: NonUniformSpec::from_uniform(&graph, uspec)?,
-            coll_algo,
-        }]
+        SearchInit::Label(label)
     } else {
-        default_inits(&graph, n, coll_algo)
+        SearchInit::Default
     };
-
-    let config = SearchConfig {
+    let req = SearchRequest {
+        model,
+        batch,
+        preset,
+        nodes,
+        nics,
+        oversub,
         seed,
         budget,
         chains,
         threads,
         plain,
+        coll_algo,
         mutate_coll: !fixed_coll,
         delta: !no_delta,
         prune: !no_prune,
-        fold,
         wall_s,
-        ..SearchConfig::default()
+        fold,
+        init,
     };
-    let result = Searcher::new(config).run(&graph, &cluster, &inits)?;
+    let resp = session.search(&req)?;
 
     if json {
-        let doc = search_json(
-            model.name(),
-            batch,
-            &cluster.name,
-            n,
-            seed,
-            budget,
-            chains,
-            coll_algo,
-            &result,
-        );
-        println!("{}", doc.to_string_pretty());
+        print_doc(&resp.to_json(), compact);
         return Ok(());
     }
 
+    let result = &resp.result;
     println!(
         "searched {} candidates for {} b={} on {}({} GPUs): {} chains, seed {} — {:.2}s \
          (template cache: {} misses, {} hits; delta hits {}, full compiles {}, \
          bound-pruned {})",
         result.evals,
-        model.name(),
-        batch,
-        cluster.name,
-        n,
-        chains,
-        seed,
+        resp.model,
+        resp.batch,
+        resp.cluster,
+        resp.gpus,
+        resp.chains,
+        resp.seed,
         result.wall_s,
         result.cache_misses,
         result.cache_hits,
@@ -764,97 +586,9 @@ fn cmd_search(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build the `proteus search --json` document from a finished
-/// [`crate::runtime::SearchResult`]. Schema documented in README.md
-/// ("JSON output"); deliberately free of wall-clock times and
-/// template-cache counters so a seeded run is byte-reproducible — the
-/// CI determinism gate diffs two runs, and the delta differential
-/// harness (`tests/differential_search.rs`) diffs a delta run against a
-/// `--no-delta` run through this exact function. The delta/full/prune
-/// counters it does include are classification-based and equally
-/// deterministic.
-#[allow(clippy::too_many_arguments)]
-pub fn search_json(
-    model: &str,
-    batch: usize,
-    cluster_name: &str,
-    gpus: usize,
-    seed: u64,
-    budget: usize,
-    n_chains: usize,
-    coll_algo: CollAlgo,
-    result: &crate::runtime::SearchResult,
-) -> Json {
-    let best_json = match &result.best {
-        None => Json::Null,
-        Some(b) => Json::obj(vec![
-            ("label", Json::Str(b.label.clone())),
-            ("step_ms", Json::Num(b.step_ms)),
-            ("throughput_samples_per_s", Json::Num(b.throughput)),
-            ("peak_mem_bytes", Json::Num(b.peak_mem as f64)),
-            ("oom", Json::Bool(b.oom)),
-            ("coll_algo", Json::Str(b.point.coll_algo.name().into())),
-            ("fold_classes", Json::Num(b.fold_classes as f64)),
-            (
-                "fold_devices_folded",
-                Json::Num(b.fold_devices_folded as f64),
-            ),
-            ("fold_fallback", Json::Bool(b.fold_fallback)),
-            ("spec", b.point.spec.to_json()),
-        ]),
-    };
-    let chains_json: Vec<Json> = result
-        .chains
-        .iter()
-        .map(|c| {
-            Json::obj(vec![
-                ("chain", Json::Num(c.chain as f64)),
-                ("seed", Json::Num(c.seed as f64)),
-                ("evals", Json::Num(c.evals as f64)),
-                ("accepted", Json::Num(c.accepted as f64)),
-                ("infeasible", Json::Num(c.infeasible as f64)),
-                ("delta_hits", Json::Num(c.delta_hits as f64)),
-                ("full_compiles", Json::Num(c.full_compiles as f64)),
-                ("bound_prunes", Json::Num(c.bound_prunes as f64)),
-                (
-                    "best_label",
-                    c.best
-                        .as_ref()
-                        .map(|e| Json::Str(e.label.clone()))
-                        .unwrap_or(Json::Null),
-                ),
-                (
-                    "best_throughput_samples_per_s",
-                    c.best
-                        .as_ref()
-                        .map(|e| Json::Num(e.throughput))
-                        .unwrap_or(Json::Null),
-                ),
-            ])
-        })
-        .collect();
-    Json::obj(vec![
-        ("model", Json::Str(model.into())),
-        ("batch", Json::Num(batch as f64)),
-        ("cluster", Json::Str(cluster_name.into())),
-        ("gpus", Json::Num(gpus as f64)),
-        ("seed", Json::Num(seed as f64)),
-        ("budget", Json::Num(budget as f64)),
-        ("n_chains", Json::Num(n_chains as f64)),
-        ("coll_algo", Json::Str(coll_algo.name().into())),
-        ("evals", Json::Num(result.evals as f64)),
-        ("delta_hits", Json::Num(result.delta_hits as f64)),
-        ("full_compiles", Json::Num(result.full_compiles as f64)),
-        ("bound_prunes", Json::Num(result.bound_prunes as f64)),
-        ("best", best_json),
-        ("chains", Json::Arr(chains_json)),
-    ])
-}
-
-/// Rank an exhaustive strategy grid with the parallel [`SweepRunner`].
-fn cmd_sweep(args: &Args) -> Result<()> {
-    use crate::runtime::{candidate_grid_with_schedules, dedupe_specs, Scenario, SweepRunner};
-
+/// Rank an exhaustive strategy grid with the parallel
+/// [`crate::runtime::SweepRunner`].
+fn cmd_sweep(args: &Args, session: &Session) -> Result<()> {
     let model = args.get_or("model", "gpt2");
     let model = ModelKind::parse(&model)
         .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
@@ -868,165 +602,55 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let plain = args.flag("plain");
     let truth = args.flag("truth");
     let json = args.flag("json");
+    let no_timings = args.flag("no-timings");
+    let compact = args.flag("compact");
     let fold = args.flag("fold");
     let coll_algo = parse_coll_algo(args)?;
     let schedules = parse_schedules(&args.get_or("schedules", "1f1b"))?;
-    let artifact = args.get_or("artifacts", DEFAULT_ARTIFACT);
-    // Validates the overrides up front; the runner re-applies them to
-    // each scenario's cluster.
+    let artifacts = args.get_or("artifacts", DEFAULT_ARTIFACT);
     let (nics, oversub) = fabric_overrides(args)?;
-    let cluster = build_cluster(args, preset, nodes)?;
     args.reject_unknown()?;
 
-    let n = cluster.num_devices();
-    let graph = model.build(batch);
-    let grid = candidate_grid_with_schedules(n, batch, &schedules);
-    let n_grid = grid.len();
-    // Commuting factorizations (e.g. a no-op ZeRO toggle) resolve to
-    // identical strategies; simulate each resolved strategy once.
-    let specs = dedupe_specs(&graph, grid);
-    let n_dupes = n_grid - specs.len();
-    let scenarios: Vec<Scenario> = specs
-        .into_iter()
-        .map(|spec| Scenario {
-            model,
-            batch,
-            preset,
-            nodes,
-            spec,
-        })
-        .collect();
-    let runner = SweepRunner::new()
-        .with_threads(threads)
-        .plain(plain)
-        .coll_algo(coll_algo)
-        .fold(fold)
-        .fabric(nics, oversub);
-    let n_threads = runner.effective_threads(scenarios.len());
-    let t0 = std::time::Instant::now();
-    let outcomes = runner.run(&scenarios);
-    let wall = t0.elapsed();
-    let ranked = SweepRunner::rank(&outcomes);
-    let oom = outcomes.iter().filter(|o| o.oom).count();
-    let feasible = ranked.iter().filter(|o| !o.oom).count();
-    let failed = outcomes.iter().filter(|o| o.report.is_err()).count();
-    // Emulator validation of the top candidates, shared by both output
-    // modes: (label, truth step_ms, truth samples/s, HTAE err %).
-    // Only feasible candidates are validated — an OOM candidate cannot
-    // run, so emulating it would report an error for a configuration
-    // the ranking already marks unusable.
-    let truth_rows: Vec<(String, f64, f64, f64)> = if truth {
-        let est = OpEstimator::best_available(&cluster, &artifact);
-        let mut rows = Vec::new();
-        for o in ranked.iter().filter(|o| !o.oom).take(3) {
-            let tree = build_strategy(&graph, o.scenario.spec)?;
-            let eg = crate::compiler::compile(&graph, &tree, &cluster)?;
-            let emu_config = EmulatorConfig {
-                coll_algo,
-                ..EmulatorConfig::default()
-            };
-            let t = Emulator::with_config(&cluster, &est, emu_config).simulate(&eg)?;
-            let pred = o.report.as_ref().unwrap();
-            rows.push((
-                o.scenario.spec.label(),
-                t.step_ms,
-                t.throughput,
-                rel_err_pct(pred.step_ms, t.step_ms),
-            ));
-        }
-        rows
-    } else {
-        Vec::new()
+    let req = SweepRequest {
+        model,
+        batch,
+        preset,
+        nodes,
+        nics,
+        oversub,
+        schedules,
+        threads,
+        top,
+        plain,
+        truth,
+        fold,
+        coll_algo,
+        artifacts,
     };
+    let resp = session.sweep(&req)?;
+
     if json {
         // Schema documented in README.md ("JSON output").
-        let results: Vec<Json> = ranked
-            .iter()
-            .take(top)
-            .enumerate()
-            .map(|(i, o)| {
-                let r = o.report.as_ref().unwrap();
-                Json::obj(vec![
-                    ("rank", Json::Num((i + 1) as f64)),
-                    ("strategy", Json::Str(o.scenario.spec.label())),
-                    ("schedule", Json::Str(o.scenario.spec.schedule.name())),
-                    ("step_ms", Json::Num(r.step_ms)),
-                    ("throughput_samples_per_s", Json::Num(r.throughput)),
-                    (
-                        "peak_mem_bytes",
-                        Json::Num(r.peak_mem.iter().copied().max().unwrap_or(0) as f64),
-                    ),
-                    // Infeasible candidates rank below every feasible
-                    // one but stay visible (with their would-be speed).
-                    ("oom", Json::Bool(o.oom)),
-                    ("fold_classes", Json::Num(o.fold_classes as f64)),
-                    (
-                        "fold_devices_folded",
-                        Json::Num(o.fold_devices_folded as f64),
-                    ),
-                    ("fold_fallback", Json::Bool(o.fold_fallback)),
-                ])
-            })
-            .collect();
-        let mut fields = vec![
-            ("model", Json::Str(model.name().into())),
-            ("batch", Json::Num(batch as f64)),
-            ("cluster", Json::Str(cluster.name.clone())),
-            ("gpus", Json::Num(n as f64)),
-            (
-                "schedules",
-                Json::Arr(schedules.iter().map(|s| Json::Str(s.name())).collect()),
-            ),
-            ("coll_algo", Json::Str(coll_algo.name().into())),
-            ("grid", Json::Num(n_grid as f64)),
-            ("deduped", Json::Num(n_dupes as f64)),
-            ("swept", Json::Num(outcomes.len() as f64)),
-            ("viable", Json::Num(feasible as f64)),
-            ("oom", Json::Num(oom as f64)),
-            ("invalid", Json::Num(failed as f64)),
-            ("fold", Json::Bool(fold)),
-            ("wall_s", Json::Num(wall.as_secs_f64())),
-            ("threads", Json::Num(n_threads as f64)),
-            ("results", Json::Arr(results)),
-        ];
-        if truth {
-            fields.push((
-                "truth",
-                Json::Arr(
-                    truth_rows
-                        .iter()
-                        .map(|(label, step_ms, tput, err)| {
-                            Json::obj(vec![
-                                ("strategy", Json::Str(label.clone())),
-                                ("step_ms", Json::Num(*step_ms)),
-                                ("throughput_samples_per_s", Json::Num(*tput)),
-                                ("err_pct", Json::Num(*err)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ));
-        }
-        println!("{}", Json::obj(fields).to_string_pretty());
+        print_doc(&resp.to_json(!no_timings), compact);
         return Ok(());
     }
     println!(
         "swept {} strategies for {} b={} on {}({} GPUs): {} viable, {} OOM, {} invalid, \
          {} duplicates dropped — {:.2?} on {} threads",
-        outcomes.len(),
-        model.name(),
-        batch,
-        cluster.name,
-        n,
-        feasible,
-        oom,
-        failed,
-        n_dupes,
-        wall,
-        n_threads,
+        resp.outcomes.len(),
+        resp.model,
+        resp.batch,
+        resp.cluster,
+        resp.gpus,
+        resp.n_viable(),
+        resp.n_oom(),
+        resp.n_invalid(),
+        resp.deduped,
+        resp.wall,
+        resp.threads,
     );
     let mut table = Table::new(&["rank", "strategy", "step_ms", "samples/s", "oom"]);
-    for (i, o) in ranked.iter().take(top).enumerate() {
+    for (i, o) in resp.ranked().iter().take(resp.top).enumerate() {
         let r = o.report.as_ref().unwrap();
         table.row(vec![
             (i + 1).to_string(),
@@ -1037,100 +661,103 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", table.render());
-    if fold {
-        let folded = outcomes.iter().filter(|o| o.fold_classes > 0).count();
-        let fell_back = outcomes.iter().filter(|o| o.fold_fallback).count();
+    if resp.fold {
+        let folded = resp.outcomes.iter().filter(|o| o.fold_classes > 0).count();
+        let fell_back = resp.outcomes.iter().filter(|o| o.fold_fallback).count();
         println!(
             "fold: {folded} candidates folded, {fell_back} fell back to the unfolded graph"
         );
     }
-    for (label, step_ms, tput, err) in &truth_rows {
-        println!("truth {label}: {step_ms:.2} ms ({tput:.1} samples/s), HTAE error {err:.2}%");
+    for t in resp.truth.iter().flatten() {
+        println!(
+            "truth {}: {:.2} ms ({:.1} samples/s), HTAE error {:.2}%",
+            t.strategy, t.step_ms, t.throughput, t.err_pct
+        );
     }
     Ok(())
 }
 
-fn cmd_calibrate(args: &Args) -> Result<()> {
+/// The `proteus serve` daemon: NDJSON requests on stdin, one JSON
+/// response per line on stdout, concurrent requests sharing this
+/// process's warm [`Session`] (protocol documented in README.md and
+/// [`crate::session::serve`]).
+fn cmd_serve(args: &Args, session: &Session) -> Result<()> {
+    let threads = args.get_usize("threads", 0)?;
+    args.reject_unknown()?;
+    let stats = crate::session::serve(
+        session,
+        std::io::stdin().lock(),
+        std::io::stdout(),
+        threads,
+    )?;
+    // The summary goes to stderr: stdout carries only response lines.
+    eprintln!("served {} requests ({} errors)", stats.requests, stats.errors);
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args, session: &Session) -> Result<()> {
     let out = args.get("out").map(|s| s.to_string());
     args.reject_unknown()?;
-    let mut pairs = Vec::new();
+    let resp = session.calibrate()?;
     let mut table = Table::new(&["preset", "device", "gamma"]);
-    for &p in Preset::all() {
-        let c = Cluster::preset(p, 1);
-        let g = calibrate::calibrate_gamma(&c)?;
+    for r in &resp.rows {
         table.row(vec![
-            p.name().into(),
-            c.device.name.clone(),
-            format!("{g:.4}"),
+            r.preset.into(),
+            r.device.clone(),
+            format!("{:.4}", r.gamma),
         ]);
-        pairs.push((p.name(), Json::Num(g)));
     }
     print!("{}", table.render());
     if let Some(path) = out {
-        let doc = Json::obj(pairs.iter().map(|(k, v)| (*k, v.clone())).collect());
+        let doc = Json::obj(
+            resp.rows
+                .iter()
+                .map(|r| (r.preset, Json::Num(r.gamma)))
+                .collect(),
+        );
         std::fs::write(&path, doc.to_string_pretty())?;
         println!("written to {path}");
     }
     Ok(())
 }
 
-fn cmd_info(args: &Args) -> Result<()> {
+fn cmd_info(args: &Args, session: &Session) -> Result<()> {
     let model = args.get_or("model", "gpt2");
     let model = ModelKind::parse(&model)
         .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
     let batch = args.get_usize("batch", 8)?;
     args.reject_unknown()?;
-    let g = model.build(batch);
-    println!("model={} batch={batch}", model.name());
-    println!("layers={} tensors={}", g.layers.len(), g.tensors.len());
-    println!("params={:.1}M", g.num_params() as f64 / 1e6);
+    let resp = session.info(model, batch);
+    println!("model={} batch={}", resp.model, resp.batch);
+    println!("layers={} tensors={}", resp.layers, resp.tensors);
+    println!("params={:.1}M", resp.params as f64 / 1e6);
     println!(
         "fwd_flops={:.2} GFLOP/step",
-        g.total_fwd_flops() as f64 / 1e9
+        resp.fwd_flops as f64 / 1e9
     );
     Ok(())
 }
 
-fn cmd_bench_cost(args: &Args) -> Result<()> {
+fn cmd_bench_cost(args: &Args, session: &Session) -> Result<()> {
     let rows = args.get_usize("rows", 65536)?;
     let path = args.get_or("artifacts", DEFAULT_ARTIFACT);
     args.reject_unknown()?;
-    let cluster = Cluster::preset(Preset::HC2, 4);
-    let g = ModelKind::Gpt2.build(64);
-    let tree = build_strategy(&g, StrategySpec::data_parallel(8))?;
-    let eg = crate::compiler::compile(&g, &tree, &cluster)?;
-    let analytical = OpEstimator::analytical(&cluster);
-    let mut matrix = analytical.feature_matrix(&eg);
-    while matrix.len() < rows {
-        matrix.extend_from_within(0..matrix.len().min(rows - matrix.len()));
-    }
-    matrix.truncate(rows);
-    let t0 = std::time::Instant::now();
-    let a = analytical.eval_rows(&matrix)?;
-    let t_analytical = t0.elapsed();
+    let resp = session.bench_cost(rows, &path)?;
     println!(
         "analytical: {rows} rows in {:?} ({:.1} Mrows/s)",
-        t_analytical,
-        rows as f64 / t_analytical.as_secs_f64() / 1e6
+        resp.wall_analytical,
+        rows as f64 / resp.wall_analytical.as_secs_f64() / 1e6
     );
-    if std::path::Path::new(&path).exists() {
-        let pjrt = OpEstimator::pjrt(&cluster, &path)?;
-        let t1 = std::time::Instant::now();
-        let b = pjrt.eval_rows(&matrix)?;
-        let t_pjrt = t1.elapsed();
-        println!(
-            "pjrt:       {rows} rows in {:?} ({:.1} Mrows/s)",
-            t_pjrt,
-            rows as f64 / t_pjrt.as_secs_f64() / 1e6
-        );
-        let max_rel = a
-            .iter()
-            .zip(&b)
-            .map(|(x, y)| ((x - y).abs() / x.abs().max(1.0)) as f64)
-            .fold(0.0f64, f64::max);
-        println!("max backend divergence: {max_rel:.2e}");
-    } else {
-        println!("pjrt:       skipped ({path} missing; run `make artifacts`)");
+    match &resp.pjrt {
+        Some(p) => {
+            println!(
+                "pjrt:       {rows} rows in {:?} ({:.1} Mrows/s)",
+                p.wall,
+                rows as f64 / p.wall.as_secs_f64() / 1e6
+            );
+            println!("max backend divergence: {:.2e}", p.max_rel);
+        }
+        None => println!("pjrt:       skipped ({path} missing; run `make artifacts`)"),
     }
     Ok(())
 }
@@ -1146,10 +773,11 @@ mod tests {
     #[test]
     fn workload_parsing_defaults() {
         let a = parse("simulate --model vgg19 --batch 32 --dp 4");
-        let (m, b, c, s) = parse_workload(&a).unwrap();
+        let (m, b, p, nodes, s) = parse_workload(&a).unwrap();
         assert_eq!(m, ModelKind::Vgg19);
         assert_eq!(b, 32);
-        assert_eq!(c.name, "HC1");
+        assert_eq!(p, Preset::HC1);
+        assert_eq!(nodes, Preset::HC1.max_nodes());
         assert_eq!(s.dp, 4);
         assert_eq!(s.mp, 1);
     }
@@ -1174,10 +802,10 @@ mod tests {
     #[test]
     fn schedule_flags_parse() {
         let a = parse("simulate --pp 2 --micro 4 --schedule gpipe");
-        let (_, _, _, s) = parse_workload(&a).unwrap();
+        let (_, _, _, _, s) = parse_workload(&a).unwrap();
         assert_eq!(s.schedule, PipelineSchedule::GpipeFillDrain);
         let a = parse("simulate --pp 2 --micro 4 --schedule interleaved --vstages 3");
-        let (_, _, _, s) = parse_workload(&a).unwrap();
+        let (_, _, _, _, s) = parse_workload(&a).unwrap();
         assert_eq!(s.schedule, PipelineSchedule::Interleaved { v: 3 });
         let a = parse("simulate --schedule 2f2b");
         assert!(parse_workload(&a).is_err());
@@ -1242,6 +870,98 @@ mod tests {
              --compile-stats --json",
         );
         run(&a).unwrap();
+    }
+
+    /// Regression: `--artifacts` is documented for simulate/compare but
+    /// was read only *after* `reject_unknown()`, so passing it failed
+    /// with "unknown option --artifacts". It must be consumed up front
+    /// (a missing artifact file falls back to the analytical backend,
+    /// so pointing at a nonexistent path still runs).
+    #[test]
+    fn artifacts_flag_is_consumed_not_rejected() {
+        let a = parse(
+            "simulate --model vgg19 --batch 16 --preset HC1 --nodes 1 --dp 2 \
+             --artifacts /nonexistent/costmodel.hlo.txt --json",
+        );
+        run(&a).unwrap();
+
+        let config = Json::obj(vec![
+            ("model", Json::Str("vgg19".into())),
+            ("batch", Json::Num(16.0)),
+            ("preset", Json::Str("HC1".into())),
+            ("nodes", Json::Num(1.0)),
+            (
+                "strategies",
+                Json::Arr(vec![Json::obj(vec![("dp", Json::Num(2.0))])]),
+            ),
+        ]);
+        let path = std::env::temp_dir().join(format!(
+            "proteus_compare_artifacts_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&path, config.to_string_pretty()).unwrap();
+        let a = parse(&format!(
+            "compare --config {} --artifacts /nonexistent/costmodel.hlo.txt",
+            path.display()
+        ));
+        let r = run(&a);
+        std::fs::remove_file(&path).unwrap();
+        r.unwrap();
+    }
+
+    /// `--no-timings` and `--compact` are accepted by the JSON-emitting
+    /// commands (the schema subset itself is pinned by the session and
+    /// serve tests).
+    #[test]
+    fn no_timings_and_compact_flags_run() {
+        let a = parse(
+            "simulate --model vgg19 --batch 16 --preset HC1 --nodes 1 --dp 2 \
+             --json --no-timings --compact",
+        );
+        run(&a).unwrap();
+        let a = parse(
+            "sweep --model vgg19 --batch 16 --preset HC1 --nodes 1 --top 3 --threads 2 \
+             --json --no-timings --compact",
+        );
+        run(&a).unwrap();
+        let a = parse(
+            "search --model vgg19 --batch 16 --preset HC1 --nodes 1 --budget 6 --chains 1 \
+             --seed 3 --json --compact",
+        );
+        run(&a).unwrap();
+    }
+
+    /// Audit: every flag key the CLI reads through `Args` must appear
+    /// in [`HELP`] as `--<key>`. The reader patterns are assembled at
+    /// runtime so this test's own source never matches them.
+    #[test]
+    fn every_flag_read_by_the_cli_is_documented_in_help() {
+        let src = concat!(include_str!("mod.rs"), "\n", include_str!("args.rs"));
+        let readers = ["flag", "get", "get_or", "get_usize", "get_f64"];
+        let mut keys = std::collections::BTreeSet::new();
+        for m in readers {
+            let needle = format!("args.{m}{}", "(\"");
+            let mut rest = src;
+            while let Some(i) = rest.find(&needle) {
+                rest = &rest[i + needle.len()..];
+                let Some(end) = rest.find('"') else { break };
+                let key = &rest[..end];
+                if !key.is_empty()
+                    && key
+                        .chars()
+                        .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-')
+                {
+                    keys.insert(key.to_string());
+                }
+            }
+        }
+        assert!(keys.len() >= 30, "audit found too few keys: {keys:?}");
+        for key in &keys {
+            assert!(
+                HELP.contains(&format!("--{key}")),
+                "flag --{key} is read by the CLI but missing from HELP"
+            );
+        }
     }
 
     #[test]

@@ -641,6 +641,32 @@ pub struct CompileStats {
     pub delta_resume: Option<usize>,
 }
 
+/// A point-in-time reading of a [`TemplateCache`]'s hit/miss counters.
+///
+/// Long-lived callers (a [`crate::session::Session`] serving many
+/// requests from one warm cache) attribute cache traffic to a unit of
+/// work by snapshotting before and after and diffing with
+/// [`CacheSnapshot::since`], instead of reading the monotonically
+/// growing totals directly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    /// Templates served from the cache at snapshot time.
+    pub hits: usize,
+    /// Templates emitted (cache misses) at snapshot time.
+    pub misses: usize,
+}
+
+impl CacheSnapshot {
+    /// Counter delta `self − earlier` (saturating): the traffic between
+    /// two snapshots of the same cache.
+    pub fn since(self, earlier: CacheSnapshot) -> CacheSnapshot {
+        CacheSnapshot {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+        }
+    }
+}
+
 /// Cross-candidate cache of pass-1 outputs, keyed by `(caller-supplied
 /// graph key, structural hash of the resolved strategy)`. The structural
 /// hash deliberately excludes the pipeline schedule and `max_ongoing`
@@ -650,7 +676,9 @@ pub struct CompileStats {
 ///
 /// Thread-safe; on a concurrent same-key miss both threads emit and the
 /// first insert wins, so the hit/miss counters are exact only under
-/// serial use (which is how the pinning tests drive them).
+/// serial use (which is how the pinning tests drive them). Concurrent
+/// callers that need per-request deltas should use [`Self::snapshot`]
+/// and treat the numbers as approximate under interleaving.
 pub struct TemplateCache {
     map: Mutex<HashMap<(u64, u64, u64), Arc<emit::ExecTemplate>>>,
     hits: AtomicUsize,
@@ -681,6 +709,15 @@ impl TemplateCache {
     /// Templates emitted (cache misses) so far.
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Atomically-read counter snapshot; diff two with
+    /// [`CacheSnapshot::since`] to attribute traffic to one request.
+    pub fn snapshot(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            hits: self.hits(),
+            misses: self.misses(),
+        }
     }
 
     /// Distinct templates currently stored.
@@ -715,9 +752,10 @@ pub fn compile(graph: &Graph, tree: &StrategyTree, cluster: &Cluster) -> Result<
 
 /// [`compile`] with per-pass statistics and an optional cross-candidate
 /// template cache. `cache` pairs the cache with a caller-chosen key
-/// identifying the model graph (the sweep runner uses its deduplicated
-/// graph index); two calls may share a cached template only when both
-/// the graph key and the resolved strategy's structural hash agree.
+/// identifying the model graph (the sweep runner and the session layer
+/// use [`crate::models::ModelKind::graph_key`], a stable `(model,
+/// batch)` identity); two calls may share a cached template only when
+/// both the graph key and the resolved strategy's structural hash agree.
 pub fn compile_with(
     graph: &Graph,
     tree: &StrategyTree,

@@ -98,6 +98,7 @@ pub mod executor;
 pub mod graph;
 pub mod models;
 pub mod runtime;
+pub mod session;
 pub mod strategy;
 pub mod testing;
 pub mod trace;
@@ -118,6 +119,7 @@ pub mod prelude {
         candidate_grid, candidate_grid_with_schedules, dedupe_specs, Scenario, SearchConfig,
         SearchPoint, Searcher, SweepOutcome, SweepRunner,
     };
+    pub use crate::session::{SearchRequest, Session, SimulateRequest, SweepRequest};
     pub use crate::strategy::{
         build_strategy, NonUniformSpec, ParallelConfig, PipelineSchedule, ScheduleConfig,
         StageSpec, StrategySpec, StrategyTree,

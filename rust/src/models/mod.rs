@@ -83,6 +83,21 @@ impl ModelKind {
         }
     }
 
+    /// Stable identity of the `(model, batch)` graph this kind builds,
+    /// for keying cross-request caches (the [`crate::compiler::TemplateCache`]
+    /// via [`crate::session::Session`] and the sweep runner). FNV-1a over
+    /// the display name mixed with the batch, so the key survives enum
+    /// reordering and is identical across processes — unlike the
+    /// dedup-index keys the sweep runner used before the session layer.
+    pub fn graph_key(self, batch: usize) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.name().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h ^ (batch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
     /// All models, in the paper's table order.
     pub fn all() -> &'static [ModelKind] {
         &[

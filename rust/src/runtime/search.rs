@@ -185,10 +185,12 @@ pub struct SearchResult {
     /// Wall-clock seconds (informational; deliberately **not** part of
     /// the `--json` schema so seeded runs diff byte-identical).
     pub wall_s: f64,
-    /// Template-cache hits across the run (thread-interleaving
-    /// dependent; also excluded from `--json`).
+    /// Template-cache hits this run contributed (a snapshot delta, so
+    /// the number is the same whether the cache is run-local or a
+    /// shared session cache; thread-interleaving dependent and also
+    /// excluded from `--json`).
     pub cache_hits: usize,
-    /// Template-cache misses across the run.
+    /// Template-cache misses this run contributed (snapshot delta).
     pub cache_misses: usize,
 }
 
@@ -289,6 +291,26 @@ impl Searcher {
         cluster: &Cluster,
         inits: &[SearchPoint],
     ) -> Result<SearchResult> {
+        self.run_with_cache(graph, cluster, inits, None)
+    }
+
+    /// [`Self::run`] against a caller-owned [`TemplateCache`] paired
+    /// with a stable graph key ([`crate::models::ModelKind::graph_key`])
+    /// — the session layer passes its long-lived cache here so chain
+    /// evaluations share templates with earlier requests. With
+    /// `external: None` the searcher owns a run-local cache (exactly
+    /// [`Self::run`]); either way [`SearchConfig::compile_cache`] turns
+    /// caching off entirely, and results are bit-identical in all three
+    /// modes. The returned hit/miss counters are the *delta* this run
+    /// contributed (snapshot-based), so a shared cache reports the same
+    /// numbers a private one would.
+    pub fn run_with_cache(
+        &self,
+        graph: &Graph,
+        cluster: &Cluster,
+        inits: &[SearchPoint],
+        external: Option<(&TemplateCache, u64)>,
+    ) -> Result<SearchResult> {
         if inits.is_empty() {
             return Err(Error::InvalidStrategy(
                 "search needs at least one seed point".into(),
@@ -301,7 +323,17 @@ impl Searcher {
         let t0 = Instant::now();
         let deadline = cfg.wall_s.map(|s| t0 + std::time::Duration::from_secs_f64(s));
         let gamma = calibrate::default_gamma(cluster);
-        let cache = cfg.compile_cache.then(TemplateCache::new);
+        let own = if external.is_none() {
+            cfg.compile_cache.then(TemplateCache::new)
+        } else {
+            None
+        };
+        let cache: Option<(&TemplateCache, u64)> = if cfg.compile_cache {
+            external.or_else(|| own.as_ref().map(|c| (c, 0)))
+        } else {
+            None
+        };
+        let before = cache.map(|(c, _)| c.snapshot()).unwrap_or_default();
 
         // Even budget split: chain i gets ⌈budget/chains⌉ or ⌊…⌋.
         let budgets: Vec<usize> = (0..cfg.chains)
@@ -332,7 +364,7 @@ impl Searcher {
                         i,
                         budgets[i],
                         &inits[i % inits.len()],
-                        cache.as_ref(),
+                        cache,
                         deadline,
                     );
                     *slots[i].lock().unwrap() = Some(report);
@@ -362,6 +394,9 @@ impl Searcher {
                 }
             }
         }
+        let delta = cache
+            .map(|(c, _)| c.snapshot().since(before))
+            .unwrap_or_default();
         Ok(SearchResult {
             best,
             evals: chains.iter().map(|c| c.evals).sum(),
@@ -370,8 +405,8 @@ impl Searcher {
             bound_prunes: chains.iter().map(|c| c.bound_prunes).sum(),
             chains,
             wall_s: t0.elapsed().as_secs_f64(),
-            cache_hits: cache.as_ref().map(|c| c.hits()).unwrap_or(0),
-            cache_misses: cache.as_ref().map(|c| c.misses()).unwrap_or(0),
+            cache_hits: delta.hits,
+            cache_misses: delta.misses,
         })
     }
 }
@@ -382,7 +417,7 @@ fn evaluate(
     cluster: &Cluster,
     gamma: f64,
     plain: bool,
-    cache: Option<&TemplateCache>,
+    cache: Option<(&TemplateCache, u64)>,
     point: &SearchPoint,
 ) -> Evaluation {
     let tree = point.spec.build(graph);
@@ -402,7 +437,7 @@ fn evaluate_built(
     cluster: &Cluster,
     gamma: f64,
     plain: bool,
-    cache: Option<&TemplateCache>,
+    cache: Option<(&TemplateCache, u64)>,
     point: &SearchPoint,
     tree: &Result<StrategyTree>,
     parent: Option<&EmitRecord>,
@@ -435,7 +470,7 @@ fn evaluate_built(
         tree,
         plain,
         point.coll_algo,
-        cache.map(|c| (c, 0)),
+        cache,
         parent,
         want_record,
         fold,
@@ -498,7 +533,7 @@ fn run_chain(
     chain: usize,
     budget: usize,
     init: &SearchPoint,
-    cache: Option<&TemplateCache>,
+    cache: Option<(&TemplateCache, u64)>,
     deadline: Option<Instant>,
 ) -> ChainReport {
     let seed = cfg.seed.wrapping_add(chain as u64);

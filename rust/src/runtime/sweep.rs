@@ -212,6 +212,23 @@ impl SweepRunner {
     /// Simulate every scenario, in parallel, returning outcomes in input
     /// order. Shared model graphs and cluster topologies are built once.
     pub fn run(&self, scenarios: &[Scenario]) -> Vec<SweepOutcome> {
+        let own = self.compile_cache.then(TemplateCache::new);
+        self.run_with_cache(scenarios, own.as_ref())
+    }
+
+    /// [`Self::run`] against a caller-owned [`TemplateCache`] — the
+    /// session layer passes its long-lived cache here so grid candidates
+    /// share templates with earlier simulate/search requests. Templates
+    /// are keyed by [`crate::models::ModelKind::graph_key`] (a stable
+    /// `(model, batch)` identity) plus the resolved strategy's
+    /// structural hash, so cross-request sharing is sound. `None`
+    /// disables template caching entirely; outcomes are bit-identical
+    /// either way (pinned below).
+    pub fn run_with_cache(
+        &self,
+        scenarios: &[Scenario],
+        cache: Option<&TemplateCache>,
+    ) -> Vec<SweepOutcome> {
         if scenarios.is_empty() {
             return Vec::new();
         }
@@ -263,9 +280,11 @@ impl SweepRunner {
         let gammas: Vec<f64> = clusters.iter().map(calibrate::default_gamma).collect();
         // Cross-candidate compile cache: candidates differing only in
         // pipeline schedule (or in simulation knobs) share one compiled
-        // template, keyed by the deduplicated graph index + the resolved
-        // strategy's structural hash.
-        let cache = self.compile_cache.then(TemplateCache::new);
+        // template, keyed by the stable (model, batch) graph identity +
+        // the resolved strategy's structural hash. The stable key (not
+        // the dedup index) keeps a shared session cache sound across
+        // invocations with different scenario sets.
+        let graph_ids: Vec<u64> = graph_keys.iter().map(|&(m, b)| m.graph_key(b)).collect();
 
         let threads = self.effective_threads(scenarios.len());
         let next = AtomicUsize::new(0);
@@ -288,7 +307,7 @@ impl SweepRunner {
                         gammas[cluster_of[i]],
                         plain,
                         self.coll_algo,
-                        cache.as_ref().map(|c| (c, graph_of[i] as u64)),
+                        cache.map(|c| (c, graph_ids[graph_of[i]])),
                         self.fold,
                     );
                     *results[i].lock().unwrap() = Some(out);

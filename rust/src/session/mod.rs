@@ -1,0 +1,717 @@
+//! Reentrant API layer: typed requests → warm [`Session`] → typed
+//! responses.
+//!
+//! The CLI used to be one-shot — every `proteus simulate` re-parsed
+//! flags, rebuilt the model graph and cluster, recompiled, simulated and
+//! formatted inline, so warm state (the compiler's
+//! [`TemplateCache`], model graphs, cluster topologies) died with the
+//! process. This module makes that state first-class:
+//!
+//! * [`request`]: [`SimulateRequest`] / [`SweepRequest`] /
+//!   [`SearchRequest`] — everything the CLI commands read from `Args`,
+//!   as plain structs with the same defaults, plus parsers from the
+//!   newline-delimited JSON protocol `proteus serve` speaks.
+//! * [`Session`]: owns the warm caches — memoized model graphs keyed by
+//!   `(ModelKind, batch)`, memoized [`Cluster`]s keyed by
+//!   `(preset, nodes, nics, oversub)`, and one shared [`TemplateCache`]
+//!   keyed by [`ModelKind::graph_key`] + the resolved strategy's
+//!   structural hash. All methods take `&self` and are safe for
+//!   concurrent requests; every response carries the per-request cache
+//!   hit/miss delta (snapshot-based, see
+//!   [`crate::compiler::CacheSnapshot`]).
+//! * [`response`]: [`SimulateResponse`] / [`SweepResponse`] /
+//!   [`SearchResponse`] and friends — everything the CLI printers used
+//!   to interleave with I/O, plus the canonical `--json` document
+//!   builders. The CLI and the serve loop render through the same
+//!   builders, so a serve response body is byte-identical to the
+//!   one-shot `--json --no-timings` document by construction.
+//! * [`serve`](fn@serve): the daemon loop behind `proteus serve` —
+//!   NDJSON requests on stdin, one JSON response per line on stdout,
+//!   concurrent requests on a scoped thread pool sharing one `Session`.
+//!
+//! Simulation results are bit-identical to the uncached one-shot path:
+//! the template cache, symmetry folding and delta re-compilation are all
+//! pinned bit-invisible by the differential suites, and the golden CLI
+//! output is pinned byte-identical by the existing CLI tests.
+
+mod request;
+mod response;
+#[allow(clippy::module_inception)]
+mod serve;
+
+pub use request::{
+    parse_schedules, spec_from_json, Request, SearchInit, SearchRequest, SimulateRequest,
+    SweepRequest, DEFAULT_ARTIFACT,
+};
+pub use response::{
+    compile_stats_json, search_doc, simulate_fields, BenchCostPjrt, BenchCostResponse,
+    CalibrateResponse, CalibrateRow, CompareResponse, CompareRow, InfoResponse, SearchResponse,
+    SimulateResponse, SweepResponse, TruthRow,
+};
+pub use serve::{serve, ServeStats};
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::baselines::FlexFlowSim;
+use crate::cluster::{Cluster, Preset};
+use crate::compiler::TemplateCache;
+use crate::emulator::{Emulator, EmulatorConfig};
+use crate::estimator::OpEstimator;
+use crate::executor::{calibrate, Htae, HtaeConfig};
+use crate::graph::Graph;
+use crate::models::ModelKind;
+use crate::runtime::{
+    candidate_grid_with_schedules, dedupe_specs, default_inits, Scenario, SearchConfig,
+    SearchPoint, Searcher, SweepRunner,
+};
+use crate::strategy::{build_strategy, NonUniformSpec, StrategySpec};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Cluster memo key: `(preset, nodes, nics override, oversub bits)`.
+/// The oversubscription ratio is keyed by its IEEE-754 bit pattern so
+/// the key is `Eq + Hash` without rounding surprises.
+type ClusterKey = (Preset, usize, Option<usize>, Option<u64>);
+
+/// A long-lived simulation session: the warm, concurrency-safe state
+/// behind the CLI commands and the `proteus serve` daemon.
+///
+/// Construction is free; caches fill on demand. One `Session` may serve
+/// many concurrent requests — all methods take `&self`, interior
+/// mutability is mutex/atomic-based, and repeat requests hit the warm
+/// caches (reported per request via the response's cache delta).
+pub struct Session {
+    /// Model graphs, one per `(model, batch)` — graph building is
+    /// deterministic, so sharing is bit-invisible.
+    graphs: Mutex<HashMap<(ModelKind, usize), Arc<Graph>>>,
+    /// Cluster topologies, one per [`ClusterKey`]. Always built through
+    /// [`crate::cluster::presets::spec`] + [`Cluster::from_spec`], which
+    /// is exactly what both `Cluster::preset` and the CLI's fabric
+    /// override path resolve to.
+    clusters: Mutex<HashMap<ClusterKey, Arc<Cluster>>>,
+    /// The shared cross-request template cache (compiler pass 1).
+    templates: TemplateCache,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session::new()
+    }
+}
+
+impl Session {
+    /// A fresh session with empty caches.
+    pub fn new() -> Session {
+        Session {
+            graphs: Mutex::new(HashMap::new()),
+            clusters: Mutex::new(HashMap::new()),
+            templates: TemplateCache::new(),
+        }
+    }
+
+    /// The session's shared template cache (for tests and diagnostics;
+    /// requests report their own hit/miss deltas).
+    pub fn template_cache(&self) -> &TemplateCache {
+        &self.templates
+    }
+
+    /// Memoized model graph for `(model, batch)`. Concurrent first
+    /// requests may both build; the first insert wins (builds are
+    /// deterministic, so either result is correct).
+    pub fn graph(&self, model: ModelKind, batch: usize) -> Arc<Graph> {
+        if let Some(g) = self.graphs.lock().unwrap().get(&(model, batch)) {
+            return Arc::clone(g);
+        }
+        // Build outside the lock so one slow build does not serialize
+        // unrelated requests.
+        let built = Arc::new(model.build(batch));
+        Arc::clone(
+            self.graphs
+                .lock()
+                .unwrap()
+                .entry((model, batch))
+                .or_insert(built),
+        )
+    }
+
+    /// Memoized cluster for `preset` × `nodes` with the optional fabric
+    /// overrides applied. The overridden spec goes back through
+    /// [`Cluster::from_spec`], so an invalid combination (more NICs than
+    /// GPU ports, oversubscription below 1.0) fails with the same
+    /// validation errors a hand-written spec would.
+    pub fn cluster(
+        &self,
+        preset: Preset,
+        nodes: usize,
+        nics: Option<usize>,
+        oversub: Option<f64>,
+    ) -> Result<Arc<Cluster>> {
+        let key: ClusterKey = (preset, nodes, nics, oversub.map(f64::to_bits));
+        if let Some(c) = self.clusters.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(c));
+        }
+        let mut spec = crate::cluster::presets::spec(preset, nodes);
+        if let Some(k) = nics {
+            spec.nics_per_node = k;
+        }
+        if let Some(r) = oversub {
+            spec.oversubscription = r;
+        }
+        let built = Arc::new(Cluster::from_spec(&spec)?);
+        Ok(Arc::clone(
+            self.clusters.lock().unwrap().entry(key).or_insert(built),
+        ))
+    }
+
+    /// Predict one `(model, strategy, cluster)` point — the engine
+    /// behind `proteus simulate`. Bit-identical to the pre-session
+    /// one-shot path (template-cache equivalence is pinned by the
+    /// runtime and differential suites).
+    pub fn simulate(&self, req: &SimulateRequest) -> Result<SimulateResponse> {
+        let before = self.templates.snapshot();
+        let cluster = self.cluster(req.preset, req.nodes, req.nics, req.oversub)?;
+        let graph = self.graph(req.model, req.batch);
+        let tree = build_strategy(&graph, req.spec)?;
+        let t0 = Instant::now();
+        let (eg, stats) = crate::compiler::compile_with_opts(
+            &graph,
+            &tree,
+            &cluster,
+            Some((&self.templates, req.model.graph_key(req.batch))),
+            req.fold,
+        )?;
+        let compile_s = t0.elapsed().as_secs_f64();
+        let est = OpEstimator::best_available(&cluster, &req.artifacts);
+        let mut config = if req.plain {
+            HtaeConfig::plain()
+        } else {
+            HtaeConfig {
+                gamma: calibrate::default_gamma(&cluster),
+                ..HtaeConfig::default()
+            }
+        };
+        config.coll_algo = req.coll_algo;
+        config.record_timeline = req.trace;
+        let t1 = Instant::now();
+        let report = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
+        let simulate_s = t1.elapsed().as_secs_f64();
+        let backend = if est.is_pjrt() { "pjrt" } else { "analytical" };
+        // Run the optional validators once, up front, so the JSON and
+        // text renderings cannot drift. The emulated truth uses the same
+        // collective lowering as the prediction.
+        let truth = if req.truth {
+            let emu_config = EmulatorConfig {
+                coll_algo: req.coll_algo,
+                ..EmulatorConfig::default()
+            };
+            Some(Emulator::with_config(&cluster, &est, emu_config).simulate(&eg)?)
+        } else {
+            None
+        };
+        let flexflow = if req.flexflow {
+            Some(
+                FlexFlowSim::new(&cluster)
+                    .simulate(&graph, &tree, &eg)
+                    .map(|f| f.step_ms)
+                    .map_err(|e| e.to_string()),
+            )
+        } else {
+            None
+        };
+        let trace = req.trace.then(|| {
+            crate::trace::chrome_trace_with_phases(&graph, &eg, &report.timeline, &report.comm_phases)
+        });
+        Ok(SimulateResponse {
+            model: req.model.name(),
+            strategy: req.spec.label(),
+            schedule: req.spec.schedule.name(),
+            coll_algo: req.coll_algo,
+            cluster: cluster.name.clone(),
+            gpus: cluster.num_devices(),
+            backend,
+            logical_tasks: eg.logical_tasks(),
+            compile_s,
+            simulate_s,
+            report,
+            stats,
+            truth,
+            flexflow,
+            trace,
+            cache: self.templates.snapshot().since(before),
+        })
+    }
+
+    /// Rank an exhaustive strategy grid — the engine behind
+    /// `proteus sweep`. Grid candidates share the session's template
+    /// cache (stable graph keys make cross-request sharing sound).
+    pub fn sweep(&self, req: &SweepRequest) -> Result<SweepResponse> {
+        let before = self.templates.snapshot();
+        // Validates the fabric overrides up front; the runner re-applies
+        // them to each scenario's cluster.
+        let cluster = self.cluster(req.preset, req.nodes, req.nics, req.oversub)?;
+        let n = cluster.num_devices();
+        let graph = self.graph(req.model, req.batch);
+        let grid = candidate_grid_with_schedules(n, req.batch, &req.schedules);
+        let n_grid = grid.len();
+        // Commuting factorizations (e.g. a no-op ZeRO toggle) resolve to
+        // identical strategies; simulate each resolved strategy once.
+        let specs = dedupe_specs(&graph, grid);
+        let n_dupes = n_grid - specs.len();
+        let scenarios: Vec<Scenario> = specs
+            .into_iter()
+            .map(|spec| Scenario {
+                model: req.model,
+                batch: req.batch,
+                preset: req.preset,
+                nodes: req.nodes,
+                spec,
+            })
+            .collect();
+        let runner = SweepRunner::new()
+            .with_threads(req.threads)
+            .plain(req.plain)
+            .coll_algo(req.coll_algo)
+            .fold(req.fold)
+            .fabric(req.nics, req.oversub);
+        let threads = runner.effective_threads(scenarios.len());
+        let t0 = Instant::now();
+        let outcomes = runner.run_with_cache(&scenarios, Some(&self.templates));
+        let wall = t0.elapsed();
+        // Emulator validation of the top candidates, shared by both
+        // output modes. Only feasible candidates are validated — an OOM
+        // candidate cannot run, so emulating it would report an error
+        // for a configuration the ranking already marks unusable.
+        let truth = if req.truth {
+            let est = OpEstimator::best_available(&cluster, &req.artifacts);
+            let ranked = SweepRunner::rank(&outcomes);
+            let mut rows = Vec::new();
+            for o in ranked.iter().filter(|o| !o.oom).take(3) {
+                let tree = build_strategy(&graph, o.scenario.spec)?;
+                let (eg, _) = crate::compiler::compile_with(
+                    &graph,
+                    &tree,
+                    &cluster,
+                    Some((&self.templates, req.model.graph_key(req.batch))),
+                )?;
+                let emu_config = EmulatorConfig {
+                    coll_algo: req.coll_algo,
+                    ..EmulatorConfig::default()
+                };
+                let t = Emulator::with_config(&cluster, &est, emu_config).simulate(&eg)?;
+                let pred = o.report.as_ref().unwrap();
+                rows.push(TruthRow {
+                    strategy: o.scenario.spec.label(),
+                    step_ms: t.step_ms,
+                    throughput: t.throughput,
+                    err_pct: crate::util::rel_err_pct(pred.step_ms, t.step_ms),
+                });
+            }
+            Some(rows)
+        } else {
+            None
+        };
+        Ok(SweepResponse {
+            model: req.model.name(),
+            batch: req.batch,
+            cluster: cluster.name.clone(),
+            gpus: n,
+            schedules: req.schedules.clone(),
+            coll_algo: req.coll_algo,
+            grid: n_grid,
+            deduped: n_dupes,
+            outcomes,
+            top: req.top,
+            fold: req.fold,
+            wall,
+            threads,
+            truth,
+            cache: self.templates.snapshot().since(before),
+        })
+    }
+
+    /// Simulated-annealing strategy search — the engine behind
+    /// `proteus search`. Chains share the session's template cache; the
+    /// seeded walk (and its `--json` document) is bit-reproducible.
+    pub fn search(&self, req: &SearchRequest) -> Result<SearchResponse> {
+        let before = self.templates.snapshot();
+        let cluster = self.cluster(req.preset, req.nodes, req.nics, req.oversub)?;
+        let n = cluster.num_devices();
+        let graph = self.graph(req.model, req.batch);
+
+        // Seed points: a resumed best spec, an explicit uniform label,
+        // or the heuristic expert set.
+        let inits: Vec<SearchPoint> = match &req.init {
+            SearchInit::Resume { doc, origin } => {
+                let best = doc
+                    .get("best")
+                    .filter(|b| **b != Json::Null)
+                    .ok_or_else(|| {
+                        Error::Config(format!("{origin}: no 'best' result to resume from"))
+                    })?;
+                let spec = best
+                    .get("spec")
+                    .ok_or_else(|| Error::Config(format!("{origin}: 'best' has no 'spec'")))
+                    .and_then(NonUniformSpec::from_json)?;
+                // The file records the spec, not the workload it was
+                // found on: a resumed spec must be re-validated against
+                // *this* request's device budget and model, and must
+                // fail cleanly here rather than deep inside the first
+                // chain evaluation.
+                if spec.n_devices() > n {
+                    return Err(Error::Config(format!(
+                        "{origin}: resumed spec {} uses {} devices but {}x{} provides {n}",
+                        spec.label(),
+                        spec.n_devices(),
+                        req.preset.name(),
+                        req.nodes,
+                    )));
+                }
+                spec.validate(&graph).map_err(|e| {
+                    Error::Config(format!(
+                        "{origin}: resumed spec {} is invalid for {} at batch {}: {e}",
+                        spec.label(),
+                        req.model.name(),
+                        req.batch,
+                    ))
+                })?;
+                let coll = best
+                    .get("coll_algo")
+                    .and_then(|v| v.as_str())
+                    .and_then(crate::collective::CollAlgo::parse)
+                    .unwrap_or(req.coll_algo);
+                vec![SearchPoint {
+                    spec,
+                    coll_algo: coll,
+                }]
+            }
+            SearchInit::Label(label) => {
+                let uspec = StrategySpec::parse_label(label).ok_or_else(|| {
+                    Error::Config(format!("--init: cannot parse spec label '{label}'"))
+                })?;
+                vec![SearchPoint {
+                    spec: NonUniformSpec::from_uniform(&graph, uspec)?,
+                    coll_algo: req.coll_algo,
+                }]
+            }
+            SearchInit::Default => default_inits(&graph, n, req.coll_algo),
+        };
+
+        let config = SearchConfig {
+            seed: req.seed,
+            budget: req.budget,
+            chains: req.chains,
+            threads: req.threads,
+            plain: req.plain,
+            mutate_coll: req.mutate_coll,
+            delta: req.delta,
+            prune: req.prune,
+            fold: req.fold,
+            wall_s: req.wall_s,
+            ..SearchConfig::default()
+        };
+        let result = Searcher::new(config).run_with_cache(
+            &graph,
+            &cluster,
+            &inits,
+            Some((&self.templates, req.model.graph_key(req.batch))),
+        )?;
+        Ok(SearchResponse {
+            model: req.model.name(),
+            batch: req.batch,
+            cluster: cluster.name.clone(),
+            gpus: n,
+            seed: req.seed,
+            budget: req.budget,
+            chains: req.chains,
+            coll_algo: req.coll_algo,
+            result,
+            cache: self.templates.snapshot().since(before),
+        })
+    }
+
+    /// Score a list of explicit strategies on one workload — the engine
+    /// behind `proteus compare`.
+    pub fn compare(
+        &self,
+        model: ModelKind,
+        batch: usize,
+        preset: Preset,
+        nodes: usize,
+        specs: &[StrategySpec],
+        truth: bool,
+        artifacts: &str,
+    ) -> Result<CompareResponse> {
+        let before = self.templates.snapshot();
+        let cluster = self.cluster(preset, nodes, None, None)?;
+        let graph = self.graph(model, batch);
+        let est = OpEstimator::best_available(&cluster, artifacts);
+        let config = HtaeConfig {
+            gamma: calibrate::default_gamma(&cluster),
+            ..HtaeConfig::default()
+        };
+        let mut rows = Vec::new();
+        for &spec in specs {
+            let tree = build_strategy(&graph, spec)?;
+            let (eg, _) = crate::compiler::compile_with(
+                &graph,
+                &tree,
+                &cluster,
+                Some((&self.templates, model.graph_key(batch))),
+            )?;
+            let r = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
+            let truth_cols = if truth {
+                let t = Emulator::new(&cluster, &est).simulate(&eg)?;
+                Some((t.step_ms, crate::util::rel_err_pct(r.step_ms, t.step_ms)))
+            } else {
+                None
+            };
+            rows.push(CompareRow {
+                strategy: spec.label(),
+                step_ms: r.step_ms,
+                throughput: r.throughput,
+                oom: r.oom,
+                truth: truth_cols,
+            });
+        }
+        Ok(CompareResponse {
+            model: model.name(),
+            batch,
+            cluster: cluster.name.clone(),
+            gpus: cluster.num_devices(),
+            rows,
+            cache: self.templates.snapshot().since(before),
+        })
+    }
+
+    /// Model structure statistics — the engine behind `proteus info`.
+    pub fn info(&self, model: ModelKind, batch: usize) -> InfoResponse {
+        let g = self.graph(model, batch);
+        InfoResponse {
+            model: model.name(),
+            batch,
+            layers: g.layers.len(),
+            tensors: g.tensors.len(),
+            params: g.num_params(),
+            fwd_flops: g.total_fwd_flops(),
+        }
+    }
+
+    /// Calibrate the overlap factor γ per hardware preset — the engine
+    /// behind `proteus calibrate`.
+    pub fn calibrate(&self) -> Result<CalibrateResponse> {
+        let mut rows = Vec::new();
+        for &p in Preset::all() {
+            let c = self.cluster(p, 1, None, None)?;
+            let gamma = calibrate::calibrate_gamma(&c)?;
+            rows.push(CalibrateRow {
+                preset: p.name(),
+                device: c.device.name.clone(),
+                gamma,
+            });
+        }
+        Ok(CalibrateResponse { rows })
+    }
+
+    /// Benchmark the analytical (and, when the artifact exists, PJRT)
+    /// cost backends — the engine behind `proteus bench-cost`.
+    pub fn bench_cost(&self, rows: usize, artifacts: &str) -> Result<BenchCostResponse> {
+        let cluster = self.cluster(Preset::HC2, 4, None, None)?;
+        let g = self.graph(ModelKind::Gpt2, 64);
+        let tree = build_strategy(&g, StrategySpec::data_parallel(8))?;
+        let (eg, _) = crate::compiler::compile_with(
+            &g,
+            &tree,
+            &cluster,
+            Some((&self.templates, ModelKind::Gpt2.graph_key(64))),
+        )?;
+        let analytical = OpEstimator::analytical(&cluster);
+        let mut matrix = analytical.feature_matrix(&eg);
+        while matrix.len() < rows {
+            matrix.extend_from_within(0..matrix.len().min(rows - matrix.len()));
+        }
+        matrix.truncate(rows);
+        let t0 = Instant::now();
+        let a = analytical.eval_rows(&matrix)?;
+        let t_analytical = t0.elapsed();
+        let pjrt = if std::path::Path::new(artifacts).exists() {
+            let pjrt = OpEstimator::pjrt(&cluster, artifacts)?;
+            let t1 = Instant::now();
+            let b = pjrt.eval_rows(&matrix)?;
+            let t_pjrt = t1.elapsed();
+            let max_rel = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| ((x - y).abs() / x.abs().max(1.0)) as f64)
+                .fold(0.0f64, f64::max);
+            Some(BenchCostPjrt {
+                wall: t_pjrt,
+                max_rel,
+            })
+        } else {
+            None
+        };
+        Ok(BenchCostResponse {
+            rows,
+            wall_analytical: t_analytical,
+            pjrt,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graphs_and_clusters_are_memoized() {
+        let s = Session::new();
+        let g1 = s.graph(ModelKind::Vgg19, 16);
+        let g2 = s.graph(ModelKind::Vgg19, 16);
+        assert!(Arc::ptr_eq(&g1, &g2));
+        let g3 = s.graph(ModelKind::Vgg19, 32);
+        assert!(!Arc::ptr_eq(&g1, &g3));
+        let c1 = s.cluster(Preset::HC1, 1, None, None).unwrap();
+        let c2 = s.cluster(Preset::HC1, 1, None, None).unwrap();
+        assert!(Arc::ptr_eq(&c1, &c2));
+        // Fabric overrides key distinct clusters.
+        let c3 = s.cluster(Preset::HC4, 2, Some(4), Some(2.0)).unwrap();
+        assert!(!Arc::ptr_eq(&c1, &c3));
+        // Invalid overrides fail with the spec validation error.
+        assert!(s.cluster(Preset::HC1, 1, Some(64), None).is_err());
+    }
+
+    #[test]
+    fn session_cluster_matches_preset_constructor() {
+        let s = Session::new();
+        let via_session = s.cluster(Preset::HC2, 2, None, None).unwrap();
+        let via_preset = Cluster::preset(Preset::HC2, 2);
+        assert_eq!(via_session.name, via_preset.name);
+        assert_eq!(via_session.num_devices(), via_preset.num_devices());
+    }
+
+    #[test]
+    fn repeat_simulate_hits_the_template_cache() {
+        let s = Session::new();
+        let req = SimulateRequest {
+            model: ModelKind::Vgg19,
+            batch: 16,
+            spec: {
+                let mut spec = StrategySpec::data_parallel(2);
+                spec.schedule = crate::strategy::PipelineSchedule::OneFOneB;
+                spec
+            },
+            ..SimulateRequest::default()
+        };
+        let r1 = s.simulate(&req).unwrap();
+        assert_eq!(r1.cache.hits, 0);
+        assert!(r1.cache.misses >= 1);
+        let r2 = s.simulate(&req).unwrap();
+        assert!(r2.cache.hits >= 1);
+        assert_eq!(r2.cache.misses, 0);
+        // Warm-cache results are bit-identical.
+        assert_eq!(r1.report.step_ms.to_bits(), r2.report.step_ms.to_bits());
+        assert_eq!(r1.report.peak_mem, r2.report.peak_mem);
+        // The no-timings document (the serve/stable schema) is
+        // byte-identical across cold and warm runs.
+        assert_eq!(
+            r1.to_json(false, true).to_string_compact(),
+            r2.to_json(false, true).to_string_compact()
+        );
+        // With timings the wall-clock fields differ but the schema is a
+        // strict superset.
+        assert!(r1.to_json(true, true).get("compile_s").is_some());
+        assert!(r1.to_json(false, true).get("compile_s").is_none());
+    }
+
+    #[test]
+    fn simulate_and_sweep_share_one_template_cache() {
+        let s = Session::new();
+        let mut spec = StrategySpec::data_parallel(2);
+        spec.schedule = crate::strategy::PipelineSchedule::OneFOneB;
+        let sim = SimulateRequest {
+            model: ModelKind::Vgg19,
+            batch: 16,
+            spec,
+            ..SimulateRequest::default()
+        };
+        s.simulate(&sim).unwrap();
+        let sweep = SweepRequest {
+            model: ModelKind::Vgg19,
+            batch: 16,
+            preset: Preset::HC1,
+            nodes: 1,
+            threads: 2,
+            ..SweepRequest::default()
+        };
+        let resp = s.sweep(&sweep).unwrap();
+        // The dp=2 template compiled by the simulate request is reused
+        // by the sweep's dp=2 candidates: the sweep sees at least one
+        // hit against state it did not populate itself.
+        assert!(resp.cache.hits >= 1, "cache delta: {:?}", resp.cache);
+    }
+
+    #[test]
+    fn graph_key_is_stable_and_distinct() {
+        let k = ModelKind::Vgg19.graph_key(16);
+        assert_eq!(k, ModelKind::Vgg19.graph_key(16));
+        assert_ne!(k, ModelKind::Vgg19.graph_key(32));
+        assert_ne!(k, ModelKind::Gpt2.graph_key(16));
+    }
+
+    #[test]
+    fn search_via_session_is_reproducible() {
+        let req = SearchRequest {
+            model: ModelKind::Vgg19,
+            batch: 16,
+            preset: Preset::HC1,
+            nodes: 1,
+            budget: 6,
+            chains: 2,
+            seed: 3,
+            ..SearchRequest::default()
+        };
+        let a = Session::new().search(&req).unwrap();
+        let b = Session::new().search(&req).unwrap();
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            b.to_json().to_string_compact()
+        );
+        // A warm session reports cache hits; the document is unchanged.
+        let s = Session::new();
+        let c1 = s.search(&req).unwrap();
+        let c2 = s.search(&req).unwrap();
+        assert!(c2.cache.hits >= 1);
+        assert_eq!(
+            c1.to_json().to_string_compact(),
+            c2.to_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn concurrent_requests_share_one_session() {
+        let s = Session::new();
+        let mut spec = StrategySpec::data_parallel(2);
+        spec.schedule = crate::strategy::PipelineSchedule::OneFOneB;
+        let req = SimulateRequest {
+            model: ModelKind::Vgg19,
+            batch: 16,
+            spec,
+            ..SimulateRequest::default()
+        };
+        let baseline = s.simulate(&req).unwrap();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| scope.spawn(|| s.simulate(&req).unwrap()))
+                .collect();
+            for h in handles {
+                let r = h.join().unwrap();
+                assert_eq!(
+                    r.report.step_ms.to_bits(),
+                    baseline.report.step_ms.to_bits()
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,537 @@
+//! Typed requests: everything the CLI commands read from `Args`, as
+//! plain structs with the same defaults, plus parsers from the NDJSON
+//! documents `proteus serve` receives.
+//!
+//! A request struct is the full input of one [`super::Session`] call —
+//! workload (`model`, `batch`), cluster (`preset`, `nodes`, fabric
+//! overrides), strategy/search knobs, and validator toggles. `Default`
+//! impls mirror the CLI flag defaults exactly, so an empty serve
+//! request and a bare CLI invocation describe the same run.
+
+use crate::cluster::Preset;
+use crate::collective::CollAlgo;
+use crate::models::ModelKind;
+use crate::strategy::{PipelineSchedule, StrategySpec};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Default artifact path for the PJRT cost kernel.
+pub const DEFAULT_ARTIFACT: &str = "artifacts/costmodel.hlo.txt";
+
+/// Parse a collective-algorithm name with the CLI's error message.
+pub(crate) fn parse_coll(s: &str) -> Result<CollAlgo> {
+    CollAlgo::parse(s).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown collective algorithm '{s}' (ring|tree|hier|auto|mono)"
+        ))
+    })
+}
+
+/// Parse a sweep's schedule set: `all`, or a comma-separated list of
+/// schedule names (`gpipe,1f1b,interleaved:2`).
+pub fn parse_schedules(s: &str) -> Result<Vec<PipelineSchedule>> {
+    if s == "all" {
+        return Ok(PipelineSchedule::all());
+    }
+    s.split(',')
+        .map(|tok| {
+            PipelineSchedule::parse(tok.trim())
+                .ok_or_else(|| Error::Config(format!("unknown schedule '{tok}'")))
+        })
+        .collect()
+}
+
+/// Strategy spec from a JSON object (an experiment-config strategy
+/// entry, or the top level of a serve `simulate` request): `dp`, `mp`,
+/// `pp`, `micro` degrees (default 1), the `zero` / `recompute` /
+/// `emb_shard` toggles, and an optional `schedule` name.
+pub fn spec_from_json(j: &Json) -> Result<StrategySpec> {
+    let g = |k: &str, d: usize| -> usize { j.get(k).and_then(|v| v.as_usize()).unwrap_or(d) };
+    let mut spec = StrategySpec::hybrid(g("dp", 1), g("mp", 1), g("pp", 1), g("micro", 1));
+    spec.zero = j.get("zero").and_then(|v| v.as_bool()).unwrap_or(false);
+    spec.recompute = j.get("recompute").and_then(|v| v.as_bool()).unwrap_or(false);
+    spec.shard_embeddings = j
+        .get("emb_shard")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(false);
+    if let Some(s) = j.get("schedule").and_then(|v| v.as_str()) {
+        spec.schedule = PipelineSchedule::parse(s)
+            .ok_or_else(|| Error::Config(format!("config: unknown schedule '{s}'")))?;
+    }
+    Ok(spec)
+}
+
+// ---- typed field readers for serve request documents ----------------
+//
+// Missing fields take the CLI default; present fields of the wrong JSON
+// type fail loudly instead of silently falling back.
+
+fn str_field(doc: &Json, key: &str, default: &str) -> Result<String> {
+    match doc.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| Error::Config(format!("request: '{key}' must be a string"))),
+    }
+}
+
+fn usize_field(doc: &Json, key: &str, default: usize) -> Result<usize> {
+    match doc.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| Error::Config(format!("request: '{key}' must be a non-negative integer"))),
+    }
+}
+
+fn usize_field_opt(doc: &Json, key: &str) -> Result<Option<usize>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| Error::Config(format!("request: '{key}' must be a non-negative integer"))),
+    }
+}
+
+fn f64_field_opt(doc: &Json, key: &str) -> Result<Option<f64>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| Error::Config(format!("request: '{key}' must be a number"))),
+    }
+}
+
+fn bool_field(doc: &Json, key: &str) -> Result<bool> {
+    match doc.get(key) {
+        None => Ok(false),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| Error::Config(format!("request: '{key}' must be a boolean"))),
+    }
+}
+
+fn model_field(doc: &Json, default: &str) -> Result<ModelKind> {
+    let m = str_field(doc, "model", default)?;
+    ModelKind::parse(&m).ok_or_else(|| Error::Config(format!("unknown model '{m}'")))
+}
+
+fn preset_field(doc: &Json, default: &str) -> Result<Preset> {
+    let p = str_field(doc, "preset", default)?;
+    Preset::parse(&p).ok_or_else(|| Error::Config(format!("unknown preset '{p}'")))
+}
+
+fn coll_field(doc: &Json) -> Result<CollAlgo> {
+    parse_coll(&str_field(doc, "coll_algo", "auto")?)
+}
+
+/// Input of [`super::Session::simulate`]: one `(model, strategy,
+/// cluster)` prediction. Defaults mirror `proteus simulate`'s flags.
+#[derive(Debug, Clone)]
+pub struct SimulateRequest {
+    /// Model under test.
+    pub model: ModelKind,
+    /// Global batch size.
+    pub batch: usize,
+    /// Hardware preset.
+    pub preset: Preset,
+    /// Nodes of the preset to instantiate.
+    pub nodes: usize,
+    /// Optional NICs-per-node fabric override.
+    pub nics: Option<usize>,
+    /// Optional fat-tree oversubscription override.
+    pub oversub: Option<f64>,
+    /// Parallelization strategy (degrees, toggles, schedule).
+    pub spec: StrategySpec,
+    /// Disable runtime-behavior modeling (HTAE "Plain" ablation).
+    pub plain: bool,
+    /// Also run the flow-level emulator as ground truth.
+    pub truth: bool,
+    /// Also run the FlexFlow-style baseline simulator.
+    pub flexflow: bool,
+    /// Compile with symmetry folding.
+    pub fold: bool,
+    /// Collective lowering algorithm.
+    pub coll_algo: CollAlgo,
+    /// Record the simulation timeline and render a Chrome trace into
+    /// the response.
+    pub trace: bool,
+    /// PJRT cost-kernel artifact path (falls back to the analytical
+    /// backend when the file is missing).
+    pub artifacts: String,
+}
+
+impl Default for SimulateRequest {
+    fn default() -> Self {
+        SimulateRequest {
+            model: ModelKind::Gpt2,
+            batch: 8,
+            preset: Preset::HC1,
+            nodes: Preset::HC1.max_nodes(),
+            nics: None,
+            oversub: None,
+            spec: StrategySpec::hybrid(1, 1, 1, 1),
+            plain: false,
+            truth: false,
+            flexflow: false,
+            fold: false,
+            coll_algo: CollAlgo::Auto,
+            trace: false,
+            artifacts: DEFAULT_ARTIFACT.to_string(),
+        }
+    }
+}
+
+impl SimulateRequest {
+    /// Parse a serve `simulate` request document. Strategy fields
+    /// (`dp`, `mp`, `pp`, `micro`, `zero`, `recompute`, `emb_shard`,
+    /// `schedule`) sit at the top level, like an experiment-config
+    /// strategy entry. Traces are not available over serve (the
+    /// response is a single line).
+    pub fn from_json(doc: &Json) -> Result<SimulateRequest> {
+        let preset = preset_field(doc, "HC1")?;
+        Ok(SimulateRequest {
+            model: model_field(doc, "gpt2")?,
+            batch: usize_field(doc, "batch", 8)?,
+            preset,
+            nodes: usize_field(doc, "nodes", preset.max_nodes())?,
+            nics: usize_field_opt(doc, "nics")?,
+            oversub: f64_field_opt(doc, "oversub")?,
+            spec: spec_from_json(doc)?,
+            plain: bool_field(doc, "plain")?,
+            truth: bool_field(doc, "truth")?,
+            flexflow: bool_field(doc, "flexflow")?,
+            fold: bool_field(doc, "fold")?,
+            coll_algo: coll_field(doc)?,
+            trace: false,
+            artifacts: str_field(doc, "artifacts", DEFAULT_ARTIFACT)?,
+        })
+    }
+}
+
+/// Input of [`super::Session::sweep`]: rank an exhaustive strategy grid.
+/// Defaults mirror `proteus sweep`'s flags.
+#[derive(Debug, Clone)]
+pub struct SweepRequest {
+    /// Model under test.
+    pub model: ModelKind,
+    /// Global batch size.
+    pub batch: usize,
+    /// Hardware preset.
+    pub preset: Preset,
+    /// Nodes of the preset to instantiate.
+    pub nodes: usize,
+    /// Optional NICs-per-node fabric override.
+    pub nics: Option<usize>,
+    /// Optional fat-tree oversubscription override.
+    pub oversub: Option<f64>,
+    /// Pipeline schedules to expand the grid across.
+    pub schedules: Vec<PipelineSchedule>,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Ranked candidates to report.
+    pub top: usize,
+    /// Disable runtime-behavior modeling for every candidate.
+    pub plain: bool,
+    /// Emulate the top-3 feasible candidates as ground truth.
+    pub truth: bool,
+    /// Compile every candidate with symmetry folding.
+    pub fold: bool,
+    /// Collective lowering algorithm.
+    pub coll_algo: CollAlgo,
+    /// PJRT cost-kernel artifact path (truth validation only).
+    pub artifacts: String,
+}
+
+impl Default for SweepRequest {
+    fn default() -> Self {
+        SweepRequest {
+            model: ModelKind::Gpt2,
+            batch: 64,
+            preset: Preset::HC2,
+            nodes: 2,
+            nics: None,
+            oversub: None,
+            schedules: vec![PipelineSchedule::OneFOneB],
+            threads: 0,
+            top: 10,
+            plain: false,
+            truth: false,
+            fold: false,
+            coll_algo: CollAlgo::Auto,
+            artifacts: DEFAULT_ARTIFACT.to_string(),
+        }
+    }
+}
+
+impl SweepRequest {
+    /// Parse a serve `sweep` request document. `schedules` is the CLI's
+    /// string form (`"all"` or a comma-separated list).
+    pub fn from_json(doc: &Json) -> Result<SweepRequest> {
+        Ok(SweepRequest {
+            model: model_field(doc, "gpt2")?,
+            batch: usize_field(doc, "batch", 64)?,
+            preset: preset_field(doc, "HC2")?,
+            nodes: usize_field(doc, "nodes", 2)?,
+            nics: usize_field_opt(doc, "nics")?,
+            oversub: f64_field_opt(doc, "oversub")?,
+            schedules: parse_schedules(&str_field(doc, "schedules", "1f1b")?)?,
+            threads: usize_field(doc, "threads", 0)?,
+            top: usize_field(doc, "top", 10)?,
+            plain: bool_field(doc, "plain")?,
+            truth: bool_field(doc, "truth")?,
+            fold: bool_field(doc, "fold")?,
+            coll_algo: coll_field(doc)?,
+            artifacts: str_field(doc, "artifacts", DEFAULT_ARTIFACT)?,
+        })
+    }
+}
+
+/// Where a search starts from.
+#[derive(Debug, Clone)]
+pub enum SearchInit {
+    /// The heuristic expert seed set ([`crate::runtime::default_inits`]).
+    Default,
+    /// A single uniform spec label (the CLI's `--init`).
+    Label(String),
+    /// Resume from a previous `search --json` document (the CLI's
+    /// `--resume`); `origin` names the source (the file path) for error
+    /// messages.
+    Resume {
+        /// The parsed previous result document.
+        doc: Json,
+        /// Where the document came from, for error messages.
+        origin: String,
+    },
+}
+
+/// Input of [`super::Session::search`]: seeded simulated-annealing
+/// search over non-uniform strategy trees. Defaults mirror
+/// `proteus search`'s flags.
+#[derive(Debug, Clone)]
+pub struct SearchRequest {
+    /// Model under test.
+    pub model: ModelKind,
+    /// Global batch size.
+    pub batch: usize,
+    /// Hardware preset.
+    pub preset: Preset,
+    /// Nodes of the preset to instantiate.
+    pub nodes: usize,
+    /// Optional NICs-per-node fabric override.
+    pub nics: Option<usize>,
+    /// Optional fat-tree oversubscription override.
+    pub oversub: Option<f64>,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Total simulation budget across chains.
+    pub budget: usize,
+    /// Independent annealing chains.
+    pub chains: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Disable runtime-behavior modeling.
+    pub plain: bool,
+    /// Collective lowering for seed points (and the fixed value when
+    /// `mutate_coll` is off).
+    pub coll_algo: CollAlgo,
+    /// Allow the collective-algorithm mutation (CLI: `--fixed-coll`
+    /// turns this off).
+    pub mutate_coll: bool,
+    /// Delta re-compilation (CLI: `--no-delta` turns this off).
+    pub delta: bool,
+    /// Bound-based pruning (CLI: `--no-prune` turns this off).
+    pub prune: bool,
+    /// Optional wall-clock budget in seconds (nondeterministic).
+    pub wall_s: Option<f64>,
+    /// Compile candidates with symmetry folding.
+    pub fold: bool,
+    /// Seed points.
+    pub init: SearchInit,
+}
+
+impl Default for SearchRequest {
+    fn default() -> Self {
+        SearchRequest {
+            model: ModelKind::Gpt2,
+            batch: 64,
+            preset: Preset::HC2,
+            nodes: 2,
+            nics: None,
+            oversub: None,
+            seed: 42,
+            budget: 200,
+            chains: 4,
+            threads: 0,
+            plain: false,
+            coll_algo: CollAlgo::Auto,
+            mutate_coll: true,
+            delta: true,
+            prune: true,
+            wall_s: None,
+            fold: false,
+            init: SearchInit::Default,
+        }
+    }
+}
+
+impl SearchRequest {
+    /// Parse a serve `search` request document. `init` is a uniform
+    /// spec label; resuming from a previous result document is a CLI
+    /// affordance (`--resume FILE`) not exposed over serve.
+    pub fn from_json(doc: &Json) -> Result<SearchRequest> {
+        let init = match doc.get("init") {
+            None => SearchInit::Default,
+            Some(v) => SearchInit::Label(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("request: 'init' must be a string".into()))?
+                    .to_string(),
+            ),
+        };
+        Ok(SearchRequest {
+            model: model_field(doc, "gpt2")?,
+            batch: usize_field(doc, "batch", 64)?,
+            preset: preset_field(doc, "HC2")?,
+            nodes: usize_field(doc, "nodes", 2)?,
+            nics: usize_field_opt(doc, "nics")?,
+            oversub: f64_field_opt(doc, "oversub")?,
+            seed: usize_field(doc, "seed", 42)? as u64,
+            budget: usize_field(doc, "budget", 200)?,
+            chains: usize_field(doc, "chains", 4)?,
+            threads: usize_field(doc, "threads", 0)?,
+            plain: bool_field(doc, "plain")?,
+            coll_algo: coll_field(doc)?,
+            mutate_coll: !bool_field(doc, "fixed_coll")?,
+            delta: !bool_field(doc, "no_delta")?,
+            prune: !bool_field(doc, "no_prune")?,
+            wall_s: f64_field_opt(doc, "wall_secs")?,
+            fold: bool_field(doc, "fold")?,
+            init,
+        })
+    }
+}
+
+/// One parsed serve request: the `cmd` dispatch plus its typed payload.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Predict one strategy point (`cmd: "simulate"`). `compile_stats`
+    /// adds the per-pass compile section to the response body, exactly
+    /// like the CLI's `--compile-stats`.
+    Simulate {
+        /// The simulation request.
+        req: SimulateRequest,
+        /// Include the compile-stats section in the body.
+        compile_stats: bool,
+    },
+    /// Rank a strategy grid (`cmd: "sweep"`).
+    Sweep(SweepRequest),
+    /// Anneal over non-uniform strategy trees (`cmd: "search"`).
+    Search(SearchRequest),
+}
+
+impl Request {
+    /// Parse one NDJSON request document by its `cmd` field.
+    pub fn from_json(doc: &Json) -> Result<Request> {
+        let cmd = doc
+            .get("cmd")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| Error::Config("request: missing 'cmd'".into()))?;
+        match cmd {
+            "simulate" => Ok(Request::Simulate {
+                req: SimulateRequest::from_json(doc)?,
+                compile_stats: bool_field(doc, "compile_stats")?,
+            }),
+            "sweep" => Ok(Request::Sweep(SweepRequest::from_json(doc)?)),
+            "search" => Ok(Request::Search(SearchRequest::from_json(doc)?)),
+            other => Err(Error::Config(format!(
+                "unknown cmd '{other}' (simulate|sweep|search)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulate_request_defaults_match_cli() {
+        let r = SimulateRequest::default();
+        assert_eq!(r.model, ModelKind::Gpt2);
+        assert_eq!(r.batch, 8);
+        assert_eq!(r.preset, Preset::HC1);
+        assert_eq!(r.nodes, Preset::HC1.max_nodes());
+        assert_eq!(r.spec.schedule, PipelineSchedule::OneFOneB);
+        assert_eq!(r.artifacts, DEFAULT_ARTIFACT);
+    }
+
+    #[test]
+    fn request_parses_cmd_and_strategy_fields() {
+        let doc = Json::parse(
+            r#"{"cmd":"simulate","model":"vgg19","batch":16,"preset":"HC1","nodes":1,
+                "dp":2,"zero":true,"coll_algo":"ring"}"#,
+        )
+        .unwrap();
+        let Request::Simulate { req, compile_stats } = Request::from_json(&doc).unwrap() else {
+            panic!("expected simulate");
+        };
+        assert!(!compile_stats);
+        assert_eq!(req.model, ModelKind::Vgg19);
+        assert_eq!(req.batch, 16);
+        assert_eq!(req.spec.dp, 2);
+        assert!(req.spec.zero);
+        assert_eq!(req.coll_algo, CollAlgo::Ring);
+        assert!(!req.trace, "traces are not available over serve");
+    }
+
+    #[test]
+    fn request_rejects_missing_or_unknown_cmd() {
+        let doc = Json::parse(r#"{"model":"vgg19"}"#).unwrap();
+        let e = Request::from_json(&doc).unwrap_err().to_string();
+        assert!(e.contains("missing 'cmd'"), "{e}");
+        let doc = Json::parse(r#"{"cmd":"calibrate"}"#).unwrap();
+        let e = Request::from_json(&doc).unwrap_err().to_string();
+        assert!(e.contains("unknown cmd 'calibrate'"), "{e}");
+    }
+
+    #[test]
+    fn wrong_field_types_fail_loudly() {
+        for bad in [
+            r#"{"cmd":"simulate","batch":"many"}"#,
+            r#"{"cmd":"simulate","model":7}"#,
+            r#"{"cmd":"sweep","oversub":"wide"}"#,
+            r#"{"cmd":"search","fixed_coll":"yes"}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(Request::from_json(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn search_request_reads_knobs() {
+        let doc = Json::parse(
+            r#"{"cmd":"search","model":"vgg19","batch":16,"preset":"HC1","nodes":1,
+                "budget":6,"chains":1,"seed":3,"no_delta":true,"init":"8x1x1(1)"}"#,
+        )
+        .unwrap();
+        let Request::Search(req) = Request::from_json(&doc).unwrap() else {
+            panic!("expected search");
+        };
+        assert_eq!((req.budget, req.chains, req.seed), (6, 1, 3));
+        assert!(!req.delta);
+        assert!(req.prune);
+        assert!(matches!(req.init, SearchInit::Label(ref l) if l == "8x1x1(1)"));
+    }
+
+    #[test]
+    fn sweep_schedules_parse_from_string_form() {
+        let doc = Json::parse(r#"{"cmd":"sweep","schedules":"all"}"#).unwrap();
+        let Request::Sweep(req) = Request::from_json(&doc).unwrap() else {
+            panic!("expected sweep");
+        };
+        assert_eq!(req.schedules, PipelineSchedule::all());
+    }
+}

@@ -1,0 +1,578 @@
+//! Typed responses: everything the CLI printers used to interleave
+//! with I/O, as plain structs, plus the canonical `--json` document
+//! builders.
+//!
+//! Each response owns the full result of one [`super::Session`] call —
+//! reports, compile stats, optional validator runs, and the per-request
+//! template-cache delta — so a renderer (the CLI's text formatter, the
+//! CLI's `--json` printer, the serve loop) is a pure function of the
+//! struct. The JSON builders live here, next to the structs, so the
+//! one-shot CLI and the serve daemon render through the same code and
+//! their documents are byte-identical by construction.
+//!
+//! ## The stable schema subset (`--no-timings`)
+//!
+//! Every field of the simulate/sweep documents is bit-deterministic
+//! except the wall-clock timings (`compile_s`, `simulate_s`, `wall_s`),
+//! the machine-dependent `threads` count, and the warmth-dependent
+//! compile-stats fields (`cache_hit` and the per-pass `*_s` timings).
+//! `to_json(timings = false)` omits exactly those, leaving a document
+//! two runs — cold or warm, serve or one-shot — reproduce byte for
+//! byte. The CI gates diff these documents directly.
+
+use std::time::Duration;
+
+use crate::collective::CollAlgo;
+use crate::compiler::{CacheSnapshot, CompileStats};
+use crate::executor::SimReport;
+use crate::runtime::{SearchResult, SweepOutcome, SweepRunner};
+use crate::strategy::PipelineSchedule;
+use crate::util::json::Json;
+use crate::util::rel_err_pct;
+
+/// Base field list of the simulate JSON document (schema in README.md).
+/// `timings` carries `(compile_s, simulate_s)` when wall-clock fields
+/// are wanted; `None` produces the stable `--no-timings` subset.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fields(
+    model: &str,
+    strategy: String,
+    schedule: String,
+    coll_algo: CollAlgo,
+    cluster_name: &str,
+    gpus: usize,
+    backend: &str,
+    logical_tasks: usize,
+    timings: Option<(f64, f64)>,
+    report: &SimReport,
+) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![
+        ("model", Json::Str(model.into())),
+        ("strategy", Json::Str(strategy)),
+        ("schedule", Json::Str(schedule)),
+        ("coll_algo", Json::Str(coll_algo.name().into())),
+        ("cluster", Json::Str(cluster_name.into())),
+        ("gpus", Json::Num(gpus as f64)),
+        ("backend", Json::Str(backend.into())),
+        ("tasks", Json::Num(logical_tasks as f64)),
+    ];
+    if let Some((compile_s, simulate_s)) = timings {
+        fields.push(("compile_s", Json::Num(compile_s)));
+        fields.push(("simulate_s", Json::Num(simulate_s)));
+    }
+    fields.extend([
+        ("step_ms", Json::Num(report.step_ms)),
+        ("throughput_samples_per_s", Json::Num(report.throughput)),
+        ("oom", Json::Bool(report.oom)),
+        (
+            "peak_mem_bytes",
+            Json::Arr(
+                report
+                    .peak_mem
+                    .iter()
+                    .map(|&b| Json::Num(b as f64))
+                    .collect(),
+            ),
+        ),
+        (
+            "peak_act_bytes",
+            Json::Arr(
+                report
+                    .peak_act
+                    .iter()
+                    .map(|&b| Json::Num(b as f64))
+                    .collect(),
+            ),
+        ),
+        ("overlapped_ops", Json::Num(report.overlapped_ops as f64)),
+        ("shared_ops", Json::Num(report.shared_ops as f64)),
+    ]);
+    fields
+}
+
+/// JSON rendering of the compile-stats section (schema in README).
+/// Without `timings` the per-pass wall-clock fields and the
+/// warmth-dependent `cache_hit` flag are omitted; the structural
+/// counters that remain are bit-deterministic.
+pub fn compile_stats_json(s: &CompileStats, timings: bool) -> Json {
+    let mut fields = Vec::new();
+    if timings {
+        fields.extend([
+            ("template_s", Json::Num(s.template_s)),
+            ("weave_s", Json::Num(s.weave_s)),
+            ("instantiate_s", Json::Num(s.instantiate_s)),
+            ("finalize_s", Json::Num(s.finalize_s)),
+            ("cache_hit", Json::Bool(s.cache_hit)),
+        ]);
+    }
+    fields.extend([
+        ("segments", Json::Num(s.n_segments as f64)),
+        ("template_slots", Json::Num(s.template_slots as f64)),
+        ("template_tasks", Json::Num(s.template_tasks as f64)),
+        ("preamble_tasks", Json::Num(s.preamble_tasks as f64)),
+        (
+            "template_layer_emissions",
+            Json::Num(s.template_layer_emissions as f64),
+        ),
+        (
+            "template_transforms",
+            Json::Num(s.template_transforms as f64),
+        ),
+        ("n_micro", Json::Num(s.n_micro as f64)),
+        ("n_chunks", Json::Num(s.n_chunks as f64)),
+        ("tasks", Json::Num(s.n_tasks as f64)),
+        ("deps", Json::Num(s.n_deps as f64)),
+        ("logical_tasks", Json::Num(s.logical_tasks as f64)),
+        ("fold_classes", Json::Num(s.fold_classes as f64)),
+        (
+            "fold_devices_folded",
+            Json::Num(s.fold_devices_folded as f64),
+        ),
+        ("fold_fallback", Json::Bool(s.fold_fallback)),
+    ]);
+    if timings {
+        fields.push(("fold_s", Json::Num(s.fold_s)));
+    }
+    Json::obj(fields)
+}
+
+/// Build the search JSON document from a finished [`SearchResult`].
+/// Schema documented in README.md ("JSON output"); deliberately free of
+/// wall-clock times and template-cache counters so a seeded run is
+/// byte-reproducible — the CI determinism gate diffs two runs, and the
+/// delta differential harness (`tests/differential_search.rs`) diffs a
+/// delta run against a `--no-delta` run through this exact function.
+/// The delta/full/prune counters it does include are
+/// classification-based and equally deterministic.
+#[allow(clippy::too_many_arguments)]
+pub fn search_doc(
+    model: &str,
+    batch: usize,
+    cluster_name: &str,
+    gpus: usize,
+    seed: u64,
+    budget: usize,
+    n_chains: usize,
+    coll_algo: CollAlgo,
+    result: &SearchResult,
+) -> Json {
+    let best_json = match &result.best {
+        None => Json::Null,
+        Some(b) => Json::obj(vec![
+            ("label", Json::Str(b.label.clone())),
+            ("step_ms", Json::Num(b.step_ms)),
+            ("throughput_samples_per_s", Json::Num(b.throughput)),
+            ("peak_mem_bytes", Json::Num(b.peak_mem as f64)),
+            ("oom", Json::Bool(b.oom)),
+            ("coll_algo", Json::Str(b.point.coll_algo.name().into())),
+            ("fold_classes", Json::Num(b.fold_classes as f64)),
+            (
+                "fold_devices_folded",
+                Json::Num(b.fold_devices_folded as f64),
+            ),
+            ("fold_fallback", Json::Bool(b.fold_fallback)),
+            ("spec", b.point.spec.to_json()),
+        ]),
+    };
+    let chains_json: Vec<Json> = result
+        .chains
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("chain", Json::Num(c.chain as f64)),
+                ("seed", Json::Num(c.seed as f64)),
+                ("evals", Json::Num(c.evals as f64)),
+                ("accepted", Json::Num(c.accepted as f64)),
+                ("infeasible", Json::Num(c.infeasible as f64)),
+                ("delta_hits", Json::Num(c.delta_hits as f64)),
+                ("full_compiles", Json::Num(c.full_compiles as f64)),
+                ("bound_prunes", Json::Num(c.bound_prunes as f64)),
+                (
+                    "best_label",
+                    c.best
+                        .as_ref()
+                        .map(|e| Json::Str(e.label.clone()))
+                        .unwrap_or(Json::Null),
+                ),
+                (
+                    "best_throughput_samples_per_s",
+                    c.best
+                        .as_ref()
+                        .map(|e| Json::Num(e.throughput))
+                        .unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("model", Json::Str(model.into())),
+        ("batch", Json::Num(batch as f64)),
+        ("cluster", Json::Str(cluster_name.into())),
+        ("gpus", Json::Num(gpus as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("budget", Json::Num(budget as f64)),
+        ("n_chains", Json::Num(n_chains as f64)),
+        ("coll_algo", Json::Str(coll_algo.name().into())),
+        ("evals", Json::Num(result.evals as f64)),
+        ("delta_hits", Json::Num(result.delta_hits as f64)),
+        ("full_compiles", Json::Num(result.full_compiles as f64)),
+        ("bound_prunes", Json::Num(result.bound_prunes as f64)),
+        ("best", best_json),
+        ("chains", Json::Arr(chains_json)),
+    ])
+}
+
+/// Result of [`super::Session::simulate`]: one scored strategy point
+/// plus everything the renderers need.
+pub struct SimulateResponse {
+    /// Model name.
+    pub model: &'static str,
+    /// Strategy spec label.
+    pub strategy: String,
+    /// Pipeline schedule name.
+    pub schedule: String,
+    /// Collective lowering used.
+    pub coll_algo: CollAlgo,
+    /// Cluster name.
+    pub cluster: String,
+    /// Device count.
+    pub gpus: usize,
+    /// Cost backend used (`"pjrt"` or `"analytical"`).
+    pub backend: &'static str,
+    /// Logical task count (fold-invariant).
+    pub logical_tasks: usize,
+    /// Compile wall-clock seconds.
+    pub compile_s: f64,
+    /// Simulate wall-clock seconds.
+    pub simulate_s: f64,
+    /// The HTAE prediction.
+    pub report: SimReport,
+    /// Per-pass compile counters.
+    pub stats: CompileStats,
+    /// Flow-level emulator run, when the request asked for truth.
+    pub truth: Option<SimReport>,
+    /// FlexFlow-Sim baseline step time (or why it was unsupported),
+    /// when the request asked for it.
+    pub flexflow: Option<std::result::Result<f64, String>>,
+    /// Rendered Chrome trace, when the request asked for one.
+    pub trace: Option<Json>,
+    /// Template-cache hit/miss delta attributable to this request.
+    pub cache: CacheSnapshot,
+}
+
+impl SimulateResponse {
+    /// The simulate JSON document (schema in README.md). `timings`
+    /// keeps the wall-clock fields; `compile_stats` appends the compile
+    /// section. The trace is not embedded — it is a separate document
+    /// the CLI writes to the `--trace` path.
+    pub fn to_json(&self, timings: bool, compile_stats: bool) -> Json {
+        let mut fields = simulate_fields(
+            self.model,
+            self.strategy.clone(),
+            self.schedule.clone(),
+            self.coll_algo,
+            &self.cluster,
+            self.gpus,
+            self.backend,
+            self.logical_tasks,
+            timings.then_some((self.compile_s, self.simulate_s)),
+            &self.report,
+        );
+        if compile_stats {
+            fields.push(("compile_stats", compile_stats_json(&self.stats, timings)));
+        }
+        if let Some(t) = &self.truth {
+            fields.push((
+                "truth",
+                Json::obj(vec![
+                    ("step_ms", Json::Num(t.step_ms)),
+                    ("throughput_samples_per_s", Json::Num(t.throughput)),
+                    (
+                        "err_pct",
+                        Json::Num(rel_err_pct(self.report.step_ms, t.step_ms)),
+                    ),
+                ]),
+            ));
+        }
+        if let Some(ff) = &self.flexflow {
+            fields.push((
+                "flexflow",
+                match ff {
+                    Ok(step_ms) => Json::obj(vec![("step_ms", Json::Num(*step_ms))]),
+                    Err(e) => Json::obj(vec![("error", Json::Str(e.clone()))]),
+                },
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Emulator validation of one top sweep candidate.
+pub struct TruthRow {
+    /// Strategy spec label.
+    pub strategy: String,
+    /// Emulated step time (ms).
+    pub step_ms: f64,
+    /// Emulated throughput (samples/s).
+    pub throughput: f64,
+    /// HTAE prediction error vs. the emulator (%).
+    pub err_pct: f64,
+}
+
+/// Result of [`super::Session::sweep`]: the full outcome list plus the
+/// grid bookkeeping the renderers summarize.
+pub struct SweepResponse {
+    /// Model name.
+    pub model: &'static str,
+    /// Global batch size.
+    pub batch: usize,
+    /// Cluster name.
+    pub cluster: String,
+    /// Device count.
+    pub gpus: usize,
+    /// Schedules the grid was expanded across.
+    pub schedules: Vec<PipelineSchedule>,
+    /// Collective lowering used.
+    pub coll_algo: CollAlgo,
+    /// Grid size before deduplication.
+    pub grid: usize,
+    /// Duplicates dropped by strategy-resolution dedupe.
+    pub deduped: usize,
+    /// One outcome per simulated scenario.
+    pub outcomes: Vec<SweepOutcome>,
+    /// Ranked candidates to report.
+    pub top: usize,
+    /// Whether candidates were compiled with symmetry folding.
+    pub fold: bool,
+    /// Sweep wall-clock time.
+    pub wall: Duration,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Emulator validation of the top-3 feasible candidates, when the
+    /// request asked for truth.
+    pub truth: Option<Vec<TruthRow>>,
+    /// Template-cache hit/miss delta attributable to this request.
+    pub cache: CacheSnapshot,
+}
+
+impl SweepResponse {
+    /// Outcomes ranked by predicted throughput (feasible first,
+    /// infeasible visible below, failed compiles excluded).
+    pub fn ranked(&self) -> Vec<&SweepOutcome> {
+        SweepRunner::rank(&self.outcomes)
+    }
+
+    /// Feasible (non-OOM) ranked candidates.
+    pub fn n_viable(&self) -> usize {
+        self.ranked().iter().filter(|o| !o.oom).count()
+    }
+
+    /// Candidates that compiled but exceed device memory.
+    pub fn n_oom(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.oom).count()
+    }
+
+    /// Candidates whose compilation failed outright.
+    pub fn n_invalid(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.report.is_err()).count()
+    }
+
+    /// The sweep JSON document (schema in README.md). `timings` keeps
+    /// the wall-clock `wall_s` and the machine-dependent `threads`;
+    /// without it the document is byte-reproducible.
+    pub fn to_json(&self, timings: bool) -> Json {
+        let ranked = self.ranked();
+        let results: Vec<Json> = ranked
+            .iter()
+            .take(self.top)
+            .enumerate()
+            .map(|(i, o)| {
+                let r = o.report.as_ref().unwrap();
+                Json::obj(vec![
+                    ("rank", Json::Num((i + 1) as f64)),
+                    ("strategy", Json::Str(o.scenario.spec.label())),
+                    ("schedule", Json::Str(o.scenario.spec.schedule.name())),
+                    ("step_ms", Json::Num(r.step_ms)),
+                    ("throughput_samples_per_s", Json::Num(r.throughput)),
+                    (
+                        "peak_mem_bytes",
+                        Json::Num(r.peak_mem.iter().copied().max().unwrap_or(0) as f64),
+                    ),
+                    // Infeasible candidates rank below every feasible
+                    // one but stay visible (with their would-be speed).
+                    ("oom", Json::Bool(o.oom)),
+                    ("fold_classes", Json::Num(o.fold_classes as f64)),
+                    (
+                        "fold_devices_folded",
+                        Json::Num(o.fold_devices_folded as f64),
+                    ),
+                    ("fold_fallback", Json::Bool(o.fold_fallback)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("model", Json::Str(self.model.into())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("cluster", Json::Str(self.cluster.clone())),
+            ("gpus", Json::Num(self.gpus as f64)),
+            (
+                "schedules",
+                Json::Arr(self.schedules.iter().map(|s| Json::Str(s.name())).collect()),
+            ),
+            ("coll_algo", Json::Str(self.coll_algo.name().into())),
+            ("grid", Json::Num(self.grid as f64)),
+            ("deduped", Json::Num(self.deduped as f64)),
+            ("swept", Json::Num(self.outcomes.len() as f64)),
+            ("viable", Json::Num(self.n_viable() as f64)),
+            ("oom", Json::Num(self.n_oom() as f64)),
+            ("invalid", Json::Num(self.n_invalid() as f64)),
+            ("fold", Json::Bool(self.fold)),
+        ];
+        if timings {
+            fields.push(("wall_s", Json::Num(self.wall.as_secs_f64())));
+            fields.push(("threads", Json::Num(self.threads as f64)));
+        }
+        fields.push(("results", Json::Arr(results)));
+        if let Some(rows) = &self.truth {
+            fields.push((
+                "truth",
+                Json::Arr(
+                    rows.iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("strategy", Json::Str(t.strategy.clone())),
+                                ("step_ms", Json::Num(t.step_ms)),
+                                ("throughput_samples_per_s", Json::Num(t.throughput)),
+                                ("err_pct", Json::Num(t.err_pct)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Result of [`super::Session::search`]: the finished
+/// [`SearchResult`] plus the request echo the document carries.
+pub struct SearchResponse {
+    /// Model name.
+    pub model: &'static str,
+    /// Global batch size.
+    pub batch: usize,
+    /// Cluster name.
+    pub cluster: String,
+    /// Device count.
+    pub gpus: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Simulation budget.
+    pub budget: usize,
+    /// Annealing chains.
+    pub chains: usize,
+    /// Collective lowering of the seed points.
+    pub coll_algo: CollAlgo,
+    /// The finished search.
+    pub result: SearchResult,
+    /// Template-cache hit/miss delta attributable to this request.
+    pub cache: CacheSnapshot,
+}
+
+impl SearchResponse {
+    /// The search JSON document — already free of wall-clock fields, so
+    /// there is no timings variant (see [`search_doc`]).
+    pub fn to_json(&self) -> Json {
+        search_doc(
+            self.model,
+            self.batch,
+            &self.cluster,
+            self.gpus,
+            self.seed,
+            self.budget,
+            self.chains,
+            self.coll_algo,
+            &self.result,
+        )
+    }
+}
+
+/// One scored strategy of a [`super::Session::compare`] run.
+pub struct CompareRow {
+    /// Strategy spec label.
+    pub strategy: String,
+    /// Predicted step time (ms).
+    pub step_ms: f64,
+    /// Predicted throughput (samples/s).
+    pub throughput: f64,
+    /// Whether the strategy exceeds device memory.
+    pub oom: bool,
+    /// `(emulated step_ms, HTAE error %)`, when truth was requested.
+    pub truth: Option<(f64, f64)>,
+}
+
+/// Result of [`super::Session::compare`].
+pub struct CompareResponse {
+    /// Model name.
+    pub model: &'static str,
+    /// Global batch size.
+    pub batch: usize,
+    /// Cluster name.
+    pub cluster: String,
+    /// Device count.
+    pub gpus: usize,
+    /// One row per compared strategy, in config order.
+    pub rows: Vec<CompareRow>,
+    /// Template-cache hit/miss delta attributable to this request.
+    pub cache: CacheSnapshot,
+}
+
+/// Result of [`super::Session::info`]: model structure statistics.
+pub struct InfoResponse {
+    /// Model name.
+    pub model: &'static str,
+    /// Global batch size.
+    pub batch: usize,
+    /// Layer count.
+    pub layers: usize,
+    /// Tensor count.
+    pub tensors: usize,
+    /// Parameter count.
+    pub params: u64,
+    /// Forward FLOPs per step.
+    pub fwd_flops: u64,
+}
+
+/// One preset's calibrated overlap factor.
+pub struct CalibrateRow {
+    /// Preset name.
+    pub preset: &'static str,
+    /// Device name.
+    pub device: String,
+    /// Calibrated γ.
+    pub gamma: f64,
+}
+
+/// Result of [`super::Session::calibrate`].
+pub struct CalibrateResponse {
+    /// One row per hardware preset.
+    pub rows: Vec<CalibrateRow>,
+}
+
+/// PJRT leg of a [`super::Session::bench_cost`] run.
+pub struct BenchCostPjrt {
+    /// PJRT evaluation wall-clock time.
+    pub wall: Duration,
+    /// Max relative divergence vs. the analytical backend.
+    pub max_rel: f64,
+}
+
+/// Result of [`super::Session::bench_cost`].
+pub struct BenchCostResponse {
+    /// Feature-matrix rows evaluated.
+    pub rows: usize,
+    /// Analytical evaluation wall-clock time.
+    pub wall_analytical: Duration,
+    /// PJRT leg, when the artifact exists.
+    pub pjrt: Option<BenchCostPjrt>,
+}

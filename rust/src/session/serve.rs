@@ -1,0 +1,203 @@
+//! The daemon loop behind `proteus serve`: newline-delimited JSON
+//! requests in, one JSON response per line out.
+//!
+//! Protocol (documented with schemas in README.md):
+//!
+//! * Each input line is one request document — `{"cmd": "simulate" |
+//!   "sweep" | "search", ...}` with the same field names and defaults
+//!   as the CLI flags, plus an optional client-chosen `id` echoed back.
+//! * Each response is one line:
+//!   `{"id":…,"ok":true,"cache_hits":H,"cache_misses":M,"body":{…}}`
+//!   on success, `{"id":…,"ok":false,"error":"…"}` on failure. The
+//!   `body` is exactly the one-shot CLI's `--json --no-timings
+//!   --compact` document, byte for byte — ids and cache deltas live in
+//!   the envelope, never inside the body, so bodies diff cleanly.
+//! * Requests run concurrently on a thread pool sharing one
+//!   [`Session`], so repeated and overlapping requests hit the warm
+//!   caches; responses arrive in completion order (request order when
+//!   `threads == 1`) and each line is written atomically.
+//!
+//! The envelope is hand-formatted: [`Json`] objects serialize with
+//! sorted keys, and the envelope's fixed field order (`id`, `ok`,
+//! `cache_hits`, `cache_misses`, `body`) is part of the protocol — a
+//! client (or the CI gate's `sed`) can strip it with a prefix match.
+
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use crate::compiler::CacheSnapshot;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::{Request, Session};
+
+/// Counters of one finished serve loop.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Request lines processed (blank lines are skipped).
+    pub requests: usize,
+    /// Requests answered with an `"ok":false` error line.
+    pub errors: usize,
+}
+
+/// One `"ok":false` response line. The message is escaped through
+/// [`Json`] so the line stays well-formed whatever the error contains.
+fn error_line(id: &Json, msg: &str) -> String {
+    format!(
+        "{{\"id\":{},\"ok\":false,\"error\":{}}}",
+        id.to_string_compact(),
+        Json::Str(msg.to_string()).to_string_compact(),
+    )
+}
+
+/// Dispatch one parsed request against the shared session, returning
+/// the per-request cache delta and the response body (the stable
+/// no-timings document).
+fn run_request(session: &Session, req: &Request) -> Result<(CacheSnapshot, Json)> {
+    match req {
+        Request::Simulate { req, compile_stats } => {
+            let r = session.simulate(req)?;
+            Ok((r.cache, r.to_json(false, *compile_stats)))
+        }
+        Request::Sweep(req) => {
+            let r = session.sweep(req)?;
+            Ok((r.cache, r.to_json(false)))
+        }
+        Request::Search(req) => {
+            let r = session.search(req)?;
+            Ok((r.cache, r.to_json()))
+        }
+    }
+}
+
+/// Answer one request line. `seq` is the 1-based input line number,
+/// used as the response id when the request carries none (or cannot be
+/// parsed at all). Returns the response line and whether it is an
+/// error.
+fn respond(session: &Session, seq: u64, line: &str) -> (String, bool) {
+    let doc = match Json::parse(line) {
+        Ok(d) => d,
+        Err(e) => {
+            return (
+                error_line(&Json::Num(seq as f64), &format!("request: {e}")),
+                true,
+            )
+        }
+    };
+    let id = doc.get("id").cloned().unwrap_or(Json::Num(seq as f64));
+    match Request::from_json(&doc).and_then(|r| run_request(session, &r)) {
+        Ok((cache, body)) => (
+            format!(
+                "{{\"id\":{},\"ok\":true,\"cache_hits\":{},\"cache_misses\":{},\"body\":{}}}",
+                id.to_string_compact(),
+                cache.hits,
+                cache.misses,
+                body.to_string_compact(),
+            ),
+            false,
+        ),
+        Err(e) => (error_line(&id, &e.to_string()), true),
+    }
+}
+
+/// Run the serve loop: read NDJSON requests from `input` until EOF,
+/// answer each with one line on `output`, `threads` workers (0 = one
+/// per available core) sharing one warm `session`. Returns the
+/// request/error counters (the CLI prints them to stderr).
+pub fn serve<R: BufRead, W: Write + Send>(
+    session: &Session,
+    input: R,
+    output: W,
+    threads: usize,
+) -> Result<ServeStats> {
+    let threads = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+    .max(1);
+    let requests = AtomicUsize::new(0);
+    let errors = AtomicUsize::new(0);
+    let out = Mutex::new(output);
+    let io_err: Mutex<Option<std::io::Error>> = Mutex::new(None);
+    let (tx, rx) = mpsc::channel::<(u64, String)>();
+    // One shared receiver: a worker holds the lock only while blocked
+    // in recv(), so job pickup is serialized but processing is not.
+    let rx = Mutex::new(rx);
+
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let msg = rx.lock().unwrap().recv();
+                let Ok((seq, line)) = msg else { return };
+                let (resp, is_err) = respond(session, seq, &line);
+                requests.fetch_add(1, Ordering::Relaxed);
+                if is_err {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+                // Format first, then write + flush under the lock: each
+                // response occupies exactly one output line even under
+                // concurrent completion.
+                let mut o = out.lock().unwrap();
+                if let Err(e) = writeln!(o, "{resp}").and_then(|()| o.flush()) {
+                    io_err.lock().unwrap().get_or_insert(e);
+                }
+            });
+        }
+        let mut seq = 0u64;
+        for line in input.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            seq += 1;
+            // Workers outlive the sender only after this loop ends, so
+            // the send cannot fail while the scope is alive.
+            let _ = tx.send((seq, line));
+        }
+        drop(tx);
+        Ok(())
+    })?;
+
+    if let Some(e) = io_err.into_inner().unwrap() {
+        return Err(Error::Io(e));
+    }
+    Ok(ServeStats {
+        requests: requests.into_inner(),
+        errors: errors.into_inner(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blank_lines_are_skipped_and_garbage_is_answered() {
+        let session = Session::new();
+        let input = "\n   \nnot json\n{\"cmd\":\"frobnicate\"}\n";
+        let mut out = Vec::new();
+        let stats = serve(&session, input.as_bytes(), &mut out, 1).unwrap();
+        assert_eq!(stats, ServeStats { requests: 2, errors: 2 });
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        // Unparseable line: the 1-based input sequence number is the id.
+        assert!(lines[0].starts_with("{\"id\":1,\"ok\":false,"), "{}", lines[0]);
+        assert!(lines[1].contains("unknown cmd 'frobnicate'"), "{}", lines[1]);
+    }
+
+    #[test]
+    fn error_line_escapes_the_message() {
+        let line = error_line(&Json::Str("a\"b".into()), "quote \" and \\ backslash");
+        let doc = Json::parse(&line).unwrap();
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            doc.get("error").and_then(|e| e.as_str()),
+            Some("quote \" and \\ backslash")
+        );
+    }
+}

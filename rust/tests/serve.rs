@@ -1,0 +1,176 @@
+//! Integration suite for the `proteus serve` loop: response determinism
+//! (within a session, across sessions, and against the one-shot CLI
+//! document), concurrency (N requests → exactly N well-formed lines),
+//! and error reporting.
+//!
+//! Byte-identity here is schema-based, not post-processed: the response
+//! `body` simply contains no wall-clock or id fields (the `--no-timings`
+//! subset; ids and cache deltas live in the envelope), so raw substring
+//! comparison is exact.
+
+use proteus::session::{serve, Session, SimulateRequest};
+use proteus::strategy::{PipelineSchedule, StrategySpec};
+use proteus::util::json::Json;
+
+/// The `body` document of an `"ok":true` response line, as raw bytes of
+/// the original line (no re-serialization, so comparisons are exact).
+fn body_of(line: &str) -> &str {
+    let i = line
+        .find("\"body\":")
+        .unwrap_or_else(|| panic!("no body in response line: {line}"));
+    &line[i + "\"body\":".len()..line.len() - 1]
+}
+
+/// Run one serve loop over `input` and return the response lines.
+fn serve_lines(session: &Session, input: &str, threads: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    serve(session, input.as_bytes(), &mut out, threads).unwrap();
+    String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(str::to_string)
+        .collect()
+}
+
+const SIMULATE: &str =
+    r#"{"cmd":"simulate","model":"vgg19","batch":16,"preset":"HC1","nodes":1,"dp":2}"#;
+
+#[test]
+fn repeated_request_is_byte_identical_and_hits_the_cache() {
+    let session = Session::new();
+    let input = format!("{SIMULATE}\n{SIMULATE}\n");
+    let lines = serve_lines(&session, &input, 1);
+    assert_eq!(lines.len(), 2);
+    // Identical bodies by schema — no stripping, no normalization.
+    assert_eq!(body_of(&lines[0]), body_of(&lines[1]));
+    // The first request populates the template cache, the repeat hits it.
+    let first = Json::parse(&lines[0]).unwrap();
+    let second = Json::parse(&lines[1]).unwrap();
+    assert_eq!(first.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(
+        first.get("cache_hits").and_then(|v| v.as_usize()),
+        Some(0),
+        "{}",
+        lines[0]
+    );
+    assert!(
+        second.get("cache_hits").and_then(|v| v.as_usize()).unwrap() >= 1,
+        "{}",
+        lines[1]
+    );
+    assert_eq!(
+        second.get("cache_misses").and_then(|v| v.as_usize()),
+        Some(0),
+        "{}",
+        lines[1]
+    );
+}
+
+#[test]
+fn bodies_are_byte_identical_across_sessions() {
+    let sweep =
+        r#"{"cmd":"sweep","model":"vgg19","batch":16,"preset":"HC1","nodes":1,"top":3,"threads":2}"#;
+    let search = concat!(
+        r#"{"cmd":"search","model":"vgg19","batch":16,"preset":"HC1","nodes":1,"#,
+        r#""budget":6,"chains":1,"seed":3}"#
+    );
+    let input = format!("{SIMULATE}\n{sweep}\n{search}\n");
+    let a = serve_lines(&Session::new(), &input, 1);
+    let b = serve_lines(&Session::new(), &input, 1);
+    assert_eq!(a.len(), 3);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(body_of(x), body_of(y));
+    }
+}
+
+/// A serve response body is the session's no-timings document — which is
+/// also exactly what `proteus simulate --json --no-timings --compact`
+/// prints (the CLI renders through the same builder; CI diffs the two
+/// end to end).
+#[test]
+fn serve_body_matches_the_session_document() {
+    let session = Session::new();
+    let lines = serve_lines(&session, &format!("{SIMULATE}\n"), 1);
+    let req = SimulateRequest {
+        model: proteus::models::ModelKind::Vgg19,
+        batch: 16,
+        preset: proteus::cluster::Preset::HC1,
+        nodes: 1,
+        spec: {
+            let mut spec = StrategySpec::data_parallel(2);
+            spec.schedule = PipelineSchedule::OneFOneB;
+            spec
+        },
+        ..SimulateRequest::default()
+    };
+    let doc = session.simulate(&req).unwrap().to_json(false, false);
+    assert_eq!(body_of(&lines[0]), doc.to_string_compact());
+}
+
+#[test]
+fn concurrent_mixed_requests_answer_every_id_exactly_once() {
+    let reqs: Vec<String> = (0..8)
+        .map(|i| match i % 3 {
+            0 => format!(
+                r#"{{"id":"r{i}","cmd":"simulate","model":"vgg19","batch":16,"preset":"HC1","nodes":1,"dp":2}}"#
+            ),
+            1 => format!(
+                r#"{{"id":"r{i}","cmd":"simulate","model":"vgg19","batch":16,"preset":"HC1","nodes":1,"dp":4,"zero":true}}"#
+            ),
+            _ => format!(
+                r#"{{"id":"r{i}","cmd":"sweep","model":"vgg19","batch":16,"preset":"HC1","nodes":1,"top":3,"threads":1}}"#
+            ),
+        })
+        .collect();
+    let input: String = reqs.iter().map(|r| format!("{r}\n")).collect();
+
+    // Serial reference run: responses in request order.
+    let serial = serve_lines(&Session::new(), &input, 1);
+    assert_eq!(serial.len(), 8);
+
+    // Concurrent run: completion order is arbitrary, so match by id.
+    let concurrent = serve_lines(&Session::new(), &input, 4);
+    assert_eq!(concurrent.len(), 8, "one response line per request");
+    let by_id = |lines: &[String]| -> std::collections::BTreeMap<String, String> {
+        lines
+            .iter()
+            .map(|l| {
+                let doc = Json::parse(l).expect("interleaved or malformed response line");
+                assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{l}");
+                let id = doc.get("id").and_then(|v| v.as_str()).unwrap().to_string();
+                (id, body_of(l).to_string())
+            })
+            .collect()
+    };
+    let serial = by_id(&serial);
+    let concurrent = by_id(&concurrent);
+    assert_eq!(serial.len(), 8, "every id answered exactly once");
+    assert_eq!(serial, concurrent, "same bodies regardless of concurrency");
+}
+
+#[test]
+fn errors_are_answered_in_line_not_fatal() {
+    let session = Session::new();
+    let input = format!(
+        "not json\n{}\n{}\n{SIMULATE}\n",
+        r#"{"id":"bad-cmd","cmd":"frobnicate"}"#,
+        r#"{"id":"bad-model","cmd":"simulate","model":"resnet152"}"#,
+    );
+    let mut out = Vec::new();
+    let stats = serve(&session, input.as_bytes(), &mut out, 1).unwrap();
+    assert_eq!(stats.requests, 4);
+    assert_eq!(stats.errors, 3);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 4);
+    for l in &lines[..3] {
+        let doc = Json::parse(l).unwrap();
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(false)), "{l}");
+        assert!(doc.get("error").is_some(), "{l}");
+    }
+    assert!(lines[1].contains("unknown cmd 'frobnicate'"), "{}", lines[1]);
+    assert!(lines[2].contains("unknown model 'resnet152'"), "{}", lines[2]);
+    // The valid request after three failures still runs.
+    let last = Json::parse(lines[3]).unwrap();
+    assert_eq!(last.get("ok"), Some(&Json::Bool(true)), "{}", lines[3]);
+}
