@@ -98,6 +98,10 @@ OUTPUT / VALIDATION:
                     (template/weave/instantiate/finalize; simulate)
   --plain           disable runtime-behavior modeling (ablation)
   --truth           also run the flow-level testbed emulator
+  --no-coalesce     truth run without serial-chain coalescing (simulate;
+                    results are bit-identical — CI diffs the documents)
+  --legacy-scan     truth run dispatches with the pre-worklist full
+                    device scan (simulate; debug knob, bit-identical)
   --flexflow        also run the FlexFlow-Sim baseline (simulate)
   --trace FILE      write a Chrome/Perfetto trace of the HTAE timeline
   --artifacts PATH  AOT cost-kernel artifact (default artifacts/costmodel.hlo.txt)

@@ -188,6 +188,12 @@ fn print_compile_stats(s: &crate::compiler::CompileStats) {
         "  instantiated: {} micro-batches × {} chunks → {} tasks, {} deps",
         s.n_micro, s.n_chunks, s.n_tasks, s.n_deps,
     );
+    if s.coalesce_chains > 0 {
+        println!(
+            "  coalesce: {} serial chains absorb {} extra comp tasks",
+            s.coalesce_chains, s.coalesce_fused_tasks,
+        );
+    }
     if s.fold_classes > 0 {
         println!(
             "  fold: {} device classes, {} devices elided — {} logical tasks \
@@ -274,6 +280,8 @@ fn cmd_simulate(args: &Args, session: &Session) -> Result<()> {
     let (nics, oversub) = fabric_overrides(args)?;
     let plain = args.flag("plain");
     let truth = args.flag("truth");
+    let no_coalesce = args.flag("no-coalesce");
+    let legacy_scan = args.flag("legacy-scan");
     let flexflow = args.flag("flexflow");
     let json = args.flag("json");
     let compile_stats = args.flag("compile-stats");
@@ -298,6 +306,8 @@ fn cmd_simulate(args: &Args, session: &Session) -> Result<()> {
         spec,
         plain,
         truth,
+        no_coalesce,
+        legacy_scan,
         flexflow,
         fold,
         coll_algo,
@@ -354,6 +364,19 @@ fn cmd_simulate(args: &Args, session: &Session) -> Result<()> {
                 t.throughput,
                 crate::util::rel_err_pct(resp.report.step_ms, t.step_ms)
             );
+            if compile_stats {
+                if let Some(e) = t.engine {
+                    println!(
+                        "  engine: {} events popped ({} stale), {} scan iters, \
+                         {} flows re-rated, {} chains fused",
+                        e.events_popped,
+                        e.stale_discards,
+                        e.device_scan_iters,
+                        e.flows_rerated,
+                        e.chains_fused,
+                    );
+                }
+            }
         }
         if let Some(ff) = &resp.flexflow {
             match ff {

@@ -1,0 +1,70 @@
+//! Serial-chain coalescing analysis (PR 9).
+//!
+//! Finds maximal runs of computation tasks that the event engine may
+//! treat as one super-task: consecutive pairs `(a, b)` on the same
+//! device where `b` is `a`'s *only* successor and `a` is `b`'s *only*
+//! predecessor. For such a pair the engine's dispatch decision is
+//! forced — when `a` completes, `b` is the only task that can start on
+//! that device and nothing else in the system is waiting on `a` — so
+//! the engine can schedule one completion event for the whole run and
+//! replay the interior boundaries afterwards for memory/timeline
+//! fidelity (see `emulator/engine.rs` and docs/ARCHITECTURE.md §9).
+//!
+//! Safety requires more than the pairwise degree check: the engine pops
+//! the *lowest-id* ready comp per device, so fusing `a → b` may only
+//! skip the scheduler if no third comp on the device could have been
+//! ready between them. We guarantee that with a conservative per-device
+//! *total-order* precondition: a device participates in fusion only if
+//! its comp tasks, in ascending id order, are linked by a direct edge
+//! between every consecutive pair. Then at most one of the device's
+//! comps is ever ready at a time and the pop is always forced. Devices
+//! whose comps synchronize only through communication tasks (tensor/
+//! pipeline parallel interleavings) fail the check and simply keep the
+//! one-event-per-task path.
+
+use super::{ExecGraph, TaskId, TaskRef};
+
+/// Sentinel for "no fused successor" in the chain-link array.
+pub(crate) const NO_CHAIN: u32 = u32::MAX;
+
+/// Compute the chain-link array for `eg`: `links[a] == b` means the
+/// engine may fuse comp `a` directly into comp `b`; `NO_CHAIN`
+/// otherwise. Interior members of a chain are exactly the tasks that
+/// appear on the right-hand side of a link.
+pub(crate) fn chain_links(eg: &ExecGraph) -> Vec<u32> {
+    let n = eg.n_tasks();
+    let mut links = vec![NO_CHAIN; n];
+    if n == 0 || eg.n_devices == 0 {
+        return links;
+    }
+    // Per-device comp lists; ascending id because we scan 0..n.
+    let mut dev_comps: Vec<Vec<TaskId>> = vec![Vec::new(); eg.n_devices];
+    for id in 0..n {
+        if let TaskRef::Comp(c) = eg.kind(id) {
+            if c.device < dev_comps.len() {
+                dev_comps[c.device].push(id);
+            }
+        }
+    }
+    let preds = eg.preds();
+    for comps in &dev_comps {
+        if comps.len() < 2 {
+            continue;
+        }
+        // Total-order precondition: every consecutive pair must be
+        // joined by a direct dependency edge.
+        let ordered = comps
+            .windows(2)
+            .all(|w| eg.succs(w[0]).contains(&w[1]));
+        if !ordered {
+            continue;
+        }
+        for w in comps.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if eg.succs(a) == [b] && preds[b] == 1 {
+                links[a] = b as u32;
+            }
+        }
+    }
+    links
+}

@@ -38,6 +38,7 @@
 //! (see [`crate::strategy::ResolvedStrategy::structural_hash`]).
 
 pub mod bound;
+mod coalesce;
 mod common;
 mod emit;
 mod fold;
@@ -274,6 +275,9 @@ pub struct ExecGraph {
     succ_dat: Vec<TaskId>,
     preds: Vec<u32>,
     fold: Option<FoldInfo>,
+    /// Serial-chain links (`coalesce.rs`): `chain_next[a] == b` when the
+    /// event engine may fuse comp `a` into comp `b` (u32::MAX = none).
+    chain_next: Vec<u32>,
     /// Pipeline stage count.
     pub n_stages: usize,
     /// Devices used (max id + 1).
@@ -339,7 +343,7 @@ impl ExecGraph {
             succ_dat.extend(ss);
             succ_off.push(succ_dat.len());
         }
-        ExecGraph {
+        let mut g = ExecGraph {
             payload,
             comp,
             comm,
@@ -352,12 +356,15 @@ impl ExecGraph {
             succ_dat,
             preds,
             fold: None,
+            chain_next: Vec::new(),
             n_stages: meta.n_stages,
             n_devices: meta.n_devices,
             static_mem: meta.static_mem,
             batch: meta.batch,
             stage_schedule: meta.stage_schedule,
-        }
+        };
+        g.chain_next = coalesce::chain_links(&g);
+        g
     }
 
     /// Number of tasks.
@@ -417,6 +424,35 @@ impl ExecGraph {
     /// Predecessor counts (indexed by task id).
     pub fn preds(&self) -> &[u32] {
         &self.preds
+    }
+
+    /// Fused successor of comp task `id`, if the serial-chain
+    /// coalescing analysis proved the engine may run them as one
+    /// super-task (see `coalesce.rs`).
+    pub fn chain_next(&self, id: TaskId) -> Option<TaskId> {
+        match self.chain_next[id] {
+            coalesce::NO_CHAIN => None,
+            b => Some(b as TaskId),
+        }
+    }
+
+    /// Coalescing summary: `(chains, fused_tasks)` where `chains` is the
+    /// number of maximal multi-task runs and `fused_tasks` the number of
+    /// tasks absorbed beyond each run's head (i.e. chain-link count).
+    pub fn coalesce_counts(&self) -> (usize, usize) {
+        let n = self.n_tasks();
+        let mut has_prev = vec![false; n];
+        let mut fused = 0usize;
+        for a in 0..n {
+            if let Some(b) = self.chain_next(a) {
+                has_prev[b] = true;
+                fused += 1;
+            }
+        }
+        let chains = (0..n)
+            .filter(|&a| self.chain_next(a).is_some() && !has_prev[a])
+            .count();
+        (chains, fused)
     }
 
     /// Borrowed view of task `id`.
@@ -618,6 +654,11 @@ pub struct CompileStats {
     pub n_tasks: usize,
     /// Dependency edges in the finished graph.
     pub n_deps: usize,
+    /// Serial comp chains the coalescing analysis found (multi-task
+    /// runs the event engine may schedule as one super-task).
+    pub coalesce_chains: usize,
+    /// Tasks absorbed into chains beyond each chain's head.
+    pub coalesce_fused_tasks: usize,
     /// One span per stamped slot instance. Cleared when the graph was
     /// folded (spans index pre-fold task ids).
     pub instance_spans: Vec<InstanceSpan>,
@@ -663,6 +704,16 @@ impl CacheSnapshot {
         CacheSnapshot {
             hits: self.hits.saturating_sub(earlier.hits),
             misses: self.misses.saturating_sub(earlier.misses),
+        }
+    }
+
+    /// Component-wise sum: merges deltas from sibling warm caches (the
+    /// compiler's template cache + the emulator's collective-plan
+    /// cache) into the one figure a response reports.
+    pub fn plus(self, other: CacheSnapshot) -> CacheSnapshot {
+        CacheSnapshot {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
         }
     }
 }
@@ -925,6 +976,9 @@ pub fn compile_delta_opts(
     stats.n_segments = template.seg_stage.len();
     stats.n_micro = template.n_micro;
     let eg = instantiate::instantiate(graph, &resolved, template.as_ref(), cluster, fold, &mut stats)?;
+    let (chains, fused) = eg.coalesce_counts();
+    stats.coalesce_chains = chains;
+    stats.coalesce_fused_tasks = fused;
     let record = want_record.then(|| EmitRecord {
         stage_hashes,
         checkpoints,

@@ -10,16 +10,33 @@
 //!   (compute finishes, α-phase expiries, flow completions), with
 //!   epoch-based lazy invalidation — a stale event is discarded on pop
 //!   instead of being searched for in the heap;
-//! - **lazily settled entities**: each compute job / flow stores
+//! - **lazily settled entities**: each compute run / flow stores
 //!   `(remaining, rate, last_t)` and is advanced only when its rate
-//!   changes or it completes, so untouched work is never rescanned;
+//!   actually changes (a refresh that recomputes the same rate is a
+//!   no-op — no settle, no reschedule), so untouched work is never
+//!   rescanned;
 //! - **incremental max-min** ([`super::fairshare::IncrementalMaxMin`]):
 //!   a flow arrival/departure re-solves only the link-connected
 //!   component it touches, and only flows whose rate actually moved get
 //!   their completion events rescheduled;
-//! - per-device ready queues (min-heap by task id) identical to the
-//!   reference engine, so the *schedule* — and therefore the makespan —
-//!   is unchanged (pinned by `event_engine_matches_reference_loop`).
+//! - an **active-device worklist**: dispatch visits only devices whose
+//!   ready-heap gained a task or which just went idle this instant —
+//!   never the whole cluster (`EngineStats::device_scan_iters` stays 0;
+//!   the pre-worklist full scan is kept one PR behind
+//!   `EmulatorConfig::legacy_scan` as a differential oracle);
+//! - **per-class comm gating indexes**: a blocked communication task
+//!   parks on the first busy device of its stream class and is
+//!   re-attempted only when that device's class occupancy clears, so a
+//!   launch attempt touches only groups whose gate actually opened —
+//!   replacing the re-sorted full `comm_ready` rescan;
+//! - **serial-chain coalescing** (`compiler/coalesce.rs`): comp chains
+//!   the compiler proved schedule-forced run as one super-task with a
+//!   single completion event; a chain's rate toggles uniformly with its
+//!   device's interference state, so interior boundaries are recomputed
+//!   with bit-identical arithmetic at each re-rate and replayed for
+//!   memory/timeline fidelity at chain completion. Makespan, peaks, and
+//!   traces are bit-identical with coalescing on or off (pinned by
+//!   `engine_equivalence.rs`).
 //!
 //! Interference bookkeeping: a device's compute rate is `1/(1+δ)` while
 //! any active flow touches it, and a flow's effective rate is its
@@ -27,6 +44,10 @@
 //! Both toggles are piecewise-constant between events, so the engine
 //! marks the affected devices/flows dirty at each event and re-rates
 //! exactly those.
+//!
+//! The per-device ready queues (min-heap by task id) are identical to
+//! the reference engine, so the *schedule* — and therefore the makespan
+//! — is unchanged (pinned by `event_engine_matches_reference_loop`).
 
 // Index-based loops are deliberate in this hot path: they split borrows
 // across arenas (`flows`, `jobs`, dirty sets) that iterator adapters
@@ -35,12 +56,13 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
 
 use crate::cluster::DeviceId;
 use crate::compiler::{ExecGraph, TaskId, TaskRef};
 use crate::emulator::fairshare::IncrementalMaxMin;
 use crate::executor::memory::MemoryTracker;
-use crate::executor::{PhaseSpan, SimReport, Span};
+use crate::executor::{EngineStats, PhaseSpan, SimReport, Span};
 use crate::util::time::{secs_to_ps, Ps};
 use crate::Result;
 
@@ -84,13 +106,39 @@ impl Ord for HeapItem {
     }
 }
 
-/// A running computation: lazily settled unit-rate work.
-struct EvComp {
-    task: TaskId,
-    remaining: f64, // seconds of unit-rate work
+/// One running compute dispatch on a device: a coalesced chain of 1..k
+/// comp tasks executed back-to-back with a single completion event.
+/// Uncoalesced tasks are just chains of length 1, so both modes share
+/// one code path (and the per-device slot's vectors are reused across
+/// dispatches — no per-task allocation).
+///
+/// Lazy settling works on the *current* member (`cur`, `remaining`,
+/// `last_t`); `bounds[i]` is the predicted absolute completion time of
+/// member `i` under the current rate, chained with exactly the
+/// arithmetic the per-task engine would use (`bounds[i] =
+/// bounds[i-1] + work[i]/rate`), so interior boundaries are bitwise
+/// equal to the event times an uncoalesced run would produce. Bounds
+/// already crossed when a re-rate happens are frozen — they are
+/// history, and the replay at completion reads them for spans and
+/// memory events.
+#[derive(Default)]
+struct ChainRun {
+    members: Vec<TaskId>,
+    /// Per-member unit-rate seconds of work.
+    work: Vec<f64>,
+    /// Per-member predicted absolute completion time (s).
+    bounds: Vec<f64>,
+    /// Per-member interference flag (ran below unit rate at any point).
+    slowed: Vec<bool>,
+    /// Current member index (first not known complete).
+    cur: usize,
+    /// Current member's settled remaining unit-rate seconds.
+    remaining: f64,
+    /// Assigned rate (0.0 = fresh, assigned in the next refresh).
     rate: f64,
     last_t: f64,
     started: Ps,
+    active: bool,
 }
 
 /// A running communication job (one collective, possibly multi-phase).
@@ -102,6 +150,9 @@ struct EvJob {
     group: Vec<DeviceId>,
     alpha_done: bool,
     finished: bool,
+    /// Any of this job's flows shared a link with another job's active
+    /// flow (bandwidth-sharing detector, counted at finalize).
+    shared: bool,
     /// Remaining plan phases, reversed (pop from the back).
     phases: Vec<CommPhase>,
     /// Current-phase bookkeeping for per-phase trace spans.
@@ -122,6 +173,14 @@ struct EvFlow {
     done: bool,
 }
 
+/// Stream-class index for the parked-comm gating tables.
+fn class_ix(c: CommClass) -> usize {
+    match c {
+        CommClass::Feature => 0,
+        CommClass::Gradient => 1,
+    }
+}
+
 /// Emulate one step with the event-driven engine (see module docs).
 pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Result<SimReport> {
     let n = eg.n_tasks();
@@ -131,16 +190,25 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
     } else {
         0.0
     };
+    let coalesce = emu.config.coalesce;
+    let legacy = emu.config.legacy_scan;
+    let mut stats = EngineStats::default();
 
     let mut preds = eg.preds().to_vec();
     let mut comp_ready: Vec<BinaryHeap<Reverse<TaskId>>> =
         (0..n_dev).map(|_| BinaryHeap::new()).collect();
-    let mut comm_ready: Vec<TaskId> = Vec::new();
+    // Comm tasks awaiting a launch attempt. The worklist scheduler
+    // drains it every instant (blocked tasks move to `parked`); the
+    // legacy scheduler treats it as the persistent ready list.
+    let mut comm_pending: Vec<TaskId> = Vec::new();
+    // Blocked comm tasks indexed by (stream class, blocking device);
+    // drained back into `comm_pending` when that gate opens.
+    let mut parked: Vec<Vec<TaskId>> = vec![Vec::new(); 2 * n_dev];
     let mut comp_busy = vec![false; n_dev];
     let mut feat_busy = vec![false; n_dev];
     let mut grad_busy = vec![false; n_dev];
 
-    let mut comp_jobs: Vec<Option<EvComp>> = (0..n_dev).map(|_| None).collect();
+    let mut comp_jobs: Vec<ChainRun> = (0..n_dev).map(|_| ChainRun::default()).collect();
     let mut comp_epoch = vec![0u32; n_dev];
     let mut jobs: Vec<EvJob> = Vec::new();
     let mut job_flows: Vec<Vec<usize>> = Vec::new();
@@ -156,134 +224,261 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
     let mut mem = MemoryTracker::new(&eg.static_mem, emu.cluster.device.memory_bytes);
     let mut timeline = Vec::new();
     let mut comm_phases: Vec<PhaseSpan> = Vec::new();
-    let mut plan_cache: HashMap<PlanKey, Vec<CommPhase>> = HashMap::new();
+    let mut plan_cache: HashMap<PlanKey, Arc<Vec<CommPhase>>> = HashMap::new();
     let mut heap: BinaryHeap<Reverse<HeapItem>> = BinaryHeap::new();
     let mut t = 0.0f64; // seconds
     let mut done = 0usize;
+    let mut overlapped = 0usize;
+    let mut shared_ops = 0usize;
 
     // Per-instant dirty sets (entities whose rate may have changed).
     let mut dirty_flows: Vec<usize> = Vec::new();
     let mut dirty_flow_mark: Vec<bool> = Vec::new();
     let mut dirty_devs: Vec<DeviceId> = Vec::new();
     let mut dirty_dev_mark = vec![false; n_dev];
-    // Reused batch of same-instant events.
+    // Worklist: devices whose ready-heap gained a task or which went
+    // idle this instant — the only devices dispatch must visit.
+    let mut comp_kick: Vec<DeviceId> = Vec::new();
+    let mut comp_kick_mark = vec![false; n_dev];
+    // Reused batch of same-instant events + deferred start buffers.
     let mut batch: Vec<HeapItem> = Vec::new();
     let mut completed_jobs: Vec<usize> = Vec::new();
+    let mut to_start: Vec<(DeviceId, TaskId)> = Vec::new();
+    let mut to_launch: Vec<TaskId> = Vec::new();
+    let mut comm_scratch: Vec<TaskId> = Vec::new();
 
     let enqueue = |id: TaskId,
                    comp_ready: &mut Vec<BinaryHeap<Reverse<TaskId>>>,
-                   comm_ready: &mut Vec<TaskId>| {
+                   comm_pending: &mut Vec<TaskId>,
+                   comp_kick: &mut Vec<DeviceId>,
+                   comp_kick_mark: &mut Vec<bool>| {
         match eg.kind(id) {
-            TaskRef::Comp(c) => comp_ready[c.device].push(Reverse(id)),
-            TaskRef::Comm(_) => comm_ready.push(id),
+            TaskRef::Comp(c) => {
+                comp_ready[c.device].push(Reverse(id));
+                if !comp_kick_mark[c.device] {
+                    comp_kick_mark[c.device] = true;
+                    comp_kick.push(c.device);
+                }
+            }
+            TaskRef::Comm(_) => comm_pending.push(id),
         }
     };
     for (i, &p) in preds.iter().enumerate() {
         if p == 0 {
-            enqueue(i, &mut comp_ready, &mut comm_ready);
+            enqueue(
+                i,
+                &mut comp_ready,
+                &mut comm_pending,
+                &mut comp_kick,
+                &mut comp_kick_mark,
+            );
         }
     }
 
     loop {
         // ---- Start everything startable at time t. ----------------
-        let mut started_any = true;
-        while started_any {
-            started_any = false;
-            for d in 0..n_dev {
+        // Both schedulers only *select* work here (and claim the busy
+        // bits, which is part of the comm gate); the state mutation is
+        // deferred to the shared blocks below so the two paths cannot
+        // diverge behaviorally.
+        to_start.clear();
+        to_launch.clear();
+        if legacy {
+            // Pre-worklist oracle: scan every device, rescan every
+            // pending comm, repeat until a fixpoint.
+            let mut started_any = true;
+            while started_any {
+                started_any = false;
+                for d in 0..n_dev {
+                    stats.device_scan_iters += 1;
+                    if comp_busy[d] {
+                        continue;
+                    }
+                    if let Some(Reverse(id)) = comp_ready[d].pop() {
+                        comp_busy[d] = true;
+                        dev_computing[d] = true;
+                        to_start.push((d, id));
+                        started_any = true;
+                    }
+                }
+                comm_pending.sort_unstable();
+                let mut i = 0;
+                while i < comm_pending.len() {
+                    let id = comm_pending[i];
+                    let c = match eg.kind(id) {
+                        TaskRef::Comm(c) => c,
+                        _ => unreachable!(),
+                    };
+                    let busy = match c.class {
+                        CommClass::Feature => &mut feat_busy,
+                        CommClass::Gradient => &mut grad_busy,
+                    };
+                    if c.group.iter().any(|&d| busy[d]) {
+                        i += 1;
+                        continue;
+                    }
+                    comm_pending.swap_remove(i);
+                    for &d in &c.group {
+                        busy[d] = true;
+                    }
+                    to_launch.push(id);
+                    started_any = true;
+                }
+            }
+            // Discharge the (unused) worklist bookkeeping.
+            for k in 0..comp_kick.len() {
+                comp_kick_mark[comp_kick[k]] = false;
+            }
+            comp_kick.clear();
+        } else {
+            // O(active) worklist: only kicked devices are visited.
+            // Invariant: an idle device with a non-empty ready heap was
+            // kicked this instant (ready push kicks; completion kicks),
+            // and one pass suffices — a comp start cannot make another
+            // device startable, and a comm launch only *sets* gates.
+            comp_kick.sort_unstable();
+            for k in 0..comp_kick.len() {
+                let d = comp_kick[k];
+                comp_kick_mark[d] = false;
                 if comp_busy[d] {
                     continue;
                 }
                 if let Some(Reverse(id)) = comp_ready[d].pop() {
-                    let work = (base[id] as f64 / 1e12 * emu.ripple(id)).max(1e-12);
                     comp_busy[d] = true;
                     dev_computing[d] = true;
-                    comp_jobs[d] = Some(EvComp {
-                        task: id,
-                        remaining: work,
-                        rate: 0.0, // assigned in the refresh pass below
-                        last_t: t,
-                        started: secs_to_ps(t),
-                    });
-                    mem_alloc(&mut mem, eg, id, secs_to_ps(t));
-                    if !dirty_dev_mark[d] {
-                        dirty_dev_mark[d] = true;
-                        dirty_devs.push(d);
-                    }
-                    started_any = true;
+                    to_start.push((d, id));
                 }
             }
-            comm_ready.sort_unstable();
-            let mut i = 0;
-            while i < comm_ready.len() {
-                let id = comm_ready[i];
+            comp_kick.clear();
+            // Launch attempts touch only new candidates and freshly
+            // unparked tasks, in ascending id order like the oracle; a
+            // blocked task parks on the first busy device of its class
+            // and stays there until that exact gate opens.
+            comm_pending.sort_unstable();
+            std::mem::swap(&mut comm_pending, &mut comm_scratch);
+            for k in 0..comm_scratch.len() {
+                let id = comm_scratch[k];
                 let c = match eg.kind(id) {
                     TaskRef::Comm(c) => c,
                     _ => unreachable!(),
                 };
                 let busy = match c.class {
-                    CommClass::Feature => &feat_busy,
-                    CommClass::Gradient => &grad_busy,
-                };
-                if c.group.iter().any(|&d| busy[d]) {
-                    i += 1;
-                    continue;
-                }
-                comm_ready.swap_remove(i);
-                let busy = match c.class {
                     CommClass::Feature => &mut feat_busy,
                     CommClass::Gradient => &mut grad_busy,
                 };
+                if let Some(&bd) = c.group.iter().find(|&&d| busy[d]) {
+                    parked[class_ix(c.class) * n_dev + bd].push(id);
+                    continue;
+                }
                 for &d in &c.group {
                     busy[d] = true;
                 }
-                let mut phases = emu.comm_launch(c, id, &mut plan_cache);
-                phases.reverse(); // pop() walks them in order
-                let cur = phases.pop().expect("plans lower to >= 1 phase");
-                let ji = jobs.len();
-                let mut fl = Vec::with_capacity(cur.flows.len());
-                for &(src, dst, bytes) in &cur.flows {
-                    let fi = flows.len();
-                    flows.push(EvFlow {
-                        job: ji,
-                        src,
-                        dst,
-                        links: emu.cluster.path(src, dst),
-                        remaining: bytes.max(1.0),
-                        rate: 0.0,
-                        last_t: t,
-                        active: false,
-                        done: false,
-                    });
-                    flow_epoch.push(0);
-                    dirty_flow_mark.push(false);
-                    fl.push(fi);
-                }
-                jobs.push(EvJob {
-                    task: id,
-                    flows_left: fl.len(),
-                    started: secs_to_ps(t),
-                    class: c.class,
-                    group: c.group.clone(),
-                    alpha_done: false,
-                    finished: false,
-                    phases,
-                    phase_label: cur.label,
-                    phase_started: secs_to_ps(t),
-                });
-                job_flows.push(fl);
-                mem_alloc(&mut mem, eg, id, secs_to_ps(t));
-                heap.push(Reverse(HeapItem {
-                    t: t + cur.alpha.max(1e-12),
-                    ev: Ev::Alpha(ji),
-                    epoch: 0,
-                }));
-                started_any = true;
+                to_launch.push(id);
             }
+            comm_scratch.clear();
+        }
+
+        // Shared comp-start block: dispatch each claimed device, fusing
+        // the compiler-proven serial chain rooted at the popped task
+        // (chains have length 1 when coalescing is off or unproven).
+        for k in 0..to_start.len() {
+            let (d, id) = to_start[k];
+            let run = &mut comp_jobs[d];
+            run.members.clear();
+            run.work.clear();
+            run.bounds.clear();
+            run.slowed.clear();
+            run.members.push(id);
+            if coalesce {
+                let mut c = id;
+                while let Some(nx) = eg.chain_next(c) {
+                    run.members.push(nx);
+                    c = nx;
+                }
+            }
+            for mi in 0..run.members.len() {
+                let m = run.members[mi];
+                run.work
+                    .push((base[m] as f64 / 1e12 * emu.ripple(m)).max(1e-12));
+            }
+            run.bounds.resize(run.members.len(), 0.0);
+            run.slowed.resize(run.members.len(), false);
+            run.cur = 0;
+            run.remaining = run.work[0];
+            run.rate = 0.0; // assigned in the refresh pass below
+            run.last_t = t;
+            run.started = secs_to_ps(t);
+            run.active = true;
+            if run.members.len() > 1 {
+                stats.chains_fused += 1;
+            }
+            mem_alloc(&mut mem, eg, id, secs_to_ps(t));
+            if !dirty_dev_mark[d] {
+                dirty_dev_mark[d] = true;
+                dirty_devs.push(d);
+            }
+        }
+
+        // Shared comm-launch block (busy bits were claimed above).
+        for k in 0..to_launch.len() {
+            let id = to_launch[k];
+            let c = match eg.kind(id) {
+                TaskRef::Comm(c) => c,
+                _ => unreachable!(),
+            };
+            let mut phases = emu.comm_launch(c, id, &mut plan_cache);
+            phases.reverse(); // pop() walks them in order
+            let cur = phases.pop().expect("plans lower to >= 1 phase");
+            let ji = jobs.len();
+            let mut fl = Vec::with_capacity(cur.flows.len());
+            for &(src, dst, bytes) in &cur.flows {
+                let fi = flows.len();
+                flows.push(EvFlow {
+                    job: ji,
+                    src,
+                    dst,
+                    links: emu.cluster.path(src, dst),
+                    remaining: bytes.max(1.0),
+                    rate: 0.0,
+                    last_t: t,
+                    active: false,
+                    done: false,
+                });
+                flow_epoch.push(0);
+                dirty_flow_mark.push(false);
+                fl.push(fi);
+            }
+            jobs.push(EvJob {
+                task: id,
+                flows_left: fl.len(),
+                started: secs_to_ps(t),
+                class: c.class,
+                group: c.group.clone(),
+                alpha_done: false,
+                finished: false,
+                shared: false,
+                phases,
+                phase_label: cur.label,
+                phase_started: secs_to_ps(t),
+            });
+            job_flows.push(fl);
+            mem_alloc(&mut mem, eg, id, secs_to_ps(t));
+            heap.push(Reverse(HeapItem {
+                t: t + cur.alpha.max(1e-12),
+                ev: Ev::Alpha(ji),
+                epoch: 0,
+            }));
         }
 
         // ---- Refresh dirty entities: settle, re-rate, reschedule. ---
         // A device whose compute/flow occupancy toggled dirties every
         // active flow touching it (interference) and its own compute.
+        // Refreshes that recompute an unchanged rate are skipped whole:
+        // no settle, no epoch bump, no reschedule — the outstanding
+        // event is still exact. (This is also what makes chain interior
+        // boundaries invisible to flows: re-dispatching the next chain
+        // member leaves the device's occupancy, hence every rate,
+        // unchanged.)
         for k in 0..dirty_devs.len() {
             let d = dirty_devs[k];
             for idx in 0..dev_flows[d].len() {
@@ -301,6 +496,16 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             if f.done || !f.active {
                 continue;
             }
+            let share = mm.rate(fi);
+            let r_new = if delta > 0.0 && (dev_computing[f.src] || dev_computing[f.dst]) {
+                share / (1.0 + delta)
+            } else {
+                share
+            };
+            if r_new == f.rate {
+                continue; // settle-skip: nothing moved
+            }
+            stats.flows_rerated += 1;
             if f.rate.is_finite() {
                 f.remaining -= (t - f.last_t) * f.rate;
                 if f.remaining < 0.0 {
@@ -308,12 +513,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                 }
             }
             f.last_t = t;
-            let share = mm.rate(fi);
-            f.rate = if delta > 0.0 && (dev_computing[f.src] || dev_computing[f.dst]) {
-                share / (1.0 + delta)
-            } else {
-                share
-            };
+            f.rate = r_new;
             flow_epoch[fi] = flow_epoch[fi].wrapping_add(1);
             let tc = if f.rate.is_infinite() {
                 t
@@ -334,45 +534,78 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         for k in 0..dirty_devs.len() {
             let d = dirty_devs[k];
             dirty_dev_mark[d] = false;
-            if let Some(j) = comp_jobs[d].as_mut() {
-                j.remaining -= (t - j.last_t) * j.rate;
-                if j.remaining < 0.0 {
-                    j.remaining = 0.0;
-                }
-                j.last_t = t;
-                j.rate = if delta > 0.0 && !dev_flows[d].is_empty() {
-                    1.0 / (1.0 + delta)
-                } else {
-                    1.0
-                };
-                comp_epoch[d] = comp_epoch[d].wrapping_add(1);
-                heap.push(Reverse(HeapItem {
-                    t: t + j.remaining / j.rate,
-                    ev: Ev::Comp(d),
-                    epoch: comp_epoch[d],
-                }));
+            let run = &mut comp_jobs[d];
+            if !run.active {
+                continue;
             }
+            let r_new = if delta > 0.0 && !dev_flows[d].is_empty() {
+                1.0 / (1.0 + delta)
+            } else {
+                1.0
+            };
+            if r_new == run.rate {
+                continue; // settle-skip
+            }
+            let old_slow = run.rate > 0.0 && run.rate < 1.0;
+            // A fresh dispatch (sentinel rate, zeroed bounds) has run no
+            // interval yet: skip straight to the rate assignment.
+            if run.rate > 0.0 {
+                // Cross virtual boundaries passed at the old rate since
+                // the last re-rate: those members completed (their
+                // bounds are final) and the next member started then.
+                while run.cur + 1 < run.members.len() && run.bounds[run.cur] <= t {
+                    run.slowed[run.cur] = run.slowed[run.cur] || old_slow;
+                    run.last_t = run.bounds[run.cur];
+                    run.cur += 1;
+                    run.remaining = run.work[run.cur];
+                }
+                // The member running at t held the old rate iff it
+                // started strictly before t.
+                if run.last_t < t {
+                    run.slowed[run.cur] = run.slowed[run.cur] || old_slow;
+                }
+            }
+            run.remaining -= (t - run.last_t) * run.rate;
+            if run.remaining < 0.0 {
+                run.remaining = 0.0;
+            }
+            run.last_t = t;
+            run.rate = r_new;
+            if r_new < 1.0 {
+                run.slowed[run.cur] = true;
+            }
+            run.bounds[run.cur] = t + run.remaining / r_new;
+            for j in run.cur + 1..run.members.len() {
+                run.bounds[j] = run.bounds[j - 1] + run.work[j] / r_new;
+            }
+            comp_epoch[d] = comp_epoch[d].wrapping_add(1);
+            heap.push(Reverse(HeapItem {
+                t: run.bounds[run.members.len() - 1],
+                ev: Ev::Comp(d),
+                epoch: comp_epoch[d],
+            }));
         }
         dirty_devs.clear();
 
         // ---- Pop the next batch of simultaneous valid events. -------
         let stale = |it: &HeapItem,
-                     comp_jobs: &[Option<EvComp>],
+                     comp_jobs: &[ChainRun],
                      comp_epoch: &[u32],
                      flows: &[EvFlow],
                      flow_epoch: &[u32]| match it.ev {
-            Ev::Comp(d) => comp_jobs[d].is_none() || comp_epoch[d] != it.epoch,
+            Ev::Comp(d) => !comp_jobs[d].active || comp_epoch[d] != it.epoch,
             Ev::Alpha(_) => false,
-            Ev::Flow(fi) => {
-                flows[fi].done || !flows[fi].active || flow_epoch[fi] != it.epoch
-            }
+            Ev::Flow(fi) => flows[fi].done || !flows[fi].active || flow_epoch[fi] != it.epoch,
         };
         batch.clear();
         let first = loop {
             match heap.pop() {
                 None => break None,
                 Some(Reverse(it)) => {
-                    if !stale(&it, &comp_jobs, &comp_epoch, &flows, &flow_epoch) {
+                    stats.events_popped += 1;
+                    if stale(&it, &comp_jobs, &comp_epoch, &flows, &flow_epoch) {
+                        stats.stale_discards += 1;
+                    } else {
                         break Some(it);
                     }
                 }
@@ -388,7 +621,10 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                 break;
             }
             let Reverse(it) = heap.pop().unwrap();
-            if !stale(&it, &comp_jobs, &comp_epoch, &flows, &flow_epoch) {
+            stats.events_popped += 1;
+            if stale(&it, &comp_jobs, &comp_epoch, &flows, &flow_epoch) {
+                stats.stale_discards += 1;
+            } else {
                 batch.push(it);
             }
         }
@@ -402,23 +638,67 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         for bi in 0..batch.len() {
             match batch[bi].ev {
                 Ev::Comp(d) => {
-                    let j = comp_jobs[d].take().expect("validated on pop");
+                    let run = &mut comp_jobs[d];
+                    run.active = false;
                     comp_busy[d] = false;
                     dev_computing[d] = false;
-                    mem_free(&mut mem, eg, j.task, end);
-                    if emu.config.record_timeline {
-                        timeline.push(Span {
-                            task: j.task,
-                            start: j.started,
-                            end,
-                        });
+                    let m = run.members.len();
+                    // Members from `cur` on ran (their tails) at the
+                    // final rate, assigned at their virtual starts.
+                    let final_slow = run.rate < 1.0;
+                    for i in run.cur..m {
+                        run.slowed[i] = run.slowed[i] || final_slow;
                     }
-                    done += 1;
-                    for &s in eg.succs(j.task) {
+                    // Replay every member boundary for memory, timeline
+                    // and counters; interior successors are exactly the
+                    // next member (the fusion precondition), so only the
+                    // tail's successor list is walked.
+                    for i in 0..m {
+                        let task = run.members[i];
+                        let s_ps = if i == 0 {
+                            run.started
+                        } else {
+                            secs_to_ps(run.bounds[i - 1])
+                        };
+                        let e_ps = if i + 1 == m {
+                            end
+                        } else {
+                            secs_to_ps(run.bounds[i])
+                        };
+                        if i > 0 {
+                            mem_alloc(&mut mem, eg, task, s_ps);
+                        }
+                        mem_free(&mut mem, eg, task, e_ps);
+                        if emu.config.record_timeline {
+                            timeline.push(Span {
+                                task,
+                                start: s_ps,
+                                end: e_ps,
+                            });
+                        }
+                        if run.slowed[i] {
+                            overlapped += eg.task_mult(task) as usize;
+                        }
+                        done += 1;
+                    }
+                    let tail = run.members[m - 1];
+                    for &s in eg.succs(tail) {
                         preds[s] -= 1;
                         if preds[s] == 0 {
-                            enqueue(s, &mut comp_ready, &mut comm_ready);
+                            enqueue(
+                                s,
+                                &mut comp_ready,
+                                &mut comm_pending,
+                                &mut comp_kick,
+                                &mut comp_kick_mark,
+                            );
                         }
+                    }
+                    // The device went idle: give dispatch a reason to
+                    // look at it again.
+                    if !comp_kick_mark[d] {
+                        comp_kick_mark[d] = true;
+                        comp_kick.push(d);
                     }
                     if !dirty_dev_mark[d] {
                         dirty_dev_mark[d] = true;
@@ -447,6 +727,19 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                         if !dirty_flow_mark[fi] {
                             dirty_flow_mark[fi] = true;
                             dirty_flows.push(fi);
+                        }
+                        // Bandwidth-sharing detector: the new flow (and
+                        // every other job it now contends with) shares a
+                        // link the instant their paths overlap.
+                        for li in 0..flows[fi].links.len() {
+                            let l = flows[fi].links[li];
+                            for oi in 0..mm.flows_on(l).len() {
+                                let fj = mm.flows_on(l)[oi];
+                                if fj != fi && flows[fj].job != ji {
+                                    jobs[ji].shared = true;
+                                    jobs[flows[fj].job].shared = true;
+                                }
+                            }
                         }
                         let (src, dst) = (flows[fi].src, flows[fi].dst);
                         dev_flows[src].push(fi);
@@ -538,12 +831,22 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             }
             jobs[ji].finished = true;
             let task = jobs[ji].task;
+            if jobs[ji].shared {
+                shared_ops += eg.task_mult(task) as usize;
+            }
+            let cls_base = class_ix(jobs[ji].class) * n_dev;
             let busy = match jobs[ji].class {
                 CommClass::Feature => &mut feat_busy,
                 CommClass::Gradient => &mut grad_busy,
             };
             for gi in 0..jobs[ji].group.len() {
-                busy[jobs[ji].group[gi]] = false;
+                let d = jobs[ji].group[gi];
+                busy[d] = false;
+                // This gate just opened: re-attempt everything parked
+                // on it (the only way a blocked comm can unblock).
+                while let Some(w) = parked[cls_base + d].pop() {
+                    comm_pending.push(w);
+                }
             }
             mem_free(&mut mem, eg, task, end);
             if emu.config.record_timeline {
@@ -563,7 +866,13 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             for &s in eg.succs(task) {
                 preds[s] -= 1;
                 if preds[s] == 0 {
-                    enqueue(s, &mut comp_ready, &mut comm_ready);
+                    enqueue(
+                        s,
+                        &mut comp_ready,
+                        &mut comm_pending,
+                        &mut comp_kick,
+                        &mut comp_kick_mark,
+                    );
                 }
             }
         }
@@ -599,10 +908,11 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         peak_mem,
         peak_act,
         oom: mem.oom(),
-        overlapped_ops: 0,
-        shared_ops: 0,
+        overlapped_ops: overlapped,
+        shared_ops,
         n_tasks: n,
         timeline,
         comm_phases,
+        engine: Some(stats),
     })
 }

@@ -327,6 +327,12 @@ impl IncrementalMaxMin {
         &self.changed
     }
 
+    /// Active flow ids currently crossing link `l` (the engine's
+    /// bandwidth-sharing detector scans these at flow insertion).
+    pub fn flows_on(&self, l: LinkId) -> &[usize] {
+        &self.link_flows[l]
+    }
+
     /// Re-solve the component containing active flow `seed`.
     fn resolve_component(&mut self, seed: usize) {
         self.stamp += 1;

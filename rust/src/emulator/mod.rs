@@ -44,10 +44,12 @@ mod engine;
 mod reference;
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::cluster::{Cluster, DeviceId, LinkId};
 use crate::collective::{self, CollAlgo};
-use crate::compiler::{CollectiveKind, CommClass, CommTask, ExecGraph, TaskId};
+use crate::compiler::{CacheSnapshot, CollectiveKind, CommClass, CommTask, ExecGraph, TaskId};
 use crate::estimator::features::collective_profile;
 use crate::estimator::OpEstimator;
 use crate::executor::memory::MemoryTracker;
@@ -73,6 +75,15 @@ pub struct EmulatorConfig {
     /// HTAE config's choice when comparing predictions against the
     /// emulated "truth".
     pub coll_algo: CollAlgo,
+    /// Execute compiler-proven serial comp chains as fused super-tasks
+    /// (one completion event per chain, interior boundaries replayed
+    /// exactly — results are bit-identical either way; this is purely a
+    /// dispatch-work knob). Disable with `--no-coalesce` to verify.
+    pub coalesce: bool,
+    /// Debug knob (one PR): dispatch with the pre-worklist full-cluster
+    /// scan instead of the O(active) worklist + gating indexes. Results
+    /// are bit-identical; only `EngineStats` work counters differ.
+    pub legacy_scan: bool,
 }
 
 impl Default for EmulatorConfig {
@@ -83,6 +94,8 @@ impl Default for EmulatorConfig {
             interference: true,
             record_timeline: false,
             coll_algo: CollAlgo::Auto,
+            coalesce: true,
+            legacy_scan: false,
         }
     }
 }
@@ -92,6 +105,59 @@ pub struct Emulator<'a> {
     cluster: &'a Cluster,
     estimator: &'a OpEstimator<'a>,
     config: EmulatorConfig,
+    plans: Option<&'a PlanCache>,
+}
+
+/// Cross-run cache of ripple-free lowered collective plans
+/// (`PlanKey → phases`), the session-layer sibling of the compiler's
+/// `TemplateCache`: repeated serve/sweep/search truth evaluations stop
+/// re-lowering (and re-`Auto`-costing) identical collectives. Lowering
+/// is a pure function of the plan key, collective algorithm, and
+/// cluster, all of which are part of [`collective::plan_key`]'s input
+/// or held fixed by the owning [`crate::session::Session`], so sharing
+/// across runs cannot change results. Hit/miss totals surface through
+/// the same [`CacheSnapshot`] delta mechanism as the template cache.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    map: Mutex<HashMap<PlanKey, Arc<Vec<CommPhase>>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl PlanCache {
+    /// Fresh, empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Monotonic hit/miss totals (for `.since()` deltas).
+    pub fn snapshot(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Look up `key`, lowering (and caching) via `lower` on a miss.
+    fn get_or_lower(
+        &self,
+        key: PlanKey,
+        lower: impl FnOnce() -> Vec<CommPhase>,
+    ) -> Arc<Vec<CommPhase>> {
+        if let Some(p) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = Arc::new(lower());
+        Arc::clone(
+            self.map
+                .lock()
+                .unwrap()
+                .entry(key)
+                .or_insert(fresh),
+        )
+    }
 }
 
 /// Reference-engine flow state (bytes remaining; see [`reference`]).
@@ -131,6 +197,9 @@ struct CommJob {
     /// Current-phase bookkeeping for per-phase trace spans.
     phase_label: &'static str,
     phase_started: Ps,
+    /// Any of this job's flows shared a link with another job's active
+    /// flow (bandwidth-sharing detector, counted at finalize).
+    shared: bool,
 }
 
 /// Reference-engine computation job.
@@ -140,6 +209,9 @@ struct CompJob {
     device: DeviceId,
     remaining: f64, // seconds of unit-rate work
     started: Ps,
+    /// Ran below unit rate at any point (compute/DMA interference
+    /// detector, counted at completion).
+    slowed: bool,
 }
 
 impl<'a> Emulator<'a> {
@@ -158,7 +230,16 @@ impl<'a> Emulator<'a> {
             cluster,
             estimator,
             config,
+            plans: None,
         }
+    }
+
+    /// Attach a cross-run [`PlanCache`]: collective lowering consults
+    /// (and fills) it behind the per-run memo, so repeated runs against
+    /// the same session skip re-lowering entirely.
+    pub fn with_plan_cache(mut self, plans: &'a PlanCache) -> Self {
+        self.plans = Some(plans);
+        self
     }
 
     /// Deterministic per-task efficiency ripple factor.
@@ -174,18 +255,27 @@ impl<'a> Emulator<'a> {
     /// decomposition); otherwise the collective-algorithm plan.
     ///
     /// Lowering (including `Auto`'s candidate-cost comparison) is
-    /// deduped through `cache` — micro-batched graphs repeat the same
-    /// collective hundreds of times — while the per-task ripple is
-    /// applied to the cached α at every launch.
+    /// deduped through the per-run `cache` — micro-batched graphs repeat
+    /// the same collective hundreds of times — which itself fronts the
+    /// session-wide [`PlanCache`] when one is attached; the per-task
+    /// ripple is applied to the cached α at every launch.
     fn comm_launch(
         &self,
         c: &CommTask,
         id: TaskId,
-        cache: &mut HashMap<PlanKey, Vec<CommPhase>>,
+        cache: &mut HashMap<PlanKey, Arc<Vec<CommPhase>>>,
     ) -> Vec<CommPhase> {
-        let phases = cache
-            .entry(collective::plan_key(c))
-            .or_insert_with(|| self.lower_phases(c));
+        let key = collective::plan_key(c);
+        let phases = match cache.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let plan = match self.plans {
+                    Some(session) => session.get_or_lower(e.key().clone(), || self.lower_phases(c)),
+                    None => Arc::new(self.lower_phases(c)),
+                };
+                e.insert(plan)
+            }
+        };
         let rip = self.ripple(id);
         phases
             .iter()
@@ -379,6 +469,14 @@ mod tests {
             );
             assert_eq!(ev.oom, rf.oom);
             assert_eq!(ev.n_tasks, rf.n_tasks);
+            assert_eq!(
+                ev.overlapped_ops, rf.overlapped_ops,
+                "dp={dp} {preset:?}x{nodes}: overlapped_ops"
+            );
+            assert_eq!(
+                ev.shared_ops, rf.shared_ops,
+                "dp={dp} {preset:?}x{nodes}: shared_ops"
+            );
             for (d, (&a, &b)) in ev.peak_mem.iter().zip(&rf.peak_mem).enumerate() {
                 let diff = a.abs_diff(b) as f64;
                 assert!(
@@ -408,6 +506,14 @@ mod tests {
                 ripple: 0.0,
                 ..EmulatorConfig::default()
             },
+            EmulatorConfig {
+                coalesce: false,
+                ..EmulatorConfig::default()
+            },
+            EmulatorConfig {
+                legacy_scan: true,
+                ..EmulatorConfig::default()
+            },
         ] {
             let emu = Emulator::with_config(&c, &est, config);
             let base = est.estimate_all(&eg).unwrap();
@@ -415,6 +521,64 @@ mod tests {
             let rf = emu.simulate_with_costs_reference(&eg, &base).unwrap();
             let rel = (ev.step_ms - rf.step_ms).abs() / rf.step_ms;
             assert!(rel < 1e-6, "config {config:?}: rel {rel:.2e}");
+            assert_eq!(
+                ev.overlapped_ops, rf.overlapped_ops,
+                "config {config:?}: overlapped_ops"
+            );
+            assert_eq!(
+                ev.shared_ops, rf.shared_ops,
+                "config {config:?}: shared_ops"
+            );
+        }
+    }
+
+    /// Tentpole invariant, engine vs engine: coalescing and the
+    /// worklist scheduler are pure dispatch-work optimisations — every
+    /// observable result is **bitwise** identical across all four knob
+    /// combinations; only the `EngineStats` work counters may differ.
+    #[test]
+    fn scheduler_knobs_are_bitwise_invisible() {
+        let (_g, c, eg) = setup(8, Preset::HC1, 1);
+        let est = OpEstimator::analytical(&c);
+        let base = est.estimate_all(&eg).unwrap();
+        let run = |coalesce: bool, legacy_scan: bool| {
+            Emulator::with_config(
+                &c,
+                &est,
+                EmulatorConfig {
+                    record_timeline: true,
+                    coalesce,
+                    legacy_scan,
+                    ..EmulatorConfig::default()
+                },
+            )
+            .simulate_with_costs(&eg, &base)
+            .unwrap()
+        };
+        let gold = run(true, false);
+        let stats = gold.engine.expect("event engine reports stats");
+        assert_eq!(stats.device_scan_iters, 0, "worklist never scans");
+        assert!(stats.chains_fused > 0, "serial comp chains must fuse");
+        for (cl, lg) in [(false, false), (true, true), (false, true)] {
+            let r = run(cl, lg);
+            assert_eq!(gold.step_ms.to_bits(), r.step_ms.to_bits(), "{cl}/{lg}");
+            assert_eq!(gold.peak_mem, r.peak_mem, "{cl}/{lg}");
+            assert_eq!(gold.peak_act, r.peak_act, "{cl}/{lg}");
+            assert_eq!(gold.oom, r.oom, "{cl}/{lg}");
+            assert_eq!(gold.overlapped_ops, r.overlapped_ops, "{cl}/{lg}");
+            assert_eq!(gold.shared_ops, r.shared_ops, "{cl}/{lg}");
+            let mut a = gold.timeline.clone();
+            let mut b = r.timeline.clone();
+            let key = |s: &crate::executor::Span| (s.task, s.start, s.end);
+            a.sort_by_key(key);
+            b.sort_by_key(key);
+            assert_eq!(a, b, "{cl}/{lg}: timeline spans");
+            if lg {
+                assert!(
+                    r.engine.unwrap().device_scan_iters > 0,
+                    "legacy scan must report its work"
+                );
+            }
         }
     }
 

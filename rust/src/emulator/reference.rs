@@ -12,6 +12,7 @@
 //! `benches/perf_hotpath.rs` compare the two on identical inputs.
 
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
 
 use crate::compiler::{ExecGraph, TaskId, TaskRef};
 use crate::emulator::fairshare;
@@ -50,9 +51,11 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
     let mut mem = MemoryTracker::new(&eg.static_mem, emu.cluster.device.memory_bytes);
     let mut timeline = Vec::new();
     let mut comm_phases: Vec<PhaseSpan> = Vec::new();
-    let mut plan_cache: HashMap<PlanKey, Vec<CommPhase>> = HashMap::new();
+    let mut plan_cache: HashMap<PlanKey, Arc<Vec<CommPhase>>> = HashMap::new();
     let mut t = 0.0f64; // seconds
     let mut done = 0usize;
+    let mut overlapped = 0usize;
+    let mut shared_ops = 0usize;
     let mut makespan: Ps = 0;
     // Fluid-model state reused across events.
     let mut active_flows: Vec<usize> = Vec::new();
@@ -94,6 +97,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                         device: d,
                         remaining: work.max(1e-12),
                         started: secs_to_ps(t),
+                        slowed: false,
                     });
                     mem_alloc(&mut mem, eg, id, secs_to_ps(t));
                     started_any = true;
@@ -149,6 +153,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                     started: secs_to_ps(t),
                     class: c.class,
                     group: c.group.clone(),
+                    shared: false,
                     phases,
                     phase_label: cur.label,
                     phase_started: secs_to_ps(t),
@@ -248,6 +253,12 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                 } else {
                     1.0
                 };
+                if rate < 1.0 {
+                    // Interference flag: held a degraded rate at any
+                    // instant of its lifetime (zero-length intervals
+                    // included, matching the event engine).
+                    j.slowed = true;
+                }
                 j.remaining -= dt * rate;
                 j.remaining <= eps
             } else {
@@ -256,6 +267,9 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             if finished {
                 let j = comp_jobs[d].take().unwrap();
                 comp_busy[d] = false;
+                if j.slowed {
+                    overlapped += eg.task_mult(j.task) as usize;
+                }
                 let end = secs_to_ps(t);
                 makespan = makespan.max(end);
                 mem_free(&mut mem, eg, j.task, end);
@@ -277,6 +291,7 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         }
         // Alpha phases (α-expired jobs with no flows complete here).
         let mut completed_jobs: Vec<usize> = Vec::new();
+        let mut newly_active: Vec<usize> = Vec::new();
         {
             let mut i = 0;
             while i < alpha_active.len() {
@@ -287,10 +302,38 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
                     job.alpha_remaining = 0.0;
                     if job.flows_left == 0 {
                         completed_jobs.push(ji);
+                    } else {
+                        newly_active.push(ji);
                     }
                     alpha_active.swap_remove(i);
                 } else {
                     i += 1;
+                }
+            }
+        }
+        // Bandwidth-sharing detector: a job is "shared" once any of its
+        // flows' paths overlap another running job's active flow.
+        // Checked when the job's α expires (its flows enter the fluid
+        // model), *before* this interval's flow completions are applied
+        // — a flow finishing at this very instant still counts, exactly
+        // like the event engine's insertion-time link scan.
+        for &ji in &newly_active {
+            for &fi in &active_flows {
+                if flows[fi].job != ji || flows[fi].remaining <= 0.0 {
+                    continue;
+                }
+                for &fj in &active_flows {
+                    let oj = flows[fj].job;
+                    if oj == ji
+                        || flows[fj].remaining <= 0.0
+                        || comm_jobs[oj].alpha_remaining > 0.0
+                    {
+                        continue;
+                    }
+                    if flows[fi].links.iter().any(|l| flows[fj].links.contains(l)) {
+                        comm_jobs[ji].shared = true;
+                        comm_jobs[oj].shared = true;
+                    }
                 }
             }
         }
@@ -350,6 +393,9 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
             let end = secs_to_ps(t);
             makespan = makespan.max(end);
             let task = comm_jobs[ji].task;
+            if comm_jobs[ji].shared {
+                shared_ops += eg.task_mult(task) as usize;
+            }
             let class = comm_jobs[ji].class;
             let group = std::mem::take(&mut comm_jobs[ji].group);
             let busy = match class {
@@ -399,10 +445,11 @@ pub(super) fn simulate(emu: &Emulator<'_>, eg: &ExecGraph, base: &[Ps]) -> Resul
         peak_mem: mem.peaks().to_vec(),
         peak_act: mem.dynamic_peaks(),
         oom: mem.oom(),
-        overlapped_ops: 0,
-        shared_ops: 0,
+        overlapped_ops: overlapped,
+        shared_ops,
         n_tasks: n,
         timeline,
         comm_phases,
+        engine: None,
     })
 }

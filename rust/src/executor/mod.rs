@@ -95,7 +95,7 @@ impl HtaeConfig {
 }
 
 /// One executed task span (for traces).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Span {
     /// Task id in the execution graph.
     pub task: TaskId,
@@ -108,7 +108,7 @@ pub struct Span {
 /// One executed *phase* of a planned collective (for traces): the
 /// sub-span of a communication task spent in one plan phase
 /// (`intra-rs`, `inter-ar`, `reduce-tree`, ...).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PhaseSpan {
     /// Owning communication task.
     pub task: TaskId,
@@ -118,6 +118,29 @@ pub struct PhaseSpan {
     pub start: Ps,
     /// Phase end, ps.
     pub end: Ps,
+}
+
+/// Dispatch-loop work counters from the discrete-event engine
+/// (`emulator/engine.rs`). All counters are deterministic for a fixed
+/// graph + config, so they are safe to pin in CI; they measure *work
+/// done by the scheduler*, not simulated time, and legitimately change
+/// when scheduling knobs (`coalesce`, `legacy_scan`) change even though
+/// the simulated results stay bit-identical.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Heap events popped (including stale ones).
+    pub events_popped: u64,
+    /// Popped events discarded by epoch/liveness invalidation.
+    pub stale_discards: u64,
+    /// Device iterations spent in full-cluster dispatch scans. The
+    /// default worklist scheduler never full-scans, so this is 0 unless
+    /// `legacy_scan` is set.
+    pub device_scan_iters: u64,
+    /// Flow settle/re-rate operations actually performed (rate-unchanged
+    /// refreshes are skipped and not counted).
+    pub flows_rerated: u64,
+    /// Serial comp chains executed as fused super-tasks.
+    pub chains_fused: u64,
 }
 
 /// Simulation result.
@@ -147,6 +170,9 @@ pub struct SimReport {
     /// Per-phase sub-spans of planned collectives (present when
     /// `record_timeline` and the collective layer is active).
     pub comm_phases: Vec<PhaseSpan>,
+    /// Dispatch-loop counters (event-engine runs only; `None` from the
+    /// HTAE and the reference loop).
+    pub engine: Option<EngineStats>,
 }
 
 /// The HTAE simulator.
@@ -440,6 +466,7 @@ impl<'a> Htae<'a> {
             n_tasks: n,
             timeline,
             comm_phases,
+            engine: None,
         })
     }
 

@@ -809,6 +809,7 @@ mod tests {
                 n_tasks: 1,
                 timeline: Vec::new(),
                 comm_phases: Vec::new(),
+                engine: None,
             }),
             oom,
             compile_s: 0.0,
@@ -850,6 +851,7 @@ mod tests {
                 n_tasks: 1,
                 timeline: Vec::new(),
                 comm_phases: Vec::new(),
+                engine: None,
             }),
             oom: false,
             compile_s: 0.0,

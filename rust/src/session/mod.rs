@@ -57,7 +57,7 @@ use std::time::Instant;
 use crate::baselines::FlexFlowSim;
 use crate::cluster::{Cluster, Preset};
 use crate::compiler::TemplateCache;
-use crate::emulator::{Emulator, EmulatorConfig};
+use crate::emulator::{Emulator, EmulatorConfig, PlanCache};
 use crate::estimator::OpEstimator;
 use crate::executor::{calibrate, Htae, HtaeConfig};
 use crate::graph::Graph;
@@ -93,6 +93,12 @@ pub struct Session {
     clusters: Mutex<HashMap<ClusterKey, Arc<Cluster>>>,
     /// The shared cross-request template cache (compiler pass 1).
     templates: TemplateCache,
+    /// The shared cross-request collective-plan cache (emulator truth
+    /// runs): ripple-free lowered plans keyed by
+    /// [`crate::collective::PlanKey`]. Lowering is pure, so sharing is
+    /// bit-invisible; traffic is folded into each response's cache
+    /// delta alongside the template cache's.
+    plans: PlanCache,
 }
 
 impl Default for Session {
@@ -108,6 +114,7 @@ impl Session {
             graphs: Mutex::new(HashMap::new()),
             clusters: Mutex::new(HashMap::new()),
             templates: TemplateCache::new(),
+            plans: PlanCache::new(),
         }
     }
 
@@ -115,6 +122,12 @@ impl Session {
     /// requests report their own hit/miss deltas).
     pub fn template_cache(&self) -> &TemplateCache {
         &self.templates
+    }
+
+    /// The session's shared collective-plan cache (for tests and
+    /// diagnostics; requests report their own hit/miss deltas).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plans
     }
 
     /// Memoized model graph for `(model, batch)`. Concurrent first
@@ -171,6 +184,7 @@ impl Session {
     /// runtime and differential suites).
     pub fn simulate(&self, req: &SimulateRequest) -> Result<SimulateResponse> {
         let before = self.templates.snapshot();
+        let plans_before = self.plans.snapshot();
         let cluster = self.cluster(req.preset, req.nodes, req.nics, req.oversub)?;
         let graph = self.graph(req.model, req.batch);
         let tree = build_strategy(&graph, req.spec)?;
@@ -204,9 +218,15 @@ impl Session {
         let truth = if req.truth {
             let emu_config = EmulatorConfig {
                 coll_algo: req.coll_algo,
+                coalesce: !req.no_coalesce,
+                legacy_scan: req.legacy_scan,
                 ..EmulatorConfig::default()
             };
-            Some(Emulator::with_config(&cluster, &est, emu_config).simulate(&eg)?)
+            Some(
+                Emulator::with_config(&cluster, &est, emu_config)
+                    .with_plan_cache(&self.plans)
+                    .simulate(&eg)?,
+            )
         } else {
             None
         };
@@ -239,7 +259,11 @@ impl Session {
             truth,
             flexflow,
             trace,
-            cache: self.templates.snapshot().since(before),
+            cache: self
+                .templates
+                .snapshot()
+                .since(before)
+                .plus(self.plans.snapshot().since(plans_before)),
         })
     }
 
@@ -248,6 +272,7 @@ impl Session {
     /// cache (stable graph keys make cross-request sharing sound).
     pub fn sweep(&self, req: &SweepRequest) -> Result<SweepResponse> {
         let before = self.templates.snapshot();
+        let plans_before = self.plans.snapshot();
         // Validates the fabric overrides up front; the runner re-applies
         // them to each scenario's cluster.
         let cluster = self.cluster(req.preset, req.nodes, req.nics, req.oversub)?;
@@ -299,7 +324,9 @@ impl Session {
                     coll_algo: req.coll_algo,
                     ..EmulatorConfig::default()
                 };
-                let t = Emulator::with_config(&cluster, &est, emu_config).simulate(&eg)?;
+                let t = Emulator::with_config(&cluster, &est, emu_config)
+                    .with_plan_cache(&self.plans)
+                    .simulate(&eg)?;
                 let pred = o.report.as_ref().unwrap();
                 rows.push(TruthRow {
                     strategy: o.scenario.spec.label(),
@@ -327,7 +354,11 @@ impl Session {
             wall,
             threads,
             truth,
-            cache: self.templates.snapshot().since(before),
+            cache: self
+                .templates
+                .snapshot()
+                .since(before)
+                .plus(self.plans.snapshot().since(plans_before)),
         })
     }
 
@@ -444,6 +475,7 @@ impl Session {
         artifacts: &str,
     ) -> Result<CompareResponse> {
         let before = self.templates.snapshot();
+        let plans_before = self.plans.snapshot();
         let cluster = self.cluster(preset, nodes, None, None)?;
         let graph = self.graph(model, batch);
         let est = OpEstimator::best_available(&cluster, artifacts);
@@ -462,7 +494,9 @@ impl Session {
             )?;
             let r = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
             let truth_cols = if truth {
-                let t = Emulator::new(&cluster, &est).simulate(&eg)?;
+                let t = Emulator::new(&cluster, &est)
+                    .with_plan_cache(&self.plans)
+                    .simulate(&eg)?;
                 Some((t.step_ms, crate::util::rel_err_pct(r.step_ms, t.step_ms)))
             } else {
                 None
@@ -481,7 +515,11 @@ impl Session {
             cluster: cluster.name.clone(),
             gpus: cluster.num_devices(),
             rows,
-            cache: self.templates.snapshot().since(before),
+            cache: self
+                .templates
+                .snapshot()
+                .since(before)
+                .plus(self.plans.snapshot().since(plans_before)),
         })
     }
 
@@ -623,6 +661,36 @@ mod tests {
         // strict superset.
         assert!(r1.to_json(true, true).get("compile_s").is_some());
         assert!(r1.to_json(false, true).get("compile_s").is_none());
+    }
+
+    #[test]
+    fn repeat_truth_simulate_hits_the_plan_cache() {
+        let s = Session::new();
+        let req = SimulateRequest {
+            model: ModelKind::Vgg19,
+            batch: 16,
+            spec: {
+                let mut spec = StrategySpec::data_parallel(2);
+                spec.schedule = crate::strategy::PipelineSchedule::OneFOneB;
+                spec
+            },
+            truth: true,
+            ..SimulateRequest::default()
+        };
+        let r1 = s.simulate(&req).unwrap();
+        let after1 = s.plan_cache().snapshot();
+        assert!(after1.misses >= 1, "truth run must lower plans: {after1:?}");
+        assert_eq!(after1.hits, 0, "cold plan cache cannot hit");
+        let r2 = s.simulate(&req).unwrap();
+        let after2 = s.plan_cache().snapshot();
+        assert!(after2.hits >= 1, "warm truth run must hit: {after2:?}");
+        assert_eq!(after2.misses, after1.misses, "no re-lowering when warm");
+        // Plan-cache sharing is bit-invisible to the emulated truth.
+        let (t1, t2) = (r1.truth.unwrap(), r2.truth.unwrap());
+        assert_eq!(t1.step_ms.to_bits(), t2.step_ms.to_bits());
+        // The response delta folds plan traffic in: the warm run's
+        // delta includes the plan hits on top of template hits.
+        assert!(r2.cache.hits >= after2.hits - after1.hits);
     }
 
     #[test]

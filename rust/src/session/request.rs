@@ -150,6 +150,12 @@ pub struct SimulateRequest {
     pub plain: bool,
     /// Also run the flow-level emulator as ground truth.
     pub truth: bool,
+    /// Disable serial-chain coalescing in the emulator truth run
+    /// (results are bit-identical either way; CI diffs the two).
+    pub no_coalesce: bool,
+    /// Truth run dispatches with the pre-worklist full-cluster scan
+    /// (debug knob, one PR; results are bit-identical).
+    pub legacy_scan: bool,
     /// Also run the FlexFlow-style baseline simulator.
     pub flexflow: bool,
     /// Compile with symmetry folding.
@@ -176,6 +182,8 @@ impl Default for SimulateRequest {
             spec: StrategySpec::hybrid(1, 1, 1, 1),
             plain: false,
             truth: false,
+            no_coalesce: false,
+            legacy_scan: false,
             flexflow: false,
             fold: false,
             coll_algo: CollAlgo::Auto,
@@ -203,6 +211,8 @@ impl SimulateRequest {
             spec: spec_from_json(doc)?,
             plain: bool_field(doc, "plain")?,
             truth: bool_field(doc, "truth")?,
+            no_coalesce: bool_field(doc, "no_coalesce")?,
+            legacy_scan: bool_field(doc, "legacy_scan")?,
             flexflow: bool_field(doc, "flexflow")?,
             fold: bool_field(doc, "fold")?,
             coll_algo: coll_field(doc)?,

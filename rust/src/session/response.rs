@@ -122,6 +122,11 @@ pub fn compile_stats_json(s: &CompileStats, timings: bool) -> Json {
         ("n_chunks", Json::Num(s.n_chunks as f64)),
         ("tasks", Json::Num(s.n_tasks as f64)),
         ("deps", Json::Num(s.n_deps as f64)),
+        ("coalesce_chains", Json::Num(s.coalesce_chains as f64)),
+        (
+            "coalesce_fused_tasks",
+            Json::Num(s.coalesce_fused_tasks as f64),
+        ),
         ("logical_tasks", Json::Num(s.logical_tasks as f64)),
         ("fold_classes", Json::Num(s.fold_classes as f64)),
         (
@@ -282,17 +287,34 @@ impl SimulateResponse {
             fields.push(("compile_stats", compile_stats_json(&self.stats, timings)));
         }
         if let Some(t) = &self.truth {
-            fields.push((
-                "truth",
-                Json::obj(vec![
-                    ("step_ms", Json::Num(t.step_ms)),
-                    ("throughput_samples_per_s", Json::Num(t.throughput)),
-                    (
-                        "err_pct",
-                        Json::Num(rel_err_pct(self.report.step_ms, t.step_ms)),
-                    ),
-                ]),
-            ));
+            let mut tf = vec![
+                ("step_ms", Json::Num(t.step_ms)),
+                ("throughput_samples_per_s", Json::Num(t.throughput)),
+                (
+                    "err_pct",
+                    Json::Num(rel_err_pct(self.report.step_ms, t.step_ms)),
+                ),
+            ];
+            // Engine work counters ride with the compile-stats opt-in:
+            // they are deterministic but legitimately change with the
+            // scheduling knobs (`no_coalesce`, `legacy_scan`), and the
+            // CI coalescing byte-diff gate compares default documents —
+            // which therefore must not carry them.
+            if compile_stats {
+                if let Some(e) = t.engine {
+                    tf.push((
+                        "engine",
+                        Json::obj(vec![
+                            ("events_popped", Json::Num(e.events_popped as f64)),
+                            ("stale_discards", Json::Num(e.stale_discards as f64)),
+                            ("device_scan_iters", Json::Num(e.device_scan_iters as f64)),
+                            ("flows_rerated", Json::Num(e.flows_rerated as f64)),
+                            ("chains_fused", Json::Num(e.chains_fused as f64)),
+                        ]),
+                    ));
+                }
+            }
+            fields.push(("truth", Json::obj(tf)));
         }
         if let Some(ff) = &self.flexflow {
             fields.push((

@@ -1,0 +1,230 @@
+//! Differential harness pinning the event-engine scheduling knobs as
+//! pure *dispatch-work* knobs.
+//!
+//! The O(active) rewrite of `emulator/engine.rs` added two observable
+//! switches: `--no-coalesce` (execute compiler-proven serial comp
+//! chains unfused) and `--legacy-scan` (dispatch with the pre-worklist
+//! full-cluster scan). Both change how much work the *scheduler* does —
+//! [`EngineStats`] counters — and nothing else: the simulated results
+//! must be bit-identical. This harness pins that the hard way, at two
+//! layers:
+//!
+//! * **Emulator layer** — GPT-2 / DLRM / VGG-19 under all three
+//!   pipeline schedules, timeline recording on: every knob combination
+//!   must reproduce the default run's makespan and throughput
+//!   (`f64::to_bits` equality), per-device peak-memory and
+//!   peak-activation vectors, OOM verdict, behavior counters
+//!   (overlapped / bandwidth-shared ops), and the exact task-span and
+//!   plan-phase-span multisets.
+//! * **Session layer** — the same model × schedule matrix through
+//!   [`Session::simulate`] with `truth` on, fold OFF and ON: the
+//!   rendered `--json --no-timings` documents must be byte-identical
+//!   across the knobs (the same equality the CI coalescing gate checks
+//!   on a seeded binary run).
+//!
+//! Each layer also pins the counters that prove the knobs *engaged*:
+//! the default worklist scheduler never full-scans
+//! (`device_scan_iters == 0`), `legacy_scan` runs do
+//! (`device_scan_iters > 0`), and coalescing fuses at least one chain
+//! somewhere in the matrix — otherwise every equality above would be
+//! trivially true and the harness vacuous.
+
+use proteus::cluster::{Cluster, Preset};
+use proteus::compiler::compile;
+use proteus::emulator::{Emulator, EmulatorConfig};
+use proteus::estimator::OpEstimator;
+use proteus::executor::SimReport;
+use proteus::models::ModelKind;
+use proteus::session::{Session, SimulateRequest};
+use proteus::strategy::{build_strategy, PipelineSchedule, StrategySpec};
+
+/// `(coalesce, legacy_scan)` for the three non-default combinations.
+const KNOBS: [(bool, bool); 3] = [(false, false), (true, true), (false, true)];
+
+const SCHEDULES: [PipelineSchedule; 3] = [
+    PipelineSchedule::GpipeFillDrain,
+    PipelineSchedule::OneFOneB,
+    PipelineSchedule::Interleaved { v: 2 },
+];
+
+fn cases() -> Vec<(ModelKind, usize, StrategySpec)> {
+    let mut out = Vec::new();
+    for sched in SCHEDULES {
+        // dp=2 × pp=2 on one HC2 node: small enough for the test tier,
+        // rich enough for gradient collectives, stage p2ps, and
+        // interference between them.
+        out.push((
+            ModelKind::Gpt2,
+            16,
+            StrategySpec::hybrid(2, 1, 2, 4).with_schedule(sched),
+        ));
+        out.push((
+            ModelKind::Dlrm,
+            32,
+            StrategySpec::hybrid(2, 1, 2, 2).with_schedule(sched),
+        ));
+        out.push((
+            ModelKind::Vgg19,
+            16,
+            StrategySpec::hybrid(2, 1, 2, 4).with_schedule(sched),
+        ));
+    }
+    out
+}
+
+fn sorted_report(mut r: SimReport) -> SimReport {
+    // The engines may emit same-instant spans in different dispatch
+    // orders; the claim is multiset equality.
+    r.timeline.sort_by_key(|s| (s.task, s.start, s.end));
+    r.comm_phases.sort_by_key(|p| (p.task, p.start, p.end, p.label));
+    r
+}
+
+#[test]
+fn scheduling_knobs_are_bitwise_invisible_across_models_and_schedules() {
+    let cluster = Cluster::preset(Preset::HC2, 1);
+    let est = OpEstimator::analytical(&cluster);
+    let mut fused_total = 0u64;
+    for (model, batch, spec) in cases() {
+        let name = format!("{} {}", model.name(), spec.label());
+        let graph = model.build(batch);
+        let tree = match build_strategy(&graph, spec) {
+            Ok(t) => t,
+            Err(e) => {
+                // Only DLRM may lack the depth for a pipelined split;
+                // the headline models must exercise every schedule.
+                assert!(model == ModelKind::Dlrm, "{name}: strategy failed: {e}");
+                continue;
+            }
+        };
+        let eg = compile(&graph, &tree, &cluster).expect("compiles");
+        let run = |coalesce: bool, legacy_scan: bool| {
+            let cfg = EmulatorConfig {
+                record_timeline: true,
+                coalesce,
+                legacy_scan,
+                ..EmulatorConfig::default()
+            };
+            sorted_report(
+                Emulator::with_config(&cluster, &est, cfg)
+                    .simulate(&eg)
+                    .expect("emulates"),
+            )
+        };
+        let gold = run(true, false);
+        let gold_stats = gold.engine.expect("event engine reports stats");
+        assert_eq!(
+            gold_stats.device_scan_iters, 0,
+            "{name}: worklist scheduler full-scanned"
+        );
+        fused_total += gold_stats.chains_fused;
+        for (coalesce, legacy_scan) in KNOBS {
+            let knob = format!("{name} [coalesce={coalesce} legacy={legacy_scan}]");
+            let r = run(coalesce, legacy_scan);
+            assert_eq!(
+                r.step_ms.to_bits(),
+                gold.step_ms.to_bits(),
+                "{knob}: makespan bits diverge ({} vs {})",
+                r.step_ms,
+                gold.step_ms,
+            );
+            assert_eq!(
+                r.throughput.to_bits(),
+                gold.throughput.to_bits(),
+                "{knob}: throughput bits diverge"
+            );
+            assert_eq!(r.peak_mem, gold.peak_mem, "{knob}: peak memory diverges");
+            assert_eq!(r.peak_act, gold.peak_act, "{knob}: peak activations diverge");
+            assert_eq!(r.oom, gold.oom, "{knob}: OOM verdict diverges");
+            assert_eq!(
+                r.overlapped_ops, gold.overlapped_ops,
+                "{knob}: overlapped-op count diverges"
+            );
+            assert_eq!(
+                r.shared_ops, gold.shared_ops,
+                "{knob}: bandwidth-shared-op count diverges"
+            );
+            assert_eq!(r.n_tasks, gold.n_tasks, "{knob}: task count diverges");
+            assert_eq!(r.timeline, gold.timeline, "{knob}: task spans diverge");
+            assert_eq!(
+                r.comm_phases, gold.comm_phases,
+                "{knob}: plan-phase spans diverge"
+            );
+            let stats = r.engine.expect("event engine reports stats");
+            if legacy_scan {
+                assert!(
+                    stats.device_scan_iters > 0,
+                    "{knob}: legacy scan reported no scan iterations"
+                );
+            } else {
+                assert_eq!(
+                    stats.device_scan_iters, 0,
+                    "{knob}: worklist scheduler full-scanned"
+                );
+            }
+            if !coalesce {
+                assert_eq!(
+                    stats.chains_fused, 0,
+                    "{knob}: fusion engaged with coalescing disabled"
+                );
+            }
+        }
+    }
+    assert!(
+        fused_total > 0,
+        "coalescing fused no chains anywhere in the matrix — the \
+         no-coalesce comparisons are vacuous"
+    );
+}
+
+#[test]
+fn truth_json_documents_are_byte_identical_across_knobs_and_fold() {
+    let session = Session::new();
+    for (model, batch, spec) in cases() {
+        let name = format!("{} {}", model.name(), spec.label());
+        for fold in [false, true] {
+            let base = SimulateRequest {
+                model,
+                batch,
+                preset: Preset::HC2,
+                nodes: 1,
+                spec,
+                truth: true,
+                fold,
+                ..SimulateRequest::default()
+            };
+            let doc = |no_coalesce: bool, legacy_scan: bool| -> Option<String> {
+                let req = SimulateRequest {
+                    no_coalesce,
+                    legacy_scan,
+                    ..base.clone()
+                };
+                match session.simulate(&req) {
+                    Ok(r) => Some(r.to_json(false, false).to_string_pretty()),
+                    Err(e) => {
+                        assert!(model == ModelKind::Dlrm, "{name}: simulate failed: {e}");
+                        None
+                    }
+                }
+            };
+            let Some(gold) = doc(false, false) else {
+                continue;
+            };
+            assert!(
+                gold.contains("\"truth\""),
+                "{name} fold={fold}: document carries no truth block"
+            );
+            for (knob_label, no_coalesce, legacy_scan) in [
+                ("--no-coalesce", true, false),
+                ("--legacy-scan", false, true),
+                ("both", true, true),
+            ] {
+                assert_eq!(
+                    doc(no_coalesce, legacy_scan).unwrap(),
+                    gold,
+                    "{name} fold={fold}: {knob_label} changed the --json --no-timings document"
+                );
+            }
+        }
+    }
+}
