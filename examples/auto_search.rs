@@ -42,7 +42,7 @@ fn main() -> proteus::Result<()> {
     let scenarios: Vec<Scenario> = specs
         .into_iter()
         .map(|spec| Scenario {
-            model,
+            model: ModelSpec::preset(model),
             batch,
             preset,
             nodes,

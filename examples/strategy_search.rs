@@ -34,7 +34,7 @@ fn main() -> proteus::Result<()> {
     let scenarios: Vec<Scenario> = candidate_grid(n, batch)
         .into_iter()
         .map(|spec| Scenario {
-            model,
+            model: ModelSpec::preset(model),
             batch,
             preset,
             nodes,

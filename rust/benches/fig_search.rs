@@ -61,7 +61,7 @@ fn main() {
         let scenarios: Vec<Scenario> = specs
             .into_iter()
             .map(|spec| Scenario {
-                model: case.model,
+                model: proteus::models::ModelSpec::preset(case.model),
                 batch: case.batch,
                 preset: case.preset,
                 nodes: case.nodes,

@@ -217,7 +217,7 @@ fn main() {
     let scenarios: Vec<Scenario> = candidate_grid(sweep_cluster.num_devices(), 64)
         .into_iter()
         .map(|spec| Scenario {
-            model: ModelKind::Gpt2,
+            model: proteus::models::ModelSpec::preset(ModelKind::Gpt2),
             batch: 64,
             preset: Preset::HC2,
             nodes: 2,

@@ -31,8 +31,17 @@ COMMANDS:
   bench-cost  Benchmark the PJRT vs analytical cost backends
   help        This message (also: --help on any command)
 
-WORKLOAD OPTIONS (simulate, sweep, search):
-  --model <resnet50|inception_v3|vgg19|gpt2|gpt-1.5b|dlrm>
+WORKLOAD OPTIONS (simulate, sweep, search, info):
+  --model NAME      preset model; accepted names (with aliases):
+                    resnet50|resnet, inception_v3|inception, vgg19|vgg,
+                    gpt2|gpt-2, gpt1.5b|gpt-1.5b|gpt15b, dlrm,
+                    moe-gpt|moe_gpt, moe-llama-7b|moe_llama_7b
+  --model-file PATH load a custom layer graph from a JSON file instead
+                    of a preset (format: examples/models/mlp.json;
+                    mutually exclusive with --model and size knobs)
+  --layers N        override block count (GPT and MoE presets only)
+  --hidden N        override hidden size (GPT and MoE presets only)
+  --experts N       override expert count (MoE presets only)
   --batch N         global batch size
   --preset <HC1|HC2|HC3|HC4>  hardware preset (HC4: rail-optimized
                     multi-NIC fat tree, up to 512 nodes)
@@ -43,6 +52,13 @@ WORKLOAD OPTIONS (simulate, sweep, search):
 
 STRATEGY OPTIONS (simulate):
   --dp N --mp N --pp N --micro N   parallel degrees + micro-batches
+  --ep N            expert-parallel degree (MoE models; the device
+                    budget is dp*mp*pp*ep, so EP trades against the
+                    dense degrees rather than adding devices)
+  --moe-imbalance F token-imbalance factor delta >= 0 (simulate): the
+                    hottest expert receives (1+delta)x its balanced
+                    token share; inflates hot-expert compute and the
+                    all-to-all payload (default 0 = balanced router)
   --schedule <gpipe|1f1b|interleaved[:v]>
                     pipeline execution order (default 1f1b)
   --vstages N       virtual stages per device for interleaved (default 2)

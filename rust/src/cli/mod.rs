@@ -3,15 +3,18 @@
 //!
 //! ```text
 //! proteus simulate  --model gpt2 --batch 64 --preset HC2 --nodes 2
-//!                   --dp 4 --mp 2 --pp 2 --micro 4
+//!                   --dp 4 --mp 2 --pp 2 --micro 4 [--ep 4]
+//!                   [--model-file graph.json]
+//!                   [--layers N] [--hidden N] [--experts N]
 //!                   [--nics N] [--oversub R] [--fold]
 //!                   [--schedule gpipe|1f1b|interleaved[:v]] [--vstages N]
 //!                   [--zero] [--recompute] [--emb-shard] [--plain]
+//!                   [--moe-imbalance 0.2]
 //!                   [--truth] [--json] [--no-timings] [--compact]
 //!                   [--trace out.json]
 //!                   [--artifacts artifacts/costmodel.hlo.txt]
 //! proteus compare   --config configs/gpt2_hc2.json [--truth]
-//! proteus sweep     --model gpt2 --batch 64 --preset HC2 --nodes 2
+//! proteus sweep     --model moe-gpt --batch 64 --preset HC2 --nodes 2
 //!                   [--schedules all|gpipe|1f1b|interleaved[:v]]
 //!                   [--nics N] [--oversub R] [--fold]
 //!                   [--threads N] [--top 10] [--plain] [--truth] [--json]
@@ -39,7 +42,7 @@ pub mod args;
 
 use crate::cluster::Preset;
 use crate::collective::CollAlgo;
-use crate::models::ModelKind;
+use crate::models::{ModelKind, ModelSpec};
 use crate::session::{
     parse_schedules, spec_from_json, SearchInit, SearchRequest, Session, SimulateRequest,
     SweepRequest,
@@ -81,13 +84,56 @@ pub fn run(args: &Args) -> Result<()> {
     }
 }
 
+/// Parse the workload model: `--model NAME` (optionally resized with
+/// `--layers/--hidden/--experts`, GPT / MoE families only) or
+/// `--model-file PATH` (an external JSON layer graph, see
+/// `models::import`). The two selectors are mutually exclusive, and the
+/// resize knobs only apply to presets.
+fn parse_model(args: &Args, default: &str) -> Result<ModelSpec> {
+    let opt = |key: &str| -> Result<Option<usize>> {
+        match args.get(key) {
+            None => Ok(None),
+            Some(_) => args.get_usize(key, 0).map(Some),
+        }
+    };
+    let (layers, hidden, experts) = (opt("layers")?, opt("hidden")?, opt("experts")?);
+    if let Some(path) = args.get("model-file") {
+        if args.get("model").is_some() {
+            return Err(Error::Config(
+                "--model and --model-file are mutually exclusive".into(),
+            ));
+        }
+        if layers.is_some() || hidden.is_some() || experts.is_some() {
+            return Err(Error::Config(
+                "--layers/--hidden/--experts resize presets, not --model-file graphs".into(),
+            ));
+        }
+        return ModelSpec::from_file(&path.to_string());
+    }
+    let name = args.get_or("model", default);
+    let kind = ModelKind::parse(&name)
+        .ok_or_else(|| Error::Config(format!("unknown model '{name}'")))?;
+    if layers.is_none() && hidden.is_none() && experts.is_none() {
+        return Ok(ModelSpec::preset(kind));
+    }
+    // Knob validation (family restriction, head divisibility) happens in
+    // ModelSpec::build; probe at batch 1 so bad knobs fail at the flag
+    // boundary rather than deep inside a sweep.
+    let spec = ModelSpec::Preset {
+        kind,
+        layers,
+        hidden,
+        experts,
+    };
+    spec.build(1)?;
+    Ok(spec)
+}
+
 /// Parse the `(model, batch, preset, nodes, spec)` workload shared by
 /// commands. Cluster construction happens inside the session (memoized
 /// per `(preset, nodes, fabric)`), so this stays pure flag-parsing.
-fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Preset, usize, StrategySpec)> {
-    let model = args.get_or("model", "gpt2");
-    let model = ModelKind::parse(&model)
-        .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
+fn parse_workload(args: &Args) -> Result<(ModelSpec, usize, Preset, usize, StrategySpec)> {
+    let model = parse_model(args, "gpt2")?;
     let batch = args.get_usize("batch", 8)?;
     let preset = args.get_or("preset", "HC1");
     let preset = Preset::parse(&preset)
@@ -99,6 +145,7 @@ fn parse_workload(args: &Args) -> Result<(ModelKind, usize, Preset, usize, Strat
         args.get_usize("pp", 1)?,
         args.get_usize("micro", 1)?,
     );
+    spec.moe = args.get_usize("ep", 1)?;
     spec.zero = args.flag("zero");
     spec.recompute = args.flag("recompute");
     spec.shard_embeddings = args.flag("emb-shard");
@@ -289,6 +336,12 @@ fn cmd_simulate(args: &Args, session: &Session) -> Result<()> {
     let compact = args.flag("compact");
     let fold = args.flag("fold");
     let coll_algo = parse_coll_algo(args)?;
+    let moe_imbalance = args.get_f64("moe-imbalance", 0.0)?;
+    if moe_imbalance < 0.0 {
+        return Err(Error::Config(format!(
+            "--moe-imbalance {moe_imbalance}: the token-imbalance factor must be ≥ 0"
+        )));
+    }
     let trace_path = args.get("trace").map(|s| s.to_string());
     // Read --artifacts before the unknown-option pass: reading it only
     // after reject_unknown() made `simulate --artifacts PATH` fail as
@@ -311,6 +364,7 @@ fn cmd_simulate(args: &Args, session: &Session) -> Result<()> {
         flexflow,
         fold,
         coll_algo,
+        moe_imbalance,
         trace: trace_path.is_some(),
         artifacts,
     };
@@ -412,7 +466,7 @@ fn cmd_compare(args: &Args, session: &Session) -> Result<()> {
     let model = doc
         .get("model")
         .and_then(|v| v.as_str())
-        .and_then(ModelKind::parse)
+        .and_then(ModelSpec::parse)
         .ok_or_else(|| Error::Config("config: bad 'model'".into()))?;
     let batch = doc
         .get("batch")
@@ -436,7 +490,7 @@ fn cmd_compare(args: &Args, session: &Session) -> Result<()> {
         .map(spec_from_json)
         .collect::<Result<_>>()?;
 
-    let resp = session.compare(model, batch, preset, nodes, &specs, truth, &artifacts)?;
+    let resp = session.compare(&model, batch, preset, nodes, &specs, truth, &artifacts)?;
     let mut table = Table::new(&if truth {
         vec!["strategy", "step_ms", "samples/s", "oom", "truth_ms", "err%"]
     } else {
@@ -467,9 +521,7 @@ fn cmd_compare(args: &Args, session: &Session) -> Result<()> {
 /// (`runtime::search`): the simulator as an optimizer, not just a
 /// scorer.
 fn cmd_search(args: &Args, session: &Session) -> Result<()> {
-    let model = args.get_or("model", "gpt2");
-    let model = ModelKind::parse(&model)
-        .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
+    let model = parse_model(args, "gpt2")?;
     let batch = args.get_usize("batch", 64)?;
     let preset = args.get_or("preset", "HC2");
     let preset = Preset::parse(&preset)
@@ -612,9 +664,7 @@ fn cmd_search(args: &Args, session: &Session) -> Result<()> {
 /// Rank an exhaustive strategy grid with the parallel
 /// [`crate::runtime::SweepRunner`].
 fn cmd_sweep(args: &Args, session: &Session) -> Result<()> {
-    let model = args.get_or("model", "gpt2");
-    let model = ModelKind::parse(&model)
-        .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
+    let model = parse_model(args, "gpt2")?;
     let batch = args.get_usize("batch", 64)?;
     let preset = args.get_or("preset", "HC2");
     let preset = Preset::parse(&preset)
@@ -745,12 +795,10 @@ fn cmd_calibrate(args: &Args, session: &Session) -> Result<()> {
 }
 
 fn cmd_info(args: &Args, session: &Session) -> Result<()> {
-    let model = args.get_or("model", "gpt2");
-    let model = ModelKind::parse(&model)
-        .ok_or_else(|| Error::Config(format!("unknown model '{model}'")))?;
+    let model = parse_model(args, "gpt2")?;
     let batch = args.get_usize("batch", 8)?;
     args.reject_unknown()?;
-    let resp = session.info(model, batch);
+    let resp = session.info(&model, batch)?;
     println!("model={} batch={}", resp.model, resp.batch);
     println!("layers={} tensors={}", resp.layers, resp.tensors);
     println!("params={:.1}M", resp.params as f64 / 1e6);
@@ -797,7 +845,7 @@ mod tests {
     fn workload_parsing_defaults() {
         let a = parse("simulate --model vgg19 --batch 32 --dp 4");
         let (m, b, p, nodes, s) = parse_workload(&a).unwrap();
-        assert_eq!(m, ModelKind::Vgg19);
+        assert_eq!(m, ModelSpec::preset(ModelKind::Vgg19));
         assert_eq!(b, 32);
         assert_eq!(p, Preset::HC1);
         assert_eq!(nodes, Preset::HC1.max_nodes());
@@ -1127,5 +1175,121 @@ mod tests {
              --schedule gpipe --json",
         );
         run(&a).unwrap();
+    }
+
+    /// Audit: every model name `ModelKind::parse` accepts must be
+    /// documented in [`HELP`] and in the repo README, so the open
+    /// `ModelSpec` surface never grows an undocumented alias.
+    #[test]
+    fn every_model_alias_is_documented_in_help_and_readme() {
+        let readme = include_str!("../../../README.md");
+        for alias in ModelKind::aliases() {
+            assert!(HELP.contains(alias), "model alias '{alias}' missing from HELP");
+            assert!(
+                readme.contains(alias),
+                "model alias '{alias}' missing from README.md"
+            );
+        }
+    }
+
+    /// All preset names round-trip through the CLI parser.
+    #[test]
+    fn every_model_kind_parses_from_its_own_name() {
+        for kind in ModelKind::all() {
+            let a = parse(&format!("info --model {}", kind.name().to_lowercase()));
+            let m = parse_model(&a, "gpt2").unwrap();
+            assert_eq!(m, ModelSpec::preset(kind));
+        }
+    }
+
+    /// Tentpole surface: `--ep` selects expert parallelism, and
+    /// `--moe-imbalance` skews the router. Both validate at the flag
+    /// boundary.
+    #[test]
+    fn moe_expert_parallel_simulate_runs() {
+        let a = parse(
+            "simulate --model moe-gpt --batch 8 --preset HC1 --nodes 1 --dp 4 --ep 2 --json",
+        );
+        run(&a).unwrap();
+        // Skewed router: the hot expert gets 1.3x its balanced share.
+        let a = parse(
+            "simulate --model moe-gpt --batch 8 --preset HC1 --nodes 1 --dp 4 --ep 2 \
+             --moe-imbalance 0.3 --json",
+        );
+        run(&a).unwrap();
+        // A negative imbalance factor is rejected up front.
+        let a = parse(
+            "simulate --model moe-gpt --batch 8 --preset HC1 --nodes 1 --dp 4 --ep 2 \
+             --moe-imbalance -0.5",
+        );
+        assert!(run(&a).is_err());
+        // EP needs expert layers: gpt2 is dense.
+        let a = parse("simulate --model gpt2 --batch 8 --preset HC1 --nodes 1 --dp 4 --ep 2");
+        assert!(run(&a).is_err());
+        // EP must divide the (overridden) expert count.
+        let a = parse(
+            "simulate --model moe-gpt --experts 4 --batch 8 --preset HC1 --nodes 1 \
+             --dp 1 --ep 8",
+        );
+        assert!(run(&a).is_err());
+    }
+
+    #[test]
+    fn moe_sweep_command_runs() {
+        let a = parse(
+            "sweep --model moe-gpt --batch 8 --preset HC1 --nodes 1 --top 3 --threads 2 --json",
+        );
+        run(&a).unwrap();
+    }
+
+    /// `--model-file` loads an external JSON layer graph; it is mutually
+    /// exclusive with `--model` and with the preset resize knobs.
+    #[test]
+    fn model_file_flag_loads_and_simulates() {
+        let path = std::env::temp_dir().join(format!(
+            "proteus_cli_model_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(
+            &path,
+            r#"{"name":"mlp","input":[64],"layers":[{"op":"linear","out":128},{"op":"relu"},{"op":"linear","out":10}]}"#,
+        )
+        .unwrap();
+        let a = parse(&format!(
+            "simulate --model-file {} --batch 16 --preset HC1 --nodes 1 --dp 8 --json",
+            path.display()
+        ));
+        let ok = run(&a);
+        let a = parse(&format!(
+            "simulate --model gpt2 --model-file {} --batch 16",
+            path.display()
+        ));
+        let both_selectors = run(&a);
+        let a = parse(&format!(
+            "simulate --model-file {} --layers 2 --batch 16",
+            path.display()
+        ));
+        let knob_on_file = run(&a);
+        std::fs::remove_file(&path).unwrap();
+        ok.unwrap();
+        assert!(both_selectors.is_err());
+        assert!(knob_on_file.is_err());
+        // A missing file fails with a config error, not a panic.
+        let a = parse("simulate --model-file /nonexistent/model.json --batch 16");
+        assert!(run(&a).is_err());
+    }
+
+    /// `--layers/--hidden/--experts` resize the GPT / MoE presets and
+    /// are rejected for models without those knobs.
+    #[test]
+    fn size_knobs_resize_presets() {
+        let a = parse(
+            "simulate --model gpt2 --layers 2 --batch 8 --preset HC1 --nodes 1 --dp 2 --json",
+        );
+        run(&a).unwrap();
+        let a = parse("simulate --model vgg19 --layers 2 --batch 8");
+        assert!(run(&a).is_err());
+        let a = parse("simulate --model gpt2 --experts 4 --batch 8");
+        assert!(run(&a).is_err());
     }
 }

@@ -230,7 +230,18 @@ pub fn lower(cluster: &Cluster, algo: CollAlgo, c: &CommTask) -> CollectivePlan 
     match c.kind {
         CollectiveKind::P2p => p2p_plan(cluster, &c.group, bytes),
         CollectiveKind::Broadcast => broadcast_plan(cluster, &c.group, bytes),
-        CollectiveKind::AllToAll => all_to_all_plan(cluster, &c.group, bytes),
+        CollectiveKind::AllToAll => match algo {
+            CollAlgo::Hierarchical => all_to_all_hier(cluster, &c.group, bytes)
+                .unwrap_or_else(|| all_to_all_plan(cluster, &c.group, bytes)),
+            CollAlgo::Auto => {
+                let flat = all_to_all_plan(cluster, &c.group, bytes);
+                match all_to_all_hier(cluster, &c.group, bytes) {
+                    Some(h) if h.cost_ps(cluster) < flat.cost_ps(cluster) => h,
+                    _ => flat,
+                }
+            }
+            _ => all_to_all_plan(cluster, &c.group, bytes),
+        },
         CollectiveKind::AllGather => ring_plan(cluster, &c.group, bytes, "ag-ring", 1.0),
         CollectiveKind::ReduceScatter => ring_plan(cluster, &c.group, bytes, "rs-ring", 1.0),
         CollectiveKind::AllReduce => match algo {
@@ -478,34 +489,17 @@ fn allreduce_tree(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> Collecti
 /// Irregular groups return `None` (callers fall back to the flat
 /// ring).
 fn allreduce_hier(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> Option<CollectivePlan> {
-    let n = group.len();
-    if n < 2 {
+    if group.len() < 2 {
         return None;
     }
-    // Node-major ordering; per-node member lists.
-    let ring = cluster.ring_order(group);
-    let mut nodes: Vec<(usize, Vec<DeviceId>)> = Vec::new();
-    for &d in &ring {
-        let nd = cluster.node_of(d);
-        match nodes.last_mut() {
-            Some((last, members)) if *last == nd => members.push(d),
-            _ => nodes.push((nd, vec![d])),
-        }
-    }
+    let (nodes, k) = node_groups(cluster, group)?;
     let m = nodes.len();
-    if m < 2 {
-        return None;
-    }
-    let k = nodes[0].1.len();
-    if nodes.iter().any(|(_, mem)| mem.len() != k) {
-        return None;
-    }
     let mut phases = Vec::new();
     if k >= 2 {
         // Phase 1: concurrent per-node reduce-scatters.
         let vol = bytes * (k as f64 - 1.0) / k as f64;
         let mut flows = Vec::new();
-        for (_, mem) in &nodes {
+        for mem in &nodes {
             flows.extend(ring_segments(mem, vol));
         }
         phases.push(PlanPhase {
@@ -520,7 +514,7 @@ fn allreduce_hier(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> Option<C
     let vol = shard * 2.0 * (m as f64 - 1.0) / m as f64;
     let mut flows = Vec::new();
     for j in 0..k {
-        let cross: Vec<DeviceId> = nodes.iter().map(|(_, mem)| mem[j]).collect();
+        let cross: Vec<DeviceId> = nodes.iter().map(|mem| mem[j]).collect();
         flows.extend(ring_segments(&cross, vol));
     }
     phases.push(PlanPhase {
@@ -533,7 +527,7 @@ fn allreduce_hier(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> Option<C
         // Phase 3: concurrent per-node all-gathers (mirror of phase 1).
         let vol = bytes * (k as f64 - 1.0) / k as f64;
         let mut flows = Vec::new();
-        for (_, mem) in &nodes {
+        for mem in &nodes {
             flows.extend(ring_segments(mem, vol));
         }
         phases.push(PlanPhase {
@@ -543,6 +537,100 @@ fn allreduce_hier(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> Option<C
             flows,
         });
     }
+    Some(CollectivePlan {
+        algo: "hier",
+        phases,
+    })
+}
+
+/// Node-major member lists of `group` (via [`Cluster::ring_order`] +
+/// [`Cluster::node_of`]): `Some((members_per_node, k))` when the group
+/// spans ≥ 2 nodes with the same member count `k` per node; irregular
+/// or single-node groups return `None` (callers fall back to flat).
+fn node_groups(cluster: &Cluster, group: &[DeviceId]) -> Option<(Vec<Vec<DeviceId>>, usize)> {
+    let ring = cluster.ring_order(group);
+    let mut nodes: Vec<(usize, Vec<DeviceId>)> = Vec::new();
+    for &d in &ring {
+        let nd = cluster.node_of(d);
+        match nodes.last_mut() {
+            Some((last, members)) if *last == nd => members.push(d),
+            _ => nodes.push((nd, vec![d])),
+        }
+    }
+    if nodes.len() < 2 {
+        return None;
+    }
+    let k = nodes[0].1.len();
+    if nodes.iter().any(|(_, mem)| mem.len() != k) {
+        return None;
+    }
+    Some((nodes.into_iter().map(|(_, mem)| mem).collect(), k))
+}
+
+/// 2-level hierarchical all-to-all (the expert-parallel dispatch /
+/// combine path). All-to-all volume is irreducible — every byte has
+/// exactly one destination — so unlike [`allreduce_hier`] this saves no
+/// NIC traffic; it wins on *latency*: `(k-1) + (m-1)` α steps (the
+/// intra ones at NVLink α) instead of the flat mesh's `n-1` at the
+/// worst cross-node α. Small, latency-bound payloads — the
+/// per-micro-batch MoE dispatch pattern — cross over in its favor;
+/// [`CollAlgo::Auto`] decides per message from the closed-form costs.
+///
+/// 1. `a2a-intra` (k ≥ 2 only) — per-node full mesh: each rank hands
+///    each local peer the `bytes/k` slice headed for that peer's rail;
+/// 2. `a2a-inter` — `k` concurrent per-rail meshes over the NICs,
+///    `bytes/m` per node pair and rail.
+fn all_to_all_hier(cluster: &Cluster, group: &[DeviceId], bytes: f64) -> Option<CollectivePlan> {
+    if group.len() < 2 {
+        return None;
+    }
+    let (nodes, k) = node_groups(cluster, group)?;
+    let m = nodes.len();
+    let mut phases = Vec::new();
+    if k >= 2 {
+        let per = bytes / k as f64;
+        let mut flows = Vec::new();
+        for mem in &nodes {
+            for &a in mem {
+                for &b in mem {
+                    if a != b {
+                        flows.push(FlowSpec {
+                            src: a,
+                            dst: b,
+                            bytes: per,
+                        });
+                    }
+                }
+            }
+        }
+        phases.push(PlanPhase {
+            label: "a2a-intra",
+            steps: k as f64 - 1.0,
+            alpha_ps: max_flow_alpha(cluster, &flows),
+            flows,
+        });
+    }
+    let per = bytes / m as f64;
+    let mut flows = Vec::new();
+    for j in 0..k {
+        for a in 0..m {
+            for b in 0..m {
+                if a != b {
+                    flows.push(FlowSpec {
+                        src: nodes[a][j],
+                        dst: nodes[b][j],
+                        bytes: per,
+                    });
+                }
+            }
+        }
+    }
+    phases.push(PlanPhase {
+        label: "a2a-inter",
+        steps: m as f64 - 1.0,
+        alpha_ps: max_flow_alpha(cluster, &flows),
+        flows,
+    });
     Some(CollectivePlan {
         algo: "hier",
         phases,
@@ -680,6 +768,79 @@ mod tests {
         let plan = allreduce_hier(&c, &[0, 8, 16, 24], 1e6).unwrap();
         assert_eq!(plan.phases.len(), 1);
         assert_eq!(plan.phases[0].label, "inter-ar");
+    }
+
+    fn a2a(group: Vec<DeviceId>, bytes: u64) -> CommTask {
+        CommTask {
+            kind: CollectiveKind::AllToAll,
+            group,
+            bytes,
+            class: CommClass::Feature,
+        }
+    }
+
+    #[test]
+    fn hier_a2a_beats_flat_mesh_on_small_cross_node_payloads() {
+        // EP dispatch/combine: 256 KiB over 2 nodes is latency-bound, so
+        // the (k-1)+(m-1)-step hierarchical schedule undercuts the flat
+        // mesh's n-1 steps at cross-node α — and Auto must pick it.
+        let c = Cluster::preset(Preset::HC2, 2);
+        let t = a2a((0..16).collect(), 256 << 10);
+        let flat = all_to_all_plan(&c, &t.group, t.bytes as f64);
+        let hier = all_to_all_hier(&c, &t.group, t.bytes as f64).expect("regular group");
+        assert!(
+            hier.cost_ps(&c) < flat.cost_ps(&c),
+            "hier {} ps must beat flat {} ps at 256 KiB cross-node",
+            hier.cost_ps(&c),
+            flat.cost_ps(&c)
+        );
+        let auto = lower(&c, CollAlgo::Auto, &t);
+        assert_eq!(auto.algo, "hier");
+        // Large payloads are bandwidth-bound and phases serialize, so
+        // the flat mesh wins back.
+        let big = lower(&c, CollAlgo::Auto, &a2a((0..16).collect(), 256 << 20));
+        assert_eq!(big.algo, "ring");
+    }
+
+    #[test]
+    fn hier_a2a_structure_and_volume() {
+        let c = Cluster::preset(Preset::HC2, 2);
+        let bytes = 1024.0 * 1024.0;
+        let plan = all_to_all_hier(&c, &(0..16).collect::<Vec<_>>(), bytes).unwrap();
+        let labels: Vec<&str> = plan.phases.iter().map(|p| p.label).collect();
+        assert_eq!(labels, ["a2a-intra", "a2a-inter"]);
+        // Intra: per-node full mesh, k(k-1)=56 flows per node of bytes/8.
+        let intra = &plan.phases[0];
+        assert_eq!(intra.flows.len(), 2 * 8 * 7);
+        for f in &intra.flows {
+            assert_eq!(c.node_of(f.src), c.node_of(f.dst));
+            assert!((f.bytes - bytes / 8.0).abs() < 1e-6);
+        }
+        // Inter: 8 rails × m(m-1)=2 directed pairs of bytes/2 — the
+        // node-to-node volume k·(m-1)·bytes/m matches the flat mesh's
+        // (volume is irreducible for all-to-all).
+        let inter = &plan.phases[1];
+        assert_eq!(inter.flows.len(), 8 * 2);
+        for f in &inter.flows {
+            assert_ne!(c.node_of(f.src), c.node_of(f.dst));
+            assert!((f.bytes - bytes / 2.0).abs() < 1e-6);
+        }
+        // Single-node groups have no hierarchy to exploit.
+        let single = Cluster::preset(Preset::HC2, 1);
+        assert!(all_to_all_hier(&single, &(0..8).collect::<Vec<_>>(), bytes).is_none());
+        // Forcing hier on one falls back to the flat mesh.
+        let plan = lower(&single, CollAlgo::Hierarchical, &a2a((0..8).collect(), 1 << 20));
+        assert_eq!(plan.algo, "ring");
+        assert_eq!(plan.phases[0].label, "a2a-mesh");
+    }
+
+    #[test]
+    fn one_rank_per_node_a2a_skips_the_intra_phase() {
+        let c = Cluster::preset(Preset::HC2, 4);
+        let plan = all_to_all_hier(&c, &[0, 8, 16, 24], 1e6).unwrap();
+        assert_eq!(plan.phases.len(), 1);
+        assert_eq!(plan.phases[0].label, "a2a-inter");
+        assert_eq!(plan.phases[0].flows.len(), 4 * 3);
     }
 
     #[test]

@@ -233,6 +233,20 @@ impl<'a> BehaviorDetector<'a> {
     }
 }
 
+/// Per-layer mask of expert computation (layers whose parameters carry
+/// the expert axis `e`), indexed by [`crate::graph::LayerId`]. The HTAE
+/// scales these layers' compute — and the all-to-all dispatch/combine β
+/// — by `1 + moe_imbalance` (see [`super::HtaeConfig::moe_imbalance`]):
+/// a uniform straggler model where the hottest expert rank, which gates
+/// every synchronous collective, holds `(1 + δ)×` the mean token load.
+pub fn expert_layer_mask(graph: &crate::graph::Graph) -> Vec<bool> {
+    graph
+        .layers
+        .iter()
+        .map(crate::strategy::is_expert_layer)
+        .collect()
+}
+
 fn kind_key(k: CollectiveKind) -> u8 {
     match k {
         CollectiveKind::AllReduce => 0,

@@ -36,7 +36,7 @@ use std::collections::{BinaryHeap, HashMap};
 
 use crate::cluster::Cluster;
 use crate::collective::{self, CollAlgo};
-use crate::compiler::{CommClass, CommTask, ExecGraph, TaskId, TaskRef};
+use crate::compiler::{CollectiveKind, CommClass, CommTask, ExecGraph, TaskId, TaskRef};
 use crate::estimator::OpEstimator;
 use crate::util::time::{ps_to_ms, ps_to_secs, scale, Ps};
 use crate::Result;
@@ -65,6 +65,15 @@ pub struct HtaeConfig {
     /// collective) or the legacy monolithic α–β path
     /// ([`CollAlgo::Monolithic`] — the fig9-style ablation switch).
     pub coll_algo: CollAlgo,
+    /// MoE token-imbalance factor δ ≥ 0 (uniform straggler model): the
+    /// hottest expert rank holds `(1 + δ)×` the mean token load, and
+    /// since every dispatch/combine is synchronous it gates the whole
+    /// group. Expert-layer computation (see
+    /// [`behavior::expert_layer_mask`] / [`Htae::with_expert_mask`])
+    /// scales by `1 + δ`, as does the **β term** of every all-to-all.
+    /// `0.0` (the default, and the only value sweep/search use) is the
+    /// perfectly balanced router — bit-identical to pre-MoE behavior.
+    pub moe_imbalance: f64,
 }
 
 impl Default for HtaeConfig {
@@ -75,6 +84,7 @@ impl Default for HtaeConfig {
             overlap: true,
             record_timeline: false,
             coll_algo: CollAlgo::Auto,
+            moe_imbalance: 0.0,
         }
     }
 }
@@ -90,6 +100,7 @@ impl HtaeConfig {
             overlap: false,
             record_timeline: false,
             coll_algo: CollAlgo::Auto,
+            moe_imbalance: 0.0,
         }
     }
 }
@@ -180,6 +191,10 @@ pub struct Htae<'a> {
     cluster: &'a Cluster,
     estimator: &'a OpEstimator<'a>,
     config: HtaeConfig,
+    /// Per-[`crate::graph::LayerId`] expert-computation mask (see
+    /// [`behavior::expert_layer_mask`]). `None` — or a δ of 0 — leaves
+    /// every cost untouched.
+    expert_mask: Option<Vec<bool>>,
 }
 
 impl<'a> Htae<'a> {
@@ -193,6 +208,7 @@ impl<'a> Htae<'a> {
                 gamma: calibrate::default_gamma(cluster),
                 ..HtaeConfig::default()
             },
+            expert_mask: None,
         }
     }
 
@@ -206,7 +222,16 @@ impl<'a> Htae<'a> {
             cluster,
             estimator,
             config,
+            expert_mask: None,
         }
+    }
+
+    /// Attach the expert-layer mask that `moe_imbalance` scales (built
+    /// by [`behavior::expert_layer_mask`] from the *model* graph —
+    /// layer ids survive compilation unchanged).
+    pub fn with_expert_mask(mut self, mask: Vec<bool>) -> Self {
+        self.expert_mask = Some(mask);
+        self
     }
 
     /// The active configuration.
@@ -301,6 +326,17 @@ impl<'a> Htae<'a> {
                     if let Some(Reverse(id)) = comp_ready[d].pop() {
                         debug_assert!(!eg.is_comm(id));
                         let mut cost = base_costs[id];
+                        if self.config.moe_imbalance > 0.0 {
+                            if let Some(mask) = &self.expert_mask {
+                                let hot = eg
+                                    .meta(id)
+                                    .layer
+                                    .map_or(false, |l| mask.get(l).copied().unwrap_or(false));
+                                if hot {
+                                    cost = scale(cost, 1.0 + self.config.moe_imbalance);
+                                }
+                            }
+                        }
                         if self.config.overlap && detector.comp_overlaps_grad_comm(d, t) {
                             cost = scale(cost, 1.0 + self.config.gamma);
                             detector.note_overlapped_comp(eg.task_mult(id) as usize);
@@ -349,6 +385,12 @@ impl<'a> Htae<'a> {
                         None => detector.split_alpha_beta(c, base_costs[id]),
                     };
                     let mut beta = beta0;
+                    if self.config.moe_imbalance > 0.0 && c.kind == CollectiveKind::AllToAll {
+                        // The hot expert rank's (1+δ)× payload gates the
+                        // synchronous dispatch/combine; α (per-step link
+                        // latency) is payload-independent and exempt.
+                        beta = scale(beta, 1.0 + self.config.moe_imbalance);
+                    }
                     if self.config.bandwidth_sharing && c.group.len() > 1 {
                         let share = detector.sharing_factor(c, t);
                         if share > 1.0 {
@@ -647,6 +689,7 @@ mod tests {
             overlap: true,
             record_timeline: true,
             coll_algo: CollAlgo::Monolithic,
+            moe_imbalance: 0.0,
         };
         let r = Htae::with_config(&c, &est, cfg)
             .simulate_with_costs(&eg, &[comp_cost, alpha + beta])
@@ -703,6 +746,45 @@ mod tests {
         let span = auto.timeline.iter().find(|s| s.task == 0).unwrap();
         assert_eq!(auto.comm_phases.first().unwrap().start, span.start);
         assert_eq!(auto.comm_phases.last().unwrap().end, span.end);
+    }
+
+    /// The MoE token-imbalance knob: δ > 0 with the expert mask
+    /// attached slows the step (hot-rank straggler on expert compute
+    /// and all-to-all β); δ = 0 is bit-identical to the pre-MoE
+    /// executor whether or not a mask is attached.
+    #[test]
+    fn moe_imbalance_slows_expert_steps_only() {
+        use crate::executor::behavior::expert_layer_mask;
+        use crate::models::{moe_gpt, MoeGptConfig};
+
+        let g = moe_gpt(MoeGptConfig::tiny(), 4);
+        let tree = build_strategy(&g, StrategySpec::hybrid(1, 1, 1, 1).with_moe(2)).unwrap();
+        let c = Cluster::preset(Preset::HC2, 1);
+        let eg = crate::compiler::compile(&g, &tree, &c).unwrap();
+        let est = OpEstimator::analytical(&c);
+        let mask = expert_layer_mask(&g);
+        assert!(mask.iter().any(|&m| m), "tiny MoE has expert layers");
+        let run = |delta: f64, masked: bool| {
+            let cfg = HtaeConfig {
+                moe_imbalance: delta,
+                ..HtaeConfig::plain()
+            };
+            let h = Htae::with_config(&c, &est, cfg);
+            let h = if masked {
+                h.with_expert_mask(mask.clone())
+            } else {
+                h
+            };
+            h.simulate(&eg).unwrap().step_ms
+        };
+        let balanced = run(0.0, true);
+        let hot = run(0.3, true);
+        assert!(hot > balanced, "δ=0.3 must slow the step: {hot} vs {balanced}");
+        // Without the mask only the all-to-all β scales: between the
+        // balanced step and the fully-stretched one.
+        let unmasked = run(0.3, false);
+        assert!(unmasked >= balanced && unmasked <= hot);
+        assert_eq!(run(0.0, true), run(0.0, false), "δ=0 is inert");
     }
 
     #[test]

@@ -247,6 +247,138 @@ impl GraphBuilder {
         out
     }
 
+    /// MoE token dispatch: route `x[b, s, m]` into per-expert capacity
+    /// buckets `[b, e, k, m]` using router `scores[b, s, e]` (top-1
+    /// routing at exact capacity `k = s / e`). The expert dimension is
+    /// named `e` — the axis expert parallelism shards — and the capacity
+    /// dimension `k` is never split. Bandwidth-bound (a permutation).
+    pub fn moe_dispatch(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        scores: TensorId,
+        n_expert: usize,
+    ) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        let ss = self.shape(scores).to_vec();
+        assert_eq!(xs.len(), 3, "moe_dispatch {name}: want x = [b, s, m]");
+        assert_eq!(ss, vec![xs[0], xs[1], n_expert], "moe_dispatch {name}: scores shape");
+        assert_eq!(
+            xs[1] % n_expert,
+            0,
+            "moe_dispatch {name}: seq {} not divisible by {n_expert} experts",
+            xs[1]
+        );
+        let (b, s, m) = (xs[0], xs[1], xs[2]);
+        let cap = s / n_expert;
+        let dtype = self.tensors[x].dtype;
+        let dims = vec![
+            ("b".into(), b),
+            ("e".into(), n_expert),
+            ("k".into(), cap),
+            ("m".into(), m),
+        ];
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Elementwise,
+            dims,
+            vec![],
+            vec![
+                Operand::new(x, &["b", "", "m"]),
+                Operand::new(scores, &["b", "", "e"]),
+            ],
+            vec![],
+            &[b, n_expert, cap, m],
+            &["b", "e", "k", "m"],
+            dtype,
+            1.0,
+            1.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Per-expert dense layer: `y[b,e,k,o] = x[b,e,k,h] W[e,o,h] +
+    /// bias[e,o]`. Each expert `e` applies its own weight slice, so
+    /// partitioning `e` shards both the compute and the expert
+    /// parameters — the expert-parallel split.
+    pub fn moe_expert_linear(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        in_features: usize,
+        out_features: usize,
+    ) -> TensorId {
+        let xs = self.shape(x).to_vec();
+        assert_eq!(xs.len(), 4, "moe_expert_linear {name}: want [b, e, k, h]");
+        assert_eq!(xs[3], in_features, "moe_expert_linear {name}: input trailing dim");
+        let (b, e, cap) = (xs[0], xs[1], xs[2]);
+        let dtype = self.tensors[x].dtype;
+        let w = self.param(
+            &format!("{name}.weight"),
+            &[e, out_features, in_features],
+            dtype,
+        );
+        let bias = self.param(&format!("{name}.bias"), &[e, out_features], dtype);
+        let dims = vec![
+            ("b".into(), b),
+            ("e".into(), e),
+            ("k".into(), cap),
+            ("o".into(), out_features),
+            ("h".into(), in_features),
+        ];
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Linear,
+            dims,
+            vec!["h"],
+            vec![Operand::new(x, &["b", "e", "k", "h"])],
+            vec![
+                Operand::new(w, &["e", "o", "h"]),
+                Operand::new(bias, &["e", "o"]),
+            ],
+            &[b, e, cap, out_features],
+            &["b", "e", "k", "o"],
+            dtype,
+            2.0,
+            2.0,
+            1.0,
+        );
+        out
+    }
+
+    /// Inverse of [`GraphBuilder::moe_dispatch`]: un-permute expert
+    /// buckets `y[b, e, k, m]` back into the token sequence
+    /// `[b, e·k, m]` (weighted by the router scores, folded into the
+    /// elementwise cost). Bandwidth-bound.
+    pub fn moe_combine(&mut self, name: &str, y: TensorId) -> TensorId {
+        let ys = self.shape(y).to_vec();
+        assert_eq!(ys.len(), 4, "moe_combine {name}: want [b, e, k, m]");
+        let (b, e, cap, m) = (ys[0], ys[1], ys[2], ys[3]);
+        let dtype = self.tensors[y].dtype;
+        let dims = vec![
+            ("b".into(), b),
+            ("e".into(), e),
+            ("k".into(), cap),
+            ("m".into(), m),
+        ];
+        let (_, out) = self.add_layer(
+            name,
+            OpKind::Elementwise,
+            dims,
+            vec![],
+            vec![Operand::new(y, &["b", "e", "k", "m"])],
+            vec![],
+            &[b, e * cap, m],
+            &["b", "", "m"],
+            dtype,
+            1.0,
+            1.0,
+            1.0,
+        );
+        out
+    }
+
     /// Head-factored QKV projection for transformer blocks: input
     /// `[b, s, h_model]`, output `[b, s, a, 3*d_head]` where the `o`
     /// dimension is the head count `a` — partitioning `o` is Megatron

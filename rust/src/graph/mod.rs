@@ -145,6 +145,25 @@ impl Graph {
         self.layers.iter().map(|l| l.fwd_flops()).sum()
     }
 
+    /// True if any layer declares an expert dimension `"e"` (MoE models).
+    /// Expert-parallel strategies (`ep > 1`) only apply to such graphs.
+    pub fn has_experts(&self) -> bool {
+        self.layers.iter().any(|l| l.dim_size("e").is_some())
+    }
+
+    /// The largest expert-parallel degree the graph supports: the gcd of
+    /// every `"e"` dim size (each expert group must hold a whole number
+    /// of experts). `None` for dense graphs.
+    pub fn expert_capacity(&self) -> Option<usize> {
+        fn gcd(a: usize, b: usize) -> usize {
+            if b == 0 { a } else { gcd(b, a % b) }
+        }
+        self.layers
+            .iter()
+            .filter_map(|l| l.dim_size("e"))
+            .reduce(gcd)
+    }
+
     /// Consumers of each tensor: `consumers()[t]` lists layer ids reading
     /// tensor `t` as an activation input.
     pub fn consumers(&self) -> Vec<Vec<LayerId>> {

@@ -99,6 +99,7 @@ pub fn run_case_with(case: &Case, custom: &HtaeCustom) -> Result<CaseResult> {
         } else {
             crate::collective::CollAlgo::Auto
         },
+        moe_imbalance: 0.0,
     };
     let pred = Htae::with_config(&cluster, &est, config).simulate_with_costs(&eg, &base)?;
     let err_pct = (pred.throughput - truth.throughput).abs() / truth.throughput * 100.0;

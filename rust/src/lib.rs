@@ -65,13 +65,13 @@
 //! ```no_run
 //! use proteus::runtime::{candidate_grid, Scenario, SweepRunner};
 //! use proteus::cluster::Preset;
-//! use proteus::models::ModelKind;
+//! use proteus::models::{ModelKind, ModelSpec};
 //!
 //! let specs = candidate_grid(16, 64);
 //! let scenarios: Vec<Scenario> = specs
 //!     .into_iter()
 //!     .map(|spec| Scenario {
-//!         model: ModelKind::Gpt2,
+//!         model: ModelSpec::preset(ModelKind::Gpt2),
 //!         batch: 64,
 //!         preset: Preset::HC2,
 //!         nodes: 2,
@@ -114,7 +114,7 @@ pub mod prelude {
     pub use crate::estimator::OpEstimator;
     pub use crate::executor::{Htae, HtaeConfig, SimReport};
     pub use crate::graph::{Graph, OpKind};
-    pub use crate::models::ModelKind;
+    pub use crate::models::{ModelKind, ModelSpec};
     pub use crate::runtime::{
         candidate_grid, candidate_grid_with_schedules, dedupe_specs, Scenario, SearchConfig,
         SearchPoint, Searcher, SweepOutcome, SweepRunner,

@@ -1,0 +1,180 @@
+//! Minimal JSON layer-graph importer (`--model-file`, [`super::ModelSpec::File`]).
+//!
+//! The format covers sequential feed-forward workloads — enough to bring
+//! an external model into the simulator without writing Rust:
+//!
+//! ```json
+//! {
+//!   "name": "mlp4",
+//!   "input": [512],
+//!   "layers": [
+//!     {"op": "linear", "out": 1024},
+//!     {"op": "relu"},
+//!     {"op": "layer_norm"},
+//!     {"op": "linear", "out": 10},
+//!     {"op": "loss"}
+//!   ]
+//! }
+//! ```
+//!
+//! - `input`: feature dims after the batch axis — `[f]` builds a
+//!   `[batch, f]` input, `[s, f]` a `[batch, s, f]` sequence input.
+//! - `layers`: applied in order; each consumes the previous output.
+//!   Ops: `linear` (required key `out`), `relu`, `layer_norm`, `loss`.
+//! - A final `loss` is appended automatically if the file omits it, so
+//!   the compiler always has a backward root.
+//!
+//! The global batch size stays a simulation-time parameter (like the
+//! built-in presets); the file describes only the per-sample shapes.
+//! Layer names are `l0..lN`, so strategy trees address imported layers
+//! by position.
+
+use crate::graph::{DType, Graph, GraphBuilder};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+fn cfg_err(msg: String) -> Error {
+    Error::Config(format!("model file: {msg}"))
+}
+
+/// Parse a JSON layer-graph document and build it at `batch`.
+pub fn import_json(text: &str, batch: usize) -> Result<Graph> {
+    let doc = Json::parse(text).map_err(|e| cfg_err(e.to_string()))?;
+    let name = doc
+        .get("name")
+        .and_then(|v| v.as_str())
+        .unwrap_or("imported")
+        .to_string();
+    let input: Vec<usize> = doc
+        .get("input")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| cfg_err("missing 'input' array".into()))?
+        .iter()
+        .map(|v| v.as_usize().filter(|&d| d > 0))
+        .collect::<Option<_>>()
+        .ok_or_else(|| cfg_err("'input' entries must be positive integers".into()))?;
+    if input.is_empty() || input.len() > 2 {
+        return Err(cfg_err(format!(
+            "'input' must list 1 or 2 feature dims (after batch), got {}",
+            input.len()
+        )));
+    }
+    let layers = doc
+        .get("layers")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| cfg_err("missing 'layers' array".into()))?;
+    if layers.is_empty() {
+        return Err(cfg_err("'layers' is empty".into()));
+    }
+
+    let mut b = GraphBuilder::new(&name, batch);
+    let mut shape = vec![batch];
+    shape.extend(&input);
+    let mut cur = b.input("x", &shape, DType::F32);
+    let mut width = *input.last().unwrap();
+    let mut has_loss = false;
+    for (i, l) in layers.iter().enumerate() {
+        if has_loss {
+            return Err(cfg_err(format!("layer {i}: ops after 'loss'")));
+        }
+        let op = l
+            .get("op")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| cfg_err(format!("layer {i}: missing 'op'")))?;
+        let lname = format!("l{i}");
+        match op {
+            "linear" => {
+                let out = l
+                    .get("out")
+                    .and_then(|v| v.as_usize())
+                    .filter(|&o| o > 0)
+                    .ok_or_else(|| {
+                        cfg_err(format!("layer {i}: linear needs a positive 'out'"))
+                    })?;
+                cur = b.linear(&lname, cur, width, out);
+                width = out;
+            }
+            "relu" => cur = b.relu(&lname, cur),
+            "layer_norm" => cur = b.layer_norm(&lname, cur),
+            "loss" => {
+                cur = b.loss(&lname, cur);
+                has_loss = true;
+            }
+            other => {
+                return Err(cfg_err(format!(
+                    "layer {i}: unknown op '{other}' (expected linear|relu|layer_norm|loss)"
+                )))
+            }
+        }
+    }
+    if !has_loss {
+        let _ = b.loss("loss", cur);
+    }
+    // `finish` re-validates the structural invariants; all paths above go
+    // through checked builder helpers, so this cannot panic on user input.
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MLP: &str = r#"{
+        "name": "mlp4",
+        "input": [512],
+        "layers": [
+            {"op": "linear", "out": 1024},
+            {"op": "relu"},
+            {"op": "layer_norm"},
+            {"op": "linear", "out": 10},
+            {"op": "loss"}
+        ]
+    }"#;
+
+    #[test]
+    fn imports_an_mlp() {
+        let g = import_json(MLP, 16).unwrap();
+        assert_eq!(g.name, "mlp4");
+        assert_eq!(g.batch_size, 16);
+        assert_eq!(g.layers.len(), 5);
+        // 512*1024 + 1024 (+ LN affine) + 1024*10 + 10
+        assert!(g.num_params() >= 512 * 1024 + 1024 + 1024 * 10 + 10);
+    }
+
+    #[test]
+    fn loss_is_appended_when_missing() {
+        let src = r#"{"name":"m","input":[8],"layers":[{"op":"linear","out":4}]}"#;
+        let g = import_json(src, 4).unwrap();
+        assert_eq!(g.layers.last().unwrap().name, "loss");
+    }
+
+    #[test]
+    fn sequence_inputs_build_3d_graphs() {
+        let src = r#"{"input":[32, 64],"layers":[{"op":"linear","out":16}]}"#;
+        let g = import_json(src, 4).unwrap();
+        assert_eq!(g.name, "imported");
+        let out = &g.tensors[g.layers[0].outputs[0].tensor];
+        assert_eq!(out.shape, vec![4, 32, 16]);
+    }
+
+    #[test]
+    fn bad_documents_are_rejected() {
+        assert!(import_json("not json", 4).is_err());
+        assert!(import_json(r#"{"layers":[{"op":"relu"}]}"#, 4).is_err());
+        assert!(import_json(r#"{"input":[8],"layers":[]}"#, 4).is_err());
+        assert!(import_json(r#"{"input":[8],"layers":[{"op":"conv9"}]}"#, 4).is_err());
+        assert!(import_json(r#"{"input":[8],"layers":[{"op":"linear"}]}"#, 4).is_err());
+        assert!(import_json(
+            r#"{"input":[8],"layers":[{"op":"loss"},{"op":"relu"}]}"#,
+            4
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn batch_scales_flops_linearly() {
+        let f4 = import_json(MLP, 4).unwrap().total_fwd_flops() as f64;
+        let f8 = import_json(MLP, 8).unwrap().total_fwd_flops() as f64;
+        assert!((f8 / f4 - 2.0).abs() < 0.05);
+    }
+}

@@ -10,20 +10,33 @@
 //! | NLP            | GPT-1.5B     | 1.5 B   |
 //! | Recommendation | DLRM         | 516 M   |
 //!
+//! plus two Mixture-of-Experts GPT variants (MoE-GPT and a LLaMA-shaped
+//! MoE-LLaMA-7B flagship) exercising expert parallelism, and a JSON
+//! layer-graph importer ([`import`]) for external workloads.
+//!
 //! All models use synthetic data shapes (the paper evaluates with
 //! synthetic datasets; data loading is out of scope). Parameter counts
 //! are asserted against the reference implementations in the test suite.
+//!
+//! Call sites select workloads through [`ModelSpec`] — an open union of
+//! built-in presets (with optional size-override knobs) and external
+//! graph files — rather than matching on [`ModelKind`] directly.
 
 pub mod dlrm;
 pub mod gpt;
+pub mod import;
 pub mod inception;
+pub mod moe;
 pub mod resnet;
+mod spec;
 pub mod vgg;
 
 pub use dlrm::{dlrm, DlrmConfig};
 pub use gpt::{gpt2, GptConfig};
 pub use inception::inception_v3;
+pub use moe::{moe_gpt, MoeGptConfig};
 pub use resnet::resnet50;
+pub use spec::ModelSpec;
 pub use vgg::vgg19;
 
 use crate::graph::Graph;
@@ -43,6 +56,10 @@ pub enum ModelKind {
     Gpt15B,
     /// DLRM with 26 embedding tables.
     Dlrm,
+    /// MoE GPT: the GPT-2 trunk with 8 experts in alternating blocks.
+    MoeGpt,
+    /// LLaMA-7B-shaped MoE flagship (32 × 4096, 8 experts).
+    MoeLlama7B,
 }
 
 impl ModelKind {
@@ -55,8 +72,34 @@ impl ModelKind {
             "gpt2" | "gpt-2" => Some(ModelKind::Gpt2),
             "gpt1.5b" | "gpt-1.5b" | "gpt15b" => Some(ModelKind::Gpt15B),
             "dlrm" => Some(ModelKind::Dlrm),
+            "moe-gpt" | "moe_gpt" => Some(ModelKind::MoeGpt),
+            "moe-llama-7b" | "moe_llama_7b" => Some(ModelKind::MoeLlama7B),
             _ => None,
         }
+    }
+
+    /// Every spelling [`ModelKind::parse`] accepts, in `all()` order with
+    /// canonical names first. The help-audit test checks each appears in
+    /// the CLI `HELP` text and the README.
+    pub fn aliases() -> &'static [&'static str] {
+        &[
+            "resnet50",
+            "resnet",
+            "inception_v3",
+            "inception",
+            "vgg19",
+            "vgg",
+            "gpt2",
+            "gpt-2",
+            "gpt1.5b",
+            "gpt-1.5b",
+            "gpt15b",
+            "dlrm",
+            "moe-gpt",
+            "moe_gpt",
+            "moe-llama-7b",
+            "moe_llama_7b",
+        ]
     }
 
     /// Display name matching the paper's tables.
@@ -68,6 +111,8 @@ impl ModelKind {
             ModelKind::Gpt2 => "GPT-2",
             ModelKind::Gpt15B => "GPT-1.5B",
             ModelKind::Dlrm => "DLRM",
+            ModelKind::MoeGpt => "MoE-GPT",
+            ModelKind::MoeLlama7B => "MoE-LLaMA-7B",
         }
     }
 
@@ -80,6 +125,8 @@ impl ModelKind {
             ModelKind::Gpt2 => gpt2(GptConfig::gpt2_117m(), batch),
             ModelKind::Gpt15B => gpt2(GptConfig::gpt2_1_5b(), batch),
             ModelKind::Dlrm => dlrm(DlrmConfig::paper_516m(), batch),
+            ModelKind::MoeGpt => moe_gpt(MoeGptConfig::moe_gpt_small(), batch),
+            ModelKind::MoeLlama7B => moe_gpt(MoeGptConfig::moe_llama_7b(), batch),
         }
     }
 
@@ -107,6 +154,8 @@ impl ModelKind {
             ModelKind::Gpt2,
             ModelKind::Gpt15B,
             ModelKind::Dlrm,
+            ModelKind::MoeGpt,
+            ModelKind::MoeLlama7B,
         ]
     }
 }
@@ -123,7 +172,39 @@ mod tests {
         assert_eq!(ModelKind::parse("gpt-2"), Some(ModelKind::Gpt2));
         assert_eq!(ModelKind::parse("GPT-1.5B"), Some(ModelKind::Gpt15B));
         assert_eq!(ModelKind::parse("dlrm"), Some(ModelKind::Dlrm));
+        assert_eq!(ModelKind::parse("moe-gpt"), Some(ModelKind::MoeGpt));
+        assert_eq!(
+            ModelKind::parse("MoE-LLaMA-7B"),
+            Some(ModelKind::MoeLlama7B)
+        );
         assert_eq!(ModelKind::parse("nope"), None);
+    }
+
+    /// Every kind's display name, lowercased, is an accepted spelling —
+    /// so `--model $(proteus info ... name)` round-trips.
+    #[test]
+    fn names_roundtrip_through_parse() {
+        for &m in ModelKind::all() {
+            assert_eq!(ModelKind::parse(&m.name().to_lowercase()), Some(m));
+        }
+    }
+
+    /// `aliases()` is exactly the set `parse` accepts: each alias parses,
+    /// and each kind is reachable from at least one alias.
+    #[test]
+    fn aliases_are_exhaustive_and_valid() {
+        for a in ModelKind::aliases() {
+            assert!(ModelKind::parse(a).is_some(), "alias '{a}' rejected");
+        }
+        for &m in ModelKind::all() {
+            assert!(
+                ModelKind::aliases()
+                    .iter()
+                    .any(|a| ModelKind::parse(a) == Some(m)),
+                "{} unreachable from aliases()",
+                m.name()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Mixture-of-Experts GPT variants (expert-parallel workloads).
+//!
+//! The dense trunk follows `models/gpt.rs` exactly; in MoE blocks the
+//! 4× MLP is replaced by a routed expert FFN:
+//!
+//! - a dense **router** linear scoring each token against the experts,
+//! - [`crate::graph::GraphBuilder::moe_dispatch`] permuting tokens into
+//!   per-expert capacity buckets `[b, e, k, m]` (top-1 routing at exact
+//!   capacity `k = seq / n_expert`),
+//! - two per-expert linears ([`moe_expert_linear`]) whose `[e, o, h]`
+//!   weights carry the expert axis — partitioning `e` is expert
+//!   parallelism (the expert activation is folded into the dispatch /
+//!   combine elementwise costs; it is bandwidth-trivial next to the
+//!   expert matmuls),
+//! - [`moe_combine`] un-permuting the buckets back into the sequence.
+//!
+//! Under an `ep > 1` strategy the dispatch→expert and expert→combine
+//! boundaries re-shard from token-parallel to expert-parallel layouts,
+//! which the transformation pass lowers to `AllToAll` collectives — the
+//! defining communication pattern of expert parallelism.
+//!
+//! [`moe_expert_linear`]: crate::graph::GraphBuilder::moe_expert_linear
+//! [`moe_combine`]: crate::graph::GraphBuilder::moe_combine
+
+use crate::graph::{DType, Graph, GraphBuilder, MpHint};
+
+/// MoE GPT hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MoeGptConfig {
+    /// Transformer blocks.
+    pub n_layer: usize,
+    /// Model width.
+    pub d_model: usize,
+    /// Attention heads.
+    pub n_head: usize,
+    /// Sequence length.
+    pub seq: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Expert FFN hidden width.
+    pub d_ff: usize,
+    /// Experts per MoE layer. Must divide `seq` (exact-capacity top-1
+    /// routing).
+    pub n_expert: usize,
+    /// Every `moe_every`-th block uses the expert FFN (1 = all blocks,
+    /// 2 = alternating as in GShard/Switch).
+    pub moe_every: usize,
+}
+
+impl MoeGptConfig {
+    /// MoE-GPT small: the GPT-2 117M trunk with 8 experts in
+    /// alternating blocks.
+    pub fn moe_gpt_small() -> Self {
+        MoeGptConfig {
+            n_layer: 12,
+            d_model: 768,
+            n_head: 12,
+            seq: 1024,
+            vocab: 50257,
+            d_ff: 3072,
+            n_expert: 8,
+            moe_every: 2,
+        }
+    }
+
+    /// LLaMA-7B-shaped flagship: 32 × 4096, 32 heads, seq 2048, 32k
+    /// vocabulary, 11008-wide FFN — with 8 experts in alternating
+    /// blocks (Mixtral-style scale-out of the 7B trunk).
+    pub fn moe_llama_7b() -> Self {
+        MoeGptConfig {
+            n_layer: 32,
+            d_model: 4096,
+            n_head: 32,
+            seq: 2048,
+            vocab: 32000,
+            d_ff: 11008,
+            n_expert: 8,
+            moe_every: 2,
+        }
+    }
+
+    /// A tiny config for fast tests (every block MoE, 4 experts).
+    pub fn tiny() -> Self {
+        MoeGptConfig {
+            n_layer: 2,
+            d_model: 64,
+            n_head: 4,
+            seq: 32,
+            vocab: 1000,
+            d_ff: 256,
+            n_expert: 4,
+            moe_every: 1,
+        }
+    }
+
+    /// Approximate parameter count: attention (4h²) every block, dense
+    /// FFN (2·h·ff) in dense blocks, `n_expert`-wide FFN + router in
+    /// MoE blocks, plus the embeddings.
+    pub fn approx_params(&self) -> u64 {
+        let h = self.d_model as u64;
+        let ff = self.d_ff as u64;
+        let mut total = (self.vocab as u64 + self.seq as u64) * h;
+        for i in 0..self.n_layer {
+            total += 4 * h * h; // attention
+            if (i + 1) % self.moe_every == 0 {
+                total += self.n_expert as u64 * 2 * h * ff + h * self.n_expert as u64;
+            } else {
+                total += 2 * h * ff;
+            }
+        }
+        total
+    }
+}
+
+/// Build an MoE GPT model at `batch` sequences per step.
+pub fn moe_gpt(cfg: MoeGptConfig, batch: usize) -> Graph {
+    assert!(cfg.moe_every >= 1, "moe_every must be ≥ 1");
+    assert_eq!(
+        cfg.seq % cfg.n_expert,
+        0,
+        "seq {} must be divisible by n_expert {}",
+        cfg.seq,
+        cfg.n_expert
+    );
+    let mut b = GraphBuilder::new("moe_gpt", batch);
+    let h = cfg.d_model;
+    let tokens = b.input("tokens", &[batch, cfg.seq], DType::I64);
+    let mut x = b.scoped("embed", |b| {
+        let e = b.embedding("wte", tokens, cfg.vocab, h, DType::F32);
+        b.elementwise("wpe_add", crate::graph::OpKind::Elementwise, &[e], 1.0, 1.0)
+    });
+    for i in 0..cfg.n_layer {
+        let moe_block = (i + 1) % cfg.moe_every == 0;
+        x = b.scoped(&format!("block{i}"), |b| {
+            // Attention sub-block (identical to the dense GPT trunk).
+            let ln1 = b.layer_norm("ln1", x);
+            let qkv = b.qkv_proj("qkv", ln1, h, cfg.n_head);
+            let att = b.attention("attn", qkv);
+            let proj = b.out_proj("proj", att, h);
+            let x1 = b.add("res1", x, proj);
+            // FFN sub-block: routed experts or the dense MLP.
+            let ln2 = b.layer_norm("ln2", x1);
+            let out = if moe_block {
+                let scores = b.linear("router", ln2, h, cfg.n_expert);
+                let disp = b.moe_dispatch("dispatch", ln2, scores, cfg.n_expert);
+                let fc1 = b.moe_expert_linear("fc1", disp, h, cfg.d_ff);
+                let fc2 = b.moe_expert_linear("fc2", fc1, cfg.d_ff, h);
+                b.moe_combine("combine", fc2)
+            } else {
+                let fc1 = b.linear("fc1", ln2, h, cfg.d_ff);
+                let gelu = b.relu("gelu", fc1);
+                b.hint_last(MpHint::LastDim);
+                let fc2 = b.linear("fc2", gelu, cfg.d_ff, h);
+                b.hint_last(MpHint::RowSplit);
+                fc2
+            };
+            b.add("res2", x1, out)
+        });
+    }
+    b.scoped("head", |b| {
+        let lnf = b.layer_norm("ln_f", x);
+        let wte = b
+            .find_tensor("embed.wte.weight")
+            .expect("embedding table exists");
+        let logits = b.linear_shared("lm_head", lnf, h, cfg.vocab, wte);
+        let _ = b.loss("loss", logits);
+    });
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn tiny_moe_builds_and_validates() {
+        let g = moe_gpt(MoeGptConfig::tiny(), 4);
+        assert!(g.has_experts());
+        // Every block MoE at moe_every = 1: 2 dispatch, 2 combine,
+        // 4 expert linears.
+        let dispatch = g.layers.iter().filter(|l| l.name == "dispatch").count();
+        let combine = g.layers.iter().filter(|l| l.name == "combine").count();
+        assert_eq!(dispatch, 2);
+        assert_eq!(combine, 2);
+        let expert_linears = g
+            .layers
+            .iter()
+            .filter(|l| {
+                l.kind == OpKind::Linear
+                    && l.params
+                        .iter()
+                        .any(|p| p.axes.iter().any(|a| a.as_deref() == Some("e")))
+            })
+            .count();
+        assert_eq!(expert_linears, 4);
+    }
+
+    #[test]
+    fn alternating_blocks_keep_the_dense_mlp() {
+        let cfg = MoeGptConfig::moe_gpt_small();
+        let g = moe_gpt(cfg, 2);
+        let dispatch = g.layers.iter().filter(|l| l.name == "dispatch").count();
+        let gelu = g.layers.iter().filter(|l| l.name == "gelu").count();
+        assert_eq!(dispatch, cfg.n_layer / 2);
+        assert_eq!(gelu, cfg.n_layer / 2);
+    }
+
+    #[test]
+    fn expert_weights_carry_the_expert_axis() {
+        let cfg = MoeGptConfig::tiny();
+        let g = moe_gpt(cfg, 4);
+        let fc1 = g.layers.iter().find(|l| l.name == "fc1").unwrap();
+        let w = &g.tensors[fc1.params[0].tensor];
+        assert_eq!(w.shape, vec![cfg.n_expert, cfg.d_ff, cfg.d_model]);
+        assert_eq!(fc1.params[0].axes[0].as_deref(), Some("e"));
+    }
+
+    #[test]
+    fn param_count_tracks_the_closed_form() {
+        for cfg in [MoeGptConfig::tiny(), MoeGptConfig::moe_gpt_small()] {
+            let g = moe_gpt(cfg, 2);
+            let p = g.num_params() as f64;
+            let approx = cfg.approx_params() as f64;
+            let err = (p - approx).abs() / approx;
+            assert!(err < 0.10, "params {p:.3e} vs approx {approx:.3e}");
+        }
+    }
+
+    #[test]
+    fn capacity_times_experts_equals_seq() {
+        let cfg = MoeGptConfig::tiny();
+        let g = moe_gpt(cfg, 4);
+        let d = g.layers.iter().find(|l| l.name == "dispatch").unwrap();
+        let e = d.dim_size("e").unwrap();
+        let k = d.dim_size("k").unwrap();
+        assert_eq!(e * k, cfg.seq);
+    }
+}

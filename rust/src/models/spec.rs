@@ -1,0 +1,297 @@
+//! Open workload selector: [`ModelSpec`].
+//!
+//! The session, runtime, and CLI layers used to match on [`ModelKind`]
+//! directly, so adding a workload meant editing every call site. They
+//! now carry a `ModelSpec` — an open union of
+//!
+//! - **presets**: a [`ModelKind`] plus optional size-override knobs
+//!   (`--layers/--hidden/--experts`, GPT / MoE families only), and
+//! - **files**: an external JSON layer graph loaded through
+//!   [`super::import`] (`--model-file PATH`).
+//!
+//! A bare preset behaves exactly like the old enum: `name()` returns the
+//! same display string and `graph_key()` the same hash, so session
+//! memoization keys, sweep dedup, and every `--json` document are
+//! byte-identical to the pre-`ModelSpec` code.
+
+use super::import;
+use crate::graph::Graph;
+use crate::models::{gpt2, moe_gpt, GptConfig, ModelKind, MoeGptConfig};
+use crate::{Error, Result};
+
+/// A workload: which graph to build at a given global batch size.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ModelSpec {
+    /// A built-in preset, optionally resized.
+    Preset {
+        /// The base model.
+        kind: ModelKind,
+        /// Override transformer block count (GPT / MoE only).
+        layers: Option<usize>,
+        /// Override model width (GPT / MoE only).
+        hidden: Option<usize>,
+        /// Override experts per MoE layer (MoE only).
+        experts: Option<usize>,
+    },
+    /// An external JSON layer graph (see [`super::import`] for the
+    /// format).
+    File {
+        /// Source path, for reports only — identity is the content hash.
+        path: String,
+        /// Graph name declared in the file.
+        name: String,
+        /// Raw file contents.
+        text: String,
+    },
+}
+
+/// FNV-1a, matching [`ModelKind::graph_key`]'s string hash.
+fn fnv(bytes: impl Iterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl ModelSpec {
+    /// A preset without overrides (the common case; drop-in for the old
+    /// bare `ModelKind`).
+    pub fn preset(kind: ModelKind) -> ModelSpec {
+        ModelSpec::Preset {
+            kind,
+            layers: None,
+            hidden: None,
+            experts: None,
+        }
+    }
+
+    /// Parse a preset name (`"gpt2"`, `"moe-llama-7b"`, ...). File
+    /// models come through [`ModelSpec::from_file`] instead.
+    pub fn parse(s: &str) -> Option<ModelSpec> {
+        ModelKind::parse(s).map(ModelSpec::preset)
+    }
+
+    /// Load an external model file, validating the format eagerly (a
+    /// probe build at batch 1) so bad files fail at the CLI boundary,
+    /// not deep inside a sweep.
+    pub fn from_file(path: &str) -> Result<ModelSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("model file {path}: {e}")))?;
+        let probe = import::import_json(&text, 1)?;
+        Ok(ModelSpec::File {
+            path: path.to_string(),
+            name: probe.name,
+            text,
+        })
+    }
+
+    /// The underlying preset, if this is one.
+    pub fn kind(&self) -> Option<ModelKind> {
+        match self {
+            ModelSpec::Preset { kind, .. } => Some(*kind),
+            ModelSpec::File { .. } => None,
+        }
+    }
+
+    /// Display name. Equal to [`ModelKind::name`] for bare presets;
+    /// overridden knobs are appended (`GPT-2~l24~h1024`) so reports and
+    /// cache keys distinguish resized variants.
+    pub fn name(&self) -> String {
+        match self {
+            ModelSpec::Preset {
+                kind,
+                layers,
+                hidden,
+                experts,
+            } => {
+                let mut n = kind.name().to_string();
+                if let Some(l) = layers {
+                    n.push_str(&format!("~l{l}"));
+                }
+                if let Some(h) = hidden {
+                    n.push_str(&format!("~h{h}"));
+                }
+                if let Some(e) = experts {
+                    n.push_str(&format!("~e{e}"));
+                }
+                n
+            }
+            ModelSpec::File { name, .. } => name.clone(),
+        }
+    }
+
+    /// Stable identity of the `(model, batch)` graph, for keying
+    /// cross-request caches. Bare presets hash exactly like
+    /// [`ModelKind::graph_key`] (the knob suffix is empty); file models
+    /// hash the file *contents*, so an identical re-save still hits the
+    /// session cache and any edit misses it.
+    pub fn graph_key(&self, batch: usize) -> u64 {
+        let h = match self {
+            ModelSpec::Preset { .. } => fnv(self.name().bytes()),
+            ModelSpec::File { text, .. } => fnv(text.bytes()),
+        };
+        h ^ (batch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// Build the graph at a global batch size.
+    pub fn build(&self, batch: usize) -> Result<Graph> {
+        match self {
+            ModelSpec::Preset {
+                kind,
+                layers: None,
+                hidden: None,
+                experts: None,
+            } => Ok(kind.build(batch)),
+            ModelSpec::Preset {
+                kind,
+                layers,
+                hidden,
+                experts,
+            } => {
+                let check = |cfg_model: usize, n_head: usize| -> Result<()> {
+                    if cfg_model % n_head != 0 {
+                        return Err(Error::Config(format!(
+                            "--hidden {cfg_model}: not divisible by {n_head} attention heads"
+                        )));
+                    }
+                    Ok(())
+                };
+                match kind {
+                    ModelKind::Gpt2 | ModelKind::Gpt15B => {
+                        if experts.is_some() {
+                            return Err(Error::Config(format!(
+                                "--experts: {} is not an MoE model",
+                                kind.name()
+                            )));
+                        }
+                        let mut cfg = if *kind == ModelKind::Gpt2 {
+                            GptConfig::gpt2_117m()
+                        } else {
+                            GptConfig::gpt2_1_5b()
+                        };
+                        if let Some(l) = layers {
+                            cfg.n_layer = *l;
+                        }
+                        if let Some(h) = hidden {
+                            cfg.d_model = *h;
+                        }
+                        check(cfg.d_model, cfg.n_head)?;
+                        Ok(gpt2(cfg, batch))
+                    }
+                    ModelKind::MoeGpt | ModelKind::MoeLlama7B => {
+                        let mut cfg = if *kind == ModelKind::MoeGpt {
+                            MoeGptConfig::moe_gpt_small()
+                        } else {
+                            MoeGptConfig::moe_llama_7b()
+                        };
+                        if let Some(l) = layers {
+                            cfg.n_layer = *l;
+                        }
+                        if let Some(h) = hidden {
+                            cfg.d_model = *h;
+                        }
+                        if let Some(e) = experts {
+                            cfg.n_expert = *e;
+                        }
+                        check(cfg.d_model, cfg.n_head)?;
+                        if cfg.n_expert == 0 || cfg.seq % cfg.n_expert != 0 {
+                            return Err(Error::Config(format!(
+                                "--experts {}: must divide the sequence length {}",
+                                cfg.n_expert, cfg.seq
+                            )));
+                        }
+                        Ok(moe_gpt(cfg, batch))
+                    }
+                    _ => Err(Error::Config(format!(
+                        "{}: size overrides (--layers/--hidden/--experts) only \
+                         apply to the GPT and MoE families",
+                        kind.name()
+                    ))),
+                }
+            }
+            ModelSpec::File { text, .. } => import::import_json(text, batch),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_presets_match_modelkind_identity() {
+        for &m in ModelKind::all() {
+            let spec = ModelSpec::preset(m);
+            assert_eq!(spec.name(), m.name());
+            for batch in [1usize, 8, 512] {
+                assert_eq!(spec.graph_key(batch), m.graph_key(batch));
+            }
+        }
+    }
+
+    #[test]
+    fn overrides_change_the_key_and_the_graph() {
+        let base = ModelSpec::preset(ModelKind::Gpt2);
+        let small = ModelSpec::Preset {
+            kind: ModelKind::Gpt2,
+            layers: Some(2),
+            hidden: None,
+            experts: None,
+        };
+        assert_ne!(base.graph_key(8), small.graph_key(8));
+        let g = small.build(8).unwrap();
+        assert!(g.validate().is_empty());
+        assert!(g.num_params() < base.build(8).unwrap().num_params());
+    }
+
+    #[test]
+    fn expert_override_resizes_the_moe_layer() {
+        let spec = ModelSpec::Preset {
+            kind: ModelKind::MoeGpt,
+            layers: Some(2),
+            hidden: None,
+            experts: Some(4),
+        };
+        let g = spec.build(4).unwrap();
+        assert_eq!(g.expert_capacity(), Some(4));
+    }
+
+    #[test]
+    fn knobs_rejected_off_family() {
+        let spec = ModelSpec::Preset {
+            kind: ModelKind::ResNet50,
+            layers: Some(2),
+            hidden: None,
+            experts: None,
+        };
+        assert!(spec.build(8).is_err());
+        let spec = ModelSpec::Preset {
+            kind: ModelKind::Gpt2,
+            layers: None,
+            hidden: None,
+            experts: Some(4),
+        };
+        assert!(spec.build(8).is_err());
+    }
+
+    #[test]
+    fn indivisible_hidden_rejected() {
+        let spec = ModelSpec::Preset {
+            kind: ModelKind::Gpt2,
+            layers: None,
+            hidden: Some(770), // not divisible by 12 heads
+            experts: None,
+        };
+        assert!(spec.build(8).is_err());
+    }
+
+    #[test]
+    fn parse_accepts_every_alias() {
+        for a in ModelKind::aliases() {
+            assert!(ModelSpec::parse(a).is_some());
+        }
+        assert!(ModelSpec::parse("bogus").is_none());
+    }
+}

@@ -295,7 +295,7 @@ impl Searcher {
     }
 
     /// [`Self::run`] against a caller-owned [`TemplateCache`] paired
-    /// with a stable graph key ([`crate::models::ModelKind::graph_key`])
+    /// with a stable graph key ([`crate::models::ModelSpec::graph_key`])
     /// — the session layer passes its long-lived cache here so chain
     /// evaluations share templates with earlier requests. With
     /// `external: None` the searcher owns a run-local cache (exactly
@@ -893,7 +893,7 @@ mod tests {
         let (batch, preset, nodes) = (16, Preset::HC1, 1);
         let spec = StrategySpec::data_parallel(2);
         let sc = Scenario {
-            model,
+            model: crate::models::ModelSpec::preset(model),
             batch,
             preset,
             nodes,

@@ -29,14 +29,14 @@ use crate::collective::CollAlgo;
 use crate::compiler::{EmitRecord, TemplateCache};
 use crate::executor::{calibrate, Htae, HtaeConfig, SimReport};
 use crate::graph::Graph;
-use crate::models::ModelKind;
+use crate::models::ModelSpec;
 use crate::strategy::{build_strategy, PipelineSchedule, StrategySpec, StrategyTree};
 
 /// One sweep candidate: a model at a batch size, a cluster, a strategy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Scenario {
     /// Model under test.
-    pub model: ModelKind,
+    pub model: ModelSpec,
     /// Global batch size.
     pub batch: usize,
     /// Hardware preset.
@@ -219,7 +219,7 @@ impl SweepRunner {
     /// [`Self::run`] against a caller-owned [`TemplateCache`] — the
     /// session layer passes its long-lived cache here so grid candidates
     /// share templates with earlier simulate/search requests. Templates
-    /// are keyed by [`crate::models::ModelKind::graph_key`] (a stable
+    /// are keyed by [`ModelSpec::graph_key`] (a stable
     /// `(model, batch)` identity) plus the resolved strategy's
     /// structural hash, so cross-request sharing is sound. `None`
     /// disables template caching entirely; outcomes are bit-identical
@@ -234,20 +234,23 @@ impl SweepRunner {
         }
 
         // Dedupe the shared compilation work up front: one graph build
-        // per (model, batch), one topology per (preset, nodes).
-        let mut graph_keys: Vec<(ModelKind, usize)> = Vec::new();
-        let mut graphs: Vec<Graph> = Vec::new();
+        // per model identity ([`ModelSpec::graph_key`] mixes the batch
+        // in), one topology per (preset, nodes). A model that fails to
+        // build (e.g. a bad external file) error-isolates every scenario
+        // referencing it instead of aborting the sweep.
+        let mut graph_keys: Vec<u64> = Vec::new();
+        let mut graphs: Vec<std::result::Result<Graph, String>> = Vec::new();
         let mut cluster_keys: Vec<(Preset, usize)> = Vec::new();
         let mut clusters: Vec<Cluster> = Vec::new();
         let mut graph_of = Vec::with_capacity(scenarios.len());
         let mut cluster_of = Vec::with_capacity(scenarios.len());
         for sc in scenarios {
-            let gk = (sc.model, sc.batch);
+            let gk = sc.model.graph_key(sc.batch);
             let gi = match graph_keys.iter().position(|&k| k == gk) {
                 Some(i) => i,
                 None => {
                     graph_keys.push(gk);
-                    graphs.push(sc.model.build(sc.batch));
+                    graphs.push(sc.model.build(sc.batch).map_err(|e| e.to_string()));
                     graphs.len() - 1
                 }
             };
@@ -280,12 +283,10 @@ impl SweepRunner {
         let gammas: Vec<f64> = clusters.iter().map(calibrate::default_gamma).collect();
         // Cross-candidate compile cache: candidates differing only in
         // pipeline schedule (or in simulation knobs) share one compiled
-        // template, keyed by the stable (model, batch) graph identity +
-        // the resolved strategy's structural hash. The stable key (not
-        // the dedup index) keeps a shared session cache sound across
+        // template, keyed by the stable model graph identity + the
+        // resolved strategy's structural hash. The stable key (not the
+        // dedup index) keeps a shared session cache sound across
         // invocations with different scenario sets.
-        let graph_ids: Vec<u64> = graph_keys.iter().map(|&(m, b)| m.graph_key(b)).collect();
-
         let threads = self.effective_threads(scenarios.len());
         let next = AtomicUsize::new(0);
         let results: Vec<Mutex<Option<SweepOutcome>>> =
@@ -300,16 +301,28 @@ impl SweepRunner {
                         break;
                     }
                     let sc = &scenarios[i];
-                    let out = run_one(
-                        sc,
-                        &graphs[graph_of[i]],
-                        &clusters[cluster_of[i]],
-                        gammas[cluster_of[i]],
-                        plain,
-                        self.coll_algo,
-                        cache.map(|c| (c, graph_ids[graph_of[i]])),
-                        self.fold,
-                    );
+                    let out = match &graphs[graph_of[i]] {
+                        Ok(graph) => run_one(
+                            sc,
+                            graph,
+                            &clusters[cluster_of[i]],
+                            gammas[cluster_of[i]],
+                            plain,
+                            self.coll_algo,
+                            cache.map(|c| (c, graph_keys[graph_of[i]])),
+                            self.fold,
+                        ),
+                        Err(e) => SweepOutcome {
+                            scenario: sc.clone(),
+                            report: Err(e.clone()),
+                            oom: false,
+                            compile_s: 0.0,
+                            sim_s: 0.0,
+                            fold_classes: 0,
+                            fold_devices_folded: 0,
+                            fold_fallback: false,
+                        },
+                    };
                     *results[i].lock().unwrap() = Some(out);
                 });
             }
@@ -561,7 +574,7 @@ fn run_one(
         Ok(t) => t,
         Err(e) => {
             return SweepOutcome {
-                scenario: *sc,
+                scenario: sc.clone(),
                 report: Err(e.to_string()),
                 oom: false,
                 compile_s: 0.0,
@@ -574,7 +587,7 @@ fn run_one(
     };
     let s = score_tree_opts(graph, cluster, gamma, &tree, plain, coll_algo, cache, fold);
     SweepOutcome {
-        scenario: *sc,
+        scenario: sc.clone(),
         report: s.report,
         oom: s.oom,
         compile_s: s.compile_s,
@@ -637,25 +650,50 @@ pub fn candidate_grid(n_devices: usize, batch: usize) -> Vec<StrategySpec> {
 /// appear once. Duplicate specs (e.g. a schedule listed twice) are
 /// dropped, so `proteus sweep --schedules all` ranks GPipe / 1F1B /
 /// interleaved head-to-head in one invocation.
+///
+/// `max_ep` is the workload's expert count (1 for dense models — pass
+/// [`crate::graph::Graph::expert_capacity`]`.unwrap_or(1)`): for each
+/// expert-parallel degree `ep > 1` that divides both the expert count
+/// and the device budget, the grid is extended with the full
+/// `dp × mp × pp` factorization of the remaining `n_devices / ep`
+/// budget at that `ep`. With `max_ep == 1` the output is exactly the
+/// historical dense grid, entry for entry.
 pub fn candidate_grid_with_schedules(
     n_devices: usize,
     batch: usize,
     schedules: &[PipelineSchedule],
+    max_ep: usize,
 ) -> Vec<StrategySpec> {
-    let mut out: Vec<StrategySpec> = Vec::new();
-    for base in candidate_grid(n_devices, batch) {
-        if base.pp == 1 {
-            if !out.contains(&base) {
-                out.push(base);
+    fn expand(bases: Vec<StrategySpec>, schedules: &[PipelineSchedule], out: &mut Vec<StrategySpec>) {
+        for base in bases {
+            if base.pp == 1 {
+                if !out.contains(&base) {
+                    out.push(base);
+                }
+                continue;
             }
+            for &s in schedules {
+                let sp = base.with_schedule(s);
+                if !out.contains(&sp) {
+                    out.push(sp);
+                }
+            }
+        }
+    }
+    let mut out: Vec<StrategySpec> = Vec::new();
+    expand(candidate_grid(n_devices, batch), schedules, &mut out);
+    // Expert-parallel extension. Aggressive candidates (e.g. an ep×mp
+    // combination the expert shapes cannot absorb) are included on
+    // purpose — the sweep's error isolation reports them.
+    for ep in 2..=max_ep.min(n_devices) {
+        if max_ep % ep != 0 || n_devices % ep != 0 {
             continue;
         }
-        for &s in schedules {
-            let sp = base.with_schedule(s);
-            if !out.contains(&sp) {
-                out.push(sp);
-            }
-        }
+        let bases: Vec<StrategySpec> = candidate_grid(n_devices / ep, batch)
+            .into_iter()
+            .map(|s| s.with_moe(ep))
+            .collect();
+        expand(bases, schedules, &mut out);
     }
     out
 }
@@ -703,6 +741,7 @@ pub fn dedupe_specs(graph: &Graph, specs: Vec<StrategySpec>) -> Vec<StrategySpec
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::ModelKind;
 
     #[test]
     fn grid_is_large_and_valid() {
@@ -718,7 +757,7 @@ mod tests {
     #[test]
     fn grid_with_schedules_expands_pipelined_candidates_only() {
         let base = candidate_grid(8, 32);
-        let all = candidate_grid_with_schedules(8, 32, &PipelineSchedule::all());
+        let all = candidate_grid_with_schedules(8, 32, &PipelineSchedule::all(), 1);
         let pipelined = base.iter().filter(|s| s.pp > 1).count();
         assert!(pipelined > 0, "grid must contain pipelined candidates");
         // Each pipelined candidate appears once per schedule; the rest
@@ -730,15 +769,42 @@ mod tests {
             }
         }
         // A single-schedule expansion is the plain grid.
-        let one = candidate_grid_with_schedules(8, 32, &[PipelineSchedule::OneFOneB]);
+        let one = candidate_grid_with_schedules(8, 32, &[PipelineSchedule::OneFOneB], 1);
         assert_eq!(one, base);
         // No duplicates even with a repeated schedule list.
         let dup = candidate_grid_with_schedules(
             8,
             32,
             &[PipelineSchedule::OneFOneB, PipelineSchedule::OneFOneB],
+            1,
         );
         assert_eq!(dup, base);
+    }
+
+    /// Tentpole pin: the expert-parallel grid extension is additive —
+    /// the dense prefix is byte-for-byte the historical grid, and every
+    /// appended candidate carries an `ep` that divides both the expert
+    /// count and the device budget, with the residual `dp·mp·pp`
+    /// factorization spanning `n_devices / ep`.
+    #[test]
+    fn grid_extends_with_expert_parallel_candidates() {
+        let sched = [PipelineSchedule::OneFOneB];
+        let dense = candidate_grid_with_schedules(8, 32, &sched, 1);
+        let moe = candidate_grid_with_schedules(8, 32, &sched, 4);
+        assert_eq!(&moe[..dense.len()], &dense[..], "dense prefix must be unchanged");
+        let appended: Vec<_> = moe[dense.len()..].to_vec();
+        assert!(!appended.is_empty(), "ep=2 and ep=4 candidates must appear");
+        for s in &appended {
+            assert!(s.moe == 2 || s.moe == 4, "{}", s.label());
+            assert_eq!(s.dp * s.mp * s.pp * s.moe, 8, "{}", s.label());
+            assert_eq!(s.n_devices(), 8, "{}", s.label());
+        }
+        assert!(appended.iter().any(|s| s.moe == 2));
+        assert!(appended.iter().any(|s| s.moe == 4));
+        // An expert count with no divisor ≤ the device budget adds
+        // nothing; ep degrees that don't divide the expert count are
+        // skipped (max_ep 3 on an 8-device budget → dense only).
+        assert_eq!(candidate_grid_with_schedules(8, 32, &sched, 3), dense);
     }
 
     #[test]
@@ -757,7 +823,7 @@ mod tests {
         let scenarios: Vec<Scenario> = candidate_grid(2, 16)
             .into_iter()
             .map(|spec| Scenario {
-                model: ModelKind::Vgg19,
+                model: ModelSpec::preset(ModelKind::Vgg19),
                 batch: 16,
                 preset: Preset::HC1,
                 nodes: 1,
@@ -792,7 +858,7 @@ mod tests {
     fn oom_candidates_rank_below_feasible() {
         let mk = |oom: bool, throughput: f64| SweepOutcome {
             scenario: Scenario {
-                model: ModelKind::Vgg19,
+                model: ModelSpec::preset(ModelKind::Vgg19),
                 batch: 16,
                 preset: Preset::HC1,
                 nodes: 1,
@@ -834,7 +900,7 @@ mod tests {
     fn rank_breaks_throughput_ties_by_label() {
         let mk = |spec: StrategySpec, throughput: f64| SweepOutcome {
             scenario: Scenario {
-                model: ModelKind::Vgg19,
+                model: ModelSpec::preset(ModelKind::Vgg19),
                 batch: 16,
                 preset: Preset::HC1,
                 nodes: 1,
@@ -928,11 +994,11 @@ mod tests {
     /// results are bit-identical with the cache disabled.
     #[test]
     fn sweep_results_identical_with_and_without_compile_cache() {
-        let specs = candidate_grid_with_schedules(2, 16, &PipelineSchedule::all());
+        let specs = candidate_grid_with_schedules(2, 16, &PipelineSchedule::all(), 1);
         let scenarios: Vec<Scenario> = specs
             .into_iter()
             .map(|spec| Scenario {
-                model: ModelKind::Vgg19,
+                model: ModelSpec::preset(ModelKind::Vgg19),
                 batch: 16,
                 preset: Preset::HC1,
                 nodes: 1,
@@ -967,7 +1033,7 @@ mod tests {
         let scenarios: Vec<Scenario> = candidate_grid(4, 16)
             .into_iter()
             .map(|spec| Scenario {
-                model: ModelKind::Vgg19,
+                model: ModelSpec::preset(ModelKind::Vgg19),
                 batch: 16,
                 preset: Preset::HC1,
                 nodes: 1,
@@ -1005,7 +1071,7 @@ mod tests {
         ]
         .into_iter()
         .map(|spec| Scenario {
-            model: ModelKind::Vgg19,
+            model: ModelSpec::preset(ModelKind::Vgg19),
             batch: 16,
             preset: Preset::HC1,
             nodes: 1,
@@ -1024,7 +1090,7 @@ mod tests {
     #[test]
     fn invalid_strategies_are_isolated() {
         let scenarios = [Scenario {
-            model: ModelKind::Vgg19,
+            model: ModelSpec::preset(ModelKind::Vgg19),
             batch: 16,
             preset: Preset::HC1,
             nodes: 1,

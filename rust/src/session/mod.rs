@@ -12,9 +12,9 @@
 //!   as plain structs with the same defaults, plus parsers from the
 //!   newline-delimited JSON protocol `proteus serve` speaks.
 //! * [`Session`]: owns the warm caches — memoized model graphs keyed by
-//!   `(ModelKind, batch)`, memoized [`Cluster`]s keyed by
+//!   [`ModelSpec::graph_key`], memoized [`Cluster`]s keyed by
 //!   `(preset, nodes, nics, oversub)`, and one shared [`TemplateCache`]
-//!   keyed by [`ModelKind::graph_key`] + the resolved strategy's
+//!   keyed by [`ModelSpec::graph_key`] + the resolved strategy's
 //!   structural hash. All methods take `&self` and are safe for
 //!   concurrent requests; every response carries the per-request cache
 //!   hit/miss delta (snapshot-based, see
@@ -61,7 +61,7 @@ use crate::emulator::{Emulator, EmulatorConfig, PlanCache};
 use crate::estimator::OpEstimator;
 use crate::executor::{calibrate, Htae, HtaeConfig};
 use crate::graph::Graph;
-use crate::models::ModelKind;
+use crate::models::{ModelKind, ModelSpec};
 use crate::runtime::{
     candidate_grid_with_schedules, dedupe_specs, default_inits, Scenario, SearchConfig,
     SearchPoint, Searcher, SweepRunner,
@@ -83,9 +83,12 @@ type ClusterKey = (Preset, usize, Option<usize>, Option<u64>);
 /// mutability is mutex/atomic-based, and repeat requests hit the warm
 /// caches (reported per request via the response's cache delta).
 pub struct Session {
-    /// Model graphs, one per `(model, batch)` — graph building is
-    /// deterministic, so sharing is bit-invisible.
-    graphs: Mutex<HashMap<(ModelKind, usize), Arc<Graph>>>,
+    /// Model graphs, one per [`ModelSpec::graph_key`] — graph building
+    /// is deterministic, so sharing is bit-invisible. The key hashes
+    /// the spec's *identity* (preset name + knobs, or file contents)
+    /// mixed with the batch, so presets, resized variants, and external
+    /// files all share one map.
+    graphs: Mutex<HashMap<u64, Arc<Graph>>>,
     /// Cluster topologies, one per [`ClusterKey`]. Always built through
     /// [`crate::cluster::presets::spec`] + [`Cluster::from_spec`], which
     /// is exactly what both `Cluster::preset` and the CLI's fabric
@@ -133,20 +136,17 @@ impl Session {
     /// Memoized model graph for `(model, batch)`. Concurrent first
     /// requests may both build; the first insert wins (builds are
     /// deterministic, so either result is correct).
-    pub fn graph(&self, model: ModelKind, batch: usize) -> Arc<Graph> {
-        if let Some(g) = self.graphs.lock().unwrap().get(&(model, batch)) {
-            return Arc::clone(g);
+    pub fn graph(&self, model: &ModelSpec, batch: usize) -> Result<Arc<Graph>> {
+        let key = model.graph_key(batch);
+        if let Some(g) = self.graphs.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(g));
         }
         // Build outside the lock so one slow build does not serialize
         // unrelated requests.
-        let built = Arc::new(model.build(batch));
-        Arc::clone(
-            self.graphs
-                .lock()
-                .unwrap()
-                .entry((model, batch))
-                .or_insert(built),
-        )
+        let built = Arc::new(model.build(batch)?);
+        Ok(Arc::clone(
+            self.graphs.lock().unwrap().entry(key).or_insert(built),
+        ))
     }
 
     /// Memoized cluster for `preset` × `nodes` with the optional fabric
@@ -186,16 +186,25 @@ impl Session {
         let before = self.templates.snapshot();
         let plans_before = self.plans.snapshot();
         let cluster = self.cluster(req.preset, req.nodes, req.nics, req.oversub)?;
-        let graph = self.graph(req.model, req.batch);
+        let graph = self.graph(&req.model, req.batch)?;
         let tree = build_strategy(&graph, req.spec)?;
+        // Token imbalance breaks the replica symmetry the fold pass
+        // verifies (expert ranks no longer run identical streams), so a
+        // non-zero δ on an MoE model compiles unfolded and reports the
+        // fallback, exactly like a failed fold verification.
+        let imbalanced_experts = req.moe_imbalance > 0.0 && graph.has_experts();
+        let want_fold = req.fold && !imbalanced_experts;
         let t0 = Instant::now();
-        let (eg, stats) = crate::compiler::compile_with_opts(
+        let (eg, mut stats) = crate::compiler::compile_with_opts(
             &graph,
             &tree,
             &cluster,
             Some((&self.templates, req.model.graph_key(req.batch))),
-            req.fold,
+            want_fold,
         )?;
+        if req.fold && imbalanced_experts {
+            stats.fold_fallback = true;
+        }
         let compile_s = t0.elapsed().as_secs_f64();
         let est = OpEstimator::best_available(&cluster, &req.artifacts);
         let mut config = if req.plain {
@@ -208,13 +217,21 @@ impl Session {
         };
         config.coll_algo = req.coll_algo;
         config.record_timeline = req.trace;
+        config.moe_imbalance = req.moe_imbalance;
         let t1 = Instant::now();
-        let report = Htae::with_config(&cluster, &est, config).simulate(&eg)?;
+        let mut htae = Htae::with_config(&cluster, &est, config);
+        if imbalanced_experts {
+            htae = htae.with_expert_mask(crate::executor::behavior::expert_layer_mask(&graph));
+        }
+        let report = htae.simulate(&eg)?;
         let simulate_s = t1.elapsed().as_secs_f64();
         let backend = if est.is_pjrt() { "pjrt" } else { "analytical" };
         // Run the optional validators once, up front, so the JSON and
         // text renderings cannot drift. The emulated truth uses the same
-        // collective lowering as the prediction.
+        // collective lowering as the prediction. It does NOT model the
+        // MoE imbalance δ (the flow-level engine simulates the balanced
+        // schedule); with δ > 0 the truth column reads as the balanced
+        // baseline the straggler model perturbs.
         let truth = if req.truth {
             let emu_config = EmulatorConfig {
                 coll_algo: req.coll_algo,
@@ -277,8 +294,16 @@ impl Session {
         // them to each scenario's cluster.
         let cluster = self.cluster(req.preset, req.nodes, req.nics, req.oversub)?;
         let n = cluster.num_devices();
-        let graph = self.graph(req.model, req.batch);
-        let grid = candidate_grid_with_schedules(n, req.batch, &req.schedules);
+        let graph = self.graph(&req.model, req.batch)?;
+        // MoE models extend the grid with expert-parallel candidates
+        // (ep dividing both the device budget and the expert count);
+        // dense models get exactly the pre-EP grid.
+        let grid = candidate_grid_with_schedules(
+            n,
+            req.batch,
+            &req.schedules,
+            graph.expert_capacity().unwrap_or(1),
+        );
         let n_grid = grid.len();
         // Commuting factorizations (e.g. a no-op ZeRO toggle) resolve to
         // identical strategies; simulate each resolved strategy once.
@@ -287,7 +312,7 @@ impl Session {
         let scenarios: Vec<Scenario> = specs
             .into_iter()
             .map(|spec| Scenario {
-                model: req.model,
+                model: req.model.clone(),
                 batch: req.batch,
                 preset: req.preset,
                 nodes: req.nodes,
@@ -369,7 +394,7 @@ impl Session {
         let before = self.templates.snapshot();
         let cluster = self.cluster(req.preset, req.nodes, req.nics, req.oversub)?;
         let n = cluster.num_devices();
-        let graph = self.graph(req.model, req.batch);
+        let graph = self.graph(&req.model, req.batch)?;
 
         // Seed points: a resumed best spec, an explicit uniform label,
         // or the heuristic expert set.
@@ -466,7 +491,7 @@ impl Session {
     /// behind `proteus compare`.
     pub fn compare(
         &self,
-        model: ModelKind,
+        model: &ModelSpec,
         batch: usize,
         preset: Preset,
         nodes: usize,
@@ -477,7 +502,7 @@ impl Session {
         let before = self.templates.snapshot();
         let plans_before = self.plans.snapshot();
         let cluster = self.cluster(preset, nodes, None, None)?;
-        let graph = self.graph(model, batch);
+        let graph = self.graph(model, batch)?;
         let est = OpEstimator::best_available(&cluster, artifacts);
         let config = HtaeConfig {
             gamma: calibrate::default_gamma(&cluster),
@@ -524,16 +549,16 @@ impl Session {
     }
 
     /// Model structure statistics — the engine behind `proteus info`.
-    pub fn info(&self, model: ModelKind, batch: usize) -> InfoResponse {
-        let g = self.graph(model, batch);
-        InfoResponse {
+    pub fn info(&self, model: &ModelSpec, batch: usize) -> Result<InfoResponse> {
+        let g = self.graph(model, batch)?;
+        Ok(InfoResponse {
             model: model.name(),
             batch,
             layers: g.layers.len(),
             tensors: g.tensors.len(),
             params: g.num_params(),
             fwd_flops: g.total_fwd_flops(),
-        }
+        })
     }
 
     /// Calibrate the overlap factor γ per hardware preset — the engine
@@ -556,7 +581,7 @@ impl Session {
     /// cost backends — the engine behind `proteus bench-cost`.
     pub fn bench_cost(&self, rows: usize, artifacts: &str) -> Result<BenchCostResponse> {
         let cluster = self.cluster(Preset::HC2, 4, None, None)?;
-        let g = self.graph(ModelKind::Gpt2, 64);
+        let g = self.graph(&ModelSpec::preset(ModelKind::Gpt2), 64)?;
         let tree = build_strategy(&g, StrategySpec::data_parallel(8))?;
         let (eg, _) = crate::compiler::compile_with(
             &g,
@@ -605,10 +630,11 @@ mod tests {
     #[test]
     fn graphs_and_clusters_are_memoized() {
         let s = Session::new();
-        let g1 = s.graph(ModelKind::Vgg19, 16);
-        let g2 = s.graph(ModelKind::Vgg19, 16);
+        let vgg = ModelSpec::preset(ModelKind::Vgg19);
+        let g1 = s.graph(&vgg, 16).unwrap();
+        let g2 = s.graph(&vgg, 16).unwrap();
         assert!(Arc::ptr_eq(&g1, &g2));
-        let g3 = s.graph(ModelKind::Vgg19, 32);
+        let g3 = s.graph(&vgg, 32).unwrap();
         assert!(!Arc::ptr_eq(&g1, &g3));
         let c1 = s.cluster(Preset::HC1, 1, None, None).unwrap();
         let c2 = s.cluster(Preset::HC1, 1, None, None).unwrap();
@@ -633,7 +659,7 @@ mod tests {
     fn repeat_simulate_hits_the_template_cache() {
         let s = Session::new();
         let req = SimulateRequest {
-            model: ModelKind::Vgg19,
+            model: ModelSpec::preset(ModelKind::Vgg19),
             batch: 16,
             spec: {
                 let mut spec = StrategySpec::data_parallel(2);
@@ -667,7 +693,7 @@ mod tests {
     fn repeat_truth_simulate_hits_the_plan_cache() {
         let s = Session::new();
         let req = SimulateRequest {
-            model: ModelKind::Vgg19,
+            model: ModelSpec::preset(ModelKind::Vgg19),
             batch: 16,
             spec: {
                 let mut spec = StrategySpec::data_parallel(2);
@@ -699,14 +725,14 @@ mod tests {
         let mut spec = StrategySpec::data_parallel(2);
         spec.schedule = crate::strategy::PipelineSchedule::OneFOneB;
         let sim = SimulateRequest {
-            model: ModelKind::Vgg19,
+            model: ModelSpec::preset(ModelKind::Vgg19),
             batch: 16,
             spec,
             ..SimulateRequest::default()
         };
         s.simulate(&sim).unwrap();
         let sweep = SweepRequest {
-            model: ModelKind::Vgg19,
+            model: ModelSpec::preset(ModelKind::Vgg19),
             batch: 16,
             preset: Preset::HC1,
             nodes: 1,
@@ -731,7 +757,7 @@ mod tests {
     #[test]
     fn search_via_session_is_reproducible() {
         let req = SearchRequest {
-            model: ModelKind::Vgg19,
+            model: ModelSpec::preset(ModelKind::Vgg19),
             batch: 16,
             preset: Preset::HC1,
             nodes: 1,
@@ -757,13 +783,43 @@ mod tests {
         );
     }
 
+    /// Token imbalance breaks the replica symmetry folding relies on,
+    /// so a skewed router gates `fold` off and reports the fallback —
+    /// and the hot-expert slowdown is monotone in δ.
+    #[test]
+    fn moe_imbalance_gates_symmetry_folding() {
+        let s = Session::new();
+        let req = SimulateRequest {
+            model: ModelSpec::preset(ModelKind::MoeGpt),
+            batch: 8,
+            spec: StrategySpec::hybrid(4, 1, 1, 1).with_moe(2),
+            fold: true,
+            ..SimulateRequest::default()
+        };
+        let balanced = s.simulate(&req).unwrap();
+        let skewed = s
+            .simulate(&SimulateRequest {
+                moe_imbalance: 0.25,
+                ..req.clone()
+            })
+            .unwrap();
+        assert!(skewed.stats.fold_fallback, "δ>0 must report fold_fallback");
+        assert_eq!(skewed.stats.fold_classes, 0, "δ>0 must not fold");
+        // The hot expert carries (1+δ)× its balanced load: the step can
+        // only get slower.
+        assert!(skewed.report.step_ms >= balanced.report.step_ms);
+        // δ=0 with fold on an MoE model is not gated: it either folds
+        // or reports a genuine verification fallback.
+        assert!(balanced.stats.fold_classes > 0 || balanced.stats.fold_fallback);
+    }
+
     #[test]
     fn concurrent_requests_share_one_session() {
         let s = Session::new();
         let mut spec = StrategySpec::data_parallel(2);
         spec.schedule = crate::strategy::PipelineSchedule::OneFOneB;
         let req = SimulateRequest {
-            model: ModelKind::Vgg19,
+            model: ModelSpec::preset(ModelKind::Vgg19),
             batch: 16,
             spec,
             ..SimulateRequest::default()

@@ -10,7 +10,7 @@
 
 use crate::cluster::Preset;
 use crate::collective::CollAlgo;
-use crate::models::ModelKind;
+use crate::models::{ModelKind, ModelSpec};
 use crate::strategy::{PipelineSchedule, StrategySpec};
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -48,6 +48,7 @@ pub fn parse_schedules(s: &str) -> Result<Vec<PipelineSchedule>> {
 pub fn spec_from_json(j: &Json) -> Result<StrategySpec> {
     let g = |k: &str, d: usize| -> usize { j.get(k).and_then(|v| v.as_usize()).unwrap_or(d) };
     let mut spec = StrategySpec::hybrid(g("dp", 1), g("mp", 1), g("pp", 1), g("micro", 1));
+    spec.moe = g("ep", 1);
     spec.zero = j.get("zero").and_then(|v| v.as_bool()).unwrap_or(false);
     spec.recompute = j.get("recompute").and_then(|v| v.as_bool()).unwrap_or(false);
     spec.shard_embeddings = j
@@ -114,9 +115,39 @@ fn bool_field(doc: &Json, key: &str) -> Result<bool> {
     }
 }
 
-fn model_field(doc: &Json, default: &str) -> Result<ModelKind> {
+/// Workload selector of a request: `"model"` (preset name, optionally
+/// resized by `"layers"` / `"hidden"` / `"experts"`) or `"model_file"`
+/// (external JSON layer graph, mutually exclusive with the knobs).
+/// A bare `"model": "gpt2"` parses to exactly the old enum value.
+fn model_field(doc: &Json, default: &str) -> Result<ModelSpec> {
+    let layers = usize_field_opt(doc, "layers")?;
+    let hidden = usize_field_opt(doc, "hidden")?;
+    let experts = usize_field_opt(doc, "experts")?;
+    if let Some(v) = doc.get("model_file") {
+        let path = v
+            .as_str()
+            .ok_or_else(|| Error::Config("request: 'model_file' must be a string".into()))?;
+        if doc.get("model").is_some() {
+            return Err(Error::Config(
+                "request: 'model' and 'model_file' are mutually exclusive".into(),
+            ));
+        }
+        if layers.is_some() || hidden.is_some() || experts.is_some() {
+            return Err(Error::Config(
+                "request: size knobs (layers/hidden/experts) apply to presets, not model files"
+                    .into(),
+            ));
+        }
+        return ModelSpec::from_file(path);
+    }
     let m = str_field(doc, "model", default)?;
-    ModelKind::parse(&m).ok_or_else(|| Error::Config(format!("unknown model '{m}'")))
+    let kind = ModelKind::parse(&m).ok_or_else(|| Error::Config(format!("unknown model '{m}'")))?;
+    Ok(ModelSpec::Preset {
+        kind,
+        layers,
+        hidden,
+        experts,
+    })
 }
 
 fn preset_field(doc: &Json, default: &str) -> Result<Preset> {
@@ -133,7 +164,7 @@ fn coll_field(doc: &Json) -> Result<CollAlgo> {
 #[derive(Debug, Clone)]
 pub struct SimulateRequest {
     /// Model under test.
-    pub model: ModelKind,
+    pub model: ModelSpec,
     /// Global batch size.
     pub batch: usize,
     /// Hardware preset.
@@ -165,6 +196,12 @@ pub struct SimulateRequest {
     /// Record the simulation timeline and render a Chrome trace into
     /// the response.
     pub trace: bool,
+    /// MoE token-imbalance factor δ (see
+    /// [`crate::executor::HtaeConfig::moe_imbalance`]). Non-zero δ on a
+    /// model with expert layers disables symmetry folding (imbalance
+    /// breaks the replica symmetry fold verifies) — the response
+    /// reports `fold_fallback`.
+    pub moe_imbalance: f64,
     /// PJRT cost-kernel artifact path (falls back to the analytical
     /// backend when the file is missing).
     pub artifacts: String,
@@ -173,7 +210,7 @@ pub struct SimulateRequest {
 impl Default for SimulateRequest {
     fn default() -> Self {
         SimulateRequest {
-            model: ModelKind::Gpt2,
+            model: ModelSpec::preset(ModelKind::Gpt2),
             batch: 8,
             preset: Preset::HC1,
             nodes: Preset::HC1.max_nodes(),
@@ -188,6 +225,7 @@ impl Default for SimulateRequest {
             fold: false,
             coll_algo: CollAlgo::Auto,
             trace: false,
+            moe_imbalance: 0.0,
             artifacts: DEFAULT_ARTIFACT.to_string(),
         }
     }
@@ -217,6 +255,7 @@ impl SimulateRequest {
             fold: bool_field(doc, "fold")?,
             coll_algo: coll_field(doc)?,
             trace: false,
+            moe_imbalance: f64_field_opt(doc, "moe_imbalance")?.unwrap_or(0.0),
             artifacts: str_field(doc, "artifacts", DEFAULT_ARTIFACT)?,
         })
     }
@@ -227,7 +266,7 @@ impl SimulateRequest {
 #[derive(Debug, Clone)]
 pub struct SweepRequest {
     /// Model under test.
-    pub model: ModelKind,
+    pub model: ModelSpec,
     /// Global batch size.
     pub batch: usize,
     /// Hardware preset.
@@ -259,7 +298,7 @@ pub struct SweepRequest {
 impl Default for SweepRequest {
     fn default() -> Self {
         SweepRequest {
-            model: ModelKind::Gpt2,
+            model: ModelSpec::preset(ModelKind::Gpt2),
             batch: 64,
             preset: Preset::HC2,
             nodes: 2,
@@ -324,7 +363,7 @@ pub enum SearchInit {
 #[derive(Debug, Clone)]
 pub struct SearchRequest {
     /// Model under test.
-    pub model: ModelKind,
+    pub model: ModelSpec,
     /// Global batch size.
     pub batch: usize,
     /// Hardware preset.
@@ -366,7 +405,7 @@ pub struct SearchRequest {
 impl Default for SearchRequest {
     fn default() -> Self {
         SearchRequest {
-            model: ModelKind::Gpt2,
+            model: ModelSpec::preset(ModelKind::Gpt2),
             batch: 64,
             preset: Preset::HC2,
             nodes: 2,
@@ -470,7 +509,8 @@ mod tests {
     #[test]
     fn simulate_request_defaults_match_cli() {
         let r = SimulateRequest::default();
-        assert_eq!(r.model, ModelKind::Gpt2);
+        assert_eq!(r.model, ModelSpec::preset(ModelKind::Gpt2));
+        assert_eq!(r.moe_imbalance, 0.0);
         assert_eq!(r.batch, 8);
         assert_eq!(r.preset, Preset::HC1);
         assert_eq!(r.nodes, Preset::HC1.max_nodes());
@@ -489,7 +529,7 @@ mod tests {
             panic!("expected simulate");
         };
         assert!(!compile_stats);
-        assert_eq!(req.model, ModelKind::Vgg19);
+        assert_eq!(req.model, ModelSpec::preset(ModelKind::Vgg19));
         assert_eq!(req.batch, 16);
         assert_eq!(req.spec.dp, 2);
         assert!(req.spec.zero);
@@ -534,6 +574,39 @@ mod tests {
         assert!(!req.delta);
         assert!(req.prune);
         assert!(matches!(req.init, SearchInit::Label(ref l) if l == "8x1x1(1)"));
+    }
+
+    #[test]
+    fn model_spec_fields_parse_and_exclude_each_other() {
+        // Size knobs ride along with a preset name.
+        let doc = Json::parse(
+            r#"{"cmd":"simulate","model":"moe-gpt","experts":4,"layers":2,"ep":2,
+                "moe_imbalance":0.25}"#,
+        )
+        .unwrap();
+        let Request::Simulate { req, .. } = Request::from_json(&doc).unwrap() else {
+            panic!("expected simulate");
+        };
+        assert_eq!(
+            req.model,
+            ModelSpec::Preset {
+                kind: ModelKind::MoeGpt,
+                layers: Some(2),
+                hidden: None,
+                experts: Some(4),
+            }
+        );
+        assert_eq!(req.spec.moe, 2);
+        assert_eq!(req.moe_imbalance, 0.25);
+        // model + model_file conflict; knobs reject model_file.
+        for bad in [
+            r#"{"cmd":"simulate","model":"gpt2","model_file":"x.json"}"#,
+            r#"{"cmd":"simulate","model_file":"x.json","layers":2}"#,
+            r#"{"cmd":"simulate","model_file":7}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(Request::from_json(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -231,7 +231,7 @@ pub fn search_doc(
 /// plus everything the renderers need.
 pub struct SimulateResponse {
     /// Model name.
-    pub model: &'static str,
+    pub model: String,
     /// Strategy spec label.
     pub strategy: String,
     /// Pipeline schedule name.
@@ -272,7 +272,7 @@ impl SimulateResponse {
     /// the CLI writes to the `--trace` path.
     pub fn to_json(&self, timings: bool, compile_stats: bool) -> Json {
         let mut fields = simulate_fields(
-            self.model,
+            &self.model,
             self.strategy.clone(),
             self.schedule.clone(),
             self.coll_algo,
@@ -345,7 +345,7 @@ pub struct TruthRow {
 /// grid bookkeeping the renderers summarize.
 pub struct SweepResponse {
     /// Model name.
-    pub model: &'static str,
+    pub model: String,
     /// Global batch size.
     pub batch: usize,
     /// Cluster name.
@@ -433,7 +433,7 @@ impl SweepResponse {
             })
             .collect();
         let mut fields = vec![
-            ("model", Json::Str(self.model.into())),
+            ("model", Json::Str(self.model.clone())),
             ("batch", Json::Num(self.batch as f64)),
             ("cluster", Json::Str(self.cluster.clone())),
             ("gpus", Json::Num(self.gpus as f64)),
@@ -480,7 +480,7 @@ impl SweepResponse {
 /// [`SearchResult`] plus the request echo the document carries.
 pub struct SearchResponse {
     /// Model name.
-    pub model: &'static str,
+    pub model: String,
     /// Global batch size.
     pub batch: usize,
     /// Cluster name.
@@ -506,7 +506,7 @@ impl SearchResponse {
     /// there is no timings variant (see [`search_doc`]).
     pub fn to_json(&self) -> Json {
         search_doc(
-            self.model,
+            &self.model,
             self.batch,
             &self.cluster,
             self.gpus,
@@ -536,7 +536,7 @@ pub struct CompareRow {
 /// Result of [`super::Session::compare`].
 pub struct CompareResponse {
     /// Model name.
-    pub model: &'static str,
+    pub model: String,
     /// Global batch size.
     pub batch: usize,
     /// Cluster name.
@@ -552,7 +552,7 @@ pub struct CompareResponse {
 /// Result of [`super::Session::info`]: model structure statistics.
 pub struct InfoResponse {
     /// Model name.
-    pub model: &'static str,
+    pub model: String,
     /// Global batch size.
     pub batch: usize,
     /// Layer count.

@@ -26,6 +26,10 @@ pub struct StrategySpec {
     pub mp: usize,
     /// Pipeline-parallel degree (contiguous FLOP-balanced stages).
     pub pp: usize,
+    /// Expert-parallel degree (splits each MoE layer's expert dim `e`;
+    /// requires an MoE model). Multiplies the device budget like
+    /// `dp × mp`: a stage spans `dp·mp·moe` devices.
+    pub moe: usize,
     /// Micro-batches per step (≥ 1; only meaningful with `pp > 1` or for
     /// gradient accumulation).
     pub n_micro_batch: usize,
@@ -51,6 +55,7 @@ impl StrategySpec {
             dp: n,
             mp: 1,
             pp: 1,
+            moe: 1,
             n_micro_batch: 1,
             max_ongoing: 0,
             zero: false,
@@ -66,6 +71,7 @@ impl StrategySpec {
             dp,
             mp,
             pp,
+            moe: 1,
             n_micro_batch: n_micro,
             max_ongoing: 0,
             zero: false,
@@ -99,17 +105,27 @@ impl StrategySpec {
         self
     }
 
-    /// Total devices used.
-    pub fn n_devices(self) -> usize {
-        self.dp * self.mp * self.pp
+    /// Set the expert-parallel degree (MoE models only).
+    pub fn with_moe(mut self, ep: usize) -> Self {
+        self.moe = ep;
+        self
     }
 
-    /// Short display form, e.g. `"4x2x2(8)+1f1b"`.
+    /// Total devices used.
+    pub fn n_devices(self) -> usize {
+        self.dp * self.mp * self.pp * self.moe
+    }
+
+    /// Short display form, e.g. `"4x2x2(8)+1f1b"` (`+ep{n}` when expert
+    /// parallel).
     pub fn label(self) -> String {
         let mut s = format!("{}x{}x{}({})", self.dp, self.mp, self.pp, self.n_micro_batch);
         if self.pp > 1 {
             s.push('+');
             s.push_str(&self.schedule.name());
+        }
+        if self.moe > 1 {
+            s.push_str(&format!("+ep{}", self.moe));
         }
         if self.zero {
             s.push_str("+zero");
@@ -145,7 +161,15 @@ impl StrategySpec {
                 "zero" => spec.zero = true,
                 "rc" => spec.recompute = true,
                 "emb" => spec.shard_embeddings = true,
-                other => spec.schedule = PipelineSchedule::parse(other)?,
+                other => {
+                    // "ep{n}" sets the expert-parallel degree; anything
+                    // else must name a pipeline schedule.
+                    if let Some(n) = other.strip_prefix("ep").and_then(|v| v.parse().ok()) {
+                        spec.moe = n;
+                    } else {
+                        spec.schedule = PipelineSchedule::parse(other)?;
+                    }
+                }
             }
         }
         Some(spec)
@@ -154,7 +178,7 @@ impl StrategySpec {
 
 /// Build a strategy tree implementing `spec` for `graph`.
 pub fn build_strategy(graph: &Graph, spec: StrategySpec) -> Result<StrategyTree> {
-    if spec.dp == 0 || spec.mp == 0 || spec.pp == 0 || spec.n_micro_batch == 0 {
+    if spec.dp == 0 || spec.mp == 0 || spec.pp == 0 || spec.moe == 0 || spec.n_micro_batch == 0 {
         return Err(Error::InvalidStrategy("degrees must be ≥ 1".into()));
     }
     if let PipelineSchedule::Interleaved { v: 0 } = spec.schedule {
@@ -169,6 +193,7 @@ pub fn build_strategy(graph: &Graph, spec: StrategySpec) -> Result<StrategyTree>
             graph.batch_size
         )));
     }
+    validate_ep(graph, spec.dp, spec.mp, spec.moe, spec.n_micro_batch)?;
     let mut tree = StrategyTree::from_model(graph);
 
     // --- Pipeline stages: contiguous, FLOP-balanced. -------------------
@@ -183,13 +208,14 @@ pub fn build_strategy(graph: &Graph, spec: StrategySpec) -> Result<StrategyTree>
     }
 
     for (stage_idx, layer_range) in stages.iter().enumerate() {
-        let base = stage_idx * spec.dp * spec.mp;
+        let base = stage_idx * spec.dp * spec.mp * spec.moe;
         assign_stage_layers(
             graph,
             &mut tree,
             layer_range,
             spec.dp,
             spec.mp,
+            spec.moe,
             spec.shard_embeddings,
             base,
         )?;
@@ -292,6 +318,54 @@ pub fn balance_unit_counts(unit_flops: &[f64], pp: usize) -> Vec<usize> {
     out
 }
 
+/// Check expert-parallel degree feasibility: `ep > 1` needs an MoE
+/// graph, each expert group must hold a whole number of experts, and the
+/// per-micro-batch token slab must split across the full `dp·mp·ep`
+/// group (dispatch/combine layers are token-parallel over all of it).
+pub(crate) fn validate_ep(
+    graph: &Graph,
+    dp: usize,
+    mp: usize,
+    ep: usize,
+    n_micro: usize,
+) -> Result<()> {
+    if ep <= 1 {
+        return Ok(());
+    }
+    match graph.expert_capacity() {
+        None => Err(Error::InvalidStrategy(format!(
+            "ep={ep} needs an MoE model; '{}' has no expert dims",
+            graph.name
+        ))),
+        Some(cap) if cap % ep != 0 => Err(Error::InvalidStrategy(format!(
+            "ep={ep} does not divide the {cap} experts of '{}'",
+            graph.name
+        ))),
+        Some(_) => {
+            let full = dp * mp * ep * n_micro;
+            if graph.batch_size % full != 0 {
+                return Err(Error::InvalidStrategy(format!(
+                    "batch {} not divisible by dp*mp*ep*n_micro = {full}",
+                    graph.batch_size
+                )));
+            }
+            Ok(())
+        }
+    }
+}
+
+/// True when `layer` holds per-expert parameters (an `"e"` axis on a
+/// param operand). Under `ep > 1` these shard their experts, while
+/// dispatch/combine layers (expert *dim* but token-major params) stay
+/// token-parallel — the layout flip between the two is what lowers to
+/// all-to-all.
+pub fn is_expert_layer(layer: &Layer) -> bool {
+    layer
+        .params
+        .iter()
+        .any(|p| p.axes.iter().any(|a| a.as_deref() == Some("e")))
+}
+
 /// The dimension model parallelism splits on `layer`, per its
 /// [`MpHint`] (`None` = replicate over the model-parallel group).
 pub(crate) fn mp_split_dim(layer: &Layer) -> Option<&str> {
@@ -324,26 +398,48 @@ pub(crate) fn assign_stage_layers(
     layers: &[usize],
     dp: usize,
     mp: usize,
+    ep: usize,
     shard_embeddings: bool,
     base: usize,
 ) -> Result<()> {
+    let n_stage = dp * mp * ep;
     for &layer_id in layers {
         let layer = &graph.layers[layer_id];
         let mut partition: Vec<(&str, usize)> = Vec::new();
-        if dp > 1 {
-            partition.push(("b", dp));
+        let mut mp_splittable = true;
+        if ep > 1 && layer.dim_size("e").is_some() {
+            if is_expert_layer(layer) {
+                // Expert layers shard their experts over the ep groups
+                // and tokens over dp·mp within each group. No mp dim:
+                // splitting `o`/`h` here would replicate the layout and
+                // break the fully-sharded precondition of the
+                // all-to-all (`reaxis`) lowering on the dispatch edge.
+                partition.push(("e", ep));
+                if dp * mp > 1 {
+                    partition.push(("b", dp * mp));
+                }
+            } else {
+                // Dispatch / combine: token-parallel across the whole
+                // stage group, the layout counterpart of the expert
+                // shard above.
+                partition.push(("b", n_stage));
+            }
+            mp_splittable = false;
+        } else if dp * ep > 1 {
+            // Dense layers absorb the ep factor into the batch split so
+            // the device budget stays fully used between MoE blocks.
+            partition.push(("b", dp * ep));
         }
         let mut emb_override = false;
         if shard_embeddings && layer.kind == OpKind::Embedding {
             // Shard the table over the whole stage group; do not split
             // the batch (classic DLRM model-parallel embeddings).
-            let n = dp * mp;
-            if layer.dim_size("v").map(|v| v >= n).unwrap_or(false) {
-                partition = vec![("v", n)];
+            if layer.dim_size("v").map(|v| v >= n_stage).unwrap_or(false) {
+                partition = vec![("v", n_stage)];
                 emb_override = true;
             }
         }
-        if !emb_override && mp > 1 {
+        if !emb_override && mp_splittable && mp > 1 {
             if let Some(d) = mp_split_dim(layer) {
                 if layer.dim_size(d).map(|sz| sz >= mp).unwrap_or(false) {
                     partition.push((d, mp));
@@ -351,7 +447,7 @@ pub(crate) fn assign_stage_layers(
                 // Otherwise: replicate over the mp group.
             }
         }
-        let devices: Vec<DeviceId> = (base..base + dp * mp).collect();
+        let devices: Vec<DeviceId> = (base..base + n_stage).collect();
         let cfg = ParallelConfig::sharded(&partition, devices);
         tree.assign_layer(graph, layer_id, cfg)?;
     }
@@ -603,12 +699,76 @@ mod tests {
                 .with_schedule(PipelineSchedule::Interleaved { v: 2 })
                 .with_zero(),
             StrategySpec::hybrid(1, 8, 1, 2).with_sharded_embeddings(),
+            StrategySpec::hybrid(2, 1, 1, 1).with_moe(4),
+            StrategySpec::hybrid(2, 2, 2, 4).with_moe(2).with_zero(),
         ] {
             assert_eq!(StrategySpec::parse_label(&spec.label()), Some(spec));
         }
         assert_eq!(StrategySpec::parse_label("4x2(8)"), None);
         assert_eq!(StrategySpec::parse_label("4x2x1(8)+bogus"), None);
         assert_eq!(StrategySpec::parse_label("garbage"), None);
+    }
+
+    #[test]
+    fn ep_labels_read_well() {
+        assert_eq!(
+            StrategySpec::hybrid(2, 1, 1, 1).with_moe(4).label(),
+            "2x1x1(1)+ep4"
+        );
+        assert_eq!(
+            StrategySpec::hybrid(1, 1, 2, 4).with_moe(2).label(),
+            "1x1x2(4)+1f1b+ep2"
+        );
+    }
+
+    #[test]
+    fn ep_rejected_on_dense_models() {
+        let g = mlp(16, 2);
+        let err = build_strategy(&g, StrategySpec::hybrid(2, 1, 1, 1).with_moe(2));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn ep_partitions_experts_tokens_and_dense_layers() {
+        use crate::models::{moe_gpt, MoeGptConfig};
+        let g = moe_gpt(MoeGptConfig::tiny(), 4);
+        // dp=1, mp=2, ep=2 → 4-device stage.
+        let spec = StrategySpec::hybrid(1, 2, 1, 1).with_moe(2);
+        assert_eq!(spec.n_devices(), 4);
+        let tree = build_strategy(&g, spec).unwrap();
+        let r = resolve(&g, &tree).unwrap();
+        for l in &g.layers {
+            let c = &r.comp[l.id];
+            match l.name.as_str() {
+                // Expert linears: experts over ep, tokens over dp·mp.
+                "fc1" | "fc2" if is_expert_layer(l) => {
+                    assert_eq!(c.degree("e"), 2, "{}", l.path_string());
+                    assert_eq!(c.degree("b"), 2);
+                    assert_eq!(c.replicas(), 1);
+                }
+                // Dispatch/combine: token-parallel over the full group.
+                "dispatch" | "combine" => {
+                    assert_eq!(c.degree("b"), 4);
+                    assert_eq!(c.replicas(), 1);
+                }
+                // Dense attention linears still take the mp split.
+                "qkv" => {
+                    assert_eq!(c.degree("b"), 2);
+                    assert_eq!(c.degree("a"), 2);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn ep_must_divide_experts_and_batch() {
+        use crate::models::{moe_gpt, MoeGptConfig};
+        let g = moe_gpt(MoeGptConfig::tiny(), 4); // 4 experts
+        assert!(build_strategy(&g, StrategySpec::hybrid(1, 1, 1, 1).with_moe(3)).is_err());
+        // batch 4 % (dp=2 * ep=4) != 0
+        assert!(build_strategy(&g, StrategySpec::hybrid(2, 1, 1, 1).with_moe(4)).is_err());
+        assert!(build_strategy(&g, StrategySpec::hybrid(1, 1, 1, 1).with_moe(4)).is_ok());
     }
 
     #[test]

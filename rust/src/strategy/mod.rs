@@ -33,7 +33,7 @@ pub mod paper;
 pub mod propagate;
 pub mod tree;
 
-pub use builders::{balance_stages, build_strategy, stage_units, StrategySpec};
+pub use builders::{balance_stages, build_strategy, is_expert_layer, stage_units, StrategySpec};
 pub use nonuniform::{propose, Mutation, NonUniformSpec, StageSpec};
 pub use config::{
     memory_layout, operand_layout, LayoutPart, ParallelConfig, PipelineSchedule, ScheduleConfig,

@@ -40,6 +40,8 @@ pub struct StageSpec {
     pub dp: usize,
     /// Model-parallel degree within the stage.
     pub mp: usize,
+    /// Expert-parallel degree within the stage (MoE models; 1 = off).
+    pub ep: usize,
     /// ZeRO-shard this stage's replicated parameters.
     pub zero: bool,
 }
@@ -47,16 +49,22 @@ pub struct StageSpec {
 impl StageSpec {
     /// Devices this stage occupies.
     pub fn devices(self) -> usize {
-        self.dp * self.mp
+        self.dp * self.mp * self.ep
     }
 
-    /// Compact display form, e.g. `"3u4x2z"`.
+    /// Compact display form, e.g. `"3u4x2z"` (`e{n}` when expert
+    /// parallel: `"3u4x2e2z"`).
     pub fn label(self) -> String {
         format!(
-            "{}u{}x{}{}",
+            "{}u{}x{}{}{}",
             self.units,
             self.dp,
             self.mp,
+            if self.ep > 1 {
+                format!("e{}", self.ep)
+            } else {
+                String::new()
+            },
             if self.zero { "z" } else { "" }
         )
     }
@@ -94,6 +102,7 @@ impl NonUniformSpec {
                 units: stage_units(graph).len(),
                 dp,
                 mp,
+                ep: 1,
                 zero: false,
             }],
             n_micro: 1,
@@ -112,7 +121,8 @@ impl NonUniformSpec {
     /// the module tests), so search chains can be seeded from — and
     /// compared against — uniform grid candidates exactly.
     pub fn from_uniform(graph: &Graph, spec: StrategySpec) -> Result<NonUniformSpec> {
-        if spec.dp == 0 || spec.mp == 0 || spec.pp == 0 || spec.n_micro_batch == 0 {
+        if spec.dp == 0 || spec.mp == 0 || spec.pp == 0 || spec.moe == 0 || spec.n_micro_batch == 0
+        {
             return Err(Error::InvalidStrategy("degrees must be ≥ 1".into()));
         }
         // Same unit partition as `balance_stages`, expressed directly in
@@ -142,6 +152,7 @@ impl NonUniformSpec {
                     units,
                     dp: spec.dp,
                     mp: spec.mp,
+                    ep: spec.moe,
                     zero: spec.zero,
                 })
                 .collect(),
@@ -221,9 +232,9 @@ impl NonUniformSpec {
             )));
         }
         for (i, st) in self.stages.iter().enumerate() {
-            if st.units == 0 || st.dp == 0 || st.mp == 0 {
+            if st.units == 0 || st.dp == 0 || st.mp == 0 || st.ep == 0 {
                 return Err(Error::InvalidStrategy(format!(
-                    "stage {i}: units/dp/mp must be ≥ 1"
+                    "stage {i}: units/dp/mp/ep must be ≥ 1"
                 )));
             }
             if graph.batch_size % (st.dp * self.n_micro) != 0 {
@@ -233,6 +244,7 @@ impl NonUniformSpec {
                     st.dp * self.n_micro
                 )));
             }
+            crate::strategy::builders::validate_ep(graph, st.dp, st.mp, st.ep, self.n_micro)?;
         }
         Ok(())
     }
@@ -261,6 +273,7 @@ impl NonUniformSpec {
                 &layers,
                 st.dp,
                 st.mp,
+                st.ep,
                 self.shard_embeddings,
                 base,
             )?;
@@ -299,12 +312,19 @@ impl NonUniformSpec {
                     self.stages
                         .iter()
                         .map(|st| {
-                            Json::obj(vec![
+                            let mut fields = vec![
                                 ("units", Json::Num(st.units as f64)),
                                 ("dp", Json::Num(st.dp as f64)),
                                 ("mp", Json::Num(st.mp as f64)),
                                 ("zero", Json::Bool(st.zero)),
-                            ])
+                            ];
+                            // Emitted only when set, so pre-EP documents
+                            // (and every dense-model run) stay
+                            // byte-identical.
+                            if st.ep > 1 {
+                                fields.push(("ep", Json::Num(st.ep as f64)));
+                            }
+                            Json::obj(fields)
                         })
                         .collect(),
                 ),
@@ -335,6 +355,7 @@ impl NonUniformSpec {
                         .get("mp")
                         .and_then(|v| v.as_usize())
                         .ok_or_else(|| bad("stages[].mp"))?,
+                    ep: sj.get("ep").and_then(|v| v.as_usize()).unwrap_or(1),
                     zero: sj.get("zero").and_then(|v| v.as_bool()).unwrap_or(false),
                 })
             })
@@ -370,12 +391,15 @@ impl NonUniformSpec {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mutation {
     /// Re-factorize one stage's device block into a different
-    /// `dp × mp` split (device count unchanged).
+    /// `dp × mp × ep` split (device count unchanged).
     Resplit {
         /// Stage index.
         stage: usize,
-        /// New data-parallel degree (must divide the stage's devices).
+        /// New data-parallel degree (`dp·ep` must divide the stage's
+        /// devices).
         dp: usize,
+        /// New expert-parallel degree (1 on dense models).
+        ep: usize,
     },
     /// Move one unit across the boundary between stages `boundary` and
     /// `boundary + 1`.
@@ -474,12 +498,13 @@ impl Mutation {
     pub fn apply(self, graph: &Graph, spec: &NonUniformSpec) -> NonUniformSpec {
         let mut out = spec.clone();
         match self {
-            Mutation::Resplit { stage, dp } => {
+            Mutation::Resplit { stage, dp, ep } => {
                 if let Some(st) = out.stages.get_mut(stage) {
                     let devs = st.devices();
-                    if dp >= 1 && devs % dp == 0 {
+                    if dp >= 1 && ep >= 1 && devs % (dp * ep) == 0 {
                         st.dp = dp;
-                        st.mp = devs / dp;
+                        st.ep = ep;
+                        st.mp = devs / (dp * ep);
                     }
                 }
             }
@@ -503,16 +528,21 @@ impl Mutation {
                         let (devs_l, devs_r) = (devs / 2, devs - devs / 2);
                         let (dp_l, mp_l) = refactor(graph, spec.n_micro, devs_l, st.mp);
                         let (dp_r, mp_r) = refactor(graph, spec.n_micro, devs_r, st.mp);
+                        // Halved blocks drop back to ep=1 (the inherited
+                        // EP degree may no longer divide the devices);
+                        // a later Resplit can reintroduce it.
                         let left = StageSpec {
                             units: at_units,
                             dp: dp_l,
                             mp: mp_l,
+                            ep: 1,
                             zero: st.zero,
                         };
                         let right = StageSpec {
                             units: st.units - at_units,
                             dp: dp_r,
                             mp: mp_r,
+                            ep: 1,
                             zero: st.zero,
                         };
                         out.stages.splice(stage..=stage, [left, right]);
@@ -529,6 +559,7 @@ impl Mutation {
                         units: a.units + b.units,
                         dp,
                         mp,
+                        ep: 1,
                         zero: a.zero && b.zero,
                     };
                     out.stages.splice(boundary..=boundary + 1, [merged]);
@@ -588,7 +619,24 @@ fn random_mutation(graph: &Graph, spec: &NonUniformSpec, rng: &mut Rng) -> Optio
             let stage = rng.range(0, n_stages - 1);
             let devs = spec.stages[stage].devices();
             let dp = *rng.pick(&divisors(devs));
-            Some(Mutation::Resplit { stage, dp })
+            // Dense models draw exactly the pre-EP sequence (ep fixed at
+            // 1, no extra RNG pull), keeping every dense search walk
+            // bit-identical to the pre-MoE searcher.
+            let ep = match graph.expert_capacity() {
+                None => 1,
+                Some(cap) => {
+                    let choices: Vec<usize> = divisors(devs / dp)
+                        .into_iter()
+                        .filter(|&e| cap % e == 0)
+                        .collect();
+                    if choices.is_empty() {
+                        1
+                    } else {
+                        *rng.pick(&choices)
+                    }
+                }
+            };
+            Some(Mutation::Resplit { stage, dp, ep })
         }
         1 if n_stages >= 2 => Some(Mutation::MoveBoundary {
             boundary: rng.range(0, n_stages - 2),
@@ -730,12 +778,14 @@ mod tests {
                     units: 2,
                     dp: 4,
                     mp: 1,
+                    ep: 1,
                     zero: false,
                 },
                 StageSpec {
                     units: 3,
                     dp: 2,
                     mp: 2,
+                    ep: 1,
                     zero: true,
                 },
             ],
@@ -782,6 +832,7 @@ mod tests {
             units: 1,
             dp: 2,
             mp: 1,
+            ep: 1,
             zero: false,
         });
         bad.recompute = true;
@@ -800,12 +851,14 @@ mod tests {
                     units: 1,
                     dp: 2,
                     mp: 2,
+                    ep: 1,
                     zero: true,
                 },
                 StageSpec {
                     units: 3,
                     dp: 4,
                     mp: 1,
+                    ep: 1,
                     zero: false,
                 },
             ],
@@ -840,12 +893,14 @@ mod tests {
                     units: 2,
                     dp: 4,
                     mp: 2,
+                    ep: 1,
                     zero: true,
                 },
                 StageSpec {
                     units: 1,
                     dp: 2,
                     mp: 1,
+                    ep: 1,
                     zero: false,
                 },
             ],
@@ -881,6 +936,90 @@ mod tests {
             applied += 1;
         }
         assert!(applied >= 50, "proposer stalled after {applied} moves");
+    }
+
+    #[test]
+    fn ep_stage_labels_and_json_are_gated_on_use() {
+        let st = StageSpec {
+            units: 2,
+            dp: 4,
+            mp: 2,
+            ep: 2,
+            zero: true,
+        };
+        assert_eq!(st.label(), "2u4x2e2z");
+        assert_eq!(st.devices(), 16);
+        let g = mlp(16, 2);
+        let mut spec = NonUniformSpec::single_stage(&g, 2, 1);
+        // ep=1 stages serialize without an "ep" key (byte-compat with
+        // pre-EP documents).
+        assert!(!spec.to_json().to_string_compact().contains("\"ep\""));
+        spec.stages[0].ep = 2;
+        let j = spec.to_json();
+        assert!(j.to_string_compact().contains("\"ep\":2"));
+        assert_eq!(NonUniformSpec::from_json(&j).unwrap(), spec);
+    }
+
+    #[test]
+    fn from_uniform_matches_uniform_builder_with_ep() {
+        use crate::models::{moe_gpt, MoeGptConfig};
+        let g = moe_gpt(MoeGptConfig::tiny(), 4);
+        let spec = StrategySpec::hybrid(1, 2, 1, 1).with_moe(2);
+        let uniform = build_strategy(&g, spec).unwrap();
+        let nu = NonUniformSpec::from_uniform(&g, spec).unwrap();
+        assert_eq!(nu.stages[0].ep, 2);
+        let built = nu.build(&g).unwrap();
+        let ru = resolve(&g, &uniform).unwrap();
+        let rn = resolve(&g, &built).unwrap();
+        assert_eq!(ru.structural_hash(1), rn.structural_hash(1));
+    }
+
+    #[test]
+    fn resplit_mutates_the_ep_degree() {
+        use crate::models::{moe_gpt, MoeGptConfig};
+        let g = moe_gpt(MoeGptConfig::tiny(), 8);
+        let spec =
+            NonUniformSpec::from_uniform(&g, StrategySpec::hybrid(2, 2, 1, 1).with_moe(2)).unwrap();
+        let m = Mutation::Resplit {
+            stage: 0,
+            dp: 2,
+            ep: 4,
+        };
+        let next = m.apply(&g, &spec);
+        assert_eq!(next.stages[0].ep, 4);
+        assert_eq!(next.stages[0].mp, 1);
+        assert_eq!(next.n_devices(), spec.n_devices());
+        assert!(next.validate(&g).is_ok());
+        assert!(next.build(&g).is_ok());
+        // ep that does not divide the experts is rejected by validate.
+        let bad = Mutation::Resplit {
+            stage: 0,
+            dp: 1,
+            ep: 8,
+        }
+        .apply(&g, &spec);
+        assert!(bad.validate(&g).is_err());
+    }
+
+    #[test]
+    fn moe_proposer_walks_ep_resplits() {
+        use crate::models::{moe_gpt, MoeGptConfig};
+        let g = moe_gpt(MoeGptConfig::tiny(), 16);
+        let mut rng = Rng::new(99);
+        let mut spec =
+            NonUniformSpec::from_uniform(&g, StrategySpec::hybrid(2, 1, 1, 1).with_moe(2)).unwrap();
+        let budget = spec.n_devices();
+        let mut saw_ep = false;
+        for _ in 0..100 {
+            let Some((_, next)) = propose(&g, &spec, &mut rng, 32) else {
+                break;
+            };
+            assert_eq!(next.n_devices(), budget);
+            assert!(next.validate(&g).is_ok());
+            saw_ep |= next.stages.iter().any(|st| st.ep > 1);
+            spec = next;
+        }
+        assert!(saw_ep, "proposer never drew an ep > 1 resplit");
     }
 
     #[test]

@@ -54,6 +54,16 @@ pub fn s2(model: ModelKind, n: usize) -> StrategySpec {
             }
         }
         ModelKind::Dlrm => StrategySpec::data_parallel(n).with_sharded_embeddings(),
+        ModelKind::MoeGpt | ModelKind::MoeLlama7B => {
+            // GShard-style E×D sharding: the largest expert-parallel
+            // degree that divides both the device budget and the 8
+            // experts, data parallelism over the remainder.
+            let mut ep = 8;
+            while n % ep != 0 {
+                ep /= 2;
+            }
+            StrategySpec::hybrid(n / ep, 1, 1, 1).with_moe(ep)
+        }
     }
 }
 
@@ -67,6 +77,11 @@ pub fn batch_for(model: ModelKind, n: usize) -> usize {
         // practice (the S2 pipeline splits these into micro-batches).
         ModelKind::Gpt15B => 4,
         ModelKind::Dlrm => 256,
+        // Same trunk as GPT-2; the routed FFN adds little per-token
+        // work but much parameter memory.
+        ModelKind::MoeGpt => 4,
+        // 7B-scale trunk on 16 GB cards.
+        ModelKind::MoeLlama7B => 2,
     };
     per_gpu * n
 }

@@ -181,6 +181,74 @@ fn fold_is_bit_identical_dlrm_dp32_hc2() {
     });
 }
 
+/// MoE-GPT under DP × EP at 32 devices — the acceptance bar for the
+/// expert-parallel tentpole. With a balanced router the folded run must
+/// either prove symmetry over the dp replicas and bit-match the
+/// unfolded run, or report `fold_fallback` and keep the full graph —
+/// never silently diverge. (A skewed router never reaches the fold: the
+/// session layer gates `--fold` off when `moe_imbalance > 0`, pinned in
+/// the session tests.)
+#[test]
+fn fold_is_bit_identical_or_falls_back_moe_dp4_ep8_hc2() {
+    let case = Case {
+        name: "moe-gpt dp4×ep8 HC2×4",
+        model: ModelKind::MoeGpt,
+        batch: 64,
+        preset: Preset::HC2,
+        nodes: 4, // 32 GPUs
+        spec: StrategySpec::hybrid(4, 1, 1, 1).with_moe(8),
+    };
+    let name = case.name;
+    let cluster = Cluster::preset(case.preset, case.nodes);
+    let (eg_off, _) = compile_case(&case, &cluster, false);
+    let (eg_on, stats_on) = compile_case(&case, &cluster, true);
+    if stats_on.fold_fallback {
+        // The fallback keeps the full graph; equality below is then the
+        // trivial unfolded-vs-unfolded claim, which is still the
+        // contract: a fallback must not perturb results.
+        assert_eq!(
+            eg_on.n_tasks(),
+            eg_off.n_tasks(),
+            "{name}: fallback altered the graph"
+        );
+    } else {
+        assert!(stats_on.fold_classes > 0, "{name}: no classes folded");
+        assert!(
+            eg_on.n_tasks() < eg_off.n_tasks(),
+            "{name}: folding did not shrink the graph"
+        );
+        assert_eq!(
+            eg_on.logical_tasks(),
+            eg_off.n_tasks(),
+            "{name}: logical task count diverges"
+        );
+    }
+    assert_eq!(
+        eg_on.total_comm_bytes(),
+        eg_off.total_comm_bytes(),
+        "{name}: comm bytes diverge"
+    );
+    let r_off = simulate(&cluster, &eg_off);
+    let r_on = simulate(&cluster, &eg_on);
+    assert_eq!(
+        r_on.step_ms.to_bits(),
+        r_off.step_ms.to_bits(),
+        "{name}: makespan bits diverge ({} vs {})",
+        r_on.step_ms,
+        r_off.step_ms,
+    );
+    assert_eq!(
+        r_on.throughput.to_bits(),
+        r_off.throughput.to_bits(),
+        "{name}: throughput bits diverge"
+    );
+    assert_eq!(r_on.oom, r_off.oom, "{name}: OOM verdict diverges");
+    assert_eq!(
+        r_on.peak_mem, r_off.peak_mem,
+        "{name}: per-device peak memory diverges"
+    );
+}
+
 /// VGG-19 under DP + ZeRO: sharded optimizer states put a
 /// reduce-scatter *and* a parameter all-gather on the fold's cross
 /// paths, and per-shard optimizer tasks on the slice paths.

@@ -399,7 +399,7 @@ fn search_beats_or_matches_uniform_grid() {
     let scenarios: Vec<Scenario> = dedupe_specs(&graph, candidate_grid(n, batch))
         .into_iter()
         .map(|spec| Scenario {
-            model,
+            model: proteus::models::ModelSpec::preset(model),
             batch,
             preset,
             nodes,
@@ -460,7 +460,7 @@ fn htae_lower_bound_is_admissible_on_the_uniform_grid() {
         let graph = model.build(batch);
         let specs = dedupe_specs(
             &graph,
-            candidate_grid_with_schedules(n, batch, &PipelineSchedule::all()),
+            candidate_grid_with_schedules(n, batch, &PipelineSchedule::all(), 1),
         );
         for spec in specs {
             let Ok(tree) = build_strategy(&graph, spec) else {

@@ -92,7 +92,7 @@ fn serve_body_matches_the_session_document() {
     let session = Session::new();
     let lines = serve_lines(&session, &format!("{SIMULATE}\n"), 1);
     let req = SimulateRequest {
-        model: proteus::models::ModelKind::Vgg19,
+        model: proteus::models::ModelSpec::preset(proteus::models::ModelKind::Vgg19),
         batch: 16,
         preset: proteus::cluster::Preset::HC1,
         nodes: 1,
